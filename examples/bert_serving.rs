@@ -1,0 +1,141 @@
+//! bert_serving — the end-to-end serving driver (EXPERIMENTS.md §E2E).
+//!
+//! Loads a BERT-like pruned encoder MLP (synthetic weights, magnitude
+//! pruning — DESIGN.md §5), optimizes its connection order with
+//! Connection Reordering, registers three engines behind the coordinator
+//! (streaming-reordered, streaming-initial, CSR layer-wise), then drives
+//! a batched request load through each and reports latency percentiles
+//! and throughput. Results land in `results/e2e_serving.json`.
+//!
+//! ```bash
+//! cargo run --release --example bert_serving                  # default small BERT
+//! cargo run --release --example bert_serving -- --d-model 1024 --d-ff 4096 \
+//!     --density 0.05 --requests 2000     # full BERT_LARGE shapes
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::server::drive_load;
+use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
+use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::prelude::*;
+use sparseflow::util::timing::{percentile, Summary};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Spec::new("bert_serving", "end-to-end batched serving of a pruned BERT MLP")
+        .opt("d-model", "256", "BERT d_model (paper: 1024)")
+        .opt("d-ff", "1024", "BERT d_ff (paper: 4096)")
+        .opt("density", "0.10", "post-pruning edge density")
+        .opt("m", "100", "fast-memory size the order is tuned for")
+        .opt("reorder-iters", "8000", "Connection Reordering iterations")
+        .opt("requests", "1000", "requests per engine")
+        .opt("clients", "16", "concurrent client threads")
+        .opt("max-batch", "128", "dynamic batcher max batch (paper: 128)")
+        .opt("seed", "2024", "generator seed")
+        .parse_env();
+
+    let spec = BertSpec {
+        d_model: args.usize("d-model"),
+        d_ff: args.usize("d-ff"),
+        density: args.f64("density"),
+    };
+    let mut rng = Pcg64::seed_from(args.u64("seed"));
+    println!("generating BERT-like MLP {}x{} @ {:.1}% (magnitude-pruned synthetic weights)…",
+        spec.d_model, spec.d_ff, spec.density * 100.0);
+    let net = bert_mlp(&spec, &mut rng);
+    println!("network: {}", net.describe());
+
+    // Offline: tune the connection order.
+    let initial = two_optimal_order(&net);
+    let m = args.usize("m");
+    let t0 = Instant::now();
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, args.u64("reorder-iters"));
+    let (best, rep) = reorder(&net, &initial, &cfg);
+    println!(
+        "reordering (offline): {} → {} simulated I/Os ({:.1}% better) in {:.1}s",
+        rep.initial_ios,
+        rep.final_ios,
+        rep.reduction() * 100.0,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Three engines behind the coordinator.
+    let n_inputs = net.n_inputs();
+    let mut router = Router::new();
+    router.register(ModelVariant::new(
+        "bert-reordered",
+        Arc::new(StreamingEngine::with_name(&net, &best, "stream-reordered")) as Arc<dyn Engine>,
+    ));
+    router.register(ModelVariant::new(
+        "bert-initial",
+        Arc::new(StreamingEngine::with_name(&net, &initial, "stream-initial")) as Arc<dyn Engine>,
+    ));
+    router.register(ModelVariant::new(
+        "bert-csr",
+        Arc::new(LayerwiseEngine::new(&net)) as Arc<dyn Engine>,
+    ));
+
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: args.usize("max-batch"),
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        },
+    );
+    let handle = server.handle();
+
+    // Also expose over TCP and exercise the wire path once.
+    let frontend = TcpFrontend::serve(handle.clone(), "127.0.0.1:0").expect("tcp bind");
+    println!("TCP front-end listening on {}", frontend.addr);
+    {
+        let mut client = TcpClient::connect(&frontend.addr).expect("tcp connect");
+        let probe = vec![0.25f32; n_inputs];
+        let out = client.infer("bert-reordered", &probe).expect("tcp infer");
+        println!("TCP probe: {} outputs via line protocol ✓", out.len());
+    }
+
+    // Drive the load per engine.
+    let n_requests = args.usize("requests");
+    let clients = args.usize("clients");
+    let mut report = Report::new("e2e_serving", "end-to-end batched serving (BERT-like MLP)");
+    report.set_meta("d_model", spec.d_model);
+    report.set_meta("d_ff", spec.d_ff);
+    report.set_meta("density", spec.density);
+    report.set_meta("requests", n_requests);
+    report.set_meta("max_batch", args.usize("max-batch"));
+
+    println!("\n{:<16} {:>10} {:>10} {:>10} {:>12}", "model", "p50 ms", "p99 ms", "mean ms", "req/s");
+    for model in ["bert-reordered", "bert-initial", "bert-csr"] {
+        let t = Instant::now();
+        let lat = drive_load(
+            &handle,
+            model,
+            |_, rng| (0..n_inputs).map(|_| rng.normal() as f32).collect(),
+            n_requests,
+            clients,
+        );
+        let wall = t.elapsed().as_secs_f64();
+        let ms: Vec<f64> = lat.iter().map(|l| l * 1e3).collect();
+        let s = Summary::of(&ms);
+        let p99 = percentile(&ms, 99.0);
+        let throughput = n_requests as f64 / wall;
+        println!(
+            "{model:<16} {:>10.2} {:>10.2} {:>10.2} {:>12.0}",
+            s.median, p99, s.mean, throughput
+        );
+        report.record_sample(model, "latency", &ms, "ms");
+        report.record_exact(model, "throughput", throughput, "req/s");
+    }
+
+    println!("\nserver metrics: {}", handle.metrics_snapshot().to_string_compact());
+    report.finish();
+}

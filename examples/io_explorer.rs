@@ -1,0 +1,81 @@
+//! io_explorer: interactive I/O analysis of one network.
+//!
+//! Sweeps fast-memory sizes for a chosen network family and prints the
+//! simulated I/Os per eviction policy next to the Theorem-1 bounds, plus
+//! an ASCII chart — the quickest way to *see* where a network stops being
+//! memory-bound (Fig. 5-style exploration on arbitrary nets).
+//!
+//! ```bash
+//! cargo run --release --example io_explorer -- --net mlp --width 200 --depth 4 \
+//!     --density 0.05 --memories 8,16,32,64,128,256
+//! cargo run --release --example io_explorer -- --net bert --density 0.1
+//! cargo run --release --example io_explorer -- --net cg --mg 100
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::bench::plot::ascii_chart;
+use sparseflow::cli::Spec;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::prelude::*;
+
+fn main() {
+    let args = Spec::new("io_explorer", "sweep fast-memory sizes for a network")
+        .opt("net", "mlp", "network family: mlp | bert | cg")
+        .opt("width", "200", "mlp: neurons per layer")
+        .opt("depth", "4", "mlp: number of layers")
+        .opt("density", "0.05", "mlp/bert: edge density")
+        .opt("mg", "100", "cg: design memory size M_g")
+        .opt("memories", "8,16,32,64,128,256,512", "fast-memory sizes M to sweep")
+        .opt("seed", "1", "generator seed")
+        .parse_env();
+
+    let mut rng = Pcg64::seed_from(args.u64("seed"));
+    let (net, order) = match args.str("net") {
+        "mlp" => {
+            let net = random_mlp(
+                &MlpSpec::new(args.usize("depth"), args.usize("width"), args.f64("density")),
+                &mut rng,
+            );
+            let order = two_optimal_order(&net);
+            (net, order)
+        }
+        "bert" => {
+            let net = bert_mlp(
+                &BertSpec { d_model: 256, d_ff: 1024, density: args.f64("density") },
+                &mut rng,
+            );
+            let order = two_optimal_order(&net);
+            (net, order)
+        }
+        "cg" => {
+            let (net, order) = compact_growth(&CompactGrowthSpec::new(args.usize("mg")), &mut rng);
+            (net, order)
+        }
+        other => {
+            eprintln!("unknown --net {other}");
+            std::process::exit(2);
+        }
+    };
+
+    println!("{}", net.describe());
+    let bounds = theorem1_bounds(&net);
+    println!(
+        "Theorem 1 totals: lower {} / upper {}\n",
+        bounds.total_lower, bounds.total_upper
+    );
+
+    let mut report = Report::new("io_explorer", "I/Os vs fast-memory size");
+    for &m in &args.usize_list("memories") {
+        if m < 3 {
+            continue;
+        }
+        for policy in PolicyKind::ALL {
+            let s = simulate(&net, &order, m, policy);
+            report.record_exact(&format!("M={m}"), policy.name(), s.total() as f64, "I/Os");
+        }
+        report.record_exact(&format!("M={m}"), "Lower bound", bounds.total_lower as f64, "I/Os");
+    }
+    println!("{}", report.table());
+    println!("{}", ascii_chart(&report, 64, 16, false));
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts for the Rust
+PJRT runtime (`rust/src/runtime/`).
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Artifact variants are declared in `configs/artifacts.json`; each produces
+`artifacts/<name>.hlo.txt` plus one shared `artifacts/manifest.json`
+describing input shapes/dtypes so the Rust loader can validate and pack
+literals. Running this module is a build-time step (`make artifacts`);
+Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import make_dense_mlp, make_sparse_mlp
+
+DEFAULT_VARIANTS = [
+    {
+        # End-to-end compose check: Rust generates the matching net
+        # (random_layered([64,64,64,8], 0.1)), packs ELL with K = n_in and
+        # cross-checks numerics against the native streaming engine.
+        "name": "ell_mlp_e2e",
+        "kind": "ell_mlp",
+        "layer_shapes": [[64, 64, 64], [64, 64, 64], [8, 64, 64]],
+        "batch": 16,
+    },
+    {
+        # Smaller kernel-focused artifact (runtime unit tests).
+        "name": "ell_layer_small",
+        "kind": "ell_mlp",
+        "layer_shapes": [[16, 8, 12]],
+        "batch": 4,
+    },
+    {
+        # Dense baseline artifact (GEMM chain; fig7 density=1 reference).
+        "name": "dense_mlp_demo",
+        "kind": "dense_mlp",
+        "sizes": [64, 128, 8],
+        "batch": 16,
+    },
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build_variant(variant: dict):
+    kind = variant["kind"]
+    if kind == "ell_mlp":
+        shapes = [tuple(t) for t in variant["layer_shapes"]]
+        fn, example = make_sparse_mlp(shapes, variant["batch"])
+    elif kind == "dense_mlp":
+        fn, example = make_dense_mlp(variant["sizes"], variant["batch"])
+    else:
+        raise ValueError(f"unknown artifact kind {kind!r}")
+    lowered = jax.jit(fn).lower(*example)
+    return to_hlo_text(lowered), example
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--config", default=None,
+                    help="JSON file with a 'variants' list "
+                         "(default: built-in variant set)")
+    ap.add_argument("--only", default=None,
+                    help="build a single named variant")
+    args = ap.parse_args(argv)
+
+    if args.config:
+        with open(args.config) as f:
+            variants = json.load(f)["variants"]
+    else:
+        variants = DEFAULT_VARIANTS
+    if args.only:
+        variants = [v for v in variants if v["name"] == args.only]
+        if not variants:
+            print(f"no variant named {args.only!r}", file=sys.stderr)
+            return 2
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "sparseflow-artifacts-v1", "artifacts": []}
+    for variant in variants:
+        name = variant["name"]
+        hlo, example = build_variant(variant)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": variant["kind"],
+            "batch": variant["batch"],
+            "spec": {k: v for k, v in variant.items() if k not in ("name", "kind")},
+            "inputs": [shape_entry(s) for s in example],
+        })
+        print(f"wrote {path} ({len(hlo)} chars, {len(example)} inputs)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""L1 — Pallas kernel: ELLPACK sparse-matrix x dense-batch product.
+
+The compute hot-spot of batched sparse FFNN inference. One layer is stored
+in ELL format: every output row (= output neuron) holds exactly K weight /
+index slots, padded with (weight=0, index=0). The kernel computes
+
+    y[r, :] = act(bias[r] + sum_k  w[r, k] * x[idx[r, k], :])
+
+Hardware adaptation (DESIGN.md paragraph 6): the paper optimizes for a CPU
+cache of M values; on TPU the analogous fast memory is VMEM. The BlockSpec
+below tiles the ELL tables and the accumulator into VMEM blocks of
+`block_rows` output neurons; the ELL layout groups all incoming
+connections of a row contiguously, which is precisely the 2-optimal
+connection order of Theorem 1 (every partial sum is produced start to
+finish and never spilled). The inner contraction over K is expressed as a
+dense multiply+reduce so Mosaic can map it to the MXU; the gather of
+activation rows is the HBM->VMEM stream the paper's schedule controls.
+
+The kernel MUST be lowered with interpret=True in this environment: the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md). Real-TPU efficiency is estimated in
+EXPERIMENTS.md from the VMEM footprint of the chosen block shapes.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_block_kernel(w_ref, idx_ref, b_ref, x_ref, o_ref, *, relu: bool):
+    """One grid step: `block_rows` output rows against the full x."""
+    w = w_ref[...]            # [bm, K]
+    idx = idx_ref[...]        # [bm, K] int32
+    b = b_ref[...]            # [bm]
+    x = x_ref[...]            # [n_in, batch]
+    bm, k = w.shape
+    batch = x.shape[1]
+    # Gather the K activation rows of each output neuron: [bm, K, batch].
+    gathered = jnp.take(x, idx.reshape(-1), axis=0).reshape(bm, k, batch)
+    # Contract over K on the MXU: [bm, K] x [bm, K, batch] -> [bm, batch].
+    acc = jnp.einsum("rk,rkb->rb", w, gathered, preferred_element_type=jnp.float32)
+    acc = acc + b[:, None]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pick_block_rows(n_out: int, target: int = 32) -> int:
+    """Largest divisor of n_out that is <= target (VMEM-friendly tiles)."""
+    best = 1
+    for bm in range(1, min(n_out, target) + 1):
+        if n_out % bm == 0:
+            best = bm
+    return best
+
+
+def ell_spmm(weights, indices, bias, x, *, relu: bool, block_rows: int | None = None,
+             interpret: bool = True):
+    """ELL sparse layer forward: y = act(W_ell @ x + b).
+
+    Args:
+      weights: [n_out, K] float32 ELL weight table (0.0 padding).
+      indices: [n_out, K] int32 ELL column table (0 padding).
+      bias:    [n_out] float32.
+      x:       [n_in, batch] float32 activations.
+      relu:    apply ReLU (hidden layer) or identity (output layer).
+      block_rows: rows per grid step; must divide n_out (default: auto).
+      interpret: lower in interpret mode (required on CPU PJRT).
+
+    Returns: [n_out, batch] float32.
+    """
+    n_out, k = weights.shape
+    assert indices.shape == (n_out, k), (indices.shape, weights.shape)
+    assert bias.shape == (n_out,)
+    n_in, batch = x.shape
+    bm = block_rows or pick_block_rows(n_out)
+    assert n_out % bm == 0, f"block_rows {bm} must divide n_out {n_out}"
+
+    grid = (n_out // bm,)
+    return pl.pallas_call(
+        partial(_ell_block_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),        # weights tile
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),        # indices tile
+            pl.BlockSpec((bm,), lambda i: (i,)),            # bias tile
+            pl.BlockSpec((n_in, batch), lambda i: (0, 0)),  # x (whole)
+        ],
+        out_specs=pl.BlockSpec((bm, batch), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, batch), x.dtype),
+        interpret=interpret,
+    )(weights, indices, bias, x)
+
+
+def vmem_footprint_bytes(n_out: int, k: int, n_in: int, batch: int,
+                         block_rows: int | None = None,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (EXPERIMENTS.md perf).
+
+    weights + indices tiles, bias tile, the gathered activations
+    [bm, K, batch], the accumulator [bm, batch], and the streamed x block.
+    """
+    bm = block_rows or pick_block_rows(n_out)
+    tiles = bm * k * (dtype_bytes + 4)          # weights f32 + indices i32
+    tiles += bm * dtype_bytes                   # bias
+    tiles += bm * k * batch * dtype_bytes       # gathered rows
+    tiles += bm * batch * dtype_bytes           # accumulator
+    tiles += n_in * batch * dtype_bytes         # resident x
+    return tiles

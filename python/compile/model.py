@@ -1,0 +1,106 @@
+"""L2 — the JAX model: batched sparse-MLP forward built from the L1 ELL
+kernel, plus the dense baseline. This is the computation that
+`aot.py` lowers once to HLO text; the Rust runtime executes the lowered
+artifact on the request path (Python never runs at inference time).
+
+Conventions (shared with the Rust engines, `rust/src/exec/`):
+  * activations are `[n, batch]` (row per neuron),
+  * hidden layers apply ReLU, the final layer is identity,
+  * weights/indices/biases are *inputs* of the lowered function, so one
+    artifact serves any network of the same ELL shapes.
+"""
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from .kernels.ell_spmm import ell_spmm
+from .kernels.ref import dense_ref, ell_spmm_ref
+
+
+def sparse_mlp_forward(params, x, *, use_kernel: bool = True, interpret: bool = True):
+    """Forward pass through a chain of ELL layers.
+
+    Args:
+      params: flat list [w0, idx0, b0, w1, idx1, b1, ...] -- one
+        (weights [n_out,K], indices [n_out,K] i32, bias [n_out]) triple per
+        layer. All layers except the last apply ReLU.
+      x: [n_in, batch] activations.
+      use_kernel: route through the Pallas kernel (True) or the pure-jnp
+        reference (False; used to cross-check lowering).
+    """
+    assert len(params) % 3 == 0 and params, "params must be (w, idx, b) triples"
+    n_layers = len(params) // 3
+    for li in range(n_layers):
+        w, idx, b = params[3 * li : 3 * li + 3]
+        relu = li < n_layers - 1
+        if use_kernel:
+            x = ell_spmm(w, idx, b, x, relu=relu, interpret=interpret)
+        else:
+            x = ell_spmm_ref(w, idx, b, x, relu=relu)
+    return x
+
+
+def dense_mlp_forward(params, x):
+    """Dense baseline: params = [w0, b0, w1, b1, ...] with w [n_out, n_in]."""
+    assert len(params) % 2 == 0 and params
+    n_layers = len(params) // 2
+    for li in range(n_layers):
+        w, b = params[2 * li : 2 * li + 2]
+        x = dense_ref(w, b, x, relu=li < n_layers - 1)
+    return x
+
+
+def make_sparse_mlp(layer_shapes, batch, *, use_kernel=True, interpret=True):
+    """Build (fn, example_args) for AOT lowering of an ELL MLP.
+
+    Args:
+      layer_shapes: list of (n_out, K, n_in) per layer; consecutive layers
+        must chain (n_in of layer i+1 == n_out of layer i).
+      batch: batch size baked into the artifact.
+
+    Returns `(fn, example_args)` where `fn(*params_and_x)` returns a
+    1-tuple (lowered with return_tuple=True on the XLA side).
+    """
+    for (a, b_) in zip(layer_shapes, layer_shapes[1:]):
+        assert b_[2] == a[0], f"layer chain mismatch: {a} -> {b_}"
+
+    import jax
+
+    example = []
+    for (n_out, k, n_in) in layer_shapes:
+        example.append(jax.ShapeDtypeStruct((n_out, k), jnp.float32))
+        example.append(jax.ShapeDtypeStruct((n_out, k), jnp.int32))
+        example.append(jax.ShapeDtypeStruct((n_out,), jnp.float32))
+    example.append(jax.ShapeDtypeStruct((layer_shapes[0][2], batch), jnp.float32))
+
+    def fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (sparse_mlp_forward(params, x, use_kernel=use_kernel, interpret=interpret),)
+
+    return fn, example
+
+
+def make_dense_mlp(sizes, batch):
+    """Build (fn, example_args) for a dense MLP artifact.
+
+    sizes = [n0, n1, ..., nk]: weights w_i [n_{i+1}, n_i], bias [n_{i+1}].
+    """
+    import jax
+
+    assert len(sizes) >= 2
+    example = []
+    for n_in, n_out in zip(sizes, sizes[1:]):
+        example.append(jax.ShapeDtypeStruct((n_out, n_in), jnp.float32))
+        example.append(jax.ShapeDtypeStruct((n_out,), jnp.float32))
+    example.append(jax.ShapeDtypeStruct((sizes[0], batch), jnp.float32))
+
+    def fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (dense_mlp_forward(params, x),)
+
+    return fn, example
+
+
+# Convenience for tests.
+sparse_mlp_ref = partial(sparse_mlp_forward, use_kernel=False)

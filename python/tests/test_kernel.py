@@ -1,0 +1,107 @@
+"""Kernel vs ref allclose -- the CORE correctness signal of L1.
+
+Hypothesis sweeps shapes, batch sizes, index patterns and dtypes of the
+Pallas ELL kernel against the pure-jnp oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ell_spmm import ell_spmm, pick_block_rows, vmem_footprint_bytes
+from compile.kernels.ref import ell_spmm_ref
+
+
+def make_case(rng, n_out, k, n_in, batch):
+    w = jnp.array(rng.normal(size=(n_out, k)), dtype=jnp.float32)
+    idx = jnp.array(rng.integers(0, n_in, size=(n_out, k)), dtype=jnp.int32)
+    b = jnp.array(rng.normal(size=(n_out,)), dtype=jnp.float32)
+    x = jnp.array(rng.normal(size=(n_in, batch)), dtype=jnp.float32)
+    return w, idx, b, x
+
+
+def assert_matches_ref(w, idx, b, x, relu, **kw):
+    got = ell_spmm(w, idx, b, x, relu=relu, **kw)
+    want = ell_spmm_ref(w, idx, b, x, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_out=st.integers(1, 48),
+    k=st.integers(1, 16),
+    n_in=st.integers(1, 40),
+    batch=st.integers(1, 9),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_out, k, n_in, batch, relu, seed):
+    rng = np.random.default_rng(seed)
+    w, idx, b, x = make_case(rng, n_out, k, n_in, batch)
+    assert_matches_ref(w, idx, b, x, relu)
+
+
+@pytest.mark.parametrize("shape", [(16, 8, 12, 4), (64, 64, 64, 16),
+                                   (8, 1, 1, 1), (1, 4, 4, 8), (33, 7, 5, 3)])
+def test_kernel_matches_ref_fixed_shapes(shape):
+    n_out, k, n_in, batch = shape
+    rng = np.random.default_rng(hash(shape) % (2**32))
+    w, idx, b, x = make_case(rng, n_out, k, n_in, batch)
+    assert_matches_ref(w, idx, b, x, relu=True)
+    assert_matches_ref(w, idx, b, x, relu=False)
+
+
+def test_explicit_block_rows():
+    rng = np.random.default_rng(7)
+    w, idx, b, x = make_case(rng, 32, 8, 16, 4)
+    for bm in (1, 2, 8, 32):
+        assert_matches_ref(w, idx, b, x, relu=True, block_rows=bm)
+
+
+def test_padding_semantics():
+    # Padded slots (w=0, idx=0) must not contribute, whatever x[0] is.
+    rng = np.random.default_rng(8)
+    w, idx, b, x = make_case(rng, 8, 4, 8, 2)
+    w = w.at[:, 2:].set(0.0)
+    idx = idx.at[:, 2:].set(0)
+    x = x.at[0].set(1e6)  # huge value at the padding target row
+    got = ell_spmm(w, idx, b, x, relu=False)
+    want = ell_spmm_ref(w, idx, b, x, relu=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_relu_clamps_negative():
+    w = jnp.array([[-1.0]], dtype=jnp.float32)
+    idx = jnp.array([[0]], dtype=jnp.int32)
+    b = jnp.array([0.0], dtype=jnp.float32)
+    x = jnp.array([[5.0, -5.0]], dtype=jnp.float32)
+    y = ell_spmm(w, idx, b, x, relu=True)
+    np.testing.assert_array_equal(np.asarray(y), [[0.0, 5.0]])
+
+
+def test_duplicate_indices_accumulate():
+    # The same source row referenced twice must count twice.
+    w = jnp.array([[1.0, 2.0]], dtype=jnp.float32)
+    idx = jnp.array([[3, 3]], dtype=jnp.int32)
+    b = jnp.array([0.0], dtype=jnp.float32)
+    x = jnp.zeros((4, 1), dtype=jnp.float32).at[3, 0].set(2.0)
+    y = ell_spmm(w, idx, b, x, relu=False)
+    np.testing.assert_allclose(np.asarray(y), [[6.0]])
+
+
+def test_pick_block_rows_divides():
+    for n in (1, 7, 16, 48, 1000, 4096):
+        bm = pick_block_rows(n)
+        assert n % bm == 0
+        assert 1 <= bm <= 64
+
+
+def test_vmem_footprint_monotone():
+    small = vmem_footprint_bytes(64, 8, 64, 16)
+    big = vmem_footprint_bytes(64, 32, 64, 128)
+    assert small < big
+    # A BERT-large-ish layer tile must fit in 16 MiB VMEM.
+    bert = vmem_footprint_bytes(4096, 64, 1024, 128, block_rows=32)
+    assert bert < 16 * 2**20, bert

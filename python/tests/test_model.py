@@ -1,0 +1,70 @@
+"""L2 model tests: layer chaining, shapes, kernel-vs-ref paths."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (dense_mlp_forward, make_dense_mlp,
+                           make_sparse_mlp, sparse_mlp_forward)
+
+
+def random_params(rng, layer_shapes):
+    params = []
+    for (n_out, k, n_in) in layer_shapes:
+        params.append(jnp.array(rng.normal(size=(n_out, k)), dtype=jnp.float32))
+        params.append(jnp.array(rng.integers(0, n_in, size=(n_out, k)), dtype=jnp.int32))
+        params.append(jnp.array(rng.normal(size=(n_out,)), dtype=jnp.float32))
+    return params
+
+
+def test_sparse_mlp_kernel_equals_ref_path():
+    rng = np.random.default_rng(1)
+    shapes = [(24, 8, 16), (12, 6, 24), (4, 12, 12)]
+    params = random_params(rng, shapes)
+    x = jnp.array(rng.normal(size=(16, 8)), dtype=jnp.float32)
+    yk = sparse_mlp_forward(params, x, use_kernel=True)
+    yr = sparse_mlp_forward(params, x, use_kernel=False)
+    assert yk.shape == (4, 8)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+def test_final_layer_is_identity():
+    rng = np.random.default_rng(2)
+    shapes = [(6, 4, 6)]
+    params = random_params(rng, shapes)
+    x = jnp.array(rng.normal(size=(6, 5)), dtype=jnp.float32)
+    y = sparse_mlp_forward(params, x)
+    assert (np.asarray(y) < 0).any(), "single layer must not apply ReLU"
+
+
+def test_dense_mlp_shapes_and_relu():
+    rng = np.random.default_rng(3)
+    w0 = jnp.array(rng.normal(size=(8, 4)), dtype=jnp.float32)
+    b0 = jnp.zeros(8, dtype=jnp.float32)
+    w1 = jnp.array(rng.normal(size=(3, 8)), dtype=jnp.float32)
+    b1 = jnp.zeros(3, dtype=jnp.float32)
+    x = jnp.array(rng.normal(size=(4, 6)), dtype=jnp.float32)
+    y = dense_mlp_forward([w0, b0, w1, b1], x)
+    assert y.shape == (3, 6)
+    # Hidden ReLU: recompute by hand.
+    h = np.maximum(np.asarray(w0) @ np.asarray(x) + np.asarray(b0)[:, None], 0)
+    want = np.asarray(w1) @ h + np.asarray(b1)[:, None]
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-5)
+
+
+def test_make_sparse_mlp_example_args():
+    fn, example = make_sparse_mlp([(8, 4, 6), (2, 8, 8)], batch=3)
+    assert len(example) == 2 * 3 + 1
+    assert example[-1].shape == (6, 3)
+    assert example[0].shape == (8, 4)
+    assert str(example[1].dtype) == "int32"
+
+
+def test_make_sparse_mlp_rejects_bad_chain():
+    with pytest.raises(AssertionError):
+        make_sparse_mlp([(8, 4, 6), (2, 8, 99)], batch=3)
+
+
+def test_make_dense_mlp_example_args():
+    fn, example = make_dense_mlp([10, 20, 5], batch=2)
+    assert [tuple(s.shape) for s in example] == [(20, 10), (20,), (5, 20), (5,), (10, 2)]

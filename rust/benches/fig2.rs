@@ -1,0 +1,131 @@
+//! Fig. 2 — Connection Reordering across network properties.
+//!
+//! Four sweeps around the paper's baseline (4-layer, 500-wide, 10% dense
+//! MLP, one output neuron, M = 100, MIN eviction): density, depth, width,
+//! fast-memory size. Series: Initial (2-optimal order), Reordered (after
+//! CR), and the Theorem-1 lower bound. 5 random networks per point,
+//! median + 95% nonparametric CI, as in the paper.
+//!
+//! The paper anneals for T = 10⁶; this harness defaults to a smaller
+//! budget (most of the reduction happens in the first ~10⁴ iterations —
+//! see fig4) so the full sweep stays tractable; use `--iters` to go long.
+//!
+//! ```bash
+//! cargo bench --bench fig2 -- --dim all --iters 15000 --seeds 5
+//! ```
+
+use sparseflow::bench::figures::{cr_point, series, workers_default, CrConfig};
+use sparseflow::bench::harness::Report;
+use sparseflow::bench::plot::ascii_chart;
+use sparseflow::cli::Spec;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::memory::PolicyKind;
+
+fn main() {
+    let args = Spec::new("fig2", "Connection Reordering vs density/depth/width/memory")
+        .opt("dim", "all", "density | depth | width | memory | all")
+        .opt("iters", "6000", "SA iterations per run (at the 75k-connection baseline scale)")
+        .opt("seeds", "5", "random networks per configuration")
+        .opt("m", "100", "fast-memory size (baseline)")
+        .opt("workers", "0", "worker threads (0 = auto)")
+        .flag("quick", "tiny smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let iters = if quick { 300 } else { args.u64("iters") };
+    let n_seeds = if quick { 2 } else { args.usize("seeds") };
+    let workers = match args.usize("workers") {
+        0 => workers_default(),
+        w => w,
+    };
+    let m = args.usize("m");
+    let base = |w: usize, d: usize, p: f64| MlpSpec::new(d, w, p);
+    // Baseline (quick mode shrinks everything).
+    let (bw, bd, bp) = if quick { (60, 4, 0.1) } else { (500, 4, 0.1) };
+
+    let mut cfg = CrConfig::new(m, iters, n_seeds);
+    cfg.workers = workers;
+    cfg.policy = PolicyKind::Min;
+
+    let dim = args.str("dim").to_string();
+    let run_dim = |which: &str| dim == "all" || dim == which;
+
+    if run_dim("density") {
+        let mut report = Report::new("fig2a_density", "CR I/Os vs edge density (Fig. 2a)");
+        report.set_meta("iters", iters);
+        report.set_meta("m", m as u64);
+        let densities: &[f64] = if quick {
+            &[0.05, 0.2]
+        } else {
+            &[0.01, 0.025, 0.05, 0.10, 0.20, 0.40, 0.80, 1.0]
+        };
+        for &p in densities {
+            let spec = base(bw, bd, p);
+            let gen = move |rng: &mut sparseflow::util::rng::Pcg64| random_mlp(&spec, rng);
+            let outs = cr_point(&gen, &cfg);
+            let (ini, reo, low) = series(&outs);
+            let x = format!("d={p}");
+            report.record_sample(&x, "Initial", &ini, "I/Os");
+            report.record_sample(&x, "Reordered", &reo, "I/Os");
+            report.record_sample(&x, "Lower bound", &low, "I/Os");
+        }
+        report.finish();
+        println!("{}", ascii_chart(&report, 64, 14, true));
+    }
+
+    if run_dim("depth") {
+        let mut report = Report::new("fig2b_depth", "CR I/Os vs depth (Fig. 2b)");
+        report.set_meta("iters", iters);
+        let depths: &[usize] = if quick { &[2, 4] } else { &[2, 3, 4, 6, 8, 10, 13] };
+        for &d in depths {
+            let spec = base(bw, d, bp);
+            let gen = move |rng: &mut sparseflow::util::rng::Pcg64| random_mlp(&spec, rng);
+            let outs = cr_point(&gen, &cfg);
+            let (ini, reo, low) = series(&outs);
+            let x = format!("depth={d}");
+            report.record_sample(&x, "Initial", &ini, "I/Os");
+            report.record_sample(&x, "Reordered", &reo, "I/Os");
+            report.record_sample(&x, "Lower bound", &low, "I/Os");
+        }
+        report.finish();
+        println!("{}", ascii_chart(&report, 64, 14, true));
+    }
+
+    if run_dim("width") {
+        let mut report = Report::new("fig2c_width", "CR I/Os vs width (Fig. 2c)");
+        report.set_meta("iters", iters);
+        let widths: &[usize] = if quick { &[30, 60] } else { &[125, 250, 500, 1000] };
+        for &w in widths {
+            let spec = base(w, bd, bp);
+            let gen = move |rng: &mut sparseflow::util::rng::Pcg64| random_mlp(&spec, rng);
+            let outs = cr_point(&gen, &cfg);
+            let (ini, reo, low) = series(&outs);
+            let x = format!("width={w}");
+            report.record_sample(&x, "Initial", &ini, "I/Os");
+            report.record_sample(&x, "Reordered", &reo, "I/Os");
+            report.record_sample(&x, "Lower bound", &low, "I/Os");
+        }
+        report.finish();
+        println!("{}", ascii_chart(&report, 64, 14, true));
+    }
+
+    if run_dim("memory") {
+        let mut report = Report::new("fig2d_memory", "CR I/Os vs fast-memory size (Fig. 2d)");
+        report.set_meta("iters", iters);
+        let memories: &[usize] = if quick { &[10, 40] } else { &[25, 50, 100, 200, 400] };
+        for &mm in memories {
+            let mut c = cfg;
+            c.m = mm;
+            let spec = base(bw, bd, bp);
+            let gen = move |rng: &mut sparseflow::util::rng::Pcg64| random_mlp(&spec, rng);
+            let outs = cr_point(&gen, &c);
+            let (ini, reo, low) = series(&outs);
+            let x = format!("M={mm}");
+            report.record_sample(&x, "Initial", &ini, "I/Os");
+            report.record_sample(&x, "Reordered", &reo, "I/Os");
+            report.record_sample(&x, "Lower bound", &low, "I/Os");
+        }
+        report.finish();
+        println!("{}", ascii_chart(&report, 64, 14, true));
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig. 3 — Compact-Growth networks designed for fast-memory sizes
+//! M_g ∈ {100, 300, 500} (1000 grown neurons, in-degree 5, one output):
+//! sweep the simulated memory M and show that the construction order hits
+//! the Theorem-1 lower bound exactly when M ≥ M_g.
+//!
+//! ```bash
+//! cargo bench --bench fig3
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::bench::plot::ascii_chart;
+use sparseflow::bounds::theorem1_bounds;
+use sparseflow::cli::Spec;
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::memory::PolicyKind;
+use sparseflow::sim::simulate;
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::threadpool::par_map;
+
+fn main() {
+    let args = Spec::new("fig3", "Compact Growth vs fast-memory size")
+        .opt("mgs", "100,300,500", "design memory sizes M_g")
+        .opt("iters", "1000", "growth iterations (neurons)")
+        .opt("seeds", "5", "random networks per M_g")
+        .flag("quick", "tiny smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let mgs: Vec<usize> = if quick { vec![40, 80] } else { args.usize_list("mgs") };
+    let n_iter = if quick { 150 } else { args.usize("iters") };
+    let n_seeds = if quick { 2 } else { args.usize("seeds") };
+
+    let mut report = Report::new("fig3_compact_growth", "CG networks: I/Os vs M (Fig. 3)");
+    report.set_meta("growth_iters", n_iter);
+
+    for &mg in &mgs {
+        let spec = CompactGrowthSpec { m_g: mg, n_iter, in_degree: 5 };
+        // Memory sweep around the design point.
+        let sweep: Vec<usize> = [mg / 4, mg / 2, (3 * mg) / 4, mg.saturating_sub(10), mg, mg + mg / 2, 2 * mg]
+            .iter()
+            .copied()
+            .filter(|&m| m >= 8)
+            .collect();
+        let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+        for &m in &sweep {
+            let results = par_map(seeds.len().max(1), &seeds, |&s| {
+                let mut rng = Pcg64::seed_from(0xC6 + s);
+                let (net, order) = compact_growth(&spec, &mut rng);
+                let total = simulate(&net, &order, m, PolicyKind::Min).total();
+                let lower = theorem1_bounds(&net).total_lower;
+                (total as f64, lower as f64)
+            });
+            let ios: Vec<f64> = results.iter().map(|r| r.0).collect();
+            let lows: Vec<f64> = results.iter().map(|r| r.1).collect();
+            let x = format!("M={m}");
+            report.record_sample(&x, &format!("Mg={mg}"), &ios, "I/Os");
+            report.record_sample(&x, &format!("Mg={mg} lower"), &lows, "I/Os");
+        }
+        // Verify the theorem at the design point (hard assertion).
+        let mut rng = Pcg64::seed_from(0xC6);
+        let (net, order) = compact_growth(&spec, &mut rng);
+        let at_design = simulate(&net, &order, mg, PolicyKind::Min).total();
+        assert_eq!(
+            at_design,
+            theorem1_bounds(&net).total_lower,
+            "Theorem 2 violated at M = M_g = {mg}"
+        );
+        println!("Mg={mg}: lower bound attained exactly at M = Mg ✓");
+    }
+    report.finish();
+    println!("{}", ascii_chart(&report, 70, 14, false));
+}

@@ -1,0 +1,50 @@
+//! Fig. 5 — I/Os vs fast-memory size before/after Connection Reordering
+//! on random sparse FFNNs (3 layers of 500 neurons + one output, 1%
+//! density). With sufficient memory both meet the Theorem-1 lower bound;
+//! with insufficient memory CR converges towards it faster.
+//!
+//! ```bash
+//! cargo bench --bench fig5
+//! ```
+
+use sparseflow::bench::figures::{cr_point, series, workers_default, CrConfig};
+use sparseflow::bench::harness::Report;
+use sparseflow::bench::plot::ascii_chart;
+use sparseflow::cli::Spec;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+
+fn main() {
+    let args = Spec::new("fig5", "I/Os vs fast-memory size, before/after CR")
+        .opt("iters", "15000", "SA iterations")
+        .opt("seeds", "5", "random networks per point")
+        .opt("width", "500", "MLP width")
+        .opt("density", "0.01", "edge density")
+        .opt("memories", "5,10,20,40,80,160,320", "fast-memory sizes")
+        .flag("quick", "tiny smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let iters = if quick { 300 } else { args.u64("iters") };
+    let n_seeds = if quick { 2 } else { args.usize("seeds") };
+    let width = if quick { 50 } else { args.usize("width") };
+    let spec = MlpSpec::new(3, width, args.f64("density"));
+    let memories: Vec<usize> = if quick { vec![5, 20] } else { args.usize_list("memories") };
+
+    let mut report = Report::new("fig5_memory", "I/Os vs M, before/after CR (Fig. 5)");
+    report.set_meta("iters", iters);
+    report.set_meta("width", width);
+
+    for &m in &memories {
+        let mut cfg = CrConfig::new(m, iters, n_seeds);
+        cfg.workers = workers_default();
+        let gen = move |rng: &mut sparseflow::util::rng::Pcg64| random_mlp(&spec, rng);
+        let outs = cr_point(&gen, &cfg);
+        let (ini, reo, low) = series(&outs);
+        let x = format!("M={m}");
+        report.record_sample(&x, "Initial", &ini, "I/Os");
+        report.record_sample(&x, "Reordered", &reo, "I/Os");
+        report.record_sample(&x, "Lower bound", &low, "I/Os");
+    }
+    report.finish();
+    println!("{}", ascii_chart(&report, 70, 14, false));
+}

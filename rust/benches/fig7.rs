@@ -1,0 +1,136 @@
+//! Fig. 7 — wall-clock execution time of batched inference (batch 128)
+//! for randomly-sparse FFNNs, three methods:
+//!
+//! * `csr-layerwise` — the baseline (the paper's MKL CSRMM; DESIGN.md §5),
+//! * `stream-initial` — our streaming executor on the 2-optimal order,
+//! * `stream-reordered` — after Connection Reordering.
+//!
+//! Sweeps density (7a), depth (7b), width (7c) around the baseline
+//! network. 10 measured reps, medians with min/max bars, speedup
+//! annotations vs the layer-wise baseline — as in the paper.
+//!
+//! ```bash
+//! cargo bench --bench fig7 -- --dim density
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+struct Cell {
+    label: String,
+    spec: MlpSpec,
+}
+
+fn run_cell(cell: &Cell, report: &mut Report, batch: usize, reps: usize, sa_iters: u64, m: usize) {
+    let mut rng = Pcg64::seed_from(0xF17);
+    let net = random_mlp(&cell.spec, &mut rng);
+    let initial = two_optimal_order(&net);
+    let iters = sparseflow::bench::figures::scaled_iters(sa_iters, net.n_conns());
+    let (best, _) = reorder(&net, &initial, &AnnealConfig::new(m, PolicyKind::Min, iters));
+
+    let engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(LayerwiseEngine::new(&net)),
+        Box::new(StreamingEngine::with_name(&net, &initial, "stream-initial")),
+        Box::new(StreamingEngine::with_name(&net, &best, "stream-reordered")),
+    ];
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+
+    let mut medians = Vec::new();
+    for engine in &engines {
+        let times = measure(2, reps, || engine.infer(&x));
+        let ms: Vec<f64> = times.iter().map(|t| t * 1e3).collect();
+        let s = Summary::of(&ms);
+        report.record_sample(&cell.label, engine.name(), &ms, "ms");
+        medians.push((engine.name(), s.median));
+    }
+    let baseline = medians[0].1;
+    let annotate: Vec<String> = medians[1..]
+        .iter()
+        .map(|(n, m)| format!("{n}: {:.2}×", baseline / m))
+        .collect();
+    println!("{:<14} baseline {:.3} ms | speedups: {}", cell.label, baseline, annotate.join(", "));
+}
+
+fn main() {
+    let args = Spec::new("fig7", "execution time: layer-wise CSR vs streaming (Fig. 7)")
+        .opt("dim", "all", "density | depth | width | all")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measured repetitions (paper: 10)")
+        .opt("sa-iters", "3000", "Connection Reordering iterations")
+        .opt("m", "100", "fast-memory size for reordering")
+        .flag("quick", "tiny smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let sa_iters = if quick { 200 } else { args.u64("sa-iters") };
+    let m = args.usize("m");
+    let (bw, bd, bp) = if quick { (48, 3, 0.1) } else { (500, 4, 0.1) };
+
+    let dim = args.str("dim").to_string();
+    let run_dim = |w: &str| dim == "all" || dim == w;
+
+    if run_dim("density") {
+        let mut report = Report::new("fig7a_density", "runtime vs density (Fig. 7a)");
+        report.set_meta("batch", batch);
+        let densities: &[f64] = if quick {
+            &[0.05, 0.4]
+        } else {
+            &[0.001, 0.005, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0]
+        };
+        for &p in densities {
+            run_cell(
+                &Cell { label: format!("d={p}"), spec: MlpSpec::new(bd, bw, p) },
+                &mut report,
+                batch,
+                reps,
+                sa_iters,
+                m,
+            );
+        }
+        report.finish();
+    }
+    if run_dim("depth") {
+        let mut report = Report::new("fig7b_depth", "runtime vs depth (Fig. 7b)");
+        report.set_meta("batch", batch);
+        let depths: &[usize] = if quick { &[2, 4] } else { &[2, 4, 6, 8, 12] };
+        for &d in depths {
+            run_cell(
+                &Cell { label: format!("depth={d}"), spec: MlpSpec::new(d, bw, bp) },
+                &mut report,
+                batch,
+                reps,
+                sa_iters,
+                m,
+            );
+        }
+        report.finish();
+    }
+    if run_dim("width") {
+        let mut report = Report::new("fig7c_width", "runtime vs width (Fig. 7c)");
+        report.set_meta("batch", batch);
+        let widths: &[usize] = if quick { &[32, 64] } else { &[125, 250, 500, 1000, 2000] };
+        for &w in widths {
+            run_cell(
+                &Cell { label: format!("width={w}"), spec: MlpSpec::new(bd, w, bp) },
+                &mut report,
+                batch,
+                reps,
+                sa_iters,
+                m,
+            );
+        }
+        report.finish();
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig. 8 — wall-clock execution time of batched inference on the
+//! BERT_LARGE encoder MLP with Connection Reordering, across pruning
+//! densities: before reordering, after reordering, and the layer-wise
+//! CSR baseline. Batch 128, 10 reps, medians with min/max bars; outliers
+//! removed with Tukey's method (the paper dropped one MKL outlier the
+//! same way).
+//!
+//! ```bash
+//! cargo bench --bench fig8 -- --paper
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+fn main() {
+    let args = Spec::new("fig8", "BERT MLP execution time vs density (Fig. 8)")
+        .opt("densities", "0.01,0.05,0.1,0.2,0.5", "pruning densities")
+        .opt("batch", "128", "batch size")
+        .opt("reps", "10", "measured repetitions")
+        .opt("sa-iters", "800", "Connection Reordering iterations")
+        .opt("m", "100", "fast-memory size for reordering")
+        .flag("paper", "full BERT_LARGE shapes (1024×4096; default ¼ scale)")
+        .flag("quick", "tiny smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let (dm, dff) = if quick {
+        (64, 256)
+    } else if args.flag("paper") {
+        (1024, 4096)
+    } else {
+        (512, 2048)
+    };
+    let batch = if quick { 8 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let sa_iters = if quick { 100 } else { args.u64("sa-iters") };
+    let densities: Vec<f64> = if quick { vec![0.1] } else { args.f64_list("densities") };
+    let m = args.usize("m");
+
+    let mut report = Report::new("fig8_bert_runtime", "BERT MLP runtime vs density (Fig. 8)");
+    report.set_meta("d_model", dm);
+    report.set_meta("d_ff", dff);
+    report.set_meta("batch", batch);
+
+    println!("BERT-like MLP {dm}×{dff}, batch {batch}");
+    for &density in &densities {
+        let mut rng = Pcg64::seed_from(0xF18);
+        let net = bert_mlp(&BertSpec { d_model: dm, d_ff: dff, density }, &mut rng);
+        let initial = two_optimal_order(&net);
+        let iters = sparseflow::bench::figures::scaled_iters(sa_iters, net.n_conns());
+        let (best, sa_rep) = reorder(&net, &initial, &AnnealConfig::new(m, PolicyKind::Min, iters));
+
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(LayerwiseEngine::new(&net)),
+            Box::new(StreamingEngine::with_name(&net, &initial, "stream-initial")),
+            Box::new(StreamingEngine::with_name(&net, &best, "stream-reordered")),
+        ];
+        let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+
+        let x_label = format!("d={density}");
+        let mut medians = Vec::new();
+        for engine in &engines {
+            let times = measure(2, reps, || engine.infer(&x));
+            let ms: Vec<f64> = times.iter().map(|t| t * 1e3).collect();
+            report.record_sample(&x_label, engine.name(), &ms, "ms");
+            medians.push((engine.name(), Summary::of(&ms).median));
+        }
+        let base = medians[0].1;
+        println!(
+            "{x_label:<8} W={:<9} csr {base:>8.3} ms | initial {:>8.3} ms ({:.2}×) | reordered {:>8.3} ms ({:.2}×) | ΔI/O {:.1}%",
+            net.n_conns(),
+            medians[1].1,
+            base / medians[1].1,
+            medians[2].1,
+            base / medians[2].1,
+            sa_rep.reduction() * 100.0,
+        );
+    }
+    report.finish();
+}

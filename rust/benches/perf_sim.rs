@@ -1,0 +1,80 @@
+//! §Perf — simulator and annealing throughput (the optimization target of
+//! EXPERIMENTS.md §Perf: SA evaluation dominates every simulated
+//! experiment). Reports connection-steps/s per policy and SA
+//! iterations/s on the paper's baseline network.
+//!
+//! ```bash
+//! cargo bench --bench perf_sim
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::sim::Simulator;
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+fn main() {
+    let args = Spec::new("perf_sim", "simulator + annealing throughput")
+        .opt("width", "500", "MLP width")
+        .opt("depth", "4", "MLP depth")
+        .opt("density", "0.1", "edge density")
+        .opt("m", "100", "fast-memory size")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("sa-iters", "2000", "SA iterations for the iters/s probe")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let width = if quick { 60 } else { args.usize("width") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let sa_iters = if quick { 200 } else { args.u64("sa-iters") };
+
+    let mut rng = Pcg64::seed_from(1);
+    let net = random_mlp(&MlpSpec::new(args.usize("depth"), width, args.f64("density")), &mut rng);
+    let order = two_optimal_order(&net);
+    let m = args.usize("m");
+    let w = net.n_conns() as f64;
+    println!("{}", net.describe());
+
+    let mut report = Report::new("perf_sim", "simulator & SA throughput (§Perf)");
+    report.set_meta("w", net.n_conns());
+    report.set_meta("m", m as u64);
+
+    let mut sim = Simulator::new(&net);
+    for policy in PolicyKind::ALL {
+        let times = measure(2, reps, || sim.run(&order, m, policy));
+        let s = Summary::of(&times);
+        let mcps = w / s.median / 1e6;
+        report.record_sample(
+            policy.name(),
+            "conn-steps/s (M)",
+            &times.iter().map(|t| w / t / 1e6).collect::<Vec<_>>(),
+            "M/s",
+        );
+        println!(
+            "{:<4} {:>8.2} ms/run  {:>8.1}M conn-steps/s",
+            policy.name(),
+            s.median * 1e3,
+            mcps
+        );
+    }
+
+    // SA throughput (MIN policy, the default experimental setup).
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, sa_iters);
+    let (res, dt) = sparseflow::util::timing::time_it(|| reorder(&net, &order, &cfg));
+    let (_, rep) = res;
+    let ips = sa_iters as f64 / dt;
+    report.record_exact("SA", "iters/s", ips, "iters/s");
+    report.record_exact("SA", "aborted %", 100.0 * rep.aborted_evals as f64 / sa_iters as f64, "%");
+    println!(
+        "SA:  {ips:>8.0} iters/s  ({} → {} I/Os, {:.0}% evals aborted early)",
+        rep.initial_ios,
+        rep.final_ios,
+        100.0 * rep.aborted_evals as f64 / sa_iters as f64
+    );
+    report.finish();
+}

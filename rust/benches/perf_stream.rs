@@ -1,0 +1,118 @@
+//! §Perf — streaming-executor hot path: GFLOP/s and effective GB/s of the
+//! batched AXPY stream vs the layer-wise CSR baseline and dense GEMM,
+//! plus the coordinator's end-to-end overhead (served vs direct calls).
+//!
+//! ```bash
+//! cargo bench --bench perf_stream
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::server::drive_load;
+use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::dense::DenseEngine;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+use std::sync::Arc;
+
+fn main() {
+    let args = Spec::new("perf_stream", "streaming-executor throughput (§Perf)")
+        .opt("width", "500", "MLP width")
+        .opt("depth", "4", "MLP depth")
+        .opt("density", "0.1", "edge density")
+        .opt("batch", "128", "batch size")
+        .opt("reps", "10", "measurement repetitions")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let width = if quick { 48 } else { args.usize("width") };
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+
+    let mut rng = Pcg64::seed_from(2);
+    let net = random_mlp(&MlpSpec::new(args.usize("depth"), width, args.f64("density")), &mut rng);
+    let order = two_optimal_order(&net);
+    println!("{} batch={batch}", net.describe());
+
+    // FLOPs per inference: 2 per connection per batch column.
+    let flops = 2.0 * net.n_conns() as f64 * batch as f64;
+    // Bytes touched per inference (lower estimate): the instruction
+    // stream (12 B/conn) + 2 batch-row accesses per connection.
+    let bytes = net.n_conns() as f64 * (12.0 + 2.0 * 4.0 * batch as f64);
+
+    let mut report = Report::new("perf_stream", "engine throughput (§Perf)");
+    report.set_meta("batch", batch);
+    report.set_meta("w", net.n_conns());
+
+    let engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(StreamingEngine::new(&net, &order)),
+        Box::new(LayerwiseEngine::new(&net)),
+        Box::new(DenseEngine::new(&net)),
+    ];
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+    for engine in &engines {
+        let times = measure(2, reps, || engine.infer(&x));
+        let s = Summary::of(&times);
+        let gflops = flops / s.median / 1e9;
+        let gbs = bytes / s.median / 1e9;
+        report.record_sample(
+            engine.name(),
+            "GFLOP/s",
+            &times.iter().map(|t| flops / t / 1e9).collect::<Vec<_>>(),
+            "GFLOP/s",
+        );
+        println!(
+            "{:<14} {:>9.3} ms  {:>7.2} GFLOP/s  {:>7.2} GB/s (streamed estimate)",
+            engine.name(),
+            s.median * 1e3,
+            gflops,
+            gbs
+        );
+    }
+
+    // Coordinator overhead: served latency under load vs a direct call.
+    let engine = Arc::new(StreamingEngine::new(&net, &order));
+    let direct_times = measure(2, reps, || {
+        engine.infer(&BatchMatrix::random(net.n_inputs(), 1, &mut rng))
+    });
+    let direct_ms = Summary::of(&direct_times).median * 1e3;
+
+    let mut router = Router::new();
+    router.register(ModelVariant::new("m", engine as Arc<dyn Engine>));
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: batch,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        },
+    );
+    let handle = server.handle();
+    let n_in = net.n_inputs();
+    let n_requests = if quick { 100 } else { 1000 };
+    let (lat, wall) = sparseflow::util::timing::time_it(|| {
+        drive_load(&handle, "m", |_, rng| {
+            (0..n_in).map(|_| rng.normal() as f32).collect()
+        }, n_requests, 16)
+    });
+    let served_ms: Vec<f64> = lat.iter().map(|l| l * 1e3).collect();
+    let s = Summary::of(&served_ms);
+    report.record_sample("coordinator", "served latency", &served_ms, "ms");
+    report.record_exact("coordinator", "throughput", n_requests as f64 / wall, "req/s");
+    println!(
+        "coordinator:   direct {direct_ms:.3} ms | served p50 {:.3} ms | {:.0} req/s | mean batch {:.1}",
+        s.median,
+        n_requests as f64 / wall,
+        server.metrics().mean_batch_size(),
+    );
+    report.finish();
+}

@@ -1,0 +1,85 @@
+//! Theorem 1 / Proposition 1 (table) — measured I/Os of the extremal
+//! constructions land exactly on the bounds they certify as tight:
+//!
+//! * Lemma 1 nets (consecutive layers fit in M−1) → every lower bound,
+//! * Lemma 2 star trees → the read and total upper bounds,
+//! * Lemma 3 output-heavy nets → the write upper bound (asymptotically).
+//!
+//! ```bash
+//! cargo bench --bench thm1
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::bounds::theorem1_bounds;
+use sparseflow::cli::Spec;
+use sparseflow::ffnn::extremal::{lemma1_net, lemma2_tree, lemma3_net};
+use sparseflow::ffnn::topo::{layerwise_order, two_optimal_order};
+use sparseflow::memory::PolicyKind;
+use sparseflow::sim::simulate;
+use sparseflow::util::rng::Pcg64;
+
+fn main() {
+    let _args = Spec::new("thm1", "extremal instances attain the Theorem-1 bounds")
+        .flag("quick", "no-op (always fast)")
+        .parse_env();
+    let mut report = Report::new("thm1_tightness", "Theorem 1 / Prop. 1 tightness table");
+    let mut rng = Pcg64::seed_from(0x71);
+
+    // Lemma 1: all lower bounds, exactly.
+    for sizes in [vec![5usize, 6, 5, 3], vec![10, 9, 10], vec![20, 10, 1]] {
+        let net = lemma1_net(&sizes, &mut rng);
+        let m = sizes.windows(2).map(|w| w[0] + w[1]).max().unwrap() + 1;
+        let s = simulate(&net, &layerwise_order(&net), m, PolicyKind::Min);
+        let b = theorem1_bounds(&net);
+        let label = format!("L1 {sizes:?}");
+        report.record_exact(&label, "measured total", s.total() as f64, "I/Os");
+        report.record_exact(&label, "lower bound", b.total_lower as f64, "I/Os");
+        assert_eq!(s.total(), b.total_lower);
+        assert_eq!(s.reads(), b.read_lower);
+        assert_eq!(s.writes(), b.write_lower);
+        println!("{label:<18} total {} == lower bound ✓", s.total());
+    }
+
+    // Lemma 2: read/total upper bounds, exactly, at minimal memory.
+    for n_inputs in [10usize, 100, 1000] {
+        let net = lemma2_tree(n_inputs, &mut rng);
+        let s = simulate(&net, &two_optimal_order(&net), 3, PolicyKind::Min);
+        let b = theorem1_bounds(&net);
+        let label = format!("L2 star I={n_inputs}");
+        report.record_exact(&label, "measured total", s.total() as f64, "I/Os");
+        report.record_exact(&label, "upper bound", b.total_upper as f64, "I/Os");
+        assert_eq!(s.total(), b.total_upper);
+        assert_eq!(s.reads(), b.read_upper);
+        println!("{label:<18} total {} == upper bound ✓", s.total());
+    }
+
+    // Lemma 3: write-I/Os within (1−ε) of the N−I upper bound.
+    for (h, s_out) in [(3usize, 50usize), (5, 200), (10, 1000)] {
+        let net = lemma3_net(2, h, s_out, &mut rng);
+        let sim = simulate(&net, &two_optimal_order(&net), net.n_neurons() + 2, PolicyKind::Min);
+        let b = theorem1_bounds(&net);
+        let frac = sim.writes() as f64 / b.write_upper as f64;
+        let label = format!("L3 h={h},S={s_out}");
+        report.record_exact(&label, "measured writes", sim.writes() as f64, "I/Os");
+        report.record_exact(&label, "write upper", b.write_upper as f64, "I/Os");
+        assert!(frac > 1.0 - (h as f64 / (h + s_out) as f64) - 1e-9);
+        println!("{label:<18} writes {} = {:.1}% of the upper bound ✓", sim.writes(), frac * 100.0);
+    }
+
+    // The 2-optimality guarantee on random nets: measured/lower ≤ 2.
+    for seed in 0..3u64 {
+        let mut r = Pcg64::seed_from(seed);
+        let net = sparseflow::ffnn::generate::random_mlp(
+            &sparseflow::ffnn::generate::MlpSpec::new(4, 80, 0.15),
+            &mut r,
+        );
+        let s = simulate(&net, &two_optimal_order(&net), 10, PolicyKind::Min);
+        let b = theorem1_bounds(&net);
+        let ratio = s.total() as f64 / b.total_lower as f64;
+        report.record_exact(&format!("2opt seed={seed}"), "total/lower", ratio, "ratio");
+        assert!(ratio <= 2.0, "2-optimality violated: {ratio}");
+        println!("random net seed {seed}: total/lower = {ratio:.3} ≤ 2 ✓");
+    }
+
+    report.finish();
+}

@@ -1,0 +1,151 @@
+//! Shared machinery for the paper-figure benches (`rust/benches/fig*.rs`):
+//! run the generate → simulate → reorder → simulate pipeline over several
+//! random seeds in parallel and aggregate the three series every simulated
+//! figure reports (Initial, Reordered, Lower bound).
+
+use crate::bounds::theorem1_bounds;
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::{two_optimal_order, ConnOrder};
+use crate::memory::PolicyKind;
+use crate::reorder::annealing::{reorder, AnnealConfig};
+use crate::sim::simulate;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::par_map;
+
+/// Per-seed outcome of one Connection-Reordering experiment.
+#[derive(Clone, Debug)]
+pub struct CrOutcome {
+    pub initial_ios: u64,
+    pub reordered_ios: u64,
+    pub lower_bound: u64,
+    pub upper_bound: u64,
+    pub sa_secs: f64,
+}
+
+/// Configuration for a CR experiment point.
+#[derive(Clone, Copy, Debug)]
+pub struct CrConfig {
+    pub m: usize,
+    pub policy: PolicyKind,
+    pub iters: u64,
+    pub n_seeds: usize,
+    pub workers: usize,
+    pub base_seed: u64,
+}
+
+impl CrConfig {
+    pub fn new(m: usize, iters: u64, n_seeds: usize) -> CrConfig {
+        CrConfig {
+            m,
+            policy: PolicyKind::Min,
+            iters,
+            n_seeds,
+            workers: workers_default(),
+            base_seed: 0xF16,
+        }
+    }
+}
+
+/// Default worker count: physical parallelism minus headroom.
+pub fn workers_default() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(2).max(1))
+        .unwrap_or(4)
+}
+
+/// The iteration budget is specified *at the paper's baseline scale*
+/// (W ≈ 75k connections) and rescaled per network so every point costs
+/// roughly the same CPU: an SA evaluation is O(W), so `iters_eff =
+/// iters · 75k / W`, clamped to [500, 4·iters]. EXPERIMENTS.md records
+/// this scaling next to the paper's fixed T = 10⁶.
+const BASELINE_W: u64 = 75_000;
+
+pub fn scaled_iters(iters: u64, w: usize) -> u64 {
+    (iters.saturating_mul(BASELINE_W) / (w as u64).max(1)).clamp(500, iters.saturating_mul(4))
+}
+
+/// Run the CR pipeline for each seed (in parallel): generate a network
+/// with `gen`, simulate the 2-optimal *initial* order, reorder, simulate
+/// the result.
+pub fn cr_point(gen: &(dyn Fn(&mut Pcg64) -> Ffnn + Sync), cfg: &CrConfig) -> Vec<CrOutcome> {
+    let seeds: Vec<u64> = (0..cfg.n_seeds as u64)
+        .map(|i| cfg.base_seed.wrapping_add(i * 7919))
+        .collect();
+    par_map(cfg.workers, &seeds, |&seed| {
+        let mut rng = Pcg64::seed_from(seed);
+        let net = gen(&mut rng);
+        run_cr_once(&net, cfg, seed)
+    })
+}
+
+/// Single-network CR run (used by fig6/fig8 where the network is fixed
+/// per density but policies vary).
+pub fn run_cr_once(net: &Ffnn, cfg: &CrConfig, seed: u64) -> CrOutcome {
+    let initial = two_optimal_order(net);
+    let bounds = theorem1_bounds(net);
+    let initial_ios = simulate(net, &initial, cfg.m, cfg.policy).total();
+    let iters = scaled_iters(cfg.iters, net.n_conns());
+    let mut acfg = AnnealConfig::new(cfg.m, cfg.policy, iters);
+    acfg.seed = seed ^ 0xA11CE;
+    let (_, rep) = reorder(net, &initial, &acfg);
+    CrOutcome {
+        initial_ios,
+        reordered_ios: rep.final_ios,
+        lower_bound: bounds.total_lower,
+        upper_bound: bounds.total_upper,
+        sa_secs: rep.elapsed_secs,
+    }
+}
+
+/// Reorder returning the trace, for Fig. 4.
+pub fn cr_trace(
+    net: &Ffnn,
+    initial: &ConnOrder,
+    m: usize,
+    policy: PolicyKind,
+    iters: u64,
+    trace_every: u64,
+    seed: u64,
+) -> Vec<(u64, u64)> {
+    let mut cfg = AnnealConfig::new(m, policy, iters);
+    cfg.trace_every = trace_every;
+    cfg.seed = seed;
+    let (_, rep) = reorder(net, initial, &cfg);
+    rep.trace
+}
+
+/// Extract the per-seed series as f64 vectors (for `Report::record_sample`).
+pub fn series(outcomes: &[CrOutcome]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let ini = outcomes.iter().map(|o| o.initial_ios as f64).collect();
+    let reo = outcomes.iter().map(|o| o.reordered_ios as f64).collect();
+    let low = outcomes.iter().map(|o| o.lower_bound as f64).collect();
+    (ini, reo, low)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+
+    #[test]
+    fn cr_point_runs_all_seeds() {
+        let cfg = CrConfig {
+            m: 12,
+            policy: PolicyKind::Min,
+            iters: 200,
+            n_seeds: 3,
+            workers: 3,
+            base_seed: 1,
+        };
+        let gen = |rng: &mut Pcg64| random_mlp(&MlpSpec::new(3, 16, 0.3), rng);
+        let outs = cr_point(&gen, &cfg);
+        assert_eq!(outs.len(), 3);
+        for o in &outs {
+            assert!(o.reordered_ios <= o.initial_ios);
+            assert!(o.lower_bound <= o.reordered_ios);
+            assert!(o.initial_ios <= o.upper_bound);
+        }
+        let (ini, reo, low) = series(&outs);
+        assert_eq!((ini.len(), reo.len(), low.len()), (3, 3, 3));
+    }
+}

@@ -1,0 +1,251 @@
+//! Micro-benchmark harness used by every `rust/benches/*.rs` binary.
+//!
+//! Methodology follows the paper (§VI): each configuration is run
+//! `reps` times (default 10) after warmup, outliers are flagged with
+//! Tukey's method, and the reported statistic is the median with a 95%
+//! nonparametric confidence interval. Results accumulate into a
+//! [`Report`] that prints a fixed-width table (one row per configuration,
+//! matching the paper's figure series) and serializes to
+//! `results/<id>.json` for archival and re-plotting.
+
+use crate::util::json::Json;
+use crate::util::timing::{measure, tukey_filter, Summary};
+use std::path::PathBuf;
+
+/// One measured (or counted) series point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// X-axis label, e.g. "density=0.10" or "M=100".
+    pub x: String,
+    /// Series name, e.g. "Initial", "Reordered", "Lower bound".
+    pub series: String,
+    /// Central value (median for timings, exact count for simulations).
+    pub value: f64,
+    /// CI bounds (equal to `value` for exact counts).
+    pub lo: f64,
+    pub hi: f64,
+    /// Unit, e.g. "I/Os", "ms".
+    pub unit: String,
+    /// Outliers removed by Tukey filtering (timings only).
+    pub outliers_removed: usize,
+}
+
+/// Accumulates points for one experiment (one paper figure).
+#[derive(Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub points: Vec<Point>,
+    pub meta: Json,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            points: Vec::new(),
+            meta: Json::obj(),
+        }
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: impl Into<Json>) {
+        let meta = std::mem::replace(&mut self.meta, Json::Null);
+        self.meta = meta.set(key, value);
+    }
+
+    /// Record an exact (deterministic) count, e.g. simulated I/Os.
+    pub fn record_exact(&mut self, x: &str, series: &str, value: f64, unit: &str) {
+        self.points.push(Point {
+            x: x.to_string(),
+            series: series.to_string(),
+            value,
+            lo: value,
+            hi: value,
+            unit: unit.to_string(),
+            outliers_removed: 0,
+        });
+    }
+
+    /// Record a sample of repeated measurements (e.g. wall-clock times, or
+    /// per-seed I/O counts): stores median + 95% CI after Tukey filtering.
+    pub fn record_sample(&mut self, x: &str, series: &str, samples: &[f64], unit: &str) {
+        let (kept, dropped) = tukey_filter(samples);
+        let s = Summary::of(&kept);
+        self.points.push(Point {
+            x: x.to_string(),
+            series: series.to_string(),
+            value: s.median,
+            lo: s.ci_lo,
+            hi: s.ci_hi,
+            unit: unit.to_string(),
+            outliers_removed: dropped.len(),
+        });
+    }
+
+    /// Time a closure `reps` times (after `warmup`) and record the median.
+    pub fn record_timing<T>(
+        &mut self,
+        x: &str,
+        series: &str,
+        warmup: usize,
+        reps: usize,
+        f: impl FnMut() -> T,
+    ) {
+        let times = measure(warmup, reps, f);
+        let ms: Vec<f64> = times.iter().map(|t| t * 1e3).collect();
+        self.record_sample(x, series, &ms, "ms");
+    }
+
+    /// Fixed-width table, grouped by x, one column per series.
+    pub fn table(&self) -> String {
+        let mut xs: Vec<&str> = Vec::new();
+        let mut series: Vec<&str> = Vec::new();
+        for p in &self.points {
+            if !xs.contains(&p.x.as_str()) {
+                xs.push(&p.x);
+            }
+            if !series.contains(&p.series.as_str()) {
+                series.push(&p.series);
+            }
+        }
+        let unit = self
+            .points
+            .first()
+            .map(|p| p.unit.clone())
+            .unwrap_or_default();
+        let mut out = format!("== {} — {} [{unit}] ==\n", self.id, self.title);
+        let xw = xs.iter().map(|x| x.len()).max().unwrap_or(1).max(8);
+        out.push_str(&format!("{:<xw$}", "x"));
+        for s in &series {
+            out.push_str(&format!(" | {s:>24}"));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(xw + series.len() * 27));
+        out.push('\n');
+        for x in &xs {
+            out.push_str(&format!("{x:<xw$}"));
+            for s in &series {
+                let cell = self
+                    .points
+                    .iter()
+                    .find(|p| p.x == *x && p.series == *s)
+                    .map(|p| {
+                        if p.lo == p.value && p.hi == p.value {
+                            format!("{}", fmt_num(p.value))
+                        } else {
+                            format!("{} [{},{}]", fmt_num(p.value), fmt_num(p.lo), fmt_num(p.hi))
+                        }
+                    })
+                    .unwrap_or_else(|| "-".to_string());
+                out.push_str(&format!(" | {cell:>24}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("x", p.x.as_str())
+                    .set("series", p.series.as_str())
+                    .set("value", p.value)
+                    .set("lo", p.lo)
+                    .set("hi", p.hi)
+                    .set("unit", p.unit.as_str())
+                    .set("outliers_removed", p.outliers_removed)
+            })
+            .collect();
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("title", self.title.as_str())
+            .set("meta", self.meta.clone())
+            .set("points", Json::Arr(points))
+    }
+
+    /// Print table to stdout and save JSON under `results/<id>.json`.
+    pub fn finish(&self) {
+        println!("{}", self.table());
+        let path = results_path(&self.id);
+        if let Err(e) = self.to_json().to_file(&path) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("saved {}", path.display());
+        }
+    }
+}
+
+/// Location for result JSON (respects `SPARSEFLOW_RESULTS_DIR`).
+pub fn results_path(id: &str) -> PathBuf {
+    let dir = std::env::var("SPARSEFLOW_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    PathBuf::from(dir).join(format!("{id}.json"))
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if a >= 1e6 {
+        format!("{:.3}M", v / 1e6)
+    } else if a >= 1e4 {
+        format!("{:.1}k", v / 1e3)
+    } else if a >= 100.0 || v.fract() == 0.0 {
+        format!("{v:.0}")
+    } else if a >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_all_series() {
+        let mut r = Report::new("t1", "test");
+        r.record_exact("d=0.1", "Initial", 100.0, "I/Os");
+        r.record_exact("d=0.1", "Reordered", 80.0, "I/Os");
+        r.record_exact("d=0.2", "Initial", 200.0, "I/Os");
+        let t = r.table();
+        assert!(t.contains("Initial") && t.contains("Reordered"));
+        assert!(t.contains("d=0.1") && t.contains("d=0.2"));
+        assert!(t.contains(" - ") || t.contains("-"), "missing cell dash");
+    }
+
+    #[test]
+    fn sample_recording_uses_median() {
+        let mut r = Report::new("t2", "test");
+        r.record_sample("x", "s", &[1.0, 2.0, 3.0, 4.0, 100.0], "ms");
+        let p = &r.points[0];
+        assert_eq!(p.outliers_removed, 1); // Tukey drops 100.0
+        assert_eq!(p.value, 2.5);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = Report::new("t3", "test");
+        r.set_meta("seed", 42u64);
+        r.record_exact("a", "s", 5.0, "I/Os");
+        let j = r.to_json();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("t3"));
+        assert_eq!(j.path(&["meta", "seed"]).unwrap().as_u64(), Some(42));
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fmt_num_ranges() {
+        assert_eq!(fmt_num(0.0), "0");
+        assert_eq!(fmt_num(2_500_000.0), "2.500M");
+        assert_eq!(fmt_num(25_000.0), "25.0k");
+        assert_eq!(fmt_num(123.0), "123");
+        assert_eq!(fmt_num(1.5), "1.50");
+        assert_eq!(fmt_num(0.125), "0.1250");
+    }
+}

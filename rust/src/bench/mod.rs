@@ -1,0 +1,7 @@
+//! Benchmark infrastructure: a micro-benchmark harness (criterion is not
+//! available offline), result recording to `results/*.json`, and ASCII
+//! plotting for terminal-rendered figures.
+
+pub mod figures;
+pub mod harness;
+pub mod plot;

@@ -1,0 +1,141 @@
+//! Terminal ASCII plots: renders a [`Report`](super::harness::Report)'s
+//! series as a simple scatter/line chart so `make figures` gives a visual
+//! check of each reproduced paper figure without any plotting dependency.
+
+use super::harness::Report;
+
+const GLYPHS: &[char] = &['o', 'x', '+', '*', '#', '@', '%', '&'];
+
+/// Render the report as an ASCII chart (`height` rows, `width` cols).
+/// X positions are the distinct x-labels in insertion order (categorical,
+/// matching the paper's swept parameters); Y is linear or log10.
+pub fn ascii_chart(report: &Report, width: usize, height: usize, log_y: bool) -> String {
+    let mut xs: Vec<&str> = Vec::new();
+    let mut series: Vec<&str> = Vec::new();
+    for p in &report.points {
+        if !xs.contains(&p.x.as_str()) {
+            xs.push(&p.x);
+        }
+        if !series.contains(&p.series.as_str()) {
+            series.push(&p.series);
+        }
+    }
+    if xs.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let ys: Vec<f64> = report
+        .points
+        .iter()
+        .map(|p| if log_y { p.value.max(1e-12).log10() } else { p.value })
+        .collect();
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &y in &ys {
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let w = width.max(xs.len() * 2 + 2);
+    let h = height.max(5);
+    let mut grid = vec![vec![' '; w]; h];
+
+    for p in &report.points {
+        let xi = xs.iter().position(|x| *x == p.x).unwrap();
+        let si = series.iter().position(|s| *s == p.series).unwrap();
+        let y = if log_y { p.value.max(1e-12).log10() } else { p.value };
+        let col = if xs.len() == 1 {
+            w / 2
+        } else {
+            xi * (w - 1) / (xs.len() - 1)
+        };
+        let row_f = (y - ymin) / (ymax - ymin);
+        let row = h - 1 - ((row_f * (h - 1) as f64).round() as usize).min(h - 1);
+        grid[row][col] = GLYPHS[si % GLYPHS.len()];
+    }
+
+    let ylab = |v: f64| -> String {
+        let v = if log_y { 10f64.powf(v) } else { v };
+        if v.abs() >= 1e6 {
+            format!("{:.1}M", v / 1e6)
+        } else if v.abs() >= 1e3 {
+            format!("{:.1}k", v / 1e3)
+        } else {
+            format!("{v:.1}")
+        }
+    };
+
+    let mut out = format!("{} — {}\n", report.id, report.title);
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            ylab(ymax)
+        } else if i == h - 1 {
+            ylab(ymin)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{label:>10} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(w)));
+    // X labels: first and last.
+    out.push_str(&format!(
+        "{:>12}{}{}\n",
+        xs[0],
+        " ".repeat(w.saturating_sub(xs[0].len() + xs[xs.len() - 1].len())),
+        xs[xs.len() - 1]
+    ));
+    out.push_str("  legend: ");
+    for (i, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", GLYPHS[i % GLYPHS.len()], s));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::Report;
+
+    fn sample_report() -> Report {
+        let mut r = Report::new("p", "plot test");
+        for (i, x) in ["a", "b", "c"].iter().enumerate() {
+            r.record_exact(x, "s1", (i + 1) as f64 * 10.0, "u");
+            r.record_exact(x, "s2", (i + 1) as f64 * 20.0, "u");
+        }
+        r
+    }
+
+    #[test]
+    fn chart_contains_glyphs_and_legend() {
+        let c = ascii_chart(&sample_report(), 40, 10, false);
+        assert!(c.contains('o') && c.contains('x'));
+        assert!(c.contains("legend"));
+        assert!(c.contains("s1") && c.contains("s2"));
+    }
+
+    #[test]
+    fn log_scale_runs() {
+        let mut r = Report::new("p2", "log");
+        r.record_exact("a", "s", 10.0, "u");
+        r.record_exact("b", "s", 100000.0, "u");
+        let c = ascii_chart(&r, 30, 8, true);
+        assert!(c.contains("100.0k") || c.contains("0.1M"));
+    }
+
+    #[test]
+    fn empty_report_safe() {
+        let r = Report::new("e", "empty");
+        assert_eq!(ascii_chart(&r, 20, 5, false), "(no data)\n");
+    }
+
+    #[test]
+    fn single_point_safe() {
+        let mut r = Report::new("s", "single");
+        r.record_exact("only", "s", 5.0, "u");
+        let c = ascii_chart(&r, 20, 5, false);
+        assert!(c.contains('o'));
+    }
+}

@@ -1,0 +1,148 @@
+//! Theorem 1 (paper §III): generic bounds on the I/O-complexity of FFNN
+//! inference that depend only on the high-level sizes W, N, I, S.
+//!
+//! ```text
+//!   W + N + S  ≤  I/Os(N, M)  ≤  2·(W + N − I)
+//!   W + N      ≤ rI/Os(N, M)  ≤  2·W + N − I
+//!   S          ≤ wI/Os(N, M)  ≤  N − I
+//! ```
+//!
+//! The bounds are independent of M and of the sparsity pattern, and are
+//! tight in the sense of Proposition 1 (no bound can be improved by a
+//! constant factor other than 1).
+
+use crate::ffnn::graph::Ffnn;
+use crate::util::json::Json;
+
+/// The six Theorem-1 bounds for a concrete network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Theorem1Bounds {
+    pub read_lower: u64,
+    pub read_upper: u64,
+    pub write_lower: u64,
+    pub write_upper: u64,
+    pub total_lower: u64,
+    pub total_upper: u64,
+}
+
+/// Compute the Theorem-1 bounds from the network sizes.
+pub fn theorem1_bounds(net: &Ffnn) -> Theorem1Bounds {
+    let w = net.n_conns() as u64;
+    let n = net.n_neurons() as u64;
+    let i = net.n_inputs() as u64;
+    let s = net.n_outputs() as u64;
+    Theorem1Bounds {
+        read_lower: w + n,
+        read_upper: 2 * w + n - i,
+        write_lower: s,
+        write_upper: n - i,
+        total_lower: w + n + s,
+        total_upper: 2 * (w + n - i),
+    }
+}
+
+impl Theorem1Bounds {
+    /// The guaranteed optimality factor of the 2-optimal strategy:
+    /// upper/lower ≤ 2 for totals (Theorem 1 discussion).
+    pub fn total_ratio(&self) -> f64 {
+        self.total_upper as f64 / self.total_lower as f64
+    }
+
+    /// How close a measured total is to the lower bound, as the paper's
+    /// "closer to the theoretical lower bound" percentage: 1.0 means the
+    /// measured value sits on the lower bound, 0.0 on the `reference`
+    /// (e.g. the initial order's I/Os).
+    pub fn closeness(&self, measured: u64, reference: u64) -> f64 {
+        if reference <= self.total_lower {
+            return 1.0;
+        }
+        let gap_ref = (reference - self.total_lower) as f64;
+        let gap_meas = measured.saturating_sub(self.total_lower) as f64;
+        1.0 - gap_meas / gap_ref
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("read_lower", self.read_lower)
+            .set("read_upper", self.read_upper)
+            .set("write_lower", self.write_lower)
+            .set("write_upper", self.write_upper)
+            .set("total_lower", self.total_lower)
+            .set("total_upper", self.total_upper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::extremal::{lemma2_tree, lemma3_net};
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn bounds_formulae() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(3, 10, 0.3), &mut rng);
+        let b = theorem1_bounds(&net);
+        let (w, n, i, s) = (
+            net.n_conns() as u64,
+            net.n_neurons() as u64,
+            net.n_inputs() as u64,
+            net.n_outputs() as u64,
+        );
+        assert_eq!(b.read_lower, w + n);
+        assert_eq!(b.read_upper, 2 * w + n - i);
+        assert_eq!(b.write_lower, s);
+        assert_eq!(b.write_upper, n - i);
+        assert_eq!(b.total_lower, w + n + s);
+        assert_eq!(b.total_upper, 2 * (w + n - i));
+    }
+
+    #[test]
+    fn total_ratio_at_most_two() {
+        // Total upper ≤ 2 × total lower always (S ≥ 1, W ≥ I for
+        // connected nets with every input used).
+        for seed in 0..5u64 {
+            let mut rng = Pcg64::seed_from(seed);
+            let net = random_mlp(&MlpSpec::new(4, 20, 0.2), &mut rng);
+            let r = theorem1_bounds(&net).total_ratio();
+            assert!(r <= 2.0 + 1e-12, "ratio {r} > 2");
+        }
+    }
+
+    /// Lemma 2's star: upper and lower bounds for *writes* coincide at 1,
+    /// and the read upper bound is ~2× the lower.
+    #[test]
+    fn star_bound_structure() {
+        let net = lemma2_tree(100, &mut Pcg64::seed_from(2));
+        let b = theorem1_bounds(&net);
+        assert_eq!(b.write_lower, 1);
+        assert_eq!(b.write_upper, 1);
+        assert_eq!(b.read_upper, 2 * 100 + 101 - 100);
+    }
+
+    /// Lemma 3 structure: write upper bound approaches the lower bound as
+    /// outputs dominate.
+    #[test]
+    fn output_heavy_write_bounds_tighten() {
+        let net = lemma3_net(2, 3, 200, &mut Pcg64::seed_from(3));
+        let b = theorem1_bounds(&net);
+        let ratio = b.write_upper as f64 / b.write_lower as f64;
+        assert!(ratio < 1.02, "S ≫ h ⇒ write bounds within 2%: {ratio}");
+    }
+
+    #[test]
+    fn closeness_metric() {
+        let b = Theorem1Bounds {
+            read_lower: 0,
+            read_upper: 0,
+            write_lower: 0,
+            write_upper: 0,
+            total_lower: 100,
+            total_upper: 200,
+        };
+        assert_eq!(b.closeness(100, 200), 1.0); // at the bound
+        assert_eq!(b.closeness(200, 200), 0.0); // no improvement
+        assert!((b.closeness(150, 200) - 0.5).abs() < 1e-12);
+    }
+}

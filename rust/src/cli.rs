@@ -1,0 +1,380 @@
+//! Declarative command-line argument parser (the `clap` crate is not
+//! available offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, defaults, and auto-generated help text. Used by the
+//! `sparseflow` launcher, the examples, and every bench binary.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `None` for boolean flags, `Some(default)` for valued options
+    /// (empty default = required).
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// Argument specification for one command.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<Opt>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Spec {
+            name,
+            about,
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Valued option with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default),
+            takes_value: true,
+        });
+        self
+    }
+
+    /// Boolean flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    /// Required positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut pos: Vec<String> = Vec::new();
+
+        for o in &self.opts {
+            if o.takes_value {
+                if let Some(d) = o.default {
+                    if !d.is_empty() {
+                        values.insert(o.name.to_string(), d.to_string());
+                    }
+                }
+            } else {
+                flags.insert(o.name.to_string(), false);
+            }
+        }
+
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help(self.help_text()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone(), self.help_text()))?;
+                if opt.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    values.insert(key, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::MissingValue(format!(
+                            "flag --{key} does not take a value"
+                        )));
+                    }
+                    flags.insert(key, true);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+
+        if pos.len() < self.positionals.len() {
+            return Err(CliError::MissingPositional(
+                self.positionals[pos.len()].0.to_string(),
+                self.help_text(),
+            ));
+        }
+        // Required valued options (default = "").
+        for o in &self.opts {
+            if o.takes_value && o.default == Some("") && !values.contains_key(o.name) {
+                return Err(CliError::MissingValue(format!("--{} is required", o.name)));
+            }
+        }
+        Ok(Args {
+            values,
+            flags,
+            positionals: pos,
+        })
+    }
+
+    /// Parse from the process environment (skipping argv[0]); prints help
+    /// and exits on `--help` or error.
+    pub fn parse_env(&self) -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        // `cargo bench -- --dim density` passes extra harness args like
+        // `--bench`; tolerate it.
+        let raw: Vec<String> = raw.into_iter().filter(|a| a != "--bench").collect();
+        match self.parse(&raw) {
+            Ok(a) => a,
+            Err(CliError::Help(h)) => {
+                println!("{h}");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = match o.default {
+                Some(d) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {head:28} {}{default}\n", o.help));
+        }
+        s.push_str("  --help                       show this help\n");
+        s
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{name} not declared or missing"))
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: fmt::Debug,
+    {
+        let raw = self.str(name);
+        raw.parse()
+            .unwrap_or_else(|e| panic!("--{name}={raw} is not a valid number: {e:?}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn positional(&self, i: usize) -> &str {
+        &self.positionals[i]
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated list of numbers, e.g. `--densities 0.01,0.1,0.5`.
+    pub fn f64_list(&self, name: &str) -> Vec<f64> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|e| panic!("--{name}: bad element {s:?}: {e:?}"))
+            })
+            .collect()
+    }
+
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|e| panic!("--{name}: bad element {s:?}: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    Help(String),
+    Unknown(String, String),
+    MissingValue(String),
+    MissingPositional(String, String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::Help(h) => write!(f, "{h}"),
+            CliError::Unknown(k, h) => write!(f, "unknown option --{k}\n\n{h}"),
+            CliError::MissingValue(k) => write!(f, "missing value: {k}"),
+            CliError::MissingPositional(p, h) => {
+                write!(f, "missing required argument <{p}>\n\n{h}")
+            }
+        }
+    }
+}
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("test", "a test command")
+            .opt("iters", "100", "iteration count")
+            .opt("name", "", "required name")
+            .flag("verbose", "chatty output")
+            .positional("input", "input file")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        let a = spec()
+            .parse(&sv(&["--name", "x", "file.json"]))
+            .unwrap();
+        assert_eq!(a.u64("iters"), 100);
+        assert_eq!(a.str("name"), "x");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.positional(0), "file.json");
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = spec()
+            .parse(&sv(&["--iters=5", "--name=y", "--verbose", "in"]))
+            .unwrap();
+        assert_eq!(a.u64("iters"), 5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = spec().parse(&sv(&["file"])).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(_)));
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let e = spec().parse(&sv(&["--name", "x"])).unwrap_err();
+        assert!(matches!(e, CliError::MissingPositional(..)));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = spec().parse(&sv(&["--bogus", "1", "f"])).unwrap_err();
+        assert!(matches!(e, CliError::Unknown(..)));
+    }
+
+    #[test]
+    fn help_is_returned() {
+        let e = spec().parse(&sv(&["--help"])).unwrap_err();
+        match e {
+            CliError::Help(h) => {
+                assert!(h.contains("--iters"));
+                assert!(h.contains("a test command"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn lists_parse() {
+        let s = Spec::new("t", "t").opt("xs", "1,2,3", "numbers");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.usize_list("xs"), vec![1, 2, 3]);
+        let a = s.parse(&sv(&["--xs", "0.5, 0.25"])).unwrap();
+        let _ = a; // usize_list would panic on floats; use f64_list
+        let a = Spec::new("t", "t")
+            .opt("ds", "0.5,0.25", "densities")
+            .parse(&[])
+            .unwrap();
+        assert_eq!(a.f64_list("ds"), vec![0.5, 0.25]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Config system: JSON config files under `configs/` merged with CLI
+//! `--set key=value` overrides (dotted keys), giving every launcher
+//! subcommand and bench a uniform, reproducible parameterization.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A loaded configuration: a JSON object plus typed accessors with
+/// defaults. Dotted-path lookups (`"anneal.iters"`) traverse nested
+/// objects.
+#[derive(Clone, Debug)]
+pub struct Config {
+    root: Json,
+}
+
+impl Config {
+    pub fn empty() -> Config {
+        Config { root: Json::obj() }
+    }
+
+    pub fn from_json(root: Json) -> Config {
+        Config { root }
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let root = Json::from_file(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            matches!(root, Json::Obj(_)),
+            "config {} must be a JSON object",
+            path.display()
+        );
+        Ok(Config { root })
+    }
+
+    /// Apply a `key=value` override; dotted keys create nested objects.
+    /// Values are parsed as JSON when possible, else taken as strings.
+    pub fn set_override(&mut self, assignment: &str) -> anyhow::Result<()> {
+        let (key, raw) = assignment
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override must be key=value, got {assignment:?}"))?;
+        let value = Json::parse(raw).unwrap_or_else(|_| Json::Str(raw.to_string()));
+        let parts: Vec<&str> = key.split('.').collect();
+        set_path(&mut self.root, &parts, value);
+        Ok(())
+    }
+
+    fn lookup(&self, dotted: &str) -> Option<&Json> {
+        let parts: Vec<&str> = dotted.split('.').collect();
+        self.root.path(&parts)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.lookup(key).and_then(Json::as_u64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.lookup(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.lookup(key).and_then(Json::as_bool).unwrap_or(default)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.lookup(key)
+            .and_then(Json::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn json(&self) -> &Json {
+        &self.root
+    }
+}
+
+fn set_path(node: &mut Json, parts: &[&str], value: Json) {
+    if parts.is_empty() {
+        *node = value;
+        return;
+    }
+    if !matches!(node, Json::Obj(_)) {
+        *node = Json::obj();
+    }
+    if let Json::Obj(fields) = node {
+        if let Some(f) = fields.iter_mut().find(|(k, _)| k == parts[0]) {
+            set_path(&mut f.1, &parts[1..], value);
+        } else {
+            let mut child = Json::obj();
+            set_path(&mut child, &parts[1..], value);
+            fields.push((parts[0].to_string(), child));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_missing() {
+        let c = Config::empty();
+        assert_eq!(c.u64("anneal.iters", 7), 7);
+        assert_eq!(c.str("policy", "min"), "min");
+        assert!(c.bool("verbose", true));
+    }
+
+    #[test]
+    fn overrides_nested() {
+        let mut c = Config::empty();
+        c.set_override("anneal.iters=5000").unwrap();
+        c.set_override("anneal.sigma=0.2").unwrap();
+        c.set_override("name=bert").unwrap();
+        assert_eq!(c.u64("anneal.iters", 0), 5000);
+        assert_eq!(c.f64("anneal.sigma", 0.0), 0.2);
+        assert_eq!(c.str("name", ""), "bert");
+    }
+
+    #[test]
+    fn override_replaces_file_value() {
+        let mut c = Config::from_json(Json::obj().set("m", 100u64));
+        c.set_override("m=200").unwrap();
+        assert_eq!(c.u64("m", 0), 200);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let mut c = Config::empty();
+        assert!(c.set_override("no-equals-sign").is_err());
+    }
+
+    #[test]
+    fn string_fallback_for_nonjson() {
+        let mut c = Config::empty();
+        c.set_override("out=results/fig2.json").unwrap();
+        assert_eq!(c.str("out", ""), "results/fig2.json");
+    }
+}

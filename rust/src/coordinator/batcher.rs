@@ -1,0 +1,155 @@
+//! Dynamic batching: group single requests into batches of up to
+//! `max_batch`, waiting at most `max_wait` after the first request of a
+//! batch arrives. This is the standard production trade-off (latency vs
+//! SIMD/bandwidth utilization) the paper's batch-128 experiments assume.
+
+use super::request::Request;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Message on a model's request queue. The explicit `Shutdown` sentinel
+/// lets the server stop its dispatchers even while client handles (which
+/// hold sender clones) are still alive.
+pub enum QueueMsg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Collect the next batch from `rx`.
+///
+/// Blocks until at least one request arrives, then keeps pulling until
+/// the batch is full or `max_wait` has elapsed since the first request.
+/// Returns `(batch, stop)`; `stop` is true when the dispatcher should
+/// exit after processing the batch (shutdown sentinel or channel closed).
+pub fn next_batch(rx: &mpsc::Receiver<QueueMsg>, policy: &BatchPolicy) -> (Vec<Request>, bool) {
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    match rx.recv() {
+        Ok(QueueMsg::Req(first)) => batch.push(first),
+        Ok(QueueMsg::Shutdown) | Err(_) => return (batch, true),
+    }
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(QueueMsg::Req(req)) => batch.push(req),
+            Ok(QueueMsg::Shutdown) => return (batch, true),
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return (batch, true),
+        }
+    }
+    (batch, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(id: u64) -> (QueueMsg, mpsc::Receiver<Result<super::super::Response, super::super::InferenceError>>) {
+        let (tx, rx) = channel();
+        (
+            QueueMsg::Req(Request {
+                id,
+                model: "m".into(),
+                input: vec![0.0],
+                enqueued: Instant::now(),
+                reply: tx,
+            }),
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..10 {
+            let (r, rep) = req(i);
+            keep.push(rep);
+            tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let (b, stop) = next_batch(&rx, &policy);
+        assert_eq!(b.len(), 4);
+        assert!(!stop);
+        assert_eq!(b[0].id, 0);
+        let (b2, _) = next_batch(&rx, &policy);
+        assert_eq!(b2.len(), 4);
+        let (b3, _) = next_batch(&rx, &policy);
+        assert_eq!(b3.len(), 2, "drains the remainder at timeout");
+    }
+
+    #[test]
+    fn stops_when_closed() {
+        let (tx, rx) = channel::<QueueMsg>();
+        drop(tx);
+        let (b, stop) = next_batch(&rx, &BatchPolicy::default());
+        assert!(b.is_empty());
+        assert!(stop);
+    }
+
+    #[test]
+    fn stops_on_shutdown_sentinel() {
+        let (tx, rx) = channel();
+        let (r, _keep) = req(1);
+        tx.send(r).unwrap();
+        tx.send(QueueMsg::Shutdown).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(5) };
+        let start = Instant::now();
+        let (b, stop) = next_batch(&rx, &policy);
+        assert_eq!(b.len(), 1, "pending request still served");
+        assert!(stop);
+        assert!(start.elapsed() < Duration::from_secs(1));
+        // Next call sees a closed/empty queue state and stops immediately.
+        drop(tx);
+        let (b2, stop2) = next_batch(&rx, &policy);
+        assert!(b2.is_empty());
+        assert!(stop2);
+    }
+
+    #[test]
+    fn partial_batch_after_wait() {
+        let (tx, rx) = channel();
+        let (r, _keep) = req(1);
+        tx.send(r).unwrap();
+        let policy = BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(5) };
+        let start = Instant::now();
+        let (b, stop) = next_batch(&rx, &policy);
+        assert_eq!(b.len(), 1);
+        assert!(!stop);
+        assert!(start.elapsed() >= Duration::from_millis(4), "must wait out max_wait");
+    }
+
+    #[test]
+    fn closed_mid_batch_returns_partial() {
+        let (tx, rx) = channel();
+        let (r, _keep) = req(1);
+        tx.send(r).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(5) };
+        let start = Instant::now();
+        let (b, stop) = next_batch(&rx, &policy);
+        assert_eq!(b.len(), 1);
+        assert!(stop);
+        assert!(start.elapsed() < Duration::from_secs(1), "must not wait full 5s");
+    }
+}

@@ -1,0 +1,146 @@
+//! Serving metrics: request counters, batch-size histogram, and a
+//! log-bucketed latency histogram with quantile estimation. Lock-free on
+//! the hot path (atomics only); snapshots serialize to JSON.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram: log-spaced buckets from 1 µs to ~17 s.
+const N_BUCKETS: usize = 48;
+
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    latency_buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn bucket_of(latency_secs: f64) -> usize {
+        // Bucket i covers [1µs·1.35^i, 1µs·1.35^{i+1}).
+        let us = (latency_secs * 1e6).max(1.0);
+        let i = (us.ln() / 1.35f64.ln()).floor() as isize;
+        i.clamp(0, N_BUCKETS as isize - 1) as usize
+    }
+
+    fn bucket_upper_secs(i: usize) -> f64 {
+        1e-6 * 1.35f64.powi(i as i32 + 1)
+    }
+
+    pub fn observe_latency(&self, latency_secs: f64) {
+        let b = Self::bucket_of(latency_secs);
+        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+    }
+
+    /// Estimated latency quantile (upper edge of the containing bucket).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut cum = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper_secs(i);
+            }
+        }
+        Self::bucket_upper_secs(N_BUCKETS - 1)
+    }
+
+    /// Mean batch size over all served batches.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj()
+            .set("requests", self.requests.load(Ordering::Relaxed))
+            .set("responses", self.responses.load(Ordering::Relaxed))
+            .set("errors", self.errors.load(Ordering::Relaxed))
+            .set("batches", self.batches.load(Ordering::Relaxed))
+            .set("mean_batch_size", self.mean_batch_size())
+            .set("latency_p50_ms", self.latency_quantile(0.50) * 1e3)
+            .set("latency_p99_ms", self.latency_quantile(0.99) * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_monotone() {
+        assert!(Metrics::bucket_of(1e-6) <= Metrics::bucket_of(1e-3));
+        assert!(Metrics::bucket_of(1e-3) <= Metrics::bucket_of(1.0));
+        assert_eq!(Metrics::bucket_of(0.0), 0);
+        assert_eq!(Metrics::bucket_of(1e9), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_bracket_observations() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.observe_latency(0.001);
+        }
+        for _ in 0..10 {
+            m.observe_latency(0.1);
+        }
+        let p50 = m.latency_quantile(0.5);
+        let p99 = m.latency_quantile(0.99);
+        assert!(p50 > 0.0005 && p50 < 0.005, "p50 {p50}");
+        assert!(p99 > 0.05, "p99 {p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn empty_quantile_is_zero() {
+        assert_eq!(Metrics::new().latency_quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("batches").unwrap().as_u64(), Some(2));
+    }
+}

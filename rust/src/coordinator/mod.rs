@@ -1,0 +1,25 @@
+//! The serving coordinator: batched sparse-FFNN inference as a service.
+//!
+//! The paper's performance experiments run *batched* inference (batch
+//! 128, "as is performed in production environments", §VI.B). This module
+//! provides the production shape around the engines of [`crate::exec`]:
+//!
+//! * [`request`] — request/response types and client handles,
+//! * [`batcher`] — dynamic batching: collect single requests into batches
+//!   up to `max_batch` with a wait-time bound,
+//! * [`router`] — model registry + engine selection policy (streaming
+//!   reordered / CSR layer-wise / XLA artifact),
+//! * [`server`] — worker threads wiring queues → batcher → engine,
+//! * [`metrics`] — counters and latency histograms,
+//! * [`tcp`] — a line-delimited-JSON TCP front-end and matching client.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod tcp;
+
+pub use request::{InferenceError, Request, Response};
+pub use router::{ModelVariant, Router};
+pub use server::{Server, ServerConfig, ServerHandle};

@@ -1,0 +1,69 @@
+//! Request/response types for the serving coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A single inference request (one sample; the batcher groups them).
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Target model name (registered in the router).
+    pub model: String,
+    /// Input vector, length = model's `n_inputs`.
+    pub input: Vec<f32>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+    /// Reply channel.
+    pub reply: mpsc::Sender<Result<Response, InferenceError>>,
+}
+
+/// A completed inference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Which engine served the batch (e.g. "stream-reordered").
+    pub engine: &'static str,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Total latency in seconds (enqueue → reply).
+    pub latency_secs: f64,
+}
+
+/// Serving errors surfaced to clients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferenceError {
+    UnknownModel(String),
+    BadInputLength { expected: usize, got: usize },
+    ShuttingDown,
+    EngineFailure(String),
+}
+
+impl std::fmt::Display for InferenceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferenceError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+            InferenceError::BadInputLength { expected, got } => {
+                write!(f, "bad input length: expected {expected}, got {got}")
+            }
+            InferenceError::ShuttingDown => write!(f, "server is shutting down"),
+            InferenceError::EngineFailure(e) => write!(f, "engine failure: {e}"),
+        }
+    }
+}
+impl std::error::Error for InferenceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display() {
+        assert!(InferenceError::UnknownModel("x".into())
+            .to_string()
+            .contains("unknown model"));
+        assert!(InferenceError::BadInputLength { expected: 4, got: 2 }
+            .to_string()
+            .contains("expected 4"));
+    }
+}

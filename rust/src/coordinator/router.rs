@@ -1,0 +1,147 @@
+//! Model registry + engine routing.
+//!
+//! A [`ModelVariant`] owns one or more engines for the same network (e.g.
+//! the reordered streaming engine, the CSR layer-wise baseline, and the
+//! XLA artifact). The router picks the serving engine per the variant's
+//! policy; the benches use explicit engine selection to compare them.
+
+use crate::exec::Engine;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Engine-selection policy for a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Always use the engine registered under this index.
+    Fixed(usize),
+    /// Use the density heuristic of the paper's Fig. 7: streaming wins
+    /// for sparse networks, layer-wise CSR for dense ones. The variant
+    /// stores the network density; below `0.5` → engine 0 (stream),
+    /// else engine 1 (csr) if present.
+    DensityHeuristic,
+}
+
+/// A registered model with its candidate engines.
+pub struct ModelVariant {
+    pub name: String,
+    pub engines: Vec<Arc<dyn Engine>>,
+    pub policy: RoutePolicy,
+    /// Edge density of the underlying network (for the heuristic).
+    pub density: f64,
+}
+
+impl ModelVariant {
+    pub fn new(name: &str, engine: Arc<dyn Engine>) -> ModelVariant {
+        ModelVariant {
+            name: name.to_string(),
+            engines: vec![engine],
+            policy: RoutePolicy::Fixed(0),
+            density: 0.0,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: Arc<dyn Engine>) -> ModelVariant {
+        self.engines.push(engine);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: RoutePolicy, density: f64) -> ModelVariant {
+        self.policy = policy;
+        self.density = density;
+        self
+    }
+
+    /// Engine chosen by the policy.
+    pub fn route(&self) -> &Arc<dyn Engine> {
+        match self.policy {
+            RoutePolicy::Fixed(i) => &self.engines[i.min(self.engines.len() - 1)],
+            RoutePolicy::DensityHeuristic => {
+                if self.density < 0.5 || self.engines.len() == 1 {
+                    &self.engines[0]
+                } else {
+                    &self.engines[1]
+                }
+            }
+        }
+    }
+}
+
+/// The model registry.
+#[derive(Default)]
+pub struct Router {
+    models: BTreeMap<String, ModelVariant>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn register(&mut self, variant: ModelVariant) {
+        self.models.insert(variant.name.clone(), variant);
+    }
+
+    pub fn get(&self, model: &str) -> Option<&ModelVariant> {
+        self.models.get(model)
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::batch::BatchMatrix;
+
+    struct FakeEngine(&'static str);
+    impl Engine for FakeEngine {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            x.clone()
+        }
+        fn name(&self) -> &'static str {
+            self.0
+        }
+        fn n_inputs(&self) -> usize {
+            1
+        }
+        fn n_outputs(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn fixed_routing() {
+        let v = ModelVariant::new("m", Arc::new(FakeEngine("a")))
+            .with_engine(Arc::new(FakeEngine("b")))
+            .with_policy(RoutePolicy::Fixed(1), 0.0);
+        assert_eq!(v.route().name(), "b");
+    }
+
+    #[test]
+    fn density_heuristic_prefers_stream_when_sparse() {
+        let sparse = ModelVariant::new("s", Arc::new(FakeEngine("stream")))
+            .with_engine(Arc::new(FakeEngine("csr")))
+            .with_policy(RoutePolicy::DensityHeuristic, 0.1);
+        assert_eq!(sparse.route().name(), "stream");
+        let dense = ModelVariant::new("d", Arc::new(FakeEngine("stream")))
+            .with_engine(Arc::new(FakeEngine("csr")))
+            .with_policy(RoutePolicy::DensityHeuristic, 0.9);
+        assert_eq!(dense.route().name(), "csr");
+    }
+
+    #[test]
+    fn registry_lookup() {
+        let mut r = Router::new();
+        r.register(ModelVariant::new("alpha", Arc::new(FakeEngine("a"))));
+        r.register(ModelVariant::new("beta", Arc::new(FakeEngine("b"))));
+        assert!(r.get("alpha").is_some());
+        assert!(r.get("gamma").is_none());
+        assert_eq!(r.model_names(), vec!["alpha", "beta"]);
+    }
+}

@@ -1,0 +1,370 @@
+//! The inference server: wires request queues → dynamic batcher → engine
+//! execution per model, with metrics. One dispatcher thread per model
+//! (runs the batcher loop and executes batches); clients talk to the
+//! server through cheap cloneable [`ServerHandle`]s.
+
+use super::batcher::{next_batch, BatchPolicy, QueueMsg};
+use super::metrics::Metrics;
+use super::request::{InferenceError, Request, Response};
+use super::router::Router;
+use crate::exec::batch::BatchMatrix;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// A running server. Dropping it shuts down all dispatcher threads
+/// (pending requests receive `ShuttingDown`).
+pub struct Server {
+    queues: BTreeMap<String, mpsc::Sender<QueueMsg>>,
+    model_inputs: BTreeMap<String, usize>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start dispatcher threads for every model in the router.
+    pub fn start(router: Router, config: ServerConfig) -> Server {
+        assert!(!router.is_empty(), "server needs at least one model");
+        let metrics = Arc::new(Metrics::new());
+        let mut queues = BTreeMap::new();
+        let mut model_inputs = BTreeMap::new();
+        let mut threads = Vec::new();
+
+        // Router is consumed: each dispatcher owns its variant.
+        let Router { .. } = &router;
+        for name in router.model_names().into_iter().map(str::to_string).collect::<Vec<_>>() {
+            let variant = router.get(&name).expect("listed model exists");
+            let engine = Arc::clone(variant.route());
+            let engine_name = engine.name();
+            let n_inputs = engine.n_inputs();
+            model_inputs.insert(name.clone(), n_inputs);
+
+            let (tx, rx) = mpsc::channel::<QueueMsg>();
+            queues.insert(name.clone(), tx);
+            let metrics = Arc::clone(&metrics);
+            let policy = config.batch;
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("sparseflow-dispatch-{name}"))
+                    .spawn(move || {
+                        dispatch_loop(rx, engine, engine_name, n_inputs, policy, metrics);
+                    })
+                    .expect("spawn dispatcher"),
+            );
+        }
+
+        Server {
+            queues,
+            model_inputs,
+            metrics,
+            next_id: Arc::new(AtomicU64::new(1)),
+            threads,
+        }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            queues: self
+                .queues
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            model_inputs: self.model_inputs.clone(),
+            metrics: Arc::clone(&self.metrics),
+            next_id: Arc::clone(&self.next_id),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Send explicit shutdown sentinels: live client handles hold
+        // sender clones, so merely dropping our senders would not close
+        // the channels.
+        for tx in self.queues.values() {
+            let _ = tx.send(QueueMsg::Shutdown);
+        }
+        self.queues.clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    rx: mpsc::Receiver<QueueMsg>,
+    engine: Arc<dyn crate::exec::Engine>,
+    engine_name: &'static str,
+    n_inputs: usize,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let (batch, stop) = next_batch(&rx, &policy);
+        // Validate inputs; reject bad ones without poisoning the batch.
+        let mut valid: Vec<Request> = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.input.len() != n_inputs {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(InferenceError::BadInputLength {
+                    expected: n_inputs,
+                    got: req.input.len(),
+                }));
+            } else {
+                valid.push(req);
+            }
+        }
+        if valid.is_empty() {
+            if stop {
+                break;
+            }
+            continue;
+        }
+        let bsize = valid.len();
+        metrics.record_batch(bsize);
+
+        // Assemble n_inputs × bsize (row per input neuron).
+        let mut x = BatchMatrix::zeros(n_inputs, bsize);
+        for (col, req) in valid.iter().enumerate() {
+            for (row, &v) in req.input.iter().enumerate() {
+                x.row_mut(row)[col] = v;
+            }
+        }
+        let y = engine.infer(&x);
+        let n_out = y.rows();
+
+        let now = Instant::now();
+        for (col, req) in valid.into_iter().enumerate() {
+            let output: Vec<f32> = (0..n_out).map(|r| y.row(r)[col]).collect();
+            let latency = now.duration_since(req.enqueued).as_secs_f64();
+            metrics.observe_latency(latency);
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+            let _ = req.reply.send(Ok(Response {
+                id: req.id,
+                output,
+                engine: engine_name,
+                batch_size: bsize,
+                latency_secs: latency,
+            }));
+        }
+        if stop {
+            break;
+        }
+    }
+}
+
+/// Cheap cloneable client handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    queues: BTreeMap<String, mpsc::Sender<QueueMsg>>,
+    model_inputs: BTreeMap<String, usize>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    /// Submit one request and return the reply receiver (async-style).
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Response, InferenceError>>, InferenceError> {
+        let queue = self
+            .queues
+            .get(model)
+            .ok_or_else(|| InferenceError::UnknownModel(model.to_string()))?;
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model: model.to_string(),
+            input,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        queue
+            .send(QueueMsg::Req(req))
+            .map_err(|_| InferenceError::ShuttingDown)?;
+        Ok(rx)
+    }
+
+    /// Blocking single inference.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Response, InferenceError> {
+        let rx = self.submit(model, input)?;
+        rx.recv().map_err(|_| InferenceError::ShuttingDown)?
+    }
+
+    pub fn n_inputs(&self, model: &str) -> Option<usize> {
+        self.model_inputs.get(model).copied()
+    }
+
+    pub fn metrics_snapshot(&self) -> crate::util::json::Json {
+        self.metrics.snapshot()
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.queues.keys().cloned().collect()
+    }
+}
+
+/// Shared helper for examples/benches: run `n_requests` through the
+/// server from `clients` concurrent client threads, returning per-request
+/// latencies (seconds).
+pub fn drive_load(
+    handle: &ServerHandle,
+    model: &str,
+    inputs: impl Fn(u64, &mut crate::util::rng::Pcg64) -> Vec<f32> + Sync,
+    n_requests: usize,
+    clients: usize,
+) -> Vec<f64> {
+    let ids: Vec<u64> = (0..n_requests as u64).collect();
+    let lock = Mutex::new(());
+    let _ = &lock;
+    crate::util::threadpool::par_map(clients, &ids, |&i| {
+        let mut rng = crate::util::rng::Pcg64::seed_from(0xD00D + i);
+        let input = inputs(i, &mut rng);
+        let resp = handle.infer(model, input).expect("inference ok");
+        resp.latency_secs
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ModelVariant;
+    use crate::exec::Engine;
+
+    /// Doubles every input; n_inputs = n_outputs = 3.
+    struct Doubler;
+    impl Engine for Doubler {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            let mut y = x.clone();
+            for v in y.data_mut() {
+                *v *= 2.0;
+            }
+            y
+        }
+        fn name(&self) -> &'static str {
+            "doubler"
+        }
+        fn n_inputs(&self) -> usize {
+            3
+        }
+        fn n_outputs(&self) -> usize {
+            3
+        }
+    }
+
+    fn doubler_server() -> Server {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("d", Arc::new(Doubler)));
+        Server::start(router, ServerConfig::default())
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = doubler_server();
+        let h = server.handle();
+        let r = h.infer("d", vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(r.output, vec![2.0, 4.0, 6.0]);
+        assert_eq!(r.engine, "doubler");
+        assert!(r.latency_secs >= 0.0);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let server = doubler_server();
+        let h = server.handle();
+        assert_eq!(
+            h.infer("nope", vec![0.0]).unwrap_err(),
+            InferenceError::UnknownModel("nope".into())
+        );
+    }
+
+    #[test]
+    fn bad_input_length_rejected() {
+        let server = doubler_server();
+        let h = server.handle();
+        assert_eq!(
+            h.infer("d", vec![1.0]).unwrap_err(),
+            InferenceError::BadInputLength { expected: 3, got: 1 }
+        );
+    }
+
+    #[test]
+    fn concurrent_clients_all_served_correctly() {
+        let server = doubler_server();
+        let h = server.handle();
+        let ids: Vec<u64> = (0..200).collect();
+        let results = crate::util::threadpool::par_map(8, &ids, |&i| {
+            let x = i as f32;
+            let r = h.infer("d", vec![x, x + 1.0, x + 2.0]).unwrap();
+            (i, r.output)
+        });
+        for (i, out) in results {
+            let x = i as f32;
+            assert_eq!(out, vec![2.0 * x, 2.0 * (x + 1.0), 2.0 * (x + 2.0)]);
+        }
+        let m = h.metrics_snapshot();
+        assert_eq!(m.get("responses").unwrap().as_u64(), Some(200));
+        assert_eq!(m.get("errors").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn batching_under_load() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("d", Arc::new(Doubler)));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 16,
+                    max_wait: std::time::Duration::from_millis(20),
+                },
+            },
+        );
+        let h = server.handle();
+        // Fire 64 async submissions, then collect: batches should form.
+        let rxs: Vec<_> = (0..64)
+            .map(|i| h.submit("d", vec![i as f32, 0.0, 0.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.output[0], 2.0 * i as f32);
+        }
+        assert!(
+            server.metrics().mean_batch_size() > 1.5,
+            "expected batching, got mean {}",
+            server.metrics().mean_batch_size()
+        );
+    }
+
+    #[test]
+    fn drive_load_returns_latencies() {
+        let server = doubler_server();
+        let h = server.handle();
+        let lat = drive_load(&h, "d", |_, _| vec![1.0, 1.0, 1.0], 50, 4);
+        assert_eq!(lat.len(), 50);
+        assert!(lat.iter().all(|&l| l >= 0.0));
+    }
+}

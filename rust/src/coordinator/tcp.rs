@@ -1,0 +1,250 @@
+//! TCP front-end: newline-delimited JSON over a socket.
+//!
+//! Protocol (one JSON object per line):
+//!   → `{"model": "bert", "input": [..]}`           inference
+//!   → `{"cmd": "metrics"}`                          metrics snapshot
+//!   → `{"cmd": "models"}`                           registered models
+//!   ← `{"ok": true, "output": [...], "engine": "...", "latency_ms": ...}`
+//!   ← `{"ok": false, "error": "..."}`
+//!
+//! One thread per connection (the dynamic batcher merges concurrent
+//! requests across connections, so per-connection threads are cheap).
+
+use super::server::ServerHandle;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+/// A running TCP front-end; dropping stops accepting new connections.
+pub struct TcpFrontend {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl TcpFrontend {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn serve(handle: ServerHandle, addr: &str) -> anyhow::Result<TcpFrontend> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        listener.set_nonblocking(true)?;
+
+        let accept_thread = thread::Builder::new()
+            .name("sparseflow-tcp-accept".into())
+            .spawn(move || {
+                let mut conn_threads = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            let h = handle.clone();
+                            conn_threads.push(thread::spawn(move || {
+                                let _ = handle_conn(stream, h);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for t in conn_threads {
+                    let _ = t.join();
+                }
+            })?;
+
+        Ok(TcpFrontend {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, handle: ServerHandle) -> anyhow::Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client went away
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = process_line(&line, &handle);
+        writer.write_all(reply.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn process_line(line: &str, handle: &ServerHandle) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("bad json: {e}")),
+    };
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "metrics" => Json::obj().set("ok", true).set("metrics", handle.metrics_snapshot()),
+            "models" => Json::obj().set("ok", true).set(
+                "models",
+                Json::Arr(handle.models().into_iter().map(Json::Str).collect()),
+            ),
+            other => err_json(&format!("unknown cmd {other:?}")),
+        };
+    }
+    let model = match req.get("model").and_then(Json::as_str) {
+        Some(m) => m,
+        None => return err_json("missing 'model'"),
+    };
+    let input: Vec<f32> = match req.get("input").and_then(Json::as_arr) {
+        Some(arr) => {
+            let mut v = Vec::with_capacity(arr.len());
+            for x in arr {
+                match x.as_f64() {
+                    Some(f) => v.push(f as f32),
+                    None => return err_json("non-numeric input element"),
+                }
+            }
+            v
+        }
+        None => return err_json("missing 'input'"),
+    };
+    match handle.infer(model, input) {
+        Ok(resp) => Json::obj()
+            .set("ok", true)
+            .set(
+                "output",
+                Json::Arr(resp.output.iter().map(|&v| Json::Num(v as f64)).collect()),
+            )
+            .set("engine", resp.engine)
+            .set("batch_size", resp.batch_size)
+            .set("latency_ms", resp.latency_secs * 1e3),
+        Err(e) => err_json(&e.to_string()),
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj().set("ok", false).set("error", msg)
+}
+
+/// Minimal blocking client for the line protocol (tests, examples, and
+/// the `sparseflow client` subcommand).
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &SocketAddr) -> anyhow::Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(TcpClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    pub fn roundtrip(&mut self, request: &Json) -> anyhow::Result<Json> {
+        self.writer
+            .write_all(request.to_string_compact().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let req = Json::obj().set("model", model).set(
+            "input",
+            Json::Arr(input.iter().map(|&v| Json::Num(v as f64)).collect()),
+        );
+        let resp = self.roundtrip(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(Json::as_bool) == Some(true),
+            "server error: {:?}",
+            resp.get("error").and_then(Json::as_str)
+        );
+        Ok(resp
+            .get("output")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing output"))?
+            .iter()
+            .filter_map(|v| v.as_f64().map(|f| f as f32))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn process_line_validates() {
+        // No server needed for pure validation failures.
+        let handle = {
+            use crate::coordinator::router::{ModelVariant, Router};
+            use crate::coordinator::server::{Server, ServerConfig};
+            use crate::exec::batch::BatchMatrix;
+            use crate::exec::Engine;
+            use std::sync::Arc;
+            struct Id;
+            impl Engine for Id {
+                fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+                    x.clone()
+                }
+                fn name(&self) -> &'static str {
+                    "id"
+                }
+                fn n_inputs(&self) -> usize {
+                    2
+                }
+                fn n_outputs(&self) -> usize {
+                    2
+                }
+            }
+            let mut r = Router::new();
+            r.register(ModelVariant::new("m", Arc::new(Id)));
+            // Leak the server so its dispatcher threads outlive the test
+            // handle (tiny, test-only).
+            let server = Box::leak(Box::new(Server::start(r, ServerConfig::default())));
+            server.handle()
+        };
+
+        let bad = process_line("{nope", &handle);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+
+        let missing = process_line(r#"{"input": [1]}"#, &handle);
+        assert!(missing.get("error").unwrap().as_str().unwrap().contains("model"));
+
+        let ok = process_line(r#"{"model": "m", "input": [1, 2]}"#, &handle);
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ok.get("output").unwrap().as_arr().unwrap().len(), 2);
+
+        let models = process_line(r#"{"cmd": "models"}"#, &handle);
+        assert_eq!(
+            models.get("models").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("m")
+        );
+
+        let metrics = process_line(r#"{"cmd": "metrics"}"#, &handle);
+        assert!(metrics.path(&["metrics", "responses"]).is_some());
+    }
+}

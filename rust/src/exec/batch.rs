@@ -1,0 +1,139 @@
+//! Row-major `rows × batch` f32 matrix: one row of `batch` values per
+//! neuron. Batched inference (the paper uses batch = 128) turns each
+//! scalar multiply-accumulate of Algorithm 1 into an AXPY over the batch
+//! row, which auto-vectorizes and saturates memory bandwidth.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchMatrix {
+    rows: usize,
+    batch: usize,
+    data: Vec<f32>,
+}
+
+impl BatchMatrix {
+    pub fn zeros(rows: usize, batch: usize) -> BatchMatrix {
+        BatchMatrix {
+            rows,
+            batch,
+            data: vec![0.0; rows * batch],
+        }
+    }
+
+    pub fn from_fn(rows: usize, batch: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = BatchMatrix::zeros(rows, batch);
+        for r in 0..rows {
+            for c in 0..batch {
+                m.data[r * batch + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn random(rows: usize, batch: usize, rng: &mut Pcg64) -> BatchMatrix {
+        BatchMatrix::from_fn(rows, batch, |_, _| rng.normal() as f32)
+    }
+
+    /// Build from a flat row-major slice.
+    pub fn from_rows(rows: usize, batch: usize, data: Vec<f32>) -> BatchMatrix {
+        assert_eq!(data.len(), rows * batch);
+        BatchMatrix { rows, batch, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.batch..(r + 1) * self.batch]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.batch..(r + 1) * self.batch]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Fill every element of row `r` with `v`.
+    pub fn fill_row(&mut self, r: usize, v: f32) {
+        self.row_mut(r).fill(v);
+    }
+
+    /// Maximum absolute difference to another matrix of the same shape.
+    pub fn max_abs_diff(&self, other: &BatchMatrix) -> f32 {
+        assert_eq!((self.rows, self.batch), (other.rows, other.batch));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mixed absolute/relative closeness check (like `numpy.allclose`).
+    pub fn allclose(&self, other: &BatchMatrix, rtol: f32, atol: f32) -> bool {
+        assert_eq!((self.rows, self.batch), (other.rows, other.batch));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = BatchMatrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.batch(), 4);
+    }
+
+    #[test]
+    fn row_mut_and_fill() {
+        let mut m = BatchMatrix::zeros(2, 3);
+        m.fill_row(1, 7.0);
+        m.row_mut(0)[2] = 1.0;
+        assert_eq!(m.row(0), &[0.0, 0.0, 1.0]);
+        assert_eq!(m.row(1), &[7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = BatchMatrix::from_rows(1, 2, vec![1.0, 100.0]);
+        let b = BatchMatrix::from_rows(1, 2, vec![1.0001, 100.01]);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+        assert!(!a.allclose(&b, 1e-6, 1e-6));
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = BatchMatrix::random(4, 4, &mut Pcg64::seed_from(1));
+        let b = BatchMatrix::random(4, 4, &mut Pcg64::seed_from(1));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = BatchMatrix::zeros(2, 2);
+        let b = BatchMatrix::zeros(2, 3);
+        a.max_abs_diff(&b);
+    }
+}

@@ -1,0 +1,166 @@
+//! CSR (compressed sparse row) layer representation and the sparse-matrix
+//! × dense-batch product — the building block of the layer-wise baseline
+//! (the paper benchmarks against Intel MKL's CSRMM; DESIGN.md §5).
+//!
+//! Rows index *output* neurons of the layer; the product is
+//! `Y = act(A · X + b)` with `X: n_in × batch`, `Y: n_out × batch`.
+
+use super::batch::BatchMatrix;
+use super::relu_row;
+use crate::ffnn::graph::{Ffnn, NeuronId};
+
+/// One sparse layer in CSR form.
+#[derive(Clone, Debug)]
+pub struct CsrLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row pointer: `indptr[r]..indptr[r+1]` slices `indices`/`weights`.
+    pub indptr: Vec<u32>,
+    /// Column (input-neuron position) per non-zero.
+    pub indices: Vec<u32>,
+    pub weights: Vec<f32>,
+    /// Bias per output row.
+    pub bias: Vec<f32>,
+    /// Apply ReLU after accumulation (hidden layers) or not (final layer).
+    pub relu: bool,
+}
+
+impl CsrLayer {
+    /// Extract the CSR layer between two consecutive layers of a layered
+    /// network. `in_ids`/`out_ids` give the neuron ids of the two layers;
+    /// columns/rows use positions within those id lists.
+    pub fn from_layer(net: &Ffnn, in_ids: &[NeuronId], out_ids: &[NeuronId], relu: bool) -> CsrLayer {
+        let mut col_of = vec![u32::MAX; net.n_neurons()];
+        for (i, &v) in in_ids.iter().enumerate() {
+            col_of[v as usize] = i as u32;
+        }
+        let mut indptr = Vec::with_capacity(out_ids.len() + 1);
+        let mut indices = Vec::new();
+        let mut weights = Vec::new();
+        let mut bias = Vec::with_capacity(out_ids.len());
+        indptr.push(0u32);
+        for &o in out_ids {
+            for &ci in net.in_conns(o) {
+                let c = net.conn(ci as usize);
+                let col = col_of[c.src as usize];
+                assert_ne!(col, u32::MAX, "connection crosses non-consecutive layers");
+                indices.push(col);
+                weights.push(c.weight);
+            }
+            indptr.push(indices.len() as u32);
+            bias.push(net.initial(o));
+        }
+        CsrLayer {
+            n_in: in_ids.len(),
+            n_out: out_ids.len(),
+            indptr,
+            indices,
+            weights,
+            bias,
+            relu,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// CSRMM: `out = act(self · x + bias)`.
+    pub fn spmm(&self, x: &BatchMatrix, out: &mut BatchMatrix) {
+        assert_eq!(x.rows(), self.n_in);
+        assert_eq!(out.rows(), self.n_out);
+        assert_eq!(x.batch(), out.batch());
+        let batch = x.batch();
+        let xdata = x.data();
+        for r in 0..self.n_out {
+            let row = out.row_mut(r);
+            row.fill(self.bias[r]);
+            let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+            for k in lo..hi {
+                let col = self.indices[k] as usize;
+                let w = self.weights[k];
+                let xrow = &xdata[col * batch..(col + 1) * batch];
+                for (y, &xv) in row.iter_mut().zip(xrow) {
+                    *y += w * xv;
+                }
+            }
+            if self.relu {
+                relu_row(row);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn csr_extraction_counts() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(3, 10, 0.4), &mut rng);
+        let layers = net.layers().unwrap();
+        let l = CsrLayer::from_layer(&net, &layers[0], &layers[1], true);
+        assert_eq!(l.n_in, 10);
+        assert_eq!(l.n_out, 10);
+        let expected: usize = layers[1].iter().map(|&o| net.in_degree(o)).sum();
+        assert_eq!(l.nnz(), expected);
+        assert_eq!(*l.indptr.last().unwrap() as usize, l.nnz());
+    }
+
+    #[test]
+    fn spmm_hand_computed() {
+        // A = [[2, 0], [1, 3]] with bias [1, -1], no relu.
+        let l = CsrLayer {
+            n_in: 2,
+            n_out: 2,
+            indptr: vec![0, 1, 3],
+            indices: vec![0, 0, 1],
+            weights: vec![2.0, 1.0, 3.0],
+            bias: vec![1.0, -1.0],
+            relu: false,
+        };
+        let x = BatchMatrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut y = BatchMatrix::zeros(2, 2);
+        l.spmm(&x, &mut y);
+        assert_eq!(y.row(0), &[3.0, 5.0]); // 1 + 2x0
+        assert_eq!(y.row(1), &[9.0, 13.0]); // −1 + x0 + 3x1
+    }
+
+    #[test]
+    fn spmm_relu_clamps() {
+        let l = CsrLayer {
+            n_in: 1,
+            n_out: 1,
+            indptr: vec![0, 1],
+            indices: vec![0],
+            weights: vec![-1.0],
+            bias: vec![0.0],
+            relu: true,
+        };
+        let x = BatchMatrix::from_rows(1, 2, vec![5.0, -5.0]);
+        let mut y = BatchMatrix::zeros(1, 2);
+        l.spmm(&x, &mut y);
+        assert_eq!(y.row(0), &[0.0, 5.0]);
+    }
+
+    #[test]
+    fn empty_row_gives_bias() {
+        let l = CsrLayer {
+            n_in: 2,
+            n_out: 2,
+            indptr: vec![0, 0, 1],
+            indices: vec![1],
+            weights: vec![1.0],
+            bias: vec![7.0, 0.0],
+            relu: false,
+        };
+        let x = BatchMatrix::from_rows(2, 1, vec![1.0, 2.0]);
+        let mut y = BatchMatrix::zeros(2, 1);
+        l.spmm(&x, &mut y);
+        assert_eq!(y.row(0), &[7.0]);
+        assert_eq!(y.row(1), &[2.0]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dense per-layer GEMM engine: the reference at 100% density (the paper
+//! notes MKL CSRMM *loses* to dense GEMM there, §VI.B.1) and the numeric
+//! twin of the JAX/PJRT artifact (`runtime` cross-checks against it).
+
+use super::batch::BatchMatrix;
+use super::{relu_row, Engine};
+use crate::ffnn::graph::{Ffnn, NeuronKind};
+
+/// One dense layer: row-major `n_out × n_in` weights + bias.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub relu: bool,
+}
+
+impl DenseLayer {
+    /// Densify the connections between two consecutive layers (absent
+    /// connections become 0 — the same function as the sparse engines).
+    pub fn from_layer(net: &Ffnn, in_ids: &[u32], out_ids: &[u32], relu: bool) -> DenseLayer {
+        let mut col_of = vec![u32::MAX; net.n_neurons()];
+        for (i, &v) in in_ids.iter().enumerate() {
+            col_of[v as usize] = i as u32;
+        }
+        let (n_in, n_out) = (in_ids.len(), out_ids.len());
+        let mut weights = vec![0.0f32; n_in * n_out];
+        let mut bias = Vec::with_capacity(n_out);
+        for (r, &o) in out_ids.iter().enumerate() {
+            for &ci in net.in_conns(o) {
+                let c = net.conn(ci as usize);
+                let col = col_of[c.src as usize];
+                assert_ne!(col, u32::MAX, "connection crosses non-consecutive layers");
+                weights[r * n_in + col as usize] = c.weight;
+            }
+            bias.push(net.initial(o));
+        }
+        DenseLayer {
+            n_in,
+            n_out,
+            weights,
+            bias,
+            relu,
+        }
+    }
+
+    /// `out = act(W · x + b)`; straightforward r-k-b loop, batch-inner for
+    /// vectorization.
+    pub fn gemm(&self, x: &BatchMatrix, out: &mut BatchMatrix) {
+        assert_eq!(x.rows(), self.n_in);
+        assert_eq!(out.rows(), self.n_out);
+        let batch = x.batch();
+        let xdata = x.data();
+        for r in 0..self.n_out {
+            let row = out.row_mut(r);
+            row.fill(self.bias[r]);
+            let wrow = &self.weights[r * self.n_in..(r + 1) * self.n_in];
+            for (k, &w) in wrow.iter().enumerate() {
+                if w == 0.0 {
+                    continue; // cheap skip keeps dense path fair on sparse nets
+                }
+                let xrow = &xdata[k * batch..(k + 1) * batch];
+                for (y, &xv) in row.iter_mut().zip(xrow) {
+                    *y += w * xv;
+                }
+            }
+            if self.relu {
+                relu_row(row);
+            }
+        }
+    }
+}
+
+/// Dense layer-wise engine.
+pub struct DenseEngine {
+    layers: Vec<DenseLayer>,
+    n_inputs: usize,
+    n_outputs: usize,
+}
+
+impl DenseEngine {
+    pub fn new(net: &Ffnn) -> DenseEngine {
+        let ids = net.layers().expect("DenseEngine requires a layered network");
+        let mut layers = Vec::new();
+        for li in 0..ids.len() - 1 {
+            let is_last = li + 1 == ids.len() - 1;
+            let relu = !is_last
+                && ids[li + 1]
+                    .iter()
+                    .all(|&v| net.kind(v) == NeuronKind::Hidden);
+            layers.push(DenseLayer::from_layer(net, &ids[li], &ids[li + 1], relu));
+        }
+        DenseEngine {
+            layers,
+            n_inputs: ids[0].len(),
+            n_outputs: ids.last().unwrap().len(),
+        }
+    }
+
+    pub fn layers(&self) -> &[DenseLayer] {
+        &self.layers
+    }
+}
+
+impl Engine for DenseEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let mut cur = inputs.clone();
+        for layer in &self.layers {
+            let mut next = BatchMatrix::zeros(layer.n_out, batch);
+            layer.gemm(&cur, &mut next);
+            cur = next;
+        }
+        cur
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::layerwise::LayerwiseEngine;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_matches_csr() {
+        let mut rng = Pcg64::seed_from(60);
+        let net = random_mlp(&MlpSpec::new(3, 18, 0.35), &mut rng);
+        let dense = DenseEngine::new(&net);
+        let csr = LayerwiseEngine::new(&net);
+        let x = BatchMatrix::random(net.n_inputs(), 6, &mut rng);
+        let (a, b) = (dense.infer(&x), csr.infer(&x));
+        assert!(a.allclose(&b, 1e-4, 1e-4), "max diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn gemm_hand_computed() {
+        let l = DenseLayer {
+            n_in: 2,
+            n_out: 1,
+            weights: vec![3.0, -1.0],
+            bias: vec![0.5],
+            relu: false,
+        };
+        let x = BatchMatrix::from_rows(2, 2, vec![1.0, 0.0, 2.0, 4.0]);
+        let mut y = BatchMatrix::zeros(1, 2);
+        l.gemm(&x, &mut y);
+        assert_eq!(y.row(0), &[1.5, -3.5]);
+    }
+
+    #[test]
+    fn engine_shapes() {
+        let mut rng = Pcg64::seed_from(61);
+        let net = random_mlp(&MlpSpec::new(2, 9, 0.5), &mut rng);
+        let dense = DenseEngine::new(&net);
+        assert_eq!(dense.n_inputs(), 9);
+        assert_eq!(dense.n_outputs(), 1);
+        assert_eq!(dense.layers().len(), 2);
+    }
+}

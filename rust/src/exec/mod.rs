@@ -1,0 +1,56 @@
+//! Real numeric inference engines (paper §VI.B "Performance
+//! Experiments"). All engines compute the same function — batched sparse
+//! FFNN inference with ReLU at hidden neurons and identity at outputs —
+//! through different schedules:
+//!
+//! * [`stream`] — **our method**: the connection order (2-optimal or
+//!   reordered by Connection Reordering) compiled to a flat instruction
+//!   stream; the order is "encoded in the way the connections are laid
+//!   out" (paper §VII.B), so following it costs nothing at run time.
+//! * [`layerwise`] — the **baseline**: layer-after-layer CSR sparse-matrix
+//!   × dense-batch multiplication (the paper's MKL CSRMM; DESIGN.md §5).
+//! * [`dense`] — dense GEMM per layer (the paper's remark about GEMM vs
+//!   CSRMM at 100% density), also the reference the PJRT artifact is
+//!   checked against.
+
+pub mod batch;
+pub mod csr;
+pub mod dense;
+pub mod layerwise;
+pub mod stream;
+
+use batch::BatchMatrix;
+
+/// A batched inference engine over a fixed network.
+pub trait Engine: Send + Sync {
+    /// Inputs: `n_inputs × batch`; returns `n_outputs × batch` (rows
+    /// ordered by input/output neuron id).
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix;
+
+    /// Engine name for reports ("stream", "csr-layerwise", "dense", ...).
+    fn name(&self) -> &'static str;
+
+    fn n_inputs(&self) -> usize;
+    fn n_outputs(&self) -> usize;
+}
+
+/// Activation discipline shared by every engine and the JAX model:
+/// ReLU at hidden neurons, identity at outputs.
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    if x > 0.0 {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Apply ReLU to a whole batch row.
+#[inline]
+pub fn relu_row(row: &mut [f32]) {
+    for v in row {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}

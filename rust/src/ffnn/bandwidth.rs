@@ -1,0 +1,205 @@
+//! FFNN bandwidth (paper §V, Corollary 1).
+//!
+//! The *bandwidth* of an FFNN is the smallest k such that some topological
+//! order of the neurons places every connected pair at most k apart.
+//! Corollary 1: with fast memory M ≥ k+2, inference needs no temporary
+//! reads/writes (the net can be built by compact growth with a sliding
+//! window of pebbles).
+//!
+//! Computing bandwidth exactly is NP-hard in general, so we provide:
+//! * [`bandwidth_of_order`] — exact stretch of a given order,
+//! * [`greedy_bandwidth_order`] — a Kahn-style heuristic that always picks
+//!   the ready neuron whose earliest-placed predecessor is oldest,
+//! * [`exact_bandwidth`] — branch-and-bound over topological orders for
+//!   small nets (tests, codesign example).
+
+use super::graph::{Ffnn, NeuronId};
+
+/// Maximum distance between connected neurons under `order` (which must be
+/// a topological order of the neurons).
+pub fn bandwidth_of_order(net: &Ffnn, order: &[NeuronId]) -> usize {
+    let mut pos = vec![0usize; net.n_neurons()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v as usize] = i;
+    }
+    net.conns()
+        .iter()
+        .map(|c| pos[c.dst as usize].saturating_sub(pos[c.src as usize]))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Greedy topological order aiming for low bandwidth: repeatedly emit the
+/// ready neuron (all predecessors placed) whose *earliest* predecessor
+/// position is smallest — i.e., close the longest-open dependency first.
+/// Sources are tie-broken by id for determinism.
+pub fn greedy_bandwidth_order(net: &Ffnn) -> Vec<NeuronId> {
+    let n = net.n_neurons();
+    let mut remaining_in: Vec<u32> = (0..n).map(|v| net.in_degree(v as u32) as u32).collect();
+    let mut pos = vec![usize::MAX; n];
+    // Ready set as a simple vector scan: fine for generation-time use.
+    let mut ready: Vec<NeuronId> = (0..n as u32).filter(|&v| remaining_in[v as usize] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+
+    while let Some((ri, _)) = ready
+        .iter()
+        .enumerate()
+        .map(|(ri, &v)| {
+            let earliest_pred = net
+                .in_conns(v)
+                .iter()
+                .map(|&ci| pos[net.conn(ci as usize).src as usize])
+                .min()
+                .unwrap_or(usize::MAX - 1);
+            (ri, (earliest_pred, v))
+        })
+        .min_by_key(|&(_, key)| key)
+    {
+        let v = ready.swap_remove(ri);
+        pos[v as usize] = order.len();
+        order.push(v);
+        for &ci in net.out_conns(v) {
+            let d = net.conn(ci as usize).dst;
+            remaining_in[d as usize] -= 1;
+            if remaining_in[d as usize] == 0 {
+                ready.push(d);
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), n, "graph is a DAG");
+    order
+}
+
+/// Exact minimum bandwidth by branch-and-bound over topological orders.
+/// Exponential — only for small nets (≲ 16 neurons).
+pub fn exact_bandwidth(net: &Ffnn) -> usize {
+    let n = net.n_neurons();
+    assert!(n <= 20, "exact_bandwidth is exponential; n={n} too large");
+    let mut best = bandwidth_of_order(net, &greedy_bandwidth_order(net));
+    let mut pos = vec![usize::MAX; n];
+    let mut remaining_in: Vec<u32> = (0..n).map(|v| net.in_degree(v as u32) as u32).collect();
+
+    fn dfs(
+        net: &Ffnn,
+        depth: usize,
+        cur_bw: usize,
+        best: &mut usize,
+        pos: &mut Vec<usize>,
+        remaining_in: &mut Vec<u32>,
+    ) {
+        let n = net.n_neurons();
+        if cur_bw >= *best {
+            return; // prune: cannot improve
+        }
+        if depth == n {
+            *best = cur_bw;
+            return;
+        }
+        for v in 0..n as u32 {
+            if pos[v as usize] != usize::MAX || remaining_in[v as usize] != 0 {
+                continue;
+            }
+            // Place v at `depth`.
+            let stretch = net
+                .in_conns(v)
+                .iter()
+                .map(|&ci| depth - pos[net.conn(ci as usize).src as usize])
+                .max()
+                .unwrap_or(0);
+            let new_bw = cur_bw.max(stretch);
+            if new_bw >= *best {
+                continue;
+            }
+            pos[v as usize] = depth;
+            for &ci in net.out_conns(v) {
+                remaining_in[net.conn(ci as usize).dst as usize] -= 1;
+            }
+            dfs(net, depth + 1, new_bw, best, pos, remaining_in);
+            for &ci in net.out_conns(v) {
+                remaining_in[net.conn(ci as usize).dst as usize] += 1;
+            }
+            pos[v as usize] = usize::MAX;
+        }
+    }
+
+    dfs(net, 0, 0, &mut best, &mut pos, &mut remaining_in);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::extremal::prop2_chains;
+    use crate::ffnn::graph::{Conn, NeuronKind};
+    use crate::util::rng::Pcg64;
+
+    fn path(n: usize) -> Ffnn {
+        let mut kinds = vec![NeuronKind::Input];
+        kinds.extend(std::iter::repeat(NeuronKind::Hidden).take(n - 2));
+        kinds.push(NeuronKind::Output);
+        let conns: Vec<Conn> = (0..n - 1)
+            .map(|i| Conn {
+                src: i as u32,
+                dst: (i + 1) as u32,
+                weight: 1.0,
+            })
+            .collect();
+        Ffnn::new(kinds, vec![0.0; n], conns).unwrap()
+    }
+
+    #[test]
+    fn path_has_bandwidth_one() {
+        let net = path(6);
+        let order = greedy_bandwidth_order(&net);
+        assert_eq!(bandwidth_of_order(&net, &order), 1);
+        assert_eq!(exact_bandwidth(&net), 1);
+    }
+
+    #[test]
+    fn bandwidth_of_given_order() {
+        let net = path(4);
+        // Natural order: bandwidth 1. Reversed pairs: larger.
+        assert_eq!(bandwidth_of_order(&net, &[0, 1, 2, 3]), 1);
+        assert_eq!(bandwidth_of_order(&net, &[0, 2, 1, 3]), 2);
+    }
+
+    #[test]
+    fn greedy_is_topological() {
+        let net = prop2_chains(2, 3, &mut Pcg64::seed_from(1));
+        let order = greedy_bandwidth_order(&net);
+        let mut pos = vec![0usize; net.n_neurons()];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v as usize] = i;
+        }
+        for c in net.conns() {
+            assert!(pos[c.src as usize] < pos[c.dst as usize]);
+        }
+    }
+
+    #[test]
+    fn exact_never_worse_than_greedy() {
+        let net = prop2_chains(1, 2, &mut Pcg64::seed_from(2)); // 6 neurons
+        let greedy_bw = bandwidth_of_order(&net, &greedy_bandwidth_order(&net));
+        let exact = exact_bandwidth(&net);
+        assert!(exact <= greedy_bw);
+        assert!(exact >= 1);
+    }
+
+    #[test]
+    fn star_bandwidth_is_input_count() {
+        // I inputs → 1 output: the output sits after all inputs; the first
+        // input is I positions away, so bandwidth = I with any order.
+        let net = crate::ffnn::extremal::lemma2_tree(5, &mut Pcg64::seed_from(3));
+        assert_eq!(exact_bandwidth(&net), 5);
+    }
+
+    #[test]
+    fn corollary1_bound_on_chains() {
+        // Chain-after-chain order of the Prop-2 net has low bandwidth per
+        // chain, but chains interleave through the shared input/output.
+        let net = prop2_chains(2, 2, &mut Pcg64::seed_from(4));
+        let bw = bandwidth_of_order(&net, &greedy_bandwidth_order(&net));
+        // Shared output forces ≥ c+1 distance from the first chain's tail.
+        assert!(bw >= 2);
+    }
+}

@@ -1,0 +1,347 @@
+//! Compact Growth (paper §V): the constructive characterization of FFNN
+//! architectures admitting inference at the exact Theorem-1 lower bound
+//! (N+W read-I/Os, S write-I/Os) for a given fast-memory size M.
+//!
+//! The construction is a pebble game over a *bag* (the fast memory):
+//!
+//! 1. with ≤ M−2 pebbles in the bag, add a gray (uncomputed) or black
+//!    (computed) pebble = a new neuron,
+//! 2. with a black `b` and a gray `g` in the bag, draw a connection
+//!    `b → g` = one multiply-accumulate,
+//! 3. turn gray → black = apply activation,
+//! 4. remove a black pebble = delete from fast memory.
+//!
+//! [`PebbleBuilder`] exposes these four rules with their preconditions
+//! checked; [`compact_growth`] runs the randomized generator of Appendix B
+//! on top of it. The generator also returns the construction-order
+//! [`ConnOrder`], which by Theorem 2 achieves the lower bound whenever the
+//! simulated memory M ≥ M_g.
+
+use super::graph::{Conn, Ffnn, NeuronId, NeuronKind};
+use super::topo::ConnOrder;
+use crate::util::rng::Pcg64;
+
+/// Pebble colors (gray = partially computed, black = finished).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Color {
+    Gray,
+    Black,
+}
+
+/// Rule-violation errors from [`PebbleBuilder`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PebbleError {
+    /// Rule 1 precondition: more than M−2 pebbles already in the bag.
+    BagFull { in_bag: usize, m: usize },
+    /// Rule 2: one endpoint is not in the bag or has the wrong color.
+    BadConnection { reason: &'static str },
+    /// Rule 3/4 applied to a pebble not in the bag / wrong color.
+    BadPebble { reason: &'static str },
+}
+
+impl std::fmt::Display for PebbleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PebbleError::BagFull { in_bag, m } => {
+                write!(f, "rule 1 violated: {in_bag} pebbles in bag, M={m} allows at most M-2")
+            }
+            PebbleError::BadConnection { reason } => write!(f, "rule 2 violated: {reason}"),
+            PebbleError::BadPebble { reason } => write!(f, "rule 3/4 violated: {reason}"),
+        }
+    }
+}
+impl std::error::Error for PebbleError {}
+
+/// Stateful compact-growth builder enforcing the four construction rules.
+pub struct PebbleBuilder {
+    m: usize,
+    /// Color per created neuron, None once removed from the bag.
+    in_bag: Vec<Option<Color>>,
+    kinds: Vec<NeuronKind>,
+    initial: Vec<f32>,
+    conns: Vec<Conn>,
+}
+
+impl PebbleBuilder {
+    /// Start an empty construction for memory size `m` (≥ 3).
+    pub fn new(m: usize) -> PebbleBuilder {
+        assert!(m >= 3, "the model requires M ≥ 3");
+        PebbleBuilder {
+            m,
+            in_bag: Vec::new(),
+            kinds: Vec::new(),
+            initial: Vec::new(),
+            conns: Vec::new(),
+        }
+    }
+
+    pub fn bag_size(&self) -> usize {
+        self.in_bag.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Neurons currently in the bag with the given color.
+    pub fn bag_with(&self, color: Color) -> Vec<NeuronId> {
+        self.in_bag
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c == Some(color))
+            .map(|(i, _)| i as NeuronId)
+            .collect()
+    }
+
+    /// Rule 1: add a neuron/pebble. Black pebbles model input neurons
+    /// (already computed); gray pebbles model neurons under computation
+    /// (their `initial` is the bias).
+    pub fn add_neuron(&mut self, color: Color, initial: f32) -> Result<NeuronId, PebbleError> {
+        let in_bag = self.bag_size();
+        if in_bag > self.m - 2 {
+            return Err(PebbleError::BagFull { in_bag, m: self.m });
+        }
+        let id = self.in_bag.len() as NeuronId;
+        self.in_bag.push(Some(color));
+        // Kind is provisional: inputs are black-added neurons with no
+        // incoming connections; finalized in `finish()`.
+        self.kinds.push(NeuronKind::Hidden);
+        self.initial.push(initial);
+        Ok(id)
+    }
+
+    /// Rule 2: draw a connection black → gray.
+    pub fn connect(&mut self, src: NeuronId, dst: NeuronId, weight: f32) -> Result<(), PebbleError> {
+        match self.in_bag.get(src as usize).copied().flatten() {
+            Some(Color::Black) => {}
+            Some(Color::Gray) => {
+                return Err(PebbleError::BadConnection { reason: "source pebble is gray" })
+            }
+            None => return Err(PebbleError::BadConnection { reason: "source not in bag" }),
+        }
+        match self.in_bag.get(dst as usize).copied().flatten() {
+            Some(Color::Gray) => {}
+            Some(Color::Black) => {
+                return Err(PebbleError::BadConnection { reason: "destination pebble is black" })
+            }
+            None => return Err(PebbleError::BadConnection { reason: "destination not in bag" }),
+        }
+        if src == dst {
+            return Err(PebbleError::BadConnection { reason: "self-loop" });
+        }
+        if self
+            .conns
+            .iter()
+            .any(|c| c.src == src && c.dst == dst)
+        {
+            return Err(PebbleError::BadConnection { reason: "duplicate connection" });
+        }
+        self.conns.push(Conn { src, dst, weight });
+        Ok(())
+    }
+
+    /// Rule 3: finish a neuron (gray → black).
+    pub fn blacken(&mut self, n: NeuronId) -> Result<(), PebbleError> {
+        match self.in_bag.get_mut(n as usize) {
+            Some(slot @ Some(Color::Gray)) => {
+                *slot = Some(Color::Black);
+                Ok(())
+            }
+            Some(Some(Color::Black)) => Err(PebbleError::BadPebble { reason: "already black" }),
+            _ => Err(PebbleError::BadPebble { reason: "not in bag" }),
+        }
+    }
+
+    /// Rule 4: remove a black pebble from the bag.
+    pub fn remove(&mut self, n: NeuronId) -> Result<(), PebbleError> {
+        match self.in_bag.get_mut(n as usize) {
+            Some(slot @ Some(Color::Black)) => {
+                *slot = None;
+                Ok(())
+            }
+            Some(Some(Color::Gray)) => {
+                Err(PebbleError::BadPebble { reason: "cannot remove a gray pebble" })
+            }
+            _ => Err(PebbleError::BadPebble { reason: "not in bag" }),
+        }
+    }
+
+    /// Finalize: neurons with no incoming connections become inputs;
+    /// `outputs` are marked as outputs. Returns the network and the
+    /// construction connection order (which achieves the lower bound at
+    /// memory size `m` by Theorem 2).
+    pub fn finish(mut self, outputs: &[NeuronId]) -> (Ffnn, ConnOrder) {
+        let n = self.kinds.len();
+        let mut has_in = vec![false; n];
+        for c in &self.conns {
+            has_in[c.dst as usize] = true;
+        }
+        for i in 0..n {
+            if !has_in[i] {
+                self.kinds[i] = NeuronKind::Input;
+            }
+        }
+        for &o in outputs {
+            assert!(
+                has_in[o as usize],
+                "output neuron {o} has no incoming connections"
+            );
+            self.kinds[o as usize] = NeuronKind::Output;
+        }
+        let w = self.conns.len();
+        let net = Ffnn::new(self.kinds, self.initial, self.conns)
+            .expect("pebble rules guarantee a valid DAG");
+        (net, ConnOrder::identity(w))
+    }
+}
+
+/// Specification for the Appendix-B randomized compact-growth generator.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactGrowthSpec {
+    /// Design memory size M_g (the paper uses 100, 300, 500).
+    pub m_g: usize,
+    /// Number of growth iterations (paper: 1000).
+    pub n_iter: usize,
+    /// In-degree of each grown neuron (paper: 5).
+    pub in_degree: usize,
+}
+
+impl CompactGrowthSpec {
+    pub fn new(m_g: usize) -> CompactGrowthSpec {
+        CompactGrowthSpec {
+            m_g,
+            n_iter: 1000,
+            in_degree: 5,
+        }
+    }
+}
+
+/// Appendix-B generator: start with M_g−2 computed input neurons in the
+/// bag; each iteration adds a neuron, draws `in_degree` incoming
+/// connections from distinct random bag neurons, and removes the last of
+/// those from the bag; finally one output neuron is connected from all
+/// remaining bag neurons.
+///
+/// Returns `(net, order)` where `order` is the construction order — by
+/// Theorem 2 inference in this order with M ≥ M_g uses exactly
+/// N+W read-I/Os and S write-I/Os.
+pub fn compact_growth(spec: &CompactGrowthSpec, rng: &mut Pcg64) -> (Ffnn, ConnOrder) {
+    assert!(spec.m_g >= spec.in_degree + 2, "bag must fit in_degree sources");
+    let mut b = PebbleBuilder::new(spec.m_g);
+
+    // M_g − 2 readily computed input neurons.
+    for _ in 0..spec.m_g - 2 {
+        let v = rng.normal() as f32;
+        b.add_neuron(Color::Black, v).expect("bag has room");
+    }
+
+    for _ in 0..spec.n_iter {
+        let bias = rng.normal() as f32;
+        let g = b.add_neuron(Color::Gray, bias).expect("rule 1 holds by invariant");
+        // Choose in_degree distinct black sources currently in the bag.
+        let blacks = b.bag_with(Color::Black);
+        debug_assert!(blacks.len() >= spec.in_degree);
+        let picks = rng.sample_distinct(blacks.len(), spec.in_degree);
+        for &pi in &picks {
+            let w = rng.normal() as f32;
+            b.connect(blacks[pi], g, w).expect("rule 2 holds");
+        }
+        b.blacken(g).expect("rule 3 holds");
+        // Remove the last of the chosen sources from the bag.
+        let last = blacks[*picks.last().unwrap()];
+        b.remove(last).expect("rule 4 holds");
+    }
+
+    // Output neuron fed by every remaining bag neuron except itself.
+    let bias = rng.normal() as f32;
+    let out = b.add_neuron(Color::Gray, bias).expect("rule 1 holds");
+    let blacks = b.bag_with(Color::Black);
+    for s in blacks {
+        let w = rng.normal() as f32;
+        b.connect(s, out, w).expect("rule 2 holds");
+    }
+    b.blacken(out).expect("rule 3 holds");
+
+    b.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_enforces_rule1() {
+        let mut b = PebbleBuilder::new(4); // ≤ M−2 = 2 pebbles before an add
+        b.add_neuron(Color::Black, 0.0).unwrap();
+        b.add_neuron(Color::Black, 0.0).unwrap();
+        b.add_neuron(Color::Gray, 0.0).unwrap(); // bag had 2 = M−2: allowed
+        let e = b.add_neuron(Color::Gray, 0.0).unwrap_err();
+        assert!(matches!(e, PebbleError::BagFull { in_bag: 3, m: 4 }));
+    }
+
+    #[test]
+    fn builder_enforces_rule2_colors() {
+        let mut b = PebbleBuilder::new(5);
+        let black = b.add_neuron(Color::Black, 0.0).unwrap();
+        let gray = b.add_neuron(Color::Gray, 0.0).unwrap();
+        // gray → gray rejected
+        assert!(b.connect(gray, gray, 1.0).is_err());
+        // black → black rejected
+        let black2 = b.add_neuron(Color::Black, 0.0).unwrap();
+        assert!(b.connect(black, black2, 1.0).is_err());
+        // black → gray ok
+        b.connect(black, gray, 1.0).unwrap();
+        // duplicate rejected
+        assert!(b.connect(black, gray, 2.0).is_err());
+    }
+
+    #[test]
+    fn builder_remove_and_blacken() {
+        let mut b = PebbleBuilder::new(5);
+        let g = b.add_neuron(Color::Gray, 0.0).unwrap();
+        assert!(b.remove(g).is_err(), "gray cannot be removed");
+        b.blacken(g).unwrap();
+        assert!(b.blacken(g).is_err(), "already black");
+        b.remove(g).unwrap();
+        assert!(b.remove(g).is_err(), "not in bag anymore");
+        assert_eq!(b.bag_size(), 0);
+    }
+
+    #[test]
+    fn removed_pebble_cannot_connect() {
+        let mut b = PebbleBuilder::new(5);
+        let black = b.add_neuron(Color::Black, 0.0).unwrap();
+        b.remove(black).unwrap();
+        let gray = b.add_neuron(Color::Gray, 0.0).unwrap();
+        assert!(b.connect(black, gray, 1.0).is_err());
+    }
+
+    #[test]
+    fn generator_shape_matches_appendix_b() {
+        let spec = CompactGrowthSpec { m_g: 100, n_iter: 1000, in_degree: 5 };
+        let (net, order) = compact_growth(&spec, &mut Pcg64::seed_from(1));
+        // N = (M_g − 2) initial + 1000 grown + 1 output.
+        assert_eq!(net.n_neurons(), 98 + 1000 + 1);
+        assert_eq!(net.n_inputs(), 98);
+        assert_eq!(net.n_outputs(), 1);
+        // W = 5 per iteration + |bag| into the output. Bag stays at M_g−2
+        // through the loop, so the output has M_g−2 incoming connections.
+        assert_eq!(net.n_conns(), 5 * 1000 + 98);
+        assert!(order.is_topological(&net));
+        assert!(net.is_connected());
+    }
+
+    #[test]
+    fn generator_deterministic() {
+        let spec = CompactGrowthSpec { m_g: 50, n_iter: 100, in_degree: 5 };
+        let (a, _) = compact_growth(&spec, &mut Pcg64::seed_from(7));
+        let (b, _) = compact_growth(&spec, &mut Pcg64::seed_from(7));
+        assert_eq!(a.conns(), b.conns());
+    }
+
+    #[test]
+    fn grown_neurons_have_requested_in_degree() {
+        let spec = CompactGrowthSpec { m_g: 30, n_iter: 50, in_degree: 5 };
+        let (net, _) = compact_growth(&spec, &mut Pcg64::seed_from(3));
+        // Neurons 28..78 are the grown ones.
+        for v in 28..78u32 {
+            assert_eq!(net.in_degree(v), 5, "neuron {v}");
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Extremal FFNN constructions from the paper's proofs (§III): the
+//! instances showing the Theorem-1 bounds are tight (Proposition 1) and
+//! that layer-wise inference can be arbitrarily worse in write-I/Os
+//! (Proposition 2). Used by the `thm1`/`prop2` benches and the test suite.
+
+use super::graph::{Conn, Ffnn, NeuronKind};
+use crate::util::rng::Pcg64;
+
+/// Lemma 1: a layered FFNN in which any two consecutive layers fit
+/// together in M−1 slots admits inference exactly at the lower bound
+/// (N+W reads, S writes). Builds dense consecutive-layer connectivity over
+/// the given `sizes` (caller ensures `sizes[i] + sizes[i+1] ≤ M−1`).
+pub fn lemma1_net(sizes: &[usize], rng: &mut Pcg64) -> Ffnn {
+    assert!(sizes.len() >= 2);
+    let n: usize = sizes.iter().sum();
+    let mut kinds = Vec::with_capacity(n);
+    let mut layer_of = Vec::with_capacity(n);
+    let mut base = Vec::new();
+    let mut acc = 0u32;
+    for (li, &sz) in sizes.iter().enumerate() {
+        base.push(acc);
+        for _ in 0..sz {
+            kinds.push(if li == 0 {
+                NeuronKind::Input
+            } else if li == sizes.len() - 1 {
+                NeuronKind::Output
+            } else {
+                NeuronKind::Hidden
+            });
+            layer_of.push(li as u32);
+            acc += 1;
+        }
+    }
+    let initial: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut conns = Vec::new();
+    for li in 0..sizes.len() - 1 {
+        for s in 0..sizes[li] {
+            for t in 0..sizes[li + 1] {
+                conns.push(Conn {
+                    src: base[li] + s as u32,
+                    dst: base[li + 1] + t as u32,
+                    weight: rng.normal() as f32,
+                });
+            }
+        }
+    }
+    Ffnn::new(kinds, initial, conns)
+        .expect("valid layered net")
+        .with_layers(layer_of)
+}
+
+/// Lemma 2: a "star tree" — `n_inputs` input neurons all feeding a single
+/// output neuron. Attains the upper bounds: every connection requires
+/// reading a fresh input value, so rI/Os = 2W + N − I and total
+/// = 2(W + N − I) (as W = I and the only non-input is the output).
+pub fn lemma2_tree(n_inputs: usize, rng: &mut Pcg64) -> Ffnn {
+    assert!(n_inputs >= 1);
+    let mut kinds = vec![NeuronKind::Input; n_inputs];
+    kinds.push(NeuronKind::Output);
+    let initial: Vec<f32> = (0..=n_inputs).map(|_| rng.normal() as f32).collect();
+    let out = n_inputs as u32;
+    let conns: Vec<Conn> = (0..n_inputs as u32)
+        .map(|i| Conn {
+            src: i,
+            dst: out,
+            weight: rng.normal() as f32,
+        })
+        .collect();
+    Ffnn::new(kinds, initial, conns).expect("valid star")
+}
+
+/// Lemma 3: FFNN whose write-I/Os approach the N−I upper bound: `n_inputs`
+/// inputs, a hidden layer of `n_hidden`, and `n_outputs` outputs with
+/// S ≫ h so that S/(S+h) → 1. Dense consecutive connectivity.
+pub fn lemma3_net(n_inputs: usize, n_hidden: usize, n_outputs: usize, rng: &mut Pcg64) -> Ffnn {
+    lemma1_net(&[n_inputs, n_hidden, n_outputs], rng)
+}
+
+/// Proposition 2: the "2M chains" network. One input neuron fans out to
+/// `2m` parallel chains of `c` hidden neurons each, all merging into one
+/// output neuron. Layer-after-layer inference with fast memory M needs
+/// ≥ M·c write-I/Os; chain-after-chain needs at most 1.
+pub fn prop2_chains(m: usize, c: usize, rng: &mut Pcg64) -> Ffnn {
+    assert!(m >= 1 && c >= 1);
+    let chains = 2 * m;
+    let n = 1 + chains * c + 1;
+    let mut kinds = Vec::with_capacity(n);
+    let mut layer_of = Vec::with_capacity(n);
+    kinds.push(NeuronKind::Input);
+    layer_of.push(0);
+    for _ in 0..chains * c {
+        kinds.push(NeuronKind::Hidden);
+        layer_of.push(0); // filled below
+    }
+    kinds.push(NeuronKind::Output);
+    let initial: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    // Neuron id of chain k, position j (0-based): 1 + k*c + j.
+    let id = |k: usize, j: usize| (1 + k * c + j) as u32;
+    let out = (n - 1) as u32;
+    let mut conns = Vec::with_capacity(chains * (c + 1));
+    for k in 0..chains {
+        conns.push(Conn {
+            src: 0,
+            dst: id(k, 0),
+            weight: rng.normal() as f32,
+        });
+        for j in 0..c - 1 {
+            conns.push(Conn {
+                src: id(k, j),
+                dst: id(k, j + 1),
+                weight: rng.normal() as f32,
+            });
+        }
+        conns.push(Conn {
+            src: id(k, c - 1),
+            dst: out,
+            weight: rng.normal() as f32,
+        });
+    }
+    for (i, lo) in layer_of.iter_mut().enumerate().skip(1) {
+        *lo = (((i - 1) % c) + 1) as u32;
+    }
+    let mut layer_of = layer_of;
+    layer_of.push((c + 1) as u32);
+
+    Ffnn::new(kinds, initial, conns)
+        .expect("valid chains net")
+        .with_layers(layer_of)
+}
+
+/// The *chain-after-chain* connection order for [`prop2_chains`]: finish
+/// each chain end-to-end before starting the next (the optimal strategy in
+/// the proof of Proposition 2).
+pub fn prop2_chain_order(m: usize, c: usize) -> super::topo::ConnOrder {
+    let chains = 2 * m;
+    // Connections were pushed chain-major already: chain k contributes the
+    // contiguous block [k*(c+1), (k+1)*(c+1)). That *is* chain-after-chain.
+    super::topo::ConnOrder::identity(chains * (c + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma1_sizes() {
+        let net = lemma1_net(&[3, 4, 2], &mut Pcg64::seed_from(1));
+        assert_eq!(net.n_neurons(), 9);
+        assert_eq!(net.n_conns(), 3 * 4 + 4 * 2);
+        assert_eq!(net.n_inputs(), 3);
+        assert_eq!(net.n_outputs(), 2);
+        assert!(net.is_connected());
+    }
+
+    #[test]
+    fn lemma2_star_counts() {
+        let net = lemma2_tree(10, &mut Pcg64::seed_from(2));
+        assert_eq!(net.n_neurons(), 11);
+        assert_eq!(net.n_conns(), 10);
+        assert_eq!(net.n_inputs(), 10);
+        assert_eq!(net.n_outputs(), 1);
+        // W = I and N − I = 1: upper bound total = 2(W + N − I) = 22.
+    }
+
+    #[test]
+    fn lemma3_output_heavy() {
+        let net = lemma3_net(2, 3, 50, &mut Pcg64::seed_from(3));
+        assert_eq!(net.n_outputs(), 50);
+        let s = net.n_outputs() as f64;
+        let non_input = (net.n_neurons() - net.n_inputs()) as f64;
+        assert!(s / non_input > 0.9, "S must dominate N − I");
+    }
+
+    #[test]
+    fn prop2_chains_structure() {
+        let (m, c) = (3, 4);
+        let net = prop2_chains(m, c, &mut Pcg64::seed_from(4));
+        assert_eq!(net.n_neurons(), 1 + 2 * m * c + 1);
+        assert_eq!(net.n_conns(), 2 * m * (c + 1));
+        // Every hidden neuron: exactly one in, one out.
+        for v in 1..=(2 * m * c) as u32 {
+            assert_eq!(net.in_degree(v), 1);
+            assert_eq!(net.out_degree(v), 1);
+        }
+        // Input fans out to all chains, output collects all chains.
+        assert_eq!(net.out_degree(0), 2 * m);
+        assert_eq!(net.in_degree((net.n_neurons() - 1) as u32), 2 * m);
+        assert!(net.is_connected());
+    }
+
+    #[test]
+    fn prop2_chain_order_is_topological() {
+        let (m, c) = (2, 3);
+        let net = prop2_chains(m, c, &mut Pcg64::seed_from(5));
+        let order = prop2_chain_order(m, c);
+        assert!(order.is_topological(&net));
+    }
+
+    #[test]
+    fn prop2_layerwise_order_exists() {
+        let net = prop2_chains(2, 3, &mut Pcg64::seed_from(6));
+        let order = super::super::topo::layerwise_order(&net);
+        assert!(order.is_topological(&net));
+    }
+}

@@ -1,0 +1,198 @@
+//! Random sparse MLP generation — the exact procedure of the paper's
+//! Appendix A.
+//!
+//! "For each non-output neuron, we determine how many outgoing connections
+//! it has, by drawing uniformly at random an integer k between 1 and
+//! max(1, ⌈2·p·(#neurons in the next layer) − 1⌉). Then, we connect this
+//! neuron to k randomly chosen neurons of the next layer." k ≥ 1 keeps the
+//! FFNN connected and makes the single output neuron reachable from every
+//! neuron of the last hidden layer.
+
+use super::graph::{Conn, Ffnn, NeuronKind};
+use crate::util::rng::Pcg64;
+
+/// Specification for the paper's random MLPs: `depth` layers of `width`
+/// neurons each, plus one output neuron; target edge density `p`.
+///
+/// The paper's baseline (§VI.A.1): depth 4, width 500, p = 0.10.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MlpSpec {
+    pub depth: usize,
+    pub width: usize,
+    pub density: f64,
+    /// Size of the final layer (1 in all paper experiments).
+    pub n_outputs: usize,
+    /// Weight scale for the synthetic Gaussian weights.
+    pub weight_scale: f32,
+}
+
+impl MlpSpec {
+    pub fn new(depth: usize, width: usize, density: f64) -> MlpSpec {
+        MlpSpec {
+            depth,
+            width,
+            density,
+            n_outputs: 1,
+            weight_scale: 1.0,
+        }
+    }
+
+    /// The paper's baseline configuration (Fig. 2): 4×500 @ 10%.
+    pub fn paper_baseline() -> MlpSpec {
+        MlpSpec::new(4, 500, 0.10)
+    }
+}
+
+/// Generate a random sparse MLP per Appendix A.
+pub fn random_mlp(spec: &MlpSpec, rng: &mut Pcg64) -> Ffnn {
+    assert!(spec.depth >= 1, "need at least one layer");
+    assert!(spec.width >= 1 && spec.n_outputs >= 1);
+    assert!(
+        spec.density > 0.0 && spec.density <= 1.0,
+        "density must be in (0, 1], got {}",
+        spec.density
+    );
+
+    // Layer sizes: `depth` hidden-ish layers of `width` plus the output layer.
+    let mut sizes = vec![spec.width; spec.depth];
+    sizes.push(spec.n_outputs);
+    random_layered(&sizes, spec.density, spec.weight_scale, rng)
+}
+
+/// Generate a random layered FFNN with arbitrary per-layer sizes using the
+/// Appendix-A sampling rule between consecutive layers.
+pub fn random_layered(sizes: &[usize], density: f64, weight_scale: f32, rng: &mut Pcg64) -> Ffnn {
+    assert!(sizes.len() >= 2, "need ≥ 2 layers");
+    let n: usize = sizes.iter().sum();
+
+    // Neuron ids: layer-major.
+    let mut kinds = Vec::with_capacity(n);
+    let mut layer_of = Vec::with_capacity(n);
+    let mut base = Vec::with_capacity(sizes.len());
+    let mut acc = 0u32;
+    for (li, &sz) in sizes.iter().enumerate() {
+        base.push(acc);
+        for _ in 0..sz {
+            kinds.push(if li == 0 {
+                NeuronKind::Input
+            } else if li == sizes.len() - 1 {
+                NeuronKind::Output
+            } else {
+                NeuronKind::Hidden
+            });
+            layer_of.push(li as u32);
+            acc += 1;
+        }
+    }
+
+    let initial: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * weight_scale).collect();
+
+    let mut conns = Vec::new();
+    for li in 0..sizes.len() - 1 {
+        let next = sizes[li + 1];
+        // Appendix A: k ~ U{1, ..., max(1, ceil(2·p·next − 1))}.
+        let kmax = ((2.0 * density * next as f64).ceil() as i64 - 1).max(1) as u64;
+        for s in 0..sizes[li] {
+            let src = base[li] + s as u32;
+            let k = rng.range_inclusive(1, kmax) as usize;
+            let k = k.min(next);
+            for t in rng.sample_distinct(next, k) {
+                conns.push(Conn {
+                    src,
+                    dst: base[li + 1] + t as u32,
+                    weight: rng.normal() as f32 * weight_scale,
+                });
+            }
+        }
+    }
+
+    Ffnn::new(kinds, initial, conns)
+        .expect("generator produces valid DAGs")
+        .with_layers(layer_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_spec_matches_paper() {
+        let s = MlpSpec::paper_baseline();
+        assert_eq!((s.depth, s.width), (4, 500));
+        assert!((s.density - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_and_kinds() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(3, 50, 0.2), &mut rng);
+        assert_eq!(net.n_neurons(), 3 * 50 + 1);
+        assert_eq!(net.n_inputs(), 50);
+        assert_eq!(net.n_outputs(), 1);
+        assert_eq!(net.n_layers(), Some(4));
+    }
+
+    #[test]
+    fn every_non_output_has_outgoing() {
+        let mut rng = Pcg64::seed_from(2);
+        let net = random_mlp(&MlpSpec::new(4, 40, 0.1), &mut rng);
+        for v in 0..net.n_neurons() as u32 {
+            if net.kind(v) != NeuronKind::Output {
+                assert!(net.out_degree(v) >= 1, "neuron {v} must have out-degree ≥ 1");
+            }
+        }
+    }
+
+    #[test]
+    fn output_connected_to_all_last_hidden() {
+        // With a single output neuron, k≥1 forces every last-hidden neuron
+        // to connect to it (the paper's remark).
+        let mut rng = Pcg64::seed_from(3);
+        let net = random_mlp(&MlpSpec::new(3, 30, 0.15), &mut rng);
+        let out = net.output_ids()[0];
+        assert_eq!(net.in_degree(out), 30);
+    }
+
+    #[test]
+    fn density_close_to_target() {
+        let mut rng = Pcg64::seed_from(4);
+        for &p in &[0.05, 0.1, 0.3] {
+            let net = random_mlp(&MlpSpec::new(4, 200, p), &mut rng);
+            // Expected k = (1 + ceil(2·p·w − 1))/2 ≈ p·w ⇒ density ≈ p.
+            // The last (200→1) layer contributes 200 extra edges; exclude
+            // tolerance generously.
+            let d = net.density();
+            assert!(
+                (d - p).abs() < p * 0.25 + 0.01,
+                "density {d} too far from {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net1 = random_mlp(&MlpSpec::new(3, 20, 0.2), &mut Pcg64::seed_from(9));
+        let net2 = random_mlp(&MlpSpec::new(3, 20, 0.2), &mut Pcg64::seed_from(9));
+        assert_eq!(net1.n_conns(), net2.n_conns());
+        assert_eq!(net1.conns(), net2.conns());
+    }
+
+    #[test]
+    fn full_density_is_dense() {
+        let mut rng = Pcg64::seed_from(5);
+        let net = random_layered(&[10, 10], 1.0, 1.0, &mut rng);
+        // kmax = ceil(2·1.0·10 − 1) = 19 > 10, capped at 10; expected k ≈
+        // (1+10)/2 — not fully dense per edge, but every neuron has ≥ 1.
+        assert!(net.n_conns() >= 10);
+        assert!(net.n_conns() <= 100);
+    }
+
+    #[test]
+    fn layered_arbitrary_sizes() {
+        let mut rng = Pcg64::seed_from(6);
+        let net = random_layered(&[8, 16, 4], 0.5, 1.0, &mut rng);
+        assert_eq!(net.n_inputs(), 8);
+        assert_eq!(net.n_outputs(), 4);
+        assert!(net.is_connected() || net.n_conns() > 0);
+    }
+}

@@ -1,0 +1,582 @@
+//! The FFNN graph representation.
+//!
+//! Neurons are dense ids `0..N`. Connections are stored once in a flat
+//! `Vec<Conn>`; adjacency (incoming / outgoing connection lists in CSR
+//! form) is derived on construction and kept immutable afterwards —
+//! reordering operates on *permutations of connection indices*
+//! ([`crate::ffnn::topo::ConnOrder`]), never on the graph itself.
+
+pub type NeuronId = u32;
+
+/// A weighted connection `src → dst`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Conn {
+    pub src: NeuronId,
+    pub dst: NeuronId,
+    pub weight: f32,
+}
+
+/// Role of a neuron in the inference problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NeuronKind {
+    /// Carries an input value; never has incoming connections.
+    Input,
+    Hidden,
+    /// Its final value must be written to slow memory.
+    Output,
+}
+
+/// An immutable sparse FFNN.
+#[derive(Clone, Debug)]
+pub struct Ffnn {
+    conns: Vec<Conn>,
+    kinds: Vec<NeuronKind>,
+    /// Input value for inputs, bias for hidden/output neurons.
+    initial: Vec<f32>,
+    /// CSR: for each neuron, indices into `conns` of incoming connections.
+    in_off: Vec<u32>,
+    in_idx: Vec<u32>,
+    /// CSR: outgoing connection indices.
+    out_off: Vec<u32>,
+    out_idx: Vec<u32>,
+    /// Optional layered structure (layer id per neuron) for MLP-style nets.
+    layer_of: Option<Vec<u32>>,
+}
+
+/// Construction-time validation failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// A connection endpoint is out of range.
+    BadEndpoint { conn: usize },
+    /// An input neuron has incoming connections.
+    InputWithIncoming { neuron: NeuronId },
+    /// The connection graph has a directed cycle.
+    Cyclic,
+    /// Self-loop.
+    SelfLoop { conn: usize },
+    /// Duplicate connection (the model has independent parameters per
+    /// connection, so parallel edges are disallowed).
+    Duplicate { conn: usize },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::BadEndpoint { conn } => write!(f, "connection {conn}: endpoint out of range"),
+            GraphError::InputWithIncoming { neuron } => {
+                write!(f, "input neuron {neuron} has incoming connections")
+            }
+            GraphError::Cyclic => write!(f, "connection graph is cyclic"),
+            GraphError::SelfLoop { conn } => write!(f, "connection {conn} is a self-loop"),
+            GraphError::Duplicate { conn } => write!(f, "connection {conn} duplicates an earlier one"),
+        }
+    }
+}
+impl std::error::Error for GraphError {}
+
+impl Ffnn {
+    /// Build and validate an FFNN.
+    ///
+    /// `initial[i]` is the input value (inputs) or bias (non-inputs).
+    pub fn new(
+        kinds: Vec<NeuronKind>,
+        initial: Vec<f32>,
+        conns: Vec<Conn>,
+    ) -> Result<Ffnn, GraphError> {
+        assert_eq!(kinds.len(), initial.len(), "kinds/initial length mismatch");
+        let n = kinds.len();
+
+        for (ci, c) in conns.iter().enumerate() {
+            if c.src as usize >= n || c.dst as usize >= n {
+                return Err(GraphError::BadEndpoint { conn: ci });
+            }
+            if c.src == c.dst {
+                return Err(GraphError::SelfLoop { conn: ci });
+            }
+            if kinds[c.dst as usize] == NeuronKind::Input {
+                return Err(GraphError::InputWithIncoming { neuron: c.dst });
+            }
+        }
+
+        // CSR adjacency.
+        let (in_off, in_idx) = csr(n, conns.iter().map(|c| c.dst));
+        let (out_off, out_idx) = csr(n, conns.iter().map(|c| c.src));
+
+        // Duplicate detection: per dst, check repeated src.
+        for v in 0..n {
+            let lo = in_off[v] as usize;
+            let hi = in_off[v + 1] as usize;
+            let mut srcs: Vec<NeuronId> =
+                in_idx[lo..hi].iter().map(|&ci| conns[ci as usize].src).collect();
+            srcs.sort_unstable();
+            for w in srcs.windows(2) {
+                if w[0] == w[1] {
+                    // Find the later of the two duplicates for the report.
+                    let dup = in_idx[lo..hi]
+                        .iter()
+                        .filter(|&&ci| conns[ci as usize].src == w[0])
+                        .map(|&ci| ci as usize)
+                        .max()
+                        .unwrap();
+                    return Err(GraphError::Duplicate { conn: dup });
+                }
+            }
+        }
+
+        let net = Ffnn {
+            conns,
+            kinds,
+            initial,
+            in_off,
+            in_idx,
+            out_off,
+            out_idx,
+            layer_of: None,
+        };
+        // Acyclicity via Kahn on neurons.
+        if net.neuron_topo_order().is_none() {
+            return Err(GraphError::Cyclic);
+        }
+        Ok(net)
+    }
+
+    /// Attach layer metadata (used by layered generators and the
+    /// layer-wise engines). `layer_of[i]` must be consistent with edges
+    /// (strictly increasing along every connection).
+    pub fn with_layers(mut self, layer_of: Vec<u32>) -> Ffnn {
+        debug_assert_eq!(layer_of.len(), self.n_neurons());
+        debug_assert!(self
+            .conns
+            .iter()
+            .all(|c| layer_of[c.src as usize] < layer_of[c.dst as usize]));
+        self.layer_of = Some(layer_of);
+        self
+    }
+
+    // ----- sizes (paper notation) ----------------------------------------
+
+    /// `N`: number of neurons.
+    pub fn n_neurons(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// `W`: number of connections.
+    pub fn n_conns(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// `I`: number of input neurons.
+    pub fn n_inputs(&self) -> usize {
+        self.kinds.iter().filter(|k| **k == NeuronKind::Input).count()
+    }
+
+    /// `S`: number of output neurons.
+    pub fn n_outputs(&self) -> usize {
+        self.kinds.iter().filter(|k| **k == NeuronKind::Output).count()
+    }
+
+    // ----- accessors ------------------------------------------------------
+
+    pub fn conns(&self) -> &[Conn] {
+        &self.conns
+    }
+
+    pub fn conn(&self, ci: usize) -> Conn {
+        self.conns[ci]
+    }
+
+    pub fn kind(&self, n: NeuronId) -> NeuronKind {
+        self.kinds[n as usize]
+    }
+
+    pub fn kinds(&self) -> &[NeuronKind] {
+        &self.kinds
+    }
+
+    /// Input value (inputs) or bias (others).
+    pub fn initial(&self, n: NeuronId) -> f32 {
+        self.initial[n as usize]
+    }
+
+    pub fn initials(&self) -> &[f32] {
+        &self.initial
+    }
+
+    pub fn set_initials(&mut self, values: Vec<f32>) {
+        assert_eq!(values.len(), self.n_neurons());
+        self.initial = values;
+    }
+
+    pub fn in_conns(&self, n: NeuronId) -> &[u32] {
+        let lo = self.in_off[n as usize] as usize;
+        let hi = self.in_off[n as usize + 1] as usize;
+        &self.in_idx[lo..hi]
+    }
+
+    pub fn out_conns(&self, n: NeuronId) -> &[u32] {
+        let lo = self.out_off[n as usize] as usize;
+        let hi = self.out_off[n as usize + 1] as usize;
+        &self.out_idx[lo..hi]
+    }
+
+    pub fn in_degree(&self, n: NeuronId) -> usize {
+        self.in_conns(n).len()
+    }
+
+    pub fn out_degree(&self, n: NeuronId) -> usize {
+        self.out_conns(n).len()
+    }
+
+    pub fn mean_in_degree(&self) -> f64 {
+        let non_input = self.n_neurons() - self.n_inputs();
+        if non_input == 0 {
+            0.0
+        } else {
+            self.n_conns() as f64 / non_input as f64
+        }
+    }
+
+    pub fn layer_of(&self) -> Option<&[u32]> {
+        self.layer_of.as_deref()
+    }
+
+    /// Number of layers if layered.
+    pub fn n_layers(&self) -> Option<usize> {
+        self.layer_of
+            .as_ref()
+            .map(|l| l.iter().copied().max().map_or(0, |m| m as usize + 1))
+    }
+
+    /// Neuron ids grouped per layer (requires layer metadata).
+    pub fn layers(&self) -> Option<Vec<Vec<NeuronId>>> {
+        let layer_of = self.layer_of.as_ref()?;
+        let n_layers = self.n_layers()?;
+        let mut layers = vec![Vec::new(); n_layers];
+        for (i, &l) in layer_of.iter().enumerate() {
+            layers[l as usize].push(i as NeuronId);
+        }
+        Some(layers)
+    }
+
+    pub fn input_ids(&self) -> Vec<NeuronId> {
+        self.ids_of(NeuronKind::Input)
+    }
+
+    pub fn output_ids(&self) -> Vec<NeuronId> {
+        self.ids_of(NeuronKind::Output)
+    }
+
+    fn ids_of(&self, kind: NeuronKind) -> Vec<NeuronId> {
+        self.kinds
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k == kind)
+            .map(|(i, _)| i as NeuronId)
+            .collect()
+    }
+
+    /// Edge density relative to a layered dense MLP with the same layer
+    /// sizes (only meaningful for layered nets); otherwise vs N².
+    pub fn density(&self) -> f64 {
+        if let Some(layers) = self.layers() {
+            let dense: usize = layers.windows(2).map(|w| w[0].len() * w[1].len()).sum();
+            if dense == 0 {
+                return 0.0;
+            }
+            self.n_conns() as f64 / dense as f64
+        } else {
+            self.n_conns() as f64 / (self.n_neurons() as f64).powi(2)
+        }
+    }
+
+    // ----- topology -------------------------------------------------------
+
+    /// Kahn topological order of neurons; `None` if cyclic.
+    pub fn neuron_topo_order(&self) -> Option<Vec<NeuronId>> {
+        let n = self.n_neurons();
+        let mut indeg: Vec<u32> = (0..n).map(|i| self.in_degree(i as NeuronId) as u32).collect();
+        let mut queue: Vec<NeuronId> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head];
+            head += 1;
+            order.push(v);
+            for &ci in self.out_conns(v) {
+                let d = self.conns[ci as usize].dst;
+                indeg[d as usize] -= 1;
+                if indeg[d as usize] == 0 {
+                    queue.push(d);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// True if the *undirected* version of the graph is connected
+    /// (isolated neurons make it disconnected). The paper's theorems
+    /// assume connected FFNNs.
+    pub fn is_connected(&self) -> bool {
+        let n = self.n_neurons();
+        if n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            let neighbors = self
+                .out_conns(v)
+                .iter()
+                .map(|&ci| self.conns[ci as usize].dst)
+                .chain(self.in_conns(v).iter().map(|&ci| self.conns[ci as usize].src));
+            for u in neighbors {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == n
+    }
+
+    /// Remove neurons with no connections at all (pruning can isolate
+    /// neurons; the paper's counts assume a connected network). Relabels
+    /// ids compactly, preserving relative order; drops layer metadata
+    /// remapping consistently.
+    pub fn drop_isolated(&self) -> Ffnn {
+        let keep: Vec<bool> = (0..self.n_neurons())
+            .map(|i| self.in_degree(i as u32) > 0 || self.out_degree(i as u32) > 0)
+            .collect();
+        let mut remap = vec![u32::MAX; self.n_neurons()];
+        let mut kinds = Vec::new();
+        let mut initial = Vec::new();
+        let mut layer_of = self.layer_of.as_ref().map(|_| Vec::new());
+        for i in 0..self.n_neurons() {
+            if keep[i] {
+                remap[i] = kinds.len() as u32;
+                kinds.push(self.kinds[i]);
+                initial.push(self.initial[i]);
+                if let (Some(lo), Some(src)) = (&mut layer_of, self.layer_of.as_ref()) {
+                    lo.push(src[i]);
+                }
+            }
+        }
+        let conns: Vec<Conn> = self
+            .conns
+            .iter()
+            .map(|c| Conn {
+                src: remap[c.src as usize],
+                dst: remap[c.dst as usize],
+                weight: c.weight,
+            })
+            .collect();
+        let net = Ffnn::new(kinds, initial, conns).expect("drop_isolated preserves validity");
+        match layer_of {
+            Some(lo) => net.with_layers(lo),
+            None => net,
+        }
+    }
+
+    /// Short human-readable description.
+    pub fn describe(&self) -> String {
+        format!(
+            "FFNN: N={} (I={}, S={}), W={}, mean in-degree {:.2}{}",
+            self.n_neurons(),
+            self.n_inputs(),
+            self.n_outputs(),
+            self.n_conns(),
+            self.mean_in_degree(),
+            match self.n_layers() {
+                Some(l) => format!(", {l} layers"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+/// Build CSR offsets/indices for `n` buckets from a key iterator over the
+/// connection list (key = bucket of connection i).
+fn csr(n: usize, keys: impl Iterator<Item = NeuronId> + Clone) -> (Vec<u32>, Vec<u32>) {
+    let mut off = vec![0u32; n + 1];
+    for k in keys.clone() {
+        off[k as usize + 1] += 1;
+    }
+    for i in 0..n {
+        off[i + 1] += off[i];
+    }
+    let mut cursor = off.clone();
+    let total = off[n] as usize;
+    let mut idx = vec![0u32; total];
+    for (ci, k) in keys.enumerate() {
+        idx[cursor[k as usize] as usize] = ci as u32;
+        cursor[k as usize] += 1;
+    }
+    (off, idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The running example: 2 inputs, 1 hidden, 1 output, diamond shape.
+    pub(crate) fn diamond() -> Ffnn {
+        Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+            ],
+            vec![1.0, 2.0, 0.5, -0.5],
+            vec![
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 2.0 },
+                Conn { src: 2, dst: 3, weight: 3.0 },
+                Conn { src: 0, dst: 3, weight: 4.0 }, // skip connection
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sizes_match_paper_notation() {
+        let net = diamond();
+        assert_eq!(net.n_neurons(), 4); // N
+        assert_eq!(net.n_conns(), 4); // W
+        assert_eq!(net.n_inputs(), 2); // I
+        assert_eq!(net.n_outputs(), 1); // S
+    }
+
+    #[test]
+    fn adjacency_csr() {
+        let net = diamond();
+        assert_eq!(net.in_conns(2), &[0, 1]);
+        assert_eq!(net.in_conns(3), &[2, 3]);
+        assert_eq!(net.out_conns(0), &[0, 3]);
+        assert_eq!(net.in_degree(0), 0);
+        assert_eq!(net.out_degree(2), 1);
+    }
+
+    #[test]
+    fn topo_order_valid() {
+        let net = diamond();
+        let order = net.neuron_topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &v) in order.iter().enumerate() {
+                p[v as usize] = i;
+            }
+            p
+        };
+        for c in net.conns() {
+            assert!(pos[c.src as usize] < pos[c.dst as usize]);
+        }
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let e = Ffnn::new(
+            vec![NeuronKind::Hidden, NeuronKind::Output],
+            vec![0.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 1, dst: 0, weight: 1.0 },
+            ],
+        )
+        .unwrap_err();
+        assert_eq!(e, GraphError::Cyclic);
+    }
+
+    #[test]
+    fn rejects_input_with_incoming() {
+        let e = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Input],
+            vec![0.0, 0.0],
+            vec![Conn { src: 0, dst: 1, weight: 1.0 }],
+        )
+        .unwrap_err();
+        assert_eq!(e, GraphError::InputWithIncoming { neuron: 1 });
+    }
+
+    #[test]
+    fn rejects_self_loop_and_duplicate() {
+        let e = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Output],
+            vec![0.0, 0.0],
+            vec![Conn { src: 1, dst: 1, weight: 1.0 }],
+        )
+        .unwrap_err();
+        assert!(matches!(e, GraphError::SelfLoop { .. }));
+
+        let e = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Output],
+            vec![0.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 0, dst: 1, weight: 2.0 },
+            ],
+        )
+        .unwrap_err();
+        assert!(matches!(e, GraphError::Duplicate { .. }));
+    }
+
+    #[test]
+    fn rejects_bad_endpoint() {
+        let e = Ffnn::new(
+            vec![NeuronKind::Input],
+            vec![0.0],
+            vec![Conn { src: 0, dst: 5, weight: 1.0 }],
+        )
+        .unwrap_err();
+        assert!(matches!(e, GraphError::BadEndpoint { .. }));
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(diamond().is_connected());
+        let disconnected = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Output, NeuronKind::Hidden],
+            vec![0.0; 3],
+            vec![Conn { src: 0, dst: 1, weight: 1.0 }],
+        )
+        .unwrap();
+        assert!(!disconnected.is_connected());
+    }
+
+    #[test]
+    fn drop_isolated_compacts() {
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Hidden, NeuronKind::Output],
+            vec![1.0, 9.0, 2.0],
+            vec![Conn { src: 0, dst: 2, weight: 1.0 }],
+        )
+        .unwrap();
+        let compact = net.drop_isolated();
+        assert_eq!(compact.n_neurons(), 2);
+        assert_eq!(compact.n_conns(), 1);
+        assert_eq!(compact.initial(1), 2.0);
+        assert!(compact.is_connected());
+    }
+
+    #[test]
+    fn layers_metadata() {
+        let net = diamond(); // not layered: skip connection crosses layers
+        assert!(net.layer_of().is_none());
+        let layered = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Hidden, NeuronKind::Output],
+            vec![0.0; 3],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 1.0 },
+            ],
+        )
+        .unwrap()
+        .with_layers(vec![0, 1, 2]);
+        assert_eq!(layered.n_layers(), Some(3));
+        assert_eq!(layered.layers().unwrap()[1], vec![1]);
+        assert!((layered.density() - 1.0).abs() < 1e-9);
+    }
+}

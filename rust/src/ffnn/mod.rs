@@ -1,0 +1,15 @@
+//! Sparse feed-forward neural networks as weighted DAGs (paper §II).
+//!
+//! An FFNN is a list of weighted connections `(i, j, w_ij)` over neurons
+//! that each carry one extra value: the input value for input neurons, the
+//! bias for everything else. No weight sharing, arbitrary DAG topology
+//! (skip connections allowed) — exactly the model of the paper.
+
+pub mod bandwidth;
+pub mod bert;
+pub mod compact_growth;
+pub mod extremal;
+pub mod generate;
+pub mod graph;
+pub mod serde;
+pub mod topo;

@@ -1,0 +1,182 @@
+//! FFNN ⇄ JSON serialization: network files under `configs/`/`results/`
+//! and the interchange format consumed by the Python AOT path (model
+//! shapes + ELL packing parameters are derived from these files).
+
+use super::graph::{Conn, Ffnn, NeuronKind};
+use super::topo::ConnOrder;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Serialize a network (and optionally a connection order) to JSON.
+pub fn net_to_json(net: &Ffnn, order: Option<&ConnOrder>) -> Json {
+    let kinds: Vec<Json> = net
+        .kinds()
+        .iter()
+        .map(|k| {
+            Json::Str(
+                match k {
+                    NeuronKind::Input => "input",
+                    NeuronKind::Hidden => "hidden",
+                    NeuronKind::Output => "output",
+                }
+                .to_string(),
+            )
+        })
+        .collect();
+    let initial: Vec<Json> = net.initials().iter().map(|&v| Json::Num(v as f64)).collect();
+    let conns: Vec<Json> = net
+        .conns()
+        .iter()
+        .map(|c| {
+            Json::Arr(vec![
+                Json::Num(c.src as f64),
+                Json::Num(c.dst as f64),
+                Json::Num(c.weight as f64),
+            ])
+        })
+        .collect();
+    let mut j = Json::obj()
+        .set("format", "sparseflow-ffnn-v1")
+        .set("kinds", Json::Arr(kinds))
+        .set("initial", Json::Arr(initial))
+        .set("conns", Json::Arr(conns));
+    if let Some(layer_of) = net.layer_of() {
+        j = j.set(
+            "layer_of",
+            Json::Arr(layer_of.iter().map(|&l| Json::Num(l as f64)).collect()),
+        );
+    }
+    if let Some(order) = order {
+        j = j.set(
+            "order",
+            Json::Arr(order.as_slice().iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+    }
+    j
+}
+
+/// Deserialize a network (+ optional stored order).
+pub fn net_from_json(j: &Json) -> anyhow::Result<(Ffnn, Option<ConnOrder>)> {
+    anyhow::ensure!(
+        j.get("format").and_then(Json::as_str) == Some("sparseflow-ffnn-v1"),
+        "unknown or missing format tag"
+    );
+    let kinds: Vec<NeuronKind> = j
+        .get("kinds")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing kinds"))?
+        .iter()
+        .map(|k| match k.as_str() {
+            Some("input") => Ok(NeuronKind::Input),
+            Some("hidden") => Ok(NeuronKind::Hidden),
+            Some("output") => Ok(NeuronKind::Output),
+            other => Err(anyhow::anyhow!("bad neuron kind {other:?}")),
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let initial: Vec<f32> = j
+        .get("initial")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing initial"))?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| anyhow::anyhow!("bad initial")))
+        .collect::<anyhow::Result<_>>()?;
+    let conns: Vec<Conn> = j
+        .get("conns")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing conns"))?
+        .iter()
+        .map(|c| {
+            let a = c.as_arr().ok_or_else(|| anyhow::anyhow!("conn not an array"))?;
+            anyhow::ensure!(a.len() == 3, "conn must be [src, dst, w]");
+            Ok(Conn {
+                src: a[0].as_u64().ok_or_else(|| anyhow::anyhow!("bad src"))? as u32,
+                dst: a[1].as_u64().ok_or_else(|| anyhow::anyhow!("bad dst"))? as u32,
+                weight: a[2].as_f64().ok_or_else(|| anyhow::anyhow!("bad weight"))? as f32,
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut net = Ffnn::new(kinds, initial, conns).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(layers) = j.get("layer_of").and_then(Json::as_arr) {
+        let layer_of: Vec<u32> = layers
+            .iter()
+            .map(|l| l.as_u64().map(|v| v as u32).ok_or_else(|| anyhow::anyhow!("bad layer")))
+            .collect::<anyhow::Result<_>>()?;
+        net = net.with_layers(layer_of);
+    }
+    let order = match j.get("order").and_then(Json::as_arr) {
+        Some(arr) => {
+            let perm: Vec<u32> = arr
+                .iter()
+                .map(|v| v.as_u64().map(|x| x as u32).ok_or_else(|| anyhow::anyhow!("bad order")))
+                .collect::<anyhow::Result<_>>()?;
+            let order = ConnOrder::from_perm(perm);
+            anyhow::ensure!(order.is_topological(&net), "stored order is not topological");
+            Some(order)
+        }
+        None => None,
+    };
+    Ok((net, order))
+}
+
+pub fn save_net(net: &Ffnn, order: Option<&ConnOrder>, path: &Path) -> anyhow::Result<()> {
+    net_to_json(net, order)
+        .to_file(path)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
+pub fn load_net(path: &Path) -> anyhow::Result<(Ffnn, Option<ConnOrder>)> {
+    let j = Json::from_file(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    net_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(3, 12, 0.3), &mut rng);
+        let order = two_optimal_order(&net);
+        let j = net_to_json(&net, Some(&order));
+        let (net2, order2) = net_from_json(&j).unwrap();
+        assert_eq!(net.conns(), net2.conns());
+        assert_eq!(net.kinds(), net2.kinds());
+        assert_eq!(net.layer_of(), net2.layer_of());
+        assert_eq!(order2.unwrap().as_slice(), order.as_slice());
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let mut rng = Pcg64::seed_from(2);
+        let net = random_mlp(&MlpSpec::new(2, 6, 0.5), &mut rng);
+        let dir = std::env::temp_dir().join("sparseflow-serde-test");
+        let path = dir.join("net.json");
+        save_net(&net, None, &path).unwrap();
+        let (net2, order) = load_net(&path).unwrap();
+        assert_eq!(net.conns(), net2.conns());
+        assert!(order.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let j = Json::obj().set("format", "bogus");
+        assert!(net_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_non_topological_order() {
+        let mut rng = Pcg64::seed_from(3);
+        let net = random_mlp(&MlpSpec::new(2, 4, 0.5), &mut rng);
+        let mut j = net_to_json(&net, None);
+        // Reversed identity is (generically) not topological.
+        let rev: Vec<Json> = (0..net.n_conns() as u64).rev().map(Json::from).collect();
+        j = j.set("order", Json::Arr(rev));
+        assert!(net_from_json(&j).is_err());
+    }
+}

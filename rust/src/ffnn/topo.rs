@@ -1,0 +1,268 @@
+//! Topological orders of *connections* (paper §II.A).
+//!
+//! A computation strategy = a topological order of the connections + an
+//! eviction policy. This module provides the order abstraction
+//! ([`ConnOrder`]), validity checking, and the two canonical constructions:
+//!
+//! * [`two_optimal_order`] — the proof-of-Theorem-1 order: fix a topological
+//!   order of the non-input neurons and sort connections by the position of
+//!   their *output* neuron. Guarantees ≤ 2·(W+N−I) total I/Os.
+//! * [`layerwise_order`] — matrix-vector-multiplication order: connections
+//!   grouped layer after layer (the "standard way"; Appendix A orders the
+//!   initial layout like this, which coincides with the 2-optimal
+//!   construction on layered nets).
+
+use super::graph::{Ffnn, NeuronId};
+
+/// A permutation of connection indices; `order[k]` is the index (into
+/// `Ffnn::conns()`) of the k-th connection processed by Algorithm 1.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConnOrder {
+    perm: Vec<u32>,
+}
+
+impl ConnOrder {
+    /// Identity order (connections as stored).
+    pub fn identity(n_conns: usize) -> ConnOrder {
+        ConnOrder {
+            perm: (0..n_conns as u32).collect(),
+        }
+    }
+
+    pub fn from_perm(perm: Vec<u32>) -> ConnOrder {
+        ConnOrder { perm }
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        &self.perm
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u32] {
+        &mut self.perm
+    }
+
+    /// Position of each connection in the order (inverse permutation).
+    pub fn positions(&self) -> Vec<u32> {
+        let mut pos = vec![0u32; self.perm.len()];
+        for (k, &ci) in self.perm.iter().enumerate() {
+            pos[ci as usize] = k as u32;
+        }
+        pos
+    }
+
+    /// Check that this is a permutation and a *topological* order of the
+    /// connections: whenever `e_i.dst == e_j.src`, `e_i` comes first.
+    pub fn is_topological(&self, net: &Ffnn) -> bool {
+        if self.perm.len() != net.n_conns() {
+            return false;
+        }
+        let mut seen = vec![false; net.n_conns()];
+        for &ci in &self.perm {
+            let ci = ci as usize;
+            if ci >= net.n_conns() || seen[ci] {
+                return false;
+            }
+            seen[ci] = true;
+        }
+        // For each neuron: the last incoming connection must precede the
+        // first outgoing connection.
+        let pos = self.positions();
+        for v in 0..net.n_neurons() as NeuronId {
+            let last_in = net.in_conns(v).iter().map(|&c| pos[c as usize]).max();
+            let first_out = net.out_conns(v).iter().map(|&c| pos[c as usize]).min();
+            if let (Some(li), Some(fo)) = (last_in, first_out) {
+                if li >= fo {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// The 2-optimal order from the proof of Theorem 1: take a topological
+/// order of the neurons, then sort connections by (position of dst,
+/// position of src). All connections ending in the same neuron are
+/// consecutive ("intervals"), so each partial sum is produced start-to-
+/// finish without interleaving — giving the ≤ 2·(W+N−I) guarantee.
+pub fn two_optimal_order(net: &Ffnn) -> ConnOrder {
+    let topo = net
+        .neuron_topo_order()
+        .expect("Ffnn construction guarantees acyclicity");
+    order_by_neuron_positions(net, &topo)
+}
+
+/// Layer-after-layer order (the "standard" matrix-vector way): requires
+/// layer metadata; connections sorted by (dst layer, dst id, src id).
+/// On layered MLPs this equals [`two_optimal_order`] with the
+/// layer-major neuron order — it is the paper's *Initial* configuration.
+pub fn layerwise_order(net: &Ffnn) -> ConnOrder {
+    let layer_of = net
+        .layer_of()
+        .expect("layerwise_order requires layer metadata");
+    let mut neurons: Vec<NeuronId> = (0..net.n_neurons() as u32).collect();
+    neurons.sort_by_key(|&v| (layer_of[v as usize], v));
+    order_by_neuron_positions(net, &neurons)
+}
+
+/// Order connections by (pos(dst), pos(src)) for a given neuron order.
+pub fn order_by_neuron_positions(net: &Ffnn, neuron_order: &[NeuronId]) -> ConnOrder {
+    let mut pos = vec![0u32; net.n_neurons()];
+    for (i, &v) in neuron_order.iter().enumerate() {
+        pos[v as usize] = i as u32;
+    }
+    let mut perm: Vec<u32> = (0..net.n_conns() as u32).collect();
+    perm.sort_by_key(|&ci| {
+        let c = net.conn(ci as usize);
+        (pos[c.dst as usize], pos[c.src as usize])
+    });
+    ConnOrder { perm }
+}
+
+/// Derive a topological order of the *neurons* from a topological order of
+/// the connections (used by Theorem 2's proof direction and by the
+/// streaming compiler): neurons ordered by the position of their last
+/// incoming connection; sources (inputs / bias-only neurons) come first,
+/// ordered by first use.
+pub fn neuron_order_from_conn_order(net: &Ffnn, order: &ConnOrder) -> Vec<NeuronId> {
+    let pos = order.positions();
+    let w = net.n_conns() as u32;
+    let mut key: Vec<(u32, u32, NeuronId)> = (0..net.n_neurons() as u32)
+        .map(|v| {
+            let last_in = net.in_conns(v).iter().map(|&c| pos[c as usize]).max();
+            match last_in {
+                // Finished at its last incoming connection.
+                Some(li) => (li + 1, 1, v),
+                // Source: available from the start; order by first use.
+                None => {
+                    let first_use = net
+                        .out_conns(v)
+                        .iter()
+                        .map(|&c| pos[c as usize])
+                        .min()
+                        .unwrap_or(w);
+                    (first_use, 0, v)
+                }
+            }
+        })
+        .collect();
+    key.sort_unstable();
+    key.into_iter().map(|(_, _, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::graph::{Conn, NeuronKind};
+    use crate::util::rng::Pcg64;
+
+    fn diamond() -> Ffnn {
+        Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+            ],
+            vec![1.0, 2.0, 0.5, -0.5],
+            vec![
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 2.0 },
+                Conn { src: 2, dst: 3, weight: 3.0 },
+                Conn { src: 0, dst: 3, weight: 4.0 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn identity_on_diamond_is_topological() {
+        let net = diamond();
+        assert!(ConnOrder::identity(4).is_topological(&net));
+    }
+
+    #[test]
+    fn non_topological_detected() {
+        let net = diamond();
+        // Putting conn 2 (2->3) before conn 0 (0->2) violates topology.
+        let order = ConnOrder::from_perm(vec![2, 0, 1, 3]);
+        assert!(!order.is_topological(&net));
+    }
+
+    #[test]
+    fn non_permutation_detected() {
+        let net = diamond();
+        assert!(!ConnOrder::from_perm(vec![0, 0, 1, 2]).is_topological(&net));
+        assert!(!ConnOrder::from_perm(vec![0, 1]).is_topological(&net));
+    }
+
+    #[test]
+    fn two_optimal_is_topological_and_interval() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(4, 30, 0.2), &mut rng);
+        let order = two_optimal_order(&net);
+        assert!(order.is_topological(&net));
+        // Interval property: connections with the same dst are consecutive.
+        let mut seen_dst: Vec<bool> = vec![false; net.n_neurons()];
+        let mut prev_dst = u32::MAX;
+        for &ci in order.as_slice() {
+            let dst = net.conn(ci as usize).dst;
+            if dst != prev_dst {
+                assert!(!seen_dst[dst as usize], "dst {dst} interval split");
+                seen_dst[dst as usize] = true;
+                prev_dst = dst;
+            }
+        }
+    }
+
+    #[test]
+    fn layerwise_is_topological() {
+        let mut rng = Pcg64::seed_from(2);
+        let net = random_mlp(&MlpSpec::new(5, 20, 0.3), &mut rng);
+        let order = layerwise_order(&net);
+        assert!(order.is_topological(&net));
+        // Layer-major: dst layers must be non-decreasing.
+        let layer_of = net.layer_of().unwrap();
+        let mut prev = 0;
+        for &ci in order.as_slice() {
+            let l = layer_of[net.conn(ci as usize).dst as usize];
+            assert!(l >= prev);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn positions_inverse() {
+        let order = ConnOrder::from_perm(vec![2, 0, 3, 1]);
+        let pos = order.positions();
+        for (k, &ci) in order.as_slice().iter().enumerate() {
+            assert_eq!(pos[ci as usize] as usize, k);
+        }
+    }
+
+    #[test]
+    fn neuron_order_from_conn_order_is_topological() {
+        let net = diamond();
+        let order = two_optimal_order(&net);
+        let norder = neuron_order_from_conn_order(&net, &order);
+        let mut pos = vec![0usize; net.n_neurons()];
+        for (i, &v) in norder.iter().enumerate() {
+            pos[v as usize] = i;
+        }
+        for c in net.conns() {
+            assert!(
+                pos[c.src as usize] < pos[c.dst as usize],
+                "neuron order must respect edges"
+            );
+        }
+    }
+}

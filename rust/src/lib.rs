@@ -1,0 +1,77 @@
+//! # sparseflow
+//!
+//! I/O-efficient sparse neural network inference, reproducing
+//! *"A Theory of I/O-Efficient Sparse Neural Network Inference"*
+//! (Gleinig, Ben-Nun, Hoefler, 2023).
+//!
+//! The crate is organized around the paper's pipeline:
+//!
+//! 1. [`ffnn`] — sparse FFNNs as weighted DAGs: generators (random MLPs,
+//!    Compact Growth, BERT-like pruned encoder MLPs), topological orders of
+//!    connections, extremal constructions, bandwidth.
+//! 2. [`memory`] + [`sim`] — the two-level memory cost model (fast memory of
+//!    size `M`, slow memory unlimited) and the Algorithm-1 inference
+//!    simulator that counts read-/write-I/Os under LRU / RR / MIN eviction.
+//! 3. [`bounds`] — Theorem-1 lower/upper bounds on I/Os.
+//! 4. [`reorder`] — Connection Reordering: simulated annealing over
+//!    topological connection orders (window moves, `2^{-Δ·t^σ}` updates).
+//! 5. [`exec`] — real numeric engines: the streaming executor that runs a
+//!    (reordered) connection order on batched inputs, the layer-wise CSR
+//!    baseline (CSRMM), and a dense reference.
+//! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
+//!    artifacts and executes them from Rust.
+//! 7. [`coordinator`] — batched inference serving: request queue, dynamic
+//!    batcher, engine router, worker pool, metrics, TCP front-end.
+//!
+//! Everything is deterministic given a seed; see `util::rng`.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use sparseflow::prelude::*;
+//!
+//! // A random sparse MLP per the paper's Appendix A (depth 4, width 8, 30% dense).
+//! let mut rng = Pcg64::seed_from(42);
+//! let net = random_mlp(&MlpSpec::new(4, 8, 0.30), &mut rng);
+//! let order = two_optimal_order(&net);
+//!
+//! // Count I/Os with fast memory M=16 under Belady's MIN policy.
+//! let stats = simulate(&net, &order, 16, PolicyKind::Min);
+//! let b = theorem1_bounds(&net);
+//! assert!(b.total_lower <= stats.total() && stats.total() <= b.total_upper);
+//! ```
+
+pub mod bench;
+pub mod bounds;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod ffnn;
+pub mod memory;
+pub mod reorder;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenient re-exports of the most common types and entry points.
+pub mod prelude {
+    pub use crate::bounds::{theorem1_bounds, Theorem1Bounds};
+    pub use crate::exec::{
+        csr::CsrLayer,
+        layerwise::LayerwiseEngine,
+        stream::{StreamProgram, StreamingEngine},
+        Engine,
+    };
+    pub use crate::ffnn::{
+        bert::{bert_mlp, BertSpec},
+        compact_growth::{compact_growth, CompactGrowthSpec},
+        generate::{random_mlp, MlpSpec},
+        graph::{Conn, Ffnn, NeuronId},
+        topo::{layerwise_order, two_optimal_order, ConnOrder},
+    };
+    pub use crate::memory::PolicyKind;
+    pub use crate::reorder::annealing::{reorder, AnnealConfig, AnnealReport};
+    pub use crate::sim::{simulate, IoStats};
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,399 @@
+//! `sparseflow` — the launcher.
+//!
+//! Subcommands:
+//!   generate   produce a network file (random MLP / pruned BERT / compact growth)
+//!   bounds     print the Theorem-1 I/O bounds of a network file
+//!   simulate   count I/Os of Algorithm-1 inference (policy × memory sweep)
+//!   reorder    run Connection Reordering and store the improved order
+//!   serve      serve a network over TCP (dynamic batching, line-JSON protocol)
+//!   client     send one inference request to a running server
+//!
+//! Every subcommand accepts `--help`. Configuration can also come from a
+//! JSON file via `--config` plus `--set key=value` overrides.
+
+use sparseflow::cli::Spec;
+use sparseflow::config::Config;
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
+use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::serde::{load_net, save_net};
+use sparseflow::prelude::*;
+use sparseflow::util::json::Json;
+use std::path::Path;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let code = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "bounds" => cmd_bounds(&args),
+        "simulate" => cmd_simulate(&args),
+        "reorder" => cmd_reorder(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "sparseflow — I/O-efficient sparse neural network inference\n\n\
+         USAGE: sparseflow <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 generate   produce a network file (mlp | bert | cg)\n\
+         \x20 bounds     Theorem-1 I/O bounds of a network file\n\
+         \x20 simulate   count I/Os under LRU/RR/MIN for given memory sizes\n\
+         \x20 reorder    Connection Reordering; writes the improved order\n\
+         \x20 serve      TCP inference server with dynamic batching\n\
+         \x20 client     send one request to a running server\n\n\
+         Run `sparseflow <subcommand> --help` for options."
+    );
+}
+
+fn parse_or_exit(spec: Spec, args: &[String]) -> sparseflow::cli::Args {
+    match spec.parse(args) {
+        Ok(a) => a,
+        Err(sparseflow::cli::CliError::Help(h)) => {
+            println!("{h}");
+            std::process::exit(0);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_generate(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow generate", "generate a network file")
+            .opt("kind", "mlp", "mlp | bert | cg")
+            .opt("out", "net.json", "output file")
+            .opt("width", "500", "mlp: width")
+            .opt("depth", "4", "mlp: depth")
+            .opt("density", "0.1", "mlp/bert: density")
+            .opt("d-model", "1024", "bert: d_model")
+            .opt("d-ff", "4096", "bert: d_ff")
+            .opt("mg", "100", "cg: design memory size")
+            .opt("seed", "1", "generator seed"),
+        args,
+    );
+    let mut rng = Pcg64::seed_from(a.u64("seed"));
+    let (net, order) = match a.str("kind") {
+        "mlp" => {
+            let net = random_mlp(
+                &MlpSpec::new(a.usize("depth"), a.usize("width"), a.f64("density")),
+                &mut rng,
+            );
+            (net, None)
+        }
+        "bert" => (
+            bert_mlp(
+                &BertSpec {
+                    d_model: a.usize("d-model"),
+                    d_ff: a.usize("d-ff"),
+                    density: a.f64("density"),
+                },
+                &mut rng,
+            ),
+            None,
+        ),
+        "cg" => {
+            let (net, order) = compact_growth(&CompactGrowthSpec::new(a.usize("mg")), &mut rng);
+            (net, Some(order))
+        }
+        other => {
+            eprintln!("unknown kind {other:?}");
+            return 2;
+        }
+    };
+    println!("{}", net.describe());
+    match save_net(&net, order.as_ref(), Path::new(a.str("out"))) {
+        Ok(()) => {
+            println!("wrote {}", a.str("out"));
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_bounds(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow bounds", "Theorem-1 bounds of a network file")
+            .positional("net", "network JSON file"),
+        args,
+    );
+    match load_net(Path::new(a.positional(0))) {
+        Ok((net, _)) => {
+            println!("{}", net.describe());
+            let b = theorem1_bounds(&net);
+            println!("{}", b.to_json().to_string_pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow simulate", "count Algorithm-1 I/Os")
+            .positional("net", "network JSON file (optionally with stored order)")
+            .opt("memories", "100", "fast-memory sizes, comma-separated")
+            .opt("policy", "all", "lru | rr | min | all")
+            .flag("stored-order", "use the order stored in the file (default: 2-optimal)"),
+        args,
+    );
+    let (net, stored) = match load_net(Path::new(a.positional(0))) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("{}", net.describe());
+    let order = if a.flag("stored-order") {
+        match stored {
+            Some(o) => o,
+            None => {
+                eprintln!("error: file has no stored order");
+                return 1;
+            }
+        }
+    } else {
+        two_optimal_order(&net)
+    };
+    let b = theorem1_bounds(&net);
+    println!("lower bound {} / upper bound {}", b.total_lower, b.total_upper);
+    let policies: Vec<PolicyKind> = match a.str("policy") {
+        "all" => PolicyKind::ALL.to_vec(),
+        p => match PolicyKind::parse(p) {
+            Some(p) => vec![p],
+            None => {
+                eprintln!("unknown policy {p:?}");
+                return 2;
+            }
+        },
+    };
+    for &m in &a.usize_list("memories") {
+        for &policy in &policies {
+            let s = simulate(&net, &order, m, policy);
+            println!("M={m:<6} {:<4} {s}", policy.name());
+        }
+    }
+    0
+}
+
+fn cmd_reorder(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow reorder", "Connection Reordering (simulated annealing)")
+            .positional("net", "network JSON file")
+            .opt("out", "-", "output file ('-' = overwrite input with the order)")
+            .opt("m", "100", "fast-memory size")
+            .opt("policy", "min", "eviction policy to tune for")
+            .opt("iters", "50000", "SA iterations T")
+            .opt("sigma", "0.2", "cooling exponent σ")
+            .opt("window", "0", "window size ws (0 = 4×mean in-degree)")
+            .opt("chains", "1", "parallel annealing chains (best wins)")
+            .opt("seed", "1", "SA seed")
+            .opt("config", "-", "JSON config file ('-' = none)")
+            .opt("set", "-", "config override key=value ('-' = none)"),
+        args,
+    );
+    let path = a.positional(0).to_string();
+    let (net, _) = match load_net(Path::new(&path)) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    // Config file + overrides can replace CLI defaults.
+    let mut config = match a.str("config") {
+        "-" => Config::empty(),
+        p => match Config::load(Path::new(p)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+    };
+    let ov = a.str("set");
+    if ov != "-" {
+        if let Err(e) = config.set_override(ov) {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    }
+
+    let policy = match PolicyKind::parse(&config.str("policy", a.str("policy"))) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy");
+            return 2;
+        }
+    };
+    let mut cfg = AnnealConfig::new(config.usize("m", a.usize("m")), policy, config.u64("iters", a.u64("iters")));
+    cfg.sigma = config.f64("sigma", a.f64("sigma"));
+    cfg.window = config.usize("window", a.usize("window"));
+    cfg.seed = a.u64("seed");
+
+    println!("{}", net.describe());
+    let initial = two_optimal_order(&net);
+    let chains = a.usize("chains");
+    let (best, rep) = if chains > 1 {
+        sparseflow::reorder::annealing::reorder_parallel(
+            &net,
+            &initial,
+            &cfg,
+            chains,
+            sparseflow::bench::figures::workers_default(),
+        )
+    } else {
+        reorder(&net, &initial, &cfg)
+    };
+    println!(
+        "reordered: {} → {} I/Os ({:.1}% reduction) in {:.1}s; lower bound {}",
+        rep.initial_ios,
+        rep.final_ios,
+        rep.reduction() * 100.0,
+        rep.elapsed_secs,
+        theorem1_bounds(&net).total_lower
+    );
+    let out = match a.str("out") {
+        "-" => path,
+        o => o.to_string(),
+    };
+    match save_net(&net, Some(&best), Path::new(&out)) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow serve", "TCP inference server")
+            .positional("net", "network JSON file (with optional stored order)")
+            .opt("addr", "127.0.0.1:7878", "bind address")
+            .opt("name", "default", "model name")
+            .opt("max-batch", "128", "dynamic batcher max batch size")
+            .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
+            .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
+        args,
+    );
+    let (net, stored) = match load_net(Path::new(a.positional(0))) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("{}", net.describe());
+    let order = stored.unwrap_or_else(|| two_optimal_order(&net));
+    let mut router = Router::new();
+    let name = a.str("name").to_string();
+    router.register(ModelVariant::new(
+        &name,
+        std::sync::Arc::new(StreamingEngine::new(&net, &order)) as std::sync::Arc<dyn Engine>,
+    ));
+    if a.flag("with-csr") && net.layer_of().is_some() {
+        router.register(ModelVariant::new(
+            &format!("{name}-csr"),
+            std::sync::Arc::new(LayerwiseEngine::new(&net)) as std::sync::Arc<dyn Engine>,
+        ));
+    }
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: a.usize("max-batch"),
+                max_wait: std::time::Duration::from_millis(a.u64("max-wait-ms")),
+            },
+        },
+    );
+    let frontend = match TcpFrontend::serve(server.handle(), a.str("addr")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("bind error: {e}");
+            return 1;
+        }
+    };
+    println!("serving model '{name}' on {} — Ctrl-C to stop", frontend.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("metrics: {}", server.metrics().snapshot().to_string_compact());
+    }
+}
+
+fn cmd_client(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow client", "send one request to a running server")
+            .opt("addr", "127.0.0.1:7878", "server address")
+            .opt("model", "default", "model name")
+            .opt("input", "", "comma-separated input values (required)"),
+        args,
+    );
+    let addr: std::net::SocketAddr = match a.str("addr").parse() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("bad --addr: {e}");
+            return 2;
+        }
+    };
+    let input: Vec<f32> = a
+        .str("input")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse().expect("numeric input"))
+        .collect();
+    let mut client = match TcpClient::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect error: {e}");
+            return 1;
+        }
+    };
+    match client.infer(a.str("model"), &input) {
+        Ok(out) => {
+            println!(
+                "{}",
+                Json::Arr(out.iter().map(|&v| Json::Num(v as f64)).collect()).to_string_compact()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

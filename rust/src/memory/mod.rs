@@ -1,0 +1,411 @@
+//! The two-level memory model (paper §II): a fast memory holding at most
+//! `M` same-size values and an unlimited slow memory. This module provides
+//! the resident-set bookkeeping and the three eviction policies of the
+//! paper — LRU, RR (round-robin) and MIN (Belady's optimal replacement,
+//! trivially implementable offline once the connection order is fixed).
+
+use crate::ffnn::graph::NeuronId;
+
+/// Eviction policy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Least-recently-used.
+    Lru,
+    /// Round-robin: a pointer cycles over memory slots; the value under
+    /// the pointer is evicted and replaced, then the pointer advances.
+    Rr,
+    /// Belady's MIN: evict the resident value whose next use is farthest
+    /// in the future (values never used again are preferred). Optimal for
+    /// a fixed reference string [Belady 1966].
+    Min,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(PolicyKind::Lru),
+            "rr" => Some(PolicyKind::Rr),
+            "min" => Some(PolicyKind::Min),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "LRU",
+            PolicyKind::Rr => "RR",
+            PolicyKind::Min => "MIN",
+        }
+    }
+
+    pub const ALL: [PolicyKind; 3] = [PolicyKind::Lru, PolicyKind::Rr, PolicyKind::Min];
+}
+
+/// Marker for "never used again" in MIN next-use tracking.
+pub const NEVER: u32 = u32::MAX;
+
+/// The set of neuron values resident in fast memory, with policy state.
+///
+/// Capacity is `M − 1`: one slot of the fast memory is transiently
+/// occupied by the in-flight connection triple (see DESIGN.md §7), so at
+/// most `M − 1` neuron values are resident while an update executes.
+#[derive(Clone, Debug)]
+pub struct ResidentSet {
+    policy: PolicyKind,
+    capacity: usize,
+    /// Resident neurons, unordered (swap-remove on eviction).
+    members: Vec<NeuronId>,
+    /// Victim-selection key per member slot, kept parallel to `members`:
+    /// last-touch time for LRU, next-use position for MIN (unused by RR).
+    /// Keeping keys contiguous makes the eviction scan cache-friendly
+    /// (§Perf: the scan dominated MIN/LRU simulation time).
+    keys: Vec<u32>,
+    /// Index into `members`, or `NEVER` if not resident.
+    slot_of: Vec<u32>,
+    /// RR pointer into `members`.
+    rr_ptr: usize,
+}
+
+impl ResidentSet {
+    pub fn new(policy: PolicyKind, m: usize, n_neurons: usize) -> ResidentSet {
+        assert!(m >= 3, "the model requires M ≥ 3 (got {m})");
+        let capacity = m - 1;
+        ResidentSet {
+            policy,
+            capacity,
+            members: Vec::with_capacity(capacity.min(n_neurons)),
+            keys: Vec::with_capacity(capacity.min(n_neurons)),
+            slot_of: vec![NEVER; n_neurons],
+            rr_ptr: 0,
+        }
+    }
+
+    /// Re-target an existing set (reusing allocations) for a new run.
+    pub fn reconfigure(&mut self, policy: PolicyKind, m: usize, n_neurons: usize) {
+        assert!(m >= 3, "the model requires M ≥ 3 (got {m})");
+        self.reset();
+        self.policy = policy;
+        self.capacity = m - 1;
+        if self.slot_of.len() != n_neurons {
+            self.slot_of = vec![NEVER; n_neurons];
+        }
+    }
+
+    /// Reset to empty without reallocating (reused across SA iterations).
+    pub fn reset(&mut self) {
+        for &v in &self.members {
+            self.slot_of[v as usize] = NEVER;
+        }
+        self.members.clear();
+        self.keys.clear();
+        self.rr_ptr = 0;
+    }
+
+    #[inline]
+    pub fn contains(&self, v: NeuronId) -> bool {
+        self.slot_of[v as usize] != NEVER
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.members.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn members(&self) -> &[NeuronId] {
+        &self.members
+    }
+
+    /// Record a use of a resident value at time `now` with its next use at
+    /// `next` (MIN bookkeeping; `NEVER` if it will not be used again).
+    #[inline]
+    pub fn touch(&mut self, v: NeuronId, now: u32, next: u32) {
+        debug_assert!(self.contains(v));
+        let slot = self.slot_of[v as usize] as usize;
+        self.keys[slot] = match self.policy {
+            PolicyKind::Lru => now,
+            PolicyKind::Min => next,
+            PolicyKind::Rr => 0,
+        };
+    }
+
+    /// Insert a (non-resident) value; caller must have made room.
+    #[inline]
+    pub fn insert(&mut self, v: NeuronId, now: u32, next: u32) {
+        debug_assert!(!self.contains(v));
+        debug_assert!(!self.is_full(), "insert into full resident set");
+        self.slot_of[v as usize] = self.members.len() as u32;
+        self.members.push(v);
+        self.keys.push(match self.policy {
+            PolicyKind::Lru => now,
+            PolicyKind::Min => next,
+            PolicyKind::Rr => 0,
+        });
+    }
+
+    /// Choose a victim according to the policy and remove it. `pinned`
+    /// values (the endpoints of the in-flight connection) are skipped.
+    ///
+    /// Panics if every resident value is pinned (cannot happen for M ≥ 3:
+    /// at most one endpoint is pinned while the other is being loaded).
+    pub fn evict(&mut self, pinned: [NeuronId; 2]) -> NeuronId {
+        debug_assert!(!self.members.is_empty());
+        let victim_slot = match self.policy {
+            // Branch-light explicit scans over the contiguous key array;
+            // the pinned endpoints are fixed up afterwards (at most two
+            // slots), keeping the hot loop comparison-only.
+            PolicyKind::Lru => {
+                let slot = scan_extreme::<true>(&self.keys);
+                self.fixup_pinned::<true>(slot, pinned)
+            }
+            PolicyKind::Min => {
+                let slot = scan_extreme::<false>(&self.keys);
+                self.fixup_pinned::<false>(slot, pinned)
+            }
+            PolicyKind::Rr => {
+                let n = self.members.len();
+                let mut tries = 0;
+                loop {
+                    let i = self.rr_ptr % n;
+                    let v = self.members[i];
+                    if v != pinned[0] && v != pinned[1] {
+                        self.rr_ptr = (i + 1) % n.max(1);
+                        break i;
+                    }
+                    self.rr_ptr = (i + 1) % n;
+                    tries += 1;
+                    assert!(tries <= n, "all residents pinned");
+                }
+            }
+        };
+        self.remove_slot(victim_slot)
+    }
+
+    /// Remove a specific resident value (free deletion of dead values).
+    pub fn remove(&mut self, v: NeuronId) {
+        let slot = self.slot_of[v as usize];
+        debug_assert_ne!(slot, NEVER);
+        self.remove_slot(slot as usize);
+    }
+
+    /// Snapshot the policy-relevant state (members, keys, RR pointer) for
+    /// checkpoint/restore in the annealing loop's suffix re-simulation.
+    pub fn snapshot(&self) -> ResidentSnapshot {
+        ResidentSnapshot {
+            members: self.members.clone(),
+            keys: self.keys.clone(),
+            rr_ptr: self.rr_ptr,
+        }
+    }
+
+    /// Restore a snapshot (rebuilds `slot_of`).
+    pub fn restore(&mut self, snap: &ResidentSnapshot) {
+        self.reset();
+        self.members.extend_from_slice(&snap.members);
+        self.keys.extend_from_slice(&snap.keys);
+        self.rr_ptr = snap.rr_ptr;
+        for (i, &v) in self.members.iter().enumerate() {
+            self.slot_of[v as usize] = i as u32;
+        }
+    }
+
+    /// Overwrite the MIN key of every member (used after restoring a
+    /// checkpoint under a *different* order suffix, where the prefix
+    /// next-use values are stale).
+    pub fn rekey_min(&mut self, next_of: &[u32]) {
+        debug_assert_eq!(self.policy, PolicyKind::Min);
+        for (slot, &v) in self.members.iter().enumerate() {
+            self.keys[slot] = next_of[v as usize];
+        }
+    }
+
+    /// If the scan winner is pinned, rescan excluding pinned slots.
+    #[inline]
+    fn fixup_pinned<const MIN_SCAN: bool>(&self, slot: usize, pinned: [NeuronId; 2]) -> usize {
+        let v = self.members[slot];
+        if v != pinned[0] && v != pinned[1] {
+            return slot;
+        }
+        let mut best = usize::MAX;
+        let mut best_key = if MIN_SCAN { u32::MAX } else { 0u32 };
+        for (i, (&m, &k)) in self.members.iter().zip(&self.keys).enumerate() {
+            if m == pinned[0] || m == pinned[1] {
+                continue;
+            }
+            let better = if MIN_SCAN { k <= best_key } else { k >= best_key };
+            if better || best == usize::MAX {
+                best = i;
+                best_key = k;
+            }
+        }
+        assert_ne!(best, usize::MAX, "all residents pinned");
+        best
+    }
+
+    fn remove_slot(&mut self, slot: usize) -> NeuronId {
+        let v = self.members.swap_remove(slot);
+        self.keys.swap_remove(slot);
+        self.slot_of[v as usize] = NEVER;
+        if let Some(&moved) = self.members.get(slot) {
+            self.slot_of[moved as usize] = slot as u32;
+        }
+        v
+    }
+}
+
+/// Saved resident-set state (see [`ResidentSet::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct ResidentSnapshot {
+    members: Vec<NeuronId>,
+    keys: Vec<u32>,
+    rr_ptr: usize,
+}
+
+/// Index of the minimum (`MIN_SCAN = true`) or maximum key; simple
+/// autovectorizable loop.
+#[inline]
+fn scan_extreme<const MIN_SCAN: bool>(keys: &[u32]) -> usize {
+    debug_assert!(!keys.is_empty());
+    let mut best = 0usize;
+    let mut best_key = keys[0];
+    for (i, &k) in keys.iter().enumerate().skip(1) {
+        let better = if MIN_SCAN { k < best_key } else { k > best_key };
+        if better {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(PolicyKind::parse("LRU"), Some(PolicyKind::Lru));
+        assert_eq!(PolicyKind::parse("min"), Some(PolicyKind::Min));
+        assert_eq!(PolicyKind::parse("rr"), Some(PolicyKind::Rr));
+        assert_eq!(PolicyKind::parse("fifo"), None);
+    }
+
+    #[test]
+    fn capacity_is_m_minus_one() {
+        let rs = ResidentSet::new(PolicyKind::Lru, 3, 10);
+        assert_eq!(rs.capacity(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "M ≥ 3")]
+    fn m_below_three_rejected() {
+        ResidentSet::new(PolicyKind::Lru, 2, 10);
+    }
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut rs = ResidentSet::new(PolicyKind::Lru, 5, 10);
+        rs.insert(3, 0, 5);
+        rs.insert(7, 1, 2);
+        assert!(rs.contains(3) && rs.contains(7));
+        assert_eq!(rs.len(), 2);
+        rs.remove(3);
+        assert!(!rs.contains(3));
+        assert!(rs.contains(7));
+        assert_eq!(rs.len(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut rs = ResidentSet::new(PolicyKind::Lru, 4, 10);
+        rs.insert(0, 0, NEVER);
+        rs.insert(1, 1, NEVER);
+        rs.insert(2, 2, NEVER);
+        rs.touch(0, 3, NEVER); // 0 becomes most recent; 1 is oldest
+        let victim = rs.evict([NEVER, NEVER]);
+        assert_eq!(victim, 1);
+    }
+
+    #[test]
+    fn lru_respects_pins() {
+        let mut rs = ResidentSet::new(PolicyKind::Lru, 4, 10);
+        rs.insert(0, 0, NEVER);
+        rs.insert(1, 1, NEVER);
+        rs.insert(2, 2, NEVER);
+        let victim = rs.evict([0, 1]); // oldest two pinned
+        assert_eq!(victim, 2);
+    }
+
+    #[test]
+    fn min_evicts_farthest_next_use() {
+        let mut rs = ResidentSet::new(PolicyKind::Min, 4, 10);
+        rs.insert(0, 0, 100);
+        rs.insert(1, 0, 5);
+        rs.insert(2, 0, 50);
+        assert_eq!(rs.evict([NEVER, NEVER]), 0);
+    }
+
+    #[test]
+    fn min_prefers_dead_values() {
+        let mut rs = ResidentSet::new(PolicyKind::Min, 4, 10);
+        rs.insert(0, 0, 10);
+        rs.insert(1, 0, NEVER); // never used again
+        rs.insert(2, 0, 3);
+        assert_eq!(rs.evict([NEVER, NEVER]), 1);
+    }
+
+    #[test]
+    fn rr_cycles() {
+        let mut rs = ResidentSet::new(PolicyKind::Rr, 5, 10);
+        for v in 0..4 {
+            rs.insert(v, 0, NEVER);
+        }
+        let v1 = rs.evict([NEVER, NEVER]);
+        rs.insert(8, 1, NEVER);
+        let v2 = rs.evict([NEVER, NEVER]);
+        assert_ne!(v1, v2, "RR pointer must advance");
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut rs = ResidentSet::new(PolicyKind::Lru, 5, 10);
+        rs.insert(1, 0, NEVER);
+        rs.insert(2, 0, NEVER);
+        rs.reset();
+        assert_eq!(rs.len(), 0);
+        assert!(!rs.contains(1));
+        rs.insert(1, 0, NEVER); // reusable after reset
+        assert!(rs.contains(1));
+    }
+
+    #[test]
+    fn swap_remove_keeps_slots_consistent() {
+        let mut rs = ResidentSet::new(PolicyKind::Lru, 6, 10);
+        for v in 0..5 {
+            rs.insert(v, v, NEVER);
+        }
+        rs.remove(0); // last member swaps into slot 0
+        assert!(!rs.contains(0));
+        for v in 1..5 {
+            assert!(rs.contains(v), "neuron {v} lost by swap_remove");
+        }
+        // Evicting everything still works.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            seen.insert(rs.evict([NEVER, NEVER]));
+        }
+        assert_eq!(seen.len(), 4);
+    }
+}

@@ -1,0 +1,336 @@
+//! The Connection-Reordering simulated-annealing loop (paper §IV.B).
+//!
+//! Per iteration `t`: sample a window move, apply it to a scratch copy of
+//! the current order, count the I/Os of the new order with the fixed
+//! memory size and eviction policy, and accept with probability 1 when it
+//! improves, else `2^{−(newI/Os − oldI/Os)·t^σ}`.
+//!
+//! Implementation notes:
+//! * evaluation uses [`Simulator::run_bounded`]: once a candidate's
+//!   running I/O count exceeds `oldI/Os + Δmax(t)` — where `Δmax(t)` is
+//!   the largest Δ whose acceptance probability is ≥ 2⁻³⁰ — the candidate
+//!   is rejected without finishing the simulation;
+//! * the paper runs `T = 10⁶` iterations; Fig. 4 (replicated by
+//!   `benches/fig4.rs`) shows the bulk of the reduction happens within
+//!   the first ~10⁴, so sweep benches default to a smaller budget
+//!   (`AnnealConfig::iters`), recorded in EXPERIMENTS.md.
+
+use super::neighbor::{apply_move, default_window_size, WindowMove};
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::ConnOrder;
+use crate::memory::PolicyKind;
+use crate::sim::Simulator;
+use crate::util::rng::Pcg64;
+
+/// Hyper-parameters of Connection Reordering.
+#[derive(Clone, Copy, Debug)]
+pub struct AnnealConfig {
+    /// Number of iterations `T`.
+    pub iters: u64,
+    /// Cooling exponent `σ` (paper: 0.2).
+    pub sigma: f64,
+    /// Window size `ws`; 0 = the paper's default (4 × mean in-degree).
+    pub window: usize,
+    /// Fast-memory size M.
+    pub m: usize,
+    /// Eviction policy the order is tuned for.
+    pub policy: PolicyKind,
+    pub seed: u64,
+    /// Record `(iteration, I/Os)` every this many iterations (0 = never);
+    /// used by the Fig.-4 bench.
+    pub trace_every: u64,
+}
+
+impl AnnealConfig {
+    /// Paper defaults (§VI.A.1) with a configurable iteration budget.
+    pub fn new(m: usize, policy: PolicyKind, iters: u64) -> AnnealConfig {
+        AnnealConfig {
+            iters,
+            sigma: 0.2,
+            window: 0,
+            m,
+            policy,
+            seed: 0x5EED,
+            trace_every: 0,
+        }
+    }
+}
+
+/// Outcome of a reordering run.
+#[derive(Clone, Debug)]
+pub struct AnnealReport {
+    pub initial_ios: u64,
+    pub final_ios: u64,
+    /// (iteration, currently-held I/Os) samples when tracing is on.
+    pub trace: Vec<(u64, u64)>,
+    pub accepted: u64,
+    pub accepted_worse: u64,
+    pub aborted_evals: u64,
+    pub elapsed_secs: f64,
+}
+
+impl AnnealReport {
+    /// Relative I/O reduction achieved, e.g. 0.435 = 43.5%.
+    pub fn reduction(&self) -> f64 {
+        if self.initial_ios == 0 {
+            return 0.0;
+        }
+        1.0 - self.final_ios as f64 / self.initial_ios as f64
+    }
+}
+
+/// Run Connection Reordering starting from `initial` and return the best
+/// order found together with a report.
+pub fn reorder(net: &Ffnn, initial: &ConnOrder, cfg: &AnnealConfig) -> (ConnOrder, AnnealReport) {
+    let start = std::time::Instant::now();
+    debug_assert!(initial.is_topological(net));
+    let ws = if cfg.window == 0 {
+        default_window_size(net)
+    } else {
+        cfg.window
+    };
+    let mut rng = Pcg64::seed_from(cfg.seed);
+    let mut sim = Simulator::new(net);
+
+    let mut current: Vec<u32> = initial.as_slice().to_vec();
+    let mut scratch: Vec<u32> = current.clone();
+    // §Perf: checkpoint the current order's simulation every `every`
+    // positions; a window move leaves the prefix untouched, so candidates
+    // re-simulate only from the nearest checkpoint before the first
+    // changed position (suffix re-simulation).
+    let every = (net.n_conns() / 24).max(64);
+    let (full_stats, mut ckpts) = sim.run_with_checkpoints(
+        &ConnOrder::from_perm(current.clone()),
+        cfg.m,
+        cfg.policy,
+        every,
+    );
+    let mut old_ios = full_stats.total();
+    let initial_ios = old_ios;
+
+    // Best-so-far (SA may drift upward late; we return the best).
+    let mut best = current.clone();
+    let mut best_ios = old_ios;
+
+    let mut report = AnnealReport {
+        initial_ios,
+        final_ios: old_ios,
+        trace: Vec::new(),
+        accepted: 0,
+        accepted_worse: 0,
+        aborted_evals: 0,
+        elapsed_secs: 0.0,
+    };
+
+    let w = net.n_conns();
+    if w == 0 {
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        return (ConnOrder::from_perm(best), report);
+    }
+
+    for t in 1..=cfg.iters {
+        if cfg.trace_every > 0 && (t - 1) % cfg.trace_every == 0 {
+            report.trace.push((t - 1, old_ios));
+        }
+
+        // Candidate = current + one window move.
+        scratch.copy_from_slice(&current);
+        let mv = WindowMove::sample(&mut rng, w, ws);
+        let first_changed = apply_move(net, &mut scratch, mv);
+        if first_changed >= w {
+            continue; // the move was a no-op
+        }
+
+        // Largest Δ still acceptable with probability ≥ 2^-30:
+        // 2^{−Δ·t^σ} ≥ 2^{−30}  ⇔  Δ ≤ 30 / t^σ.
+        let tpow = (t as f64).powf(cfg.sigma);
+        let dmax = (30.0 / tpow).floor() as u64;
+        let cand = ConnOrder::from_perm(std::mem::take(&mut scratch));
+        // Resume from the nearest checkpoint at or before the first
+        // changed position (checkpoint i sits at (i+1)·every).
+        let outcome = match first_changed.checked_div(every).unwrap_or(0) {
+            0 => sim.run_bounded(&cand, cfg.m, cfg.policy, old_ios + dmax),
+            idx => {
+                let ckpt = &ckpts[(idx - 1).min(ckpts.len() - 1)];
+                sim.run_suffix(&cand, cfg.m, cfg.policy, ckpt, old_ios + dmax)
+            }
+        };
+        scratch = cand.into_perm();
+
+        let new_ios = match outcome {
+            Some(s) => s.total(),
+            None => {
+                report.aborted_evals += 1;
+                continue; // reject: acceptance probability < 2^-30
+            }
+        };
+
+        let accept = if new_ios < old_ios {
+            true
+        } else {
+            let delta = (new_ios - old_ios) as f64;
+            let p = (-delta * tpow * std::f64::consts::LN_2).exp();
+            let take = rng.f64() < p;
+            if take {
+                report.accepted_worse += 1;
+            }
+            take
+        };
+
+        if accept {
+            std::mem::swap(&mut current, &mut scratch);
+            report.accepted += 1;
+            // Refresh checkpoints for the new current order. This full
+            // run also re-scores the order *exactly*: the suffix score is
+            // exact for LRU/RR but approximate for MIN (Belady's prefix
+            // decisions peek past the checkpoint, so a changed suffix can
+            // shift a prefix eviction by a few I/Os). SA tolerates the
+            // noisy candidate score; all reported numbers are exact.
+            ckpts.clear();
+            let (stats, new_ckpts) = sim.run_with_checkpoints(
+                &ConnOrder::from_perm(current.clone()),
+                cfg.m,
+                cfg.policy,
+                every,
+            );
+            old_ios = stats.total();
+            ckpts = new_ckpts;
+            if old_ios < best_ios {
+                best_ios = old_ios;
+                best.copy_from_slice(&current);
+            }
+        }
+    }
+
+    if cfg.trace_every > 0 {
+        report.trace.push((cfg.iters, old_ios));
+    }
+    report.final_ios = best_ios;
+    report.elapsed_secs = start.elapsed().as_secs_f64();
+    let best = ConnOrder::from_perm(best);
+    debug_assert!(best.is_topological(net));
+    (best, report)
+}
+
+impl ConnOrder {
+    /// Consume the order, returning the underlying permutation (used to
+    /// recycle allocations in the annealing loop).
+    pub fn into_perm(self) -> Vec<u32> {
+        let mut v = Vec::new();
+        let slice = self.as_slice();
+        v.extend_from_slice(slice);
+        v
+    }
+}
+
+/// Run several independent annealing chains (different seeds) in parallel
+/// and return the best result.
+pub fn reorder_parallel(
+    net: &Ffnn,
+    initial: &ConnOrder,
+    cfg: &AnnealConfig,
+    chains: usize,
+    workers: usize,
+) -> (ConnOrder, AnnealReport) {
+    assert!(chains >= 1);
+    let seeds: Vec<u64> = (0..chains as u64).map(|i| cfg.seed.wrapping_add(i * 0x9E37)).collect();
+    let results = crate::util::threadpool::par_map(workers, &seeds, |&seed| {
+        let mut c = *cfg;
+        c.seed = seed;
+        reorder(net, initial, &c)
+    });
+    results
+        .into_iter()
+        .min_by_key(|(_, r)| r.final_ios)
+        .expect("chains ≥ 1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::theorem1_bounds;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::sim::simulate;
+
+    fn small_net() -> Ffnn {
+        random_mlp(&MlpSpec::new(4, 24, 0.25), &mut Pcg64::seed_from(11))
+    }
+
+    #[test]
+    fn reorder_never_worse_and_topological() {
+        let net = small_net();
+        let initial = two_optimal_order(&net);
+        let cfg = AnnealConfig::new(8, PolicyKind::Min, 1500);
+        let (best, report) = reorder(&net, &initial, &cfg);
+        assert!(best.is_topological(&net));
+        assert!(report.final_ios <= report.initial_ios);
+        // The returned order really has the reported cost.
+        let check = simulate(&net, &best, 8, PolicyKind::Min);
+        assert_eq!(check.total(), report.final_ios);
+    }
+
+    #[test]
+    fn reorder_improves_tight_memory() {
+        // With tight memory there is room to improve over the 2-optimal
+        // initial order on a small dense-ish net.
+        let net = small_net();
+        let initial = two_optimal_order(&net);
+        let cfg = AnnealConfig::new(6, PolicyKind::Min, 4000);
+        let (_, report) = reorder(&net, &initial, &cfg);
+        assert!(
+            report.final_ios < report.initial_ios,
+            "expected improvement: {} → {}",
+            report.initial_ios,
+            report.final_ios
+        );
+        // Still above the Theorem-1 lower bound.
+        let b = theorem1_bounds(&net);
+        assert!(report.final_ios >= b.total_lower);
+    }
+
+    #[test]
+    fn trace_is_monotone_sampled() {
+        let net = small_net();
+        let initial = two_optimal_order(&net);
+        let mut cfg = AnnealConfig::new(8, PolicyKind::Min, 500);
+        cfg.trace_every = 100;
+        let (_, report) = reorder(&net, &initial, &cfg);
+        assert!(report.trace.len() >= 5);
+        assert_eq!(report.trace[0].1, report.initial_ios);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = small_net();
+        let initial = two_optimal_order(&net);
+        let cfg = AnnealConfig::new(8, PolicyKind::Lru, 800);
+        let (a, ra) = reorder(&net, &initial, &cfg);
+        let (b, rb) = reorder(&net, &initial, &cfg);
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(ra.final_ios, rb.final_ios);
+    }
+
+    #[test]
+    fn parallel_chains_pick_best() {
+        let net = small_net();
+        let initial = two_optimal_order(&net);
+        let cfg = AnnealConfig::new(8, PolicyKind::Min, 400);
+        let (best, report) = reorder_parallel(&net, &initial, &cfg, 4, 4);
+        assert!(best.is_topological(&net));
+        // Best of 4 chains is at least as good as a single chain with the
+        // base seed.
+        let (_, single) = reorder(&net, &initial, &cfg);
+        assert!(report.final_ios <= single.final_ios);
+    }
+
+    #[test]
+    fn zero_iters_is_identity() {
+        let net = small_net();
+        let initial = two_optimal_order(&net);
+        let cfg = AnnealConfig::new(8, PolicyKind::Min, 0);
+        let (best, report) = reorder(&net, &initial, &cfg);
+        assert_eq!(best.as_slice(), initial.as_slice());
+        assert_eq!(report.initial_ios, report.final_ios);
+    }
+}

@@ -1,0 +1,11 @@
+//! Connection Reordering (paper §IV): optimize the topological order of
+//! the connections for a given FFNN, memory size M and eviction policy via
+//! simulated annealing.
+//!
+//! * [`neighbor`] — the randomized *window move* that perturbs an order
+//!   while preserving topological validity,
+//! * [`annealing`] — the SA loop with the paper's update rule
+//!   `P(accept worse) = 2^{−(newI/Os − oldI/Os)·t^σ}`.
+
+pub mod annealing;
+pub mod neighbor;

@@ -1,0 +1,279 @@
+//! Neighbor creation for Connection Reordering (paper §IV.A).
+//!
+//! A neighbor is produced by choosing a random connection `e_i`, a random
+//! window width `w ∈ {0, …, ws−1}`, the window `e_i … e_{min(i+w, W)}`,
+//! and a direction:
+//!
+//! * **left**: each window connection (leftmost first) slides left until
+//!   it meets a connection with the same input neuron, or whose output
+//!   neuron equals its input neuron, and is inserted right *after* it
+//!   (or at the very beginning if none is met);
+//! * **right**: each window connection (rightmost first) slides right
+//!   until it meets a connection with the same output neuron, or whose
+//!   input neuron equals its output neuron, and is inserted right
+//!   *before* it (or at the very end).
+//!
+//! Both stopping rules ensure the order stays topological: the only
+//! ordering constraint between connections `e`, `f` is `e` before `f`
+//! when `e.dst == f.src`, and the scans stop exactly when they would
+//! cross such a pair.
+
+use crate::ffnn::graph::{Conn, Ffnn};
+use crate::util::rng::Pcg64;
+
+/// Parameters of one window move (derivable from an RNG, kept explicit so
+/// moves are testable and replayable).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowMove {
+    /// Start position of the window in the order.
+    pub start: usize,
+    /// Window width − 1 (the paper's `w ∈ {0, …, ws−1}`).
+    pub extent: usize,
+    pub to_left: bool,
+}
+
+impl WindowMove {
+    /// Sample a move exactly as §IV.A prescribes.
+    pub fn sample(rng: &mut Pcg64, n_conns: usize, window_size: usize) -> WindowMove {
+        WindowMove {
+            start: rng.index(n_conns),
+            extent: rng.index(window_size.max(1)),
+            to_left: rng.bool(0.5),
+        }
+    }
+}
+
+/// Apply a window move to `perm` (a topological order of `net`'s
+/// connections, as connection indices) in place.
+///
+/// Returns the smallest position whose content changed (`perm.len()` if
+/// the move was a no-op) — the annealing loop re-simulates only from
+/// there (§Perf: suffix re-simulation).
+pub fn apply_move(net: &Ffnn, perm: &mut [u32], mv: WindowMove) -> usize {
+    let w = perm.len();
+    if w == 0 {
+        return 0;
+    }
+    let end = (mv.start + mv.extent).min(w - 1); // window = [start, end]
+    let mut first_changed = w;
+    if mv.to_left {
+        // Leftmost first; moving an element left doesn't change the
+        // positions of the window members to its right.
+        for pos in mv.start..=end {
+            first_changed = first_changed.min(slide_left(net, perm, pos));
+        }
+    } else {
+        // Rightmost first; moving an element right doesn't change the
+        // positions of the window members to its left.
+        for pos in (mv.start..=end).rev() {
+            first_changed = first_changed.min(slide_right(net, perm, pos));
+        }
+    }
+    first_changed
+}
+
+/// Slide `perm[pos]` left until meeting a connection with the same src,
+/// or whose dst equals its src; insert right after it. Returns the first
+/// changed position (`perm.len()` if the element did not move).
+fn slide_left(net: &Ffnn, perm: &mut [u32], pos: usize) -> usize {
+    let conns = net.conns();
+    let moving = perm[pos];
+    let Conn { src, .. } = conns[moving as usize];
+    let mut target = 0usize; // insert position if no stop found
+    for s in (0..pos).rev() {
+        let c = conns[perm[s] as usize];
+        if c.src == src || c.dst == src {
+            target = s + 1; // right next to e_s
+            break;
+        }
+    }
+    if target < pos {
+        perm.copy_within(target..pos, target + 1);
+        perm[target] = moving;
+        target
+    } else {
+        perm.len()
+    }
+}
+
+/// Slide `perm[pos]` right until meeting a connection with the same dst,
+/// or whose src equals its dst; insert right before it. Returns the first
+/// changed position (`perm.len()` if the element did not move).
+fn slide_right(net: &Ffnn, perm: &mut [u32], pos: usize) -> usize {
+    let conns = net.conns();
+    let moving = perm[pos];
+    let Conn { dst, .. } = conns[moving as usize];
+    let w = perm.len();
+    let mut target = w - 1; // move to the very end if no stop found
+    for z in pos + 1..w {
+        let c = conns[perm[z] as usize];
+        if c.dst == dst || c.src == dst {
+            target = z - 1; // right before e_z
+            break;
+        }
+    }
+    if target > pos {
+        perm.copy_within(pos + 1..=target, pos);
+        perm[target] = moving;
+        pos
+    } else {
+        perm.len()
+    }
+}
+
+/// The paper's default window size: four times the average in-degree.
+pub fn default_window_size(net: &Ffnn) -> usize {
+    (4.0 * net.mean_in_degree()).round().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::topo::{two_optimal_order, ConnOrder};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn moves_preserve_topological_validity() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(4, 20, 0.25), &mut rng);
+        let mut order = two_optimal_order(&net);
+        let ws = default_window_size(&net);
+        for _ in 0..500 {
+            let mv = WindowMove::sample(&mut rng, order.len(), ws);
+            apply_move(&net, order.as_mut_slice(), mv);
+        }
+        assert!(order.is_topological(&net), "500 random moves broke topology");
+    }
+
+    #[test]
+    fn moves_preserve_permutation() {
+        let mut rng = Pcg64::seed_from(2);
+        let net = random_mlp(&MlpSpec::new(3, 15, 0.3), &mut rng);
+        let mut order = two_optimal_order(&net);
+        for _ in 0..200 {
+            let mv = WindowMove::sample(&mut rng, order.len(), 8);
+            apply_move(&net, order.as_mut_slice(), mv);
+        }
+        let mut sorted: Vec<u32> = order.as_slice().to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..net.n_conns() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn left_move_stops_at_producer() {
+        // Chain a→b→c: conn0 = (a,b), conn1 = (b,c). Moving conn1 left
+        // must stop right after conn0 (conn0.dst == conn1.src), i.e. stay.
+        let net = crate::ffnn::graph::Ffnn::new(
+            vec![
+                crate::ffnn::graph::NeuronKind::Input,
+                crate::ffnn::graph::NeuronKind::Hidden,
+                crate::ffnn::graph::NeuronKind::Output,
+            ],
+            vec![0.0; 3],
+            vec![
+                crate::ffnn::graph::Conn { src: 0, dst: 1, weight: 1.0 },
+                crate::ffnn::graph::Conn { src: 1, dst: 2, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let mut perm = vec![0u32, 1];
+        slide_left(&net, &mut perm, 1);
+        assert_eq!(perm, vec![0, 1], "cannot slide past its producer");
+    }
+
+    #[test]
+    fn right_move_stops_before_consumer() {
+        let net = crate::ffnn::graph::Ffnn::new(
+            vec![
+                crate::ffnn::graph::NeuronKind::Input,
+                crate::ffnn::graph::NeuronKind::Hidden,
+                crate::ffnn::graph::NeuronKind::Output,
+            ],
+            vec![0.0; 3],
+            vec![
+                crate::ffnn::graph::Conn { src: 0, dst: 1, weight: 1.0 },
+                crate::ffnn::graph::Conn { src: 1, dst: 2, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let mut perm = vec![0u32, 1];
+        slide_right(&net, &mut perm, 0);
+        assert_eq!(perm, vec![0, 1], "cannot slide past its consumer");
+    }
+
+    #[test]
+    fn unconstrained_conn_moves_to_boundary() {
+        // Two independent connections: (0→2), (1→3). No stop conditions
+        // apply, so a left slide of the second goes to the very beginning.
+        let net = crate::ffnn::graph::Ffnn::new(
+            vec![
+                crate::ffnn::graph::NeuronKind::Input,
+                crate::ffnn::graph::NeuronKind::Input,
+                crate::ffnn::graph::NeuronKind::Output,
+                crate::ffnn::graph::NeuronKind::Output,
+            ],
+            vec![0.0; 4],
+            vec![
+                crate::ffnn::graph::Conn { src: 0, dst: 2, weight: 1.0 },
+                crate::ffnn::graph::Conn { src: 1, dst: 3, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let mut perm = vec![0u32, 1];
+        slide_left(&net, &mut perm, 1);
+        assert_eq!(perm, vec![1, 0]);
+        let mut perm2 = vec![0u32, 1];
+        slide_right(&net, &mut perm2, 0);
+        assert_eq!(perm2, vec![1, 0]);
+    }
+
+    #[test]
+    fn same_src_stop_clusters_connections() {
+        // conns: (0→2), (1→3), (0→3). Sliding (0→3) left stops right
+        // after (0→2) (same src).
+        let net = crate::ffnn::graph::Ffnn::new(
+            vec![
+                crate::ffnn::graph::NeuronKind::Input,
+                crate::ffnn::graph::NeuronKind::Input,
+                crate::ffnn::graph::NeuronKind::Output,
+                crate::ffnn::graph::NeuronKind::Output,
+            ],
+            vec![0.0; 4],
+            vec![
+                crate::ffnn::graph::Conn { src: 0, dst: 2, weight: 1.0 },
+                crate::ffnn::graph::Conn { src: 1, dst: 3, weight: 1.0 },
+                crate::ffnn::graph::Conn { src: 0, dst: 3, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let mut perm = vec![0u32, 1, 2];
+        slide_left(&net, &mut perm, 2);
+        assert_eq!(perm, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn window_size_default_is_4x_mean_in_degree() {
+        let mut rng = Pcg64::seed_from(3);
+        let net = random_mlp(&MlpSpec::new(3, 40, 0.2), &mut rng);
+        let ws = default_window_size(&net);
+        assert_eq!(ws, (4.0 * net.mean_in_degree()).round() as usize);
+        assert!(ws >= 1);
+    }
+
+    #[test]
+    fn extent_zero_move_is_single_connection() {
+        let mut rng = Pcg64::seed_from(4);
+        let net = random_mlp(&MlpSpec::new(3, 10, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+        let mut moved = ConnOrder::from_perm(order.as_slice().to_vec());
+        apply_move(
+            &net,
+            moved.as_mut_slice(),
+            WindowMove { start: 5, extent: 0, to_left: true },
+        );
+        // At most one element changed position relative to the original
+        // (plus the shifted block).
+        assert!(moved.is_topological(&net));
+    }
+}

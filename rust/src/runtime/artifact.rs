@@ -1,0 +1,192 @@
+//! Artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`, describing each lowered HLO module and its
+//! expected input shapes/dtypes so the Rust loader can validate literals
+//! before execution.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Input tensor descriptor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    /// "float32" | "int32" (the only dtypes the artifacts use).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    /// "ell_mlp" | "dense_mlp".
+    pub kind: String,
+    /// Batch size baked into the module.
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    /// For ELL artifacts: the (n_out, K, n_in) triple of each layer,
+    /// recovered from the weights/indices/bias input shapes.
+    pub fn ell_layer_shapes(&self) -> anyhow::Result<Vec<(usize, usize, usize)>> {
+        anyhow::ensure!(self.kind == "ell_mlp", "not an ell_mlp artifact");
+        anyhow::ensure!(self.inputs.len() % 3 == 1, "inputs must be 3·L + 1");
+        let n_layers = self.inputs.len() / 3;
+        let mut shapes = Vec::with_capacity(n_layers);
+        let x_shape = &self.inputs.last().unwrap().shape;
+        let mut n_in = x_shape[0];
+        for li in 0..n_layers {
+            let w = &self.inputs[3 * li];
+            anyhow::ensure!(w.shape.len() == 2, "weights must be 2-D");
+            let (n_out, k) = (w.shape[0], w.shape[1]);
+            shapes.push((n_out, k, n_in));
+            n_in = n_out;
+        }
+        Ok(shapes)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::from_file(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            j.get("format").and_then(Json::as_str) == Some("sparseflow-artifacts-v1"),
+            "unknown manifest format in {}",
+            path.display()
+        );
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow::anyhow!("input missing shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().map(|v| v as usize).ok_or_else(|| anyhow::anyhow!("bad dim")))
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                    let dtype = i
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(TensorSpec { shape, dtype })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                kind: get_str("kind")?,
+                batch: a.get("batch").and_then(Json::as_u64).unwrap_or(0) as usize,
+                inputs,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact named {name:?} (have: {:?})",
+                self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+/// Default artifacts directory (`SPARSEFLOW_ARTIFACTS` or `artifacts/`).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SPARSEFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        let j = Json::parse(
+            r#"{
+              "format": "sparseflow-artifacts-v1",
+              "artifacts": [{
+                "name": "t", "file": "t.hlo.txt", "kind": "ell_mlp", "batch": 4,
+                "inputs": [
+                  {"shape": [16, 8], "dtype": "float32"},
+                  {"shape": [16, 8], "dtype": "int32"},
+                  {"shape": [16], "dtype": "float32"},
+                  {"shape": [12, 4], "dtype": "float32"}
+                ]
+              }]
+            }"#,
+        )
+        .unwrap();
+        j.to_file(&dir.join("manifest.json")).unwrap();
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("sparseflow-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find("t").unwrap();
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1].dtype, "int32");
+        assert_eq!(a.ell_layer_shapes().unwrap(), vec![(16, 8, 12)]);
+        assert!(m.find("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![3, 4, 5], dtype: "float32".into() };
+        assert_eq!(t.n_elements(), 60);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("sparseflow-no-manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

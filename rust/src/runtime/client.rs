@@ -1,0 +1,317 @@
+//! The PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times from the serving hot path. Adapted from the working reference in
+//! /opt/xla-example/src/bin/load_hlo.rs.
+//!
+//! Thread model: the `xla` crate's handles are thread-confined (`Rc`
+//! internals, raw C pointers), so [`Runtime`]/[`XlaExecutable`] are
+//! single-threaded values. The serving path uses [`XlaEngine`], a
+//! `Send + Sync` handle to a dedicated **service thread** that owns the
+//! PJRT client, the compiled executable and the parameter literals, and
+//! processes inference requests over channels.
+
+use super::artifact::Manifest;
+use super::pack::EllLayer;
+use crate::exec::batch::BatchMatrix;
+use crate::exec::Engine;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A PJRT CPU runtime holding the client; executables are compiled from
+/// HLO text files. Not `Send`: confine to one thread (see [`XlaEngine`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<XlaExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(XlaExecutable { exe })
+    }
+
+    /// Load an artifact by name through the manifest.
+    pub fn load_artifact(&self, manifest: &Manifest, name: &str) -> anyhow::Result<XlaExecutable> {
+        let meta = manifest.find(name)?;
+        self.load_hlo_text(&manifest.hlo_path(meta))
+    }
+}
+
+/// A compiled executable; `run` takes literals and unwraps the 1-tuple
+/// output (artifacts are lowered with `return_tuple=True`).
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaExecutable {
+    /// Execute with the given input literals; returns the flat f32 data
+    /// and the output dimensions.
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let shape = out.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((data, dims))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {shape:?} != data len {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {shape:?} != data len {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Service-thread engine
+// ---------------------------------------------------------------------
+
+enum ServiceMsg {
+    Infer {
+        inputs: BatchMatrix,
+        reply: mpsc::Sender<anyhow::Result<BatchMatrix>>,
+    },
+    Shutdown,
+}
+
+/// An [`Engine`] executing an ELL-MLP artifact on PJRT through a
+/// dedicated service thread. The artifact's batch size is fixed at AOT
+/// time; smaller request batches are padded and sliced.
+pub struct XlaEngine {
+    tx: Mutex<mpsc::Sender<ServiceMsg>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    n_in: usize,
+    n_out: usize,
+    batch: usize,
+}
+
+impl XlaEngine {
+    /// Spawn the service thread: it loads the manifest from
+    /// `artifacts_dir`, compiles artifact `name`, validates the packed
+    /// `layers` against it and prepares the parameter literals.
+    pub fn from_ell(
+        artifacts_dir: PathBuf,
+        name: &str,
+        layers: Vec<EllLayer>,
+    ) -> anyhow::Result<XlaEngine> {
+        // Validate shapes up front (cheap, no xla involvement).
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let meta = manifest.find(name)?.clone();
+        let shapes = meta.ell_layer_shapes()?;
+        anyhow::ensure!(
+            shapes.len() == layers.len(),
+            "artifact has {} layers, packed {}",
+            shapes.len(),
+            layers.len()
+        );
+        for (li, (layer, &(n_out, k, n_in))) in layers.iter().zip(&shapes).enumerate() {
+            anyhow::ensure!(
+                (layer.n_out, layer.k, layer.n_in) == (n_out, k, n_in),
+                "layer {li}: packed ({}, {}, {}) != artifact ({n_out}, {k}, {n_in})",
+                layer.n_out,
+                layer.k,
+                layer.n_in
+            );
+        }
+        let n_in = shapes[0].2;
+        let n_out = shapes.last().unwrap().0;
+        let batch = meta.batch;
+        let artifact_name = name.to_string();
+
+        let (tx, rx) = mpsc::channel::<ServiceMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("xla-service-{artifact_name}"))
+            .spawn(move || {
+                // Everything xla-related lives and dies on this thread.
+                let setup = (|| -> anyhow::Result<(XlaExecutable, Vec<xla::Literal>)> {
+                    let runtime = Runtime::cpu()?;
+                    let manifest = Manifest::load(&artifacts_dir)?;
+                    let meta = manifest.find(&artifact_name)?;
+                    let exe = runtime.load_hlo_text(&manifest.hlo_path(meta))?;
+                    let mut params = Vec::with_capacity(layers.len() * 3);
+                    for layer in &layers {
+                        params.push(literal_f32(&layer.weights, &[layer.n_out, layer.k])?);
+                        params.push(literal_i32(&layer.indices, &[layer.n_out, layer.k])?);
+                        params.push(literal_f32(&layer.bias, &[layer.n_out])?);
+                    }
+                    Ok((exe, params))
+                })();
+                let (exe, params) = match setup {
+                    Ok(v) => {
+                        let _ = ready_tx.send(Ok(()));
+                        v
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        ServiceMsg::Shutdown => break,
+                        ServiceMsg::Infer { inputs, reply } => {
+                            let out = infer_once(&exe, &params, &inputs, n_in, n_out, batch);
+                            let _ = reply.send(out);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawn xla service: {e}"))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("xla service thread died during setup"))??;
+
+        Ok(XlaEngine {
+            tx: Mutex::new(tx),
+            join: Mutex::new(Some(join)),
+            n_in,
+            n_out,
+            batch,
+        })
+    }
+
+    /// Artifact batch size (requests are padded up to this).
+    pub fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+fn infer_once(
+    exe: &XlaExecutable,
+    params: &[xla::Literal],
+    inputs: &BatchMatrix,
+    n_in: usize,
+    n_out: usize,
+    batch: usize,
+) -> anyhow::Result<BatchMatrix> {
+    anyhow::ensure!(inputs.rows() == n_in, "input rows {} != {n_in}", inputs.rows());
+    let req_batch = inputs.batch();
+    anyhow::ensure!(
+        req_batch <= batch,
+        "request batch {req_batch} exceeds artifact batch {batch}"
+    );
+    let mut padded = vec![0.0f32; n_in * batch];
+    for r in 0..n_in {
+        padded[r * batch..r * batch + req_batch].copy_from_slice(inputs.row(r));
+    }
+    let x = literal_f32(&padded, &[n_in, batch])?;
+
+    // `execute` borrows literals; pass params + x in artifact order.
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&x);
+    // The xla crate's execute takes `&[Literal]` via Borrow; build owned
+    // slice references through its generic parameter.
+    let (data, dims) = run_with_refs(exe, &args)?;
+    anyhow::ensure!(
+        dims == vec![n_out, batch],
+        "unexpected output dims {dims:?}, want [{n_out}, {batch}]"
+    );
+    let mut out = BatchMatrix::zeros(n_out, req_batch);
+    for r in 0..n_out {
+        out.row_mut(r)
+            .copy_from_slice(&data[r * batch..r * batch + req_batch]);
+    }
+    Ok(out)
+}
+
+fn run_with_refs(exe: &XlaExecutable, args: &[&xla::Literal]) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+    let result = exe
+        .exe
+        .execute::<&xla::Literal>(args)
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let shape = out.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    Ok((data, dims))
+}
+
+impl Drop for XlaEngine {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(ServiceMsg::Shutdown);
+        }
+        if let Ok(mut j) = self.join.lock() {
+            if let Some(h) = j.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Engine for XlaEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("xla engine sender");
+            tx.send(ServiceMsg::Infer {
+                inputs: inputs.clone(),
+                reply: reply_tx,
+            })
+            .expect("xla service alive");
+        }
+        reply_rx
+            .recv()
+            .expect("xla service reply")
+            .expect("artifact execution")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_out
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime (L3 ↔ L2 bridge): loads the AOT-compiled HLO text
+//! artifacts produced by `python/compile/aot.py`, compiles them on the
+//! PJRT CPU client and executes them from the Rust request path. Python
+//! never runs at inference time — the artifacts are data.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod pack;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use client::{Runtime, XlaEngine, XlaExecutable};
+pub use pack::{pack_ell_layers, EllLayer};

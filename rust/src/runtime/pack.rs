@@ -1,0 +1,144 @@
+//! ELL packing: convert a layered [`Ffnn`] into the padded ELLPACK tables
+//! the AOT artifacts expect as inputs (weights/indices `[n_out, K]`,
+//! bias `[n_out]` per layer). Padded slots carry (weight 0, index 0), the
+//! convention `python/compile/kernels/ell_spmm.py` defines.
+
+use crate::ffnn::graph::{Ffnn, NeuronId};
+
+/// One ELL-packed layer.
+#[derive(Clone, Debug)]
+pub struct EllLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub k: usize,
+    /// Row-major `[n_out, K]`.
+    pub weights: Vec<f32>,
+    /// Row-major `[n_out, K]`, values index the *previous layer position*.
+    pub indices: Vec<i32>,
+    pub bias: Vec<f32>,
+}
+
+impl EllLayer {
+    /// Pack the connections between two consecutive layers with a fixed
+    /// row width `k` (≥ the max in-degree within this layer pair).
+    pub fn pack(net: &Ffnn, in_ids: &[NeuronId], out_ids: &[NeuronId], k: usize) -> anyhow::Result<EllLayer> {
+        let mut col_of = vec![u32::MAX; net.n_neurons()];
+        for (i, &v) in in_ids.iter().enumerate() {
+            col_of[v as usize] = i as u32;
+        }
+        let (n_in, n_out) = (in_ids.len(), out_ids.len());
+        let mut weights = vec![0.0f32; n_out * k];
+        let mut indices = vec![0i32; n_out * k];
+        let mut bias = Vec::with_capacity(n_out);
+        for (r, &o) in out_ids.iter().enumerate() {
+            let conns = net.in_conns(o);
+            anyhow::ensure!(
+                conns.len() <= k,
+                "neuron {o}: in-degree {} exceeds ELL width K={k}",
+                conns.len()
+            );
+            for (slot, &ci) in conns.iter().enumerate() {
+                let c = net.conn(ci as usize);
+                let col = col_of[c.src as usize];
+                anyhow::ensure!(col != u32::MAX, "connection crosses non-consecutive layers");
+                weights[r * k + slot] = c.weight;
+                indices[r * k + slot] = col as i32;
+            }
+            bias.push(net.initial(o));
+        }
+        Ok(EllLayer {
+            n_in,
+            n_out,
+            k,
+            weights,
+            indices,
+            bias,
+        })
+    }
+
+    /// Maximum in-degree over `out_ids` (the tightest valid K).
+    pub fn max_in_degree(net: &Ffnn, out_ids: &[NeuronId]) -> usize {
+        out_ids.iter().map(|&o| net.in_degree(o)).max().unwrap_or(0)
+    }
+}
+
+/// Pack a whole layered network with per-layer widths `ks`
+/// (`ks.len() == n_layers − 1`); each `ks[i]` must cover that layer's max
+/// in-degree.
+pub fn pack_ell_layers(net: &Ffnn, ks: &[usize]) -> anyhow::Result<Vec<EllLayer>> {
+    let layers = net
+        .layers()
+        .ok_or_else(|| anyhow::anyhow!("ELL packing requires a layered network"))?;
+    anyhow::ensure!(
+        ks.len() == layers.len() - 1,
+        "need {} K values, got {}",
+        layers.len() - 1,
+        ks.len()
+    );
+    let mut out = Vec::with_capacity(ks.len());
+    for (li, &k) in ks.iter().enumerate() {
+        out.push(EllLayer::pack(net, &layers[li], &layers[li + 1], k)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_layered, random_mlp, MlpSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(2, 12, 0.3), &mut rng);
+        let layers = net.layers().unwrap();
+        let kmax = EllLayer::max_in_degree(&net, &layers[1]);
+        let l = EllLayer::pack(&net, &layers[0], &layers[1], kmax + 2).unwrap();
+        assert_eq!(l.weights.len(), l.n_out * l.k);
+        assert_eq!(l.indices.len(), l.n_out * l.k);
+        // Padded slots: weight 0, index 0.
+        for r in 0..l.n_out {
+            let deg = net.in_degree(layers[1][r]);
+            for s in deg..l.k {
+                assert_eq!(l.weights[r * l.k + s], 0.0);
+                assert_eq!(l.indices[r * l.k + s], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rejects_small_k() {
+        let mut rng = Pcg64::seed_from(2);
+        let net = random_layered(&[8, 8], 0.9, 1.0, &mut rng);
+        let layers = net.layers().unwrap();
+        let kmax = EllLayer::max_in_degree(&net, &layers[1]);
+        assert!(kmax > 1);
+        assert!(EllLayer::pack(&net, &layers[0], &layers[1], kmax - 1).is_err());
+    }
+
+    #[test]
+    fn pack_whole_network() {
+        let mut rng = Pcg64::seed_from(3);
+        let net = random_layered(&[10, 14, 6], 0.4, 1.0, &mut rng);
+        let ells = pack_ell_layers(&net, &[10, 14]).unwrap();
+        assert_eq!(ells.len(), 2);
+        assert_eq!(ells[0].n_in, 10);
+        assert_eq!(ells[1].n_out, 6);
+        // Total non-padding weights = W.
+        let nz: usize = ells
+            .iter()
+            .flat_map(|l| l.weights.iter())
+            .filter(|w| **w != 0.0)
+            .count();
+        // (Generated Gaussian weights are never exactly 0.)
+        assert_eq!(nz, net.n_conns());
+    }
+
+    #[test]
+    fn pack_wrong_k_count_rejected() {
+        let mut rng = Pcg64::seed_from(4);
+        let net = random_layered(&[6, 6, 6], 0.5, 1.0, &mut rng);
+        assert!(pack_ell_layers(&net, &[6]).is_err());
+    }
+}

@@ -1,0 +1,633 @@
+//! The cache-simulating inference engine (Algorithm 1 of the paper).
+//!
+//! For each connection `e_k = (a, b, w)` in the given topological order:
+//! read the connection (1 read-I/O), ensure the value of `a` and the
+//! partial sum of `b` are resident (reads + evictions as needed), apply
+//! the multiply-accumulate for free, and finish `b` with its activation
+//! after its last incoming connection.
+//!
+//! Eviction follows the paper's *efficient eviction policy*: a victim
+//! that is clean (its slow-memory copy is current) or dead (never used
+//! again and not an unwritten output) is deleted for free; a dirty, live
+//! victim costs one write-I/O. The three victim-selection policies live
+//! in [`crate::memory`].
+//!
+//! Semantics notes (see DESIGN.md §7 for the normative list):
+//! * capacity for neuron values is M−1 (one slot is held by the
+//!   in-flight connection triple);
+//! * while loading one endpoint of the current connection, the other
+//!   endpoint is pinned (cannot be chosen as victim) — with M ≥ 3 a
+//!   victim always exists;
+//! * MIN is implemented offline from the order via a backward next-use
+//!   scan, exactly as the paper notes is "trivial to implement offline".
+//!
+//! §Perf: the simulator supports **checkpoint / suffix re-simulation**
+//! for the annealing loop — a window move leaves the order's prefix
+//! untouched, so the cache state at the first changed position is
+//! identical and only the suffix needs to be re-simulated
+//! ([`Simulator::run_with_checkpoints`] + [`Simulator::run_suffix`]).
+
+use super::stats::IoStats;
+use crate::ffnn::graph::{Ffnn, NeuronId, NeuronKind};
+use crate::ffnn::topo::ConnOrder;
+use crate::memory::{PolicyKind, ResidentSet, ResidentSnapshot, NEVER};
+
+/// Saved mid-run simulator state (taken *before* processing `pos`).
+#[derive(Clone, Debug)]
+pub struct SimCheckpoint {
+    pub pos: usize,
+    remaining_in: Vec<u32>,
+    remaining_out: Vec<u32>,
+    dirty: Vec<bool>,
+    written_final: Vec<bool>,
+    stats: IoStats,
+    residents: ResidentSnapshot,
+}
+
+/// Reusable simulator: allocate once per network, run many orders (the
+/// simulated-annealing loop calls it millions of times).
+pub struct Simulator<'n> {
+    net: &'n Ffnn,
+    // Per-neuron state, reset (or checkpoint-restored) per run.
+    remaining_in: Vec<u32>,
+    remaining_out: Vec<u32>,
+    dirty: Vec<bool>,
+    written_final: Vec<bool>,
+    is_output: Vec<bool>,
+    // MIN next-use arrays, indexed by position in the order.
+    next_a: Vec<u32>,
+    next_b: Vec<u32>,
+    // Backward-scan scratch; after a scan down to position p,
+    // `last_seen[v]` is the first touch of v at position ≥ p.
+    last_seen: Vec<u32>,
+    // Reused resident set (allocation-free across SA evaluations).
+    residents: ResidentSet,
+}
+
+impl<'n> Simulator<'n> {
+    pub fn new(net: &'n Ffnn) -> Simulator<'n> {
+        let n = net.n_neurons();
+        Simulator {
+            net,
+            remaining_in: vec![0; n],
+            remaining_out: vec![0; n],
+            dirty: vec![false; n],
+            written_final: vec![false; n],
+            is_output: (0..n)
+                .map(|v| net.kind(v as NeuronId) == NeuronKind::Output)
+                .collect(),
+            next_a: Vec::new(),
+            next_b: Vec::new(),
+            last_seen: vec![NEVER; n],
+            residents: ResidentSet::new(PolicyKind::Lru, 3, n),
+        }
+    }
+
+    pub fn net(&self) -> &Ffnn {
+        self.net
+    }
+
+    /// Simulate the full order; returns exact I/O counts.
+    pub fn run(&mut self, order: &ConnOrder, m: usize, policy: PolicyKind) -> IoStats {
+        self.run_impl(order, m, policy, u64::MAX, None, 0, None)
+            .expect("unbounded run cannot abort")
+    }
+
+    /// Simulate, aborting early (returning `None`) once the total I/O
+    /// count exceeds `abort_above`.
+    pub fn run_bounded(
+        &mut self,
+        order: &ConnOrder,
+        m: usize,
+        policy: PolicyKind,
+        abort_above: u64,
+    ) -> Option<IoStats> {
+        self.run_impl(order, m, policy, abort_above, None, 0, None)
+    }
+
+    /// Full run that additionally captures a checkpoint every
+    /// `every` positions (positions `every, 2·every, …`).
+    pub fn run_with_checkpoints(
+        &mut self,
+        order: &ConnOrder,
+        m: usize,
+        policy: PolicyKind,
+        every: usize,
+    ) -> (IoStats, Vec<SimCheckpoint>) {
+        let mut ckpts = Vec::new();
+        let stats = self
+            .run_impl(order, m, policy, u64::MAX, None, every.max(1), Some(&mut ckpts))
+            .expect("unbounded run cannot abort");
+        (stats, ckpts)
+    }
+
+    /// Re-simulate only the suffix of `order` starting from a checkpoint
+    /// taken on an order with an **identical prefix** up to `ckpt.pos`.
+    pub fn run_suffix(
+        &mut self,
+        order: &ConnOrder,
+        m: usize,
+        policy: PolicyKind,
+        ckpt: &SimCheckpoint,
+        abort_above: u64,
+    ) -> Option<IoStats> {
+        self.run_impl(order, m, policy, abort_above, Some(ckpt), 0, None)
+    }
+
+    fn reset(&mut self) {
+        let net = self.net;
+        for v in 0..net.n_neurons() {
+            self.remaining_in[v] = net.in_degree(v as NeuronId) as u32;
+            self.remaining_out[v] = net.out_degree(v as NeuronId) as u32;
+            self.dirty[v] = false;
+            self.written_final[v] = false;
+        }
+    }
+
+    /// Backward scan computing, for positions `down_to..W`, the next
+    /// position (> k) at which the src/dst of the k-th connection is
+    /// touched again (`NEVER` if none). Afterwards `last_seen[v]` holds
+    /// the first touch of `v` at a position ≥ `down_to`.
+    fn compute_next_uses(&mut self, order: &ConnOrder, down_to: usize) {
+        let w = order.len();
+        self.next_a.resize(w, NEVER);
+        self.next_b.resize(w, NEVER);
+        for s in self.last_seen.iter_mut() {
+            *s = NEVER;
+        }
+        let conns = self.net.conns();
+        for k in (down_to..w).rev() {
+            let c = conns[order.as_slice()[k] as usize];
+            let (a, b) = (c.src as usize, c.dst as usize);
+            self.next_a[k] = self.last_seen[a];
+            self.next_b[k] = self.last_seen[b];
+            self.last_seen[a] = k as u32;
+            self.last_seen[b] = k as u32;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_impl(
+        &mut self,
+        order: &ConnOrder,
+        m: usize,
+        policy: PolicyKind,
+        abort_above: u64,
+        resume: Option<&SimCheckpoint>,
+        ckpt_every: usize,
+        mut out_ckpts: Option<&mut Vec<SimCheckpoint>>,
+    ) -> Option<IoStats> {
+        debug_assert_eq!(order.len(), self.net.n_conns());
+        debug_assert!(order.is_topological(self.net), "order must be topological");
+
+        let mut residents = std::mem::replace(
+            &mut self.residents,
+            ResidentSet::new(PolicyKind::Lru, 3, 0),
+        );
+        residents.reconfigure(policy, m, self.net.n_neurons());
+
+        let (start, mut stats) = match resume {
+            None => {
+                self.reset();
+                if policy == PolicyKind::Min {
+                    self.compute_next_uses(order, 0);
+                }
+                (0usize, IoStats::default())
+            }
+            Some(ckpt) => {
+                self.remaining_in.copy_from_slice(&ckpt.remaining_in);
+                self.remaining_out.copy_from_slice(&ckpt.remaining_out);
+                self.dirty.copy_from_slice(&ckpt.dirty);
+                self.written_final.copy_from_slice(&ckpt.written_final);
+                residents.restore(&ckpt.residents);
+                if policy == PolicyKind::Min {
+                    // Next-use values from the prefix are stale for the
+                    // new suffix: recompute down to the checkpoint and
+                    // rekey the residents with their first suffix touch.
+                    self.compute_next_uses(order, ckpt.pos);
+                    residents.rekey_min(&self.last_seen);
+                }
+                (ckpt.pos, ckpt.stats)
+            }
+        };
+
+        let conns = self.net.conns();
+        for (k, &ci) in order.as_slice().iter().enumerate().skip(start) {
+            if ckpt_every > 0 && k > 0 && k % ckpt_every == 0 {
+                if let Some(ckpts) = out_ckpts.as_deref_mut() {
+                    ckpts.push(SimCheckpoint {
+                        pos: k,
+                        remaining_in: self.remaining_in.clone(),
+                        remaining_out: self.remaining_out.clone(),
+                        dirty: self.dirty.clone(),
+                        written_final: self.written_final.clone(),
+                        stats,
+                        residents: residents.snapshot(),
+                    });
+                }
+            }
+            let c = conns[ci as usize];
+            let (a, b) = (c.src, c.dst);
+            let now = k as u32;
+            let (next_a, next_b) = if policy == PolicyKind::Min {
+                (self.next_a[k], self.next_b[k])
+            } else {
+                (NEVER, NEVER)
+            };
+
+            // 1. Read the connection triple itself.
+            stats.conn_reads += 1;
+
+            // 2. Ensure the input-neuron value is resident.
+            self.ensure(&mut residents, a, [b, NEVER], now, next_a, &mut stats);
+            // 3. Ensure the partial sum (bias at first touch) of b.
+            self.ensure(&mut residents, b, [a, NEVER], now, next_b, &mut stats);
+
+            // 4. Multiply-accumulate (free): b's value changes.
+            self.dirty[b as usize] = true;
+            self.remaining_in[b as usize] -= 1;
+            // Activation after the last incoming connection (free, value
+            // changes — b stays dirty).
+            self.remaining_out[a as usize] -= 1;
+
+            if stats.total() > abort_above {
+                self.residents = residents;
+                return None;
+            }
+        }
+        self.residents = residents;
+
+        // Final flush: every finished output value must reach slow memory.
+        for v in 0..self.net.n_neurons() {
+            if self.is_output[v] && !self.written_final[v] && self.net.in_degree(v as u32) > 0 {
+                stats.output_writes += 1;
+            }
+        }
+        Some(stats)
+    }
+
+    #[inline]
+    fn ensure(
+        &mut self,
+        residents: &mut ResidentSet,
+        v: NeuronId,
+        pinned: [NeuronId; 2],
+        now: u32,
+        next: u32,
+        stats: &mut IoStats,
+    ) {
+        if residents.contains(v) {
+            residents.touch(v, now, next);
+            return;
+        }
+        if residents.is_full() {
+            let victim = residents.evict(pinned);
+            self.on_evict(victim, stats);
+        }
+        // Read from slow memory: first touch loads the input value / bias;
+        // later touches re-load the copy written at eviction time (any
+        // value touched again is "needed", so the efficient eviction
+        // policy wrote it if it was dirty). Either way: 1 read, clean.
+        stats.value_reads += 1;
+        self.dirty[v as usize] = false;
+        residents.insert(v, now, next);
+    }
+
+    #[inline]
+    fn on_evict(&mut self, victim: NeuronId, stats: &mut IoStats) {
+        stats.evictions += 1;
+        let vi = victim as usize;
+        if !self.dirty[vi] {
+            return; // clean: slow-memory copy is current — free delete.
+        }
+        let finished = self.remaining_in[vi] == 0;
+        let needed = self.remaining_in[vi] > 0           // partial sum still accumulating
+            || (finished && self.remaining_out[vi] > 0)  // value still feeds connections
+            || (self.is_output[vi] && !self.written_final[vi]); // unwritten output
+        if !needed {
+            return; // dead: free delete even though dirty.
+        }
+        if finished && self.is_output[vi] {
+            stats.output_writes += 1;
+            self.written_final[vi] = true;
+        } else {
+            stats.temp_writes += 1;
+        }
+        self.dirty[vi] = false;
+    }
+}
+
+/// One-shot convenience wrapper around [`Simulator`].
+pub fn simulate(net: &Ffnn, order: &ConnOrder, m: usize, policy: PolicyKind) -> IoStats {
+    Simulator::new(net).run(order, m, policy)
+}
+
+/// One-shot bounded simulation (see [`Simulator::run_bounded`]).
+pub fn simulate_bounded(
+    net: &Ffnn,
+    order: &ConnOrder,
+    m: usize,
+    policy: PolicyKind,
+    abort_above: u64,
+) -> Option<IoStats> {
+    Simulator::new(net).run_bounded(order, m, policy, abort_above)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::theorem1_bounds;
+    use crate::ffnn::extremal::{lemma1_net, lemma2_tree, prop2_chain_order, prop2_chains};
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::graph::{Conn, NeuronKind};
+    use crate::ffnn::topo::{layerwise_order, two_optimal_order};
+    use crate::reorder::neighbor::{apply_move, WindowMove};
+    use crate::util::rng::Pcg64;
+
+    /// Large memory ⇒ exact lower bound: N+W reads, S writes.
+    #[test]
+    fn big_memory_hits_lower_bound() {
+        let mut rng = Pcg64::seed_from(1);
+        let net = random_mlp(&MlpSpec::new(3, 20, 0.3), &mut rng);
+        let order = two_optimal_order(&net);
+        let m = net.n_neurons() + 2; // everything fits
+        for policy in PolicyKind::ALL {
+            let s = simulate(&net, &order, m, policy);
+            assert_eq!(
+                s.reads(),
+                (net.n_conns() + net.n_neurons()) as u64,
+                "{policy:?}: reads must be W+N"
+            );
+            assert_eq!(s.writes(), net.n_outputs() as u64, "{policy:?}: writes must be S");
+        }
+    }
+
+    /// Lemma 1: consecutive layers fit in M−1 ⇒ lower bound exactly, with
+    /// the layer-wise order and MIN.
+    #[test]
+    fn lemma1_layer_pairs_fit() {
+        let mut rng = Pcg64::seed_from(2);
+        let sizes = [5, 6, 5, 3];
+        let net = lemma1_net(&sizes, &mut rng);
+        let m = 12; // max consecutive pair = 11 ≤ M−1
+        let order = layerwise_order(&net);
+        let s = simulate(&net, &order, m, PolicyKind::Min);
+        let b = theorem1_bounds(&net);
+        assert_eq!(s.total(), b.total_lower, "Lemma 1 nets attain the lower bound");
+        assert_eq!(s.reads(), b.read_lower);
+        assert_eq!(s.writes(), b.write_lower);
+    }
+
+    /// Lemma 2: the star tree attains the upper bounds exactly when
+    /// memory is small: every connection re-reads an input.
+    #[test]
+    fn lemma2_star_attains_upper_bound() {
+        let mut rng = Pcg64::seed_from(3);
+        let net = lemma2_tree(50, &mut rng);
+        let order = two_optimal_order(&net);
+        let s = simulate(&net, &order, 3, PolicyKind::Min);
+        let b = theorem1_bounds(&net);
+        // rI/Os = 2W + N − I and total = 2(W + N − I).
+        assert_eq!(s.reads(), b.read_upper);
+        assert_eq!(s.total(), b.total_upper);
+    }
+
+    /// MIN is optimal for a fixed order: never worse than LRU/RR.
+    #[test]
+    fn min_never_worse_than_lru_rr() {
+        for seed in 0..5u64 {
+            let mut r = Pcg64::seed_from(seed);
+            let net = random_mlp(&MlpSpec::new(4, 30, 0.2), &mut r);
+            let order = two_optimal_order(&net);
+            let m = 12;
+            let min = simulate(&net, &order, m, PolicyKind::Min).total();
+            let lru = simulate(&net, &order, m, PolicyKind::Lru).total();
+            let rr = simulate(&net, &order, m, PolicyKind::Rr).total();
+            assert!(min <= lru, "MIN {min} > LRU {lru}");
+            assert!(min <= rr, "MIN {min} > RR {rr}");
+        }
+    }
+
+    /// Theorem 1: the 2-optimal order stays within the bounds.
+    #[test]
+    fn two_optimal_within_theorem1_bounds() {
+        for seed in 0..5u64 {
+            let mut rng = Pcg64::seed_from(100 + seed);
+            let net = random_mlp(&MlpSpec::new(4, 40, 0.15), &mut rng);
+            let order = two_optimal_order(&net);
+            let b = theorem1_bounds(&net);
+            let s = simulate(&net, &order, 10, PolicyKind::Min);
+            assert!(s.reads() >= b.read_lower);
+            assert!(s.reads() <= b.read_upper, "reads {} > upper {}", s.reads(), b.read_upper);
+            assert!(s.writes() >= b.write_lower);
+            assert!(s.writes() <= b.write_upper, "writes {} > {}", s.writes(), b.write_upper);
+            assert!(s.total() >= b.total_lower);
+            assert!(s.total() <= b.total_upper);
+        }
+    }
+
+    /// Proposition 2: layer-wise inference on the chains network needs
+    /// ≥ M·c temp writes; chain-after-chain needs at most 1 write total
+    /// beyond the output.
+    #[test]
+    fn prop2_layerwise_vs_chain_order() {
+        let (m_param, c) = (6, 4);
+        let mut rng = Pcg64::seed_from(5);
+        let net = prop2_chains(m_param, c, &mut rng);
+        let m = m_param + 1; // fast memory M; capacity M−1 = 6 < 2M = 12 chains
+
+        let lw = simulate(&net, &layerwise_order(&net), m, PolicyKind::Min);
+        let ch = simulate(&net, &prop2_chain_order(m_param, c), m, PolicyKind::Min);
+
+        assert!(
+            lw.temp_writes >= (m_param * c) as u64 / 2,
+            "layer-wise must thrash: temp_writes = {}",
+            lw.temp_writes
+        );
+        assert_eq!(ch.temp_writes, 0, "chain-after-chain needs no temp writes");
+        assert!(ch.total() < lw.total());
+    }
+
+    /// The simulator is deterministic.
+    #[test]
+    fn deterministic() {
+        let mut rng = Pcg64::seed_from(6);
+        let net = random_mlp(&MlpSpec::new(3, 25, 0.25), &mut rng);
+        let order = two_optimal_order(&net);
+        let a = simulate(&net, &order, 8, PolicyKind::Lru);
+        let b = simulate(&net, &order, 8, PolicyKind::Lru);
+        assert_eq!(a, b);
+    }
+
+    /// Bounded run aborts when exceeding the threshold and matches the
+    /// unbounded result otherwise.
+    #[test]
+    fn bounded_run() {
+        let mut rng = Pcg64::seed_from(7);
+        let net = random_mlp(&MlpSpec::new(3, 25, 0.25), &mut rng);
+        let order = two_optimal_order(&net);
+        let full = simulate(&net, &order, 8, PolicyKind::Min);
+        assert_eq!(
+            simulate_bounded(&net, &order, 8, PolicyKind::Min, full.total()),
+            Some(full)
+        );
+        assert_eq!(
+            simulate_bounded(&net, &order, 8, PolicyKind::Min, full.total() / 2),
+            None
+        );
+    }
+
+    /// Tiny hand-checked instance: 2 inputs → 1 output, M large.
+    /// Reads: 2 conns + 2 inputs + 1 bias = 5; writes: 1 output.
+    #[test]
+    fn hand_counted_tiny_net() {
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Input, NeuronKind::Output],
+            vec![1.0, 2.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let s = simulate(&net, &ConnOrder::identity(2), 10, PolicyKind::Lru);
+        assert_eq!(s.conn_reads, 2);
+        assert_eq!(s.value_reads, 3);
+        assert_eq!(s.temp_writes, 0);
+        assert_eq!(s.output_writes, 1);
+        assert_eq!(s.evictions, 0);
+    }
+
+    /// Hand-checked eviction case: M = 3 (capacity 2) on the same tiny
+    /// net; MIN evicts the dead input for free.
+    #[test]
+    fn hand_counted_eviction_min() {
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Input, NeuronKind::Output],
+            vec![1.0, 2.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let s = simulate(&net, &ConnOrder::identity(2), 3, PolicyKind::Min);
+        assert_eq!(s.value_reads, 3);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.temp_writes, 0);
+        assert_eq!(s.output_writes, 1);
+        assert_eq!(s.total(), 2 + 3 + 1);
+    }
+
+    /// Dirty partial eviction must cost a write and a later re-read.
+    #[test]
+    fn dirty_partial_write_and_reread() {
+        let net = Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Output,
+                NeuronKind::Output,
+            ],
+            vec![0.0; 4],
+            vec![
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 0, dst: 3, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 3, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let s = simulate(&net, &ConnOrder::identity(4), 3, PolicyKind::Lru);
+        assert!(s.temp_writes >= 1, "expected thrashing: {s}");
+        assert!(s.value_reads > 4, "re-reads required: {s}");
+        assert_eq!(s.output_writes, 2);
+    }
+
+    /// Inputs re-read after eviction are never written (clean values).
+    #[test]
+    fn inputs_never_written() {
+        let mut rng = Pcg64::seed_from(8);
+        let net = lemma2_tree(30, &mut rng);
+        let s = simulate(&net, &ConnOrder::identity(30), 3, PolicyKind::Lru);
+        assert_eq!(s.temp_writes, 0, "star tree has no temporaries: {s}");
+        assert_eq!(s.output_writes, 1);
+    }
+
+    /// §Perf correctness: suffix re-simulation from any checkpoint must
+    /// give exactly the full-run counts — for the same order and for a
+    /// window-move-perturbed order (prefix identical up to the move).
+    #[test]
+    fn suffix_resimulation_matches_full_run() {
+        for policy in PolicyKind::ALL {
+            for seed in 0..4u64 {
+                let mut rng = Pcg64::seed_from(300 + seed);
+                let net = random_mlp(&MlpSpec::new(4, 22, 0.3), &mut rng);
+                let order = two_optimal_order(&net);
+                let m = 10;
+                let mut sim = Simulator::new(&net);
+                let every = (net.n_conns() / 7).max(1);
+                let (full, ckpts) = sim.run_with_checkpoints(&order, m, policy, every);
+                assert!(!ckpts.is_empty());
+
+                // Same order: every checkpoint resumes to the full result.
+                for ckpt in &ckpts {
+                    let resumed = sim
+                        .run_suffix(&order, m, policy, ckpt, u64::MAX)
+                        .unwrap();
+                    assert_eq!(resumed, full, "{policy:?} ckpt@{}", ckpt.pos);
+                }
+
+                // Perturbed order: checkpoints at/before the first change
+                // must reproduce the perturbed full run. Exact for LRU/RR
+                // (their prefix decisions depend only on the past); for
+                // MIN the prefix evictions peek past the checkpoint, so
+                // the resumed score may drift by a few I/Os — the
+                // annealing loop re-scores accepted orders exactly.
+                let mut cand = ConnOrder::from_perm(order.as_slice().to_vec());
+                let mv = WindowMove::sample(&mut rng, cand.len(), 12);
+                let first_changed = apply_move(&net, cand.as_mut_slice(), mv);
+                let cand_full = sim.run(&cand, m, policy);
+                for ckpt in ckpts.iter().filter(|c| c.pos <= first_changed) {
+                    let resumed = sim
+                        .run_suffix(&cand, m, policy, ckpt, u64::MAX)
+                        .unwrap();
+                    if policy == PolicyKind::Min {
+                        let (a, b) = (resumed.total(), cand_full.total());
+                        let drift = a.abs_diff(b);
+                        assert!(
+                            drift <= 8,
+                            "{policy:?} perturbed ckpt@{}: drift {drift} too large ({a} vs {b})",
+                            ckpt.pos
+                        );
+                    } else {
+                        assert_eq!(
+                            resumed, cand_full,
+                            "{policy:?} perturbed ckpt@{} (first change {first_changed})",
+                            ckpt.pos
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Suffix runs honour the abort bound too.
+    #[test]
+    fn suffix_run_bounded_aborts() {
+        let mut rng = Pcg64::seed_from(9);
+        let net = random_mlp(&MlpSpec::new(3, 25, 0.25), &mut rng);
+        let order = two_optimal_order(&net);
+        let mut sim = Simulator::new(&net);
+        let (full, ckpts) = sim.run_with_checkpoints(&order, 8, PolicyKind::Min, 100);
+        let ckpt = &ckpts[0];
+        assert_eq!(
+            sim.run_suffix(&order, 8, PolicyKind::Min, ckpt, full.total()),
+            Some(full)
+        );
+        assert_eq!(
+            sim.run_suffix(&order, 8, PolicyKind::Min, ckpt, ckpt.stats.total() + 1),
+            None
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! The Algorithm-1 inference simulator: executes a topological connection
+//! order against the two-level memory model and counts read-/write-I/Os
+//! exactly (paper §II, §VI.A "we implement Algorithm 1 and cache
+//! simulation, along with LRU, RR, and MIN eviction policies").
+
+mod engine;
+mod stats;
+
+pub use engine::{simulate, simulate_bounded, Simulator};
+pub use stats::IoStats;

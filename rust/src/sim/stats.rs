@@ -1,0 +1,103 @@
+//! I/O counters produced by the simulator.
+
+use crate::util::json::Json;
+
+/// Exact I/O counts of one simulated inference computation.
+///
+/// The paper's quantities: read-I/Os = `conn_reads + value_reads`,
+/// write-I/Os = `temp_writes + output_writes`, total = their sum.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Reads of connection triples (always W: each connection is read
+    /// exactly once).
+    pub conn_reads: u64,
+    /// Reads of neuron values: first touches (input values / biases) and
+    /// re-reads of previously evicted values.
+    pub value_reads: u64,
+    /// Writes of temporary values (evicted dirty partial sums and evicted
+    /// finished hidden values that are still needed).
+    pub temp_writes: u64,
+    /// Writes of finished output-neuron values (at eviction or final
+    /// flush) — at least S by definition of the inference problem.
+    pub output_writes: u64,
+    /// Number of evictions performed (free deletions included).
+    pub evictions: u64,
+}
+
+impl IoStats {
+    /// Total read-I/Os (the paper's rI/Os).
+    pub fn reads(&self) -> u64 {
+        self.conn_reads + self.value_reads
+    }
+
+    /// Total write-I/Os (the paper's wI/Os).
+    pub fn writes(&self) -> u64 {
+        self.temp_writes + self.output_writes
+    }
+
+    /// Total I/Os.
+    pub fn total(&self) -> u64 {
+        self.reads() + self.writes()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("reads", self.reads())
+            .set("writes", self.writes())
+            .set("total", self.total())
+            .set("conn_reads", self.conn_reads)
+            .set("value_reads", self.value_reads)
+            .set("temp_writes", self.temp_writes)
+            .set("output_writes", self.output_writes)
+            .set("evictions", self.evictions)
+    }
+}
+
+impl std::fmt::Display for IoStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "I/Os: total={} (reads={} [conns={} values={}], writes={} [temp={} out={}])",
+            self.total(),
+            self.reads(),
+            self.conn_reads,
+            self.value_reads,
+            self.writes(),
+            self.temp_writes,
+            self.output_writes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let s = IoStats {
+            conn_reads: 10,
+            value_reads: 5,
+            temp_writes: 2,
+            output_writes: 1,
+            evictions: 4,
+        };
+        assert_eq!(s.reads(), 15);
+        assert_eq!(s.writes(), 3);
+        assert_eq!(s.total(), 18);
+    }
+
+    #[test]
+    fn json_fields() {
+        let s = IoStats {
+            conn_reads: 1,
+            value_reads: 2,
+            temp_writes: 3,
+            output_writes: 4,
+            evictions: 5,
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("total").unwrap().as_u64(), Some(10));
+        assert_eq!(j.get("evictions").unwrap().as_u64(), Some(5));
+    }
+}

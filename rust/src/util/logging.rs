@@ -1,0 +1,122 @@
+//! Tiny leveled logger (the `log`/`env_logger` pair is replaced by a
+//! single-file substrate). Level comes from `SPARSEFLOW_LOG`
+//! (`error|warn|info|debug|trace`, default `info`). Output goes to stderr
+//! so benches can pipe stdout tables cleanly.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static INIT: Once = Once::new();
+
+fn current_level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != u8::MAX {
+        return l;
+    }
+    INIT.call_once(|| {
+        let lvl = std::env::var("SPARSEFLOW_LOG")
+            .ok()
+            .and_then(|s| Level::from_env(&s))
+            .unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Override the level programmatically (tests, quiet benches).
+pub fn set_level(level: Level) {
+    INIT.call_once(|| {});
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= current_level()
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let stderr = std::io::stderr();
+    let mut handle = stderr.lock();
+    let _ = writeln!(handle, "[{:5}] {module}: {msg}", level.as_str());
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)+)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)+)) };
+}
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)+)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)+) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_env("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_env("warning"), Some(Level::Warn));
+        assert_eq!(Level::from_env("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_gates() {
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+    }
+}

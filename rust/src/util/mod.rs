@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-tree (the build environment is
+//! offline; `rand`, `serde`, `tokio`, `criterion`, `proptest` are not
+//! available — see DESIGN.md §1).
+
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timing;

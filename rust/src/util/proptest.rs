@@ -1,0 +1,163 @@
+//! Minimal property-based testing driver (the `proptest` crate is not
+//! available offline).
+//!
+//! A property test runs `cases` random cases. Each case derives its own RNG
+//! from a base seed, so a failure report pinpoints the failing seed and the
+//! case reproduces with `check_seeded`. Shrinking is supported through an
+//! optional user-supplied simplifier that proposes smaller variants of a
+//! failing input.
+
+use crate::util::rng::Pcg64;
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+///
+/// Panics with the failing seed and message on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let base_seed = env_seed();
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::seed_from(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`], but with a shrinker: on failure, repeatedly asks
+/// `shrink` for simpler candidates that still fail, and reports the
+/// smallest one found.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+) {
+    let base_seed = env_seed();
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::seed_from(seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop, bounded to avoid pathological cases.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  {best_msg}\n  shrunk input: {best:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case with an explicit seed (for debugging failures).
+pub fn check_seeded<T: std::fmt::Debug>(
+    seed: u64,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let mut rng = Pcg64::seed_from(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("seeded property failed (seed {seed}): {msg}\n  input: {input:?}");
+    }
+}
+
+fn env_seed() -> u64 {
+    std::env::var("SPARSEFLOW_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            "reverse-involution",
+            50,
+            |rng| {
+                let n = rng.index(20);
+                (0..n).map(|_| rng.next_u32()).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice != identity".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |rng| rng.next_u32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: 10")]
+    fn shrinker_minimizes() {
+        // Property: x < 10. Gen produces large x; shrinker decrements.
+        check_shrink(
+            "less-than-ten",
+            1,
+            |_| 100u32,
+            |&x| if x < 10 { Ok(()) } else { Err(format!("{x} >= 10")) },
+            |&x| if x > 0 { vec![x - 1] } else { vec![] },
+        );
+    }
+
+    #[test]
+    fn seeded_repro_runs() {
+        check_seeded(42, |rng| rng.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal thread-pool + parallel-map substrate (tokio is unavailable
+//! offline; the coordinator and the parameter sweeps only need bounded
+//! fan-out over CPU cores).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Parallel map over `items` with up to `workers` scoped threads.
+///
+/// Results come back in input order. `f` must be `Sync` (it is shared) and
+/// the items are handed out via an atomic work index, so uneven per-item
+/// cost balances automatically.
+pub fn par_map<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let fref = &f;
+            let nextref = &next;
+            let sp = slots_ptr;
+            scope.spawn(move || {
+                // Force whole-struct capture: edition-2021 disjoint capture
+                // would otherwise capture the raw pointer field directly,
+                // which is not Send.
+                let sp = sp;
+                loop {
+                let i = nextref.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = fref(&items[i]);
+                // SAFETY: each index i is claimed by exactly one worker via
+                // the atomic counter, so writes to slots are disjoint, and
+                // the scope joins all threads before `slots` is read.
+                unsafe { *sp.0.add(i) = Some(r) };
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker wrote slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// Manual Copy/Clone: the derive would add a spurious `T: Copy` bound.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: see par_map — disjoint writes, joined before read.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived pool of worker threads consuming boxed jobs; used by the
+/// serving coordinator for request execution.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("sparseflow-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job for execution.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel -> workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * x).collect();
+        let parallel = par_map(8, &items, |x| x * x);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(4, &empty, |x| *x).is_empty());
+        assert_eq!(par_map(4, &[5u32], |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn par_map_one_worker() {
+        let items: Vec<u64> = (0..10).collect();
+        assert_eq!(par_map(1, &items, |x| x + 1), (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang; must run queued jobs before exit
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,259 @@
+//! Measurement statistics following the paper's reporting methodology
+//! (Hoefler & Belli, SC'15 [35]): medians with 95% *nonparametric*
+//! confidence intervals, and Tukey's method for outlier identification
+//! (used by the paper for one MKL run in Fig. 8).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// 95% nonparametric CI of the median (order-statistic based).
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let (lo_idx, hi_idx) = median_ci_indices(n, 0.95);
+        Summary {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            median: median_sorted(&sorted),
+            ci_lo: sorted[lo_idx],
+            ci_hi: sorted[hi_idx],
+        }
+    }
+}
+
+fn median_sorted(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Percentile (nearest-rank) of an unsorted sample, `p` in [0, 100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// Order-statistic indices bracketing a `level` CI of the median.
+///
+/// Uses the binomial(n, 1/2) quantiles: the CI is
+/// `[x_(l+1), x_(u)]` where `P(l < B ≤ u) ≥ level`. For the small n used in
+/// benchmarking (5..100) we compute the binomial CDF directly.
+fn median_ci_indices(n: usize, level: f64) -> (usize, usize) {
+    if n == 1 {
+        return (0, 0);
+    }
+    // Binomial(n, 0.5) pmf via cumulative products to avoid overflow.
+    let mut pmf = vec![0.0f64; n + 1];
+    // log C(n,k) + n*log(0.5)
+    let mut logc = 0.0f64; // log C(n,0)
+    let log_half_n = n as f64 * 0.5f64.ln();
+    for (k, p) in pmf.iter_mut().enumerate() {
+        *p = (logc + log_half_n).exp();
+        // update log C(n,k+1) = log C(n,k) + ln((n-k)/(k+1))
+        if k < n {
+            logc += ((n - k) as f64 / (k + 1) as f64).ln();
+        }
+    }
+    // Find symmetric (l, u) around the median minimizing width with
+    // coverage ≥ level.
+    let alpha = 1.0 - level;
+    // Lower cut l: largest l with CDF(l-1) ≤ alpha/2.
+    let mut cum = 0.0;
+    let mut l = 0usize;
+    for (k, p) in pmf.iter().enumerate() {
+        if cum + p > alpha / 2.0 {
+            l = k;
+            break;
+        }
+        cum += p;
+    }
+    let mut cum_hi = 0.0;
+    let mut u = n - 1;
+    for k in (0..=n).rev() {
+        if cum_hi + pmf[k] > alpha / 2.0 {
+            u = k;
+            break;
+        }
+        cum_hi += pmf[k];
+    }
+    let lo = l.min(n - 1);
+    let hi = u.saturating_sub(1).max(lo).min(n - 1);
+    (lo, hi)
+}
+
+/// Tukey's fences: values outside `[q1 - k*iqr, q3 + k*iqr]` (k = 1.5) are
+/// outliers. Returns the filtered sample and the removed outliers.
+pub fn tukey_filter(samples: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    if samples.len() < 4 {
+        return (samples.to_vec(), Vec::new());
+    }
+    let q1 = percentile(samples, 25.0);
+    let q3 = percentile(samples, 75.0);
+    let iqr = q3 - q1;
+    let (lo, hi) = (q1 - 1.5 * iqr, q3 + 1.5 * iqr);
+    let mut kept = Vec::new();
+    let mut dropped = Vec::new();
+    for &s in samples {
+        if s < lo || s > hi {
+            dropped.push(s);
+        } else {
+            kept.push(s);
+        }
+    }
+    (kept, dropped)
+}
+
+/// Stopwatch that measures a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Repeatedly time a closure: `reps` measured runs after `warmup` runs.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        times.push(start.elapsed().as_secs_f64());
+    }
+    times
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{seconds:.2} s")
+    }
+}
+
+/// Simple wall-clock deadline helper for budgeted loops.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    pub fn after_secs(secs: f64) -> Self {
+        Deadline {
+            start: Instant::now(),
+            budget: Duration::from_secs_f64(secs),
+        }
+    }
+    pub fn expired(&self) -> bool {
+        self.start.elapsed() >= self.budget
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_odd_even_median() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        let s = Summary::of(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn summary_min_max_mean() {
+        let s = Summary::of(&[2.0, 8.0, 5.0]);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 8.0);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ci_brackets_median() {
+        let data: Vec<f64> = (1..=25).map(|x| x as f64).collect();
+        let s = Summary::of(&data);
+        assert!(s.ci_lo <= s.median && s.median <= s.ci_hi);
+        assert!(s.ci_lo > s.min && s.ci_hi < s.max, "CI should be interior for n=25");
+    }
+
+    #[test]
+    fn ci_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!((s.ci_lo, s.ci_hi), (7.0, 7.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let data = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&data, 50.0), 3.0);
+        assert_eq!(percentile(&data, 100.0), 5.0);
+        assert_eq!(percentile(&data, 1.0), 1.0);
+    }
+
+    #[test]
+    fn tukey_removes_paper_outlier() {
+        // The paper's Fig. 8 case: nine ~17ms runs, one 106ms outlier.
+        let mut runs = vec![17.0, 17.2, 16.9, 17.1, 17.3, 16.8, 17.0, 17.2, 16.95];
+        runs.push(106.0);
+        let (kept, dropped) = tukey_filter(&runs);
+        assert_eq!(dropped, vec![106.0]);
+        assert_eq!(kept.len(), 9);
+    }
+
+    #[test]
+    fn tukey_keeps_clean_sample() {
+        let runs = vec![1.0, 1.1, 0.9, 1.05, 0.95];
+        let (kept, dropped) = tukey_filter(&runs);
+        assert!(dropped.is_empty());
+        assert_eq!(kept.len(), 5);
+    }
+
+    #[test]
+    fn measure_collects_reps() {
+        let times = measure(1, 5, || std::hint::black_box(2 + 2));
+        assert_eq!(times.len(), 5);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-6).ends_with("µs"));
+        assert!(fmt_duration(2.5e-3).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with("s"));
+    }
+}

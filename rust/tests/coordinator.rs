@@ -1,0 +1,188 @@
+//! Coordinator integration tests: real engines behind the server, TCP
+//! front-end round-trips, router policies, failure injection.
+
+use sparseflow::coordinator::server::drive_load;
+use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
+use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::router::RoutePolicy;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::memory::PolicyKind;
+use sparseflow::util::json::Json;
+use sparseflow::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn test_net() -> sparseflow::ffnn::graph::Ffnn {
+    random_mlp(&MlpSpec::new(3, 24, 0.3), &mut Pcg64::seed_from(0xC00F))
+}
+
+/// Full pipeline: generate → reorder → serve → responses match direct
+/// engine calls.
+#[test]
+fn served_outputs_match_direct_inference() {
+    let net = test_net();
+    let initial = two_optimal_order(&net);
+    let (best, _) = reorder(&net, &initial, &AnnealConfig::new(12, PolicyKind::Min, 500));
+    let engine = Arc::new(StreamingEngine::with_name(&net, &best, "stream-reordered"));
+
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", Arc::clone(&engine) as Arc<dyn Engine>));
+    let server = Server::start(router, ServerConfig::default());
+    let h = server.handle();
+
+    let mut rng = Pcg64::seed_from(1);
+    for _ in 0..20 {
+        let input: Vec<f32> = (0..net.n_inputs()).map(|_| rng.normal() as f32).collect();
+        let resp = h.infer("mlp", input.clone()).unwrap();
+        assert_eq!(resp.engine, "stream-reordered");
+
+        let x = BatchMatrix::from_rows(net.n_inputs(), 1, input);
+        let want = engine.infer(&x);
+        for (r, &got) in resp.output.iter().enumerate() {
+            assert!((got - want.row(r)[0]).abs() < 1e-5);
+        }
+    }
+}
+
+/// Two engines on the same model: the density heuristic routes sparse
+/// networks to the streaming engine.
+#[test]
+fn router_policy_served() {
+    let net = test_net();
+    let stream: Arc<dyn Engine> =
+        Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let csr: Arc<dyn Engine> = Arc::new(LayerwiseEngine::new(&net));
+    let mut router = Router::new();
+    router.register(
+        ModelVariant::new("auto", stream)
+            .with_engine(csr)
+            .with_policy(RoutePolicy::DensityHeuristic, net.density()),
+    );
+    let server = Server::start(router, ServerConfig::default());
+    let h = server.handle();
+    let resp = h.infer("auto", vec![0.0; net.n_inputs()]).unwrap();
+    assert_eq!(resp.engine, "stream", "density {:.2} must route to stream", net.density());
+}
+
+/// TCP round-trip with a real engine, including error paths and metrics.
+#[test]
+fn tcp_roundtrip() {
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", Arc::clone(&engine) as Arc<dyn Engine>));
+    let server = Server::start(router, ServerConfig::default());
+    let frontend = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+
+    let mut client = TcpClient::connect(&frontend.addr).unwrap();
+
+    // models listing
+    let models = client.roundtrip(&Json::obj().set("cmd", "models")).unwrap();
+    assert_eq!(
+        models.get("models").unwrap().as_arr().unwrap()[0].as_str(),
+        Some("mlp")
+    );
+
+    // good inference
+    let mut rng = Pcg64::seed_from(2);
+    let input: Vec<f32> = (0..net.n_inputs()).map(|_| rng.normal() as f32).collect();
+    let out = client.infer("mlp", &input).unwrap();
+    assert_eq!(out.len(), net.n_outputs());
+    let x = BatchMatrix::from_rows(net.n_inputs(), 1, input);
+    let want = engine.infer(&x);
+    for (r, &got) in out.iter().enumerate() {
+        assert!((got - want.row(r)[0]).abs() < 1e-4, "row {r}");
+    }
+
+    // error paths
+    let bad = client
+        .roundtrip(&Json::obj().set("model", "nope").set("input", Json::Arr(vec![])))
+        .unwrap();
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    let short = client
+        .roundtrip(&Json::obj().set("model", "mlp").set("input", Json::Arr(vec![Json::Num(1.0)])))
+        .unwrap();
+    assert!(short.get("error").unwrap().as_str().unwrap().contains("length"));
+
+    // metrics reflect the traffic
+    let metrics = client.roundtrip(&Json::obj().set("cmd", "metrics")).unwrap();
+    let responses = metrics.path(&["metrics", "responses"]).unwrap().as_u64().unwrap();
+    assert!(responses >= 1);
+}
+
+/// Concurrent TCP clients are all served correctly (batching across
+/// connections).
+#[test]
+fn tcp_concurrent_clients() {
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", engine as Arc<dyn Engine>));
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(5) },
+        },
+    );
+    let frontend = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+    let addr = frontend.addr;
+    let n_in = net.n_inputs();
+
+    let ids: Vec<u64> = (0..24).collect();
+    let oks = sparseflow::util::threadpool::par_map(8, &ids, |&i| {
+        let mut client = TcpClient::connect(&addr).expect("connect");
+        let input = vec![i as f32 / 10.0; n_in];
+        client.infer("mlp", &input).map(|o| o.len()).unwrap_or(0)
+    });
+    assert!(oks.iter().all(|&n| n == net.n_outputs()));
+}
+
+/// Load-driving helper produces sane latency profiles and the server
+/// batches under pressure.
+#[test]
+fn load_profile_and_batching() {
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", engine as Arc<dyn Engine>));
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(3) },
+        },
+    );
+    let h = server.handle();
+    let n_in = net.n_inputs();
+    let lat = drive_load(&h, "mlp", |_, rng| {
+        (0..n_in).map(|_| rng.normal() as f32).collect()
+    }, 300, 12);
+    assert_eq!(lat.len(), 300);
+    let snapshot = h.metrics_snapshot();
+    assert_eq!(snapshot.get("responses").unwrap().as_u64(), Some(300));
+    assert!(
+        server.metrics().mean_batch_size() > 1.2,
+        "mean batch {}",
+        server.metrics().mean_batch_size()
+    );
+}
+
+/// Shutdown: dropping the server ends dispatchers; a held handle then
+/// fails cleanly.
+#[test]
+fn shutdown_is_clean() {
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", engine as Arc<dyn Engine>));
+    let server = Server::start(router, ServerConfig::default());
+    let h = server.handle();
+    drop(server);
+    let err = h.infer("mlp", vec![0.0; net.n_inputs()]).unwrap_err();
+    assert_eq!(err, sparseflow::coordinator::InferenceError::ShuttingDown);
+}

@@ -1,0 +1,151 @@
+//! Cross-module integration tests: theory ↔ simulator ↔ optimizer ↔
+//! execution engines, on the paper's own constructions.
+
+use sparseflow::bounds::theorem1_bounds;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::extremal::{lemma1_net, prop2_chain_order, prop2_chains};
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::{layerwise_order, two_optimal_order};
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::sim::simulate;
+use sparseflow::util::rng::Pcg64;
+
+/// Theorem 2 / Fig. 3: a compact-growth net with design memory M_g,
+/// simulated in its construction order, hits the Theorem-1 lower bound
+/// exactly when M ≥ M_g, and exceeds it when M is much smaller.
+#[test]
+fn compact_growth_hits_lower_bound_iff_memory_sufficient() {
+    let spec = CompactGrowthSpec { m_g: 60, n_iter: 300, in_degree: 5 };
+    let (net, order) = compact_growth(&spec, &mut Pcg64::seed_from(1));
+    let b = theorem1_bounds(&net);
+
+    for m in [spec.m_g, spec.m_g + 50, 2 * spec.m_g] {
+        let s = simulate(&net, &order, m, PolicyKind::Min);
+        assert_eq!(s.total(), b.total_lower, "M = {m} ≥ M_g must be optimal");
+        assert_eq!(s.reads(), b.read_lower);
+        assert_eq!(s.writes(), b.write_lower);
+    }
+    // Far below M_g the construction order cannot stay optimal.
+    let tight = simulate(&net, &order, 8, PolicyKind::Min);
+    assert!(tight.total() > b.total_lower);
+}
+
+/// Lemma 1 net end-to-end: bound attainment AND numeric agreement of the
+/// two engines.
+#[test]
+fn lemma1_bound_and_numerics() {
+    let mut rng = Pcg64::seed_from(2);
+    let net = lemma1_net(&[6, 5, 4], &mut rng);
+    let order = layerwise_order(&net);
+    let s = simulate(&net, &order, 12, PolicyKind::Min);
+    assert_eq!(s.total(), theorem1_bounds(&net).total_lower);
+
+    let stream = StreamingEngine::new(&net, &order);
+    let csr = LayerwiseEngine::new(&net);
+    let x = BatchMatrix::random(6, 4, &mut rng);
+    assert!(stream.infer(&x).allclose(&csr.infer(&x), 1e-4, 1e-4));
+}
+
+/// Proposition 2 at scale: write-I/O gap grows linearly with chain length
+/// under the layer-wise order but stays 0 chain-after-chain.
+#[test]
+fn prop2_write_gap_scales_with_depth() {
+    let m_param = 8;
+    let mut prev_gap = 0u64;
+    for c in [2usize, 4, 8] {
+        let net = prop2_chains(m_param, c, &mut Pcg64::seed_from(3));
+        let m = m_param + 1;
+        let lw = simulate(&net, &layerwise_order(&net), m, PolicyKind::Min);
+        let ch = simulate(&net, &prop2_chain_order(m_param, c), m, PolicyKind::Min);
+        assert_eq!(ch.temp_writes, 0);
+        assert!(lw.temp_writes > prev_gap, "c={c}: {} ≤ {prev_gap}", lw.temp_writes);
+        prev_gap = lw.temp_writes;
+    }
+}
+
+/// Reordering a BERT-like pruned MLP reduces I/Os and preserves numerics.
+#[test]
+fn bert_reorder_reduces_ios_and_preserves_function() {
+    let mut rng = Pcg64::seed_from(4);
+    let net = bert_mlp(&BertSpec { d_model: 32, d_ff: 128, density: 0.15 }, &mut rng);
+    let initial = two_optimal_order(&net);
+    let m = 24;
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, 3000);
+    let (best, report) = reorder(&net, &initial, &cfg);
+
+    assert!(report.final_ios <= report.initial_ios);
+    assert!(report.final_ios >= theorem1_bounds(&net).total_lower);
+
+    let before = StreamingEngine::new(&net, &initial);
+    let after = StreamingEngine::new(&net, &best);
+    let x = BatchMatrix::random(net.n_inputs(), 8, &mut rng);
+    let (a, b) = (before.infer(&x), after.infer(&x));
+    assert!(a.allclose(&b, 1e-4, 1e-4), "reordering changed numerics: {}", a.max_abs_diff(&b));
+}
+
+/// The paper's baseline network at reduced scale: all three policies
+/// simulate within Theorem-1 bounds with the 2-optimal order, and the
+/// reordered total never exceeds the initial.
+#[test]
+fn paper_baseline_reduced_scale_pipeline() {
+    let mut rng = Pcg64::seed_from(5);
+    let net = random_mlp(&MlpSpec::new(4, 100, 0.1), &mut rng);
+    let initial = two_optimal_order(&net);
+    let b = theorem1_bounds(&net);
+    let m = 40;
+
+    for policy in PolicyKind::ALL {
+        let s = simulate(&net, &initial, m, policy);
+        assert!(s.reads() >= b.read_lower && s.total() >= b.total_lower);
+        // Upper bounds hold for MIN with the 2-optimal order (Theorem 1's
+        // constructive guarantee).
+        if policy == PolicyKind::Min {
+            assert!(s.total() <= b.total_upper, "{policy:?}: {} > {}", s.total(), b.total_upper);
+            assert!(s.reads() <= b.read_upper);
+            assert!(s.writes() <= b.write_upper);
+        }
+    }
+
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, 2000);
+    let (_, report) = reorder(&net, &initial, &cfg);
+    assert!(report.final_ios <= report.initial_ios);
+}
+
+/// Network serialization round-trips through JSON with its order.
+#[test]
+fn net_json_roundtrip_with_order() {
+    let mut rng = Pcg64::seed_from(6);
+    let net = random_mlp(&MlpSpec::new(3, 20, 0.25), &mut rng);
+    let order = two_optimal_order(&net);
+    let j = sparseflow::ffnn::serde::net_to_json(&net, Some(&order));
+    let (net2, order2) = sparseflow::ffnn::serde::net_from_json(&j).unwrap();
+    let m = 16;
+    let a = simulate(&net, &order, m, PolicyKind::Min);
+    let b = simulate(&net2, &order2.unwrap(), m, PolicyKind::Min);
+    assert_eq!(a, b, "deserialized net must simulate identically");
+}
+
+/// Corollary 1: memory k+2 suffices for a bandwidth-k order (path graph:
+/// k = 1 ⇒ M = 3 gives the lower bound).
+#[test]
+fn corollary1_path_network() {
+    use sparseflow::ffnn::graph::{Conn, Ffnn, NeuronKind};
+    let n = 50;
+    let mut kinds = vec![NeuronKind::Input];
+    kinds.extend(std::iter::repeat(NeuronKind::Hidden).take(n - 2));
+    kinds.push(NeuronKind::Output);
+    let conns: Vec<Conn> = (0..n - 1)
+        .map(|i| Conn { src: i as u32, dst: (i + 1) as u32, weight: 1.0 })
+        .collect();
+    let net = Ffnn::new(kinds, vec![0.1; n], conns).unwrap();
+    let order = two_optimal_order(&net);
+    let s = simulate(&net, &order, 3, PolicyKind::Min);
+    let b = theorem1_bounds(&net);
+    assert_eq!(s.total(), b.total_lower, "bandwidth-1 path needs only M = 3");
+}

@@ -1,0 +1,284 @@
+//! Property-based tests (driven by `util::proptest`, the in-tree
+//! substrate for the unavailable `proptest` crate): invariants that must
+//! hold over random networks, orders, memory sizes and policies.
+
+use sparseflow::bounds::theorem1_bounds;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_layered, random_mlp, MlpSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{neuron_order_from_conn_order, two_optimal_order, ConnOrder};
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::neighbor::{apply_move, WindowMove};
+use sparseflow::sim::simulate;
+use sparseflow::util::proptest::check;
+use sparseflow::util::rng::Pcg64;
+
+/// Random test network: modest sizes keep each case < 1 ms.
+fn arb_net(rng: &mut Pcg64) -> Ffnn {
+    let depth = 2 + rng.index(3);
+    let width = 4 + rng.index(20);
+    let density = 0.1 + rng.f64() * 0.6;
+    random_mlp(&MlpSpec::new(depth, width, density), rng)
+}
+
+fn arb_m(rng: &mut Pcg64, net: &Ffnn) -> usize {
+    3 + rng.index(net.n_neurons())
+}
+
+/// (a) Any sequence of window moves preserves topological validity and
+/// the permutation property.
+#[test]
+fn prop_window_moves_preserve_topology() {
+    check(
+        "window-moves-topological",
+        60,
+        |rng| {
+            let net = arb_net(rng);
+            let mut order = two_optimal_order(&net);
+            let ws = 1 + rng.index(30);
+            for _ in 0..40 {
+                let mv = WindowMove::sample(rng, order.len(), ws);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            (net, order)
+        },
+        |(net, order)| {
+            if !order.is_topological(net) {
+                return Err("moves broke topological order".into());
+            }
+            let mut sorted: Vec<u32> = order.as_slice().to_vec();
+            sorted.sort_unstable();
+            if sorted != (0..net.n_conns() as u32).collect::<Vec<_>>() {
+                return Err("moves broke the permutation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (b) Belady optimality: MIN never uses more I/Os than LRU or RR for
+/// the same order and memory size.
+#[test]
+fn prop_min_is_optimal_policy() {
+    check(
+        "min-beats-lru-rr",
+        40,
+        |rng| {
+            let net = arb_net(rng);
+            let m = arb_m(rng, &net);
+            (net, m)
+        },
+        |(net, m)| {
+            let order = two_optimal_order(net);
+            let min = simulate(net, &order, *m, PolicyKind::Min).total();
+            let lru = simulate(net, &order, *m, PolicyKind::Lru).total();
+            let rr = simulate(net, &order, *m, PolicyKind::Rr).total();
+            if min > lru {
+                return Err(format!("MIN {min} > LRU {lru} (M={m})"));
+            }
+            if min > rr {
+                return Err(format!("MIN {min} > RR {rr} (M={m})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (c) Theorem 1 sandwich for the 2-optimal order under MIN.
+#[test]
+fn prop_theorem1_sandwich() {
+    check(
+        "theorem1-bounds",
+        40,
+        |rng| {
+            let net = arb_net(rng);
+            let m = arb_m(rng, &net);
+            (net, m)
+        },
+        |(net, m)| {
+            let b = theorem1_bounds(net);
+            let s = simulate(net, &two_optimal_order(net), *m, PolicyKind::Min);
+            let checks = [
+                (s.reads() >= b.read_lower, "reads < lower"),
+                (s.reads() <= b.read_upper, "reads > upper"),
+                (s.writes() >= b.write_lower, "writes < lower"),
+                (s.writes() <= b.write_upper, "writes > upper"),
+                (s.total() >= b.total_lower, "total < lower"),
+                (s.total() <= b.total_upper, "total > upper"),
+            ];
+            for (ok, what) in checks {
+                if !ok {
+                    return Err(format!("{what}: {s} vs {b:?} (M={m})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (d) Monotonicity in memory: more fast memory never hurts under MIN.
+#[test]
+fn prop_min_monotone_in_memory() {
+    check(
+        "min-monotone-memory",
+        30,
+        |rng| {
+            let net = arb_net(rng);
+            let m = 3 + rng.index(40);
+            (net, m)
+        },
+        |(net, m)| {
+            let order = two_optimal_order(net);
+            let small = simulate(net, &order, *m, PolicyKind::Min).total();
+            let big = simulate(net, &order, m + 8, PolicyKind::Min).total();
+            if big > small {
+                return Err(format!("M={} uses {big} > {small} at M={m}", m + 8));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (e) Numeric equivalence: streaming (any topological order, here
+/// post-move) ≡ layer-wise CSR on random layered nets.
+#[test]
+fn prop_engines_numerically_equivalent() {
+    check(
+        "stream-vs-csr-numerics",
+        25,
+        |rng| {
+            let sizes = vec![3 + rng.index(12), 3 + rng.index(12), 1 + rng.index(6)];
+            let net = random_layered(&sizes, 0.2 + rng.f64() * 0.7, 1.0, rng);
+            let mut order = two_optimal_order(&net);
+            for _ in 0..10 {
+                let mv = WindowMove::sample(rng, order.len(), 8);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            let batch = 1 + rng.index(6);
+            let x = BatchMatrix::random(net.n_inputs(), batch, rng);
+            (net, order, x)
+        },
+        |(net, order, x)| {
+            let stream = StreamingEngine::new(net, order);
+            let csr = LayerwiseEngine::new(net);
+            let (a, b) = (stream.infer(x), csr.infer(x));
+            if !a.allclose(&b, 1e-3, 1e-3) {
+                return Err(format!("engines diverge: max diff {}", a.max_abs_diff(&b)));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (f) Simulation is invariant under relabeling of the connection
+/// storage (the order, not the storage, defines the computation):
+/// shuffling `conns` and permuting the order identically gives the same
+/// I/O counts.
+#[test]
+fn prop_sim_depends_only_on_logical_order() {
+    check(
+        "sim-storage-invariance",
+        25,
+        |rng| {
+            let net = arb_net(rng);
+            let m = arb_m(rng, &net);
+            (net, m)
+        },
+        |(net, m)| {
+            let order = two_optimal_order(net);
+            let base = simulate(net, &order, *m, PolicyKind::Min);
+
+            // Rebuild the net with connections stored in `order`'s
+            // sequence; the identity order is then logically identical.
+            let conns: Vec<_> = order
+                .as_slice()
+                .iter()
+                .map(|&ci| net.conn(ci as usize))
+                .collect();
+            let relabeled = Ffnn::new(net.kinds().to_vec(), net.initials().to_vec(), conns)
+                .map_err(|e| format!("relabel failed: {e}"))?;
+            let same = simulate(
+                &relabeled,
+                &ConnOrder::identity(relabeled.n_conns()),
+                *m,
+                PolicyKind::Min,
+            );
+            if base != same {
+                return Err(format!("storage relabeling changed I/Os: {base} vs {same}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (g) A derived neuron order from any (possibly perturbed) connection
+/// order is itself topological.
+#[test]
+fn prop_neuron_order_derivation() {
+    check(
+        "derived-neuron-order",
+        30,
+        |rng| {
+            let net = arb_net(rng);
+            let mut order = two_optimal_order(&net);
+            for _ in 0..20 {
+                let mv = WindowMove::sample(rng, order.len(), 10);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            (net, order)
+        },
+        |(net, order)| {
+            let norder = neuron_order_from_conn_order(net, order);
+            let mut pos = vec![0usize; net.n_neurons()];
+            for (i, &v) in norder.iter().enumerate() {
+                pos[v as usize] = i;
+            }
+            for c in net.conns() {
+                if pos[c.src as usize] >= pos[c.dst as usize] {
+                    return Err(format!("edge {}→{} violated", c.src, c.dst));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (h) Reads lower bound refinement: value reads ≥ N (every value enters
+/// fast memory at least once) and conn reads == W exactly.
+#[test]
+fn prop_read_decomposition() {
+    check(
+        "read-decomposition",
+        30,
+        |rng| {
+            let net = arb_net(rng);
+            let m = arb_m(rng, &net);
+            let policy = *rng.choose(&PolicyKind::ALL);
+            (net, m, policy)
+        },
+        |(net, m, policy)| {
+            let s = simulate(net, &two_optimal_order(net), *m, *policy);
+            if s.conn_reads != net.n_conns() as u64 {
+                return Err(format!("conn reads {} != W {}", s.conn_reads, net.n_conns()));
+            }
+            if s.value_reads < net.n_neurons() as u64 {
+                return Err(format!(
+                    "value reads {} < N {}",
+                    s.value_reads,
+                    net.n_neurons()
+                ));
+            }
+            if s.output_writes < net.n_outputs() as u64 {
+                return Err(format!(
+                    "output writes {} < S {}",
+                    s.output_writes,
+                    net.n_outputs()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

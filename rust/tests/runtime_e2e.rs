@@ -1,0 +1,201 @@
+//! End-to-end compose check across all three layers:
+//!
+//!   L1 Pallas ELL kernel → L2 JAX model → `aot.py` → HLO text artifact
+//!   → L3 Rust PJRT runtime → numerics must match the native Rust
+//!   streaming engine on the same network.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`
+//! (the Makefile test target guarantees it); tests skip with a loud
+//! message otherwise so plain `cargo test` stays usable.
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::random_layered;
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::runtime::{pack_ell_layers, Manifest, Runtime, XlaEngine};
+use sparseflow::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("SPARSEFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIPPED: {} missing — run `make artifacts` first",
+            dir.join("manifest.json").display()
+        );
+        None
+    }
+}
+
+/// The network matching the `ell_mlp_e2e` artifact shapes:
+/// layers [64, 64, 64, 8], ELL width K = 64 (= n_in, always sufficient).
+fn e2e_net() -> sparseflow::ffnn::graph::Ffnn {
+    let mut rng = Pcg64::seed_from(0xE2E);
+    random_layered(&[64, 64, 64, 8], 0.1, 1.0, &mut rng)
+}
+
+#[test]
+fn pjrt_platform_loads() {
+    let Some(_dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(rt.device_count() >= 1);
+    let platform = rt.platform();
+    assert!(
+        platform.to_lowercase().contains("cpu") || platform.to_lowercase().contains("host"),
+        "platform {platform}"
+    );
+}
+
+#[test]
+fn artifact_compiles_and_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::cpu().expect("client");
+    // ell_layer_small: (16, 8, 12), batch 4.
+    let exe = rt.load_artifact(&manifest, "ell_layer_small").expect("compile");
+    let w = vec![0.0f32; 16 * 8];
+    let idx = vec![0i32; 16 * 8];
+    let b: Vec<f32> = (0..16).map(|i| i as f32).collect();
+    let x = vec![1.0f32; 12 * 4];
+    let args = vec![
+        sparseflow::runtime::client::literal_f32(&w, &[16, 8]).unwrap(),
+        sparseflow::runtime::client::literal_i32(&idx, &[16, 8]).unwrap(),
+        sparseflow::runtime::client::literal_f32(&b, &[16]).unwrap(),
+        sparseflow::runtime::client::literal_f32(&x, &[12, 4]).unwrap(),
+    ];
+    let (data, dims) = exe.run(&args).expect("execute");
+    assert_eq!(dims, vec![16, 4]);
+    // All-zero weights ⇒ output = bias broadcast (single layer ⇒ identity).
+    for r in 0..16 {
+        for c in 0..4 {
+            assert!((data[r * 4 + c] - r as f32).abs() < 1e-6);
+        }
+    }
+}
+
+/// The headline test: full-stack numerics agreement.
+#[test]
+fn xla_engine_matches_native_engines() {
+    let Some(dir) = artifacts_dir() else { return };
+    let net = e2e_net();
+    let layers = pack_ell_layers(&net, &[64, 64, 64]).expect("pack");
+    let xla = XlaEngine::from_ell(dir, "ell_mlp_e2e", layers).expect("xla engine");
+    assert_eq!(xla.n_inputs(), 64);
+    assert_eq!(xla.n_outputs(), 8);
+    assert_eq!(xla.artifact_batch(), 16);
+
+    let stream = StreamingEngine::new(&net, &two_optimal_order(&net));
+    let csr = LayerwiseEngine::new(&net);
+
+    let mut rng = Pcg64::seed_from(77);
+    for batch in [1usize, 7, 16] {
+        let x = BatchMatrix::random(64, batch, &mut rng);
+        let y_xla = xla.infer(&x);
+        let y_stream = stream.infer(&x);
+        let y_csr = csr.infer(&x);
+        assert_eq!(y_xla.rows(), 8);
+        assert!(
+            y_xla.allclose(&y_stream, 1e-4, 1e-4),
+            "batch {batch}: XLA vs stream max diff {}",
+            y_xla.max_abs_diff(&y_stream)
+        );
+        assert!(
+            y_xla.allclose(&y_csr, 1e-4, 1e-4),
+            "batch {batch}: XLA vs csr max diff {}",
+            y_xla.max_abs_diff(&y_csr)
+        );
+    }
+}
+
+/// The XLA engine must be usable behind the coordinator (Send + Sync via
+/// its service thread).
+#[test]
+fn xla_engine_serves_through_coordinator() {
+    let Some(dir) = artifacts_dir() else { return };
+    use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+    use std::sync::Arc;
+
+    let net = e2e_net();
+    let layers = pack_ell_layers(&net, &[64, 64, 64]).expect("pack");
+    let xla = XlaEngine::from_ell(dir, "ell_mlp_e2e", layers).expect("xla engine");
+    let stream = StreamingEngine::new(&net, &two_optimal_order(&net));
+
+    let mut router = Router::new();
+    router.register(ModelVariant::new("e2e", Arc::new(xla)));
+    let server = Server::start(router, ServerConfig::default());
+    let h = server.handle();
+
+    let mut rng = Pcg64::seed_from(99);
+    let input: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let resp = h.infer("e2e", input.clone()).expect("served");
+    assert_eq!(resp.output.len(), 8);
+    assert_eq!(resp.engine, "xla-pjrt");
+
+    // Cross-check against the native engine on the same single input.
+    let x = BatchMatrix::from_rows(64, 1, input);
+    let want = stream.infer(&x);
+    for (r, &got) in resp.output.iter().enumerate() {
+        assert!(
+            (got - want.row(r)[0]).abs() <= 1e-4 + 1e-4 * want.row(r)[0].abs(),
+            "row {r}: {got} vs {}",
+            want.row(r)[0]
+        );
+    }
+}
+
+#[test]
+fn dense_artifact_matches_dense_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::cpu().expect("client");
+    let exe = rt.load_artifact(&manifest, "dense_mlp_demo").expect("compile");
+
+    // Random dense params: w0 [128, 64], b0 [128], w1 [8, 128], b1 [8].
+    let mut rng = Pcg64::seed_from(5);
+    let w0: Vec<f32> = (0..128 * 64).map(|_| rng.normal() as f32 * 0.1).collect();
+    let b0: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+    let w1: Vec<f32> = (0..8 * 128).map(|_| rng.normal() as f32 * 0.1).collect();
+    let b1: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..64 * 16).map(|_| rng.normal() as f32).collect();
+
+    let args = vec![
+        sparseflow::runtime::client::literal_f32(&w0, &[128, 64]).unwrap(),
+        sparseflow::runtime::client::literal_f32(&b0, &[128]).unwrap(),
+        sparseflow::runtime::client::literal_f32(&w1, &[8, 128]).unwrap(),
+        sparseflow::runtime::client::literal_f32(&b1, &[8]).unwrap(),
+        sparseflow::runtime::client::literal_f32(&x, &[64, 16]).unwrap(),
+    ];
+    let (data, dims) = exe.run(&args).expect("execute");
+    assert_eq!(dims, vec![8, 16]);
+
+    // Native recomputation.
+    let mut h = vec![0.0f32; 128 * 16];
+    for r in 0..128 {
+        for c in 0..16 {
+            let mut acc = b0[r];
+            for k in 0..64 {
+                acc += w0[r * 64 + k] * x[k * 16 + c];
+            }
+            h[r * 16 + c] = acc.max(0.0);
+        }
+    }
+    for r in 0..8 {
+        for c in 0..16 {
+            let mut acc = b1[r];
+            for k in 0..128 {
+                acc += w1[r * 128 + k] * h[k * 16 + c];
+            }
+            let got = data[r * 16 + c];
+            assert!(
+                (got - acc).abs() <= 1e-3 + 1e-3 * acc.abs(),
+                "[{r},{c}]: {got} vs {acc}"
+            );
+        }
+    }
+}
