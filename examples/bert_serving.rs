@@ -113,7 +113,10 @@ fn main() {
     report.set_meta("requests", n_requests);
     report.set_meta("max_batch", args.usize("max-batch"));
 
-    println!("\n{:<16} {:>10} {:>10} {:>10} {:>12}", "model", "p50 ms", "p99 ms", "mean ms", "req/s");
+    println!(
+        "\n{:<16} {:>10} {:>10} {:>10} {:>12}",
+        "model", "p50 ms", "p99 ms", "mean ms", "req/s"
+    );
     for model in ["bert-reordered", "bert-initial", "bert-csr"] {
         let t = Instant::now();
         let lat = drive_load(

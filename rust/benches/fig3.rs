@@ -36,11 +36,16 @@ fn main() {
     for &mg in &mgs {
         let spec = CompactGrowthSpec { m_g: mg, n_iter, in_degree: 5 };
         // Memory sweep around the design point.
-        let sweep: Vec<usize> = [mg / 4, mg / 2, (3 * mg) / 4, mg.saturating_sub(10), mg, mg + mg / 2, 2 * mg]
-            .iter()
-            .copied()
-            .filter(|&m| m >= 8)
-            .collect();
+        let points = [
+            mg / 4,
+            mg / 2,
+            (3 * mg) / 4,
+            mg.saturating_sub(10),
+            mg,
+            mg + mg / 2,
+            2 * mg,
+        ];
+        let sweep: Vec<usize> = points.iter().copied().filter(|&m| m >= 8).collect();
         let seeds: Vec<u64> = (0..n_seeds as u64).collect();
         for &m in &sweep {
             let results = par_map(seeds.len().max(1), &seeds, |&s| {

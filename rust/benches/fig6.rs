@@ -66,8 +66,10 @@ fn main() {
     report.set_meta("iters", iters);
     for (density, policy, out) in &results {
         let x = format!("d={density}");
-        report.record_exact(&x, &format!("{} initial", policy.name()), out.initial_ios as f64, "I/Os");
-        report.record_exact(&x, &format!("{} reordered", policy.name()), out.reordered_ios as f64, "I/Os");
+        let initial_series = format!("{} initial", policy.name());
+        report.record_exact(&x, &initial_series, out.initial_ios as f64, "I/Os");
+        let reordered_series = format!("{} reordered", policy.name());
+        report.record_exact(&x, &reordered_series, out.reordered_ios as f64, "I/Os");
         if *policy == PolicyKind::Min {
             report.record_exact(&x, "Lower bound", out.lower_bound as f64, "I/Os");
         }

@@ -1,0 +1,103 @@
+//! §Perf — serial vs batch-sharded streaming throughput (rows/s, i.e.
+//! batch columns per second) at batch 128, on the paper's two non-MLP
+//! workload shapes: a BERT-like magnitude-pruned encoder MLP and a
+//! compact-growth network. Emits JSON via `bench::harness`.
+//!
+//! ```bash
+//! cargo bench --bench perf_parallel -- --workers 8
+//! ```
+
+use sparseflow::bench::figures::workers_default;
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::parallel::ParallelEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+fn bench_net(
+    label: &str,
+    net: &Ffnn,
+    order: &ConnOrder,
+    batch: usize,
+    reps: usize,
+    shard_counts: &[usize],
+    report: &mut Report,
+) {
+    let mut rng = Pcg64::seed_from(0x9A11);
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+    let serial = StreamingEngine::new(net, order);
+    let want = serial.infer(&x);
+
+    let serial_times = measure(2, reps, || serial.infer(&x));
+    report.record_rate(label, "serial", batch as f64, &serial_times, "rows/s");
+    let serial_rate = batch as f64 / Summary::of(&serial_times).median;
+    println!("{label}: {}", net.describe());
+    println!("  serial      {serial_rate:>12.0} rows/s");
+
+    for &k in shard_counts {
+        let par = ParallelEngine::new(StreamingEngine::new(net, order), k);
+        assert_eq!(par.infer(&x), want, "{label}: {k} shards must be bit-identical");
+        let times = measure(2, reps, || par.infer(&x));
+        let series = format!("{k} shards");
+        report.record_rate(label, &series, batch as f64, &times, "rows/s");
+        let rate = batch as f64 / Summary::of(&times).median;
+        println!("  {series:<10}  {rate:>12.0} rows/s  ({:.2}× serial)", rate / serial_rate);
+    }
+}
+
+fn main() {
+    let args = Spec::new("perf_parallel", "serial vs batch-sharded streaming throughput")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("mg", "100", "compact growth: design memory size")
+        .workers_opt()
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let workers = match args.usize("workers") {
+        0 => workers_default(),
+        w => w,
+    };
+    let shard_counts: Vec<usize> = [2usize, 4, 7, workers]
+        .iter()
+        .copied()
+        .filter(|&k| k > 1)
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+
+    let mut report = Report::new("perf_parallel", "batch-sharded streaming throughput (§Perf)");
+    report.set_meta("batch", batch);
+    report.set_meta("workers", workers);
+
+    let mut rng = Pcg64::seed_from(0x9A10);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let bert = bert_mlp(&bert_spec, &mut rng);
+    let bert_order = two_optimal_order(&bert);
+    bench_net("bert-like", &bert, &bert_order, batch, reps, &shard_counts, &mut report);
+
+    let cg_spec = CompactGrowthSpec::new(if quick { 30 } else { args.usize("mg") });
+    let (cg, cg_order) = compact_growth(&cg_spec, &mut rng);
+    bench_net("compact-growth", &cg, &cg_order, batch, reps, &shard_counts, &mut report);
+
+    report.finish();
+}

@@ -65,5 +65,8 @@ fn main() {
         }
     }
     report.finish();
-    println!("\nProposition 2 separation verified: layer-wise write-I/Os grow as M·c, chain order stays at S.");
+    println!(
+        "\nProposition 2 separation verified: layer-wise write-I/Os grow as M·c, \
+         chain order stays at S."
+    );
 }

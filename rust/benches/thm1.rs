@@ -63,7 +63,11 @@ fn main() {
         report.record_exact(&label, "measured writes", sim.writes() as f64, "I/Os");
         report.record_exact(&label, "write upper", b.write_upper as f64, "I/Os");
         assert!(frac > 1.0 - (h as f64 / (h + s_out) as f64) - 1e-9);
-        println!("{label:<18} writes {} = {:.1}% of the upper bound ✓", sim.writes(), frac * 100.0);
+        println!(
+            "{label:<18} writes {} = {:.1}% of the upper bound ✓",
+            sim.writes(),
+            frac * 100.0
+        );
     }
 
     // The 2-optimality guarantee on random nets: measured/lower ≤ 2.

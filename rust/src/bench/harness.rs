@@ -83,6 +83,21 @@ impl Report {
         });
     }
 
+    /// Record a throughput series from repeated timings: each sample
+    /// becomes `work / time`, e.g. batch rows per second when `work` is
+    /// the batch size (used by the parallel-execution benches).
+    pub fn record_rate(
+        &mut self,
+        x: &str,
+        series: &str,
+        work: f64,
+        times_secs: &[f64],
+        unit: &str,
+    ) {
+        let rates: Vec<f64> = times_secs.iter().map(|&t| work / t.max(1e-12)).collect();
+        self.record_sample(x, series, &rates, unit);
+    }
+
     /// Time a closure `reps` times (after `warmup`) and record the median.
     pub fn record_timing<T>(
         &mut self,
@@ -226,6 +241,16 @@ mod tests {
         let p = &r.points[0];
         assert_eq!(p.outliers_removed, 1); // Tukey drops 100.0
         assert_eq!(p.value, 2.5);
+    }
+
+    #[test]
+    fn rate_recording_inverts_times() {
+        let mut r = Report::new("t4", "rate");
+        r.record_rate("x", "s", 100.0, &[0.5, 0.25], "rows/s");
+        let p = &r.points[0];
+        assert_eq!(p.unit, "rows/s");
+        // Samples 200 and 400 rows/s ⇒ median 300.
+        assert!((p.value - 300.0).abs() < 1e-9, "median {}", p.value);
     }
 
     #[test]

@@ -66,6 +66,14 @@ impl Spec {
         self
     }
 
+    /// The standard `--workers` option shared by the launcher and the
+    /// benches: number of batch shards / worker threads, where 0 means
+    /// "auto" (available cores minus headroom; see
+    /// `bench::figures::workers_default`).
+    pub fn workers_opt(self) -> Self {
+        self.opt("workers", "0", "batch shards / worker threads (0 = auto)")
+    }
+
     /// Parse a raw argument list (without argv[0]).
     pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
@@ -362,6 +370,16 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn workers_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").workers_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.usize("workers"), 0, "default is auto");
+        let a = s.parse(&sv(&["--workers", "6"])).unwrap();
+        assert_eq!(a.usize("workers"), 6);
+        assert!(s.help_text().contains("--workers"));
     }
 
     #[test]

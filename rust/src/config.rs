@@ -65,6 +65,14 @@ impl Config {
         self.lookup(key).and_then(Json::as_bool).unwrap_or(default)
     }
 
+    /// The batch-sharding worker knob (`workers` key): number of
+    /// concurrent batch shards for `exec::parallel::ParallelEngine`.
+    /// 0 is conventionally "auto" (resolved by the caller, e.g. via
+    /// `bench::figures::workers_default`).
+    pub fn workers(&self, default: usize) -> usize {
+        self.usize("workers", default)
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.lookup(key)
             .and_then(Json::as_str)
@@ -124,6 +132,14 @@ mod tests {
         let mut c = Config::from_json(Json::obj().set("m", 100u64));
         c.set_override("m=200").unwrap();
         assert_eq!(c.u64("m", 0), 200);
+    }
+
+    #[test]
+    fn workers_knob() {
+        let mut c = Config::empty();
+        assert_eq!(c.workers(8), 8, "default when unset");
+        c.set_override("workers=4").unwrap();
+        assert_eq!(c.workers(8), 4);
     }
 
     #[test]

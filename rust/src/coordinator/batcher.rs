@@ -64,7 +64,9 @@ mod tests {
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
-    fn req(id: u64) -> (QueueMsg, mpsc::Receiver<Result<super::super::Response, super::super::InferenceError>>) {
+    type ReplyRx = mpsc::Receiver<Result<super::super::Response, super::super::InferenceError>>;
+
+    fn req(id: u64) -> (QueueMsg, ReplyRx) {
         let (tx, rx) = channel();
         (
             QueueMsg::Req(Request {

@@ -1,9 +1,13 @@
-//! Serving metrics: request counters, batch-size histogram, and a
-//! log-bucketed latency histogram with quantile estimation. Lock-free on
-//! the hot path (atomics only); snapshots serialize to JSON.
+//! Serving metrics: request counters, batch-size histogram, a
+//! log-bucketed latency histogram with quantile estimation, and linked
+//! per-shard timing sinks from batch-sharded engines. Lock-free on the
+//! hot path (atomics only; the shard-sink list is only locked at link
+//! and snapshot time); snapshots serialize to JSON.
 
+use crate::exec::parallel::ShardTimings;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Latency histogram: log-spaced buckets from 1 µs to ~17 s.
 const N_BUCKETS: usize = 48;
@@ -15,6 +19,9 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     latency_buckets: [AtomicU64; N_BUCKETS],
+    /// Per-model shard-timing sinks from `ParallelEngine`s (see
+    /// [`Metrics::link_shard_timings`]).
+    shard_sinks: Mutex<Vec<(String, Arc<ShardTimings>)>>,
 }
 
 impl Default for Metrics {
@@ -32,6 +39,19 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            shard_sinks: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Link the per-shard timing counters of a batch-sharded engine so
+    /// they appear in [`Metrics::snapshot`] under `shards.<model>`.
+    /// Re-linking the same model name replaces the previous sink.
+    pub fn link_shard_timings(&self, model: &str, sink: Arc<ShardTimings>) {
+        let mut sinks = self.shard_sinks.lock().expect("shard sinks poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = sink;
+        } else {
+            sinks.push((model.to_string(), sink));
         }
     }
 
@@ -90,14 +110,23 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("requests", self.requests.load(Ordering::Relaxed))
             .set("responses", self.responses.load(Ordering::Relaxed))
             .set("errors", self.errors.load(Ordering::Relaxed))
             .set("batches", self.batches.load(Ordering::Relaxed))
             .set("mean_batch_size", self.mean_batch_size())
             .set("latency_p50_ms", self.latency_quantile(0.50) * 1e3)
-            .set("latency_p99_ms", self.latency_quantile(0.99) * 1e3)
+            .set("latency_p99_ms", self.latency_quantile(0.99) * 1e3);
+        let sinks = self.shard_sinks.lock().expect("shard sinks poisoned");
+        if !sinks.is_empty() {
+            let mut shards = Json::obj();
+            for (model, sink) in sinks.iter() {
+                shards = shards.set(model, sink.to_json());
+            }
+            j = j.set("shards", shards);
+        }
+        j
     }
 }
 
@@ -132,6 +161,25 @@ mod tests {
     #[test]
     fn empty_quantile_is_zero() {
         assert_eq!(Metrics::new().latency_quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn shard_sinks_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().get("shards").is_none(), "no sinks, no key");
+
+        let sink = Arc::new(ShardTimings::new());
+        sink.record(&[0.001, 0.002, 0.004, 0.001]);
+        m.link_shard_timings("mlp", Arc::clone(&sink));
+        let s = m.snapshot();
+        assert_eq!(s.path(&["shards", "mlp", "runs"]).unwrap().as_u64(), Some(4));
+        assert_eq!(s.path(&["shards", "mlp", "batches"]).unwrap().as_u64(), Some(1));
+        assert!(s.path(&["shards", "mlp", "max_shard_ms"]).unwrap().as_f64().unwrap() >= 3.9);
+
+        // Re-linking the same model replaces, not duplicates.
+        m.link_shard_timings("mlp", Arc::new(ShardTimings::new()));
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["shards", "mlp", "runs"]).unwrap().as_u64(), Some(0));
     }
 
     #[test]

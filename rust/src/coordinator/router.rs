@@ -5,6 +5,7 @@
 //! XLA artifact). The router picks the serving engine per the variant's
 //! policy; the benches use explicit engine selection to compare them.
 
+use crate::exec::parallel::{ParallelEngine, ShardTimings};
 use crate::exec::Engine;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -28,6 +29,9 @@ pub struct ModelVariant {
     pub policy: RoutePolicy,
     /// Edge density of the underlying network (for the heuristic).
     pub density: f64,
+    /// Per-shard timing counters when the serving engine is a
+    /// [`ParallelEngine`]; the server links these into its metrics.
+    pub shard_timings: Option<Arc<ShardTimings>>,
 }
 
 impl ModelVariant {
@@ -37,7 +41,19 @@ impl ModelVariant {
             engines: vec![engine],
             policy: RoutePolicy::Fixed(0),
             density: 0.0,
+            shard_timings: None,
         }
+    }
+
+    /// A variant serving `inner` through a batch-sharded
+    /// [`ParallelEngine`] with `workers` concurrent shards. The server
+    /// automatically links the shard timings into its metrics.
+    pub fn sharded(name: &str, inner: Arc<dyn Engine>, workers: usize) -> ModelVariant {
+        let engine = ParallelEngine::with_name(inner, workers, "sharded");
+        let timings = engine.shard_timings();
+        let mut variant = ModelVariant::new(name, Arc::new(engine));
+        variant.shard_timings = Some(timings);
+        variant
     }
 
     pub fn with_engine(mut self, engine: Arc<dyn Engine>) -> ModelVariant {
@@ -133,6 +149,19 @@ mod tests {
             .with_engine(Arc::new(FakeEngine("csr")))
             .with_policy(RoutePolicy::DensityHeuristic, 0.9);
         assert_eq!(dense.route().name(), "csr");
+    }
+
+    #[test]
+    fn sharded_variant_routes_and_exposes_timings() {
+        let v = ModelVariant::sharded("p", Arc::new(FakeEngine("inner")), 4);
+        assert_eq!(v.route().name(), "sharded");
+        assert!(v.shard_timings.is_some());
+        // The engine serves through the adapter and matches the inner
+        // engine's shape contract.
+        assert_eq!(v.route().n_inputs(), 1);
+        let y = v.route().infer(&BatchMatrix::from_fn(1, 8, |_, c| c as f32));
+        assert_eq!(y.batch(), 8);
+        assert_eq!(v.shard_timings.as_ref().unwrap().batches(), 1);
     }
 
     #[test]

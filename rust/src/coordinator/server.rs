@@ -10,7 +10,7 @@ use super::router::Router;
 use crate::exec::batch::BatchMatrix;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::Instant;
 
@@ -46,14 +46,15 @@ impl Server {
         let mut model_inputs = BTreeMap::new();
         let mut threads = Vec::new();
 
-        // Router is consumed: each dispatcher owns its variant.
-        let Router { .. } = &router;
         for name in router.model_names().into_iter().map(str::to_string).collect::<Vec<_>>() {
             let variant = router.get(&name).expect("listed model exists");
             let engine = Arc::clone(variant.route());
             let engine_name = engine.name();
             let n_inputs = engine.n_inputs();
             model_inputs.insert(name.clone(), n_inputs);
+            if let Some(sink) = &variant.shard_timings {
+                metrics.link_shard_timings(&name, Arc::clone(sink));
+            }
 
             let (tx, rx) = mpsc::channel::<QueueMsg>();
             queues.insert(name.clone(), tx);
@@ -238,8 +239,6 @@ pub fn drive_load(
     clients: usize,
 ) -> Vec<f64> {
     let ids: Vec<u64> = (0..n_requests as u64).collect();
-    let lock = Mutex::new(());
-    let _ = &lock;
     crate::util::threadpool::par_map(clients, &ids, |&i| {
         let mut rng = crate::util::rng::Pcg64::seed_from(0xD00D + i);
         let input = inputs(i, &mut rng);
@@ -357,6 +356,33 @@ mod tests {
             "expected batching, got mean {}",
             server.metrics().mean_batch_size()
         );
+    }
+
+    #[test]
+    fn sharded_model_serves_and_links_metrics() {
+        let mut router = Router::new();
+        router.register(ModelVariant::sharded("d", Arc::new(Doubler), 4));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 16,
+                    max_wait: std::time::Duration::from_millis(20),
+                },
+            },
+        );
+        let h = server.handle();
+        let rxs: Vec<_> = (0..48)
+            .map(|i| h.submit("d", vec![i as f32, 0.0, 0.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.engine, "sharded");
+            assert_eq!(r.output, vec![2.0 * i as f32, 0.0, 0.0]);
+        }
+        // The shard sink is linked into the server metrics snapshot.
+        let snap = h.metrics_snapshot();
+        assert!(snap.path(&["shards", "d", "runs"]).is_some());
     }
 
     #[test]

@@ -72,6 +72,39 @@ impl BatchMatrix {
         self.row_mut(r).fill(v);
     }
 
+    /// Copy columns `[lo, hi)` into a new `rows × (hi − lo)` matrix
+    /// (batch sharding: each column is one independent sample).
+    pub fn columns(&self, lo: usize, hi: usize) -> BatchMatrix {
+        assert!(
+            lo <= hi && hi <= self.batch,
+            "column range {lo}..{hi} out of 0..{}",
+            self.batch
+        );
+        let width = hi - lo;
+        let mut out = BatchMatrix::zeros(self.rows, width);
+        for r in 0..self.rows {
+            out.data[r * width..(r + 1) * width]
+                .copy_from_slice(&self.data[r * self.batch + lo..r * self.batch + hi]);
+        }
+        out
+    }
+
+    /// Paste `src` (same row count) into the columns starting at `lo`
+    /// (inverse of [`BatchMatrix::columns`]).
+    pub fn set_columns(&mut self, lo: usize, src: &BatchMatrix) {
+        assert_eq!(self.rows, src.rows, "row count mismatch");
+        assert!(
+            lo + src.batch <= self.batch,
+            "columns {lo}..{} out of 0..{}",
+            lo + src.batch,
+            self.batch
+        );
+        for r in 0..self.rows {
+            self.data[r * self.batch + lo..r * self.batch + lo + src.batch]
+                .copy_from_slice(&src.data[r * src.batch..(r + 1) * src.batch]);
+        }
+    }
+
     /// Maximum absolute difference to another matrix of the same shape.
     pub fn max_abs_diff(&self, other: &BatchMatrix) -> f32 {
         assert_eq!((self.rows, self.batch), (other.rows, other.batch));
@@ -127,6 +160,35 @@ mod tests {
         let a = BatchMatrix::random(4, 4, &mut Pcg64::seed_from(1));
         let b = BatchMatrix::random(4, 4, &mut Pcg64::seed_from(1));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn columns_roundtrip() {
+        let m = BatchMatrix::from_fn(3, 7, |r, c| (r * 100 + c) as f32);
+        let left = m.columns(0, 3);
+        let mid = m.columns(3, 5);
+        let right = m.columns(5, 7);
+        assert_eq!(left.batch(), 3);
+        assert_eq!(mid.row(1), &[103.0, 104.0]);
+        let mut rebuilt = BatchMatrix::zeros(3, 7);
+        rebuilt.set_columns(0, &left);
+        rebuilt.set_columns(3, &mid);
+        rebuilt.set_columns(5, &right);
+        assert_eq!(rebuilt, m);
+    }
+
+    #[test]
+    fn columns_empty_range() {
+        let m = BatchMatrix::from_fn(2, 4, |r, c| (r + c) as f32);
+        let empty = m.columns(2, 2);
+        assert_eq!(empty.batch(), 0);
+        assert_eq!(empty.rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn columns_out_of_range_panics() {
+        BatchMatrix::zeros(2, 4).columns(2, 5);
     }
 
     #[test]

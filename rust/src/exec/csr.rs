@@ -29,7 +29,12 @@ impl CsrLayer {
     /// Extract the CSR layer between two consecutive layers of a layered
     /// network. `in_ids`/`out_ids` give the neuron ids of the two layers;
     /// columns/rows use positions within those id lists.
-    pub fn from_layer(net: &Ffnn, in_ids: &[NeuronId], out_ids: &[NeuronId], relu: bool) -> CsrLayer {
+    pub fn from_layer(
+        net: &Ffnn,
+        in_ids: &[NeuronId],
+        out_ids: &[NeuronId],
+        relu: bool,
+    ) -> CsrLayer {
         let mut col_of = vec![u32::MAX; net.n_neurons()];
         for (i, &v) in in_ids.iter().enumerate() {
             col_of[v as usize] = i as u32;

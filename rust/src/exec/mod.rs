@@ -12,11 +12,15 @@
 //! * [`dense`] — dense GEMM per layer (the paper's remark about GEMM vs
 //!   CSRMM at 100% density), also the reference the PJRT artifact is
 //!   checked against.
+//! * [`parallel`] — batch-sharded execution: any engine wrapped in a
+//!   [`parallel::ParallelEngine`] runs `k` column shards concurrently
+//!   with bit-identical results (EIE/SparseNN-style batch parallelism).
 
 pub mod batch;
 pub mod csr;
 pub mod dense;
 pub mod layerwise;
+pub mod parallel;
 pub mod stream;
 
 use batch::BatchMatrix;
@@ -32,6 +36,27 @@ pub trait Engine: Send + Sync {
 
     fn n_inputs(&self) -> usize;
     fn n_outputs(&self) -> usize;
+}
+
+/// Forwarding impl so shared engines (`Arc<dyn Engine>`, as stored in the
+/// coordinator's router) compose with adapters like
+/// [`parallel::ParallelEngine`].
+impl<E: Engine + ?Sized> Engine for std::sync::Arc<E> {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        (**self).infer(inputs)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn n_inputs(&self) -> usize {
+        (**self).n_inputs()
+    }
+
+    fn n_outputs(&self) -> usize {
+        (**self).n_outputs()
+    }
 }
 
 /// Activation discipline shared by every engine and the JAX model:

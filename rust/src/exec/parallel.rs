@@ -1,0 +1,261 @@
+//! Batch-sharded parallel execution.
+//!
+//! EIE (Han et al., 2016) scales sparse inference by partitioning work
+//! across processing elements; SparseNN (Zhu et al., 2017) exploits
+//! batch-level parallelism the same way. This module applies the idea to
+//! the engines of [`crate::exec`]: split a `BatchMatrix` **column-wise**
+//! into `k` independent shards and run the same engine on every shard
+//! concurrently over [`crate::util::threadpool::par_map`].
+//!
+//! Batch columns are data-parallel — every engine in this crate computes
+//! each column with an identical f32 operation sequence that never mixes
+//! columns — so sharding is **bit-identical** to a serial run, while each
+//! shard still replays the full connection stream in the paper's
+//! I/O-optimal order (the reuse the I/O model optimizes is per-shard
+//! cache locality, untouched by the split).
+
+use super::batch::BatchMatrix;
+use super::Engine;
+use crate::util::json::Json;
+use crate::util::threadpool::par_map;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Lock-free per-shard timing counters, shared between a
+/// [`ParallelEngine`] and the serving metrics
+/// ([`crate::coordinator::metrics::Metrics::link_shard_timings`]).
+#[derive(Debug, Default)]
+pub struct ShardTimings {
+    /// Shard executions recorded (one per shard per sharded batch).
+    runs: AtomicU64,
+    /// Sharded `infer` calls (batches actually split, i.e. k > 1).
+    batches: AtomicU64,
+    total_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl ShardTimings {
+    pub fn new() -> ShardTimings {
+        ShardTimings::default()
+    }
+
+    /// Record the per-shard wall-clock times of one sharded batch.
+    pub fn record(&self, times_secs: &[f64]) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        for &t in times_secs {
+            let us = (t * 1e6) as u64;
+            self.runs.fetch_add(1, Ordering::Relaxed);
+            self.total_micros.fetch_add(us, Ordering::Relaxed);
+            self.max_micros.fetch_max(us, Ordering::Relaxed);
+        }
+    }
+
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean shard execution time in seconds (0 before any recording).
+    pub fn mean_secs(&self) -> f64 {
+        let runs = self.runs();
+        if runs == 0 {
+            0.0
+        } else {
+            self.total_micros.load(Ordering::Relaxed) as f64 / runs as f64 / 1e6
+        }
+    }
+
+    /// Worst single-shard execution time in seconds.
+    pub fn max_secs(&self) -> f64 {
+        self.max_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("runs", self.runs())
+            .set("batches", self.batches())
+            .set("mean_shard_ms", self.mean_secs() * 1e3)
+            .set("max_shard_ms", self.max_secs() * 1e3)
+    }
+}
+
+/// Balanced contiguous column ranges: `batch` columns over `k` shards,
+/// first `batch % k` shards one column wider.
+pub fn shard_ranges(batch: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1);
+    let base = batch / k;
+    let rem = batch % k;
+    let mut ranges = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let width = base + usize::from(i < rem);
+        ranges.push((lo, lo + width));
+        lo += width;
+    }
+    debug_assert_eq!(lo, batch);
+    ranges
+}
+
+/// [`Engine`] adapter running its inner engine on `k` concurrent batch
+/// shards. Output is bit-identical to `inner.infer` on the whole batch.
+pub struct ParallelEngine<E> {
+    inner: E,
+    workers: usize,
+    timings: Arc<ShardTimings>,
+    name: &'static str,
+}
+
+impl<E: Engine> ParallelEngine<E> {
+    /// Shard over up to `workers` concurrent executions (≥ 1; a batch
+    /// smaller than `workers` uses one shard per column).
+    pub fn new(inner: E, workers: usize) -> ParallelEngine<E> {
+        ParallelEngine::with_name(inner, workers, "sharded")
+    }
+
+    /// Same, with a custom report name (e.g. "sharded-stream").
+    pub fn with_name(inner: E, workers: usize, name: &'static str) -> ParallelEngine<E> {
+        assert!(workers >= 1, "ParallelEngine needs at least one worker");
+        ParallelEngine {
+            inner,
+            workers,
+            timings: Arc::new(ShardTimings::new()),
+            name,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// Shared handle to the per-shard timing counters (link it into
+    /// serving metrics with `Metrics::link_shard_timings`).
+    pub fn shard_timings(&self) -> Arc<ShardTimings> {
+        Arc::clone(&self.timings)
+    }
+}
+
+impl<E: Engine> Engine for ParallelEngine<E> {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let k = if batch == 0 { 1 } else { self.workers.min(batch) };
+        if k <= 1 {
+            return self.inner.infer(inputs);
+        }
+        let ranges = shard_ranges(batch, k);
+        let shards: Vec<BatchMatrix> = ranges
+            .iter()
+            .map(|&(lo, hi)| inputs.columns(lo, hi))
+            .collect();
+        let results = par_map(k, &shards, |shard| {
+            let start = Instant::now();
+            let out = self.inner.infer(shard);
+            (out, start.elapsed().as_secs_f64())
+        });
+
+        let mut out = BatchMatrix::zeros(self.inner.n_outputs(), batch);
+        let mut times = Vec::with_capacity(k);
+        for (&(lo, _), (shard_out, secs)) in ranges.iter().zip(&results) {
+            out.set_columns(lo, shard_out);
+            times.push(*secs);
+        }
+        self.timings.record(&times);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.inner.n_inputs()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.inner.n_outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::stream::StreamingEngine;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn ranges_are_balanced_and_cover() {
+        for (batch, k) in [(128, 4), (128, 7), (10, 4), (3, 7), (1, 1), (0, 3)] {
+            let ranges = shard_ranges(batch, k);
+            assert_eq!(ranges.len(), k);
+            let mut expect_lo = 0;
+            let mut widths = Vec::new();
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, expect_lo);
+                assert!(hi >= lo);
+                widths.push(hi - lo);
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, batch, "ranges must cover [0, {batch})");
+            let (min, max) = (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced split {widths:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_bitwise() {
+        let mut rng = Pcg64::seed_from(0x9A7);
+        let net = random_mlp(&MlpSpec::new(3, 20, 0.3), &mut rng);
+        let order = two_optimal_order(&net);
+        let serial = StreamingEngine::new(&net, &order);
+        let x = BatchMatrix::random(net.n_inputs(), 24, &mut rng);
+        let want = serial.infer(&x);
+        for workers in [1, 2, 3, 5, 24, 64] {
+            let par = ParallelEngine::new(StreamingEngine::new(&net, &order), workers);
+            assert_eq!(par.infer(&x), want, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn timings_recorded_only_when_sharded() {
+        let mut rng = Pcg64::seed_from(0x9A8);
+        let net = random_mlp(&MlpSpec::new(2, 10, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let par = ParallelEngine::new(StreamingEngine::new(&net, &order), 4);
+        let t = par.shard_timings();
+
+        // batch 1 ⇒ single shard ⇒ serial fast path, nothing recorded.
+        par.infer(&BatchMatrix::random(net.n_inputs(), 1, &mut rng));
+        assert_eq!(t.batches(), 0);
+
+        par.infer(&BatchMatrix::random(net.n_inputs(), 16, &mut rng));
+        par.infer(&BatchMatrix::random(net.n_inputs(), 16, &mut rng));
+        assert_eq!(t.batches(), 2);
+        assert_eq!(t.runs(), 8);
+        assert!(t.mean_secs() >= 0.0);
+        assert!(t.max_secs() >= t.mean_secs());
+        assert_eq!(t.to_json().get("runs").unwrap().as_u64(), Some(8));
+    }
+
+    #[test]
+    fn adapter_reports_inner_shape() {
+        let mut rng = Pcg64::seed_from(0x9A9);
+        let net = random_mlp(&MlpSpec::new(2, 12, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+        let par =
+            ParallelEngine::with_name(StreamingEngine::new(&net, &order), 2, "sharded-stream");
+        assert_eq!(par.n_inputs(), net.n_inputs());
+        assert_eq!(par.n_outputs(), net.n_outputs());
+        assert_eq!(par.name(), "sharded-stream");
+        assert_eq!(par.workers(), 2);
+        assert_eq!(par.inner().name(), "stream");
+    }
+}

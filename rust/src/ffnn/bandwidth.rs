@@ -38,7 +38,9 @@ pub fn greedy_bandwidth_order(net: &Ffnn) -> Vec<NeuronId> {
     let mut remaining_in: Vec<u32> = (0..n).map(|v| net.in_degree(v as u32) as u32).collect();
     let mut pos = vec![usize::MAX; n];
     // Ready set as a simple vector scan: fine for generation-time use.
-    let mut ready: Vec<NeuronId> = (0..n as u32).filter(|&v| remaining_in[v as usize] == 0).collect();
+    let mut ready: Vec<NeuronId> = (0..n as u32)
+        .filter(|&v| remaining_in[v as usize] == 0)
+        .collect();
     let mut order = Vec::with_capacity(n);
 
     while let Some((ri, _)) = ready

@@ -107,7 +107,12 @@ impl PebbleBuilder {
     }
 
     /// Rule 2: draw a connection black → gray.
-    pub fn connect(&mut self, src: NeuronId, dst: NeuronId, weight: f32) -> Result<(), PebbleError> {
+    pub fn connect(
+        &mut self,
+        src: NeuronId,
+        dst: NeuronId,
+        weight: f32,
+    ) -> Result<(), PebbleError> {
         match self.in_bag.get(src as usize).copied().flatten() {
             Some(Color::Black) => {}
             Some(Color::Gray) => {

@@ -62,13 +62,17 @@ pub enum GraphError {
 impl std::fmt::Display for GraphError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            GraphError::BadEndpoint { conn } => write!(f, "connection {conn}: endpoint out of range"),
+            GraphError::BadEndpoint { conn } => {
+                write!(f, "connection {conn}: endpoint out of range")
+            }
             GraphError::InputWithIncoming { neuron } => {
                 write!(f, "input neuron {neuron} has incoming connections")
             }
             GraphError::Cyclic => write!(f, "connection graph is cyclic"),
             GraphError::SelfLoop { conn } => write!(f, "connection {conn} is a self-loop"),
-            GraphError::Duplicate { conn } => write!(f, "connection {conn} duplicates an earlier one"),
+            GraphError::Duplicate { conn } => {
+                write!(f, "connection {conn} duplicates an earlier one")
+            }
         }
     }
 }

@@ -17,7 +17,9 @@
 //!    topological connection orders (window moves, `2^{-Δ·t^σ}` updates).
 //! 5. [`exec`] — real numeric engines: the streaming executor that runs a
 //!    (reordered) connection order on batched inputs, the layer-wise CSR
-//!    baseline (CSRMM), and a dense reference.
+//!    baseline (CSRMM), a dense reference, and the batch-sharded
+//!    [`exec::parallel::ParallelEngine`] running any of them on
+//!    concurrent column shards (bit-identical to serial).
 //! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
 //!    artifacts and executes them from Rust.
 //! 7. [`coordinator`] — batched inference serving: request queue, dynamic
@@ -60,6 +62,7 @@ pub mod prelude {
     pub use crate::exec::{
         csr::CsrLayer,
         layerwise::LayerwiseEngine,
+        parallel::ParallelEngine,
         stream::{StreamProgram, StreamingEngine},
         Engine,
     };

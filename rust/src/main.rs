@@ -257,7 +257,9 @@ fn cmd_reorder(args: &[String]) -> i32 {
             return 2;
         }
     };
-    let mut cfg = AnnealConfig::new(config.usize("m", a.usize("m")), policy, config.u64("iters", a.u64("iters")));
+    let m = config.usize("m", a.usize("m"));
+    let iters = config.u64("iters", a.u64("iters"));
+    let mut cfg = AnnealConfig::new(m, policy, iters);
     cfg.sigma = config.f64("sigma", a.f64("sigma"));
     cfg.window = config.usize("window", a.usize("window"));
     cfg.seed = a.u64("seed");
@@ -308,6 +310,9 @@ fn cmd_serve(args: &[String]) -> i32 {
             .opt("name", "default", "model name")
             .opt("max-batch", "128", "dynamic batcher max batch size")
             .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
+            .opt("config", "-", "JSON config file ('-' = none)")
+            .opt("set", "-", "config override key=value ('-' = none)")
+            .workers_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
         args,
     );
@@ -320,12 +325,42 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
     println!("{}", net.describe());
     let order = stored.unwrap_or_else(|| two_optimal_order(&net));
+    // The workers knob: an explicit (non-zero) --workers wins, else the
+    // config file / --set override's `workers` key, else auto.
+    let mut config = match a.str("config") {
+        "-" => Config::empty(),
+        p => match Config::load(Path::new(p)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+    };
+    let ov = a.str("set");
+    if ov != "-" {
+        if let Err(e) = config.set_override(ov) {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    }
+    let workers = match a.usize("workers") {
+        0 => match config.workers(0) {
+            0 => sparseflow::bench::figures::workers_default(),
+            w => w,
+        },
+        w => w,
+    };
     let mut router = Router::new();
     let name = a.str("name").to_string();
-    router.register(ModelVariant::new(
-        &name,
-        std::sync::Arc::new(StreamingEngine::new(&net, &order)) as std::sync::Arc<dyn Engine>,
-    ));
+    let stream =
+        std::sync::Arc::new(StreamingEngine::new(&net, &order)) as std::sync::Arc<dyn Engine>;
+    if workers > 1 {
+        println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
+        router.register(ModelVariant::sharded(&name, stream, workers));
+    } else {
+        router.register(ModelVariant::new(&name, stream));
+    }
     if a.flag("with-csr") && net.layer_of().is_some() {
         router.register(ModelVariant::new(
             &format!("{name}-csr"),

@@ -94,7 +94,11 @@ impl Manifest {
                         .and_then(Json::as_arr)
                         .ok_or_else(|| anyhow::anyhow!("input missing shape"))?
                         .iter()
-                        .map(|d| d.as_u64().map(|v| v as usize).ok_or_else(|| anyhow::anyhow!("bad dim")))
+                        .map(|d| {
+                            d.as_u64()
+                                .map(|v| v as usize)
+                                .ok_or_else(|| anyhow::anyhow!("bad dim"))
+                        })
                         .collect::<anyhow::Result<Vec<_>>>()?;
                     let dtype = i
                         .get("dtype")

@@ -259,7 +259,10 @@ fn infer_once(
     Ok(out)
 }
 
-fn run_with_refs(exe: &XlaExecutable, args: &[&xla::Literal]) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+fn run_with_refs(
+    exe: &XlaExecutable,
+    args: &[&xla::Literal],
+) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
     let result = exe
         .exe
         .execute::<&xla::Literal>(args)

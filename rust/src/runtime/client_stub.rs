@@ -1,0 +1,110 @@
+//! Stub PJRT client, compiled when the `xla` feature is **off** (the
+//! default: the `xla` crate is unavailable offline). Mirrors the public
+//! API of `runtime::client` so code and tests compile unchanged; every
+//! constructor returns an error, and the `runtime_e2e` tests skip
+//! because no artifact manifest exists without the XLA toolchain.
+
+use super::artifact::Manifest;
+use super::pack::EllLayer;
+use crate::exec::batch::BatchMatrix;
+use crate::exec::Engine;
+use std::path::{Path, PathBuf};
+
+const UNAVAILABLE: &str = "sparseflow was built without the `xla` feature; the PJRT runtime \
+     requires the vendored `xla` crate (see README: Runtime backends)";
+
+/// Placeholder for the PJRT CPU runtime.
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    /// Always fails in the stub build.
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path) -> anyhow::Result<XlaExecutable> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+
+    pub fn load_artifact(
+        &self,
+        _manifest: &Manifest,
+        _name: &str,
+    ) -> anyhow::Result<XlaExecutable> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+}
+
+/// Placeholder for a compiled HLO executable.
+pub struct XlaExecutable {
+    _priv: (),
+}
+
+impl XlaExecutable {
+    pub fn run(&self, _inputs: &[Literal]) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+}
+
+/// Opaque placeholder for `xla::Literal`.
+pub struct Literal {
+    _priv: (),
+}
+
+pub fn literal_f32(_data: &[f32], _shape: &[usize]) -> anyhow::Result<Literal> {
+    Err(anyhow::anyhow!(UNAVAILABLE))
+}
+
+pub fn literal_i32(_data: &[i32], _shape: &[usize]) -> anyhow::Result<Literal> {
+    Err(anyhow::anyhow!(UNAVAILABLE))
+}
+
+/// Placeholder engine; [`XlaEngine::from_ell`] always fails, so no value
+/// of this type can ever be constructed in a stub build.
+pub struct XlaEngine {
+    n_in: usize,
+    n_out: usize,
+    batch: usize,
+}
+
+impl XlaEngine {
+    pub fn from_ell(
+        _artifacts_dir: PathBuf,
+        _name: &str,
+        _layers: Vec<EllLayer>,
+    ) -> anyhow::Result<XlaEngine> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+
+    pub fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+impl Engine for XlaEngine {
+    fn infer(&self, _inputs: &BatchMatrix) -> BatchMatrix {
+        unreachable!("stub XlaEngine cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_out
+    }
+}

@@ -8,6 +8,10 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod artifact;
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod pack;
 

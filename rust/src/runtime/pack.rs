@@ -21,7 +21,12 @@ pub struct EllLayer {
 impl EllLayer {
     /// Pack the connections between two consecutive layers with a fixed
     /// row width `k` (≥ the max in-degree within this layer pair).
-    pub fn pack(net: &Ffnn, in_ids: &[NeuronId], out_ids: &[NeuronId], k: usize) -> anyhow::Result<EllLayer> {
+    pub fn pack(
+        net: &Ffnn,
+        in_ids: &[NeuronId],
+        out_ids: &[NeuronId],
+        k: usize,
+    ) -> anyhow::Result<EllLayer> {
         let mut col_of = vec![u32::MAX; net.n_neurons()];
         for (i, &v) in in_ids.iter().enumerate() {
             col_of[v as usize] = i as u32;

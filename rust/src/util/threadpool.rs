@@ -17,7 +17,7 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let workers = workers.max(1).min(items.len().max(1));
+    let workers = workers.clamp(1, items.len().max(1));
     if workers <= 1 || items.len() <= 1 {
         return items.iter().map(&f).collect();
     }
@@ -35,15 +35,16 @@ where
                 // which is not Send.
                 let sp = sp;
                 loop {
-                let i = nextref.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = fref(&items[i]);
-                // SAFETY: each index i is claimed by exactly one worker via
-                // the atomic counter, so writes to slots are disjoint, and
-                // the scope joins all threads before `slots` is read.
-                unsafe { *sp.0.add(i) = Some(r) };
+                    let i = nextref.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = fref(&items[i]);
+                    // SAFETY: each index i is claimed by exactly one worker
+                    // via the atomic counter, so writes to slots are
+                    // disjoint, and the scope joins all threads before
+                    // `slots` is read.
+                    unsafe { *sp.0.add(i) = Some(r) };
                 }
             });
         }

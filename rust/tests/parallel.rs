@@ -1,0 +1,143 @@
+//! Batch-sharded execution tests: `ParallelEngine` must be
+//! **bit-identical** to the serial engines for every shard count —
+//! including non-divisible batch/shard splits — and must serve through
+//! the coordinator with its shard timings linked into the metrics.
+
+use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::parallel::ParallelEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// The acceptance matrix: batch 128, shard counts {1, 2, 4, 7} (7 is the
+/// built-in remainder case: 128 = 7·18 + 2), streaming engine.
+#[test]
+fn stream_shards_bit_identical_batch_128() {
+    let mut rng = Pcg64::seed_from(0x51A);
+    let net = random_mlp(&MlpSpec::new(4, 48, 0.2), &mut rng);
+    let order = two_optimal_order(&net);
+    let serial = StreamingEngine::new(&net, &order);
+    let x = BatchMatrix::random(net.n_inputs(), 128, &mut rng);
+    let want = serial.infer(&x);
+    for shards in [1usize, 2, 4, 7] {
+        let par = ParallelEngine::new(StreamingEngine::new(&net, &order), shards);
+        let got = par.infer(&x);
+        assert_eq!(got, want, "{shards} shards must be bit-identical");
+    }
+}
+
+/// Non-divisible and degenerate batch/shard combinations.
+#[test]
+fn remainder_batches_bit_identical() {
+    let mut rng = Pcg64::seed_from(0x51B);
+    let net = random_mlp(&MlpSpec::new(3, 32, 0.25), &mut rng);
+    let order = two_optimal_order(&net);
+    let serial = StreamingEngine::new(&net, &order);
+    for batch in [1usize, 3, 5, 13, 127] {
+        let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+        let want = serial.infer(&x);
+        for shards in [2usize, 4, 7, 64] {
+            let par = ParallelEngine::new(StreamingEngine::new(&net, &order), shards);
+            assert_eq!(par.infer(&x), want, "batch {batch} × {shards} shards");
+        }
+    }
+}
+
+/// The adapter is engine-generic: the CSR layer-wise baseline shards
+/// identically too.
+#[test]
+fn csr_inner_engine_bit_identical() {
+    let mut rng = Pcg64::seed_from(0x51C);
+    let net = random_mlp(&MlpSpec::new(3, 40, 0.3), &mut rng);
+    let serial = LayerwiseEngine::new(&net);
+    let x = BatchMatrix::random(net.n_inputs(), 128, &mut rng);
+    let want = serial.infer(&x);
+    for shards in [2usize, 4, 7] {
+        let par = ParallelEngine::new(LayerwiseEngine::new(&net), shards);
+        assert_eq!(par.infer(&x), want, "{shards} shards");
+    }
+}
+
+/// The paper's workload shapes: a BERT-like pruned MLP and a
+/// compact-growth net, both at batch 128 with the remainder shard count.
+#[test]
+fn paper_workloads_bit_identical() {
+    let mut rng = Pcg64::seed_from(0x51D);
+    let bert = bert_mlp(&BertSpec::small(0.1), &mut rng);
+    let bert_order = two_optimal_order(&bert);
+    let x = BatchMatrix::random(bert.n_inputs(), 128, &mut rng);
+    let want = StreamingEngine::new(&bert, &bert_order).infer(&x);
+    let par = ParallelEngine::new(StreamingEngine::new(&bert, &bert_order), 7);
+    assert_eq!(par.infer(&x), want, "bert-like");
+
+    let spec = CompactGrowthSpec {
+        m_g: 40,
+        n_iter: 120,
+        in_degree: 5,
+    };
+    let (cg, cg_order) = compact_growth(&spec, &mut rng);
+    let x = BatchMatrix::random(cg.n_inputs(), 128, &mut rng);
+    let want = StreamingEngine::new(&cg, &cg_order).infer(&x);
+    let par = ParallelEngine::new(StreamingEngine::new(&cg, &cg_order), 7);
+    assert_eq!(par.infer(&x), want, "compact-growth");
+}
+
+/// An `Arc<dyn Engine>` composes with the adapter (the router stores
+/// engines type-erased), and shard counts larger than the batch degrade
+/// to one column per shard.
+#[test]
+fn type_erased_inner_engine() {
+    let mut rng = Pcg64::seed_from(0x51E);
+    let net = random_mlp(&MlpSpec::new(2, 16, 0.4), &mut rng);
+    let order = two_optimal_order(&net);
+    let inner: Arc<dyn Engine> = Arc::new(StreamingEngine::new(&net, &order));
+    let x = BatchMatrix::random(net.n_inputs(), 6, &mut rng);
+    let want = inner.infer(&x);
+    let par = ParallelEngine::new(Arc::clone(&inner), 32);
+    assert_eq!(par.infer(&x), want);
+    assert_eq!(par.shard_timings().batches(), 1);
+    assert_eq!(par.shard_timings().runs(), 6, "one shard per column");
+}
+
+/// End-to-end through the coordinator: a sharded variant serves exact
+/// results and its per-shard timings surface in the metrics snapshot.
+#[test]
+fn sharded_variant_served_with_metrics() {
+    let mut rng = Pcg64::seed_from(0x51F);
+    let net = random_mlp(&MlpSpec::new(3, 24, 0.3), &mut rng);
+    let order = two_optimal_order(&net);
+    let serial = StreamingEngine::new(&net, &order);
+    let inner: Arc<dyn Engine> = Arc::new(StreamingEngine::new(&net, &order));
+
+    let mut router = Router::new();
+    router.register(ModelVariant::sharded("mlp", inner, 4));
+    let server = Server::start(router, ServerConfig::default());
+    let h = server.handle();
+
+    for i in 0..12u64 {
+        let mut req_rng = Pcg64::seed_from(1000 + i);
+        let input: Vec<f32> = (0..net.n_inputs())
+            .map(|_| req_rng.normal() as f32)
+            .collect();
+        let resp = h.infer("mlp", input.clone()).expect("served");
+        assert_eq!(resp.engine, "sharded");
+        let x = BatchMatrix::from_rows(net.n_inputs(), 1, input);
+        let want = serial.infer(&x);
+        for (r, &got) in resp.output.iter().enumerate() {
+            assert_eq!(got, want.row(r)[0], "row {r}: sharding must be exact");
+        }
+    }
+    let snap = h.metrics_snapshot();
+    assert!(
+        snap.path(&["shards", "mlp", "runs"]).is_some(),
+        "shard timings must be linked: {}",
+        snap.to_string_compact()
+    );
+}

@@ -1,0 +1,143 @@
+//! Minimal offline drop-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the API surface sparseflow uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`ensure!`] / [`bail!`] macros, and `?`
+//! conversion from standard error types. Like the real `anyhow::Error`,
+//! [`Error`] deliberately does **not** implement `std::error::Error` —
+//! that is what keeps the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// A string-backed error value (no backtrace capture in the shim).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: `", ::std::stringify!($cond), "`")
+            ));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $fmt:literal, $($arg:tt)+) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($fmt, $($arg)+));
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($err));
+        }
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn io_err() -> std::io::Result<()> {
+        Err(std::io::Error::other("boom"))
+    }
+
+    fn propagates() -> crate::Result<()> {
+        io_err()?;
+        Ok(())
+    }
+
+    fn ensures(x: usize) -> crate::Result<usize> {
+        crate::ensure!(x < 10, "x too big: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = propagates().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+        assert!(format!("{e:?}").contains("boom"));
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = crate::anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = crate::anyhow!("got {n} of {}", 7);
+        assert_eq!(b.to_string(), "got 3 of 7");
+        let c = crate::anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_returns_err() {
+        assert_eq!(ensures(5).unwrap(), 5);
+        let e = ensures(50).unwrap_err();
+        assert!(e.to_string().contains("x too big: 50"));
+    }
+
+    #[test]
+    fn collect_into_result() {
+        let ok: crate::Result<Vec<u32>> = (0..3u32).map(Ok).collect();
+        assert_eq!(ok.unwrap(), vec![0, 1, 2]);
+    }
+}
