@@ -1,0 +1,108 @@
+//! §Perf — f32 stream vs compressed quantized stream (rows/s and bytes
+//! per connection) at batch 128, on the paper's two non-MLP workload
+//! shapes: a BERT-like magnitude-pruned encoder MLP and a compact-growth
+//! network. Also reports (and asserts) the certified output-error bound
+//! of the quantized engine. Emits JSON via `bench::harness`.
+//!
+//! ```bash
+//! cargo bench --bench perf_quant -- --batch 128
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram};
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+fn bench_net(
+    label: &str,
+    net: &Ffnn,
+    order: &ConnOrder,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    let mut rng = Pcg64::seed_from(0x9B11);
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+    let f32e = StreamingEngine::new(net, order);
+    let quant = QuantStreamEngine::new(net, order);
+
+    let want = f32e.infer(&x);
+    let got = quant.infer(&x);
+    let diff = want.max_abs_diff(&got);
+    let bound = output_error_bound(f32e.program(), quant.program(), &x);
+    assert!(
+        f64::from(diff) <= f64::from(bound) * 1.01 + 1e-3,
+        "{label}: quant deviation {diff} exceeds certified bound {bound}"
+    );
+
+    let f32_times = measure(2, reps, || f32e.infer(&x));
+    let quant_times = measure(2, reps, || quant.infer(&x));
+    report.record_rate(label, "f32 stream", batch as f64, &f32_times, "rows/s");
+    report.record_rate(label, "i8 quant stream", batch as f64, &quant_times, "rows/s");
+
+    let p = quant.program();
+    let f32_bpc = QuantStreamProgram::f32_bytes_per_conn();
+    report.record_exact(&format!("{label} B/conn"), "f32 stream", f32_bpc, "B/conn");
+    report.record_exact(
+        &format!("{label} B/conn"),
+        "i8 quant stream",
+        p.bytes_per_conn(),
+        "B/conn",
+    );
+
+    let f32_rate = batch as f64 / Summary::of(&f32_times).median;
+    let quant_rate = batch as f64 / Summary::of(&quant_times).median;
+    println!("{label}: {}", net.describe());
+    println!("  f32 stream   {f32_rate:>12.0} rows/s  {f32_bpc:>6.1} B/conn");
+    println!(
+        "  i8 quant     {quant_rate:>12.0} rows/s  {:>6.1} B/conn  ({:.1}x fewer stream bytes)",
+        p.bytes_per_conn(),
+        p.compression_ratio()
+    );
+    println!("  max |quant - f32| = {diff:.3e}  (certified bound {bound:.3e})");
+}
+
+fn main() {
+    let args = Spec::new("perf_quant", "f32 stream vs compressed quantized stream")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("mg", "100", "compact growth: design memory size")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+
+    let mut report = Report::new("perf_quant", "compressed quantized stream (§Perf)");
+    report.set_meta("batch", batch);
+
+    let mut rng = Pcg64::seed_from(0x9B10);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let bert = bert_mlp(&bert_spec, &mut rng);
+    let bert_order = two_optimal_order(&bert);
+    bench_net("bert-like", &bert, &bert_order, batch, reps, &mut report);
+
+    let cg_spec = CompactGrowthSpec::new(if quick { 30 } else { args.usize("mg") });
+    let (cg, cg_order) = compact_growth(&cg_spec, &mut rng);
+    bench_net("compact-growth", &cg, &cg_order, batch, reps, &mut report);
+
+    report.finish();
+}

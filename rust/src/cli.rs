@@ -74,6 +74,13 @@ impl Spec {
         self.opt("workers", "0", "batch shards / worker threads (0 = auto)")
     }
 
+    /// The standard `--precision` option shared by the launcher and the
+    /// quant benches: "f32" | "i8", where "auto" defers to the config
+    /// file's `precision` key (and ultimately to f32).
+    pub fn precision_opt(self) -> Self {
+        self.opt("precision", "auto", "numeric precision: f32 | i8 (auto = config key / f32)")
+    }
+
     /// Parse a raw argument list (without argv[0]).
     pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
@@ -380,6 +387,16 @@ mod tests {
         let a = s.parse(&sv(&["--workers", "6"])).unwrap();
         assert_eq!(a.usize("workers"), 6);
         assert!(s.help_text().contains("--workers"));
+    }
+
+    #[test]
+    fn precision_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").precision_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("precision"), "auto", "default defers to config");
+        let a = s.parse(&sv(&["--precision", "i8"])).unwrap();
+        assert_eq!(a.str("precision"), "i8");
+        assert!(s.help_text().contains("--precision"));
     }
 
     #[test]

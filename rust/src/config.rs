@@ -73,6 +73,13 @@ impl Config {
         self.usize("workers", default)
     }
 
+    /// The numeric-precision knob (`precision` key): "f32" serves the
+    /// full-precision stream engine, "i8" the compressed quantized
+    /// stream (`exec::quant`). Orthogonal to `workers` sharding.
+    pub fn precision(&self, default: &str) -> String {
+        self.str("precision", default)
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.lookup(key)
             .and_then(Json::as_str)
@@ -140,6 +147,14 @@ mod tests {
         assert_eq!(c.workers(8), 8, "default when unset");
         c.set_override("workers=4").unwrap();
         assert_eq!(c.workers(8), 4);
+    }
+
+    #[test]
+    fn precision_knob() {
+        let mut c = Config::empty();
+        assert_eq!(c.precision("f32"), "f32", "default when unset");
+        c.set_override("precision=i8").unwrap();
+        assert_eq!(c.precision("f32"), "i8");
     }
 
     #[test]

@@ -32,6 +32,9 @@ pub struct ModelVariant {
     /// Per-shard timing counters when the serving engine is a
     /// [`ParallelEngine`]; the server links these into its metrics.
     pub shard_timings: Option<Arc<ShardTimings>>,
+    /// Numeric precision of the serving engine: "f32" (default) or
+    /// "i8" (compressed quantized stream). Orthogonal to sharding.
+    pub precision: &'static str,
 }
 
 impl ModelVariant {
@@ -42,7 +45,23 @@ impl ModelVariant {
             policy: RoutePolicy::Fixed(0),
             density: 0.0,
             shard_timings: None,
+            precision: "f32",
         }
+    }
+
+    /// A variant serving a compressed quantized stream engine
+    /// (`exec::quant::QuantStreamEngine`), tagged with precision "i8".
+    pub fn quantized(name: &str, engine: Arc<dyn Engine>) -> ModelVariant {
+        ModelVariant::new(name, engine).with_precision("i8")
+    }
+
+    /// Tag the variant's numeric precision (composes with [`sharded`]:
+    /// an i8 engine can also be batch-sharded).
+    ///
+    /// [`sharded`]: ModelVariant::sharded
+    pub fn with_precision(mut self, precision: &'static str) -> ModelVariant {
+        self.precision = precision;
+        self
     }
 
     /// A variant serving `inner` through a batch-sharded
@@ -162,6 +181,20 @@ mod tests {
         let y = v.route().infer(&BatchMatrix::from_fn(1, 8, |_, c| c as f32));
         assert_eq!(y.batch(), 8);
         assert_eq!(v.shard_timings.as_ref().unwrap().batches(), 1);
+    }
+
+    #[test]
+    fn precision_tagging() {
+        let v = ModelVariant::new("f", Arc::new(FakeEngine("stream")));
+        assert_eq!(v.precision, "f32");
+        let q = ModelVariant::quantized("q", Arc::new(FakeEngine("quant-stream")));
+        assert_eq!(q.precision, "i8");
+        assert_eq!(q.route().name(), "quant-stream");
+        // Precision composes with batch sharding.
+        let sq = ModelVariant::sharded("sq", Arc::new(FakeEngine("quant-stream")), 2)
+            .with_precision("i8");
+        assert_eq!(sq.precision, "i8");
+        assert!(sq.shard_timings.is_some());
     }
 
     #[test]

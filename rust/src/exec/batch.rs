@@ -72,6 +72,25 @@ impl BatchMatrix {
         self.row_mut(r).fill(v);
     }
 
+    /// Borrow two distinct rows at once — `src` shared, `dst` mutable
+    /// (the AXPY access pattern of the stream engines). Panics if the
+    /// rows alias or are out of bounds, which keeps the internal
+    /// pointer split sound behind a safe API.
+    #[inline]
+    pub fn row_pair(&mut self, src: usize, dst: usize) -> (&[f32], &mut [f32]) {
+        assert_ne!(src, dst, "row_pair requires distinct rows");
+        let batch = self.batch;
+        let (s, d) = (src * batch, dst * batch);
+        assert!(s + batch <= self.data.len() && d + batch <= self.data.len());
+        unsafe {
+            let base = self.data.as_mut_ptr();
+            (
+                std::slice::from_raw_parts(base.add(s), batch),
+                std::slice::from_raw_parts_mut(base.add(d), batch),
+            )
+        }
+    }
+
     /// Copy columns `[lo, hi)` into a new `rows × (hi − lo)` matrix
     /// (batch sharding: each column is one independent sample).
     pub fn columns(&self, lo: usize, hi: usize) -> BatchMatrix {
@@ -189,6 +208,27 @@ mod tests {
     #[should_panic]
     fn columns_out_of_range_panics() {
         BatchMatrix::zeros(2, 4).columns(2, 5);
+    }
+
+    #[test]
+    fn row_pair_splits_disjoint_rows() {
+        let mut m = BatchMatrix::from_fn(3, 2, |r, c| (r * 10 + c) as f32);
+        let (src, dst) = m.row_pair(0, 2);
+        assert_eq!(src, &[0.0, 1.0]);
+        dst[0] += src[0] + 5.0;
+        assert_eq!(m.row(2), &[25.0, 21.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_pair_rejects_aliasing() {
+        BatchMatrix::zeros(2, 2).row_pair(1, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_pair_rejects_out_of_bounds() {
+        BatchMatrix::zeros(2, 2).row_pair(0, 2);
     }
 
     #[test]

@@ -15,12 +15,17 @@
 //! * [`parallel`] — batch-sharded execution: any engine wrapped in a
 //!   [`parallel::ParallelEngine`] runs `k` column shards concurrently
 //!   with bit-identical results (EIE/SparseNN-style batch parallelism).
+//! * [`quant`] — the compressed variant of the stream: delta/varint row
+//!   indices + per-group affine-quantized `i8` weights, dequantized on
+//!   the fly (EIE-style weight compression; ≥ 3× fewer stream bytes per
+//!   connection, with a certified output-error bound).
 
 pub mod batch;
 pub mod csr;
 pub mod dense;
 pub mod layerwise;
 pub mod parallel;
+pub mod quant;
 pub mod stream;
 
 use batch::BatchMatrix;

@@ -1,0 +1,704 @@
+//! Compressed, quantized stream programs (EIE/SparseNN-style weight
+//! compression applied to the paper's streaming executor).
+//!
+//! The I/O cost model counts *bytes moved* between slow and fast memory;
+//! the f32 [`StreamProgram`] optimizes the **order** of those transfers
+//! but streams `size_of::<StreamOp>()` bytes per connection. A
+//! [`QuantStreamProgram`] attacks the orthogonal axis — transfer **size**:
+//!
+//! * **delta-encoded row indices** — consecutive records touch nearby
+//!   rows *because* of the I/O-optimal order (the 2-optimal construction
+//!   keeps each destination's connections consecutive), so src/dst deltas
+//!   are small and zigzag+varint-encode into 1–2 bytes. The two
+//!   per-record flags (`dst_finish`, `dst_is_hidden`) ride in the low
+//!   bits of the dst-delta varint, so they cost nothing extra.
+//! * **per-group affine-quantized `i8` weights** — each group of
+//!   [`GROUP`] consecutive records shares an f32 scale/zero-point pair;
+//!   a weight dequantizes on the fly as `scale * (q - zero_point)` inside
+//!   the AXPY inner loop. The worst-case weight error is `scale / 2`
+//!   (half a quantization step of that group's range).
+//!
+//! Per-neuron data (biases, input/output ids) stays f32/u32: it is `O(N)`
+//! against the stream's `O(W)` and is read once per batch, not streamed.
+//!
+//! Accuracy is *certified* rather than guessed: [`output_error_bound`]
+//! propagates the exact per-record dequantization errors through the
+//! network (ReLU is 1-Lipschitz) and returns a sound upper bound on the
+//! output deviation from the f32 engine for a concrete input batch — the
+//! tolerance the differential test suite asserts against.
+
+use super::batch::BatchMatrix;
+use super::stream::{StreamOp, StreamProgram};
+use super::{relu_row, Engine};
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::ConnOrder;
+
+/// Records per quantization group (one f32 scale/zero-point pair each).
+pub const GROUP: usize = 64;
+
+/// Affine dequantization parameters of one group:
+/// `w ≈ scale * (q as f32 - zero_point)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantGroup {
+    pub scale: f32,
+    pub zero_point: f32,
+}
+
+/// Raw constituents of a [`QuantStreamProgram`] (serialization exchange
+/// type; [`QuantStreamProgram::from_parts`] validates on the way in).
+#[derive(Clone, Debug)]
+pub struct QuantParts {
+    /// Varint control stream: per record, `zigzag(src_delta)` then
+    /// `(zigzag(dst_delta) << 2) | (dst_is_hidden << 1) | dst_finish`.
+    pub ctrl: Vec<u8>,
+    /// One quantized weight per record.
+    pub qweights: Vec<i8>,
+    /// One entry per [`GROUP`] records (last group may be short).
+    pub groups: Vec<QuantGroup>,
+    pub biases: Vec<f32>,
+    pub hidden_sources: Vec<u32>,
+    pub input_ids: Vec<u32>,
+    pub output_ids: Vec<u32>,
+    pub n_neurons: usize,
+}
+
+/// A compressed, quantized stream program for one network + order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantStreamProgram {
+    ctrl: Vec<u8>,
+    qweights: Vec<i8>,
+    groups: Vec<QuantGroup>,
+    biases: Vec<f32>,
+    hidden_sources: Vec<u32>,
+    input_ids: Vec<u32>,
+    output_ids: Vec<u32>,
+    n_neurons: usize,
+}
+
+impl QuantStreamProgram {
+    /// Compile `net` with the given topological order and compress the
+    /// resulting op stream.
+    pub fn compress(net: &Ffnn, order: &ConnOrder) -> QuantStreamProgram {
+        QuantStreamProgram::from_program(&StreamProgram::compile(net, order))
+    }
+
+    /// Compress an already-compiled f32 stream program.
+    pub fn from_program(p: &StreamProgram) -> QuantStreamProgram {
+        let ops = p.ops();
+        let mut ctrl = Vec::with_capacity(ops.len() * 3);
+        let mut qweights = Vec::with_capacity(ops.len());
+        let mut groups = Vec::with_capacity(ops.len().div_ceil(GROUP));
+        let (mut prev_src, mut prev_dst) = (0i64, 0i64);
+        for chunk in ops.chunks(GROUP) {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for op in chunk {
+                lo = lo.min(op.weight);
+                hi = hi.max(op.weight);
+            }
+            let mid = 0.5 * (lo + hi);
+            // Near-constant groups degenerate to scale 1 / q = 0 (every
+            // weight dequantizes to `mid`); the threshold keeps
+            // `zero_point = -mid / scale` far from f32 overflow.
+            let range = hi - lo;
+            let scale = if range >= 1e-30 { range / 254.0 } else { 1.0 };
+            let zero_point = -mid / scale;
+            groups.push(QuantGroup { scale, zero_point });
+            for op in chunk {
+                let q = ((op.weight - mid) / scale).round().clamp(-127.0, 127.0);
+                qweights.push(q as i8);
+                write_varint(&mut ctrl, zigzag(op.src as i64 - prev_src));
+                let dd = zigzag(op.dst as i64 - prev_dst);
+                let flags = (u64::from(op.dst_is_hidden) << 1) | u64::from(op.dst_finish);
+                write_varint(&mut ctrl, (dd << 2) | flags);
+                prev_src = op.src as i64;
+                prev_dst = op.dst as i64;
+            }
+        }
+        QuantStreamProgram {
+            ctrl,
+            qweights,
+            groups,
+            biases: p.biases().to_vec(),
+            hidden_sources: p.hidden_sources().to_vec(),
+            input_ids: p.input_ids().to_vec(),
+            output_ids: p.output_ids().to_vec(),
+            n_neurons: p.n_neurons(),
+        }
+    }
+
+    /// Rebuild a program from raw parts (artifact loading path),
+    /// validating that the control stream decodes to exactly one
+    /// in-range record per quantized weight.
+    pub fn from_parts(parts: QuantParts) -> anyhow::Result<QuantStreamProgram> {
+        let QuantParts {
+            ctrl,
+            qweights,
+            groups,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+        } = parts;
+        anyhow::ensure!(
+            groups.len() == qweights.len().div_ceil(GROUP),
+            "need {} quant groups for {} records, got {}",
+            qweights.len().div_ceil(GROUP),
+            qweights.len(),
+            groups.len()
+        );
+        anyhow::ensure!(
+            biases.len() == n_neurons,
+            "biases length {} != n_neurons {n_neurons}",
+            biases.len()
+        );
+        for &v in hidden_sources.iter().chain(&input_ids).chain(&output_ids) {
+            anyhow::ensure!((v as usize) < n_neurons, "neuron id {v} out of range");
+        }
+        decode_records(&ctrl, &qweights, &groups, n_neurons)?;
+        Ok(QuantStreamProgram {
+            ctrl,
+            qweights,
+            groups,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+        })
+    }
+
+    /// Clone the raw constituents (serialization exchange).
+    pub fn to_parts(&self) -> QuantParts {
+        QuantParts {
+            ctrl: self.ctrl.clone(),
+            qweights: self.qweights.clone(),
+            groups: self.groups.clone(),
+            biases: self.biases.clone(),
+            hidden_sources: self.hidden_sources.clone(),
+            input_ids: self.input_ids.clone(),
+            output_ids: self.output_ids.clone(),
+            n_neurons: self.n_neurons,
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.qweights.len()
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    pub fn input_ids(&self) -> &[u32] {
+        &self.input_ids
+    }
+
+    pub fn output_ids(&self) -> &[u32] {
+        &self.output_ids
+    }
+
+    pub fn ctrl_bytes(&self) -> &[u8] {
+        &self.ctrl
+    }
+
+    pub fn quantized_weights(&self) -> &[i8] {
+        &self.qweights
+    }
+
+    pub fn groups(&self) -> &[QuantGroup] {
+        &self.groups
+    }
+
+    pub fn biases(&self) -> &[f32] {
+        &self.biases
+    }
+
+    pub fn hidden_sources(&self) -> &[u32] {
+        &self.hidden_sources
+    }
+
+    /// Total bytes streamed per batch: control stream + quantized
+    /// weights + group dequantization parameters.
+    pub fn stream_bytes(&self) -> usize {
+        let group_bytes = self.groups.len() * std::mem::size_of::<QuantGroup>();
+        self.ctrl.len() + self.qweights.len() + group_bytes
+    }
+
+    /// Streamed bytes per connection (the paper's cost unit, in bytes).
+    pub fn bytes_per_conn(&self) -> f64 {
+        if self.qweights.is_empty() {
+            return 0.0;
+        }
+        self.stream_bytes() as f64 / self.qweights.len() as f64
+    }
+
+    /// Bytes per connection of the uncompressed f32 stream
+    /// (`size_of::<StreamOp>()`), for compression-ratio reports.
+    pub fn f32_bytes_per_conn() -> f64 {
+        std::mem::size_of::<StreamOp>() as f64
+    }
+
+    /// Stream-size reduction vs the f32 stream (e.g. 4.2 = 4.2× smaller).
+    pub fn compression_ratio(&self) -> f64 {
+        let bpc = self.bytes_per_conn();
+        if bpc == 0.0 {
+            return 1.0;
+        }
+        Self::f32_bytes_per_conn() / bpc
+    }
+
+    /// Worst-case per-weight dequantization error over all groups
+    /// (half a quantization step of the widest group).
+    pub fn max_weight_error(&self) -> f32 {
+        self.groups.iter().fold(0.0f32, |acc, g| acc.max(0.5 * g.scale))
+    }
+
+    /// Decode the full op stream with dequantized weights (tests,
+    /// [`output_error_bound`], artifact validation).
+    pub fn decode(&self) -> Vec<StreamOp> {
+        decode_records(&self.ctrl, &self.qweights, &self.groups, self.n_neurons)
+            .expect("QuantStreamProgram holds a validated stream")
+    }
+
+    /// Execute into caller-provided buffers (mirror of
+    /// [`StreamProgram::run_into`], decoding and dequantizing on the fly).
+    pub fn run_into(&self, inputs: &BatchMatrix, values: &mut BatchMatrix, out: &mut BatchMatrix) {
+        let batch = inputs.batch();
+        assert_eq!(inputs.rows(), self.input_ids.len(), "input row count");
+        assert_eq!(values.rows(), self.n_neurons);
+        assert_eq!(values.batch(), batch);
+        assert_eq!(out.rows(), self.output_ids.len());
+        assert_eq!(out.batch(), batch);
+
+        // Prologue: biases for non-inputs, request values for inputs,
+        // relu(bias) for hidden sources (same discipline as f32 stream).
+        for v in 0..self.n_neurons {
+            values.fill_row(v, self.biases[v]);
+        }
+        for (i, &v) in self.input_ids.iter().enumerate() {
+            values.row_mut(v as usize).copy_from_slice(inputs.row(i));
+        }
+        for &v in &self.hidden_sources {
+            relu_row(values.row_mut(v as usize));
+        }
+
+        // The compressed stream: decode record, dequantize, AXPY.
+        let ctrl = &self.ctrl[..];
+        let mut pos = 0usize;
+        let (mut src, mut dst) = (0i64, 0i64);
+        let (mut scale, mut zero_point) = (0.0f32, 0.0f32);
+        for (i, &q) in self.qweights.iter().enumerate() {
+            if i % GROUP == 0 {
+                let g = self.groups[i / GROUP];
+                scale = g.scale;
+                zero_point = g.zero_point;
+            }
+            src += unzigzag(read_varint(ctrl, &mut pos));
+            let packed = read_varint(ctrl, &mut pos);
+            dst += unzigzag(packed >> 2);
+            let w = scale * (q as f32 - zero_point);
+            // Disjoint rows (no self-loops, validated at construction).
+            let (src_row, dst_row) = values.row_pair(src as usize, dst as usize);
+            for (y, &x) in dst_row.iter_mut().zip(src_row) {
+                *y += w * x;
+            }
+            // finish (bit 0) of a hidden neuron (bit 1) ⇒ ReLU.
+            if packed & 0b11 == 0b11 {
+                relu_row(dst_row);
+            }
+        }
+        debug_assert_eq!(pos, ctrl.len());
+
+        // Epilogue: gather outputs.
+        for (i, &v) in self.output_ids.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(values.row(v as usize));
+        }
+    }
+}
+
+/// [`Engine`] wrapper over a compressed program.
+pub struct QuantStreamEngine {
+    program: QuantStreamProgram,
+    name: &'static str,
+}
+
+impl QuantStreamEngine {
+    pub fn new(net: &Ffnn, order: &ConnOrder) -> QuantStreamEngine {
+        QuantStreamEngine {
+            program: QuantStreamProgram::compress(net, order),
+            name: "quant-stream",
+        }
+    }
+
+    /// Wrap an already-built (e.g. artifact-loaded) program.
+    pub fn from_program(program: QuantStreamProgram) -> QuantStreamEngine {
+        QuantStreamEngine {
+            program,
+            name: "quant-stream",
+        }
+    }
+
+    pub fn program(&self) -> &QuantStreamProgram {
+        &self.program
+    }
+}
+
+impl Engine for QuantStreamEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let mut values = BatchMatrix::zeros(self.program.n_neurons(), batch);
+        let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
+        self.program.run_into(inputs, &mut values, &mut out);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.program.input_ids().len()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.program.output_ids().len()
+    }
+}
+
+/// Certified upper bound on `max |quant_output - f32_output|` for the
+/// given input batch.
+///
+/// Walks both op streams in lockstep, propagating per-record error
+/// intervals: with `Δw = |w̃ - w|` the exact dequantization error and
+/// `e_v` the accumulated error of neuron `v`,
+/// `e_dst += Δw·|value_src| + |w̃|·e_src` bounds `|w̃·x̃ - w·x|`; ReLU is
+/// 1-Lipschitz so activations never amplify the interval. The bound
+/// holds in real arithmetic — f32 rounding adds at most a few ulps, so
+/// callers compare with a small slack (e.g. `bound * 1.01 + 1e-4`).
+pub fn output_error_bound(
+    reference: &StreamProgram,
+    quant: &QuantStreamProgram,
+    inputs: &BatchMatrix,
+) -> f32 {
+    assert_eq!(reference.n_ops(), quant.n_ops(), "programs must share one op stream");
+    assert_eq!(reference.n_neurons(), quant.n_neurons());
+    let batch = inputs.batch();
+    let mut values = BatchMatrix::zeros(reference.n_neurons(), batch);
+    let mut out = BatchMatrix::zeros(reference.output_ids().len(), batch);
+    reference.run_into(inputs, &mut values, &mut out);
+
+    // A source value is only read after it is finished (topological
+    // order), so the final `values` buffer equals the value at use time.
+    let mut err = BatchMatrix::zeros(reference.n_neurons(), batch);
+    for (op, qop) in reference.ops().iter().zip(quant.decode()) {
+        debug_assert_eq!((op.src, op.dst), (qop.src, qop.dst), "streams diverged");
+        let dw = (qop.weight - op.weight).abs();
+        let wq = qop.weight.abs();
+        let val_src = values.row(op.src as usize);
+        let (err_src, err_dst) = err.row_pair(op.src as usize, op.dst as usize);
+        for ((e, &es), &vs) in err_dst.iter_mut().zip(err_src).zip(val_src) {
+            *e += dw * vs.abs() + wq * es;
+        }
+    }
+    let mut bound = 0.0f32;
+    for &v in reference.output_ids() {
+        for &e in err.row(v as usize) {
+            bound = bound.max(e);
+        }
+    }
+    bound
+}
+
+// ---------------------------------------------------------------------
+// Varint / zigzag codec
+// ---------------------------------------------------------------------
+
+#[inline]
+fn zigzag(d: i64) -> u64 {
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+fn write_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Unchecked read for the hot loop (streams are validated at build time).
+#[inline]
+fn read_varint(buf: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = buf[*pos];
+        *pos += 1;
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+    }
+}
+
+fn checked_varint(buf: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("truncated varint at byte {pos}"))?;
+        *pos += 1;
+        anyhow::ensure!(shift < 64, "varint overflow at byte {pos}");
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Decode + validate a full control stream against its weights/groups.
+fn decode_records(
+    ctrl: &[u8],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    n_neurons: usize,
+) -> anyhow::Result<Vec<StreamOp>> {
+    let mut ops = Vec::with_capacity(qweights.len());
+    let mut pos = 0usize;
+    let (mut src, mut dst) = (0i64, 0i64);
+    for (i, &q) in qweights.iter().enumerate() {
+        let g = groups
+            .get(i / GROUP)
+            .ok_or_else(|| anyhow::anyhow!("record {i}: missing quant group"))?;
+        src += unzigzag(checked_varint(ctrl, &mut pos)?);
+        let packed = checked_varint(ctrl, &mut pos)?;
+        dst += unzigzag(packed >> 2);
+        anyhow::ensure!(
+            src >= 0 && (src as usize) < n_neurons,
+            "record {i}: src {src} out of range 0..{n_neurons}"
+        );
+        anyhow::ensure!(
+            dst >= 0 && (dst as usize) < n_neurons,
+            "record {i}: dst {dst} out of range 0..{n_neurons}"
+        );
+        anyhow::ensure!(src != dst, "record {i}: self-loop {src}");
+        ops.push(StreamOp {
+            src: src as u32,
+            dst: dst as u32,
+            weight: g.scale * (q as f32 - g.zero_point),
+            dst_finish: packed & 0b01 != 0,
+            dst_is_hidden: packed & 0b10 != 0,
+        });
+    }
+    anyhow::ensure!(
+        pos == ctrl.len(),
+        "{} trailing bytes in the control stream",
+        ctrl.len() - pos
+    );
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::stream::StreamingEngine;
+    use crate::ffnn::bert::{bert_mlp, BertSpec};
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::graph::{Conn, NeuronKind};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::util::rng::Pcg64;
+
+    fn tiny() -> Ffnn {
+        Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+            ],
+            vec![0.0, 0.0, 0.5, -1.0],
+            vec![
+                Conn { src: 0, dst: 2, weight: 2.0 },
+                Conn { src: 1, dst: 2, weight: -3.0 },
+                Conn { src: 2, dst: 3, weight: 1.5 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn zigzag_varint_roundtrip() {
+        let mut buf = Vec::new();
+        let cases: Vec<i64> = vec![0, 1, -1, 63, -64, 127, -128, 300, -300, 1 << 20, -(1 << 33)];
+        for &d in &cases {
+            write_varint(&mut buf, zigzag(d));
+        }
+        let mut pos = 0;
+        for &d in &cases {
+            assert_eq!(unzigzag(read_varint(&buf, &mut pos)), d);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn compress_decode_preserves_structure() {
+        for seed in 0..4u64 {
+            let mut rng = Pcg64::seed_from(0x9_0 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 18, 0.4), &mut rng);
+            let order = two_optimal_order(&net);
+            let f32p = StreamProgram::compile(&net, &order);
+            let qp = QuantStreamProgram::from_program(&f32p);
+            assert_eq!(qp.n_ops(), f32p.n_ops());
+            let qops = qp.decode();
+            for (i, (op, qop)) in f32p.ops().iter().zip(&qops).enumerate() {
+                assert_eq!(op.src, qop.src, "op {i}");
+                assert_eq!(op.dst, qop.dst, "op {i}");
+                assert_eq!(op.dst_finish, qop.dst_finish, "op {i}");
+                assert_eq!(op.dst_is_hidden, qop.dst_is_hidden, "op {i}");
+                let step = qp.groups()[i / GROUP].scale;
+                assert!(
+                    (op.weight - qop.weight).abs() <= 0.5 * step + 1e-4,
+                    "op {i}: |{} - {}| > step/2 = {}",
+                    op.weight,
+                    qop.weight,
+                    0.5 * step
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hand_computed_forward_close_to_f32() {
+        let net = tiny();
+        let order = two_optimal_order(&net);
+        let engine = QuantStreamEngine::new(&net, &order);
+        assert_eq!(engine.name(), "quant-stream");
+        // batch 2: x = [(1, 1), (2, 0)] — same instance as the f32
+        // stream test; weights {2, −3} dequantize exactly (group
+        // endpoints), 1.5 within one step.
+        let inputs = BatchMatrix::from_rows(2, 2, vec![1.0, 2.0, 1.0, 0.0]);
+        let out = engine.infer(&inputs);
+        assert_eq!(out.rows(), 1);
+        let r = out.row(0);
+        assert!((r[0] - (-1.0)).abs() < 1e-3, "{r:?}");
+        assert!((r[1] - 5.75).abs() < 0.05, "{r:?}");
+    }
+
+    #[test]
+    fn engine_within_certified_bound() {
+        for seed in 0..4u64 {
+            let mut rng = Pcg64::seed_from(0xB0 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 20, 0.35), &mut rng);
+            let order = two_optimal_order(&net);
+            let stream = StreamingEngine::new(&net, &order);
+            let quant = QuantStreamEngine::new(&net, &order);
+            let x = BatchMatrix::random(net.n_inputs(), 5, &mut rng);
+            let a = stream.infer(&x);
+            let b = quant.infer(&x);
+            let bound = output_error_bound(stream.program(), quant.program(), &x);
+            let diff = a.max_abs_diff(&b);
+            assert!(bound.is_finite() && bound >= 0.0);
+            assert!(
+                diff <= bound * 1.01 + 1e-4,
+                "seed {seed}: diff {diff} exceeds certified bound {bound}"
+            );
+        }
+    }
+
+    /// Acceptance: ≤ 1e-2 max-abs-error vs the f32 stream on the
+    /// BERT-like net at ≥ 3× fewer stream bytes per connection.
+    #[test]
+    fn bert_like_accuracy_and_compression() {
+        let mut rng = Pcg64::seed_from(0xBE27);
+        let mut net = bert_mlp(&BertSpec::small(0.1), &mut rng);
+        // Quantized inference assumes unit-scale activations (real
+        // checkpoints are normalized); rescale the synthetic N(0, 1)
+        // weights to a realistic magnitude.
+        net.scale_weights(0.02);
+        let order = two_optimal_order(&net);
+        let stream = StreamingEngine::new(&net, &order);
+        let quant = QuantStreamEngine::new(&net, &order);
+        let x = BatchMatrix::random(net.n_inputs(), 16, &mut rng);
+        let a = stream.infer(&x);
+        let b = quant.infer(&x);
+        let diff = a.max_abs_diff(&b);
+        let bound = output_error_bound(stream.program(), quant.program(), &x);
+        assert!(
+            diff <= bound * 1.01 + 1e-5,
+            "diff {diff} exceeds certified bound {bound}"
+        );
+        assert!(diff <= 1e-2, "max abs error {diff} vs f32 must stay under 1e-2");
+
+        let bpc = quant.program().bytes_per_conn();
+        let f32_bpc = QuantStreamProgram::f32_bytes_per_conn();
+        assert!(
+            bpc * 3.0 <= f32_bpc,
+            "{bpc:.2} B/conn is not ≥ 3× below the f32 stream's {f32_bpc} B/conn"
+        );
+        assert!(quant.program().compression_ratio() >= 3.0);
+    }
+
+    #[test]
+    fn stream_bytes_accounting() {
+        let mut rng = Pcg64::seed_from(7);
+        let net = random_mlp(&MlpSpec::new(2, 30, 0.3), &mut rng);
+        let qp = QuantStreamProgram::compress(&net, &two_optimal_order(&net));
+        assert!(qp.n_ops() > GROUP, "want a multi-group program");
+        assert_eq!(qp.groups().len(), qp.n_ops().div_ceil(GROUP));
+        assert_eq!(
+            qp.stream_bytes(),
+            qp.ctrl_bytes().len() + qp.n_ops() + qp.groups().len() * 8
+        );
+        assert!(qp.bytes_per_conn() > 0.0);
+        assert!(qp.max_weight_error() > 0.0);
+    }
+
+    #[test]
+    fn parts_roundtrip_and_validation() {
+        let mut rng = Pcg64::seed_from(8);
+        let net = random_mlp(&MlpSpec::new(2, 12, 0.5), &mut rng);
+        let qp = QuantStreamProgram::compress(&net, &two_optimal_order(&net));
+        let rebuilt = QuantStreamProgram::from_parts(qp.to_parts()).unwrap();
+        assert_eq!(rebuilt, qp);
+
+        // Truncated control stream.
+        let mut bad = qp.to_parts();
+        bad.ctrl.truncate(bad.ctrl.len() - 1);
+        assert!(QuantStreamProgram::from_parts(bad).is_err());
+
+        // Wrong group count.
+        let mut bad = qp.to_parts();
+        bad.groups.pop();
+        assert!(QuantStreamProgram::from_parts(bad).is_err());
+
+        // Out-of-range neuron id.
+        let mut bad = qp.to_parts();
+        bad.input_ids.push(bad.n_neurons as u32);
+        assert!(QuantStreamProgram::from_parts(bad).is_err());
+    }
+
+    #[test]
+    fn output_shapes_and_engine_contract() {
+        let mut rng = Pcg64::seed_from(9);
+        let net = random_mlp(&MlpSpec::new(2, 10, 0.5), &mut rng);
+        let engine = QuantStreamEngine::new(&net, &two_optimal_order(&net));
+        assert_eq!(engine.n_inputs(), net.n_inputs());
+        assert_eq!(engine.n_outputs(), net.n_outputs());
+        let y = engine.infer(&BatchMatrix::random(net.n_inputs(), 3, &mut rng));
+        assert_eq!(y.rows(), net.n_outputs());
+        assert_eq!(y.batch(), 3);
+    }
+}

@@ -97,6 +97,23 @@ impl StreamProgram {
         &self.output_ids
     }
 
+    /// The compiled op records in execution order (consumed by
+    /// [`crate::exec::quant`] to build the compressed stream and by the
+    /// differential tests).
+    pub fn ops(&self) -> &[StreamOp] {
+        &self.ops
+    }
+
+    /// Per-neuron initial values (bias for non-inputs, 0.0 for inputs).
+    pub fn biases(&self) -> &[f32] {
+        &self.biases
+    }
+
+    /// Hidden neurons with no incoming connections (value = relu(bias)).
+    pub fn hidden_sources(&self) -> &[u32] {
+        &self.hidden_sources
+    }
+
     /// Execute into a caller-provided value buffer (`n_neurons × batch`),
     /// writing outputs into `out` (`n_outputs × batch`). Separated from
     /// [`Engine::infer`] so the serving hot path can reuse buffers.
@@ -121,19 +138,10 @@ impl StreamProgram {
         }
 
         // The stream: one AXPY per connection, activation at finish.
-        let data = values.data_mut();
         for op in &self.ops {
-            let (s, d) = (op.src as usize * batch, op.dst as usize * batch);
             let w = op.weight;
-            // Disjoint rows (no self-loops): split borrows via raw parts.
-            debug_assert_ne!(op.src, op.dst);
-            let (src_row, dst_row) = unsafe {
-                let base = data.as_mut_ptr();
-                (
-                    std::slice::from_raw_parts(base.add(s), batch),
-                    std::slice::from_raw_parts_mut(base.add(d), batch),
-                )
-            };
+            // Disjoint rows (no self-loops) — row_pair enforces it.
+            let (src_row, dst_row) = values.row_pair(op.src as usize, op.dst as usize);
             for (y, &x) in dst_row.iter_mut().zip(src_row) {
                 *y += w * x;
             }

@@ -211,6 +211,18 @@ impl Ffnn {
         self.initial = values;
     }
 
+    /// Scale every connection weight and initial value by `factor`
+    /// (e.g. to normalize synthetic N(0, 1) nets to the unit-scale
+    /// activations quantized inference assumes).
+    pub fn scale_weights(&mut self, factor: f32) {
+        for c in &mut self.conns {
+            c.weight *= factor;
+        }
+        for b in &mut self.initial {
+            *b *= factor;
+        }
+    }
+
     pub fn in_conns(&self, n: NeuronId) -> &[u32] {
         let lo = self.in_off[n as usize] as usize;
         let hi = self.in_off[n as usize + 1] as usize;
@@ -582,5 +594,20 @@ mod tests {
         assert_eq!(layered.n_layers(), Some(3));
         assert_eq!(layered.layers().unwrap()[1], vec![1]);
         assert!((layered.density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_weights_scales_conns_and_initials() {
+        let mut net = diamond();
+        let conns: Vec<Conn> = net.conns().to_vec();
+        let initials: Vec<f32> = net.initials().to_vec();
+        net.scale_weights(0.5);
+        for (c, orig) in net.conns().iter().zip(&conns) {
+            assert_eq!(c.weight, orig.weight * 0.5);
+            assert_eq!((c.src, c.dst), (orig.src, orig.dst));
+        }
+        for (b, orig) in net.initials().iter().zip(&initials) {
+            assert_eq!(*b, orig * 0.5);
+        }
     }
 }

@@ -1,10 +1,18 @@
-//! FFNN ⇄ JSON serialization: network files under `configs/`/`results/`
+//! FFNN ⇄ JSON serialization: network files under `configs`/`results/`
 //! and the interchange format consumed by the Python AOT path (model
 //! shapes + ELL packing parameters are derived from these files).
+//!
+//! Also home of the **quantized artifact format**
+//! (`sparseflow-quant-v1`): a [`QuantStreamProgram`]'s byte streams
+//! round-trip through JSON (hex-encoded control/weight bytes, exact f32
+//! group parameters) so a compressed model can be shipped without the
+//! original network file.
 
 use super::graph::{Conn, Ffnn, NeuronKind};
 use super::topo::ConnOrder;
+use crate::exec::quant::{QuantGroup, QuantParts, QuantStreamProgram};
 use crate::util::json::Json;
+use std::fmt::Write as _;
 use std::path::Path;
 
 /// Serialize a network (and optionally a connection order) to JSON.
@@ -130,6 +138,160 @@ pub fn load_net(path: &Path) -> anyhow::Result<(Ffnn, Option<ConnOrder>)> {
     net_from_json(&j)
 }
 
+// ---------------------------------------------------------------------
+// Quantized artifact format (sparseflow-quant-v1)
+// ---------------------------------------------------------------------
+
+fn bytes_to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        write!(s, "{b:02x}").expect("write to String cannot fail");
+    }
+    s
+}
+
+fn hex_to_bytes(s: &str) -> anyhow::Result<Vec<u8>> {
+    // from_str_radix alone is too lax (it accepts a leading '+').
+    anyhow::ensure!(
+        s.bytes().all(|b| b.is_ascii_hexdigit()),
+        "hex string contains non-hex characters"
+    );
+    anyhow::ensure!(s.len() % 2 == 0, "odd hex-string length {}", s.len());
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|e| anyhow::anyhow!("bad hex at byte {}: {e}", i / 2))
+        })
+        .collect()
+}
+
+fn u32s_to_json(ids: &[u32]) -> Json {
+    Json::Arr(ids.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn u32s_from_json(j: &Json, key: &str) -> anyhow::Result<Vec<u32>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing {key}"))?
+        .iter()
+        .map(|v| {
+            v.as_u64()
+                .map(|x| x as u32)
+                .ok_or_else(|| anyhow::anyhow!("bad entry in {key}"))
+        })
+        .collect()
+}
+
+/// Serialize a compressed program to the quantized artifact format.
+/// Every field round-trips exactly: byte streams as hex, f32 values
+/// through f64 JSON numbers (lossless widening).
+pub fn quant_to_json(p: &QuantStreamProgram) -> Json {
+    let qbytes: Vec<u8> = p.quantized_weights().iter().map(|&q| q as u8).collect();
+    let groups: Vec<Json> = p
+        .groups()
+        .iter()
+        .flat_map(|g| [Json::Num(g.scale as f64), Json::Num(g.zero_point as f64)])
+        .collect();
+    let biases: Vec<Json> = p.biases().iter().map(|&b| Json::Num(b as f64)).collect();
+    Json::obj()
+        .set("format", "sparseflow-quant-v1")
+        .set("n_neurons", p.n_neurons())
+        .set("group_size", crate::exec::quant::GROUP)
+        .set("ctrl", bytes_to_hex(p.ctrl_bytes()))
+        .set("qweights", bytes_to_hex(&qbytes))
+        .set("groups", Json::Arr(groups))
+        .set("biases", Json::Arr(biases))
+        .set("hidden_sources", u32s_to_json(p.hidden_sources()))
+        .set("input_ids", u32s_to_json(p.input_ids()))
+        .set("output_ids", u32s_to_json(p.output_ids()))
+}
+
+/// Deserialize (and validate) a compressed program.
+pub fn quant_from_json(j: &Json) -> anyhow::Result<QuantStreamProgram> {
+    anyhow::ensure!(
+        j.get("format").and_then(Json::as_str) == Some("sparseflow-quant-v1"),
+        "unknown or missing quant format tag"
+    );
+    let group_size = j
+        .get("group_size")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("missing group_size"))? as usize;
+    anyhow::ensure!(
+        group_size == crate::exec::quant::GROUP,
+        "unsupported group size {group_size} (expected {})",
+        crate::exec::quant::GROUP
+    );
+    let n_neurons = j
+        .get("n_neurons")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("missing n_neurons"))? as usize;
+    let ctrl = hex_to_bytes(
+        j.get("ctrl")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing ctrl"))?,
+    )?;
+    let qweights: Vec<i8> = hex_to_bytes(
+        j.get("qweights")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing qweights"))?,
+    )?
+    .into_iter()
+    .map(|b| b as i8)
+    .collect();
+    let flat: Vec<f32> = j
+        .get("groups")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing groups"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow::anyhow!("bad group value"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(flat.len() % 2 == 0, "groups must hold (scale, zero_point) pairs");
+    let groups: Vec<QuantGroup> = flat
+        .chunks_exact(2)
+        .map(|pair| QuantGroup {
+            scale: pair[0],
+            zero_point: pair[1],
+        })
+        .collect();
+    let biases: Vec<f32> = j
+        .get("biases")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing biases"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow::anyhow!("bad bias"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    QuantStreamProgram::from_parts(QuantParts {
+        ctrl,
+        qweights,
+        groups,
+        biases,
+        hidden_sources: u32s_from_json(j, "hidden_sources")?,
+        input_ids: u32s_from_json(j, "input_ids")?,
+        output_ids: u32s_from_json(j, "output_ids")?,
+        n_neurons,
+    })
+}
+
+pub fn save_quant(p: &QuantStreamProgram, path: &Path) -> anyhow::Result<()> {
+    quant_to_json(p)
+        .to_file(path)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
+pub fn load_quant(path: &Path) -> anyhow::Result<QuantStreamProgram> {
+    let j = Json::from_file(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    quant_from_json(&j)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +329,64 @@ mod tests {
     fn rejects_bad_format() {
         let j = Json::obj().set("format", "bogus");
         assert!(net_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quant_roundtrip_is_bit_exact() {
+        use crate::exec::batch::BatchMatrix;
+        use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
+        use crate::exec::Engine;
+
+        let mut rng = Pcg64::seed_from(11);
+        let net = random_mlp(&MlpSpec::new(3, 14, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+        let program = QuantStreamProgram::compress(&net, &order);
+        let j = quant_to_json(&program);
+        let back = quant_from_json(&j).unwrap();
+        assert_eq!(back, program, "quant artifact must round-trip exactly");
+
+        // Identical programs produce identical outputs.
+        let x = BatchMatrix::random(net.n_inputs(), 4, &mut rng);
+        let a = QuantStreamEngine::from_program(program).infer(&x);
+        let b = QuantStreamEngine::from_program(back).infer(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quant_roundtrip_via_file_and_rejections() {
+        use crate::exec::quant::QuantStreamProgram;
+
+        let mut rng = Pcg64::seed_from(12);
+        let net = random_mlp(&MlpSpec::new(2, 8, 0.5), &mut rng);
+        let program = QuantStreamProgram::compress(&net, &two_optimal_order(&net));
+        let dir = std::env::temp_dir().join("sparseflow-quant-serde-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.quant.json");
+        save_quant(&program, &path).unwrap();
+        assert_eq!(load_quant(&path).unwrap(), program);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Wrong format tag.
+        assert!(quant_from_json(&Json::obj().set("format", "bogus")).is_err());
+        // Corrupt control stream hex.
+        let mut j = quant_to_json(&program);
+        j = j.set("ctrl", "zz");
+        assert!(quant_from_json(&j).is_err());
+        // Truncated weights (record/weight count mismatch).
+        let mut j = quant_to_json(&program);
+        j = j.set("qweights", "00");
+        assert!(quant_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn hex_helpers_roundtrip() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        let hex = bytes_to_hex(&bytes);
+        assert_eq!(hex.len(), 512);
+        assert_eq!(hex_to_bytes(&hex).unwrap(), bytes);
+        assert!(hex_to_bytes("abc").is_err(), "odd length");
+        assert!(hex_to_bytes("gg").is_err(), "non-hex digits");
+        assert!(hex_to_bytes("+1").is_err(), "sign characters are not hex");
     }
 
     #[test]

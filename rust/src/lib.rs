@@ -17,9 +17,11 @@
 //!    topological connection orders (window moves, `2^{-Δ·t^σ}` updates).
 //! 5. [`exec`] — real numeric engines: the streaming executor that runs a
 //!    (reordered) connection order on batched inputs, the layer-wise CSR
-//!    baseline (CSRMM), a dense reference, and the batch-sharded
+//!    baseline (CSRMM), a dense reference, the batch-sharded
 //!    [`exec::parallel::ParallelEngine`] running any of them on
-//!    concurrent column shards (bit-identical to serial).
+//!    concurrent column shards (bit-identical to serial), and the
+//!    compressed quantized stream ([`exec::quant`]: delta/varint indices
+//!    + per-group i8 weights, with a certified output-error bound).
 //! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
 //!    artifacts and executes them from Rust.
 //! 7. [`coordinator`] — batched inference serving: request queue, dynamic
@@ -63,6 +65,7 @@ pub mod prelude {
         csr::CsrLayer,
         layerwise::LayerwiseEngine,
         parallel::ParallelEngine,
+        quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram},
         stream::{StreamProgram, StreamingEngine},
         Engine,
     };

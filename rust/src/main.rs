@@ -17,6 +17,7 @@ use sparseflow::coordinator::batcher::BatchPolicy;
 use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
 use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
 use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::quant::{QuantStreamEngine, QuantStreamProgram};
 use sparseflow::exec::stream::StreamingEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
@@ -313,6 +314,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             .opt("config", "-", "JSON config file ('-' = none)")
             .opt("set", "-", "config override key=value ('-' = none)")
             .workers_opt()
+            .precision_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
         args,
     );
@@ -351,15 +353,42 @@ fn cmd_serve(args: &[String]) -> i32 {
         },
         w => w,
     };
+    // The precision knob: an explicit --precision wins, else the config
+    // file / --set override's `precision` key, else f32.
+    let precision = match a.str("precision") {
+        "auto" => config.precision("f32"),
+        p => p.to_string(),
+    };
     let mut router = Router::new();
     let name = a.str("name").to_string();
-    let stream =
-        std::sync::Arc::new(StreamingEngine::new(&net, &order)) as std::sync::Arc<dyn Engine>;
+    let engine: std::sync::Arc<dyn Engine> = match precision.as_str() {
+        "f32" => std::sync::Arc::new(StreamingEngine::new(&net, &order)),
+        "i8" => {
+            let quant = QuantStreamEngine::new(&net, &order);
+            let p = quant.program();
+            println!(
+                "quantized stream: {:.2} B/conn vs {:.0} B/conn f32 ({:.1}x smaller), \
+                 worst-case weight error {:.2e}",
+                p.bytes_per_conn(),
+                QuantStreamProgram::f32_bytes_per_conn(),
+                p.compression_ratio(),
+                p.max_weight_error()
+            );
+            std::sync::Arc::new(quant)
+        }
+        other => {
+            eprintln!("error: unknown precision {other:?} (expected f32 or i8)");
+            return 2;
+        }
+    };
+    let tag: &'static str = if precision == "i8" { "i8" } else { "f32" };
     if workers > 1 {
         println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
-        router.register(ModelVariant::sharded(&name, stream, workers));
+        router.register(ModelVariant::sharded(&name, engine, workers).with_precision(tag));
+    } else if tag == "i8" {
+        router.register(ModelVariant::quantized(&name, engine));
     } else {
-        router.register(ModelVariant::new(&name, stream));
+        router.register(ModelVariant::new(&name, engine));
     }
     if a.flag("with-csr") && net.layer_of().is_some() {
         router.register(ModelVariant::new(

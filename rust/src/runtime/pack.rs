@@ -2,8 +2,19 @@
 //! the AOT artifacts expect as inputs (weights/indices `[n_out, K]`,
 //! bias `[n_out]` per layer). Padded slots carry (weight 0, index 0), the
 //! convention `python/compile/kernels/ell_spmm.py` defines.
+//!
+//! Also describes **compressed quantized stream programs** in the
+//! artifact manifest (kind `"quant_stream"`): the program's byte streams
+//! map onto typed tensors (uint8 control stream, int8 weights, f32
+//! `[G, 2]` group parameters, f32 biases) so `Manifest::load` validates
+//! a quantized model exactly like an ELL one. The byte payload itself
+//! ships in the `sparseflow-quant-v1` JSON file
+//! (`ffnn::serde::save_quant`), referenced by the manifest entry.
 
+use super::artifact::TensorSpec;
+use crate::exec::quant::QuantStreamProgram;
 use crate::ffnn::graph::{Ffnn, NeuronId};
+use crate::util::json::Json;
 
 /// One ELL-packed layer.
 #[derive(Clone, Debug)]
@@ -87,6 +98,62 @@ pub fn pack_ell_layers(net: &Ffnn, ks: &[usize]) -> anyhow::Result<Vec<EllLayer>
     Ok(out)
 }
 
+/// Tensor layout of a compressed quantized stream program in the
+/// artifact format, in manifest order: control stream (uint8), quantized
+/// weights (int8), group scale/zero-point pairs (f32 `[G, 2]`), biases
+/// (f32 `[N]`), and the batched input (`[n_inputs, batch]`).
+pub fn quant_tensor_specs(p: &QuantStreamProgram, batch: usize) -> Vec<TensorSpec> {
+    vec![
+        TensorSpec {
+            shape: vec![p.ctrl_bytes().len()],
+            dtype: "uint8".to_string(),
+        },
+        TensorSpec {
+            shape: vec![p.n_ops()],
+            dtype: "int8".to_string(),
+        },
+        TensorSpec {
+            shape: vec![p.groups().len(), 2],
+            dtype: "float32".to_string(),
+        },
+        TensorSpec {
+            shape: vec![p.n_neurons()],
+            dtype: "float32".to_string(),
+        },
+        TensorSpec {
+            shape: vec![p.input_ids().len(), batch],
+            dtype: "float32".to_string(),
+        },
+    ]
+}
+
+/// Manifest entry (kind `"quant_stream"`) describing a compressed
+/// program stored at `file` (a `sparseflow-quant-v1` JSON payload).
+pub fn quant_manifest_entry(
+    name: &str,
+    file: &str,
+    p: &QuantStreamProgram,
+    batch: usize,
+) -> Json {
+    let inputs: Vec<Json> = quant_tensor_specs(p, batch)
+        .into_iter()
+        .map(|t| {
+            Json::obj()
+                .set(
+                    "shape",
+                    Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+                )
+                .set("dtype", t.dtype.as_str())
+        })
+        .collect();
+    Json::obj()
+        .set("name", name)
+        .set("file", file)
+        .set("kind", "quant_stream")
+        .set("batch", batch)
+        .set("inputs", Json::Arr(inputs))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +212,50 @@ mod tests {
         let mut rng = Pcg64::seed_from(4);
         let net = random_layered(&[6, 6, 6], 0.5, 1.0, &mut rng);
         assert!(pack_ell_layers(&net, &[6]).is_err());
+    }
+
+    /// The compressed program round-trips through the artifact format:
+    /// manifest entry + `sparseflow-quant-v1` payload load back to an
+    /// identical program.
+    #[test]
+    fn quant_program_roundtrips_through_artifact_format() {
+        use crate::ffnn::serde::{load_quant, save_quant};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::runtime::Manifest;
+
+        let mut rng = Pcg64::seed_from(5);
+        let net = random_mlp(&MlpSpec::new(3, 12, 0.4), &mut rng);
+        let program = QuantStreamProgram::compress(&net, &two_optimal_order(&net));
+
+        let dir = std::env::temp_dir().join("sparseflow-quant-artifact-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        save_quant(&program, &dir.join("mlp.quant.json")).unwrap();
+        let manifest_json = Json::obj()
+            .set("format", "sparseflow-artifacts-v1")
+            .set(
+                "artifacts",
+                Json::Arr(vec![quant_manifest_entry(
+                    "mlp-i8",
+                    "mlp.quant.json",
+                    &program,
+                    16,
+                )]),
+            );
+        manifest_json.to_file(&dir.join("manifest.json")).unwrap();
+
+        let manifest = Manifest::load(&dir).unwrap();
+        let meta = manifest.find("mlp-i8").unwrap();
+        assert_eq!(meta.kind, "quant_stream");
+        assert_eq!(meta.batch, 16);
+        let specs = quant_tensor_specs(&program, 16);
+        assert_eq!(meta.inputs, specs);
+        assert_eq!(meta.inputs[0].dtype, "uint8");
+        assert_eq!(meta.inputs[1].dtype, "int8");
+        assert_eq!(meta.inputs[1].n_elements(), program.n_ops());
+        assert_eq!(meta.inputs[2].shape, vec![program.groups().len(), 2]);
+
+        let loaded = load_quant(&manifest.hlo_path(meta)).unwrap();
+        assert_eq!(loaded, program);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

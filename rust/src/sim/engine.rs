@@ -44,6 +44,13 @@ pub struct SimCheckpoint {
     residents: ResidentSnapshot,
 }
 
+impl SimCheckpoint {
+    /// I/O counts accumulated over the prefix `0..pos`.
+    pub fn stats(&self) -> &IoStats {
+        &self.stats
+    }
+}
+
 /// Reusable simulator: allocate once per network, run many orders (the
 /// simulated-annealing loop calls it millions of times).
 pub struct Simulator<'n> {

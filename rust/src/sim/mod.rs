@@ -6,5 +6,5 @@
 mod engine;
 mod stats;
 
-pub use engine::{simulate, simulate_bounded, Simulator};
+pub use engine::{simulate, simulate_bounded, SimCheckpoint, Simulator};
 pub use stats::IoStats;

@@ -1,0 +1,136 @@
+//! Checkpoint-consistency tests for `sim::engine` (guards the annealing
+//! fast path): suffix re-simulation from a checkpoint must reproduce the
+//! full run's `IoStats` exactly.
+//!
+//! Two invariants the SA loop relies on:
+//!
+//! 1. **Own-order exactness, any policy** — checkpoints taken on an
+//!    order (including heavily perturbed, non-canonical ones) replay to
+//!    the exact full-run counts. This is what makes the loop's
+//!    re-checkpoint after every accepted candidate a *re-score*, not an
+//!    approximation.
+//! 2. **Cross-order exactness for LRU/RR** — a candidate differs from
+//!    the checkpointed order only in its suffix, and LRU/RR prefix
+//!    decisions depend only on the past, so resuming onto the candidate
+//!    is exact. (MIN peeks past the checkpoint, so its candidate scores
+//!    may drift — the loop re-scores accepted orders exactly, covered by
+//!    invariant 1.)
+
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::neighbor::{apply_move, WindowMove};
+use sparseflow::sim::Simulator;
+use sparseflow::util::rng::Pcg64;
+
+/// Perturb the 2-optimal order with `moves` window moves (stays
+/// topological by construction of `apply_move`).
+fn perturbed_order(net: &sparseflow::ffnn::graph::Ffnn, moves: usize, rng: &mut Pcg64) -> ConnOrder {
+    let mut order = two_optimal_order(net);
+    for _ in 0..moves {
+        let mv = WindowMove::sample(rng, order.len(), 10);
+        apply_move(net, order.as_mut_slice(), mv);
+    }
+    assert!(order.is_topological(net));
+    order
+}
+
+#[test]
+fn suffix_resume_exact_from_every_checkpoint_on_perturbed_orders() {
+    for policy in PolicyKind::ALL {
+        for seed in 0..6u64 {
+            let mut rng = Pcg64::seed_from(0xC4E0 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 18, 0.3), &mut rng);
+            let order = perturbed_order(&net, 15, &mut rng);
+            let m = 4 + (seed as usize % 9);
+            let mut sim = Simulator::new(&net);
+            let every = (net.n_conns() / 9).max(1);
+            let (full, ckpts) = sim.run_with_checkpoints(&order, m, policy, every);
+            assert!(!ckpts.is_empty(), "{policy:?} seed {seed}: no checkpoints taken");
+            for ckpt in &ckpts {
+                let resumed = sim.run_suffix(&order, m, policy, ckpt, u64::MAX).unwrap();
+                assert_eq!(resumed, full, "{policy:?} seed {seed} ckpt@{}", ckpt.pos);
+            }
+            // The checkpointed run itself matches a fresh plain run.
+            assert_eq!(sim.run(&order, m, policy), full, "{policy:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prefix_checkpoints_replay_candidates_exactly_for_lru_rr() {
+    for policy in [PolicyKind::Lru, PolicyKind::Rr] {
+        for seed in 0..6u64 {
+            let mut rng = Pcg64::seed_from(0xC4F0 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 20, 0.3), &mut rng);
+            let base = perturbed_order(&net, 5, &mut rng);
+            let m = 5 + (seed as usize % 7);
+            let mut sim = Simulator::new(&net);
+            let every = (net.n_conns() / 8).max(1);
+            let (_, ckpts) = sim.run_with_checkpoints(&base, m, policy, every);
+
+            // Candidate = base + one window move; the prefix up to the
+            // first changed position is identical.
+            let mut cand = ConnOrder::from_perm(base.as_slice().to_vec());
+            let mv = WindowMove::sample(&mut rng, cand.len(), 12);
+            let first_changed = apply_move(&net, cand.as_mut_slice(), mv);
+            let cand_full = sim.run(&cand, m, policy);
+            for ckpt in ckpts.iter().filter(|c| c.pos <= first_changed) {
+                let resumed = sim.run_suffix(&cand, m, policy, ckpt, u64::MAX).unwrap();
+                assert_eq!(
+                    resumed, cand_full,
+                    "{policy:?} seed {seed} ckpt@{} (first change {first_changed})",
+                    ckpt.pos
+                );
+            }
+        }
+    }
+}
+
+/// The annealing loop's accept step for MIN: after accepting a
+/// candidate, it re-runs with fresh checkpoints; resuming from *those*
+/// must be exact (the approximate cross-order score never leaks into
+/// reported numbers).
+#[test]
+fn min_rescore_after_accept_is_exact() {
+    for seed in 0..4u64 {
+        let mut rng = Pcg64::seed_from(0xC500 + seed);
+        let net = random_mlp(&MlpSpec::new(4, 16, 0.25), &mut rng);
+        let base = two_optimal_order(&net);
+        let m = 6;
+        let mut sim = Simulator::new(&net);
+        let every = (net.n_conns() / 6).max(1);
+        // Simulate the loop: score base, "accept" a candidate, re-checkpoint.
+        let _ = sim.run_with_checkpoints(&base, m, PolicyKind::Min, every);
+        let cand = perturbed_order(&net, 3, &mut rng);
+        let (accepted, ckpts) = sim.run_with_checkpoints(&cand, m, PolicyKind::Min, every);
+        for ckpt in &ckpts {
+            let resumed = sim
+                .run_suffix(&cand, m, PolicyKind::Min, ckpt, u64::MAX)
+                .unwrap();
+            assert_eq!(resumed, accepted, "seed {seed} ckpt@{}", ckpt.pos);
+        }
+    }
+}
+
+#[test]
+fn bounded_suffix_resume_aborts_consistently() {
+    let mut rng = Pcg64::seed_from(0xC510);
+    let net = random_mlp(&MlpSpec::new(3, 22, 0.3), &mut rng);
+    let order = perturbed_order(&net, 10, &mut rng);
+    let mut sim = Simulator::new(&net);
+    let (full, ckpts) = sim.run_with_checkpoints(&order, 7, PolicyKind::Min, 64);
+    for ckpt in &ckpts {
+        // Exactly at the budget: completes with the full result.
+        assert_eq!(
+            sim.run_suffix(&order, 7, PolicyKind::Min, ckpt, full.total()),
+            Some(full)
+        );
+        // Below the already-spent prefix cost: must abort.
+        let below_prefix = ckpt.stats().total().saturating_sub(1);
+        assert_eq!(
+            sim.run_suffix(&order, 7, PolicyKind::Min, ckpt, below_prefix),
+            None
+        );
+    }
+}

@@ -4,13 +4,17 @@
 
 use sparseflow::bounds::theorem1_bounds;
 use sparseflow::exec::batch::BatchMatrix;
-use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::dense::DenseEngine;
+use sparseflow::exec::layerwise::{forward_layers, LayerwiseEngine};
+use sparseflow::exec::parallel::ParallelEngine;
+use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine};
 use sparseflow::exec::stream::StreamingEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::generate::{random_layered, random_mlp, MlpSpec};
 use sparseflow::ffnn::graph::Ffnn;
 use sparseflow::ffnn::topo::{neuron_order_from_conn_order, two_optimal_order, ConnOrder};
 use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
 use sparseflow::reorder::neighbor::{apply_move, WindowMove};
 use sparseflow::sim::simulate;
 use sparseflow::util::proptest::check;
@@ -240,6 +244,145 @@ fn prop_neuron_order_derivation() {
                 if pos[c.src as usize] >= pos[c.dst as usize] {
                     return Err(format!("edge {}→{} violated", c.src, c.dst));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (i) Cross-engine differential: dense, CSR (raw layer pipeline),
+/// CSR layer-wise, stream, and batch-sharded parallel compute the same
+/// function on the same batch — within 1e-5 where schedules reassociate
+/// f32 sums, bit-identical where the docs claim it (sharding), and
+/// within the certified error bound for the quantized stream.
+#[test]
+fn prop_cross_engine_differential() {
+    check(
+        "cross-engine-differential",
+        50,
+        |rng| {
+            let sizes = vec![3 + rng.index(10), 3 + rng.index(10), 1 + rng.index(4)];
+            let net = random_layered(&sizes, 0.2 + rng.f64() * 0.6, 1.0, rng);
+            // Exercise non-canonical (but topological) stream orders.
+            let mut order = two_optimal_order(&net);
+            for _ in 0..8 {
+                let mv = WindowMove::sample(rng, order.len(), 6);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            let batch = 1 + rng.index(5);
+            let x = BatchMatrix::random(net.n_inputs(), batch, rng);
+            let workers = 1 + rng.index(4);
+            (net, order, x, workers)
+        },
+        |(net, order, x, workers)| {
+            let stream = StreamingEngine::new(net, order);
+            let reference = stream.infer(x);
+
+            let pairs: [(&str, BatchMatrix); 3] = [
+                ("dense", DenseEngine::new(net).infer(x)),
+                ("csr-layerwise", LayerwiseEngine::new(net).infer(x)),
+                ("csr-raw", forward_layers(LayerwiseEngine::new(net).layers(), x)),
+            ];
+            for (name, out) in &pairs {
+                if !reference.allclose(out, 1e-5, 1e-5) {
+                    return Err(format!(
+                        "stream vs {name}: max diff {}",
+                        reference.max_abs_diff(out)
+                    ));
+                }
+            }
+
+            // Batch sharding is documented bit-identical to serial.
+            let sharded = ParallelEngine::new(StreamingEngine::new(net, order), *workers);
+            if sharded.infer(x) != reference {
+                return Err(format!("sharded ({workers} workers) not bit-identical"));
+            }
+
+            // The quantized stream agrees within its certified bound.
+            let quant = QuantStreamEngine::new(net, order);
+            let qout = quant.infer(x);
+            let bound = output_error_bound(stream.program(), quant.program(), x);
+            let qdiff = reference.max_abs_diff(&qout);
+            if f64::from(qdiff) > f64::from(bound) * 1.01 + 1e-3 {
+                return Err(format!("quant diff {qdiff} exceeds certified bound {bound}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (j) Theorem-1 sandwich for the greedy (2-optimal) order across
+/// several memory sizes: full sandwich under MIN, lower bound under
+/// every policy.
+#[test]
+fn prop_bound_sandwich_across_memory_sizes() {
+    check(
+        "bound-sandwich-multi-m",
+        30,
+        |rng| {
+            let net = arb_net(rng);
+            let n = net.n_neurons();
+            (net, vec![3, 4, 7, 13, n + 2])
+        },
+        |(net, ms)| {
+            let b = theorem1_bounds(net);
+            let order = two_optimal_order(net);
+            for &m in ms {
+                let s = simulate(net, &order, m, PolicyKind::Min);
+                if s.total() < b.total_lower {
+                    return Err(format!("M={m}: total {} < lower {}", s.total(), b.total_lower));
+                }
+                if s.total() > b.total_upper {
+                    return Err(format!("M={m}: total {} > upper {}", s.total(), b.total_upper));
+                }
+                for policy in PolicyKind::ALL {
+                    let t = simulate(net, &order, m, policy).total();
+                    if t < b.total_lower {
+                        return Err(format!("M={m} {policy:?}: total {t} < lower {}", b.total_lower));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (k) Connection Reordering never reports a regression: the returned
+/// `AnnealReport` satisfies `final_ios ≤ initial_ios`, the best order is
+/// still topological, and both reported counts re-simulate exactly.
+#[test]
+fn prop_anneal_report_invariants() {
+    check(
+        "anneal-report-invariants",
+        12,
+        |rng| {
+            let depth = 2 + rng.index(2);
+            let width = 6 + rng.index(14);
+            let net = random_mlp(&MlpSpec::new(depth, width, 0.15 + rng.f64() * 0.3), rng);
+            let m = 3 + rng.index(14);
+            (net, m, rng.next_u64())
+        },
+        |(net, m, seed)| {
+            let initial = two_optimal_order(net);
+            let mut cfg = AnnealConfig::new(*m, PolicyKind::Min, 200);
+            cfg.seed = *seed;
+            let (best, rep) = reorder(net, &initial, &cfg);
+            if rep.final_ios > rep.initial_ios {
+                return Err(format!(
+                    "annealing regressed: {} → {}",
+                    rep.initial_ios, rep.final_ios
+                ));
+            }
+            if !best.is_topological(net) {
+                return Err("best order is not topological".into());
+            }
+            let re_initial = simulate(net, &initial, *m, PolicyKind::Min).total();
+            if re_initial != rep.initial_ios {
+                return Err(format!("initial_ios {} != resim {re_initial}", rep.initial_ios));
+            }
+            let re_best = simulate(net, &best, *m, PolicyKind::Min).total();
+            if re_best != rep.final_ios {
+                return Err(format!("final_ios {} != resim {re_best}", rep.final_ios));
             }
             Ok(())
         },
