@@ -1,0 +1,137 @@
+//! §Perf — interpreted stream vs fused block-compiled stream (rows/s) at
+//! batch 128, on the paper's two non-MLP workload shapes (a BERT-like
+//! magnitude-pruned encoder MLP and a compact-growth network), each at
+//! **two connection orders**: the 2-optimal construction and a
+//! Connection-Reordering (simulated annealing) refinement. Besides
+//! throughput it reports the fusion-run-length statistics of each order
+//! (macro-ops, ops per macro-op, mean/max fused run length), connecting
+//! the I/O theory's clustering of consecutive ops on shared rows to the
+//! fusability of the stream and to measured throughput. The fused engine
+//! is asserted bit-identical to the interpreter on every configuration.
+//! Emits JSON via `bench::harness` (repo-root `BENCH_PERF_FUSED.json`).
+//!
+//! ```bash
+//! cargo bench --bench perf_fused -- --batch 128
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+fn bench_order(
+    label: &str,
+    net: &Ffnn,
+    order: &ConnOrder,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    let mut rng = Pcg64::seed_from(0x9C11);
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+    let interp = StreamingEngine::new(net, order);
+    let fused = FusedEngine::new(net, order);
+    assert_eq!(fused.infer(&x), interp.infer(&x), "{label}: fused must be bit-identical");
+
+    let interp_times = measure(2, reps, || interp.infer(&x));
+    let fused_times = measure(2, reps, || fused.infer(&x));
+    report.record_rate(label, "interp stream", batch as f64, &interp_times, "rows/s");
+    report.record_rate(label, "fused stream", batch as f64, &fused_times, "rows/s");
+
+    let st = fused.program().stats();
+    let fx = format!("{label} fusion");
+    report.record_exact(&fx, "macro-ops", st.n_macro_ops() as f64, "count");
+    report.record_exact(&fx, "ops/macro-op", st.ops_per_macro_op(), "count");
+    report.record_exact(&fx, "mean run len", st.mean_run_len(), "count");
+    report.record_exact(&fx, "max run len", st.max_run_len as f64, "count");
+    report.record_exact(&fx, "fused %", st.fused_fraction() * 100.0, "count");
+
+    let interp_rate = batch as f64 / Summary::of(&interp_times).median;
+    let fused_rate = batch as f64 / Summary::of(&fused_times).median;
+    println!(
+        "  {label:<24} interp {interp_rate:>11.0} rows/s | fused {fused_rate:>11.0} rows/s \
+         ({:.2}x) | {} macro-ops, {:.1} ops/macro, mean run {:.1}, max {}",
+        fused_rate / interp_rate,
+        st.n_macro_ops(),
+        st.ops_per_macro_op(),
+        st.mean_run_len(),
+        st.max_run_len
+    );
+}
+
+fn bench_net(
+    label: &str,
+    net: &Ffnn,
+    m: usize,
+    anneal_iters: u64,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    println!("{label}: {}", net.describe());
+    let initial = two_optimal_order(net);
+    bench_order(&format!("{label} 2-opt"), net, &initial, batch, reps, report);
+
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, anneal_iters);
+    let (annealed, rep) = reorder(net, &initial, &cfg);
+    println!(
+        "  annealed {anneal_iters} iters @ M={m}: {} -> {} I/Os ({:.1}% reduction)",
+        rep.initial_ios,
+        rep.final_ios,
+        rep.reduction() * 100.0
+    );
+    bench_order(&format!("{label} annealed"), net, &annealed, batch, reps, report);
+}
+
+fn main() {
+    let args = Spec::new("perf_fused", "interpreted vs fused block-compiled stream")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("mg", "100", "compact growth: design memory size")
+        .opt("m", "100", "fast-memory size the annealed order is tuned for")
+        .opt("anneal-iters", "2000", "Connection Reordering iterations")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let anneal_iters = if quick { 200 } else { args.u64("anneal-iters") };
+    let m = args.usize("m");
+
+    let mut report = Report::new("perf_fused", "fused block-compiled stream (§Perf)");
+    report.set_meta("batch", batch);
+    report.set_meta("anneal_iters", anneal_iters);
+    report.set_meta("m", m as u64);
+    report.set_meta("quick", quick);
+
+    let mut rng = Pcg64::seed_from(0x9C10);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let bert = bert_mlp(&bert_spec, &mut rng);
+    bench_net("bert-like", &bert, m, anneal_iters, batch, reps, &mut report);
+
+    let cg_spec = CompactGrowthSpec::new(if quick { 30 } else { args.usize("mg") });
+    let (cg, _) = compact_growth(&cg_spec, &mut rng);
+    bench_net("compact-growth", &cg, m, anneal_iters, batch, reps, &mut report);
+
+    report.finish();
+}

@@ -80,6 +80,7 @@ fn main() {
     let mut report = Report::new("perf_parallel", "batch-sharded streaming throughput (§Perf)");
     report.set_meta("batch", batch);
     report.set_meta("workers", workers);
+    report.set_meta("quick", quick);
 
     let mut rng = Pcg64::seed_from(0x9A10);
     let bert_spec = if quick {

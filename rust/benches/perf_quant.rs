@@ -85,6 +85,7 @@ fn main() {
 
     let mut report = Report::new("perf_quant", "compressed quantized stream (§Perf)");
     report.set_meta("batch", batch);
+    report.set_meta("quick", quick);
 
     let mut rng = Pcg64::seed_from(0x9B10);
     let bert_spec = if quick {

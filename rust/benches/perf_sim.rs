@@ -43,6 +43,7 @@ fn main() {
     let mut report = Report::new("perf_sim", "simulator & SA throughput (§Perf)");
     report.set_meta("w", net.n_conns());
     report.set_meta("m", m as u64);
+    report.set_meta("quick", quick);
 
     let mut sim = Simulator::new(&net);
     for policy in PolicyKind::ALL {

@@ -51,6 +51,7 @@ fn main() {
     let mut report = Report::new("perf_stream", "engine throughput (§Perf)");
     report.set_meta("batch", batch);
     report.set_meta("w", net.n_conns());
+    report.set_meta("quick", quick);
 
     let engines: Vec<Box<dyn Engine>> = vec![
         Box::new(StreamingEngine::new(&net, &order)),

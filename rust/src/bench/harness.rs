@@ -10,7 +10,7 @@
 
 use crate::util::json::Json;
 use crate::util::timing::{measure, tukey_filter, Summary};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// One measured (or counted) series point.
 #[derive(Clone, Debug)]
@@ -182,14 +182,30 @@ impl Report {
             .set("points", Json::Arr(points))
     }
 
-    /// Print table to stdout and save JSON under `results/<id>.json`.
+    /// Print table to stdout and save JSON under `results/<id>.json`;
+    /// `perf_*` reports are additionally published to the repo root as
+    /// `BENCH_PERF_<NAME>.json` (see [`perf_results_path`]) so the perf
+    /// trajectory is visible without digging into `results/` — unless
+    /// the report is marked as a `--quick` smoke run (`meta.quick`),
+    /// whose non-representative numbers must not overwrite the tracked
+    /// trajectory.
     pub fn finish(&self) {
         println!("{}", self.table());
-        let path = results_path(&self.id);
-        if let Err(e) = self.to_json().to_file(&path) {
-            eprintln!("warning: could not write {}: {e}", path.display());
-        } else {
-            println!("saved {}", path.display());
+        let quick = self
+            .meta
+            .get("quick")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        let mut paths = vec![results_path(&self.id)];
+        if !quick {
+            paths.extend(perf_results_path(&self.id));
+        }
+        for path in paths {
+            if let Err(e) = self.to_json().to_file(&path) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            } else {
+                println!("saved {}", path.display());
+            }
         }
     }
 }
@@ -198,6 +214,30 @@ impl Report {
 pub fn results_path(id: &str) -> PathBuf {
     let dir = std::env::var("SPARSEFLOW_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
     PathBuf::from(dir).join(format!("{id}.json"))
+}
+
+/// Repo-root location for a perf-series report: `perf_<name>` maps to
+/// `<repo root>/BENCH_PERF_<NAME>.json` (directory overridable via
+/// `SPARSEFLOW_PERF_DIR`); figure benches (`fig2`, `thm1`, ...) return
+/// `None` and stay under `results/` only.
+pub fn perf_results_path(id: &str) -> Option<PathBuf> {
+    let name = id.strip_prefix("perf_")?;
+    let dir = match std::env::var("SPARSEFLOW_PERF_DIR") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => {
+            // CARGO_MANIFEST_DIR is the crate dir (`rust/`) on the build
+            // machine; its parent is the repository root. When the
+            // binary runs from a relocated checkout that path no longer
+            // exists — fall back to `..`, which matches how cargo runs
+            // benches (cwd = package root) the way `results_path`'s
+            // relative `results/` does.
+            match Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+                Some(root) if root.is_dir() => root.to_path_buf(),
+                _ => PathBuf::from(".."),
+            }
+        }
+    };
+    Some(dir.join(format!("BENCH_PERF_{}.json", name.to_uppercase())))
 }
 
 fn fmt_num(v: f64) -> String {
@@ -262,6 +302,13 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_str(), Some("t3"));
         assert_eq!(j.path(&["meta", "seed"]).unwrap().as_u64(), Some(42));
         assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn perf_reports_publish_to_repo_root() {
+        let p = perf_results_path("perf_fused").expect("perf ids publish");
+        assert!(p.ends_with("BENCH_PERF_FUSED.json"), "{p:?}");
+        assert_eq!(perf_results_path("fig2"), None, "figure benches stay in results/");
     }
 
     #[test]

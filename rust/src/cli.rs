@@ -81,6 +81,17 @@ impl Spec {
         self.opt("precision", "auto", "numeric precision: f32 | i8 (auto = config key / f32)")
     }
 
+    /// The standard `--schedule` option of the launcher: "interp" |
+    /// "fused", where "auto" defers to the config file's `schedule` key
+    /// (and ultimately to interp).
+    pub fn schedule_opt(self) -> Self {
+        self.opt(
+            "schedule",
+            "auto",
+            "op-stream schedule: interp | fused (auto = config key / interp)",
+        )
+    }
+
     /// Parse a raw argument list (without argv[0]).
     pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
@@ -397,6 +408,16 @@ mod tests {
         let a = s.parse(&sv(&["--precision", "i8"])).unwrap();
         assert_eq!(a.str("precision"), "i8");
         assert!(s.help_text().contains("--precision"));
+    }
+
+    #[test]
+    fn schedule_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").schedule_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("schedule"), "auto", "default defers to config");
+        let a = s.parse(&sv(&["--schedule", "fused"])).unwrap();
+        assert_eq!(a.str("schedule"), "fused");
+        assert!(s.help_text().contains("--schedule"));
     }
 
     #[test]

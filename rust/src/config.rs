@@ -80,6 +80,14 @@ impl Config {
         self.str("precision", default)
     }
 
+    /// The op-stream-schedule knob (`schedule` key): "interp" serves the
+    /// per-connection stream interpreter, "fused" the run-length
+    /// block-compiled engine (`exec::fused`). Orthogonal to `workers`
+    /// sharding; f32-only (see the composition matrix in `exec`).
+    pub fn schedule(&self, default: &str) -> String {
+        self.str("schedule", default)
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.lookup(key)
             .and_then(Json::as_str)
@@ -155,6 +163,14 @@ mod tests {
         assert_eq!(c.precision("f32"), "f32", "default when unset");
         c.set_override("precision=i8").unwrap();
         assert_eq!(c.precision("f32"), "i8");
+    }
+
+    #[test]
+    fn schedule_knob() {
+        let mut c = Config::empty();
+        assert_eq!(c.schedule("interp"), "interp", "default when unset");
+        c.set_override("schedule=fused").unwrap();
+        assert_eq!(c.schedule("interp"), "fused");
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Serving metrics: request counters, batch-size histogram, a
-//! log-bucketed latency histogram with quantile estimation, and linked
-//! per-shard timing sinks from batch-sharded engines. Lock-free on the
-//! hot path (atomics only; the shard-sink list is only locked at link
-//! and snapshot time); snapshots serialize to JSON.
+//! log-bucketed latency histogram with quantile estimation, linked
+//! per-shard timing sinks from batch-sharded engines, and per-model
+//! fusion statistics from block-compiled engines. Lock-free on the hot
+//! path (atomics only; the sink lists are only locked at link and
+//! snapshot time); snapshots serialize to JSON.
 
+use crate::exec::fused::FusionStats;
 use crate::exec::parallel::ShardTimings;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -22,6 +24,10 @@ pub struct Metrics {
     /// Per-model shard-timing sinks from `ParallelEngine`s (see
     /// [`Metrics::link_shard_timings`]).
     shard_sinks: Mutex<Vec<(String, Arc<ShardTimings>)>>,
+    /// Per-model fusion statistics from `FusedEngine`s (see
+    /// [`Metrics::link_fusion_stats`]); compile-time constants, stored
+    /// once and re-serialized per snapshot.
+    fusion_stats: Mutex<Vec<(String, FusionStats)>>,
 }
 
 impl Default for Metrics {
@@ -40,6 +46,20 @@ impl Metrics {
             batched_requests: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             shard_sinks: Mutex::new(Vec::new()),
+            fusion_stats: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Link the compile-time fusion statistics of a block-compiled
+    /// engine so they appear in [`Metrics::snapshot`] under
+    /// `fusion.<model>`. Re-linking the same model replaces the
+    /// previous entry.
+    pub fn link_fusion_stats(&self, model: &str, stats: FusionStats) {
+        let mut sinks = self.fusion_stats.lock().expect("fusion stats poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = stats;
+        } else {
+            sinks.push((model.to_string(), stats));
         }
     }
 
@@ -126,6 +146,15 @@ impl Metrics {
             }
             j = j.set("shards", shards);
         }
+        drop(sinks);
+        let stats = self.fusion_stats.lock().expect("fusion stats poisoned");
+        if !stats.is_empty() {
+            let mut fusion = Json::obj();
+            for (model, s) in stats.iter() {
+                fusion = fusion.set(model, s.to_json());
+            }
+            j = j.set("fusion", fusion);
+        }
         j
     }
 }
@@ -180,6 +209,31 @@ mod tests {
         m.link_shard_timings("mlp", Arc::new(ShardTimings::new()));
         let s2 = m.snapshot();
         assert_eq!(s2.path(&["shards", "mlp", "runs"]).unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn fusion_stats_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().get("fusion").is_none(), "no stats, no key");
+
+        let stats = FusionStats {
+            n_ops: 100,
+            n_dot_runs: 10,
+            n_axpy_runs: 5,
+            n_singletons: 4,
+            fused_ops: 96,
+            max_run_len: 20,
+        };
+        m.link_fusion_stats("mlp", stats.clone());
+        let s = m.snapshot();
+        assert_eq!(s.path(&["fusion", "mlp", "ops"]).unwrap().as_u64(), Some(100));
+        assert_eq!(s.path(&["fusion", "mlp", "macro_ops"]).unwrap().as_u64(), Some(19));
+        assert_eq!(s.path(&["fusion", "mlp", "max_run_len"]).unwrap().as_u64(), Some(20));
+
+        // Re-linking the same model replaces, not duplicates.
+        m.link_fusion_stats("mlp", FusionStats { n_ops: 1, n_singletons: 1, ..stats });
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["fusion", "mlp", "ops"]).unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! XLA artifact). The router picks the serving engine per the variant's
 //! policy; the benches use explicit engine selection to compare them.
 
+use crate::exec::fused::FusionStats;
 use crate::exec::parallel::{ParallelEngine, ShardTimings};
 use crate::exec::Engine;
 use std::collections::BTreeMap;
@@ -35,6 +36,15 @@ pub struct ModelVariant {
     /// Numeric precision of the serving engine: "f32" (default) or
     /// "i8" (compressed quantized stream). Orthogonal to sharding.
     pub precision: &'static str,
+    /// Op-stream schedule of the serving engine: "interp" (default, the
+    /// per-connection stream interpreter) or "fused" (the run-length
+    /// block-compiled engine). Orthogonal to sharding; f32-only (see the
+    /// composition matrix in `exec`'s module docs).
+    pub schedule: &'static str,
+    /// Compile-time fusion statistics when the serving engine is a
+    /// `FusedEngine`; the server surfaces these in `Metrics::snapshot`
+    /// under `fusion.<model>`.
+    pub fusion: Option<FusionStats>,
 }
 
 impl ModelVariant {
@@ -46,6 +56,8 @@ impl ModelVariant {
             density: 0.0,
             shard_timings: None,
             precision: "f32",
+            schedule: "interp",
+            fusion: None,
         }
     }
 
@@ -53,6 +65,32 @@ impl ModelVariant {
     /// (`exec::quant::QuantStreamEngine`), tagged with precision "i8".
     pub fn quantized(name: &str, engine: Arc<dyn Engine>) -> ModelVariant {
         ModelVariant::new(name, engine).with_precision("i8")
+    }
+
+    /// A variant serving a run-length block-compiled stream engine
+    /// (`exec::fused::FusedEngine`), tagged with schedule "fused" and
+    /// carrying its fusion statistics for the serving metrics.
+    pub fn fused(name: &str, engine: Arc<dyn Engine>, stats: FusionStats) -> ModelVariant {
+        ModelVariant::new(name, engine)
+            .with_schedule("fused")
+            .with_fusion_stats(stats)
+    }
+
+    /// Tag the variant's op-stream schedule (composes with [`sharded`]
+    /// and is orthogonal to [`with_precision`]).
+    ///
+    /// [`sharded`]: ModelVariant::sharded
+    /// [`with_precision`]: ModelVariant::with_precision
+    pub fn with_schedule(mut self, schedule: &'static str) -> ModelVariant {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Attach fusion statistics (linked into `Metrics::snapshot` by the
+    /// server under `fusion.<model>`).
+    pub fn with_fusion_stats(mut self, stats: FusionStats) -> ModelVariant {
+        self.fusion = Some(stats);
+        self
     }
 
     /// Tag the variant's numeric precision (composes with [`sharded`]:
@@ -195,6 +233,34 @@ mod tests {
             .with_precision("i8");
         assert_eq!(sq.precision, "i8");
         assert!(sq.shard_timings.is_some());
+    }
+
+    #[test]
+    fn schedule_tagging_composes() {
+        let v = ModelVariant::new("i", Arc::new(FakeEngine("stream")));
+        assert_eq!(v.schedule, "interp");
+        assert!(v.fusion.is_none());
+
+        let stats = FusionStats {
+            n_ops: 10,
+            n_dot_runs: 2,
+            fused_ops: 8,
+            n_singletons: 2,
+            max_run_len: 5,
+            ..FusionStats::default()
+        };
+        let f = ModelVariant::fused("f", Arc::new(FakeEngine("fused-stream")), stats.clone());
+        assert_eq!(f.schedule, "fused");
+        assert_eq!(f.precision, "f32");
+        assert_eq!(f.route().name(), "fused-stream");
+        assert_eq!(f.fusion.as_ref().unwrap(), &stats);
+
+        // Schedule composes with batch sharding.
+        let sf = ModelVariant::sharded("sf", Arc::new(FakeEngine("fused-stream")), 2)
+            .with_schedule("fused")
+            .with_fusion_stats(stats);
+        assert_eq!(sf.schedule, "fused");
+        assert!(sf.shard_timings.is_some() && sf.fusion.is_some());
     }
 
     #[test]

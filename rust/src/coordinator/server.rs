@@ -55,6 +55,9 @@ impl Server {
             if let Some(sink) = &variant.shard_timings {
                 metrics.link_shard_timings(&name, Arc::clone(sink));
             }
+            if let Some(stats) = &variant.fusion {
+                metrics.link_fusion_stats(&name, stats.clone());
+            }
 
             let (tx, rx) = mpsc::channel::<QueueMsg>();
             queues.insert(name.clone(), tx);
@@ -383,6 +386,29 @@ mod tests {
         // The shard sink is linked into the server metrics snapshot.
         let snap = h.metrics_snapshot();
         assert!(snap.path(&["shards", "d", "runs"]).is_some());
+    }
+
+    #[test]
+    fn fused_model_serves_and_links_stats() {
+        use crate::exec::fused::FusedEngine;
+        use crate::ffnn::generate::{random_mlp, MlpSpec};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::util::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from(0xF0C);
+        let net = random_mlp(&MlpSpec::new(2, 8, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let engine = FusedEngine::new(&net, &order);
+        let stats = engine.program().stats().clone();
+        let mut router = Router::new();
+        router.register(ModelVariant::fused("f", Arc::new(engine), stats));
+        let server = Server::start(router, ServerConfig::default());
+        let h = server.handle();
+        let r = h.infer("f", vec![1.0; net.n_inputs()]).unwrap();
+        assert_eq!(r.engine, "fused-stream");
+        assert_eq!(r.output.len(), net.n_outputs());
+        let snap = h.metrics_snapshot();
+        assert!(snap.path(&["fusion", "f", "macro_ops"]).is_some());
     }
 
     #[test]

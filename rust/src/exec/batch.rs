@@ -80,15 +80,27 @@ impl BatchMatrix {
     pub fn row_pair(&mut self, src: usize, dst: usize) -> (&[f32], &mut [f32]) {
         assert_ne!(src, dst, "row_pair requires distinct rows");
         let batch = self.batch;
-        let (s, d) = (src * batch, dst * batch);
-        assert!(s + batch <= self.data.len() && d + batch <= self.data.len());
-        unsafe {
-            let base = self.data.as_mut_ptr();
-            (
-                std::slice::from_raw_parts(base.add(s), batch),
-                std::slice::from_raw_parts_mut(base.add(d), batch),
-            )
-        }
+        assert!(src * batch + batch <= self.data.len() && dst * batch + batch <= self.data.len());
+        unsafe { self.row_pair_unchecked(src, dst) }
+    }
+
+    /// [`BatchMatrix::row_pair`] with the per-call checks hoisted out —
+    /// for interpreter loops whose compiled programs validated every
+    /// `(src, dst)` pair once, offline (`Ffnn` construction rejects
+    /// self-loops and out-of-range ids; the callers' shape asserts pin
+    /// the row count).
+    ///
+    /// # Safety
+    /// `src != dst` and both are `< self.rows()`.
+    #[inline]
+    pub unsafe fn row_pair_unchecked(&mut self, src: usize, dst: usize) -> (&[f32], &mut [f32]) {
+        debug_assert!(src != dst && src < self.rows && dst < self.rows);
+        let batch = self.batch;
+        let base = self.data.as_mut_ptr();
+        (
+            std::slice::from_raw_parts(base.add(src * batch), batch),
+            std::slice::from_raw_parts_mut(base.add(dst * batch), batch),
+        )
     }
 
     /// Copy columns `[lo, hi)` into a new `rows × (hi − lo)` matrix

@@ -1,0 +1,765 @@
+//! The fused block-compiled stream engine.
+//!
+//! The paper's point (§VII.B) is that once the connection order is fixed,
+//! the schedule is "encoded in the way the connections are laid out" —
+//! but [`StreamProgram::run_into`] still *interprets* that layout one
+//! connection at a time: a scalar AXPY, a split-borrow and a finish
+//! branch per op. EIE (Han et al., 2016) and SparseNN (Zhu et al., 2017)
+//! get their wall-clock wins by compressing and *fusing* the op stream
+//! into dense inner kernels. Reordered orders deliberately cluster
+//! consecutive ops on shared rows (that is exactly the data reuse the
+//! I/O model optimizes), so the stream is maximally fusable — this
+//! module harvests that structure offline:
+//!
+//! * [`FusedProgram::compile`] run-length-fuses the op stream into
+//!   macro-ops: a **DotRun** for a maximal run sharing a destination
+//!   (a gather-dot — the common case, since the 2-optimal construction
+//!   and annealed refinements keep a finishing neuron's in-edges
+//!   adjacent) and an **AxpyRun** for a maximal run sharing a source
+//!   (a scatter-AXPY). Macro-ops are stored structure-of-arrays:
+//!   contiguous `idx`/`weights` pools plus an offset table, so the
+//!   dispatch loop is branch-light (one kind test per *run*, not per
+//!   connection).
+//! * Execution uses batch-column-tiled microkernels: fixed-width
+//!   [`LANES`]-lane inner loops over row chunks with a scalar tail. A
+//!   DotRun keeps its destination chunk in local accumulators across the
+//!   whole run, so a neuron's row is written once per run instead of
+//!   once per connection; an AxpyRun keeps the source chunk in locals.
+//!
+//! **Bit-identity.** Greedy fusion partitions the stream into contiguous
+//! segments executed in stream order, and within a segment each batch
+//! column sees the original per-connection f32 operation sequence
+//! (columns never mix, and no run reads a row it writes: self-loops are
+//! rejected at graph construction, and `dst_finish` can only sit on the
+//! final record of a same-dst run). The fused engine is therefore
+//! bit-identical to [`StreamingEngine`] — enforced over seeded random
+//! nets by `tests/fused.rs` and `tests/properties.rs`.
+//!
+//! [`StreamingEngine`]: super::stream::StreamingEngine
+
+use super::batch::BatchMatrix;
+use super::stream::StreamProgram;
+use super::{init_values, relu_row, Engine};
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::ConnOrder;
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// Batch-column tile width of the microkernels. Eight f32 lanes fill one
+/// AVX2 register; the accumulator array stays in registers across a run.
+pub const LANES: usize = 8;
+
+/// Per-macro-op control bits (`ctrl` pool).
+const KIND_AXPY: u8 = 1;
+/// DotRun only: the run ends with the finish of a hidden destination —
+/// apply ReLU to the accumulator before the single write-back.
+const DOT_RELU: u8 = 2;
+
+/// Per-element flags of an AxpyRun (same convention as the quant stream):
+/// bit 0 = `dst_finish`, bit 1 = `dst_is_hidden`; ReLU fires on `0b11`.
+const FLAG_FINISH: u8 = 1;
+const FLAG_HIDDEN: u8 = 2;
+
+/// Compile-time fusion statistics of a [`FusedProgram`] (surfaced in
+/// serving metrics under `fusion.<model>` and by `benches/perf_fused`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FusionStats {
+    /// Connections in the source stream.
+    pub n_ops: usize,
+    /// Destination-sharing runs of length ≥ 2.
+    pub n_dot_runs: usize,
+    /// Source-sharing runs of length ≥ 2.
+    pub n_axpy_runs: usize,
+    /// Unfusable single-connection macro-ops.
+    pub n_singletons: usize,
+    /// Connections covered by runs of length ≥ 2.
+    pub fused_ops: usize,
+    /// Length of the longest run.
+    pub max_run_len: usize,
+}
+
+impl FusionStats {
+    /// Total macro-ops the interpreter dispatches per batch.
+    pub fn n_macro_ops(&self) -> usize {
+        self.n_dot_runs + self.n_axpy_runs + self.n_singletons
+    }
+
+    /// Stream compression of the dispatch loop: connections per macro-op.
+    pub fn ops_per_macro_op(&self) -> f64 {
+        let m = self.n_macro_ops();
+        if m == 0 {
+            0.0
+        } else {
+            self.n_ops as f64 / m as f64
+        }
+    }
+
+    /// Mean length of the genuinely fused (length ≥ 2) runs.
+    pub fn mean_run_len(&self) -> f64 {
+        let runs = self.n_dot_runs + self.n_axpy_runs;
+        if runs == 0 {
+            0.0
+        } else {
+            self.fused_ops as f64 / runs as f64
+        }
+    }
+
+    /// Fraction of connections executed inside a fused run.
+    pub fn fused_fraction(&self) -> f64 {
+        if self.n_ops == 0 {
+            0.0
+        } else {
+            self.fused_ops as f64 / self.n_ops as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ops", self.n_ops as u64)
+            .set("macro_ops", self.n_macro_ops() as u64)
+            .set("dot_runs", self.n_dot_runs as u64)
+            .set("axpy_runs", self.n_axpy_runs as u64)
+            .set("singletons", self.n_singletons as u64)
+            .set("ops_per_macro_op", self.ops_per_macro_op())
+            .set("mean_run_len", self.mean_run_len())
+            .set("fused_fraction", self.fused_fraction())
+            .set("max_run_len", self.max_run_len as u64)
+    }
+}
+
+/// Borrowed view of one macro-op (tests, debugging, stats).
+#[derive(Debug, PartialEq)]
+pub enum MacroOp<'a> {
+    /// `values[dst] += Σ_k weights[k] · values[srcs[k]]`, then ReLU if
+    /// `relu_after` (the run ends with the finish of a hidden neuron).
+    Dot {
+        dst: u32,
+        srcs: &'a [u32],
+        weights: &'a [f32],
+        relu_after: bool,
+    },
+    /// `values[dsts[k]] += weights[k] · values[src]` for each k, with
+    /// per-element finish/hidden flags (ReLU fires mid-run on `0b11`).
+    Axpy {
+        src: u32,
+        dsts: &'a [u32],
+        weights: &'a [f32],
+        flags: &'a [u8],
+    },
+}
+
+/// A run-length-fused stream program: the offline-compiled macro-op form
+/// of a [`StreamProgram`], in structure-of-arrays layout.
+#[derive(Clone, Debug)]
+pub struct FusedProgram {
+    /// One control byte per macro-op ([`KIND_AXPY`] | [`DOT_RELU`]).
+    ctrl: Vec<u8>,
+    /// Shared row per macro-op: dst of a DotRun, src of an AxpyRun.
+    pivots: Vec<u32>,
+    /// Macro-op `m` owns pool elements `bounds[m]..bounds[m+1]`.
+    bounds: Vec<u32>,
+    /// Per-element row pool: srcs of a DotRun, dsts of an AxpyRun.
+    idx: Vec<u32>,
+    weights: Vec<f32>,
+    /// Per-element finish/hidden flags (AxpyRun elements; 0 for DotRun).
+    flags: Vec<u8>,
+    biases: Vec<f32>,
+    hidden_sources: Vec<u32>,
+    input_ids: Vec<u32>,
+    output_ids: Vec<u32>,
+    n_neurons: usize,
+    stats: FusionStats,
+}
+
+impl FusedProgram {
+    /// Compile `net` with the given topological order and fuse the
+    /// resulting op stream.
+    pub fn compile(net: &Ffnn, order: &ConnOrder) -> FusedProgram {
+        FusedProgram::from_program(&StreamProgram::compile(net, order))
+    }
+
+    /// Run-length-fuse an already-compiled stream program. Greedy maximal
+    /// segmentation: at each position take the longer of the same-dst and
+    /// the same-src run (destination runs win ties — a DotRun keeps its
+    /// output row in accumulator registers), so the segment sequence
+    /// preserves stream order exactly.
+    pub fn from_program(p: &StreamProgram) -> FusedProgram {
+        let ops = p.ops();
+        let n = ops.len();
+        let mut ctrl = Vec::new();
+        let mut pivots = Vec::new();
+        let mut bounds = vec![0u32];
+        let mut idx = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        let mut flags = Vec::with_capacity(n);
+        let mut stats = FusionStats {
+            n_ops: n,
+            ..FusionStats::default()
+        };
+
+        let mut i = 0;
+        while i < n {
+            let mut d = i + 1;
+            while d < n && ops[d].dst == ops[i].dst {
+                d += 1;
+            }
+            let mut s = i + 1;
+            while s < n && ops[s].src == ops[i].src {
+                s += 1;
+            }
+            let (end, axpy) = if d >= s { (d, false) } else { (s, true) };
+            if axpy {
+                pivots.push(ops[i].src);
+                ctrl.push(KIND_AXPY);
+                for op in &ops[i..end] {
+                    idx.push(op.dst);
+                    weights.push(op.weight);
+                    flags.push(
+                        u8::from(op.dst_finish) * FLAG_FINISH
+                            + u8::from(op.dst_is_hidden) * FLAG_HIDDEN,
+                    );
+                }
+            } else {
+                // `dst_finish` marks the globally last record of a
+                // destination, so within a same-dst run it can only sit
+                // on the final record — the run-end ReLU matches the
+                // interpreter's per-op ReLU placement.
+                debug_assert!(ops[i..end - 1].iter().all(|op| !op.dst_finish));
+                let last = ops[end - 1];
+                pivots.push(last.dst);
+                ctrl.push(if last.dst_finish && last.dst_is_hidden {
+                    DOT_RELU
+                } else {
+                    0
+                });
+                for op in &ops[i..end] {
+                    idx.push(op.src);
+                    weights.push(op.weight);
+                    flags.push(0);
+                }
+            }
+            bounds.push(end as u32);
+            let len = end - i;
+            stats.max_run_len = stats.max_run_len.max(len);
+            if len == 1 {
+                stats.n_singletons += 1;
+            } else {
+                stats.fused_ops += len;
+                if axpy {
+                    stats.n_axpy_runs += 1;
+                } else {
+                    stats.n_dot_runs += 1;
+                }
+            }
+            i = end;
+        }
+
+        FusedProgram {
+            ctrl,
+            pivots,
+            bounds,
+            idx,
+            weights,
+            flags,
+            biases: p.biases().to_vec(),
+            hidden_sources: p.hidden_sources().to_vec(),
+            input_ids: p.input_ids().to_vec(),
+            output_ids: p.output_ids().to_vec(),
+            n_neurons: p.n_neurons(),
+            stats,
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn n_macro_ops(&self) -> usize {
+        self.pivots.len()
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    pub fn input_ids(&self) -> &[u32] {
+        &self.input_ids
+    }
+
+    pub fn output_ids(&self) -> &[u32] {
+        &self.output_ids
+    }
+
+    pub fn stats(&self) -> &FusionStats {
+        &self.stats
+    }
+
+    /// Borrowed view of macro-op `m` (in dispatch order).
+    pub fn macro_op(&self, m: usize) -> MacroOp<'_> {
+        let (lo, hi) = (self.bounds[m] as usize, self.bounds[m + 1] as usize);
+        if self.ctrl[m] & KIND_AXPY != 0 {
+            MacroOp::Axpy {
+                src: self.pivots[m],
+                dsts: &self.idx[lo..hi],
+                weights: &self.weights[lo..hi],
+                flags: &self.flags[lo..hi],
+            }
+        } else {
+            MacroOp::Dot {
+                dst: self.pivots[m],
+                srcs: &self.idx[lo..hi],
+                weights: &self.weights[lo..hi],
+                relu_after: self.ctrl[m] & DOT_RELU != 0,
+            }
+        }
+    }
+
+    /// Execute into caller-provided buffers (mirror of
+    /// [`StreamProgram::run_into`]; `values` may hold stale data — the
+    /// prologue overwrites every row, which is what lets [`FusedEngine`]
+    /// recycle scratch).
+    pub fn run_into(&self, inputs: &BatchMatrix, values: &mut BatchMatrix, out: &mut BatchMatrix) {
+        let batch = inputs.batch();
+        assert_eq!(inputs.rows(), self.input_ids.len(), "input row count");
+        assert_eq!(values.rows(), self.n_neurons);
+        assert_eq!(values.batch(), batch);
+        assert_eq!(out.rows(), self.output_ids.len());
+        assert_eq!(out.batch(), batch);
+
+        init_values(values, inputs, &self.biases, &self.input_ids, &self.hidden_sources);
+
+        // The macro-op stream: one kind test per run; all row indices
+        // were validated against `n_neurons` when the source `Ffnn` was
+        // built, and the shape asserts above pin `values` to that size.
+        let data = values.data_mut();
+        let mut lo = 0usize;
+        for m in 0..self.pivots.len() {
+            let hi = self.bounds[m + 1] as usize;
+            let pivot = self.pivots[m] as usize;
+            if self.ctrl[m] & KIND_AXPY != 0 {
+                axpy_run(
+                    data,
+                    batch,
+                    pivot,
+                    &self.idx[lo..hi],
+                    &self.weights[lo..hi],
+                    &self.flags[lo..hi],
+                );
+            } else {
+                dot_run(
+                    data,
+                    batch,
+                    pivot,
+                    &self.idx[lo..hi],
+                    &self.weights[lo..hi],
+                    self.ctrl[m] & DOT_RELU != 0,
+                );
+            }
+            lo = hi;
+        }
+
+        // Epilogue: gather outputs.
+        for (i, &v) in self.output_ids.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(values.row(v as usize));
+        }
+    }
+}
+
+/// Gather-dot microkernel: `dst += Σ_k w_k · src_k` over the batch row,
+/// [`LANES`] columns at a time. The destination chunk lives in a local
+/// accumulator array across the whole run — one read and one write of
+/// the dst row per run instead of one per connection. No src can alias
+/// dst (self-loops are rejected at graph construction), so caching the
+/// accumulator is observationally identical to the interpreter.
+fn dot_run(
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    weights: &[f32],
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    let mut c = 0;
+    while c + LANES <= batch {
+        let mut acc = [0.0f32; LANES];
+        acc.copy_from_slice(&data[dbase + c..dbase + c + LANES]);
+        for (k, &w) in weights.iter().enumerate() {
+            let sbase = srcs[k] as usize * batch + c;
+            let src = &data[sbase..sbase + LANES];
+            for (a, &x) in acc.iter_mut().zip(src) {
+                *a += w * x;
+            }
+        }
+        if relu_after {
+            relu_row(&mut acc);
+        }
+        data[dbase + c..dbase + c + LANES].copy_from_slice(&acc);
+        c += LANES;
+    }
+    // Scalar tail (batch % LANES columns), same accumulator discipline.
+    while c < batch {
+        let mut a = data[dbase + c];
+        for (k, &w) in weights.iter().enumerate() {
+            a += w * data[srcs[k] as usize * batch + c];
+        }
+        if relu_after && a < 0.0 {
+            a = 0.0;
+        }
+        data[dbase + c] = a;
+        c += 1;
+    }
+}
+
+/// Scatter-AXPY microkernel: `dsts[k] += w_k · src` over the batch row,
+/// [`LANES`] columns at a time with the source chunk held in locals (no
+/// dst can alias src — no self-loops). Per-element flags fire the
+/// mid-run ReLU exactly where the interpreter would.
+fn axpy_run(
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    weights: &[f32],
+    flags: &[u8],
+) {
+    const RELU: u8 = FLAG_FINISH | FLAG_HIDDEN;
+    let sbase = src * batch;
+    let mut c = 0;
+    while c + LANES <= batch {
+        let mut s = [0.0f32; LANES];
+        s.copy_from_slice(&data[sbase + c..sbase + c + LANES]);
+        for (k, &w) in weights.iter().enumerate() {
+            let dbase = dsts[k] as usize * batch + c;
+            let dst = &mut data[dbase..dbase + LANES];
+            for (y, &x) in dst.iter_mut().zip(&s) {
+                *y += w * x;
+            }
+            if flags[k] & RELU == RELU {
+                relu_row(dst);
+            }
+        }
+        c += LANES;
+    }
+    while c < batch {
+        let s = data[sbase + c];
+        for (k, &w) in weights.iter().enumerate() {
+            let di = dsts[k] as usize * batch + c;
+            let mut v = data[di] + w * s;
+            if flags[k] & RELU == RELU && v < 0.0 {
+                v = 0.0;
+            }
+            data[di] = v;
+        }
+        c += 1;
+    }
+}
+
+/// How many values buffers a [`FusedEngine`] keeps warm. Matches the
+/// typical batch-shard fan-out; beyond it, extra concurrent calls fall
+/// back to a fresh allocation.
+const SCRATCH_POOL_CAP: usize = 8;
+
+/// [`Engine`] wrapper over a fused program with reusable scratch: the
+/// serving hot path recycles its `n_neurons × batch` values buffer
+/// across calls instead of reallocating per request. The pool is keyed
+/// by shape and safe under concurrent `infer` (e.g. inside a
+/// `ParallelEngine`): contended callers simply allocate.
+pub struct FusedEngine {
+    program: FusedProgram,
+    scratch: Mutex<Vec<BatchMatrix>>,
+    name: &'static str,
+}
+
+impl FusedEngine {
+    pub fn new(net: &Ffnn, order: &ConnOrder) -> FusedEngine {
+        FusedEngine::from_program(FusedProgram::compile(net, order))
+    }
+
+    /// Wrap an already-compiled fused program.
+    pub fn from_program(program: FusedProgram) -> FusedEngine {
+        FusedEngine {
+            program,
+            scratch: Mutex::new(Vec::new()),
+            name: "fused-stream",
+        }
+    }
+
+    /// Same engine but labelled (e.g. "fused-annealed") for reports.
+    pub fn with_name(net: &Ffnn, order: &ConnOrder, name: &'static str) -> FusedEngine {
+        FusedEngine {
+            name,
+            ..FusedEngine::new(net, order)
+        }
+    }
+
+    pub fn program(&self) -> &FusedProgram {
+        &self.program
+    }
+}
+
+impl Engine for FusedEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let rows = self.program.n_neurons();
+        let mut values = {
+            let mut pool = self.scratch.lock().expect("scratch pool poisoned");
+            match pool.iter().position(|m| m.rows() == rows && m.batch() == batch) {
+                Some(i) => pool.swap_remove(i),
+                None => BatchMatrix::zeros(rows, batch),
+            }
+        };
+        let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
+        self.program.run_into(inputs, &mut values, &mut out);
+        let mut pool = self.scratch.lock().expect("scratch pool poisoned");
+        if pool.len() >= SCRATCH_POOL_CAP {
+            // Evict the oldest buffer: dynamic batching varies the batch
+            // width, and a full pool of stale shapes would otherwise
+            // disable reuse permanently.
+            pool.remove(0);
+        }
+        pool.push(values);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.program.input_ids().len()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.program.output_ids().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::stream::StreamingEngine;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::graph::{Conn, NeuronKind};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::util::rng::Pcg64;
+
+    /// 2 inputs → 1 hidden (ReLU) → 1 output (same net as stream tests).
+    fn tiny() -> Ffnn {
+        Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+            ],
+            vec![0.0, 0.0, 0.5, -1.0],
+            vec![
+                Conn { src: 0, dst: 2, weight: 2.0 },
+                Conn { src: 1, dst: 2, weight: -3.0 },
+                Conn { src: 2, dst: 3, weight: 1.5 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn hand_computed_forward_matches_stream_bitwise() {
+        let net = tiny();
+        let order = two_optimal_order(&net);
+        let fused = FusedEngine::new(&net, &order);
+        let interp = StreamingEngine::new(&net, &order);
+        let inputs = BatchMatrix::from_rows(2, 2, vec![1.0, 2.0, 1.0, 0.0]);
+        let out = fused.infer(&inputs);
+        // col0: h = relu(0.5 + 2·1 − 3·1) = 0 ⇒ out = −1; col1: 5.75.
+        let r = out.row(0);
+        assert!((r[0] - (-1.0)).abs() < 1e-6, "{r:?}");
+        assert!((r[1] - 5.75).abs() < 1e-6, "{r:?}");
+        assert_eq!(out, interp.infer(&inputs));
+        // Fusion shape: [0→2, 1→2] is a dot run with ReLU; [2→3] is a
+        // singleton (run length 1).
+        let p = fused.program();
+        assert_eq!(p.n_macro_ops(), 2);
+        assert_eq!(
+            p.macro_op(0),
+            MacroOp::Dot {
+                dst: 2,
+                srcs: &[0, 1],
+                weights: &[2.0, -3.0],
+                relu_after: true,
+            }
+        );
+        assert!(matches!(p.macro_op(1), MacroOp::Dot { dst: 3, relu_after: false, .. }));
+        let st = p.stats();
+        assert_eq!((st.n_dot_runs, st.n_axpy_runs, st.n_singletons), (1, 0, 1));
+        assert_eq!(st.fused_ops, 2);
+        assert_eq!(st.max_run_len, 2);
+    }
+
+    #[test]
+    fn axpy_run_applies_mid_run_relu() {
+        // 0 → h1 (finish, hidden) and 0 → out2 share src 0: the 2-optimal
+        // order [0→1, 0→2, 1→2] fuses the first two into an AxpyRun whose
+        // first element finishes a hidden neuron — the ReLU must fire
+        // mid-run, before 1→2 consumes h1.
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Hidden, NeuronKind::Output],
+            vec![0.0, -5.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 10.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let fused = FusedEngine::new(&net, &order);
+        let p = fused.program();
+        assert_eq!(p.stats().n_axpy_runs, 1);
+        assert_eq!(
+            p.macro_op(0),
+            MacroOp::Axpy {
+                src: 0,
+                dsts: &[1, 2],
+                weights: &[1.0, 1.0],
+                flags: &[FLAG_FINISH | FLAG_HIDDEN, 0],
+            }
+        );
+        // x = 2: h = relu(−5 + 2) = 0 ⇒ out = 2 + 10·0 = 2. Without the
+        // mid-run ReLU the output would be 2 + 10·(−3) = −28.
+        let out = fused.infer(&BatchMatrix::from_rows(1, 1, vec![2.0]));
+        assert!((out.row(0)[0] - 2.0).abs() < 1e-6, "{:?}", out.row(0));
+        let interp = StreamingEngine::new(&net, &order);
+        let x = BatchMatrix::random(1, 13, &mut Pcg64::seed_from(7));
+        assert_eq!(fused.infer(&x), interp.infer(&x));
+    }
+
+    #[test]
+    fn alternating_stream_degenerates_to_singletons() {
+        // Two disjoint chains: consecutive ops share neither src nor dst,
+        // so every macro-op has run length 1.
+        let net = Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+                NeuronKind::Output,
+            ],
+            vec![0.0; 6],
+            vec![
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 3, weight: 1.0 },
+                Conn { src: 2, dst: 4, weight: 1.0 },
+                Conn { src: 3, dst: 5, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let fused = FusedEngine::new(&net, &order);
+        let st = fused.program().stats();
+        assert_eq!(st.n_singletons, 4);
+        assert_eq!((st.n_dot_runs, st.n_axpy_runs, st.fused_ops), (0, 0, 0));
+        assert_eq!(st.ops_per_macro_op(), 1.0);
+        assert_eq!(st.mean_run_len(), 0.0);
+        let interp = StreamingEngine::new(&net, &order);
+        let x = BatchMatrix::random(2, 9, &mut Pcg64::seed_from(11));
+        assert_eq!(fused.infer(&x), interp.infer(&x));
+    }
+
+    #[test]
+    fn hidden_source_only_net() {
+        // Hidden neurons with no in-edges (value = relu(bias) from the
+        // prologue) feeding one output alongside an input: one dot run.
+        let net = Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+            ],
+            vec![0.0, 2.0, -3.0, 1.0],
+            vec![
+                Conn { src: 0, dst: 3, weight: 1.0 },
+                Conn { src: 1, dst: 3, weight: 1.0 },
+                Conn { src: 2, dst: 3, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let fused = FusedEngine::new(&net, &order);
+        assert_eq!(fused.program().stats().n_dot_runs, 1);
+        // out = 1 + x + relu(2) + relu(−3) = 3 + x.
+        let out = fused.infer(&BatchMatrix::from_rows(1, 1, vec![4.0]));
+        assert!((out.row(0)[0] - 7.0).abs() < 1e-6, "{:?}", out.row(0));
+    }
+
+    #[test]
+    fn empty_batch() {
+        let net = tiny();
+        let order = two_optimal_order(&net);
+        let fused = FusedEngine::new(&net, &order);
+        let out = fused.infer(&BatchMatrix::zeros(2, 0));
+        assert_eq!((out.rows(), out.batch()), (1, 0));
+        assert_eq!(out, StreamingEngine::new(&net, &order).infer(&BatchMatrix::zeros(2, 0)));
+    }
+
+    #[test]
+    fn dot_runs_on_two_optimal_cover_full_in_degree() {
+        // The 2-optimal construction keeps each destination's in-edges
+        // consecutive, so a fused DotRun covers the destination's whole
+        // interval — except that a preceding singleton destination
+        // sharing its src with the interval's first edge lets an AxpyRun
+        // steal exactly that first element. Hence len ∈ {d, d−1}.
+        let mut rng = Pcg64::seed_from(0xF0A);
+        let net = random_mlp(&MlpSpec::new(3, 18, 0.4), &mut rng);
+        let fused = FusedProgram::compile(&net, &two_optimal_order(&net));
+        for m in 0..fused.n_macro_ops() {
+            if let MacroOp::Dot { dst, srcs, .. } = fused.macro_op(m) {
+                if srcs.len() >= 2 {
+                    assert!(
+                        srcs.len() + 1 >= net.in_degree(dst),
+                        "dst {dst}: run of {} from in-degree {}",
+                        srcs.len(),
+                        net.in_degree(dst)
+                    );
+                }
+            }
+        }
+        let st = fused.stats();
+        assert_eq!(st.n_ops, net.n_conns());
+        assert!(st.fused_fraction() > 0.5, "MLP streams should fuse well: {st:?}");
+    }
+
+    #[test]
+    fn scratch_pool_survives_shape_changes() {
+        let mut rng = Pcg64::seed_from(0xF0B);
+        let net = random_mlp(&MlpSpec::new(3, 12, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let fused = FusedEngine::new(&net, &order);
+        let interp = StreamingEngine::new(&net, &order);
+        for batch in [5, 16, 1, 16, 5, 0, 16] {
+            let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+            assert_eq!(fused.infer(&x), interp.infer(&x), "batch {batch}");
+        }
+        // More distinct shapes than the pool holds: eviction must keep
+        // both reuse and results intact.
+        for batch in 0..2 * SCRATCH_POOL_CAP {
+            let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+            assert_eq!(fused.infer(&x), interp.infer(&x), "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let net = tiny();
+        let fused = FusedProgram::compile(&net, &two_optimal_order(&net));
+        let j = fused.stats().to_json();
+        assert_eq!(j.get("ops").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("macro_ops").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("dot_runs").unwrap().as_u64(), Some(1));
+        assert!(j.get("ops_per_macro_op").unwrap().as_f64().unwrap() > 1.0);
+        assert_eq!(j.get("max_run_len").unwrap().as_u64(), Some(2));
+    }
+}

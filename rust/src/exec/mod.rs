@@ -19,10 +19,31 @@
 //!   indices + per-group affine-quantized `i8` weights, dequantized on
 //!   the fly (EIE-style weight compression; ≥ 3× fewer stream bytes per
 //!   connection, with a certified output-error bound).
+//! * [`fused`] — the block-compiled variant of the stream: the op stream
+//!   is run-length-fused offline into DotRun/AxpyRun macro-ops executed
+//!   by batch-tiled microkernels, **bit-identical** to [`stream`].
+//!
+//! # Engine lineup and composition
+//!
+//! | engine | schedule | precision | vs `stream` |
+//! |---|---|---|---|
+//! | `stream` | interp | f32 | reference |
+//! | `fused` | fused | f32 | bit-identical |
+//! | `quant` | interp (compressed) | i8 | within certified bound |
+//! | `layerwise` / `dense` / `csr` | layer-wise | f32 | within 1e-5 |
+//!
+//! [`parallel::ParallelEngine`] (the `workers` knob) composes with every
+//! row: batch sharding is bit-identical to the serial inner engine, so
+//! `fused∘sharded` stays bit-identical to `stream` and `quant∘sharded`
+//! stays within the certified bound. The `schedule` knob
+//! (interp | fused) currently applies to the f32 path only — the i8
+//! stream is already compressed into its own record format, so
+//! `--precision i8 --schedule fused` is rejected at the CLI.
 
 pub mod batch;
 pub mod csr;
 pub mod dense;
+pub mod fused;
 pub mod layerwise;
 pub mod parallel;
 pub mod quant;
@@ -82,5 +103,39 @@ pub fn relu_row(row: &mut [f32]) {
         if *v < 0.0 {
             *v = 0.0;
         }
+    }
+}
+
+/// Shared prologue of the stream-family engines ([`stream`], [`quant`],
+/// [`fused`]): bias-fill the non-input rows, copy the request batch into
+/// the input rows, and materialize hidden sources as `relu(bias)`.
+///
+/// Input rows skip the bias fill — they are overwritten by the request
+/// values immediately, so filling them first is wasted bandwidth. The
+/// skip keys on `input_ids` being ascending (as `Ffnn::input_ids`
+/// produces); out-of-order ids merely fall back to fill-then-overwrite,
+/// never to a wrong result. Every row is written, so `values` may carry
+/// stale data from a previous call (scratch reuse).
+pub fn init_values(
+    values: &mut BatchMatrix,
+    inputs: &BatchMatrix,
+    biases: &[f32],
+    input_ids: &[u32],
+    hidden_sources: &[u32],
+) {
+    debug_assert_eq!(values.rows(), biases.len());
+    let mut next_input = 0usize;
+    for (v, &bias) in biases.iter().enumerate() {
+        if input_ids.get(next_input).is_some_and(|&id| id as usize == v) {
+            next_input += 1;
+            continue;
+        }
+        values.fill_row(v, bias);
+    }
+    for (i, &v) in input_ids.iter().enumerate() {
+        values.row_mut(v as usize).copy_from_slice(inputs.row(i));
+    }
+    for &v in hidden_sources {
+        relu_row(values.row_mut(v as usize));
     }
 }

@@ -271,17 +271,10 @@ impl QuantStreamProgram {
         assert_eq!(out.rows(), self.output_ids.len());
         assert_eq!(out.batch(), batch);
 
-        // Prologue: biases for non-inputs, request values for inputs,
-        // relu(bias) for hidden sources (same discipline as f32 stream).
-        for v in 0..self.n_neurons {
-            values.fill_row(v, self.biases[v]);
-        }
-        for (i, &v) in self.input_ids.iter().enumerate() {
-            values.row_mut(v as usize).copy_from_slice(inputs.row(i));
-        }
-        for &v in &self.hidden_sources {
-            relu_row(values.row_mut(v as usize));
-        }
+        // Prologue shared with the f32 stream and fused engines: biases
+        // for non-inputs, request values for inputs (their redundant
+        // bias fill is skipped), relu(bias) for hidden sources.
+        super::init_values(values, inputs, &self.biases, &self.input_ids, &self.hidden_sources);
 
         // The compressed stream: decode record, dequantize, AXPY.
         let ctrl = &self.ctrl[..];
@@ -298,8 +291,12 @@ impl QuantStreamProgram {
             let packed = read_varint(ctrl, &mut pos);
             dst += unzigzag(packed >> 2);
             let w = scale * (q as f32 - zero_point);
-            // Disjoint rows (no self-loops, validated at construction).
-            let (src_row, dst_row) = values.row_pair(src as usize, dst as usize);
+            // SAFETY: src != dst and both < n_neurons — every record was
+            // validated by `decode_records` at construction
+            // (`from_parts`) or comes from a checked `StreamProgram`,
+            // and the shape asserts above pin `values` to n_neurons.
+            let (src_row, dst_row) =
+                unsafe { values.row_pair_unchecked(src as usize, dst as usize) };
             for (y, &x) in dst_row.iter_mut().zip(src_row) {
                 *y += w * x;
             }

@@ -125,23 +125,20 @@ impl StreamProgram {
         assert_eq!(out.rows(), self.output_ids.len());
         assert_eq!(out.batch(), batch);
 
-        // Prologue: biases for non-inputs, request values for inputs,
-        // relu(bias) for hidden sources.
-        for v in 0..self.n_neurons {
-            values.fill_row(v, self.biases[v]);
-        }
-        for (i, &v) in self.input_ids.iter().enumerate() {
-            values.row_mut(v as usize).copy_from_slice(inputs.row(i));
-        }
-        for &v in &self.hidden_sources {
-            relu_row(values.row_mut(v as usize));
-        }
+        // Prologue (shared with quant/fused): biases for non-inputs,
+        // request values for inputs (their redundant bias fill is
+        // skipped), relu(bias) for hidden sources.
+        super::init_values(values, inputs, &self.biases, &self.input_ids, &self.hidden_sources);
 
-        // The stream: one AXPY per connection, activation at finish.
+        // The stream: one AXPY per connection, activation at finish. The
+        // per-op row checks are hoisted to compile time: `Ffnn` rejects
+        // self-loops and out-of-range ids, and the shape asserts above
+        // pin `values` to `n_neurons` rows.
         for op in &self.ops {
             let w = op.weight;
-            // Disjoint rows (no self-loops) — row_pair enforces it.
-            let (src_row, dst_row) = values.row_pair(op.src as usize, op.dst as usize);
+            // SAFETY: op.src != op.dst and both < n_neurons (see above).
+            let (src_row, dst_row) =
+                unsafe { values.row_pair_unchecked(op.src as usize, op.dst as usize) };
             for (y, &x) in dst_row.iter_mut().zip(src_row) {
                 *y += w * x;
             }

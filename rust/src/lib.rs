@@ -19,9 +19,12 @@
 //!    (reordered) connection order on batched inputs, the layer-wise CSR
 //!    baseline (CSRMM), a dense reference, the batch-sharded
 //!    [`exec::parallel::ParallelEngine`] running any of them on
-//!    concurrent column shards (bit-identical to serial), and the
+//!    concurrent column shards (bit-identical to serial), the
 //!    compressed quantized stream ([`exec::quant`]: delta/varint indices
-//!    + per-group i8 weights, with a certified output-error bound).
+//!    + per-group i8 weights, with a certified output-error bound), and
+//!    the fused block-compiled stream ([`exec::fused`]: run-length
+//!    macro-ops + batch-tiled microkernels, bit-identical to the
+//!    interpreter).
 //! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
 //!    artifacts and executes them from Rust.
 //! 7. [`coordinator`] — batched inference serving: request queue, dynamic
@@ -63,6 +66,7 @@ pub mod prelude {
     pub use crate::bounds::{theorem1_bounds, Theorem1Bounds};
     pub use crate::exec::{
         csr::CsrLayer,
+        fused::{FusedEngine, FusedProgram, FusionStats},
         layerwise::LayerwiseEngine,
         parallel::ParallelEngine,
         quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram},

@@ -16,6 +16,7 @@ use sparseflow::config::Config;
 use sparseflow::coordinator::batcher::BatchPolicy;
 use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
 use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::exec::fused::FusedEngine;
 use sparseflow::exec::layerwise::LayerwiseEngine;
 use sparseflow::exec::quant::{QuantStreamEngine, QuantStreamProgram};
 use sparseflow::exec::stream::StreamingEngine;
@@ -315,6 +316,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             .opt("set", "-", "config override key=value ('-' = none)")
             .workers_opt()
             .precision_opt()
+            .schedule_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
         args,
     );
@@ -359,11 +361,32 @@ fn cmd_serve(args: &[String]) -> i32 {
         "auto" => config.precision("f32"),
         p => p.to_string(),
     };
+    // The schedule knob, resolved the same way (config key `schedule`).
+    let schedule = match a.str("schedule") {
+        "auto" => config.schedule("interp"),
+        s => s.to_string(),
+    };
     let mut router = Router::new();
     let name = a.str("name").to_string();
-    let engine: std::sync::Arc<dyn Engine> = match precision.as_str() {
-        "f32" => std::sync::Arc::new(StreamingEngine::new(&net, &order)),
-        "i8" => {
+    let mut fusion_stats = None;
+    let engine: std::sync::Arc<dyn Engine> = match (precision.as_str(), schedule.as_str()) {
+        ("f32", "interp") => std::sync::Arc::new(StreamingEngine::new(&net, &order)),
+        ("f32", "fused") => {
+            let fused = FusedEngine::new(&net, &order);
+            let st = fused.program().stats();
+            println!(
+                "fused schedule: {} conns -> {} macro-ops ({:.1} ops/macro-op, \
+                 mean fused run {:.1}, max {})",
+                st.n_ops,
+                st.n_macro_ops(),
+                st.ops_per_macro_op(),
+                st.mean_run_len(),
+                st.max_run_len
+            );
+            fusion_stats = Some(st.clone());
+            std::sync::Arc::new(fused)
+        }
+        ("i8", "interp") => {
             let quant = QuantStreamEngine::new(&net, &order);
             let p = quant.program();
             println!(
@@ -376,20 +399,38 @@ fn cmd_serve(args: &[String]) -> i32 {
             );
             std::sync::Arc::new(quant)
         }
-        other => {
+        ("i8", "fused") => {
+            eprintln!(
+                "error: --schedule fused requires --precision f32 (the i8 stream is \
+                 already compressed into its own record format; see the composition \
+                 matrix in README.md)"
+            );
+            return 2;
+        }
+        ("f32" | "i8", other) => {
+            eprintln!("error: unknown schedule {other:?} (expected interp or fused)");
+            return 2;
+        }
+        (other, _) => {
             eprintln!("error: unknown precision {other:?} (expected f32 or i8)");
             return 2;
         }
     };
     let tag: &'static str = if precision == "i8" { "i8" } else { "f32" };
-    if workers > 1 {
+    let sched: &'static str = if schedule == "fused" { "fused" } else { "interp" };
+    let mut variant = if workers > 1 {
         println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
-        router.register(ModelVariant::sharded(&name, engine, workers).with_precision(tag));
+        ModelVariant::sharded(&name, engine, workers).with_precision(tag)
     } else if tag == "i8" {
-        router.register(ModelVariant::quantized(&name, engine));
+        ModelVariant::quantized(&name, engine)
     } else {
-        router.register(ModelVariant::new(&name, engine));
+        ModelVariant::new(&name, engine)
+    };
+    variant = variant.with_schedule(sched);
+    if let Some(st) = fusion_stats {
+        variant = variant.with_fusion_stats(st);
     }
+    router.register(variant);
     if a.flag("with-csr") && net.layer_of().is_some() {
         router.register(ModelVariant::new(
             &format!("{name}-csr"),

@@ -1,0 +1,158 @@
+//! Differential suite for the fused block-compiled stream engine
+//! (`exec::fused`): bit-identity to the stream interpreter over seeded
+//! random nets and orders (including annealed ones), composition with
+//! batch sharding, scratch-pool hygiene under reuse and concurrency,
+//! and conservation invariants of the fusion compiler.
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::{FusedEngine, FusedProgram, MacroOp};
+use sparseflow::exec::parallel::ParallelEngine;
+use sparseflow::exec::stream::{StreamProgram, StreamingEngine};
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_layered, random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::reorder::neighbor::{apply_move, WindowMove};
+use sparseflow::util::proptest::check;
+use sparseflow::util::rng::Pcg64;
+
+/// Fused ≡ stream, bit for bit, over 50 seeded nets with perturbed (but
+/// topological) orders — alone, on a second call that reuses pooled
+/// scratch, and composed with batch sharding (fused∘sharded). Batch
+/// sizes include 0 (empty batch) and non-multiples of the lane width.
+#[test]
+fn prop_fused_differential() {
+    check(
+        "fused-differential",
+        50,
+        |rng| {
+            let sizes = vec![3 + rng.index(10), 3 + rng.index(10), 1 + rng.index(4)];
+            let net = random_layered(&sizes, 0.2 + rng.f64() * 0.6, 1.0, rng);
+            let mut order = two_optimal_order(&net);
+            for _ in 0..8 {
+                let mv = WindowMove::sample(rng, order.len(), 6);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            // 0..=13 covers empty, sub-lane, exact-lane and tail batches.
+            let batch = rng.index(14);
+            let x = BatchMatrix::random(net.n_inputs(), batch, rng);
+            let workers = 1 + rng.index(4);
+            (net, order, x, workers)
+        },
+        |(net, order, x, workers)| {
+            let reference = StreamingEngine::new(net, order).infer(x);
+            let fused = FusedEngine::new(net, order);
+            if fused.infer(x) != reference {
+                return Err(format!("fused not bit-identical (batch {})", x.batch()));
+            }
+            if fused.infer(x) != reference {
+                return Err("fused diverged on reused scratch".into());
+            }
+            let sharded = ParallelEngine::new(FusedEngine::new(net, order), *workers);
+            if sharded.infer(x) != reference {
+                return Err(format!("fused∘sharded ({workers} workers) not bit-identical"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fusion compiler conserves the stream: every connection lands in
+/// exactly one macro-op, in stream order, with its weight and row pair
+/// intact (checked by re-expanding the macro-ops).
+#[test]
+fn prop_fusion_conserves_stream() {
+    check(
+        "fusion-conserves-stream",
+        40,
+        |rng| {
+            let depth = 2 + rng.index(3);
+            let width = 4 + rng.index(16);
+            let net = random_mlp(&MlpSpec::new(depth, width, 0.1 + rng.f64() * 0.6), rng);
+            let mut order = two_optimal_order(&net);
+            for _ in 0..12 {
+                let mv = WindowMove::sample(rng, order.len(), 8);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            (net, order)
+        },
+        |(net, order)| {
+            let stream = StreamProgram::compile(net, order);
+            let fused = FusedProgram::from_program(&stream);
+            let mut expanded: Vec<(u32, u32, f32)> = Vec::with_capacity(stream.n_ops());
+            for m in 0..fused.n_macro_ops() {
+                match fused.macro_op(m) {
+                    MacroOp::Dot { dst, srcs, weights, .. } => {
+                        for (&s, &w) in srcs.iter().zip(weights) {
+                            expanded.push((s, dst, w));
+                        }
+                    }
+                    MacroOp::Axpy { src, dsts, weights, .. } => {
+                        for (&d, &w) in dsts.iter().zip(weights) {
+                            expanded.push((src, d, w));
+                        }
+                    }
+                }
+            }
+            let original: Vec<(u32, u32, f32)> =
+                stream.ops().iter().map(|op| (op.src, op.dst, op.weight)).collect();
+            if expanded != original {
+                return Err(format!(
+                    "macro-ops do not re-expand to the stream ({} vs {} ops)",
+                    expanded.len(),
+                    original.len()
+                ));
+            }
+            let st = fused.stats();
+            if st.n_ops != stream.n_ops() {
+                return Err(format!("stats n_ops {} != stream {}", st.n_ops, stream.n_ops()));
+            }
+            if st.n_macro_ops() != fused.n_macro_ops() {
+                return Err("stats macro-op count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An annealed order (the engine's production configuration) stays
+/// bit-identical between interpreter and fused engine, and its fusion
+/// stats stay internally consistent.
+#[test]
+fn annealed_order_fuses_bit_identically() {
+    let mut rng = Pcg64::seed_from(0xFD1);
+    let net = random_mlp(&MlpSpec::new(3, 24, 0.25), &mut rng);
+    let initial = two_optimal_order(&net);
+    let mut cfg = AnnealConfig::new(12, PolicyKind::Min, 400);
+    cfg.seed = 0xFD2;
+    let (annealed, _) = reorder(&net, &initial, &cfg);
+
+    let interp = StreamingEngine::new(&net, &annealed);
+    let fused = FusedEngine::new(&net, &annealed);
+    for batch in [1, 8, 128, 37] {
+        let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+        assert_eq!(fused.infer(&x), interp.infer(&x), "batch {batch}");
+    }
+    let st = fused.program().stats();
+    assert_eq!(st.n_ops, net.n_conns());
+    assert!(st.ops_per_macro_op() >= 1.0);
+    assert!(st.max_run_len >= 1);
+}
+
+/// Concurrent `infer` through the sharded adapter exercises the scratch
+/// pool under contention; results must match the serial interpreter for
+/// every shard width.
+#[test]
+fn concurrent_fused_scratch_is_clean() {
+    let mut rng = Pcg64::seed_from(0xFD3);
+    let net = random_mlp(&MlpSpec::new(3, 20, 0.3), &mut rng);
+    let order = two_optimal_order(&net);
+    let want = StreamingEngine::new(&net, &order)
+        .infer(&BatchMatrix::random(net.n_inputs(), 96, &mut Pcg64::seed_from(0xFD4)));
+    let x = BatchMatrix::random(net.n_inputs(), 96, &mut Pcg64::seed_from(0xFD4));
+    let fused = ParallelEngine::new(FusedEngine::new(&net, &order), 8);
+    for _ in 0..4 {
+        assert_eq!(fused.infer(&x), want);
+    }
+}

@@ -5,6 +5,7 @@
 use sparseflow::bounds::theorem1_bounds;
 use sparseflow::exec::batch::BatchMatrix;
 use sparseflow::exec::dense::DenseEngine;
+use sparseflow::exec::fused::FusedEngine;
 use sparseflow::exec::layerwise::{forward_layers, LayerwiseEngine};
 use sparseflow::exec::parallel::ParallelEngine;
 use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine};
@@ -251,10 +252,11 @@ fn prop_neuron_order_derivation() {
 }
 
 /// (i) Cross-engine differential: dense, CSR (raw layer pipeline),
-/// CSR layer-wise, stream, and batch-sharded parallel compute the same
-/// function on the same batch — within 1e-5 where schedules reassociate
-/// f32 sums, bit-identical where the docs claim it (sharding), and
-/// within the certified error bound for the quantized stream.
+/// CSR layer-wise, stream, batch-sharded parallel, and the fused
+/// block-compiled stream compute the same function on the same batch —
+/// within 1e-5 where schedules reassociate f32 sums, bit-identical
+/// where the docs claim it (sharding, fusion, and their composition),
+/// and within the certified error bound for the quantized stream.
 #[test]
 fn prop_cross_engine_differential() {
     check(
@@ -296,6 +298,17 @@ fn prop_cross_engine_differential() {
             let sharded = ParallelEngine::new(StreamingEngine::new(net, order), *workers);
             if sharded.infer(x) != reference {
                 return Err(format!("sharded ({workers} workers) not bit-identical"));
+            }
+
+            // The fused block-compiled schedule is documented
+            // bit-identical to the interpreter, alone and composed with
+            // batch sharding (fused∘sharded).
+            if FusedEngine::new(net, order).infer(x) != reference {
+                return Err("fused not bit-identical to stream".into());
+            }
+            let fused_sharded = ParallelEngine::new(FusedEngine::new(net, order), *workers);
+            if fused_sharded.infer(x) != reference {
+                return Err(format!("fused∘sharded ({workers} workers) not bit-identical"));
             }
 
             // The quantized stream agrees within its certified bound.
