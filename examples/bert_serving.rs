@@ -88,7 +88,9 @@ fn main() {
             batch: BatchPolicy {
                 max_batch: args.usize("max-batch"),
                 max_wait: std::time::Duration::from_millis(2),
+                ..Default::default()
             },
+            ..Default::default()
         },
     );
     let handle = server.handle();

@@ -1,0 +1,127 @@
+//! §Perf — end-to-end serving throughput and tail latency through the
+//! deadline-aware coordinator (queue → batcher → engine), measured with
+//! the closed-loop load generator against every valid engine variant:
+//! interp/fused × f32/i8 × workers {1, 4}. This is the number the paper's
+//! kernel speedups must survive: rows/s *after* the queueing layer, plus
+//! the p50/p99 end-to-end and queue-wait split. Emits JSON via
+//! `bench::harness` (published to `BENCH_PERF_SERVE.json` at the repo
+//! root).
+//!
+//! ```bash
+//! cargo bench --bench perf_serve -- --clients 8 --requests 600
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::loadgen::{run, LoadSpec};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::Summary;
+
+fn main() {
+    let args = Spec::new("perf_serve", "serving throughput / tail latency per engine variant")
+        .opt("requests", "600", "requests per measurement run")
+        .opt("clients", "8", "closed-loop clients")
+        .opt("reps", "5", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("seed", "1", "workload seed")
+        .opt("max-batch", "128", "dynamic batcher max batch size")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let requests = if quick { 120 } else { args.usize("requests") };
+    let clients = if quick { 4 } else { args.usize("clients") };
+    let reps = if quick { 2 } else { args.usize("reps") };
+    let seed = args.u64("seed");
+
+    let mut rng = Pcg64::seed_from(0x5E12);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let net = bert_mlp(&bert_spec, &mut rng);
+    let order = two_optimal_order(&net);
+    println!("{}", net.describe());
+
+    let mut report =
+        Report::new("perf_serve", "serving pipeline throughput / tail latency (§Perf)");
+    report.set_meta("requests", requests);
+    report.set_meta("clients", clients);
+    report.set_meta("seed", seed);
+    report.set_meta("quick", quick);
+
+    for schedule in ["interp", "fused"] {
+        for precision in ["f32", "i8"] {
+            if schedule == "fused" && precision == "i8" {
+                // Not a silent cap: this composition point does not exist
+                // (the i8 stream has its own record format).
+                println!("skipping fused-i8 (invalid composition; see the README matrix)");
+                continue;
+            }
+            for workers in [1usize, 4] {
+                let mut variant =
+                    ModelVariant::build("variant", &net, &order, schedule, precision, workers)
+                        .expect("valid composition point");
+                let label = variant.label();
+                variant.name = label.clone();
+                let mut router = Router::new();
+                router.register(variant);
+                let server = Server::start(
+                    router,
+                    ServerConfig {
+                        batch: BatchPolicy {
+                            max_batch: args.usize("max-batch"),
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    },
+                );
+                let h = server.handle();
+                // Warmup run (allocator + scratch pools + thread ramp-up).
+                let _ = run(&h, &label, &LoadSpec::closed(clients, requests / 4 + 1, seed));
+
+                let (mut rps, mut p50, mut p95, mut p99) =
+                    (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+                let (mut qw50, mut qw95, mut qw99) = (Vec::new(), Vec::new(), Vec::new());
+                for _ in 0..reps {
+                    let r = run(&h, &label, &LoadSpec::closed(clients, requests, seed));
+                    assert_eq!(
+                        r.served, requests,
+                        "{label}: closed loop without SLOs must serve everything"
+                    );
+                    rps.push(r.throughput_rps);
+                    p50.push(r.latency_ms.p50);
+                    p95.push(r.latency_ms.p95);
+                    p99.push(r.latency_ms.p99);
+                    qw50.push(r.queue_wait_ms.p50);
+                    qw95.push(r.queue_wait_ms.p95);
+                    qw99.push(r.queue_wait_ms.p99);
+                }
+                report.record_sample(&label, "closed rows/s", &rps, "rows/s");
+                report.record_sample(&label, "latency p50 ms", &p50, "ms");
+                report.record_sample(&label, "latency p95 ms", &p95, "ms");
+                report.record_sample(&label, "latency p99 ms", &p99, "ms");
+                report.record_sample(&label, "queue-wait p50 ms", &qw50, "ms");
+                report.record_sample(&label, "queue-wait p95 ms", &qw95, "ms");
+                report.record_sample(&label, "queue-wait p99 ms", &qw99, "ms");
+                println!(
+                    "  {label:<16} {:>10.0} rows/s   p50 {:>7.2} ms   p99 {:>7.2} ms",
+                    Summary::of(&rps).median,
+                    Summary::of(&p50).median,
+                    Summary::of(&p99).median
+                );
+            }
+        }
+    }
+
+    report.finish();
+}

@@ -94,7 +94,9 @@ fn main() {
             batch: BatchPolicy {
                 max_batch: batch,
                 max_wait: std::time::Duration::from_millis(1),
+                ..Default::default()
             },
+            ..Default::default()
         },
     );
     let handle = server.handle();

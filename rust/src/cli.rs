@@ -92,6 +92,32 @@ impl Spec {
         )
     }
 
+    /// The standard `--max-queue` SLO option of the serving commands:
+    /// bounded queue depth for admission control. An explicit value wins
+    /// — including an explicit `0` (= unbounded) — while "auto" defers
+    /// to the `max_queue` config key on commands that take a `--config`
+    /// file (and to 0 elsewhere).
+    pub fn max_queue_opt(self) -> Self {
+        self.opt(
+            "max-queue",
+            "auto",
+            "shed beyond this queue depth; 0 = unbounded (auto = config key if any, else 0)",
+        )
+    }
+
+    /// The standard `--deadline-ms` SLO option of the serving commands:
+    /// default per-request deadline budget. An explicit value wins —
+    /// including an explicit `0` (= no deadline) — while "auto" defers
+    /// to the `deadline_ms` config key on commands that take a
+    /// `--config` file (and to 0 elsewhere).
+    pub fn deadline_opt(self) -> Self {
+        self.opt(
+            "deadline-ms",
+            "auto",
+            "per-request deadline budget in ms; 0 = none (auto = config key if any, else 0)",
+        )
+    }
+
     /// Parse a raw argument list (without argv[0]).
     pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
@@ -418,6 +444,24 @@ mod tests {
         let a = s.parse(&sv(&["--schedule", "fused"])).unwrap();
         assert_eq!(a.str("schedule"), "fused");
         assert!(s.help_text().contains("--schedule"));
+    }
+
+    #[test]
+    fn slo_opts_declare_standard_knobs() {
+        let s = Spec::new("t", "t").max_queue_opt().deadline_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("max-queue"), "auto", "default defers to config");
+        assert_eq!(a.str("deadline-ms"), "auto", "default defers to config");
+        let a = s.parse(&sv(&["--max-queue", "512", "--deadline-ms", "25"])).unwrap();
+        assert_eq!(a.usize("max-queue"), 512);
+        assert_eq!(a.u64("deadline-ms"), 25);
+        // An explicit 0 stays distinguishable from "auto" (it means
+        // "off", overriding any config-file value).
+        let a = s.parse(&sv(&["--max-queue", "0", "--deadline-ms", "0"])).unwrap();
+        assert_eq!(a.usize("max-queue"), 0);
+        assert_eq!(a.u64("deadline-ms"), 0);
+        assert!(s.help_text().contains("--max-queue"));
+        assert!(s.help_text().contains("--deadline-ms"));
     }
 
     #[test]

@@ -88,6 +88,20 @@ impl Config {
         self.str("schedule", default)
     }
 
+    /// The admission-control knob (`max_queue` key): maximum queued
+    /// requests per model before new submissions are shed with an
+    /// explicit queue-full response. 0 = unbounded (no shedding).
+    pub fn max_queue(&self, default: usize) -> usize {
+        self.usize("max_queue", default)
+    }
+
+    /// The default-SLO knob (`deadline_ms` key): deadline budget in
+    /// milliseconds applied to requests that carry none. 0 = no
+    /// deadline.
+    pub fn deadline_ms(&self, default: u64) -> u64 {
+        self.u64("deadline_ms", default)
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.lookup(key)
             .and_then(Json::as_str)
@@ -171,6 +185,17 @@ mod tests {
         assert_eq!(c.schedule("interp"), "interp", "default when unset");
         c.set_override("schedule=fused").unwrap();
         assert_eq!(c.schedule("interp"), "fused");
+    }
+
+    #[test]
+    fn serving_slo_knobs() {
+        let mut c = Config::empty();
+        assert_eq!(c.max_queue(0), 0, "default when unset");
+        assert_eq!(c.deadline_ms(0), 0, "default when unset");
+        c.set_override("max_queue=256").unwrap();
+        c.set_override("deadline_ms=50").unwrap();
+        assert_eq!(c.max_queue(0), 256);
+        assert_eq!(c.deadline_ms(0), 50);
     }
 
     #[test]

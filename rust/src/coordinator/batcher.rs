@@ -2,8 +2,17 @@
 //! `max_batch`, waiting at most `max_wait` after the first request of a
 //! batch arrives. This is the standard production trade-off (latency vs
 //! SIMD/bandwidth utilization) the paper's batch-128 experiments assume.
+//!
+//! The batcher is deadline-aware: when the first request of a batch
+//! carries a deadline, the collection window is cut short so the request
+//! still has `reserve_frac` of its total budget left for compute when the
+//! batch closes (adaptive batch close). Admission control lives in the
+//! server (`ServerHandle::submit` sheds at `max_queue`); the batcher's
+//! side of the contract is decrementing the shared queue-depth counter as
+//! it pops requests.
 
 use super::request::Request;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -11,6 +20,12 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Fraction of the *oldest* request's deadline budget (deadline −
+    /// enqueue) reserved for compute: the batch closes no later than
+    /// `deadline − reserve_frac · budget`, even if `max_wait` has not
+    /// elapsed. Ignored for requests without a deadline. Clamped to
+    /// `[0, 1]` at use time.
+    pub reserve_frac: f64,
 }
 
 impl Default for BatchPolicy {
@@ -18,6 +33,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 128,
             max_wait: Duration::from_millis(2),
+            reserve_frac: 0.25,
         }
     }
 }
@@ -30,32 +46,90 @@ pub enum QueueMsg {
     Shutdown,
 }
 
-/// Collect the next batch from `rx`.
+/// Latest instant at which a batch led by `first` may still be
+/// collecting: `first`'s batcher-arrival time + `max_wait`, cut to
+/// `deadline − reserve_frac · budget` when `first` has a deadline.
+fn close_at(first: &Request, policy: &BatchPolicy) -> Instant {
+    let mut at = Instant::now() + policy.max_wait;
+    if let Some(d) = first.deadline {
+        let budget = d.saturating_duration_since(first.enqueued);
+        let reserve = budget.mul_f64(policy.reserve_frac.clamp(0.0, 1.0));
+        if let Some(cut) = d.checked_sub(reserve) {
+            at = at.min(cut);
+        }
+    }
+    at
+}
+
+/// Saturating decrement of the shared queue-depth counter (never wraps:
+/// unit tests feed the batcher directly without going through
+/// `ServerHandle::submit`'s increment).
+fn pop_depth(depth: &AtomicUsize) {
+    let mut cur = depth.load(Ordering::Relaxed);
+    while cur > 0 {
+        match depth.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Collect the next batch from `rx`, decrementing `depth` per popped
+/// request.
 ///
 /// Blocks until at least one request arrives, then keeps pulling until
-/// the batch is full or `max_wait` has elapsed since the first request.
+/// the batch is full or the close deadline (see [`close_at`]) has passed.
+/// A final non-blocking drain then picks up everything already queued, so
+/// `max_wait = 0` (or an already-expired request deadline) dispatches
+/// immediately with *all* pending requests rather than a batch of one —
+/// and never spins.
+///
 /// Returns `(batch, stop)`; `stop` is true when the dispatcher should
-/// exit after processing the batch (shutdown sentinel or channel closed).
-pub fn next_batch(rx: &mpsc::Receiver<QueueMsg>, policy: &BatchPolicy) -> (Vec<Request>, bool) {
-    let mut batch = Vec::with_capacity(policy.max_batch);
+/// exit after processing the (possibly partial) batch — shutdown sentinel
+/// or channel closed mid-fill both still deliver the requests collected
+/// so far.
+pub fn next_batch(
+    rx: &mpsc::Receiver<QueueMsg>,
+    policy: &BatchPolicy,
+    depth: &AtomicUsize,
+) -> (Vec<Request>, bool) {
+    let mut batch = Vec::with_capacity(policy.max_batch.max(1));
     match rx.recv() {
-        Ok(QueueMsg::Req(first)) => batch.push(first),
+        Ok(QueueMsg::Req(first)) => {
+            pop_depth(depth);
+            batch.push(first);
+        }
         Ok(QueueMsg::Shutdown) | Err(_) => return (batch, true),
     }
-    let deadline = Instant::now() + policy.max_wait;
-    while batch.len() < policy.max_batch {
+    let mut stop = false;
+    let deadline = close_at(&batch[0], policy);
+    while batch.len() < policy.max_batch && !stop {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(QueueMsg::Req(req)) => batch.push(req),
-            Ok(QueueMsg::Shutdown) => return (batch, true),
+            Ok(QueueMsg::Req(req)) => {
+                pop_depth(depth);
+                batch.push(req);
+            }
+            Ok(QueueMsg::Shutdown) => stop = true,
             Err(mpsc::RecvTimeoutError::Timeout) => break,
-            Err(mpsc::RecvTimeoutError::Disconnected) => return (batch, true),
+            Err(mpsc::RecvTimeoutError::Disconnected) => stop = true,
         }
     }
-    (batch, false)
+    // Non-blocking drain of whatever else is already queued.
+    while !stop && batch.len() < policy.max_batch {
+        match rx.try_recv() {
+            Ok(QueueMsg::Req(req)) => {
+                pop_depth(depth);
+                batch.push(req);
+            }
+            Ok(QueueMsg::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => stop = true,
+            Err(mpsc::TryRecvError::Empty) => break,
+        }
+    }
+    (batch, stop)
 }
 
 #[cfg(test)]
@@ -67,17 +141,27 @@ mod tests {
     type ReplyRx = mpsc::Receiver<Result<super::super::Response, super::super::InferenceError>>;
 
     fn req(id: u64) -> (QueueMsg, ReplyRx) {
+        req_with_deadline(id, None)
+    }
+
+    fn req_with_deadline(id: u64, deadline: Option<Duration>) -> (QueueMsg, ReplyRx) {
         let (tx, rx) = channel();
+        let now = Instant::now();
         (
             QueueMsg::Req(Request {
                 id,
                 model: "m".into(),
                 input: vec![0.0],
-                enqueued: Instant::now(),
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
                 reply: tx,
             }),
             rx,
         )
+    }
+
+    fn depth() -> AtomicUsize {
+        AtomicUsize::new(0)
     }
 
     #[test]
@@ -89,14 +173,19 @@ mod tests {
             keep.push(rep);
             tx.send(r).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
-        let (b, stop) = next_batch(&rx, &policy);
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let d = depth();
+        let (b, stop) = next_batch(&rx, &policy, &d);
         assert_eq!(b.len(), 4);
         assert!(!stop);
         assert_eq!(b[0].id, 0);
-        let (b2, _) = next_batch(&rx, &policy);
+        let (b2, _) = next_batch(&rx, &policy, &d);
         assert_eq!(b2.len(), 4);
-        let (b3, _) = next_batch(&rx, &policy);
+        let (b3, _) = next_batch(&rx, &policy, &d);
         assert_eq!(b3.len(), 2, "drains the remainder at timeout");
     }
 
@@ -104,7 +193,7 @@ mod tests {
     fn stops_when_closed() {
         let (tx, rx) = channel::<QueueMsg>();
         drop(tx);
-        let (b, stop) = next_batch(&rx, &BatchPolicy::default());
+        let (b, stop) = next_batch(&rx, &BatchPolicy::default(), &depth());
         assert!(b.is_empty());
         assert!(stop);
     }
@@ -115,17 +204,46 @@ mod tests {
         let (r, _keep) = req(1);
         tx.send(r).unwrap();
         tx.send(QueueMsg::Shutdown).unwrap();
-        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(5) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(5),
+            ..Default::default()
+        };
         let start = Instant::now();
-        let (b, stop) = next_batch(&rx, &policy);
+        let (b, stop) = next_batch(&rx, &policy, &depth());
         assert_eq!(b.len(), 1, "pending request still served");
         assert!(stop);
         assert!(start.elapsed() < Duration::from_secs(1));
         // Next call sees a closed/empty queue state and stops immediately.
         drop(tx);
-        let (b2, stop2) = next_batch(&rx, &policy);
+        let (b2, stop2) = next_batch(&rx, &policy, &depth());
         assert!(b2.is_empty());
         assert!(stop2);
+    }
+
+    #[test]
+    fn shutdown_mid_fill_delivers_partial_batch() {
+        // Several requests already queued, then the sentinel: every
+        // request collected before the sentinel must come back in the
+        // batch (they get processed, not dropped), with stop = true.
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, rep) = req(i);
+            keep.push(rep);
+            tx.send(r).unwrap();
+        }
+        tx.send(QueueMsg::Shutdown).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let (b, stop) = next_batch(&rx, &policy, &depth());
+        assert_eq!(b.len(), 3, "partial batch survives shutdown");
+        assert!(stop);
+        assert!(start.elapsed() < Duration::from_secs(1), "must not wait out max_wait");
     }
 
     #[test]
@@ -133,12 +251,114 @@ mod tests {
         let (tx, rx) = channel();
         let (r, _keep) = req(1);
         tx.send(r).unwrap();
-        let policy = BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(5) };
+        let policy = BatchPolicy {
+            max_batch: 128,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        };
         let start = Instant::now();
-        let (b, stop) = next_batch(&rx, &policy);
+        let (b, stop) = next_batch(&rx, &policy, &depth());
         assert_eq!(b.len(), 1);
         assert!(!stop);
         assert!(start.elapsed() >= Duration::from_millis(4), "must wait out max_wait");
+    }
+
+    #[test]
+    fn zero_wait_dispatches_everything_queued_immediately() {
+        // The regression this pins: max_wait = 0 used to return a batch
+        // of one, leaving queued requests for the next iteration. It must
+        // drain whatever is already queued — immediately, without
+        // spinning or sleeping.
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, rep) = req(i);
+            keep.push(rep);
+            tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 128,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let (b, stop) = next_batch(&rx, &policy, &depth());
+        assert_eq!(b.len(), 5, "must take all queued requests");
+        assert!(!stop);
+        assert!(start.elapsed() < Duration::from_millis(50), "immediate dispatch");
+        // Queue is now empty: the next zero-wait call returns one request
+        // as soon as it arrives.
+        let (r, _keep) = req(9);
+        tx.send(r).unwrap();
+        let (b2, _) = next_batch(&rx, &policy, &depth());
+        assert_eq!(b2.len(), 1);
+    }
+
+    #[test]
+    fn zero_wait_respects_max_batch() {
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..6 {
+            let (r, rep) = req(i);
+            keep.push(rep);
+            tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        };
+        let d = depth();
+        let (b, _) = next_batch(&rx, &policy, &d);
+        assert_eq!(b.len(), 4);
+        let (b2, _) = next_batch(&rx, &policy, &d);
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn deadline_cuts_collection_window() {
+        // First request has a 10 ms deadline and reserve_frac 0.5, so the
+        // batch must close ~5 ms after enqueue even though max_wait is
+        // 5 s.
+        let (tx, rx) = channel();
+        let (r, _keep) = req_with_deadline(1, Some(Duration::from_millis(10)));
+        tx.send(r).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 128,
+            max_wait: Duration::from_secs(5),
+            reserve_frac: 0.5,
+        };
+        let start = Instant::now();
+        let (b, stop) = next_batch(&rx, &policy, &depth());
+        assert_eq!(b.len(), 1);
+        assert!(!stop);
+        assert!(
+            start.elapsed() < Duration::from_millis(500),
+            "deadline budget must cut the 5 s window, waited {:?}",
+            start.elapsed()
+        );
+    }
+
+    #[test]
+    fn expired_deadline_closes_immediately_with_drain() {
+        // A first request whose deadline already passed: close time is in
+        // the past, so the batch dispatches immediately — still draining
+        // the rest of the queue so the server can reject them in one
+        // sweep.
+        let (tx, rx) = channel();
+        let (r, _k0) = req_with_deadline(1, Some(Duration::ZERO));
+        tx.send(r).unwrap();
+        let (r2, _k1) = req(2);
+        tx.send(r2).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 128,
+            max_wait: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        let (b, _) = next_batch(&rx, &policy, &depth());
+        assert_eq!(b.len(), 2);
+        assert!(start.elapsed() < Duration::from_millis(100));
     }
 
     #[test]
@@ -147,11 +367,35 @@ mod tests {
         let (r, _keep) = req(1);
         tx.send(r).unwrap();
         drop(tx);
-        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(5) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(5),
+            ..Default::default()
+        };
         let start = Instant::now();
-        let (b, stop) = next_batch(&rx, &policy);
+        let (b, stop) = next_batch(&rx, &policy, &depth());
         assert_eq!(b.len(), 1);
         assert!(stop);
         assert!(start.elapsed() < Duration::from_secs(1), "must not wait full 5s");
+    }
+
+    #[test]
+    fn depth_counter_decrements_per_pop_and_saturates() {
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, rep) = req(i);
+            keep.push(rep);
+            tx.send(r).unwrap();
+        }
+        let d = AtomicUsize::new(2); // deliberately under-counted
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        };
+        let (b, _) = next_batch(&rx, &policy, &d);
+        assert_eq!(b.len(), 3);
+        assert_eq!(d.load(Ordering::Relaxed), 0, "saturates at zero, never wraps");
     }
 }

@@ -1,8 +1,10 @@
-//! Serving metrics: request counters, batch-size histogram, a
-//! log-bucketed latency histogram with quantile estimation, linked
-//! per-shard timing sinks from batch-sharded engines, and per-model
-//! fusion statistics from block-compiled engines. Lock-free on the hot
-//! path (atomics only; the sink lists are only locked at link and
+//! Serving metrics: request counters, batch-size accounting, fixed-bucket
+//! latency histograms (end-to-end, queue-wait, and compute — the split
+//! that tells an SLO violation caused by queueing from one caused by a
+//! slow engine), shed/deadline-miss counters from admission control,
+//! linked per-shard timing sinks from batch-sharded engines, and
+//! per-model fusion statistics from block-compiled engines. Lock-free on
+//! the hot path (atomics only; the sink lists are only locked at link and
 //! snapshot time); snapshots serialize to JSON.
 
 use crate::exec::fused::FusionStats;
@@ -11,16 +13,106 @@ use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Latency histogram: log-spaced buckets from 1 µs to ~17 s.
+/// Histogram bucket count: log-spaced buckets from 1 µs to ~17 s.
 const N_BUCKETS: usize = 48;
+
+/// A fixed-bucket latency histogram: 48 log-spaced buckets covering
+/// 1 µs … ~17 s (bucket `i` covers `[1µs·1.35^i, 1µs·1.35^{i+1})`). The
+/// bucket edges are compile-time constants — every snapshot and every
+/// process sees the same grid, so quantiles are comparable across runs.
+/// Quantile estimates report the upper edge of the containing bucket
+/// (a ≤ 35% overestimate, never an underestimate).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn bucket_of(latency_secs: f64) -> usize {
+        let us = (latency_secs * 1e6).max(1.0);
+        let i = (us.ln() / 1.35f64.ln()).floor() as isize;
+        i.clamp(0, N_BUCKETS as isize - 1) as usize
+    }
+
+    fn bucket_upper_secs(i: usize) -> f64 {
+        1e-6 * 1.35f64.powi(i as i32 + 1)
+    }
+
+    pub fn observe(&self, secs: f64) {
+        self.observe_n(secs, 1);
+    }
+
+    /// Record `n` observations of the same value (e.g. a batch's compute
+    /// time weighted by the number of requests it served).
+    pub fn observe_n(&self, secs: f64, n: u64) {
+        let b = Self::bucket_of(secs);
+        self.buckets[b].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Estimated quantile (upper edge of the containing bucket); 0.0 when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut cum = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper_secs(i);
+            }
+        }
+        Self::bucket_upper_secs(N_BUCKETS - 1)
+    }
+
+    /// p50/p95/p99 in milliseconds as a JSON object (the shape the TCP
+    /// `metrics` command and the loadgen report share).
+    pub fn quantiles_ms_json(&self) -> Json {
+        Json::obj()
+            .set("p50", self.quantile(0.50) * 1e3)
+            .set("p95", self.quantile(0.95) * 1e3)
+            .set("p99", self.quantile(0.99) * 1e3)
+    }
+}
 
 pub struct Metrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests rejected by admission control (`QueueFull`): the queue
+    /// was at `max_queue` when they arrived. No compute was spent.
+    pub shed: AtomicU64,
+    /// Requests dropped at dispatch because their deadline had already
+    /// passed while they waited in the queue.
+    pub deadline_misses: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
-    latency_buckets: [AtomicU64; N_BUCKETS],
+    /// End-to-end latency (enqueue → reply).
+    latency: Histogram,
+    /// Queue wait (enqueue → batch dispatch).
+    queue_wait: Histogram,
+    /// Engine compute time per batch, weighted by batch size so request
+    /// quantiles are request-weighted, not batch-weighted.
+    compute: Histogram,
     /// Per-model shard-timing sinks from `ParallelEngine`s (see
     /// [`Metrics::link_shard_timings`]).
     shard_sinks: Mutex<Vec<(String, Arc<ShardTimings>)>>,
@@ -42,9 +134,13 @@ impl Metrics {
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
-            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            compute: Histogram::new(),
             shard_sinks: Mutex::new(Vec::new()),
             fusion_stats: Mutex::new(Vec::new()),
         }
@@ -75,20 +171,18 @@ impl Metrics {
         }
     }
 
-    fn bucket_of(latency_secs: f64) -> usize {
-        // Bucket i covers [1µs·1.35^i, 1µs·1.35^{i+1}).
-        let us = (latency_secs * 1e6).max(1.0);
-        let i = (us.ln() / 1.35f64.ln()).floor() as isize;
-        i.clamp(0, N_BUCKETS as isize - 1) as usize
-    }
-
-    fn bucket_upper_secs(i: usize) -> f64 {
-        1e-6 * 1.35f64.powi(i as i32 + 1)
-    }
-
     pub fn observe_latency(&self, latency_secs: f64) {
-        let b = Self::bucket_of(latency_secs);
-        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.latency.observe(latency_secs);
+    }
+
+    pub fn observe_queue_wait(&self, wait_secs: f64) {
+        self.queue_wait.observe(wait_secs);
+    }
+
+    /// Record one batch's engine time, weighted by the `n` requests it
+    /// served.
+    pub fn observe_compute(&self, compute_secs: f64, n: usize) {
+        self.compute.observe_n(compute_secs, n as u64);
     }
 
     pub fn record_batch(&self, batch_size: usize) {
@@ -97,26 +191,20 @@ impl Metrics {
             .fetch_add(batch_size as u64, Ordering::Relaxed);
     }
 
-    /// Estimated latency quantile (upper edge of the containing bucket).
+    /// Estimated end-to-end latency quantile (upper edge of the
+    /// containing bucket).
     pub fn latency_quantile(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self
-            .latency_buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((q * total as f64).ceil() as u64).max(1);
-        let mut cum = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return Self::bucket_upper_secs(i);
-            }
-        }
-        Self::bucket_upper_secs(N_BUCKETS - 1)
+        self.latency.quantile(q)
+    }
+
+    /// Estimated queue-wait quantile.
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        self.queue_wait.quantile(q)
+    }
+
+    /// Estimated compute-time quantile (request-weighted).
+    pub fn compute_quantile(&self, q: f64) -> f64 {
+        self.compute.quantile(q)
     }
 
     /// Mean batch size over all served batches.
@@ -134,10 +222,16 @@ impl Metrics {
             .set("requests", self.requests.load(Ordering::Relaxed))
             .set("responses", self.responses.load(Ordering::Relaxed))
             .set("errors", self.errors.load(Ordering::Relaxed))
+            .set("shed", self.shed.load(Ordering::Relaxed))
+            .set("deadline_misses", self.deadline_misses.load(Ordering::Relaxed))
             .set("batches", self.batches.load(Ordering::Relaxed))
             .set("mean_batch_size", self.mean_batch_size())
-            .set("latency_p50_ms", self.latency_quantile(0.50) * 1e3)
-            .set("latency_p99_ms", self.latency_quantile(0.99) * 1e3);
+            .set("latency_ms", self.latency.quantiles_ms_json())
+            .set("queue_wait_ms", self.queue_wait.quantiles_ms_json())
+            .set("compute_ms", self.compute.quantiles_ms_json())
+            // Kept for dashboards reading the flat pre-histogram keys.
+            .set("latency_p50_ms", self.latency.quantile(0.50) * 1e3)
+            .set("latency_p99_ms", self.latency.quantile(0.99) * 1e3);
         let sinks = self.shard_sinks.lock().expect("shard sinks poisoned");
         if !sinks.is_empty() {
             let mut shards = Json::obj();
@@ -165,10 +259,10 @@ mod tests {
 
     #[test]
     fn bucket_monotone() {
-        assert!(Metrics::bucket_of(1e-6) <= Metrics::bucket_of(1e-3));
-        assert!(Metrics::bucket_of(1e-3) <= Metrics::bucket_of(1.0));
-        assert_eq!(Metrics::bucket_of(0.0), 0);
-        assert_eq!(Metrics::bucket_of(1e9), N_BUCKETS - 1);
+        assert!(Histogram::bucket_of(1e-6) <= Histogram::bucket_of(1e-3));
+        assert!(Histogram::bucket_of(1e-3) <= Histogram::bucket_of(1.0));
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(1e9), N_BUCKETS - 1);
     }
 
     #[test]
@@ -190,6 +284,42 @@ mod tests {
     #[test]
     fn empty_quantile_is_zero() {
         assert_eq!(Metrics::new().latency_quantile(0.5), 0.0);
+        assert_eq!(Histogram::new().quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn weighted_observation_counts() {
+        let h = Histogram::new();
+        h.observe_n(0.010, 7);
+        h.observe(0.010);
+        assert_eq!(h.count(), 8);
+        // All mass in one bucket: every quantile reports its upper edge.
+        assert_eq!(h.quantile(0.5), h.quantile(0.99));
+    }
+
+    #[test]
+    fn queue_wait_and_compute_split_in_snapshot() {
+        let m = Metrics::new();
+        m.observe_queue_wait(0.002);
+        m.observe_compute(0.020, 4);
+        let s = m.snapshot();
+        let qw = s.path(&["queue_wait_ms", "p50"]).unwrap().as_f64().unwrap();
+        let cp = s.path(&["compute_ms", "p50"]).unwrap().as_f64().unwrap();
+        assert!(qw > 1.0 && qw < 10.0, "queue wait p50 {qw}");
+        assert!(cp > 10.0 && cp < 100.0, "compute p50 {cp}");
+        assert!(s.path(&["latency_ms", "p95"]).is_some());
+        assert_eq!(s.get("shed").unwrap().as_u64(), Some(0));
+        assert_eq!(s.get("deadline_misses").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn shed_counters_serialize() {
+        let m = Metrics::new();
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.deadline_misses.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.get("shed").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("deadline_misses").unwrap().as_u64(), Some(2));
     }
 
     #[test]

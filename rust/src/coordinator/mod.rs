@@ -4,14 +4,22 @@
 //! 128, "as is performed in production environments", §VI.B). This module
 //! provides the production shape around the engines of [`crate::exec`]:
 //!
-//! * [`request`] — request/response types and client handles,
+//! * [`request`] — request/response types (with per-request deadlines)
+//!   and client handles,
 //! * [`batcher`] — dynamic batching: collect single requests into batches
-//!   up to `max_batch` with a wait-time bound,
+//!   up to `max_batch` with a wait-time bound, closing early when the
+//!   oldest request's deadline budget is nearly spent,
 //! * [`router`] — model registry + engine selection policy (streaming
-//!   reordered / CSR layer-wise / XLA artifact),
-//! * [`server`] — worker threads wiring queues → batcher → engine,
-//! * [`metrics`] — counters and latency histograms,
+//!   reordered / CSR layer-wise / XLA artifact) and the
+//!   schedule×precision×workers variant builder,
+//! * [`server`] — worker threads wiring queues → batcher → engine, with
+//!   admission control (bounded queue depth, explicit shed responses),
+//! * [`metrics`] — counters and fixed-bucket latency histograms with the
+//!   queue-wait vs compute split,
 //! * [`tcp`] — a line-delimited-JSON TCP front-end and matching client.
+//!
+//! The deterministic load generator that measures this pipeline lives in
+//! [`crate::loadgen`].
 
 pub mod batcher;
 pub mod metrics;
@@ -22,4 +30,4 @@ pub mod tcp;
 
 pub use request::{InferenceError, Request, Response};
 pub use router::{ModelVariant, Router};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{AdmissionPolicy, Server, ServerConfig, ServerHandle};

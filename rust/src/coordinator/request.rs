@@ -13,6 +13,13 @@ pub struct Request {
     pub input: Vec<f32>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
+    /// Completion deadline, if the client set one (or the server's
+    /// default SLO applied one at admission). The batcher closes a batch
+    /// early when the oldest request's budget is nearly spent, and the
+    /// dispatcher sheds requests whose deadline already passed before
+    /// compute starts (they get [`InferenceError::DeadlineExceeded`]
+    /// instead of a stale result).
+    pub deadline: Option<Instant>,
     /// Reply channel.
     pub reply: mpsc::Sender<Result<Response, InferenceError>>,
 }
@@ -28,6 +35,9 @@ pub struct Response {
     pub batch_size: usize,
     /// Total latency in seconds (enqueue → reply).
     pub latency_secs: f64,
+    /// Portion of the latency spent queued (enqueue → batch dispatch);
+    /// the remainder is compute + reply delivery.
+    pub queue_wait_secs: f64,
 }
 
 /// Serving errors surfaced to clients.
@@ -35,8 +45,26 @@ pub struct Response {
 pub enum InferenceError {
     UnknownModel(String),
     BadInputLength { expected: usize, got: usize },
+    /// Admission control shed the request: the model's queue already
+    /// holds `depth` requests (≥ the configured `max_queue`). The client
+    /// should back off and retry; the server did no work.
+    QueueFull { depth: usize },
+    /// The request's deadline passed while it waited in the queue; it was
+    /// dropped without computing.
+    DeadlineExceeded,
     ShuttingDown,
     EngineFailure(String),
+}
+
+impl InferenceError {
+    /// True for load-shedding rejections (admission control / deadline
+    /// misses) as opposed to malformed requests or server faults.
+    pub fn is_shed(&self) -> bool {
+        matches!(
+            self,
+            InferenceError::QueueFull { .. } | InferenceError::DeadlineExceeded
+        )
+    }
 }
 
 impl std::fmt::Display for InferenceError {
@@ -45,6 +73,12 @@ impl std::fmt::Display for InferenceError {
             InferenceError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
             InferenceError::BadInputLength { expected, got } => {
                 write!(f, "bad input length: expected {expected}, got {got}")
+            }
+            InferenceError::QueueFull { depth } => {
+                write!(f, "queue full: request shed at depth {depth}")
+            }
+            InferenceError::DeadlineExceeded => {
+                write!(f, "deadline exceeded while queued")
             }
             InferenceError::ShuttingDown => write!(f, "server is shutting down"),
             InferenceError::EngineFailure(e) => write!(f, "engine failure: {e}"),
@@ -65,5 +99,16 @@ mod tests {
         assert!(InferenceError::BadInputLength { expected: 4, got: 2 }
             .to_string()
             .contains("expected 4"));
+        assert!(InferenceError::QueueFull { depth: 9 }.to_string().contains("depth 9"));
+        assert!(InferenceError::DeadlineExceeded.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn shed_classification() {
+        assert!(InferenceError::QueueFull { depth: 1 }.is_shed());
+        assert!(InferenceError::DeadlineExceeded.is_shed());
+        assert!(!InferenceError::UnknownModel("m".into()).is_shed());
+        assert!(!InferenceError::BadInputLength { expected: 1, got: 2 }.is_shed());
+        assert!(!InferenceError::ShuttingDown.is_shed());
     }
 }

@@ -8,6 +8,8 @@
 use crate::exec::fused::FusionStats;
 use crate::exec::parallel::{ParallelEngine, ShardTimings};
 use crate::exec::Engine;
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::ConnOrder;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -45,6 +47,13 @@ pub struct ModelVariant {
     /// `FusedEngine`; the server surfaces these in `Metrics::snapshot`
     /// under `fusion.<model>`.
     pub fusion: Option<FusionStats>,
+    /// Batch shards of the serving engine (1 = serial). Together with
+    /// `schedule` and `precision` this pins the point in the composition
+    /// matrix; see [`ModelVariant::label`].
+    pub workers: usize,
+    /// One-line human description of the serving engine (set by
+    /// [`ModelVariant::build`]; empty for hand-assembled variants).
+    pub summary: String,
 }
 
 impl ModelVariant {
@@ -58,7 +67,94 @@ impl ModelVariant {
             precision: "f32",
             schedule: "interp",
             fusion: None,
+            workers: 1,
+            summary: String::new(),
         }
+    }
+
+    /// Canonical variant label `"<schedule>-<precision>-w<workers>"`
+    /// (e.g. `"fused-f32-w4"`) — the key the loadgen reports and the
+    /// `perf_serve` bench use to compare engine variants.
+    pub fn label(&self) -> String {
+        format!("{}-{}-w{}", self.schedule, self.precision, self.workers)
+    }
+
+    /// Build a serving variant from the composition-matrix knobs shared
+    /// by `sparseflow serve`, `sparseflow loadgen`, and the serving
+    /// benches: `schedule` ∈ {interp, fused}, `precision` ∈ {f32, i8}
+    /// (i8 is interp-only — the compressed stream has its own record
+    /// format), `workers` > 1 wraps the engine in a batch-sharded
+    /// [`ParallelEngine`].
+    pub fn build(
+        name: &str,
+        net: &Ffnn,
+        order: &ConnOrder,
+        schedule: &str,
+        precision: &str,
+        workers: usize,
+    ) -> anyhow::Result<ModelVariant> {
+        use crate::exec::fused::FusedEngine;
+        use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
+        use crate::exec::stream::StreamingEngine;
+
+        let mut fusion = None;
+        let (engine, summary): (Arc<dyn Engine>, String) = match (precision, schedule) {
+            ("f32", "interp") => (
+                Arc::new(StreamingEngine::new(net, order)) as Arc<dyn Engine>,
+                "f32 per-connection stream interpreter".to_string(),
+            ),
+            ("f32", "fused") => {
+                let fused = FusedEngine::new(net, order);
+                let st = fused.program().stats().clone();
+                let summary = format!(
+                    "fused schedule: {} conns -> {} macro-ops ({:.1} ops/macro-op, \
+                     mean fused run {:.1}, max {})",
+                    st.n_ops,
+                    st.n_macro_ops(),
+                    st.ops_per_macro_op(),
+                    st.mean_run_len(),
+                    st.max_run_len
+                );
+                fusion = Some(st);
+                (Arc::new(fused) as Arc<dyn Engine>, summary)
+            }
+            ("i8", "interp") => {
+                let quant = QuantStreamEngine::new(net, order);
+                let p = quant.program();
+                let summary = format!(
+                    "quantized stream: {:.2} B/conn vs {:.0} B/conn f32 ({:.1}x smaller), \
+                     worst-case weight error {:.2e}",
+                    p.bytes_per_conn(),
+                    QuantStreamProgram::f32_bytes_per_conn(),
+                    p.compression_ratio(),
+                    p.max_weight_error()
+                );
+                (Arc::new(quant) as Arc<dyn Engine>, summary)
+            }
+            ("i8", "fused") => anyhow::bail!(
+                "schedule 'fused' requires precision f32 (the i8 stream is already \
+                 compressed into its own record format; see the composition matrix \
+                 in README.md)"
+            ),
+            ("f32" | "i8", other) => {
+                anyhow::bail!("unknown schedule {other:?} (expected interp or fused)")
+            }
+            (other, _) => anyhow::bail!("unknown precision {other:?} (expected f32 or i8)"),
+        };
+        let prec_tag: &'static str = if precision == "i8" { "i8" } else { "f32" };
+        let sched_tag: &'static str = if schedule == "fused" { "fused" } else { "interp" };
+        let mut variant = if workers > 1 {
+            ModelVariant::sharded(name, engine, workers)
+        } else {
+            ModelVariant::new(name, engine)
+        };
+        variant.precision = prec_tag;
+        variant = variant.with_schedule(sched_tag);
+        if let Some(st) = fusion {
+            variant = variant.with_fusion_stats(st);
+        }
+        variant.summary = summary;
+        Ok(variant)
     }
 
     /// A variant serving a compressed quantized stream engine
@@ -110,6 +206,7 @@ impl ModelVariant {
         let timings = engine.shard_timings();
         let mut variant = ModelVariant::new(name, Arc::new(engine));
         variant.shard_timings = Some(timings);
+        variant.workers = workers.max(1);
         variant
     }
 
@@ -261,6 +358,53 @@ mod tests {
             .with_fusion_stats(stats);
         assert_eq!(sf.schedule, "fused");
         assert!(sf.shard_timings.is_some() && sf.fusion.is_some());
+    }
+
+    #[test]
+    fn labels_encode_composition_point() {
+        let v = ModelVariant::new("m", Arc::new(FakeEngine("stream")));
+        assert_eq!(v.label(), "interp-f32-w1");
+        let q = ModelVariant::quantized("q", Arc::new(FakeEngine("quant-stream")));
+        assert_eq!(q.label(), "interp-i8-w1");
+        let sf = ModelVariant::sharded("sf", Arc::new(FakeEngine("fused-stream")), 4)
+            .with_schedule("fused");
+        assert_eq!(sf.label(), "fused-f32-w4");
+    }
+
+    #[test]
+    fn build_covers_the_composition_matrix() {
+        use crate::ffnn::generate::{random_mlp, MlpSpec};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::util::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from(0xB11D);
+        let net = random_mlp(&MlpSpec::new(2, 10, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+
+        let v = ModelVariant::build("m", &net, &order, "interp", "f32", 1).unwrap();
+        assert_eq!((v.label().as_str(), v.route().name()), ("interp-f32-w1", "stream"));
+        assert!(!v.summary.is_empty());
+
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 1).unwrap();
+        assert_eq!(v.route().name(), "fused-stream");
+        assert!(v.fusion.is_some(), "fused build carries stats");
+
+        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1).unwrap();
+        assert_eq!((v.label().as_str(), v.precision), ("interp-i8-w1", "i8"));
+
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 3).unwrap();
+        assert_eq!(v.label(), "fused-f32-w3");
+        assert_eq!(v.route().name(), "sharded");
+        assert!(v.shard_timings.is_some() && v.fusion.is_some());
+
+        // The sharded + i8 composition keeps its precision tag.
+        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2).unwrap();
+        assert_eq!((v.precision, v.workers), ("i8", 2));
+
+        // Invalid points are rejected, not silently coerced.
+        assert!(ModelVariant::build("m", &net, &order, "fused", "i8", 1).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "jit", "f32", 1).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "interp", "f16", 1).is_err());
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! execution per model, with metrics. One dispatcher thread per model
 //! (runs the batcher loop and executes batches); clients talk to the
 //! server through cheap cloneable [`ServerHandle`]s.
+//!
+//! The pipeline is deadline-aware: admission control sheds submissions
+//! when a model's queue is at `max_queue` (bounded queue depth, explicit
+//! [`InferenceError::QueueFull`] responses instead of unbounded latency),
+//! requests may carry per-request deadlines (or inherit the server's
+//! default SLO), the batcher closes batches early when the oldest
+//! request's budget is nearly spent, and the dispatcher drops requests
+//! whose deadline already passed before compute starts.
 
 use super::batcher::{next_batch, BatchPolicy, QueueMsg};
 use super::metrics::Metrics;
@@ -9,29 +17,45 @@ use super::request::{InferenceError, Request, Response};
 use super::router::Router;
 use crate::exec::batch::BatchMatrix;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-#[derive(Clone, Copy, Debug)]
-pub struct ServerConfig {
-    pub batch: BatchPolicy,
+/// Admission-control policy: the SLO knobs of the serving pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionPolicy {
+    /// Maximum queued (admitted but not yet dispatched) requests per
+    /// model; submissions beyond it are shed with
+    /// [`InferenceError::QueueFull`]. `0` = unbounded (no shedding).
+    /// The check is advisory under concurrency: `k` simultaneous
+    /// submitters can overshoot by at most `k − 1`.
+    pub max_queue: usize,
+    /// Default completion deadline applied at admission when the request
+    /// carries none. `None` = no deadline.
+    pub default_deadline: Option<Duration>,
 }
 
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            batch: BatchPolicy::default(),
-        }
-    }
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerConfig {
+    pub batch: BatchPolicy,
+    pub admission: AdmissionPolicy,
+}
+
+/// Per-model queue endpoint shared by the server and its handles: the
+/// sender plus the live queue-depth counter admission control reads.
+#[derive(Clone)]
+struct ModelQueue {
+    tx: mpsc::Sender<QueueMsg>,
+    depth: Arc<AtomicUsize>,
+    n_inputs: usize,
 }
 
 /// A running server. Dropping it shuts down all dispatcher threads
 /// (pending requests receive `ShuttingDown`).
 pub struct Server {
-    queues: BTreeMap<String, mpsc::Sender<QueueMsg>>,
-    model_inputs: BTreeMap<String, usize>,
+    queues: BTreeMap<String, ModelQueue>,
+    admission: AdmissionPolicy,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     threads: Vec<thread::JoinHandle<()>>,
@@ -43,7 +67,6 @@ impl Server {
         assert!(!router.is_empty(), "server needs at least one model");
         let metrics = Arc::new(Metrics::new());
         let mut queues = BTreeMap::new();
-        let mut model_inputs = BTreeMap::new();
         let mut threads = Vec::new();
 
         for name in router.model_names().into_iter().map(str::to_string).collect::<Vec<_>>() {
@@ -51,7 +74,6 @@ impl Server {
             let engine = Arc::clone(variant.route());
             let engine_name = engine.name();
             let n_inputs = engine.n_inputs();
-            model_inputs.insert(name.clone(), n_inputs);
             if let Some(sink) = &variant.shard_timings {
                 metrics.link_shard_timings(&name, Arc::clone(sink));
             }
@@ -60,14 +82,18 @@ impl Server {
             }
 
             let (tx, rx) = mpsc::channel::<QueueMsg>();
-            queues.insert(name.clone(), tx);
+            let depth = Arc::new(AtomicUsize::new(0));
+            queues.insert(
+                name.clone(),
+                ModelQueue { tx, depth: Arc::clone(&depth), n_inputs },
+            );
             let metrics = Arc::clone(&metrics);
             let policy = config.batch;
             threads.push(
                 thread::Builder::new()
                     .name(format!("sparseflow-dispatch-{name}"))
                     .spawn(move || {
-                        dispatch_loop(rx, engine, engine_name, n_inputs, policy, metrics);
+                        dispatch_loop(rx, depth, engine, engine_name, n_inputs, policy, metrics);
                     })
                     .expect("spawn dispatcher"),
             );
@@ -75,7 +101,7 @@ impl Server {
 
         Server {
             queues,
-            model_inputs,
+            admission: config.admission,
             metrics,
             next_id: Arc::new(AtomicU64::new(1)),
             threads,
@@ -84,12 +110,8 @@ impl Server {
 
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
-            queues: self
-                .queues
-                .iter()
-                .map(|(k, v)| (k.clone(), v.clone()))
-                .collect(),
-            model_inputs: self.model_inputs.clone(),
+            queues: self.queues.clone(),
+            admission: self.admission,
             metrics: Arc::clone(&self.metrics),
             next_id: Arc::clone(&self.next_id),
         }
@@ -105,8 +127,8 @@ impl Drop for Server {
         // Send explicit shutdown sentinels: live client handles hold
         // sender clones, so merely dropping our senders would not close
         // the channels.
-        for tx in self.queues.values() {
-            let _ = tx.send(QueueMsg::Shutdown);
+        for q in self.queues.values() {
+            let _ = q.tx.send(QueueMsg::Shutdown);
         }
         self.queues.clear();
         for t in self.threads.drain(..) {
@@ -117,6 +139,7 @@ impl Drop for Server {
 
 fn dispatch_loop(
     rx: mpsc::Receiver<QueueMsg>,
+    depth: Arc<AtomicUsize>,
     engine: Arc<dyn crate::exec::Engine>,
     engine_name: &'static str,
     n_inputs: usize,
@@ -124,8 +147,10 @@ fn dispatch_loop(
     metrics: Arc<Metrics>,
 ) {
     loop {
-        let (batch, stop) = next_batch(&rx, &policy);
-        // Validate inputs; reject bad ones without poisoning the batch.
+        let (batch, stop) = next_batch(&rx, &policy, &depth);
+        let dispatched = Instant::now();
+        // Validate inputs and deadlines; reject bad/expired ones without
+        // poisoning the batch.
         let mut valid: Vec<Request> = Vec::with_capacity(batch.len());
         for req in batch {
             if req.input.len() != n_inputs {
@@ -134,6 +159,17 @@ fn dispatch_loop(
                     expected: n_inputs,
                     got: req.input.len(),
                 }));
+            } else if req.deadline.is_some_and(|d| d <= dispatched) {
+                // Budget already spent queueing: computing would only
+                // produce a result the client no longer wants. Still
+                // record the queue wait — these are precisely the
+                // longest-queued requests, and dropping them from the
+                // histogram would make the queue-wait tail look healthy
+                // exactly when it is not.
+                metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .observe_queue_wait(dispatched.duration_since(req.enqueued).as_secs_f64());
+                let _ = req.reply.send(Err(InferenceError::DeadlineExceeded));
             } else {
                 valid.push(req);
             }
@@ -146,6 +182,9 @@ fn dispatch_loop(
         }
         let bsize = valid.len();
         metrics.record_batch(bsize);
+        for req in &valid {
+            metrics.observe_queue_wait(dispatched.duration_since(req.enqueued).as_secs_f64());
+        }
 
         // Assemble n_inputs × bsize (row per input neuron).
         let mut x = BatchMatrix::zeros(n_inputs, bsize);
@@ -154,7 +193,9 @@ fn dispatch_loop(
                 x.row_mut(row)[col] = v;
             }
         }
+        let compute_start = Instant::now();
         let y = engine.infer(&x);
+        metrics.observe_compute(compute_start.elapsed().as_secs_f64(), bsize);
         let n_out = y.rows();
 
         let now = Instant::now();
@@ -169,6 +210,7 @@ fn dispatch_loop(
                 engine: engine_name,
                 batch_size: bsize,
                 latency_secs: latency,
+                queue_wait_secs: dispatched.duration_since(req.enqueued).as_secs_f64(),
             }));
         }
         if stop {
@@ -180,35 +222,62 @@ fn dispatch_loop(
 /// Cheap cloneable client handle.
 #[derive(Clone)]
 pub struct ServerHandle {
-    queues: BTreeMap<String, mpsc::Sender<QueueMsg>>,
-    model_inputs: BTreeMap<String, usize>,
+    queues: BTreeMap<String, ModelQueue>,
+    admission: AdmissionPolicy,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
 }
 
 impl ServerHandle {
     /// Submit one request and return the reply receiver (async-style).
+    /// The server's default deadline (if any) applies.
     pub fn submit(
         &self,
         model: &str,
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Response, InferenceError>>, InferenceError> {
+        self.submit_with_deadline(model, input, None)
+    }
+
+    /// Submit with an explicit deadline budget (overrides the server's
+    /// default; `None` falls back to it). Sheds immediately with
+    /// [`InferenceError::QueueFull`] when the model's queue is at
+    /// `max_queue`.
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<Response, InferenceError>>, InferenceError> {
         let queue = self
             .queues
             .get(model)
             .ok_or_else(|| InferenceError::UnknownModel(model.to_string()))?;
+        if self.admission.max_queue > 0 {
+            let cur = queue.depth.load(Ordering::Relaxed);
+            if cur >= self.admission.max_queue {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(InferenceError::QueueFull { depth: cur });
+            }
+        }
+        let now = Instant::now();
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             model: model.to_string(),
             input,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.or(self.admission.default_deadline).map(|d| now + d),
             reply: tx,
         };
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        queue
-            .send(QueueMsg::Req(req))
-            .map_err(|_| InferenceError::ShuttingDown)?;
+        queue.depth.fetch_add(1, Ordering::Relaxed);
+        queue.tx.send(QueueMsg::Req(req)).map_err(|_| {
+            // Dispatcher gone (shutdown): undo the depth bump so later
+            // submitters are not spuriously shed.
+            queue.depth.fetch_sub(1, Ordering::Relaxed);
+            InferenceError::ShuttingDown
+        })?;
         Ok(rx)
     }
 
@@ -218,8 +287,24 @@ impl ServerHandle {
         rx.recv().map_err(|_| InferenceError::ShuttingDown)?
     }
 
+    /// Blocking single inference with an explicit deadline budget.
+    pub fn infer_with_deadline(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Response, InferenceError> {
+        let rx = self.submit_with_deadline(model, input, deadline)?;
+        rx.recv().map_err(|_| InferenceError::ShuttingDown)?
+    }
+
     pub fn n_inputs(&self, model: &str) -> Option<usize> {
-        self.model_inputs.get(model).copied()
+        self.queues.get(model).map(|q| q.n_inputs)
+    }
+
+    /// Currently queued (admitted, not yet dispatched) requests.
+    pub fn queue_depth(&self, model: &str) -> Option<usize> {
+        self.queues.get(model).map(|q| q.depth.load(Ordering::Relaxed))
     }
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Json {
@@ -233,7 +318,8 @@ impl ServerHandle {
 
 /// Shared helper for examples/benches: run `n_requests` through the
 /// server from `clients` concurrent client threads, returning per-request
-/// latencies (seconds).
+/// latencies (seconds). For arrival processes, deadlines and shed
+/// accounting use [`crate::loadgen`] instead.
 pub fn drive_load(
     handle: &ServerHandle,
     model: &str,
@@ -277,6 +363,24 @@ mod tests {
         }
     }
 
+    /// Doubler with a fixed per-batch delay — for saturating the queue.
+    struct SlowDoubler(Duration);
+    impl Engine for SlowDoubler {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            std::thread::sleep(self.0);
+            Doubler.infer(x)
+        }
+        fn name(&self) -> &'static str {
+            "slow-doubler"
+        }
+        fn n_inputs(&self) -> usize {
+            3
+        }
+        fn n_outputs(&self) -> usize {
+            3
+        }
+    }
+
     fn doubler_server() -> Server {
         let mut router = Router::new();
         router.register(ModelVariant::new("d", Arc::new(Doubler)));
@@ -291,6 +395,7 @@ mod tests {
         assert_eq!(r.output, vec![2.0, 4.0, 6.0]);
         assert_eq!(r.engine, "doubler");
         assert!(r.latency_secs >= 0.0);
+        assert!(r.queue_wait_secs >= 0.0 && r.queue_wait_secs <= r.latency_secs);
     }
 
     #[test]
@@ -330,6 +435,7 @@ mod tests {
         let m = h.metrics_snapshot();
         assert_eq!(m.get("responses").unwrap().as_u64(), Some(200));
         assert_eq!(m.get("errors").unwrap().as_u64(), Some(0));
+        assert_eq!(m.get("shed").unwrap().as_u64(), Some(0));
     }
 
     #[test]
@@ -342,7 +448,9 @@ mod tests {
                 batch: BatchPolicy {
                     max_batch: 16,
                     max_wait: std::time::Duration::from_millis(20),
+                    ..Default::default()
                 },
+                ..Default::default()
             },
         );
         let h = server.handle();
@@ -359,6 +467,118 @@ mod tests {
             "expected batching, got mean {}",
             server.metrics().mean_batch_size()
         );
+        // The queue-wait/compute split is populated.
+        let s = h.metrics_snapshot();
+        assert!(s.path(&["queue_wait_ms", "p99"]).unwrap().as_f64().unwrap() >= 0.0);
+        assert!(s.path(&["compute_ms", "p99"]).unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_under_saturation() {
+        // Slow engine + tiny bounded queue + a burst far above capacity:
+        // admission control must shed (QueueFull), every admitted request
+        // must still complete, and nothing may deadlock.
+        let mut router = Router::new();
+        router.register(ModelVariant::new(
+            "d",
+            Arc::new(SlowDoubler(Duration::from_millis(20))),
+        ));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                admission: AdmissionPolicy { max_queue: 8, ..Default::default() },
+            },
+        );
+        let h = server.handle();
+        let mut pending = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..64 {
+            match h.submit("d", vec![i as f32, 0.0, 0.0]) {
+                Ok(rx) => pending.push(rx),
+                Err(InferenceError::QueueFull { .. }) => shed += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(shed > 0, "64 instant submissions into max_queue=8 must shed");
+        for rx in pending {
+            let r = rx.recv().expect("admitted request must be answered").unwrap();
+            assert_eq!(r.output.len(), 3);
+        }
+        let s = h.metrics_snapshot();
+        assert_eq!(s.get("shed").unwrap().as_u64(), Some(shed as u64));
+        assert_eq!(
+            s.get("responses").unwrap().as_u64(),
+            Some((64 - shed) as u64),
+            "every admitted request answered"
+        );
+    }
+
+    #[test]
+    fn expired_deadline_is_dropped_not_computed() {
+        // Zero budget: by the time the dispatcher sees the request its
+        // deadline has passed, so it must answer DeadlineExceeded.
+        let server = doubler_server();
+        let h = server.handle();
+        let err = h
+            .infer_with_deadline("d", vec![1.0, 1.0, 1.0], Some(Duration::ZERO))
+            .unwrap_err();
+        assert_eq!(err, InferenceError::DeadlineExceeded);
+        let s = h.metrics_snapshot();
+        assert_eq!(s.get("deadline_misses").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("responses").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn generous_deadline_is_served() {
+        let server = doubler_server();
+        let h = server.handle();
+        let r = h
+            .infer_with_deadline("d", vec![1.0, 1.0, 1.0], Some(Duration::from_secs(30)))
+            .unwrap();
+        assert_eq!(r.output, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn default_deadline_applies_at_admission() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("d", Arc::new(Doubler)));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                admission: AdmissionPolicy {
+                    default_deadline: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        // No per-request deadline: the server's default (zero budget)
+        // applies, so the request must be dropped.
+        assert_eq!(
+            h.infer("d", vec![0.0; 3]).unwrap_err(),
+            InferenceError::DeadlineExceeded
+        );
+        // An explicit generous deadline overrides the default.
+        let r = h
+            .infer_with_deadline("d", vec![0.0; 3], Some(Duration::from_secs(30)))
+            .unwrap();
+        assert_eq!(r.output, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn queue_depth_visible_and_drains() {
+        let server = doubler_server();
+        let h = server.handle();
+        assert_eq!(h.queue_depth("d"), Some(0));
+        assert_eq!(h.queue_depth("nope"), None);
+        let _ = h.infer("d", vec![0.0; 3]).unwrap();
+        assert_eq!(h.queue_depth("d"), Some(0), "drained after serving");
     }
 
     #[test]
@@ -371,7 +591,9 @@ mod tests {
                 batch: BatchPolicy {
                     max_batch: 16,
                     max_wait: std::time::Duration::from_millis(20),
+                    ..Default::default()
                 },
+                ..Default::default()
             },
         );
         let h = server.handle();

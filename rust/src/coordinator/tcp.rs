@@ -1,11 +1,22 @@
 //! TCP front-end: newline-delimited JSON over a socket.
 //!
 //! Protocol (one JSON object per line):
-//!   → `{"model": "bert", "input": [..]}`           inference
+//!   → `{"model": "bert", "input": [..], "deadline_ms": 50}`  inference
+//!     (`deadline_ms` optional: a positive value tightens the request's
+//!     deadline; 0 is the same as omitting it — the server's default
+//!     SLO, an operator policy, still applies and cannot be disabled
+//!     by clients)
 //!   → `{"cmd": "metrics"}`                          metrics snapshot
 //!   → `{"cmd": "models"}`                           registered models
-//!   ← `{"ok": true, "output": [...], "engine": "...", "latency_ms": ...}`
-//!   ← `{"ok": false, "error": "..."}`
+//!   ← `{"ok": true, "output": [...], "engine": "...",
+//!      "latency_ms": ..., "queue_wait_ms": ...}`
+//!   ← `{"ok": false, "error": "..."}`               malformed request
+//!   ← `{"ok": false, "error": "...", "shed": true}` load shed (queue
+//!     full or deadline missed) — back off and retry
+//!
+//! Every error is answered on the same connection; the connection stays
+//! usable afterwards. Lines longer than [`MAX_LINE_BYTES`] are rejected
+//! without parsing (oversized-request guard).
 //!
 //! One thread per connection (the dynamic batcher merges concurrent
 //! requests across connections, so per-connection threads are cheap).
@@ -17,6 +28,12 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
+
+/// Maximum accepted request-line length (1 MiB ≈ a 100k-element input
+/// vector): longer lines are answered with `{"ok": false, ...}` without
+/// being parsed, so a misbehaving client cannot balloon server memory.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// A running TCP front-end; dropping stops accepting new connections.
 pub struct TcpFrontend {
@@ -75,19 +92,76 @@ impl Drop for TcpFrontend {
     }
 }
 
+/// One line read through the capped reader.
+enum LineRead {
+    /// Clean end of stream.
+    Eof,
+    Line(String),
+    /// The line exceeded [`MAX_LINE_BYTES`]; only its length survives —
+    /// the excess bytes were consumed and discarded, never buffered.
+    Oversized(usize),
+    /// The line was not valid UTF-8.
+    BadUtf8,
+}
+
+/// Read one newline-terminated line while buffering at most
+/// `MAX_LINE_BYTES + 1` bytes: the guard must hold at the *read* layer —
+/// checking after `BufRead::lines` has already accumulated the line
+/// would let a client without newlines balloon server memory.
+fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut total = 0usize;
+    let finish = |buf: Vec<u8>, total: usize| {
+        if total > MAX_LINE_BYTES {
+            return LineRead::Oversized(total);
+        }
+        match String::from_utf8(buf) {
+            Ok(s) => LineRead::Line(s),
+            Err(_) => LineRead::BadUtf8,
+        }
+    };
+    loop {
+        let (used, found_nl) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(if total == 0 { LineRead::Eof } else { finish(buf, total) });
+            }
+            let (slice, used, found_nl) = match chunk.iter().position(|&b| b == b'\n') {
+                Some(nl) => (&chunk[..nl], nl + 1, true),
+                None => (chunk, chunk.len(), false),
+            };
+            // Keep at most one byte past the cap (enough to detect the
+            // overflow); anything further is counted but dropped.
+            let room = (MAX_LINE_BYTES + 1).saturating_sub(buf.len());
+            buf.extend_from_slice(&slice[..slice.len().min(room)]);
+            total += slice.len();
+            (used, found_nl)
+        };
+        reader.consume(used);
+        if found_nl {
+            return Ok(finish(buf, total));
+        }
+    }
+}
+
 fn handle_conn(stream: TcpStream, handle: ServerHandle) -> anyhow::Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break, // client went away
+    let mut reader = BufReader::new(stream);
+    loop {
+        let reply = match read_line_capped(&mut reader) {
+            Err(_) | Ok(LineRead::Eof) => break, // client went away
+            Ok(LineRead::Line(line)) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                process_line(&line, &handle)
+            }
+            Ok(LineRead::Oversized(len)) => err_json(&format!(
+                "oversized request: {len} bytes exceeds the {MAX_LINE_BYTES}-byte line limit"
+            )),
+            Ok(LineRead::BadUtf8) => err_json("request line is not valid utf-8"),
         };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = process_line(&line, &handle);
         writer.write_all(reply.to_string_compact().as_bytes())?;
         writer.write_all(b"\n")?;
     }
@@ -96,6 +170,12 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle) -> anyhow::Result<()> {
 }
 
 fn process_line(line: &str, handle: &ServerHandle) -> Json {
+    if line.len() > MAX_LINE_BYTES {
+        return err_json(&format!(
+            "oversized request: {} bytes exceeds the {MAX_LINE_BYTES}-byte line limit",
+            line.len()
+        ));
+    }
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return err_json(&format!("bad json: {e}")),
@@ -127,7 +207,27 @@ fn process_line(line: &str, handle: &ServerHandle) -> Json {
         }
         None => return err_json("missing 'input'"),
     };
-    match handle.infer(model, input) {
+    // 0 is equivalent to omitting the field (no per-request deadline;
+    // the server's default SLO still applies — clients cannot disable
+    // operator policy), so clients mirroring the CLI's "0 = none"
+    // convention are never shed by accident; bounded above (24 h) so a
+    // hostile value cannot overflow the Duration conversion.
+    const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+    let deadline = match req.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms == 0.0 => None,
+            Some(ms) if (0.0..=MAX_DEADLINE_MS).contains(&ms) => {
+                Some(Duration::from_secs_f64(ms / 1e3))
+            }
+            _ => {
+                return err_json(
+                    "bad 'deadline_ms': expected a number in [0, 86400000]",
+                )
+            }
+        },
+    };
+    match handle.infer_with_deadline(model, input, deadline) {
         Ok(resp) => Json::obj()
             .set("ok", true)
             .set(
@@ -136,8 +236,15 @@ fn process_line(line: &str, handle: &ServerHandle) -> Json {
             )
             .set("engine", resp.engine)
             .set("batch_size", resp.batch_size)
-            .set("latency_ms", resp.latency_secs * 1e3),
-        Err(e) => err_json(&e.to_string()),
+            .set("latency_ms", resp.latency_secs * 1e3)
+            .set("queue_wait_ms", resp.queue_wait_secs * 1e3),
+        Err(e) => {
+            let mut j = err_json(&e.to_string());
+            if e.is_shed() {
+                j = j.set("shed", true);
+            }
+            j
+        }
     }
 }
 
@@ -197,6 +304,37 @@ mod tests {
     use super::*;
 
     #[test]
+    fn capped_reader_bounds_memory_and_recovers() {
+        // A 3 MiB line: reported oversized with its true length while
+        // buffering only ~1 MiB; the next line is still readable.
+        let mut data = vec![b'a'; 3 * (1 << 20)];
+        data.push(b'\n');
+        data.extend_from_slice(b"{\"cmd\": \"models\"}\n");
+        let mut r = std::io::Cursor::new(data);
+        match read_line_capped(&mut r).unwrap() {
+            LineRead::Oversized(len) => assert_eq!(len, 3 * (1 << 20)),
+            _ => panic!("expected oversized"),
+        }
+        match read_line_capped(&mut r).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "{\"cmd\": \"models\"}"),
+            _ => panic!("expected line"),
+        }
+        assert!(matches!(read_line_capped(&mut r).unwrap(), LineRead::Eof));
+
+        // Oversized final line without a trailing newline still reports.
+        let mut r = std::io::Cursor::new(vec![b'b'; MAX_LINE_BYTES + 5]);
+        assert!(matches!(
+            read_line_capped(&mut r).unwrap(),
+            LineRead::Oversized(len) if len == MAX_LINE_BYTES + 5
+        ));
+
+        // Invalid UTF-8 is flagged without killing the stream.
+        let mut r = std::io::Cursor::new(vec![0xff, 0xfe, b'\n', b'x', b'\n']);
+        assert!(matches!(read_line_capped(&mut r).unwrap(), LineRead::BadUtf8));
+        assert!(matches!(read_line_capped(&mut r).unwrap(), LineRead::Line(l) if l == "x"));
+    }
+
+    #[test]
     fn process_line_validates() {
         // No server needed for pure validation failures.
         let handle = {
@@ -246,5 +384,34 @@ mod tests {
 
         let metrics = process_line(r#"{"cmd": "metrics"}"#, &handle);
         assert!(metrics.path(&["metrics", "responses"]).is_some());
+
+        // Deadline plumbing: a generous deadline is served (with the
+        // queue-wait split in the reply); a microscopic deadline is shed
+        // with the machine-readable marker; an explicit 0 is equivalent
+        // to omitting the field (no per-request deadline; this server
+        // has no default SLO, so the request is served).
+        let ok = process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": 30000}"#, &handle);
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+        assert!(ok.get("queue_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let late =
+            process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": 0.0001}"#, &handle);
+        assert_eq!(late.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(late.get("shed").unwrap().as_bool(), Some(true));
+        let off = process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": 0}"#, &handle);
+        assert_eq!(off.get("ok").unwrap().as_bool(), Some(true), "0 = deadline off");
+        let bad_deadline =
+            process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": -5}"#, &handle);
+        assert_eq!(bad_deadline.get("ok").unwrap().as_bool(), Some(false));
+        assert!(bad_deadline.get("shed").is_none(), "malformed, not shed");
+        let overflow =
+            process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": 1e300}"#, &handle);
+        assert_eq!(overflow.get("ok").unwrap().as_bool(), Some(false), "no panic on overflow");
+
+        // Oversized-line guard: rejected without parsing.
+        let huge = format!(r#"{{"model": "m", "input": [{}1]}}"#, "0, ".repeat(400_000));
+        assert!(huge.len() > MAX_LINE_BYTES);
+        let over = process_line(&huge, &handle);
+        assert_eq!(over.get("ok").unwrap().as_bool(), Some(false));
+        assert!(over.get("error").unwrap().as_str().unwrap().contains("oversized"));
     }
 }

@@ -46,6 +46,14 @@ pub struct Ffnn {
 /// Construction-time validation failure.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum GraphError {
+    /// `kinds` and `initial` disagree on the neuron count.
+    LengthMismatch { kinds: usize, initial: usize },
+    /// Layer metadata does not cover every neuron
+    /// ([`Ffnn::try_with_layers`]).
+    LayerLengthMismatch { layers: usize, neurons: usize },
+    /// A connection does not cross strictly increasing layers
+    /// ([`Ffnn::try_with_layers`]).
+    NonIncreasingLayers { conn: usize },
     /// A connection endpoint is out of range.
     BadEndpoint { conn: usize },
     /// An input neuron has incoming connections.
@@ -62,6 +70,15 @@ pub enum GraphError {
 impl std::fmt::Display for GraphError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            GraphError::LengthMismatch { kinds, initial } => {
+                write!(f, "kinds length {kinds} != initial length {initial}")
+            }
+            GraphError::LayerLengthMismatch { layers, neurons } => {
+                write!(f, "layer_of length {layers} != {neurons} neurons")
+            }
+            GraphError::NonIncreasingLayers { conn } => {
+                write!(f, "connection {conn} does not cross strictly increasing layers")
+            }
             GraphError::BadEndpoint { conn } => {
                 write!(f, "connection {conn}: endpoint out of range")
             }
@@ -87,7 +104,14 @@ impl Ffnn {
         initial: Vec<f32>,
         conns: Vec<Conn>,
     ) -> Result<Ffnn, GraphError> {
-        assert_eq!(kinds.len(), initial.len(), "kinds/initial length mismatch");
+        if kinds.len() != initial.len() {
+            // An error, not an assert: untrusted artifact loaders feed
+            // this constructor and must be able to reject bad files.
+            return Err(GraphError::LengthMismatch {
+                kinds: kinds.len(),
+                initial: initial.len(),
+            });
+        }
         let n = kinds.len();
 
         for (ci, c) in conns.iter().enumerate() {
@@ -146,7 +170,9 @@ impl Ffnn {
 
     /// Attach layer metadata (used by layered generators and the
     /// layer-wise engines). `layer_of[i]` must be consistent with edges
-    /// (strictly increasing along every connection).
+    /// (strictly increasing along every connection) — only
+    /// debug-asserted here; untrusted inputs go through
+    /// [`Ffnn::try_with_layers`].
     pub fn with_layers(mut self, layer_of: Vec<u32>) -> Ffnn {
         debug_assert_eq!(layer_of.len(), self.n_neurons());
         debug_assert!(self
@@ -155,6 +181,26 @@ impl Ffnn {
             .all(|c| layer_of[c.src as usize] < layer_of[c.dst as usize]));
         self.layer_of = Some(layer_of);
         self
+    }
+
+    /// Validating variant of [`Ffnn::with_layers`] for untrusted input
+    /// (artifact loading): rejects inconsistent layer metadata with an
+    /// error instead of a (debug-only) panic.
+    pub fn try_with_layers(self, layer_of: Vec<u32>) -> Result<Ffnn, GraphError> {
+        if layer_of.len() != self.n_neurons() {
+            return Err(GraphError::LayerLengthMismatch {
+                layers: layer_of.len(),
+                neurons: self.n_neurons(),
+            });
+        }
+        if let Some(conn) = self
+            .conns
+            .iter()
+            .position(|c| layer_of[c.src as usize] >= layer_of[c.dst as usize])
+        {
+            return Err(GraphError::NonIncreasingLayers { conn });
+        }
+        Ok(self.with_layers(layer_of))
     }
 
     // ----- sizes (paper notation) ----------------------------------------
@@ -455,6 +501,33 @@ mod tests {
             ],
         )
         .unwrap()
+    }
+
+    #[test]
+    fn length_mismatch_is_an_error_not_a_panic() {
+        let err = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Output],
+            vec![0.0],
+            vec![Conn { src: 0, dst: 1, weight: 1.0 }],
+        )
+        .unwrap_err();
+        assert_eq!(err, GraphError::LengthMismatch { kinds: 2, initial: 1 });
+    }
+
+    #[test]
+    fn try_with_layers_validates() {
+        assert_eq!(
+            diamond().try_with_layers(vec![0, 0]).unwrap_err(),
+            GraphError::LayerLengthMismatch { layers: 2, neurons: 4 }
+        );
+        // Flat layers violate strict increase on the first connection.
+        assert_eq!(
+            diamond().try_with_layers(vec![0, 0, 0, 0]).unwrap_err(),
+            GraphError::NonIncreasingLayers { conn: 0 }
+        );
+        // A consistent layering is accepted and attached.
+        let net = diamond().try_with_layers(vec![0, 0, 1, 2]).unwrap();
+        assert_eq!(net.n_layers(), Some(3));
     }
 
     #[test]

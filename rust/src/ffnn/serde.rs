@@ -104,13 +104,16 @@ pub fn net_from_json(j: &Json) -> anyhow::Result<(Ffnn, Option<ConnOrder>)> {
         })
         .collect::<anyhow::Result<_>>()?;
 
+    // The constructors validate (length mismatch, bad layer metadata,
+    // bad endpoints, cycles, ...) and return errors — a corrupted file
+    // is rejected, never a panic.
     let mut net = Ffnn::new(kinds, initial, conns).map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(layers) = j.get("layer_of").and_then(Json::as_arr) {
         let layer_of: Vec<u32> = layers
             .iter()
             .map(|l| l.as_u64().map(|v| v as u32).ok_or_else(|| anyhow::anyhow!("bad layer")))
             .collect::<anyhow::Result<_>>()?;
-        net = net.with_layers(layer_of);
+        net = net.try_with_layers(layer_of).map_err(|e| anyhow::anyhow!("{e}"))?;
     }
     let order = match j.get("order").and_then(Json::as_arr) {
         Some(arr) => {

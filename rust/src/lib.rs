@@ -27,8 +27,11 @@
 //!    interpreter).
 //! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
 //!    artifacts and executes them from Rust.
-//! 7. [`coordinator`] — batched inference serving: request queue, dynamic
-//!    batcher, engine router, worker pool, metrics, TCP front-end.
+//! 7. [`coordinator`] — batched inference serving: request queue,
+//!    deadline-aware dynamic batcher with admission control, engine
+//!    router, worker pool, latency-split metrics, TCP front-end.
+//! 8. [`loadgen`] — deterministic closed/open-loop load generator that
+//!    measures the serving pipeline per engine variant.
 //!
 //! Everything is deterministic given a seed; see `util::rng`.
 //!
@@ -55,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod exec;
 pub mod ffnn;
+pub mod loadgen;
 pub mod memory;
 pub mod reorder;
 pub mod runtime;

@@ -1,0 +1,567 @@
+//! Deterministic load generator for the serving coordinator.
+//!
+//! EIE and SparseNN evaluate sparse-inference engines under end-to-end
+//! serving load, not just kernel microbenchmarks; this module does the
+//! same for the engine lineup behind the deadline-aware pipeline. Two
+//! arrival processes, both seeded through [`crate::util::rng::Pcg64`] so
+//! the *workload* (arrival schedule + request inputs) is exactly
+//! reproducible run to run:
+//!
+//! * **closed loop** — `clients` concurrent clients, each issuing its
+//!   next request the moment the previous one completes (throughput-
+//!   bounded by the server; the classic saturation probe), and
+//! * **open loop** — Poisson-like arrivals at a target QPS (exponential
+//!   inter-arrival gaps), which keeps offering load even when the server
+//!   falls behind — the regime where bounded queues and deadline
+//!   shedding matter.
+//!
+//! Outcomes are tallied per request (served / shed / deadline-missed /
+//! error) and summarized with exact nearest-rank percentiles of the
+//! end-to-end latency and its queue-wait component — the numbers
+//! `sparseflow loadgen` prints per engine variant and
+//! `benches/perf_serve.rs` publishes to `BENCH_PERF_SERVE.json`.
+
+use crate::coordinator::request::{InferenceError, Response};
+use crate::coordinator::ServerHandle;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Arrival process of the synthetic workload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// `clients` concurrent closed-loop clients (think time zero).
+    Closed { clients: usize },
+    /// Open-loop Poisson-like arrivals at `qps` requests/second.
+    Open { qps: f64 },
+}
+
+impl Arrival {
+    pub fn describe(&self) -> String {
+        match self {
+            Arrival::Closed { clients } => format!("closed-{clients}"),
+            Arrival::Open { qps } => format!("open-{qps:.0}qps"),
+        }
+    }
+}
+
+/// One load-generation run: arrival process, request budget, seed, SLO.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub arrival: Arrival,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Workload seed: arrival schedule and request inputs derive from it.
+    pub seed: u64,
+    /// Per-request deadline budget handed to the server (None = no SLO).
+    pub deadline: Option<Duration>,
+    /// Wall-clock cap in seconds (0 = no cap): closed-loop clients stop
+    /// issuing new requests once it elapses, and the open-loop scheduler
+    /// stops at the first arrival offset past it (never sleeping
+    /// beyond the cap). Lets CI run "1 second of load" regardless of
+    /// machine speed.
+    pub max_secs: f64,
+}
+
+impl LoadSpec {
+    pub fn closed(clients: usize, requests: usize, seed: u64) -> LoadSpec {
+        LoadSpec {
+            arrival: Arrival::Closed { clients },
+            requests,
+            seed,
+            deadline: None,
+            max_secs: 0.0,
+        }
+    }
+
+    pub fn open(qps: f64, requests: usize, seed: u64) -> LoadSpec {
+        LoadSpec {
+            arrival: Arrival::Open { qps },
+            requests,
+            seed,
+            deadline: None,
+            max_secs: 0.0,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> LoadSpec {
+        self.deadline = deadline;
+        self
+    }
+
+    pub fn with_max_secs(mut self, secs: f64) -> LoadSpec {
+        self.max_secs = secs;
+        self
+    }
+}
+
+/// Deterministic input vector for request `i` of a seeded workload:
+/// standard-normal entries from a per-request generator, so any request
+/// can be regenerated in isolation (workers need no shared RNG state).
+pub fn input_for(seed: u64, i: u64, n_inputs: usize) -> Vec<f32> {
+    let mut rng = Pcg64::seed_from(seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..n_inputs).map(|_| rng.normal() as f32).collect()
+}
+
+/// Deterministic open-loop arrival offsets (seconds from run start):
+/// cumulative exponential gaps with rate `qps` — the Poisson process the
+/// open-loop driver replays.
+pub fn open_arrivals(qps: f64, n: usize, seed: u64) -> Vec<f64> {
+    assert!(qps > 0.0, "open-loop arrivals need qps > 0");
+    let mut rng = Pcg64::seed_from(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // f64() < 1.0 strictly, so the log argument is > 0.
+        t += -(1.0 - rng.f64()).ln() / qps;
+        out.push(t);
+    }
+    out
+}
+
+/// Per-request outcome classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OutcomeKind {
+    Served,
+    Shed,
+    DeadlineMiss,
+    Error,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Outcome {
+    kind: OutcomeKind,
+    latency_secs: f64,
+    queue_wait_secs: f64,
+}
+
+fn classify(res: Result<Response, InferenceError>) -> Outcome {
+    match res {
+        Ok(r) => Outcome {
+            kind: OutcomeKind::Served,
+            latency_secs: r.latency_secs,
+            queue_wait_secs: r.queue_wait_secs,
+        },
+        Err(e) => Outcome {
+            kind: match e {
+                InferenceError::QueueFull { .. } => OutcomeKind::Shed,
+                InferenceError::DeadlineExceeded => OutcomeKind::DeadlineMiss,
+                _ => OutcomeKind::Error,
+            },
+            latency_secs: 0.0,
+            queue_wait_secs: 0.0,
+        },
+    }
+}
+
+/// Nearest-rank percentile summary in milliseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantilesMs {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl QuantilesMs {
+    fn of_secs(samples: &[f64]) -> QuantilesMs {
+        if samples.is_empty() {
+            return QuantilesMs::default();
+        }
+        // Sort once and index the nearest ranks directly
+        // (`util::timing::percentile` re-sorts per call — 6 sorts per
+        // report would be wasted work on 100k-request runs). Same
+        // nearest-rank definition.
+        let mut ms: Vec<f64> = samples.iter().map(|&s| s * 1e3).collect();
+        ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let nearest = |p: f64| {
+            let rank = ((p / 100.0) * ms.len() as f64).ceil() as usize;
+            ms[rank.saturating_sub(1).min(ms.len() - 1)]
+        };
+        QuantilesMs {
+            p50: nearest(50.0),
+            p95: nearest(95.0),
+            p99: nearest(99.0),
+            mean: ms.iter().sum::<f64>() / ms.len() as f64,
+            max: *ms.last().expect("non-empty"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("p50", self.p50)
+            .set("p95", self.p95)
+            .set("p99", self.p99)
+            .set("mean", self.mean)
+            .set("max", self.max)
+    }
+}
+
+/// Result of one load run against one model/engine variant.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Engine-variant label (e.g. "fused-f32-w4") or model name.
+    pub label: String,
+    /// Arrival-process description (e.g. "closed-8", "open-500qps").
+    pub mode: String,
+    pub seed: u64,
+    /// Requests issued (attempted submissions).
+    pub issued: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub deadline_misses: usize,
+    pub errors: usize,
+    pub elapsed_secs: f64,
+    /// Served requests per second of wall-clock (the serving analogue of
+    /// the benches' rows/s).
+    pub throughput_rps: f64,
+    /// End-to-end latency of served requests.
+    pub latency_ms: QuantilesMs,
+    /// Queue-wait component of served requests.
+    pub queue_wait_ms: QuantilesMs,
+}
+
+impl LoadReport {
+    fn from_outcomes(
+        label: &str,
+        mode: &str,
+        seed: u64,
+        outcomes: &[Outcome],
+        elapsed_secs: f64,
+    ) -> LoadReport {
+        let count = |k: OutcomeKind| outcomes.iter().filter(|o| o.kind == k).count();
+        let served: Vec<&Outcome> =
+            outcomes.iter().filter(|o| o.kind == OutcomeKind::Served).collect();
+        let lat: Vec<f64> = served.iter().map(|o| o.latency_secs).collect();
+        let qw: Vec<f64> = served.iter().map(|o| o.queue_wait_secs).collect();
+        LoadReport {
+            label: label.to_string(),
+            mode: mode.to_string(),
+            seed,
+            issued: outcomes.len(),
+            served: served.len(),
+            shed: count(OutcomeKind::Shed),
+            deadline_misses: count(OutcomeKind::DeadlineMiss),
+            errors: count(OutcomeKind::Error),
+            elapsed_secs,
+            throughput_rps: served.len() as f64 / elapsed_secs.max(1e-9),
+            latency_ms: QuantilesMs::of_secs(&lat),
+            queue_wait_ms: QuantilesMs::of_secs(&qw),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set("mode", self.mode.as_str())
+            .set("seed", self.seed)
+            .set("issued", self.issued)
+            .set("served", self.served)
+            .set("shed", self.shed)
+            .set("deadline_misses", self.deadline_misses)
+            .set("errors", self.errors)
+            .set("elapsed_secs", self.elapsed_secs)
+            .set("throughput_rps", self.throughput_rps)
+            .set("latency_ms", self.latency_ms.to_json())
+            .set("queue_wait_ms", self.queue_wait_ms.to_json())
+    }
+
+    /// One fixed-width table row (pair with [`LoadReport::table_header`]).
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            self.label,
+            self.mode,
+            self.issued,
+            self.served,
+            self.shed,
+            self.deadline_misses,
+            self.throughput_rps,
+            self.latency_ms.p50,
+            self.latency_ms.p99,
+            self.queue_wait_ms.p50,
+            self.queue_wait_ms.p99,
+        )
+    }
+
+    pub fn table_header() -> String {
+        format!(
+            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            "variant",
+            "mode",
+            "issued",
+            "served",
+            "shed",
+            "miss",
+            "rps",
+            "lat p50",
+            "lat p99",
+            "qw p50",
+            "qw p99",
+        )
+    }
+}
+
+/// Run one seeded load generation against a model behind `handle`.
+///
+/// Closed loop: `clients` worker threads share an atomic request
+/// counter; each claims the next index, regenerates its deterministic
+/// input, and blocks on the inference — the next request is only issued
+/// once the previous completes. Open loop: a scheduler thread submits
+/// request `i` at its precomputed arrival offset (sleeping between
+/// arrivals, never spinning) and replies are collected afterwards, so
+/// slow servers see the full offered load.
+pub fn run(handle: &ServerHandle, model: &str, spec: &LoadSpec) -> LoadReport {
+    let n_inputs = handle
+        .n_inputs(model)
+        .unwrap_or_else(|| panic!("loadgen: unknown model {model:?}"));
+    match spec.arrival {
+        Arrival::Closed { clients } => run_closed(handle, model, n_inputs, clients, spec),
+        Arrival::Open { qps } => run_open(handle, model, n_inputs, qps, spec),
+    }
+}
+
+fn run_closed(
+    handle: &ServerHandle,
+    model: &str,
+    n_inputs: usize,
+    clients: usize,
+    spec: &LoadSpec,
+) -> LoadReport {
+    let clients = clients.max(1);
+    let next = AtomicUsize::new(0);
+    let start = Instant::now();
+    let cap = if spec.max_secs > 0.0 {
+        Some(Duration::from_secs_f64(spec.max_secs))
+    } else {
+        None
+    };
+    let worker_ids: Vec<usize> = (0..clients).collect();
+    let per_worker: Vec<Vec<Outcome>> =
+        crate::util::threadpool::par_map(clients, &worker_ids, |_| {
+            let mut mine = Vec::new();
+            loop {
+                if cap.is_some_and(|c| start.elapsed() >= c) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= spec.requests {
+                    break;
+                }
+                let input = input_for(spec.seed, i as u64, n_inputs);
+                let res = handle.infer_with_deadline(model, input, spec.deadline);
+                mine.push(classify(res));
+            }
+            mine
+        });
+    let elapsed = start.elapsed().as_secs_f64();
+    let outcomes: Vec<Outcome> = per_worker.into_iter().flatten().collect();
+    LoadReport::from_outcomes(model, &spec.arrival.describe(), spec.seed, &outcomes, elapsed)
+}
+
+fn run_open(
+    handle: &ServerHandle,
+    model: &str,
+    n_inputs: usize,
+    qps: f64,
+    spec: &LoadSpec,
+) -> LoadReport {
+    let arrivals = open_arrivals(qps, spec.requests, spec.seed);
+    let start = Instant::now();
+    let cap = if spec.max_secs > 0.0 {
+        Some(Duration::from_secs_f64(spec.max_secs))
+    } else {
+        None
+    };
+    // Submit at the scheduled offsets; collect replies afterwards so a
+    // backlogged server keeps receiving the offered load.
+    let mut pending = Vec::with_capacity(arrivals.len());
+    for (i, &at) in arrivals.iter().enumerate() {
+        if cap.is_some_and(|c| start.elapsed() >= c) {
+            break;
+        }
+        let due = Duration::from_secs_f64(at);
+        // Arrival offsets are increasing, so once one lands past the cap
+        // the run is over — never sleep beyond the cap (at 0.1 qps a
+        // single exponential gap can dwarf a 1 s budget).
+        if cap.is_some_and(|c| due >= c) {
+            break;
+        }
+        let now = start.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let input = input_for(spec.seed, i as u64, n_inputs);
+        pending.push(handle.submit_with_deadline(model, input, spec.deadline));
+    }
+    let outcomes: Vec<Outcome> = pending
+        .into_iter()
+        .map(|sub| match sub {
+            Ok(rx) => classify(rx.recv().unwrap_or(Err(InferenceError::ShuttingDown))),
+            Err(e) => classify(Err(e)),
+        })
+        .collect();
+    let elapsed = start.elapsed().as_secs_f64();
+    LoadReport::from_outcomes(model, &spec.arrival.describe(), spec.seed, &outcomes, elapsed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::{AdmissionPolicy, ModelVariant, Router, Server, ServerConfig};
+    use crate::exec::batch::BatchMatrix;
+    use crate::exec::Engine;
+    use std::sync::Arc;
+
+    struct Echo;
+    impl Engine for Echo {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            x.clone()
+        }
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+        fn n_inputs(&self) -> usize {
+            4
+        }
+        fn n_outputs(&self) -> usize {
+            4
+        }
+    }
+
+    struct SlowEcho(Duration);
+    impl Engine for SlowEcho {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            std::thread::sleep(self.0);
+            x.clone()
+        }
+        fn name(&self) -> &'static str {
+            "slow-echo"
+        }
+        fn n_inputs(&self) -> usize {
+            4
+        }
+        fn n_outputs(&self) -> usize {
+            4
+        }
+    }
+
+    fn echo_server(config: ServerConfig) -> Server {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(Echo)));
+        Server::start(router, config)
+    }
+
+    #[test]
+    fn workload_is_deterministic() {
+        assert_eq!(input_for(7, 3, 6), input_for(7, 3, 6));
+        assert_ne!(input_for(7, 3, 6), input_for(7, 4, 6), "per-request variation");
+        assert_ne!(input_for(8, 3, 6), input_for(7, 3, 6), "per-seed variation");
+
+        let a = open_arrivals(100.0, 50, 42);
+        let b = open_arrivals(100.0, 50, 42);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+        // Mean gap ≈ 1/qps: the sum of 50 Exp(100) gaps concentrates
+        // around 0.5 s; accept a wide deterministic-seed band.
+        assert!(a[49] > 0.1 && a[49] < 2.0, "50 arrivals at 100 qps ended at {}", a[49]);
+        assert_ne!(open_arrivals(100.0, 50, 43), a, "different seed, different schedule");
+    }
+
+    #[test]
+    fn closed_loop_serves_all_requests() {
+        let server = echo_server(ServerConfig::default());
+        let h = server.handle();
+        let spec = LoadSpec::closed(4, 60, 0xABC);
+        let rep = run(&h, "m", &spec);
+        assert_eq!(rep.issued, 60);
+        assert_eq!(rep.served, 60);
+        assert_eq!((rep.shed, rep.deadline_misses, rep.errors), (0, 0, 0));
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.latency_ms.p50 >= 0.0 && rep.latency_ms.p50 <= rep.latency_ms.p99);
+        assert!(rep.queue_wait_ms.p99 <= rep.latency_ms.max + 1e-9);
+        assert_eq!(rep.mode, "closed-4");
+    }
+
+    #[test]
+    fn open_loop_offers_full_load() {
+        let server = echo_server(ServerConfig::default());
+        let h = server.handle();
+        let spec = LoadSpec::open(2000.0, 40, 0xDEF);
+        let rep = run(&h, "m", &spec);
+        assert_eq!(rep.issued, 40);
+        assert_eq!(rep.served, 40);
+        assert_eq!(rep.mode, "open-2000qps");
+    }
+
+    #[test]
+    fn saturation_sheds_without_deadlock() {
+        // A slow engine behind a tiny bounded queue, hammered by a fast
+        // open loop: some requests must shed, the rest complete, and the
+        // run terminates.
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(SlowEcho(Duration::from_millis(25)))));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                admission: AdmissionPolicy { max_queue: 4, ..Default::default() },
+            },
+        );
+        let h = server.handle();
+        let spec = LoadSpec::open(2000.0, 80, 0x5A7);
+        let rep = run(&h, "m", &spec);
+        assert_eq!(rep.issued, 80);
+        assert!(rep.shed > 0, "bounded queue must shed under 2000 qps offered load");
+        assert_eq!(rep.served + rep.shed + rep.deadline_misses + rep.errors, 80);
+        assert!(rep.served > 0, "admitted requests still complete");
+        let snap = h.metrics_snapshot();
+        assert_eq!(snap.get("shed").unwrap().as_u64(), Some(rep.shed as u64));
+    }
+
+    #[test]
+    fn deadline_misses_are_counted() {
+        let server = echo_server(ServerConfig::default());
+        let h = server.handle();
+        let spec = LoadSpec::closed(2, 10, 1).with_deadline(Some(Duration::ZERO));
+        let rep = run(&h, "m", &spec);
+        assert_eq!(rep.issued, 10);
+        assert_eq!(rep.deadline_misses, 10, "zero budget misses everything");
+        assert_eq!(rep.served, 0);
+    }
+
+    #[test]
+    fn wall_clock_cap_stops_issuing() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(SlowEcho(Duration::from_millis(20)))));
+        let server = Server::start(router, ServerConfig::default());
+        let h = server.handle();
+        // 10k requests would take ~3 minutes at 20 ms each; the 0.15 s
+        // cap must cut the run short.
+        let spec = LoadSpec::closed(2, 10_000, 2).with_max_secs(0.15);
+        let start = Instant::now();
+        let rep = run(&h, "m", &spec);
+        assert!(rep.issued < 10_000, "cap must stop issuance");
+        assert!(start.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn report_serializes() {
+        let server = echo_server(ServerConfig::default());
+        let h = server.handle();
+        let rep = run(&h, "m", &LoadSpec::closed(2, 8, 3));
+        let j = rep.to_json();
+        assert_eq!(j.get("served").unwrap().as_u64(), Some(8));
+        assert!(j.path(&["latency_ms", "p99"]).is_some());
+        assert!(j.path(&["queue_wait_ms", "p50"]).is_some());
+        assert!(LoadReport::table_header().contains("rps"));
+        assert!(rep.table_row().contains("closed-2"));
+    }
+}

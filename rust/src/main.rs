@@ -5,8 +5,10 @@
 //!   bounds     print the Theorem-1 I/O bounds of a network file
 //!   simulate   count I/Os of Algorithm-1 inference (policy × memory sweep)
 //!   reorder    run Connection Reordering and store the improved order
-//!   serve      serve a network over TCP (dynamic batching, line-JSON protocol)
+//!   serve      serve a network over TCP (deadline-aware batching, line-JSON)
 //!   client     send one inference request to a running server
+//!   loadgen    deterministic closed/open-loop load generation against an
+//!              in-process server (per-engine-variant comparison)
 //!
 //! Every subcommand accepts `--help`. Configuration can also come from a
 //! JSON file via `--config` plus `--set key=value` overrides.
@@ -15,18 +17,17 @@ use sparseflow::cli::Spec;
 use sparseflow::config::Config;
 use sparseflow::coordinator::batcher::BatchPolicy;
 use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
-use sparseflow::coordinator::{ModelVariant, Router, Server, ServerConfig};
-use sparseflow::exec::fused::FusedEngine;
+use sparseflow::coordinator::{AdmissionPolicy, ModelVariant, Router, Server, ServerConfig};
 use sparseflow::exec::layerwise::LayerwiseEngine;
-use sparseflow::exec::quant::{QuantStreamEngine, QuantStreamProgram};
-use sparseflow::exec::stream::StreamingEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
 use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
 use sparseflow::ffnn::serde::{load_net, save_net};
+use sparseflow::loadgen::{LoadReport, LoadSpec};
 use sparseflow::prelude::*;
 use sparseflow::util::json::Json;
 use std::path::Path;
+use std::time::Duration;
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -42,6 +43,7 @@ fn main() {
         "reorder" => cmd_reorder(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "loadgen" => cmd_loadgen(&args),
         "--help" | "-h" | "help" => {
             print_usage();
             0
@@ -64,10 +66,24 @@ fn print_usage() {
          \x20 bounds     Theorem-1 I/O bounds of a network file\n\
          \x20 simulate   count I/Os under LRU/RR/MIN for given memory sizes\n\
          \x20 reorder    Connection Reordering; writes the improved order\n\
-         \x20 serve      TCP inference server with dynamic batching\n\
-         \x20 client     send one request to a running server\n\n\
+         \x20 serve      TCP inference server (deadline-aware dynamic batching)\n\
+         \x20 client     send one request to a running server\n\
+         \x20 loadgen    seeded closed/open-loop load generation, per-variant\n\n\
          Run `sparseflow <subcommand> --help` for options."
     );
+}
+
+/// Resolve an "auto"-defaulted numeric flag: an explicit value wins
+/// (including an explicit 0 = off); "auto" yields `from_config`. Exits
+/// with a usage error on a non-numeric value.
+fn resolve_auto_u64(a: &sparseflow::cli::Args, name: &str, from_config: u64) -> u64 {
+    match a.str(name) {
+        "auto" => from_config,
+        s => s.parse().unwrap_or_else(|e| {
+            eprintln!("error: --{name}={s} is not a valid number: {e:?}");
+            std::process::exit(2);
+        }),
+    }
 }
 
 fn parse_or_exit(spec: Spec, args: &[String]) -> sparseflow::cli::Args {
@@ -317,6 +333,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             .workers_opt()
             .precision_opt()
             .schedule_opt()
+            .max_queue_opt()
+            .deadline_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
         args,
     );
@@ -366,69 +384,28 @@ fn cmd_serve(args: &[String]) -> i32 {
         "auto" => config.schedule("interp"),
         s => s.to_string(),
     };
+    // The SLO knobs: explicit flags win (an explicit 0 turns the knob
+    // off), "auto" defers to the config keys, else off.
+    let max_queue = resolve_auto_u64(&a, "max-queue", config.max_queue(0) as u64) as usize;
+    let deadline_ms = resolve_auto_u64(&a, "deadline-ms", config.deadline_ms(0));
     let mut router = Router::new();
     let name = a.str("name").to_string();
-    let mut fusion_stats = None;
-    let engine: std::sync::Arc<dyn Engine> = match (precision.as_str(), schedule.as_str()) {
-        ("f32", "interp") => std::sync::Arc::new(StreamingEngine::new(&net, &order)),
-        ("f32", "fused") => {
-            let fused = FusedEngine::new(&net, &order);
-            let st = fused.program().stats();
-            println!(
-                "fused schedule: {} conns -> {} macro-ops ({:.1} ops/macro-op, \
-                 mean fused run {:.1}, max {})",
-                st.n_ops,
-                st.n_macro_ops(),
-                st.ops_per_macro_op(),
-                st.mean_run_len(),
-                st.max_run_len
-            );
-            fusion_stats = Some(st.clone());
-            std::sync::Arc::new(fused)
-        }
-        ("i8", "interp") => {
-            let quant = QuantStreamEngine::new(&net, &order);
-            let p = quant.program();
-            println!(
-                "quantized stream: {:.2} B/conn vs {:.0} B/conn f32 ({:.1}x smaller), \
-                 worst-case weight error {:.2e}",
-                p.bytes_per_conn(),
-                QuantStreamProgram::f32_bytes_per_conn(),
-                p.compression_ratio(),
-                p.max_weight_error()
-            );
-            std::sync::Arc::new(quant)
-        }
-        ("i8", "fused") => {
-            eprintln!(
-                "error: --schedule fused requires --precision f32 (the i8 stream is \
-                 already compressed into its own record format; see the composition \
-                 matrix in README.md)"
-            );
-            return 2;
-        }
-        ("f32" | "i8", other) => {
-            eprintln!("error: unknown schedule {other:?} (expected interp or fused)");
-            return 2;
-        }
-        (other, _) => {
-            eprintln!("error: unknown precision {other:?} (expected f32 or i8)");
+    let variant = match ModelVariant::build(&name, &net, &order, &schedule, &precision, workers) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
             return 2;
         }
     };
-    let tag: &'static str = if precision == "i8" { "i8" } else { "f32" };
-    let sched: &'static str = if schedule == "fused" { "fused" } else { "interp" };
-    let mut variant = if workers > 1 {
+    println!("{} [{}]", variant.summary, variant.label());
+    if workers > 1 {
         println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
-        ModelVariant::sharded(&name, engine, workers).with_precision(tag)
-    } else if tag == "i8" {
-        ModelVariant::quantized(&name, engine)
-    } else {
-        ModelVariant::new(&name, engine)
-    };
-    variant = variant.with_schedule(sched);
-    if let Some(st) = fusion_stats {
-        variant = variant.with_fusion_stats(st);
+    }
+    if max_queue > 0 {
+        println!("admission control: shedding beyond queue depth {max_queue}");
+    }
+    if deadline_ms > 0 {
+        println!("default SLO: {deadline_ms} ms per request");
     }
     router.register(variant);
     if a.flag("with-csr") && net.layer_of().is_some() {
@@ -442,7 +419,12 @@ fn cmd_serve(args: &[String]) -> i32 {
         ServerConfig {
             batch: BatchPolicy {
                 max_batch: a.usize("max-batch"),
-                max_wait: std::time::Duration::from_millis(a.u64("max-wait-ms")),
+                max_wait: Duration::from_millis(a.u64("max-wait-ms")),
+                ..Default::default()
+            },
+            admission: AdmissionPolicy {
+                max_queue,
+                default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
             },
         },
     );
@@ -465,7 +447,8 @@ fn cmd_client(args: &[String]) -> i32 {
         Spec::new("sparseflow client", "send one request to a running server")
             .opt("addr", "127.0.0.1:7878", "server address")
             .opt("model", "default", "model name")
-            .opt("input", "", "comma-separated input values (required)"),
+            .opt("input", "", "comma-separated input values (required)")
+            .deadline_opt(),
         args,
     );
     let addr: std::net::SocketAddr = match a.str("addr").parse() {
@@ -488,17 +471,202 @@ fn cmd_client(args: &[String]) -> i32 {
             return 1;
         }
     };
-    match client.infer(a.str("model"), &input) {
-        Ok(out) => {
+    let mut req = Json::obj().set("model", a.str("model")).set(
+        "input",
+        Json::Arr(input.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    let deadline_ms = resolve_auto_u64(&a, "deadline-ms", 0);
+    if deadline_ms > 0 {
+        req = req.set("deadline_ms", deadline_ms);
+    }
+    match client.roundtrip(&req) {
+        Ok(resp) if resp.get("ok").and_then(Json::as_bool) == Some(true) => {
             println!(
                 "{}",
-                Json::Arr(out.iter().map(|&v| Json::Num(v as f64)).collect()).to_string_compact()
+                resp.get("output").cloned().unwrap_or(Json::Null).to_string_compact()
             );
             0
+        }
+        Ok(resp) => {
+            eprintln!(
+                "error: {}{}",
+                resp.get("error").and_then(Json::as_str).unwrap_or("unknown server error"),
+                if resp.get("shed").and_then(Json::as_bool) == Some(true) {
+                    " (shed — back off and retry)"
+                } else {
+                    ""
+                }
+            );
+            1
         }
         Err(e) => {
             eprintln!("error: {e}");
             1
         }
     }
+}
+
+/// Parse `--variants` items of the form `schedule:precision:workers`
+/// (e.g. `fused:f32:4`; a leading `w` on the worker count is accepted).
+fn parse_variants(s: &str) -> Result<Vec<(String, String, usize)>, String> {
+    let mut out = Vec::new();
+    for item in s.split(',').filter(|x| !x.trim().is_empty()) {
+        let parts: Vec<&str> = item.trim().split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!(
+                "bad variant {item:?} (expected schedule:precision:workers, e.g. fused:f32:4)"
+            ));
+        }
+        let workers: usize = parts[2]
+            .trim_start_matches('w')
+            .parse()
+            .map_err(|_| format!("bad worker count in variant {item:?}"))?;
+        out.push((parts[0].to_string(), parts[1].to_string(), workers.max(1)));
+    }
+    if out.is_empty() {
+        return Err("no variants given".to_string());
+    }
+    Ok(out)
+}
+
+fn cmd_loadgen(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new(
+            "sparseflow loadgen",
+            "deterministic load generation against an in-process server",
+        )
+        .positional("net", "network JSON file (with optional stored order)")
+        .opt("mode", "closed", "arrival process: closed | open")
+        .opt("clients", "8", "closed loop: concurrent clients")
+        .opt("qps", "500", "open loop: target-QPS sweep, comma-separated")
+        .opt("requests", "1000", "requests per run")
+        .opt("secs", "0", "wall-clock cap per run in seconds (0 = none)")
+        .opt("seed", "1", "workload seed (arrival schedule + inputs)")
+        .opt(
+            "variants",
+            "interp:f32:1",
+            "engine variants schedule:precision:workers, comma-separated",
+        )
+        .opt("max-batch", "128", "dynamic batcher max batch size")
+        .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
+        .max_queue_opt()
+        .deadline_opt()
+        .opt("out", "-", "write the JSON report here ('-' = table only)"),
+        args,
+    );
+    let (net, stored) = match load_net(Path::new(a.positional(0))) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("{}", net.describe());
+    let order = stored.unwrap_or_else(|| two_optimal_order(&net));
+
+    let deadline_ms = resolve_auto_u64(&a, "deadline-ms", 0);
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+    let max_queue = resolve_auto_u64(&a, "max-queue", 0) as usize;
+    let seed = a.u64("seed");
+    let requests = a.usize("requests");
+    let secs = a.f64("secs");
+    let mode = a.str("mode").to_string();
+
+    let mut specs: Vec<LoadSpec> = Vec::new();
+    match mode.as_str() {
+        "closed" => specs.push(
+            LoadSpec::closed(a.usize("clients"), requests, seed)
+                .with_deadline(deadline)
+                .with_max_secs(secs),
+        ),
+        "open" => {
+            for &qps in &a.f64_list("qps") {
+                if qps <= 0.0 {
+                    eprintln!("error: --qps entries must be positive, got {qps}");
+                    return 2;
+                }
+                specs.push(
+                    LoadSpec::open(qps, requests, seed)
+                        .with_deadline(deadline)
+                        .with_max_secs(secs),
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown mode {other:?} (expected closed or open)");
+            return 2;
+        }
+    }
+    let variant_specs = match parse_variants(a.str("variants")) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+
+    println!("{}", LoadReport::table_header());
+    let mut results: Vec<Json> = Vec::new();
+    for (schedule, precision, workers) in &variant_specs {
+        // Register each variant under its canonical label ("fused-f32-w4")
+        // so loadgen rows, serve logs, and bench keys all agree.
+        let mut variant =
+            match ModelVariant::build("variant", &net, &order, schedule, precision, *workers) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("error: variant {schedule}:{precision}:{workers}: {e}");
+                    return 2;
+                }
+            };
+        let label = variant.label();
+        variant.name = label.clone();
+        let mut router = Router::new();
+        router.register(variant);
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: a.usize("max-batch"),
+                    max_wait: Duration::from_millis(a.u64("max-wait-ms")),
+                    ..Default::default()
+                },
+                admission: AdmissionPolicy {
+                    max_queue,
+                    default_deadline: None,
+                },
+            },
+        );
+        let h = server.handle();
+        for spec in &specs {
+            let rep = sparseflow::loadgen::run(&h, &label, spec);
+            println!("{}", rep.table_row());
+            results.push(rep.to_json());
+        }
+    }
+
+    let report = Json::obj()
+        .set(
+            "workload",
+            Json::obj()
+                .set("net", a.positional(0))
+                .set("mode", mode.as_str())
+                .set("requests", requests)
+                .set("seed", seed)
+                .set("deadline_ms", deadline_ms)
+                .set("max_queue", max_queue)
+                .set("max_batch", a.usize("max-batch"))
+                .set("max_wait_ms", a.u64("max-wait-ms")),
+        )
+        .set("results", Json::Arr(results));
+    match a.str("out") {
+        "-" => {}
+        out => match report.to_file(Path::new(out)) {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => {
+                eprintln!("error: write {out}: {e}");
+                return 1;
+            }
+        },
+    }
+    0
 }

@@ -1,0 +1,189 @@
+//! Golden-trace conformance suite.
+//!
+//! Three small fixture networks live in `tests/fixtures/conformance/`,
+//! each with a batch of inputs and the expected outputs. Every value in
+//! the fixtures (weights, biases, inputs, and all intermediate sums) is
+//! a small dyadic rational, so all f32 engines must reproduce the
+//! expected outputs **bit-exactly** regardless of summation order — any
+//! serde or engine regression fails loudly. The quantized engine is held
+//! to its certified `output_error_bound` instead (its weights are
+//! intentionally perturbed by compression).
+//!
+//! Covered grid per fixture: schedule {interp, fused} × precision
+//! {f32, i8} × sharding {1, 2, 3}, plus the layer-wise CSR and dense
+//! baselines and both serialization round-trips (ffnn-v1 and quant-v1).
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::dense::DenseEngine;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::layerwise::LayerwiseEngine;
+use sparseflow::exec::parallel::ParallelEngine;
+use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram};
+use sparseflow::exec::stream::{StreamProgram, StreamingEngine};
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::serde::{net_from_json, net_to_json, quant_from_json, quant_to_json};
+use sparseflow::ffnn::topo::{layerwise_order, two_optimal_order, ConnOrder};
+use sparseflow::util::json::Json;
+use std::path::PathBuf;
+
+const FIXTURES: [&str; 3] = ["tiny-relu", "deep-chain", "hidden-source"];
+
+struct Fixture {
+    name: String,
+    net: Ffnn,
+    inputs: BatchMatrix,
+    expected: BatchMatrix,
+}
+
+fn matrix_from_rows_of_requests(rows: &[Json], width: usize) -> BatchMatrix {
+    // Fixture arrays are per-request (one entry per batch column).
+    let batch = rows.len();
+    let mut m = BatchMatrix::zeros(width, batch);
+    for (col, req) in rows.iter().enumerate() {
+        let vals = req.as_arr().expect("fixture row is an array");
+        assert_eq!(vals.len(), width, "fixture row arity");
+        for (row, v) in vals.iter().enumerate() {
+            m.row_mut(row)[col] = v.as_f64().expect("numeric fixture value") as f32;
+        }
+    }
+    m
+}
+
+fn load_fixture(name: &str) -> Fixture {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/conformance")
+        .join(format!("{name}.json"));
+    let j = Json::from_file(&path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let (net, stored) = net_from_json(j.get("net").expect("fixture has net"))
+        .unwrap_or_else(|e| panic!("{name}: bad embedded net: {e}"));
+    assert!(stored.is_none(), "{name}: fixtures carry no stored order");
+    let inputs = matrix_from_rows_of_requests(
+        j.get("batch").and_then(Json::as_arr).expect("fixture batch"),
+        net.n_inputs(),
+    );
+    let expected = matrix_from_rows_of_requests(
+        j.get("expected").and_then(Json::as_arr).expect("fixture expected"),
+        net.n_outputs(),
+    );
+    Fixture {
+        name: name.to_string(),
+        net,
+        inputs,
+        expected,
+    }
+}
+
+/// Assert an engine reproduces the fixture's golden outputs bit-exactly.
+fn assert_exact(f: &Fixture, engine: &dyn Engine, what: &str) {
+    let got = engine.infer(&f.inputs);
+    assert_eq!(
+        got, f.expected,
+        "{}: {what} diverged from the golden trace (max |diff| {})",
+        f.name,
+        got.max_abs_diff(&f.expected)
+    );
+}
+
+fn orders(net: &Ffnn) -> Vec<(&'static str, ConnOrder)> {
+    vec![
+        ("2-optimal", two_optimal_order(net)),
+        ("layerwise", layerwise_order(net)),
+    ]
+}
+
+#[test]
+fn f32_engines_reproduce_golden_traces_exactly() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        for (oname, order) in orders(&f.net) {
+            // interp schedule, serial and batch-sharded.
+            let stream = StreamingEngine::new(&f.net, &order);
+            assert_exact(&f, &stream, &format!("stream[{oname}]"));
+            for shards in [2usize, 3] {
+                let par = ParallelEngine::new(StreamingEngine::new(&f.net, &order), shards);
+                assert_exact(&f, &par, &format!("stream[{oname}]x{shards}"));
+            }
+            // fused schedule, serial and batch-sharded.
+            let fused = FusedEngine::new(&f.net, &order);
+            assert_exact(&f, &fused, &format!("fused[{oname}]"));
+            for shards in [2usize, 3] {
+                let par = ParallelEngine::new(FusedEngine::new(&f.net, &order), shards);
+                assert_exact(&f, &par, &format!("fused[{oname}]x{shards}"));
+            }
+        }
+        // Layer-wise baselines (CSR and dense GEMM).
+        assert_exact(&f, &LayerwiseEngine::new(&f.net), "csr-layerwise");
+        assert_exact(&f, &DenseEngine::new(&f.net), "dense");
+    }
+}
+
+#[test]
+fn quant_engine_stays_within_certified_bound() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        for (oname, order) in orders(&f.net) {
+            let reference = StreamProgram::compile(&f.net, &order);
+            let program = QuantStreamProgram::from_program(&reference);
+            let bound = output_error_bound(&reference, &program, &f.inputs);
+            let tol = bound * 1.01 + 1e-4; // f32-rounding slack per the bound's contract
+            let quant = QuantStreamEngine::from_program(program.clone());
+            let got = quant.infer(&f.inputs);
+            let diff = got.max_abs_diff(&f.expected);
+            assert!(
+                diff <= tol,
+                "{name}: quant[{oname}] diff {diff} exceeds certified bound {bound}"
+            );
+            // Sharding is bit-identical to the serial quant engine, so it
+            // inherits the bound.
+            for shards in [2usize, 3] {
+                let par =
+                    ParallelEngine::new(QuantStreamEngine::from_program(program.clone()), shards);
+                assert_eq!(
+                    par.infer(&f.inputs),
+                    got,
+                    "{name}: quant[{oname}]x{shards} must be bit-identical to serial quant"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serde_roundtrips_preserve_golden_traces() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        // ffnn-v1: net → JSON → net must still reproduce the trace
+        // exactly (with and without an embedded order).
+        let order = two_optimal_order(&f.net);
+        for with_order in [false, true] {
+            let j = net_to_json(&f.net, with_order.then_some(&order));
+            let (net2, order2) = net_from_json(&j).unwrap();
+            assert_eq!(order2.is_some(), with_order);
+            let ord2 = order2.unwrap_or_else(|| two_optimal_order(&net2));
+            assert_exact(
+                &f,
+                &StreamingEngine::new(&net2, &ord2),
+                &format!("stream after ffnn-v1 roundtrip (order={with_order})"),
+            );
+        }
+        // quant-v1: program → JSON → program must be value-identical.
+        let program = QuantStreamProgram::compress(&f.net, &order);
+        let back = quant_from_json(&quant_to_json(&program)).unwrap();
+        assert_eq!(back, program, "{name}: quant-v1 roundtrip must be lossless");
+        let a = QuantStreamEngine::from_program(program).infer(&f.inputs);
+        let b = QuantStreamEngine::from_program(back).infer(&f.inputs);
+        assert_eq!(a, b, "{name}: roundtripped quant program diverged");
+    }
+}
+
+#[test]
+fn fixture_shapes_are_sane() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        assert!(f.net.n_conns() > 0);
+        assert_eq!(f.inputs.batch(), f.expected.batch());
+        assert!(f.inputs.batch() >= 3, "{name}: want ≥3 golden requests");
+        assert!(f.net.layer_of().is_some(), "{name}: layered for the CSR/dense engines");
+    }
+}

@@ -127,7 +127,12 @@ fn tcp_concurrent_clients() {
     let server = Server::start(
         router,
         ServerConfig {
-            batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(5) },
+            batch: BatchPolicy {
+                max_batch: 16,
+                max_wait: std::time::Duration::from_millis(5),
+                ..Default::default()
+            },
+            ..Default::default()
         },
     );
     let frontend = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
@@ -154,7 +159,12 @@ fn load_profile_and_batching() {
     let server = Server::start(
         router,
         ServerConfig {
-            batch: BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(3) },
+            batch: BatchPolicy {
+                max_batch: 32,
+                max_wait: std::time::Duration::from_millis(3),
+                ..Default::default()
+            },
+            ..Default::default()
         },
     );
     let h = server.handle();
@@ -170,6 +180,209 @@ fn load_profile_and_batching() {
         "mean batch {}",
         server.metrics().mean_batch_size()
     );
+}
+
+/// Acceptance: served f32 outputs are **bit-identical** to a direct
+/// `Engine::infer` call on the same input — across the interp and fused
+/// schedules and batch sharding. (Every f32 engine computes batch
+/// columns independently, so batching composition cannot change a
+/// request's result; this pins that contract through the whole serving
+/// pipeline.)
+#[test]
+fn served_outputs_bit_identical_to_direct_engine_run() {
+    let net = test_net();
+    let order = two_optimal_order(&net);
+    for (schedule, workers) in [("interp", 1usize), ("fused", 1), ("interp", 2), ("fused", 3)] {
+        let variant = ModelVariant::build("m", &net, &order, schedule, "f32", workers).unwrap();
+        let direct = Arc::clone(variant.route());
+        let label = variant.label();
+        let mut router = Router::new();
+        router.register(variant);
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(40),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        let mut rng = Pcg64::seed_from(0xB17);
+        let inputs: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..net.n_inputs()).map(|_| rng.normal() as f32).collect())
+            .collect();
+        // Async submission so the batcher actually groups requests.
+        let rxs: Vec<_> = inputs.iter().map(|i| h.submit("m", i.clone()).unwrap()).collect();
+        for (input, rx) in inputs.iter().zip(rxs) {
+            let resp = rx.recv().unwrap().unwrap();
+            let x = BatchMatrix::from_rows(net.n_inputs(), 1, input.clone());
+            let want = direct.infer(&x);
+            assert_eq!(resp.output.len(), want.rows(), "{label}");
+            for (r, &got) in resp.output.iter().enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.row(r)[0].to_bits(),
+                    "{label}: row {r} not bit-identical (served {got}, direct {})",
+                    want.row(r)[0]
+                );
+            }
+        }
+    }
+}
+
+fn raw_roundtrip(
+    writer: &mut impl std::io::Write,
+    reader: &mut impl std::io::BufRead,
+    line: &str,
+) -> Json {
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(&resp).unwrap_or_else(|e| panic!("server reply not JSON ({e}): {resp:?}"))
+}
+
+/// Protocol robustness: every malformed request gets `{"ok": false}` on
+/// the *same* connection, which stays usable afterwards.
+#[test]
+fn tcp_rejects_garbage_and_stays_healthy() {
+    use std::io::BufReader;
+
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", engine as Arc<dyn Engine>));
+    let server = Server::start(router, ServerConfig::default());
+    let frontend = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+
+    let stream = std::net::TcpStream::connect(frontend.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Malformed JSON.
+    let r = raw_roundtrip(&mut writer, &mut reader, "{nope");
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // Wrong-arity input vector.
+    let r = raw_roundtrip(&mut writer, &mut reader, r#"{"model": "mlp", "input": [1]}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("length"));
+    // Unknown model.
+    let r = raw_roundtrip(&mut writer, &mut reader, r#"{"model": "ghost", "input": [1]}"#);
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+    // Non-numeric input element.
+    let r = raw_roundtrip(&mut writer, &mut reader, r#"{"model": "mlp", "input": ["x"]}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // Unknown command.
+    let r = raw_roundtrip(&mut writer, &mut reader, r#"{"cmd": "reboot"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // Oversized request (> 1 MiB line).
+    let huge = format!(r#"{{"model": "mlp", "input": [{}1]}}"#, "0, ".repeat(400_000));
+    let r = raw_roundtrip(&mut writer, &mut reader, &huge);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("oversized"));
+
+    // The same connection still serves a good request afterwards.
+    let input: Vec<String> = (0..net.n_inputs()).map(|_| "0.5".to_string()).collect();
+    let good = format!(r#"{{"model": "mlp", "input": [{}]}}"#, input.join(", "));
+    let r = raw_roundtrip(&mut writer, &mut reader, &good);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("output").unwrap().as_arr().unwrap().len(), net.n_outputs());
+}
+
+/// Concurrent clients interleaving inference with `metrics`/`models`
+/// commands: everything is answered and the pool stays healthy.
+#[test]
+fn tcp_concurrent_inference_interleaved_with_commands() {
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", engine as Arc<dyn Engine>));
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: 16,
+                max_wait: std::time::Duration::from_millis(2),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let frontend = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+    let addr = frontend.addr;
+    let n_in = net.n_inputs();
+    let n_out = net.n_outputs();
+
+    let ids: Vec<u64> = (0..8).collect();
+    let oks = sparseflow::util::threadpool::par_map(8, &ids, |&c| {
+        let mut client = TcpClient::connect(&addr).expect("connect");
+        let mut good = 0usize;
+        for round in 0..6 {
+            match (c + round) % 3 {
+                0 => {
+                    let out = client.infer("mlp", &vec![0.25; n_in]).expect("infer");
+                    assert_eq!(out.len(), n_out);
+                    good += 1;
+                }
+                1 => {
+                    let m = client.roundtrip(&Json::obj().set("cmd", "metrics")).unwrap();
+                    assert!(m.path(&["metrics", "responses"]).is_some());
+                    good += 1;
+                }
+                _ => {
+                    let m = client.roundtrip(&Json::obj().set("cmd", "models")).unwrap();
+                    assert_eq!(
+                        m.get("models").unwrap().as_arr().unwrap()[0].as_str(),
+                        Some("mlp")
+                    );
+                    good += 1;
+                }
+            }
+        }
+        good
+    });
+    assert!(oks.iter().all(|&n| n == 6));
+}
+
+/// A shutdown sentinel arriving mid-fill must not orphan pending
+/// requests: the partial batch is processed (every reply delivered) and
+/// the dispatcher exits without waiting out `max_wait`.
+#[test]
+fn shutdown_mid_fill_processes_partial_batch() {
+    let net = test_net();
+    let engine = Arc::new(StreamingEngine::new(&net, &two_optimal_order(&net)));
+    let mut router = Router::new();
+    router.register(ModelVariant::new("mlp", engine as Arc<dyn Engine>));
+    let server = Server::start(
+        router,
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: 128,
+                max_wait: std::time::Duration::from_secs(5),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let h = server.handle();
+    let rxs: Vec<_> = (0..4)
+        .map(|_| h.submit("mlp", vec![0.0; net.n_inputs()]).unwrap())
+        .collect();
+    let start = std::time::Instant::now();
+    drop(server); // enqueues Shutdown behind the four requests
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(4),
+        "drop() must not wait out the 5 s batch window"
+    );
+    for rx in rxs {
+        let reply = rx.recv().expect("reply delivered, not dropped");
+        let resp = reply.expect("partial batch still served");
+        assert_eq!(resp.output.len(), net.n_outputs());
+    }
 }
 
 /// Shutdown: dropping the server ends dispatchers; a held handle then

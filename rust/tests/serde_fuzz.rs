@@ -1,0 +1,219 @@
+//! Serde fuzz-lite property tests.
+//!
+//! Round-trip the two on-disk formats (`sparseflow-ffnn-v1` and
+//! `sparseflow-quant-v1`) over seeded random networks, then corrupt the
+//! serialized form — one random byte at a time, and targeted per-field
+//! damage — and assert the loaders **reject with an error instead of
+//! panicking**. Random single-byte mutations may happen to stay valid
+//! (e.g. a digit flip produces a different but well-formed net); the
+//! property under test is "no panic, and structural damage is caught",
+//! not "every mutation is detected".
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::quant::{QuantStreamEngine, QuantStreamProgram};
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::serde::{net_from_json, net_to_json, quant_from_json, quant_to_json};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::util::json::Json;
+use sparseflow::util::rng::Pcg64;
+
+const NETS: u64 = 12;
+const MUTATIONS_PER_NET: usize = 40;
+
+/// Flip one byte of `text` to a random printable ASCII character (keeps
+/// the buffer valid UTF-8, since the serializers emit pure ASCII here).
+fn mutate(text: &str, rng: &mut Pcg64) -> String {
+    assert!(text.is_ascii(), "serialized artifacts are ASCII");
+    let mut bytes = text.as_bytes().to_vec();
+    let at = rng.index(bytes.len());
+    let new = 0x20 + rng.below(0x5f) as u8; // ' ' ..= '~'
+    bytes[at] = new;
+    String::from_utf8(bytes).expect("ascii stays utf-8")
+}
+
+#[test]
+fn single_byte_corruption_never_panics() {
+    for seed in 0..NETS {
+        let mut rng = Pcg64::seed_from(0xF0_22 + seed);
+        let net = random_mlp(&MlpSpec::new(3, 8, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+
+        let net_text = net_to_json(&net, Some(&order)).to_string_compact();
+        let quant_text =
+            quant_to_json(&QuantStreamProgram::compress(&net, &order)).to_string_compact();
+        for text in [&net_text, &quant_text] {
+            for _ in 0..MUTATIONS_PER_NET {
+                let corrupted = mutate(text, &mut rng);
+                // Any of these may legitimately succeed (benign flip) or
+                // fail (detected damage); what they must never do is
+                // panic — a panic fails this test.
+                if let Ok(j) = Json::parse(&corrupted) {
+                    let _ = net_from_json(&j);
+                    let _ = quant_from_json(&j);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn roundtrips_are_lossless_over_random_nets() {
+    for seed in 0..NETS {
+        let mut rng = Pcg64::seed_from(0xF0_44 + seed);
+        let net = random_mlp(&MlpSpec::new(3, 10, 0.35), &mut rng);
+        let order = two_optimal_order(&net);
+
+        // ffnn-v1 through compact text (the TCP/file wire form).
+        let j = Json::parse(&net_to_json(&net, Some(&order)).to_string_compact()).unwrap();
+        let (net2, order2) = net_from_json(&j).unwrap();
+        assert_eq!(net.conns(), net2.conns(), "seed {seed}");
+        assert_eq!(net.kinds(), net2.kinds(), "seed {seed}");
+        assert_eq!(net.initials(), net2.initials(), "seed {seed}");
+        assert_eq!(order2.unwrap().as_slice(), order.as_slice(), "seed {seed}");
+
+        // quant-v1 likewise, and the rebuilt program computes
+        // identically.
+        let program = QuantStreamProgram::compress(&net, &order);
+        let qj = Json::parse(&quant_to_json(&program).to_string_compact()).unwrap();
+        let back = quant_from_json(&qj).unwrap();
+        assert_eq!(back, program, "seed {seed}");
+        let x = BatchMatrix::random(net.n_inputs(), 3, &mut rng);
+        assert_eq!(
+            QuantStreamEngine::from_program(program).infer(&x),
+            QuantStreamEngine::from_program(back).infer(&x),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn targeted_field_damage_is_rejected() {
+    let mut rng = Pcg64::seed_from(0xF0_66);
+    let net = random_mlp(&MlpSpec::new(2, 6, 0.5), &mut rng);
+    let order = two_optimal_order(&net);
+    let good = net_to_json(&net, Some(&order));
+
+    let strip = |key: &str| {
+        let Json::Obj(fields) = good.clone() else { unreachable!() };
+        Json::Obj(fields.into_iter().filter(|(k, _)| k != key).collect())
+    };
+    for key in ["format", "kinds", "initial", "conns"] {
+        assert!(net_from_json(&strip(key)).is_err(), "missing {key} must be rejected");
+    }
+    assert!(net_from_json(&good.clone().set("format", "bogus-v9")).is_err());
+    assert!(
+        net_from_json(&good.clone().set("kinds", Json::Arr(vec![Json::Str("axon".into())])))
+            .is_err(),
+        "unknown neuron kind"
+    );
+    assert!(
+        net_from_json(
+            &good
+                .clone()
+                .set("conns", Json::Arr(vec![Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)])]))
+        )
+        .is_err(),
+        "wrong conn arity"
+    );
+    let huge_src = Json::Arr(vec![Json::Arr(vec![
+        Json::Num(9_999.0),
+        Json::Num(1.0),
+        Json::Num(0.5),
+    ])]);
+    assert!(net_from_json(&good.clone().set("conns", huge_src)).is_err(), "endpoint range");
+    // Non-topological stored order.
+    let rev: Vec<Json> = (0..net.n_conns() as u64).rev().map(Json::from).collect();
+    assert!(net_from_json(&good.clone().set("order", Json::Arr(rev))).is_err());
+    // kinds/initial length mismatch (previously a panic path).
+    assert!(
+        net_from_json(&good.clone().set("initial", Json::Arr(vec![Json::Num(0.0)]))).is_err(),
+        "initial length mismatch"
+    );
+    // Inconsistent layer metadata (previously only debug-asserted).
+    let flat = Json::Arr(vec![Json::Num(0.0); net.n_neurons()]);
+    assert!(
+        net_from_json(&good.clone().set("layer_of", flat)).is_err(),
+        "layers must strictly increase along connections"
+    );
+    let short = Json::Arr(vec![Json::Num(0.0)]);
+    assert!(
+        net_from_json(&good.clone().set("layer_of", short)).is_err(),
+        "layer_of length mismatch"
+    );
+}
+
+#[test]
+fn targeted_quant_damage_is_rejected() {
+    let mut rng = Pcg64::seed_from(0xF0_88);
+    let net = random_mlp(&MlpSpec::new(2, 8, 0.5), &mut rng);
+    let order = two_optimal_order(&net);
+    let program = QuantStreamProgram::compress(&net, &order);
+    let good = quant_to_json(&program);
+
+    assert!(quant_from_json(&good.clone().set("format", "bogus")).is_err());
+    assert!(quant_from_json(&good.clone().set("group_size", 32u64)).is_err());
+    assert!(quant_from_json(&good.clone().set("ctrl", "zz")).is_err(), "non-hex ctrl");
+    assert!(quant_from_json(&good.clone().set("ctrl", "abc")).is_err(), "odd hex length");
+    assert!(quant_from_json(&good.clone().set("qweights", "00")).is_err(), "truncated weights");
+    assert!(
+        quant_from_json(&good.clone().set("biases", Json::Arr(vec![Json::Num(0.0)]))).is_err(),
+        "bias/neuron count mismatch"
+    );
+    assert!(
+        quant_from_json(
+            &good.clone().set("hidden_sources", Json::Arr(vec![Json::Num(1e6)]))
+        )
+        .is_err(),
+        "out-of-range neuron id"
+    );
+    assert!(
+        quant_from_json(&good.clone().set("groups", Json::Arr(vec![Json::Num(1.0)]))).is_err(),
+        "odd scale/zero-point pairing"
+    );
+}
+
+#[test]
+fn from_parts_rejects_structural_damage_without_panicking() {
+    let mut rng = Pcg64::seed_from(0xF0_AA);
+    let net = random_mlp(&MlpSpec::new(3, 8, 0.4), &mut rng);
+    let order = two_optimal_order(&net);
+    let program = QuantStreamProgram::compress(&net, &order);
+
+    // Baseline: clean parts round-trip.
+    assert_eq!(
+        QuantStreamProgram::from_parts(program.to_parts()).unwrap(),
+        program
+    );
+
+    // Truncated control stream (possibly mid-varint).
+    for cut in [0usize, 1, 3] {
+        let mut parts = program.to_parts();
+        let keep = parts.ctrl.len().saturating_sub(1 + cut);
+        parts.ctrl.truncate(keep);
+        assert!(QuantStreamProgram::from_parts(parts).is_err(), "ctrl cut {cut}");
+    }
+    // Extra quantized weight with no matching record.
+    let mut parts = program.to_parts();
+    parts.qweights.push(1);
+    assert!(QuantStreamProgram::from_parts(parts).is_err());
+    // Missing quant group.
+    let mut parts = program.to_parts();
+    parts.groups.pop();
+    assert!(QuantStreamProgram::from_parts(parts).is_err());
+    // Out-of-range ids.
+    let n = program.n_neurons() as u32;
+    for field in 0..3 {
+        let mut parts = program.to_parts();
+        match field {
+            0 => parts.hidden_sources.push(n),
+            1 => parts.input_ids.push(n + 7),
+            _ => parts.output_ids.push(n),
+        }
+        assert!(QuantStreamProgram::from_parts(parts).is_err(), "field {field}");
+    }
+    // Wrong neuron count vs biases.
+    let mut parts = program.to_parts();
+    parts.n_neurons += 1;
+    assert!(QuantStreamProgram::from_parts(parts).is_err());
+}
