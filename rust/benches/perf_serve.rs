@@ -1,7 +1,7 @@
 //! §Perf — end-to-end serving throughput and tail latency through the
 //! deadline-aware coordinator (queue → batcher → engine), measured with
 //! the closed-loop load generator against every valid engine variant:
-//! interp/fused × f32/i8 × workers {1, 4}. This is the number the paper's
+//! interp/fused/tiled × f32/i8 × workers {1, 4}. This is the number the paper's
 //! kernel speedups must survive: rows/s *after* the queueing layer, plus
 //! the p50/p99 end-to-end and queue-wait split. Emits JSON via
 //! `bench::harness` (published to `BENCH_PERF_SERVE.json` at the repo
@@ -59,17 +59,18 @@ fn main() {
     report.set_meta("seed", seed);
     report.set_meta("quick", quick);
 
-    for schedule in ["interp", "fused"] {
+    for schedule in ["interp", "fused", "tiled"] {
         for precision in ["f32", "i8"] {
-            if schedule == "fused" && precision == "i8" {
-                // Not a silent cap: this composition point does not exist
+            if schedule != "interp" && precision == "i8" {
+                // Not a silent cap: these composition points do not exist
                 // (the i8 stream has its own record format).
-                println!("skipping fused-i8 (invalid composition; see the README matrix)");
+                println!("skipping {schedule}-i8 (invalid composition; see the README matrix)");
                 continue;
             }
             for workers in [1usize, 4] {
+                // Tiled autotunes its fast-memory budget (fast_mem 0).
                 let mut variant =
-                    ModelVariant::build("variant", &net, &order, schedule, precision, workers)
+                    ModelVariant::build("variant", &net, &order, schedule, precision, workers, 0)
                         .expect("valid composition point");
                 let label = variant.label();
                 variant.name = label.clone();

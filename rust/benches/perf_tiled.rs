@@ -1,0 +1,182 @@
+//! §Perf — interpreted vs fused vs cache-tiled stream (rows/s) at batch
+//! 128, on the paper's two non-MLP workload shapes (a BERT-like
+//! magnitude-pruned encoder MLP and a compact-growth network), each at
+//! **two connection orders**: the 2-optimal construction and a
+//! Connection-Reordering (simulated annealing) refinement. The tiled
+//! engine runs with an autotuned fast-memory budget by default
+//! (`--fast-mem` overrides); besides throughput the bench reports, per
+//! net × order, the chosen budget `M`, segment count, mean/max live-set
+//! size, and the **measured** explicit fills+spills next to the
+//! `Simulator`-**predicted** I/Os for that budget — asserting the
+//! measured spills never exceed the prediction, i.e. the executed
+//! explicit traffic stays inside the I/O model. All three engines are
+//! asserted bit-identical on every configuration. Emits JSON via
+//! `bench::harness` (repo-root `BENCH_PERF_TILED.json`).
+//!
+//! ```bash
+//! cargo bench --bench perf_tiled -- --batch 128
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::tiled::TiledEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::sim::simulate;
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+#[allow(clippy::too_many_arguments)]
+fn bench_order(
+    label: &str,
+    net: &Ffnn,
+    order: &ConnOrder,
+    fast_mem: usize,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    let mut rng = Pcg64::seed_from(0x71E0);
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+    let interp = StreamingEngine::new(net, order);
+    let fused = FusedEngine::new(net, order);
+    let tiled = if fast_mem == 0 {
+        let (engine, tune) = TiledEngine::autotuned(net, order).expect("autotune");
+        println!(
+            "  autotune: chose M={} (predicted {} I/Os, best {} over {} candidates)",
+            tune.chosen_m,
+            tune.chosen_predicted(),
+            tune.best_predicted,
+            tune.sweep.len()
+        );
+        engine
+    } else {
+        TiledEngine::new(net, order, fast_mem).expect("tiled compile")
+    };
+    let want = interp.infer(&x);
+    assert_eq!(fused.infer(&x), want, "{label}: fused must be bit-identical");
+    assert_eq!(tiled.infer(&x), want, "{label}: tiled must be bit-identical");
+
+    let st = tiled.program().stats().clone();
+    let predicted = simulate(net, order, st.m, PolicyKind::Min).total();
+    assert!(
+        (st.spills as u64) <= predicted,
+        "{label}: measured spills {} exceed predicted I/Os {predicted} at M={}",
+        st.spills,
+        st.m
+    );
+
+    let interp_times = measure(2, reps, || interp.infer(&x));
+    let fused_times = measure(2, reps, || fused.infer(&x));
+    let tiled_times = measure(2, reps, || tiled.infer(&x));
+    report.record_rate(label, "interp stream", batch as f64, &interp_times, "rows/s");
+    report.record_rate(label, "fused stream", batch as f64, &fused_times, "rows/s");
+    report.record_rate(label, "tiled stream", batch as f64, &tiled_times, "rows/s");
+
+    let tx = format!("{label} tiling");
+    report.record_exact(&tx, "fast-mem M", st.m as f64, "slots");
+    report.record_exact(&tx, "segments", st.n_segments as f64, "count");
+    report.record_exact(&tx, "mean live", st.mean_live(), "slots");
+    report.record_exact(&tx, "max live", st.max_live as f64, "slots");
+    report.record_exact(&tx, "measured fills", st.fills as f64, "rows");
+    report.record_exact(&tx, "measured spills", st.spills as f64, "rows");
+    report.record_exact(&tx, "measured fills+spills", (st.fills + st.spills) as f64, "rows");
+    report.record_exact(&tx, "predicted I/Os", predicted as f64, "I/Os");
+
+    let interp_rate = batch as f64 / Summary::of(&interp_times).median;
+    let fused_rate = batch as f64 / Summary::of(&fused_times).median;
+    let tiled_rate = batch as f64 / Summary::of(&tiled_times).median;
+    println!(
+        "  {label:<24} interp {interp_rate:>11.0} | fused {fused_rate:>11.0} | tiled \
+         {tiled_rate:>11.0} rows/s ({:.2}x vs interp) | M={} {} segs, live {:.1}/{}, \
+         {}+{} fills+spills vs {} predicted I/Os",
+        tiled_rate / interp_rate,
+        st.m,
+        st.n_segments,
+        st.mean_live(),
+        st.max_live,
+        st.fills,
+        st.spills,
+        predicted
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_net(
+    label: &str,
+    net: &Ffnn,
+    m: usize,
+    fast_mem: usize,
+    anneal_iters: u64,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    println!("{label}: {}", net.describe());
+    let initial = two_optimal_order(net);
+    bench_order(&format!("{label} 2-opt"), net, &initial, fast_mem, batch, reps, report);
+
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, anneal_iters);
+    let (annealed, rep) = reorder(net, &initial, &cfg);
+    println!(
+        "  annealed {anneal_iters} iters @ M={m}: {} -> {} I/Os ({:.1}% reduction)",
+        rep.initial_ios,
+        rep.final_ios,
+        rep.reduction() * 100.0
+    );
+    bench_order(&format!("{label} annealed"), net, &annealed, fast_mem, batch, reps, report);
+}
+
+fn main() {
+    let args = Spec::new("perf_tiled", "interp vs fused vs cache-tiled stream")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("mg", "100", "compact growth: design memory size")
+        .opt("m", "100", "fast-memory size the annealed order is tuned for")
+        .opt("fast-mem", "0", "tiled fast-memory slots M (0 = autotune)")
+        .opt("anneal-iters", "2000", "Connection Reordering iterations")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let anneal_iters = if quick { 200 } else { args.u64("anneal-iters") };
+    let m = args.usize("m");
+    let fast_mem = args.usize("fast-mem");
+
+    let mut report = Report::new("perf_tiled", "cache-tiled slot-compiled stream (§Perf)");
+    report.set_meta("batch", batch);
+    report.set_meta("anneal_iters", anneal_iters);
+    report.set_meta("m", m as u64);
+    report.set_meta("fast_mem", fast_mem as u64);
+    report.set_meta("quick", quick);
+
+    let mut rng = Pcg64::seed_from(0x71E1);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let bert = bert_mlp(&bert_spec, &mut rng);
+    bench_net("bert-like", &bert, m, fast_mem, anneal_iters, batch, reps, &mut report);
+
+    let cg_spec = CompactGrowthSpec::new(if quick { 30 } else { args.usize("mg") });
+    let (cg, _) = compact_growth(&cg_spec, &mut rng);
+    bench_net("compact-growth", &cg, m, fast_mem, anneal_iters, batch, reps, &mut report);
+
+    report.finish();
+}

@@ -82,13 +82,25 @@ impl Spec {
     }
 
     /// The standard `--schedule` option of the launcher: "interp" |
-    /// "fused", where "auto" defers to the config file's `schedule` key
-    /// (and ultimately to interp).
+    /// "fused" | "tiled", where "auto" defers to the config file's
+    /// `schedule` key (and ultimately to interp).
     pub fn schedule_opt(self) -> Self {
         self.opt(
             "schedule",
             "auto",
-            "op-stream schedule: interp | fused (auto = config key / interp)",
+            "op-stream schedule: interp | fused | tiled (auto = config key / interp)",
+        )
+    }
+
+    /// The standard `--fast-mem` option of the tiled schedule: slot
+    /// budget `M` for `exec::tiled`, where an explicit 0 — and "auto"
+    /// without a `fast_mem` config key — autotunes the budget through
+    /// the I/O simulator.
+    pub fn fast_mem_opt(self) -> Self {
+        self.opt(
+            "fast-mem",
+            "auto",
+            "tiled schedule: fast-memory slots M; 0 = autotune (auto = config key / autotune)",
         )
     }
 
@@ -444,6 +456,20 @@ mod tests {
         let a = s.parse(&sv(&["--schedule", "fused"])).unwrap();
         assert_eq!(a.str("schedule"), "fused");
         assert!(s.help_text().contains("--schedule"));
+    }
+
+    #[test]
+    fn fast_mem_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").fast_mem_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("fast-mem"), "auto", "default defers to config");
+        let a = s.parse(&sv(&["--fast-mem", "256"])).unwrap();
+        assert_eq!(a.usize("fast-mem"), 256);
+        // An explicit 0 stays distinguishable from "auto" (both autotune
+        // today, but 0 overrides any config-file value).
+        let a = s.parse(&sv(&["--fast-mem", "0"])).unwrap();
+        assert_eq!(a.usize("fast-mem"), 0);
+        assert!(s.help_text().contains("--fast-mem"));
     }
 
     #[test]

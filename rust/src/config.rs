@@ -88,6 +88,13 @@ impl Config {
         self.str("schedule", default)
     }
 
+    /// The fast-memory knob (`fast_mem` key): slot budget `M` for the
+    /// tiled schedule (`exec::tiled`). 0 = autotune the budget through
+    /// the I/O simulator. Only meaningful with `schedule = "tiled"`.
+    pub fn fast_mem(&self, default: usize) -> usize {
+        self.usize("fast_mem", default)
+    }
+
     /// The admission-control knob (`max_queue` key): maximum queued
     /// requests per model before new submissions are shed with an
     /// explicit queue-full response. 0 = unbounded (no shedding).
@@ -185,6 +192,14 @@ mod tests {
         assert_eq!(c.schedule("interp"), "interp", "default when unset");
         c.set_override("schedule=fused").unwrap();
         assert_eq!(c.schedule("interp"), "fused");
+    }
+
+    #[test]
+    fn fast_mem_knob() {
+        let mut c = Config::empty();
+        assert_eq!(c.fast_mem(0), 0, "default when unset (0 = autotune)");
+        c.set_override("fast_mem=128").unwrap();
+        assert_eq!(c.fast_mem(0), 128);
     }
 
     #[test]

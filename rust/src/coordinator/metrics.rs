@@ -9,6 +9,7 @@
 
 use crate::exec::fused::FusionStats;
 use crate::exec::parallel::ShardTimings;
+use crate::exec::tiled::TiledStats;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -120,6 +121,10 @@ pub struct Metrics {
     /// [`Metrics::link_fusion_stats`]); compile-time constants, stored
     /// once and re-serialized per snapshot.
     fusion_stats: Mutex<Vec<(String, FusionStats)>>,
+    /// Per-model tiling statistics from `TiledEngine`s (see
+    /// [`Metrics::link_tiled_stats`]); compile-time constants like the
+    /// fusion stats.
+    tiled_stats: Mutex<Vec<(String, TiledStats)>>,
 }
 
 impl Default for Metrics {
@@ -143,6 +148,7 @@ impl Metrics {
             compute: Histogram::new(),
             shard_sinks: Mutex::new(Vec::new()),
             fusion_stats: Mutex::new(Vec::new()),
+            tiled_stats: Mutex::new(Vec::new()),
         }
     }
 
@@ -152,6 +158,18 @@ impl Metrics {
     /// previous entry.
     pub fn link_fusion_stats(&self, model: &str, stats: FusionStats) {
         let mut sinks = self.fusion_stats.lock().expect("fusion stats poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = stats;
+        } else {
+            sinks.push((model.to_string(), stats));
+        }
+    }
+
+    /// Link the compile-time tiling statistics of a cache-tiled engine
+    /// so they appear in [`Metrics::snapshot`] under `tiled.<model>`.
+    /// Re-linking the same model replaces the previous entry.
+    pub fn link_tiled_stats(&self, model: &str, stats: TiledStats) {
+        let mut sinks = self.tiled_stats.lock().expect("tiled stats poisoned");
         if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
             entry.1 = stats;
         } else {
@@ -248,6 +266,15 @@ impl Metrics {
                 fusion = fusion.set(model, s.to_json());
             }
             j = j.set("fusion", fusion);
+        }
+        drop(stats);
+        let stats = self.tiled_stats.lock().expect("tiled stats poisoned");
+        if !stats.is_empty() {
+            let mut tiled = Json::obj();
+            for (model, s) in stats.iter() {
+                tiled = tiled.set(model, s.to_json());
+            }
+            j = j.set("tiled", tiled);
         }
         j
     }
@@ -364,6 +391,35 @@ mod tests {
         m.link_fusion_stats("mlp", FusionStats { n_ops: 1, n_singletons: 1, ..stats });
         let s2 = m.snapshot();
         assert_eq!(s2.path(&["fusion", "mlp", "ops"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn tiled_stats_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().get("tiled").is_none(), "no stats, no key");
+
+        let stats = TiledStats {
+            n_ops: 200,
+            m: 16,
+            n_segments: 12,
+            n_macro_ops: 40,
+            fills: 90,
+            spills: 30,
+            max_live: 15,
+            sum_live: 120,
+        };
+        m.link_tiled_stats("mlp", stats.clone());
+        let s = m.snapshot();
+        assert_eq!(s.path(&["tiled", "mlp", "segments"]).unwrap().as_u64(), Some(12));
+        assert_eq!(s.path(&["tiled", "mlp", "m"]).unwrap().as_u64(), Some(16));
+        assert_eq!(s.path(&["tiled", "mlp", "fills"]).unwrap().as_u64(), Some(90));
+        let mean = s.path(&["tiled", "mlp", "mean_live"]).unwrap().as_f64().unwrap();
+        assert!((mean - 10.0).abs() < 1e-9, "mean live {mean}");
+
+        // Re-linking the same model replaces, not duplicates.
+        m.link_tiled_stats("mlp", TiledStats { n_segments: 1, ..stats });
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["tiled", "mlp", "segments"]).unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use crate::exec::fused::FusionStats;
 use crate::exec::parallel::{ParallelEngine, ShardTimings};
+use crate::exec::tiled::TiledStats;
 use crate::exec::Engine;
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
@@ -39,14 +40,20 @@ pub struct ModelVariant {
     /// "i8" (compressed quantized stream). Orthogonal to sharding.
     pub precision: &'static str,
     /// Op-stream schedule of the serving engine: "interp" (default, the
-    /// per-connection stream interpreter) or "fused" (the run-length
-    /// block-compiled engine). Orthogonal to sharding; f32-only (see the
-    /// composition matrix in `exec`'s module docs).
+    /// per-connection stream interpreter), "fused" (the run-length
+    /// block-compiled engine) or "tiled" (the cache-tiled slot-compiled
+    /// engine). Orthogonal to sharding; f32-only (see the composition
+    /// matrix in `exec`'s module docs).
     pub schedule: &'static str,
     /// Compile-time fusion statistics when the serving engine is a
     /// `FusedEngine`; the server surfaces these in `Metrics::snapshot`
     /// under `fusion.<model>`.
     pub fusion: Option<FusionStats>,
+    /// Compile-time tiling statistics (segments, live sets, fills/spills
+    /// per connection) when the serving engine is a `TiledEngine`; the
+    /// server surfaces these in `Metrics::snapshot` under
+    /// `tiled.<model>`.
+    pub tiled: Option<TiledStats>,
     /// Batch shards of the serving engine (1 = serial). Together with
     /// `schedule` and `precision` this pins the point in the composition
     /// matrix; see [`ModelVariant::label`].
@@ -67,6 +74,7 @@ impl ModelVariant {
             precision: "f32",
             schedule: "interp",
             fusion: None,
+            tiled: None,
             workers: 1,
             summary: String::new(),
         }
@@ -81,10 +89,12 @@ impl ModelVariant {
 
     /// Build a serving variant from the composition-matrix knobs shared
     /// by `sparseflow serve`, `sparseflow loadgen`, and the serving
-    /// benches: `schedule` ∈ {interp, fused}, `precision` ∈ {f32, i8}
-    /// (i8 is interp-only — the compressed stream has its own record
-    /// format), `workers` > 1 wraps the engine in a batch-sharded
-    /// [`ParallelEngine`].
+    /// benches: `schedule` ∈ {interp, fused, tiled}, `precision` ∈
+    /// {f32, i8} (i8 is interp-only — the compressed stream has its own
+    /// record format), `workers` > 1 wraps the engine in a batch-sharded
+    /// [`ParallelEngine`]. `fast_mem` is the tiled schedule's
+    /// fast-memory budget `M` in slots (0 = autotune through the I/O
+    /// simulator); it is rejected for non-tiled schedules.
     pub fn build(
         name: &str,
         net: &Ffnn,
@@ -92,12 +102,19 @@ impl ModelVariant {
         schedule: &str,
         precision: &str,
         workers: usize,
+        fast_mem: usize,
     ) -> anyhow::Result<ModelVariant> {
         use crate::exec::fused::FusedEngine;
         use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
         use crate::exec::stream::StreamingEngine;
+        use crate::exec::tiled::{TiledEngine, TiledProgram};
 
+        anyhow::ensure!(
+            fast_mem == 0 || schedule == "tiled",
+            "--fast-mem only applies to --schedule tiled (got schedule {schedule:?})"
+        );
         let mut fusion = None;
+        let mut tiled_stats = None;
         let (engine, summary): (Arc<dyn Engine>, String) = match (precision, schedule) {
             ("f32", "interp") => (
                 Arc::new(StreamingEngine::new(net, order)) as Arc<dyn Engine>,
@@ -118,6 +135,31 @@ impl ModelVariant {
                 fusion = Some(st);
                 (Arc::new(fused) as Arc<dyn Engine>, summary)
             }
+            ("f32", "tiled") => {
+                let (engine, autotune) = if fast_mem == 0 {
+                    let (program, report) = TiledProgram::autotune(net, order)?;
+                    (TiledEngine::from_program(program), Some(report))
+                } else {
+                    (TiledEngine::new(net, order, fast_mem)?, None)
+                };
+                let st = engine.program().stats().clone();
+                let tuned = match &autotune {
+                    Some(r) => format!(" (autotuned, predicted {} I/Os)", r.chosen_predicted()),
+                    None => String::new(),
+                };
+                let summary = format!(
+                    "tiled schedule: M={}{tuned} -> {} segments (mean live {:.1}, max {}), \
+                     {:.2} fills + {:.2} spills per conn",
+                    st.m,
+                    st.n_segments,
+                    st.mean_live(),
+                    st.max_live,
+                    st.fills_per_conn(),
+                    st.spills_per_conn()
+                );
+                tiled_stats = Some(st);
+                (Arc::new(engine) as Arc<dyn Engine>, summary)
+            }
             ("i8", "interp") => {
                 let quant = QuantStreamEngine::new(net, order);
                 let p = quant.program();
@@ -131,18 +173,22 @@ impl ModelVariant {
                 );
                 (Arc::new(quant) as Arc<dyn Engine>, summary)
             }
-            ("i8", "fused") => anyhow::bail!(
-                "schedule 'fused' requires precision f32 (the i8 stream is already \
-                 compressed into its own record format; see the composition matrix \
-                 in README.md)"
+            ("i8", "fused" | "tiled") => anyhow::bail!(
+                "schedule {schedule:?} requires precision f32 (the i8 stream is \
+                 already compressed into its own record format; see the composition \
+                 matrix in README.md)"
             ),
             ("f32" | "i8", other) => {
-                anyhow::bail!("unknown schedule {other:?} (expected interp or fused)")
+                anyhow::bail!("unknown schedule {other:?} (expected interp, fused or tiled)")
             }
             (other, _) => anyhow::bail!("unknown precision {other:?} (expected f32 or i8)"),
         };
         let prec_tag: &'static str = if precision == "i8" { "i8" } else { "f32" };
-        let sched_tag: &'static str = if schedule == "fused" { "fused" } else { "interp" };
+        let sched_tag: &'static str = match schedule {
+            "fused" => "fused",
+            "tiled" => "tiled",
+            _ => "interp",
+        };
         let mut variant = if workers > 1 {
             ModelVariant::sharded(name, engine, workers)
         } else {
@@ -152,6 +198,9 @@ impl ModelVariant {
         variant = variant.with_schedule(sched_tag);
         if let Some(st) = fusion {
             variant = variant.with_fusion_stats(st);
+        }
+        if let Some(st) = tiled_stats {
+            variant = variant.with_tiled_stats(st);
         }
         variant.summary = summary;
         Ok(variant)
@@ -186,6 +235,13 @@ impl ModelVariant {
     /// server under `fusion.<model>`).
     pub fn with_fusion_stats(mut self, stats: FusionStats) -> ModelVariant {
         self.fusion = Some(stats);
+        self
+    }
+
+    /// Attach tiling statistics (linked into `Metrics::snapshot` by the
+    /// server under `tiled.<model>`).
+    pub fn with_tiled_stats(mut self, stats: TiledStats) -> ModelVariant {
+        self.tiled = Some(stats);
         self
     }
 
@@ -381,30 +437,44 @@ mod tests {
         let net = random_mlp(&MlpSpec::new(2, 10, 0.4), &mut rng);
         let order = two_optimal_order(&net);
 
-        let v = ModelVariant::build("m", &net, &order, "interp", "f32", 1).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0).unwrap();
         assert_eq!((v.label().as_str(), v.route().name()), ("interp-f32-w1", "stream"));
         assert!(!v.summary.is_empty());
 
-        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 1).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0).unwrap();
         assert_eq!(v.route().name(), "fused-stream");
         assert!(v.fusion.is_some(), "fused build carries stats");
 
-        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1, 0).unwrap();
         assert_eq!((v.label().as_str(), v.precision), ("interp-i8-w1", "i8"));
 
-        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 3).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 3, 0).unwrap();
         assert_eq!(v.label(), "fused-f32-w3");
         assert_eq!(v.route().name(), "sharded");
         assert!(v.shard_timings.is_some() && v.fusion.is_some());
 
+        // The tiled schedule, with an explicit budget and autotuned.
+        let v = ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 6).unwrap();
+        assert_eq!((v.label().as_str(), v.route().name()), ("tiled-f32-w1", "tiled-stream"));
+        assert_eq!(v.tiled.as_ref().unwrap().m, 6);
+        assert!(v.summary.contains("segments"), "{}", v.summary);
+        let v = ModelVariant::build("m", &net, &order, "tiled", "f32", 2, 0).unwrap();
+        assert_eq!(v.label(), "tiled-f32-w2");
+        assert!(v.summary.contains("autotuned"), "{}", v.summary);
+        assert!(v.shard_timings.is_some() && v.tiled.is_some());
+
         // The sharded + i8 composition keeps its precision tag.
-        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2, 0).unwrap();
         assert_eq!((v.precision, v.workers), ("i8", 2));
 
         // Invalid points are rejected, not silently coerced.
-        assert!(ModelVariant::build("m", &net, &order, "fused", "i8", 1).is_err());
-        assert!(ModelVariant::build("m", &net, &order, "jit", "f32", 1).is_err());
-        assert!(ModelVariant::build("m", &net, &order, "interp", "f16", 1).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "jit", "f32", 1, 0).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "interp", "f16", 1, 0).is_err());
+        // --fast-mem is tiled-only, and a sub-minimum budget fails.
+        assert!(ModelVariant::build("m", &net, &order, "interp", "f32", 1, 64).is_err());
+        assert!(ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 2).is_err());
     }
 
     #[test]

@@ -80,6 +80,9 @@ impl Server {
             if let Some(stats) = &variant.fusion {
                 metrics.link_fusion_stats(&name, stats.clone());
             }
+            if let Some(stats) = &variant.tiled {
+                metrics.link_tiled_stats(&name, stats.clone());
+            }
 
             let (tx, rx) = mpsc::channel::<QueueMsg>();
             let depth = Arc::new(AtomicUsize::new(0));
@@ -631,6 +634,28 @@ mod tests {
         assert_eq!(r.output.len(), net.n_outputs());
         let snap = h.metrics_snapshot();
         assert!(snap.path(&["fusion", "f", "macro_ops"]).is_some());
+    }
+
+    #[test]
+    fn tiled_model_serves_and_links_stats() {
+        use crate::ffnn::generate::{random_mlp, MlpSpec};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::util::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from(0x71D5);
+        let net = random_mlp(&MlpSpec::new(2, 8, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let variant = ModelVariant::build("t", &net, &order, "tiled", "f32", 1, 5).unwrap();
+        let mut router = Router::new();
+        router.register(variant);
+        let server = Server::start(router, ServerConfig::default());
+        let h = server.handle();
+        let r = h.infer("t", vec![1.0; net.n_inputs()]).unwrap();
+        assert_eq!(r.engine, "tiled-stream");
+        assert_eq!(r.output.len(), net.n_outputs());
+        let snap = h.metrics_snapshot();
+        assert_eq!(snap.path(&["tiled", "t", "m"]).unwrap().as_u64(), Some(5));
+        assert!(snap.path(&["tiled", "t", "segments"]).is_some());
     }
 
     #[test]

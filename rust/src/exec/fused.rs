@@ -38,27 +38,29 @@
 //! [`StreamingEngine`]: super::stream::StreamingEngine
 
 use super::batch::BatchMatrix;
-use super::stream::StreamProgram;
+use super::scratch::ScratchPool;
+use super::stream::{StreamOp, StreamProgram};
 use super::{init_values, relu_row, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
 use crate::util::json::Json;
-use std::sync::Mutex;
 
 /// Batch-column tile width of the microkernels. Eight f32 lanes fill one
 /// AVX2 register; the accumulator array stays in registers across a run.
 pub const LANES: usize = 8;
 
-/// Per-macro-op control bits (`ctrl` pool).
-const KIND_AXPY: u8 = 1;
+/// Per-macro-op control bits (`ctrl` pool). Shared with the cache-tiled
+/// engine ([`super::tiled`]), whose per-segment macro-ops use the same
+/// encoding over slot indices.
+pub(crate) const KIND_AXPY: u8 = 1;
 /// DotRun only: the run ends with the finish of a hidden destination —
 /// apply ReLU to the accumulator before the single write-back.
-const DOT_RELU: u8 = 2;
+pub(crate) const DOT_RELU: u8 = 2;
 
 /// Per-element flags of an AxpyRun (same convention as the quant stream):
 /// bit 0 = `dst_finish`, bit 1 = `dst_is_hidden`; ReLU fires on `0b11`.
-const FLAG_FINISH: u8 = 1;
-const FLAG_HIDDEN: u8 = 2;
+pub(crate) const FLAG_FINISH: u8 = 1;
+pub(crate) const FLAG_HIDDEN: u8 = 2;
 
 /// Compile-time fusion statistics of a [`FusedProgram`] (surfaced in
 /// serving metrics under `fusion.<model>` and by `benches/perf_fused`).
@@ -179,9 +181,7 @@ impl FusedProgram {
     }
 
     /// Run-length-fuse an already-compiled stream program. Greedy maximal
-    /// segmentation: at each position take the longer of the same-dst and
-    /// the same-src run (destination runs win ties — a DotRun keeps its
-    /// output row in accumulator registers), so the segment sequence
+    /// segmentation (see [`fuse_runs`]), so the segment sequence
     /// preserves stream order exactly.
     pub fn from_program(p: &StreamProgram) -> FusedProgram {
         let ops = p.ops();
@@ -197,62 +197,33 @@ impl FusedProgram {
             ..FusionStats::default()
         };
 
-        let mut i = 0;
-        while i < n {
-            let mut d = i + 1;
-            while d < n && ops[d].dst == ops[i].dst {
-                d += 1;
-            }
-            let mut s = i + 1;
-            while s < n && ops[s].src == ops[i].src {
-                s += 1;
-            }
-            let (end, axpy) = if d >= s { (d, false) } else { (s, true) };
-            if axpy {
-                pivots.push(ops[i].src);
-                ctrl.push(KIND_AXPY);
-                for op in &ops[i..end] {
-                    idx.push(op.dst);
-                    weights.push(op.weight);
-                    flags.push(
-                        u8::from(op.dst_finish) * FLAG_FINISH
-                            + u8::from(op.dst_is_hidden) * FLAG_HIDDEN,
-                    );
-                }
-            } else {
-                // `dst_finish` marks the globally last record of a
-                // destination, so within a same-dst run it can only sit
-                // on the final record — the run-end ReLU matches the
-                // interpreter's per-op ReLU placement.
-                debug_assert!(ops[i..end - 1].iter().all(|op| !op.dst_finish));
-                let last = ops[end - 1];
-                pivots.push(last.dst);
-                ctrl.push(if last.dst_finish && last.dst_is_hidden {
-                    DOT_RELU
+        fuse_runs(
+            ops,
+            0,
+            n,
+            &mut RunPools {
+                ctrl: &mut ctrl,
+                pivots: &mut pivots,
+                bounds: &mut bounds,
+                idx: &mut idx,
+                weights: &mut weights,
+                flags: &mut flags,
+            },
+            |row| row,
+            |len, axpy| {
+                stats.max_run_len = stats.max_run_len.max(len);
+                if len == 1 {
+                    stats.n_singletons += 1;
                 } else {
-                    0
-                });
-                for op in &ops[i..end] {
-                    idx.push(op.src);
-                    weights.push(op.weight);
-                    flags.push(0);
+                    stats.fused_ops += len;
+                    if axpy {
+                        stats.n_axpy_runs += 1;
+                    } else {
+                        stats.n_dot_runs += 1;
+                    }
                 }
-            }
-            bounds.push(end as u32);
-            let len = end - i;
-            stats.max_run_len = stats.max_run_len.max(len);
-            if len == 1 {
-                stats.n_singletons += 1;
-            } else {
-                stats.fused_ops += len;
-                if axpy {
-                    stats.n_axpy_runs += 1;
-                } else {
-                    stats.n_dot_runs += 1;
-                }
-            }
-            i = end;
-        }
+            },
+        );
 
         FusedProgram {
             ctrl,
@@ -365,13 +336,94 @@ impl FusedProgram {
     }
 }
 
+/// Structure-of-arrays pools a fusion pass appends macro-ops to —
+/// borrowed views of the identical field sets of [`FusedProgram`]
+/// (whole-stream) and the tiled program (per-segment, slot-indexed).
+pub(crate) struct RunPools<'a> {
+    pub ctrl: &'a mut Vec<u8>,
+    pub pivots: &'a mut Vec<u32>,
+    pub bounds: &'a mut Vec<u32>,
+    pub idx: &'a mut Vec<u32>,
+    pub weights: &'a mut Vec<f32>,
+    pub flags: &'a mut Vec<u8>,
+}
+
+/// Greedy maximal run-length fusion of `ops[lo..hi]` into `pools`: at
+/// each position take the longer of the same-dst and the same-src run
+/// (destination runs win ties — a DotRun keeps its output row in
+/// accumulator registers), preserving stream order exactly. The single
+/// source of truth for the fusion rule, shared by
+/// [`FusedProgram::from_program`] and the tiled compiler's per-segment
+/// pass: row ids pass through `map_row` (identity for the whole-stream
+/// program, the segment slot map for tiled) and `on_run` observes every
+/// emitted run's `(len, is_axpy)` for statistics.
+pub(crate) fn fuse_runs(
+    ops: &[StreamOp],
+    lo: usize,
+    hi: usize,
+    pools: &mut RunPools<'_>,
+    mut map_row: impl FnMut(u32) -> u32,
+    mut on_run: impl FnMut(usize, bool),
+) {
+    let mut i = lo;
+    while i < hi {
+        let mut d = i + 1;
+        while d < hi && ops[d].dst == ops[i].dst {
+            d += 1;
+        }
+        let mut s = i + 1;
+        while s < hi && ops[s].src == ops[i].src {
+            s += 1;
+        }
+        let (end, axpy) = if d >= s { (d, false) } else { (s, true) };
+        if axpy {
+            pools.pivots.push(map_row(ops[i].src));
+            pools.ctrl.push(KIND_AXPY);
+            for op in &ops[i..end] {
+                pools.idx.push(map_row(op.dst));
+                pools.weights.push(op.weight);
+                pools.flags.push(
+                    u8::from(op.dst_finish) * FLAG_FINISH
+                        + u8::from(op.dst_is_hidden) * FLAG_HIDDEN,
+                );
+            }
+        } else {
+            // `dst_finish` marks the globally last record of a
+            // destination, so within a same-dst run it can only sit on
+            // the final record — the run-end ReLU matches the
+            // interpreter's per-op ReLU placement (also when the run is
+            // a segment-bounded slice of the stream: a run cut short
+            // simply carries no finish flag).
+            debug_assert!(ops[i..end - 1].iter().all(|op| !op.dst_finish));
+            let last = ops[end - 1];
+            pools.pivots.push(map_row(last.dst));
+            pools.ctrl.push(if last.dst_finish && last.dst_is_hidden {
+                DOT_RELU
+            } else {
+                0
+            });
+            for op in &ops[i..end] {
+                pools.idx.push(map_row(op.src));
+                pools.weights.push(op.weight);
+                pools.flags.push(0);
+            }
+        }
+        pools.bounds.push(pools.idx.len() as u32);
+        on_run(end - i, axpy);
+        i = end;
+    }
+}
+
 /// Gather-dot microkernel: `dst += Σ_k w_k · src_k` over the batch row,
 /// [`LANES`] columns at a time. The destination chunk lives in a local
 /// accumulator array across the whole run — one read and one write of
 /// the dst row per run instead of one per connection. No src can alias
 /// dst (self-loops are rejected at graph construction), so caching the
-/// accumulator is observationally identical to the interpreter.
-fn dot_run(
+/// accumulator is observationally identical to the interpreter. Row
+/// indices may be global neuron ids (this module) or per-segment slot
+/// ids ([`super::tiled`]) — the kernel only requires them in-bounds and
+/// non-aliasing.
+pub(crate) fn dot_run(
     data: &mut [f32],
     batch: usize,
     dst: usize,
@@ -414,8 +466,9 @@ fn dot_run(
 /// Scatter-AXPY microkernel: `dsts[k] += w_k · src` over the batch row,
 /// [`LANES`] columns at a time with the source chunk held in locals (no
 /// dst can alias src — no self-loops). Per-element flags fire the
-/// mid-run ReLU exactly where the interpreter would.
-fn axpy_run(
+/// mid-run ReLU exactly where the interpreter would. Like [`dot_run`],
+/// shared with the cache-tiled engine over slot indices.
+pub(crate) fn axpy_run(
     data: &mut [f32],
     batch: usize,
     src: usize,
@@ -458,16 +511,17 @@ fn axpy_run(
 /// How many values buffers a [`FusedEngine`] keeps warm. Matches the
 /// typical batch-shard fan-out; beyond it, extra concurrent calls fall
 /// back to a fresh allocation.
-const SCRATCH_POOL_CAP: usize = 8;
+pub(crate) const SCRATCH_POOL_CAP: usize = 8;
 
 /// [`Engine`] wrapper over a fused program with reusable scratch: the
 /// serving hot path recycles its `n_neurons × batch` values buffer
-/// across calls instead of reallocating per request. The pool is keyed
-/// by shape and safe under concurrent `infer` (e.g. inside a
-/// `ParallelEngine`): contended callers simply allocate.
+/// across calls instead of reallocating per request through a
+/// [`ScratchPool`] — contention-proof (try-lock only, never blocks) and
+/// bounded by construction; the same mechanism backs the tiled engine's
+/// slot block.
 pub struct FusedEngine {
     program: FusedProgram,
-    scratch: Mutex<Vec<BatchMatrix>>,
+    scratch: ScratchPool,
     name: &'static str,
 }
 
@@ -480,7 +534,7 @@ impl FusedEngine {
     pub fn from_program(program: FusedProgram) -> FusedEngine {
         FusedEngine {
             program,
-            scratch: Mutex::new(Vec::new()),
+            scratch: ScratchPool::new(SCRATCH_POOL_CAP),
             name: "fused-stream",
         }
     }
@@ -501,24 +555,10 @@ impl FusedEngine {
 impl Engine for FusedEngine {
     fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
         let batch = inputs.batch();
-        let rows = self.program.n_neurons();
-        let mut values = {
-            let mut pool = self.scratch.lock().expect("scratch pool poisoned");
-            match pool.iter().position(|m| m.rows() == rows && m.batch() == batch) {
-                Some(i) => pool.swap_remove(i),
-                None => BatchMatrix::zeros(rows, batch),
-            }
-        };
+        let mut values = self.scratch.take(self.program.n_neurons(), batch);
         let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
         self.program.run_into(inputs, &mut values, &mut out);
-        let mut pool = self.scratch.lock().expect("scratch pool poisoned");
-        if pool.len() >= SCRATCH_POOL_CAP {
-            // Evict the oldest buffer: dynamic batching varies the batch
-            // width, and a full pool of stale shapes would otherwise
-            // disable reuse permanently.
-            pool.remove(0);
-        }
-        pool.push(values);
+        self.scratch.put(values);
         out
     }
 

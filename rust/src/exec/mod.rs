@@ -22,6 +22,14 @@
 //! * [`fused`] — the block-compiled variant of the stream: the op stream
 //!   is run-length-fused offline into DotRun/AxpyRun macro-ops executed
 //!   by batch-tiled microkernels, **bit-identical** to [`stream`].
+//! * [`tiled`] — the cache-tiled slot-compiled variant: a next-use
+//!   liveness pass partitions the op stream into segments whose live
+//!   neuron set fits an `M`-slot fast-memory budget; each segment runs
+//!   the fused microkernels over compact per-segment slot indices inside
+//!   a small contiguous slot block, with explicit fill/spill row copies
+//!   at segment boundaries (the paper's explicit I/Os, executed for
+//!   real). **Bit-identical** to [`stream`] for every budget; the budget
+//!   can be autotuned through the I/O simulator.
 //!
 //! # Engine lineup and composition
 //!
@@ -29,16 +37,19 @@
 //! |---|---|---|---|
 //! | `stream` | interp | f32 | reference |
 //! | `fused` | fused | f32 | bit-identical |
+//! | `tiled` | tiled | f32 | bit-identical |
 //! | `quant` | interp (compressed) | i8 | within certified bound |
 //! | `layerwise` / `dense` / `csr` | layer-wise | f32 | within 1e-5 |
 //!
 //! [`parallel::ParallelEngine`] (the `workers` knob) composes with every
 //! row: batch sharding is bit-identical to the serial inner engine, so
-//! `fused∘sharded` stays bit-identical to `stream` and `quant∘sharded`
-//! stays within the certified bound. The `schedule` knob
-//! (interp | fused) currently applies to the f32 path only — the i8
-//! stream is already compressed into its own record format, so
-//! `--precision i8 --schedule fused` is rejected at the CLI.
+//! `fused∘sharded` and `tiled∘sharded` stay bit-identical to `stream`
+//! and `quant∘sharded` stays within the certified bound. The `schedule`
+//! knob (interp | fused | tiled) currently applies to the f32 path only
+//! — the i8 stream is already compressed into its own record format, so
+//! `--precision i8` with a compiled schedule is rejected at the CLI.
+//! The tiled schedule adds the `--fast-mem` knob (slots `M`, or auto =
+//! simulator-driven autotune).
 
 pub mod batch;
 pub mod csr;
@@ -47,7 +58,9 @@ pub mod fused;
 pub mod layerwise;
 pub mod parallel;
 pub mod quant;
+pub mod scratch;
 pub mod stream;
+pub mod tiled;
 
 use batch::BatchMatrix;
 

@@ -1,0 +1,165 @@
+//! Contention-proof bounded scratch-buffer pool.
+//!
+//! The serving hot path of the compiled stream engines ([`fused`] and
+//! [`tiled`]) recycles its large working buffers (the `n_neurons × batch`
+//! values matrix, the tiled slot block) across `infer` calls instead of
+//! reallocating per request. Engines are shared across threads (batch
+//! sharding runs one engine from several workers at once), so the pool
+//! must be safe under concurrency **without ever blocking the hot path**:
+//! a fixed array of slots, each behind its own mutex, accessed only with
+//! `try_lock`. A contended or full slot is simply skipped — the caller
+//! falls back to a fresh allocation (on [`ScratchPool::take`]) or drops
+//! the buffer (on [`ScratchPool::put`]). The pool can therefore never
+//! hold more than `capacity` buffers and never serializes concurrent
+//! inference, while the common serial case reuses slot 0 every time.
+//!
+//! [`fused`]: super::fused
+//! [`tiled`]: super::tiled
+
+use super::batch::BatchMatrix;
+use std::sync::Mutex;
+
+/// A bounded pool of reusable [`BatchMatrix`] buffers (see module docs).
+#[derive(Debug)]
+pub struct ScratchPool {
+    slots: Box<[Mutex<Option<BatchMatrix>>]>,
+}
+
+impl ScratchPool {
+    /// A pool holding at most `capacity` buffers (capacity ≥ 1).
+    pub fn new(capacity: usize) -> ScratchPool {
+        let capacity = capacity.max(1);
+        ScratchPool {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Maximum number of buffers the pool can hold.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Claim a `rows × batch` buffer: a pooled buffer of the exact shape
+    /// if one can be taken without blocking, else a fresh allocation. The
+    /// returned buffer may hold stale data from a previous use — callers
+    /// must overwrite every element they read (the stream-engine
+    /// prologues do).
+    pub fn take(&self, rows: usize, batch: usize) -> BatchMatrix {
+        for slot in self.slots.iter() {
+            if let Ok(mut guard) = slot.try_lock() {
+                if guard.as_ref().is_some_and(|m| m.rows() == rows && m.batch() == batch) {
+                    return guard.take().expect("checked Some above");
+                }
+            }
+        }
+        BatchMatrix::zeros(rows, batch)
+    }
+
+    /// Return a buffer to the pool. Prefers an empty slot; if every
+    /// uncontended slot is occupied, the buffer **replaces** the first
+    /// one (most-recent-shape-wins — dynamic batching varies the batch
+    /// width, and a pool full of stale shapes would otherwise disable
+    /// reuse permanently). If every slot is contended the buffer is
+    /// dropped, keeping the pool bounded by construction.
+    pub fn put(&self, m: BatchMatrix) {
+        let mut fallback = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Ok(mut guard) = slot.try_lock() {
+                if guard.is_none() {
+                    *guard = Some(m);
+                    return;
+                }
+                if fallback.is_none() {
+                    fallback = Some(i);
+                }
+            }
+        }
+        if let Some(i) = fallback {
+            if let Ok(mut guard) = self.slots[i].try_lock() {
+                *guard = Some(m);
+            }
+        }
+        // All slots contended: drop `m`.
+    }
+
+    /// Number of buffers currently pooled (test/diagnostic helper;
+    /// contended slots count as occupied, so this never under-reports).
+    pub fn stored(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| match s.try_lock() {
+                Ok(guard) => guard.is_some(),
+                Err(_) => true,
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn reuses_matching_shape() {
+        let pool = ScratchPool::new(2);
+        let mut a = pool.take(3, 4);
+        a.fill_row(0, 7.0);
+        pool.put(a);
+        assert_eq!(pool.stored(), 1);
+        // Same shape comes back (stale contents and all).
+        let b = pool.take(3, 4);
+        assert_eq!(b.row(0), &[7.0; 4]);
+        assert_eq!(pool.stored(), 0);
+    }
+
+    #[test]
+    fn mismatched_shape_allocates_fresh() {
+        let pool = ScratchPool::new(2);
+        pool.put(BatchMatrix::zeros(3, 4));
+        let b = pool.take(5, 2);
+        assert_eq!((b.rows(), b.batch()), (5, 2));
+        // The mismatched buffer stays pooled for a later matching take.
+        assert_eq!(pool.stored(), 1);
+    }
+
+    #[test]
+    fn full_pool_replaces_rather_than_grows() {
+        let pool = ScratchPool::new(2);
+        pool.put(BatchMatrix::zeros(1, 1));
+        pool.put(BatchMatrix::zeros(2, 2));
+        assert_eq!(pool.stored(), 2);
+        // A third put replaces (most-recent-shape-wins) — never grows.
+        pool.put(BatchMatrix::zeros(9, 9));
+        assert_eq!(pool.stored(), 2);
+        let got = pool.take(9, 9);
+        assert_eq!((got.rows(), got.batch()), (9, 9));
+    }
+
+    /// Satellite acceptance: concurrent take/put traffic with varied
+    /// shapes never blocks, never corrupts shapes, and the pool stays
+    /// bounded at its fixed capacity throughout.
+    #[test]
+    fn concurrent_hammer_stays_bounded() {
+        let pool = Arc::new(ScratchPool::new(4));
+        let threads: Vec<_> = (0..8u64)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let rows = 1 + ((t + i) % 3) as usize;
+                        let batch = 1 + (i % 5) as usize;
+                        let m = pool.take(rows, batch);
+                        assert_eq!((m.rows(), m.batch()), (rows, batch));
+                        pool.put(m);
+                        assert!(pool.stored() <= pool.capacity());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("hammer thread panicked");
+        }
+        assert!(pool.stored() <= pool.capacity());
+    }
+}

@@ -1,0 +1,846 @@
+//! The cache-tiled slot-compiled stream engine — executing the paper's
+//! I/O-optimal order on real hardware.
+//!
+//! The simulator ([`crate::sim`]) *counts* the I/Os of a connection
+//! order against an `M`-slot fast memory, and Connection Reordering
+//! ([`crate::reorder`]) anneals the order to minimize them — but every
+//! real engine so far indexes the full `n_neurons × batch` value matrix,
+//! so the working-set locality those orders buy never becomes *actual*
+//! cache residency. This module closes that loop, the way EIE (Han et
+//! al., 2016) and SparseNN (Zhu et al., 2017) keep activations in a
+//! small on-chip buffer with compact local indices:
+//!
+//! * [`TiledProgram::compile`] runs a next-use liveness pass over the op
+//!   stream (the same offline next-use machinery Belady's MIN uses in
+//!   `ResidentSet::rekey_min`) and greedily partitions it into
+//!   **segments** whose live neuron set fits a fast-memory budget of
+//!   `M` slots (`M − 1` value rows — one slot is the in-flight
+//!   connection, exactly the simulator's capacity convention).
+//! * Within a segment, global neuron ids are remapped to compact
+//!   **slot indices** into a small contiguous `(M−1) × batch` slot
+//!   block, and the segment's ops are run-length-fused into the same
+//!   DotRun/AxpyRun macro-ops as [`super::fused`], executed by the same
+//!   8-lane batch-column microkernels — over slot ids, so the entire
+//!   segment runs inside the slot block.
+//! * Segment boundaries are the paper's **explicit I/Os**: a batched
+//!   *fill* copies each live row from the backing value matrix into its
+//!   slot, and a batched *spill* copies back every written row that is
+//!   still needed (next use in a later segment) or is an output. Dead
+//!   written values are deleted for free, mirroring the simulator's
+//!   efficient eviction policy.
+//!
+//! [`TiledProgram::autotune`] sweeps candidate budgets through the
+//! existing [`Simulator`] and picks the **smallest** `M` whose predicted
+//! traffic is within a tolerance of the best candidate: predicted I/Os
+//! are non-increasing in `M` (more memory never hurts under MIN), so the
+//! knee of that curve is the budget where the slot block is as small —
+//! as cache-resident — as it can be without paying real traffic for it.
+//!
+//! **Bit-identity.** Fills and spills are exact row copies, and within a
+//! segment the macro-ops replay the original per-connection f32 sequence
+//! (splitting a run at a segment boundary just writes the partial
+//! accumulator back and re-loads it — the same values in the same
+//! order), so the tiled engine is bit-identical to
+//! [`StreamingEngine`]/[`FusedEngine`] for every budget `M ≥ 3` —
+//! enforced over seeded nets by `tests/tiled.rs`, `tests/properties.rs`
+//! and the conformance fixtures.
+//!
+//! [`Simulator`]: crate::sim::Simulator
+//! [`StreamingEngine`]: super::stream::StreamingEngine
+//! [`FusedEngine`]: super::fused::FusedEngine
+
+use super::batch::BatchMatrix;
+use super::fused::{axpy_run, dot_run, fuse_runs, RunPools, DOT_RELU, KIND_AXPY};
+use super::scratch::ScratchPool;
+use super::stream::{StreamOp, StreamProgram};
+use super::{init_values, Engine};
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::ConnOrder;
+use crate::memory::PolicyKind;
+use crate::sim::Simulator;
+use crate::util::json::Json;
+
+/// "Not resident in the current segment" marker for the slot map.
+const NO_SLOT: u32 = u32::MAX;
+
+/// Compile-time tiling statistics of a [`TiledProgram`] (surfaced in
+/// serving metrics under `tiled.<model>` and by `benches/perf_tiled`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TiledStats {
+    /// Connections in the source stream.
+    pub n_ops: usize,
+    /// Fast-memory budget `M` the program was compiled for.
+    pub m: usize,
+    /// Segments the stream was partitioned into.
+    pub n_segments: usize,
+    /// Macro-ops across all segments.
+    pub n_macro_ops: usize,
+    /// Rows copied backing → slot block at segment starts (explicit
+    /// read-I/Os per inference, independent of batch width).
+    pub fills: usize,
+    /// Rows copied slot block → backing at segment ends (explicit
+    /// write-I/Os per inference; dead values are deleted for free).
+    /// Structurally bounded for *any* topological order and budget:
+    /// every spilled row is a distinct destination of the segment, so
+    /// per-segment spills ≤ segment ops and total spills ≤ `W` — which
+    /// a simulated total can never go below (it includes `W` connection
+    /// reads). Hence measured spills ≤ predicted I/Os, unconditionally
+    /// (asserted by `benches/perf_tiled` and `tests/tiled.rs`).
+    pub spills: usize,
+    /// Live-set size of the largest segment (= slot block rows used).
+    pub max_live: usize,
+    /// Sum of per-segment live-set sizes (for [`TiledStats::mean_live`]).
+    pub sum_live: u64,
+}
+
+impl TiledStats {
+    /// Mean live-set size across segments.
+    pub fn mean_live(&self) -> f64 {
+        if self.n_segments == 0 {
+            0.0
+        } else {
+            self.sum_live as f64 / self.n_segments as f64
+        }
+    }
+
+    /// Fill row-copies per connection.
+    pub fn fills_per_conn(&self) -> f64 {
+        if self.n_ops == 0 {
+            0.0
+        } else {
+            self.fills as f64 / self.n_ops as f64
+        }
+    }
+
+    /// Spill row-copies per connection.
+    pub fn spills_per_conn(&self) -> f64 {
+        if self.n_ops == 0 {
+            0.0
+        } else {
+            self.spills as f64 / self.n_ops as f64
+        }
+    }
+
+    /// Total explicit boundary traffic (fills + spills) per connection.
+    pub fn traffic_per_conn(&self) -> f64 {
+        self.fills_per_conn() + self.spills_per_conn()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ops", self.n_ops as u64)
+            .set("m", self.m as u64)
+            .set("segments", self.n_segments as u64)
+            .set("macro_ops", self.n_macro_ops as u64)
+            .set("fills", self.fills as u64)
+            .set("spills", self.spills as u64)
+            .set("mean_live", self.mean_live())
+            .set("max_live", self.max_live as u64)
+            .set("fills_per_conn", self.fills_per_conn())
+            .set("spills_per_conn", self.spills_per_conn())
+    }
+}
+
+/// Outcome of an [`TiledProgram::autotune`] budget sweep.
+#[derive(Clone, Debug)]
+pub struct AutotuneReport {
+    /// The chosen fast-memory budget `M`.
+    pub chosen_m: usize,
+    /// Best (minimum) predicted total I/Os over the sweep.
+    pub best_predicted: u64,
+    /// `(M, Simulator-predicted total I/Os under MIN)` per candidate, in
+    /// ascending `M`.
+    pub sweep: Vec<(usize, u64)>,
+    /// Relative slack over `best_predicted` the chosen budget may pay.
+    pub tolerance: f64,
+}
+
+impl AutotuneReport {
+    /// Predicted total I/Os at the chosen budget.
+    pub fn chosen_predicted(&self) -> u64 {
+        self.sweep
+            .iter()
+            .find(|&&(m, _)| m == self.chosen_m)
+            .map(|&(_, p)| p)
+            .unwrap_or(self.best_predicted)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("chosen_m", self.chosen_m as u64)
+            .set("chosen_predicted_ios", self.chosen_predicted())
+            .set("best_predicted_ios", self.best_predicted)
+            .set("tolerance", self.tolerance)
+            .set(
+                "sweep",
+                Json::Arr(
+                    self.sweep
+                        .iter()
+                        .map(|&(m, p)| Json::obj().set("m", m as u64).set("predicted_ios", p))
+                        .collect(),
+                ),
+            )
+    }
+}
+
+/// A cache-tiled slot-compiled stream program: per-segment slot-indexed
+/// macro-ops plus fill/spill lists, in structure-of-arrays layout.
+#[derive(Clone, Debug)]
+pub struct TiledProgram {
+    /// One control byte per macro-op (`KIND_AXPY` | `DOT_RELU`).
+    ctrl: Vec<u8>,
+    /// Shared *slot* per macro-op: dst of a DotRun, src of an AxpyRun.
+    pivots: Vec<u32>,
+    /// Macro-op `m` owns pool elements `bounds[m]..bounds[m+1]`.
+    bounds: Vec<u32>,
+    /// Per-element *slot* pool: srcs of a DotRun, dsts of an AxpyRun.
+    idx: Vec<u32>,
+    weights: Vec<f32>,
+    /// Per-element finish/hidden flags (AxpyRun elements; 0 for DotRun).
+    flags: Vec<u8>,
+    /// Segment `s` owns macro-ops `seg_macro[s]..seg_macro[s+1]`.
+    seg_macro: Vec<u32>,
+    /// Fill list: slot/global-row pairs, segment `s` owning
+    /// `seg_fill[s]..seg_fill[s+1]`.
+    fill_slots: Vec<u32>,
+    fill_rows: Vec<u32>,
+    seg_fill: Vec<u32>,
+    /// Spill list, same layout as fills.
+    spill_slots: Vec<u32>,
+    spill_rows: Vec<u32>,
+    seg_spill: Vec<u32>,
+    biases: Vec<f32>,
+    hidden_sources: Vec<u32>,
+    input_ids: Vec<u32>,
+    output_ids: Vec<u32>,
+    n_neurons: usize,
+    stats: TiledStats,
+}
+
+/// Per-segment compile state threaded through `close_segment`.
+struct SegState {
+    /// Global rows of the current segment, in slot order.
+    rows: Vec<u32>,
+    /// Parallel to `rows`: was the slot written (used as a dst)?
+    written: Vec<bool>,
+    /// Global row → slot (or [`NO_SLOT`]), reset at segment close.
+    slot_of: Vec<u32>,
+}
+
+impl TiledProgram {
+    /// Compile `net` with the given topological order under a
+    /// fast-memory budget of `m` slots. Fails for `m < 3` (the model's
+    /// minimum: capacity `m − 1 ≥ 2` fits one connection's endpoints, so
+    /// any larger in-degree simply splits into more segments rather than
+    /// failing).
+    pub fn compile(net: &Ffnn, order: &ConnOrder, m: usize) -> anyhow::Result<TiledProgram> {
+        TiledProgram::from_program(&StreamProgram::compile(net, order), m)
+    }
+
+    /// Tile an already-compiled stream program (see [`TiledProgram::compile`]).
+    pub fn from_program(p: &StreamProgram, m: usize) -> anyhow::Result<TiledProgram> {
+        anyhow::ensure!(
+            m >= 3,
+            "tiled compile requires M >= 3 (got {m}): capacity M-1 must hold \
+             both endpoints of a connection"
+        );
+        let ops = p.ops();
+        let n = ops.len();
+        let n_neurons = p.n_neurons();
+        let cap = (m - 1).min(n_neurons.max(2));
+
+        // Next-use liveness, reduced to what segmentation needs: the last
+        // stream position touching each row (a row is live-out of a
+        // segment ending at `hi` iff its last touch is at `hi` or later).
+        let mut last_pos = vec![0u32; n_neurons];
+        for (k, op) in ops.iter().enumerate() {
+            last_pos[op.src as usize] = k as u32;
+            last_pos[op.dst as usize] = k as u32;
+        }
+        let mut is_output = vec![false; n_neurons];
+        for &v in p.output_ids() {
+            is_output[v as usize] = true;
+        }
+
+        let mut prog = TiledProgram {
+            ctrl: Vec::new(),
+            pivots: Vec::new(),
+            bounds: vec![0],
+            idx: Vec::with_capacity(n),
+            weights: Vec::with_capacity(n),
+            flags: Vec::with_capacity(n),
+            seg_macro: vec![0],
+            fill_slots: Vec::new(),
+            fill_rows: Vec::new(),
+            seg_fill: vec![0],
+            spill_slots: Vec::new(),
+            spill_rows: Vec::new(),
+            seg_spill: vec![0],
+            biases: p.biases().to_vec(),
+            hidden_sources: p.hidden_sources().to_vec(),
+            input_ids: p.input_ids().to_vec(),
+            output_ids: p.output_ids().to_vec(),
+            n_neurons,
+            stats: TiledStats {
+                n_ops: n,
+                m,
+                ..TiledStats::default()
+            },
+        };
+
+        // Greedy maximal segmentation: extend the segment until the next
+        // op's endpoints would push the live set past the slot budget.
+        let mut seg = SegState {
+            rows: Vec::with_capacity(cap),
+            written: Vec::with_capacity(cap),
+            slot_of: vec![NO_SLOT; n_neurons],
+        };
+        let mut lo = 0usize;
+        for (k, op) in ops.iter().enumerate() {
+            let new = usize::from(seg.slot_of[op.src as usize] == NO_SLOT)
+                + usize::from(seg.slot_of[op.dst as usize] == NO_SLOT);
+            if seg.rows.len() + new > cap {
+                prog.close_segment(ops, lo, k, &mut seg, &last_pos, &is_output);
+                lo = k;
+            }
+            for row in [op.src, op.dst] {
+                if seg.slot_of[row as usize] == NO_SLOT {
+                    seg.slot_of[row as usize] = seg.rows.len() as u32;
+                    seg.rows.push(row);
+                    seg.written.push(false);
+                }
+            }
+            seg.written[seg.slot_of[op.dst as usize] as usize] = true;
+        }
+        if lo < n {
+            prog.close_segment(ops, lo, n, &mut seg, &last_pos, &is_output);
+        }
+        prog.stats.fills = prog.fill_rows.len();
+        prog.stats.spills = prog.spill_rows.len();
+        prog.stats.n_macro_ops = prog.pivots.len();
+        Ok(prog)
+    }
+
+    /// Emit fills, slot-remapped macro-ops and spills for `ops[lo..hi]`,
+    /// then reset the segment state.
+    fn close_segment(
+        &mut self,
+        ops: &[StreamOp],
+        lo: usize,
+        hi: usize,
+        seg: &mut SegState,
+        last_pos: &[u32],
+        is_output: &[bool],
+    ) {
+        debug_assert!(lo < hi && !seg.rows.is_empty());
+        // Fills: every row the segment touches enters the slot block with
+        // its current backing value (bias / input / partial sum / finished
+        // activation — all maintained in the backing matrix).
+        for (slot, &row) in seg.rows.iter().enumerate() {
+            self.fill_slots.push(slot as u32);
+            self.fill_rows.push(row);
+        }
+        self.seg_fill.push(self.fill_rows.len() as u32);
+
+        // Macro-ops: the shared greedy run-length fusion
+        // ([`fuse_runs`], the same single source of truth
+        // `FusedProgram::from_program` uses), with every row index
+        // remapped to its segment slot. `dst_finish` can only sit on
+        // the globally last record of a destination, so the run-end
+        // ReLU placement argument carries over unchanged.
+        let slot_of = &seg.slot_of;
+        fuse_runs(
+            ops,
+            lo,
+            hi,
+            &mut RunPools {
+                ctrl: &mut self.ctrl,
+                pivots: &mut self.pivots,
+                bounds: &mut self.bounds,
+                idx: &mut self.idx,
+                weights: &mut self.weights,
+                flags: &mut self.flags,
+            },
+            |row| slot_of[row as usize],
+            |_, _| {},
+        );
+        self.seg_macro.push(self.pivots.len() as u32);
+
+        // Spills: written rows still needed after this segment (next use
+        // at position ≥ hi) or finished/partial outputs the epilogue
+        // gathers from the backing matrix. Dead values are dropped free.
+        for (slot, &row) in seg.rows.iter().enumerate() {
+            let live_out = last_pos[row as usize] >= hi as u32 || is_output[row as usize];
+            if seg.written[slot] && live_out {
+                self.spill_slots.push(slot as u32);
+                self.spill_rows.push(row);
+            }
+        }
+        self.seg_spill.push(self.spill_rows.len() as u32);
+
+        self.stats.n_segments += 1;
+        self.stats.sum_live += seg.rows.len() as u64;
+        self.stats.max_live = self.stats.max_live.max(seg.rows.len());
+        for &row in &seg.rows {
+            seg.slot_of[row as usize] = NO_SLOT;
+        }
+        seg.rows.clear();
+        seg.written.clear();
+    }
+
+    /// Default autotune sweep: a geometric ladder of budgets up to
+    /// "everything fits" (`n_neurons + 2`).
+    pub fn default_candidates(n_neurons: usize) -> Vec<usize> {
+        let top = (n_neurons + 2).max(3);
+        let mut ms = Vec::new();
+        let mut m = 4usize;
+        while m < top {
+            ms.push(m);
+            m *= 2;
+        }
+        ms.push(top);
+        ms
+    }
+
+    /// Autotune the fast-memory budget with the default candidate ladder
+    /// and a 5% traffic tolerance (see [`TiledProgram::autotune_with`]).
+    pub fn autotune(
+        net: &Ffnn,
+        order: &ConnOrder,
+    ) -> anyhow::Result<(TiledProgram, AutotuneReport)> {
+        TiledProgram::autotune_with(
+            net,
+            order,
+            &TiledProgram::default_candidates(net.n_neurons()),
+            0.05,
+        )
+    }
+
+    /// Sweep candidate budgets through the I/O [`Simulator`] (MIN
+    /// policy — the offline-optimal the tiling approximates) and compile
+    /// with the **smallest** `M` whose predicted total traffic is within
+    /// `tol` of the best candidate. Predicted I/Os only improve with
+    /// more memory, so this picks the knee: the smallest slot block that
+    /// is traffic-near-optimal, i.e. the most cache-resident execution
+    /// that does not pay for its compactness in real I/Os.
+    pub fn autotune_with(
+        net: &Ffnn,
+        order: &ConnOrder,
+        candidates: &[usize],
+        tol: f64,
+    ) -> anyhow::Result<(TiledProgram, AutotuneReport)> {
+        let mut ms: Vec<usize> = candidates.iter().copied().filter(|&m| m >= 3).collect();
+        ms.sort_unstable();
+        ms.dedup();
+        anyhow::ensure!(!ms.is_empty(), "autotune needs at least one candidate M >= 3");
+        let mut sim = Simulator::new(net);
+        let sweep: Vec<(usize, u64)> = ms
+            .iter()
+            .map(|&m| (m, sim.run(order, m, PolicyKind::Min).total()))
+            .collect();
+        let best = sweep.iter().map(|&(_, p)| p).min().expect("non-empty sweep");
+        let budget = best + (best as f64 * tol) as u64;
+        let chosen_m = sweep
+            .iter()
+            .find(|&&(_, p)| p <= budget)
+            .map(|&(m, _)| m)
+            .expect("best itself is within budget");
+        let program = TiledProgram::compile(net, order, chosen_m)?;
+        Ok((
+            program,
+            AutotuneReport {
+                chosen_m,
+                best_predicted: best,
+                sweep,
+                tolerance: tol,
+            },
+        ))
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn n_macro_ops(&self) -> usize {
+        self.pivots.len()
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.seg_macro.len() - 1
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    /// Rows of the slot block an execution needs (the largest segment's
+    /// live set — at most `M − 1`).
+    pub fn slot_rows(&self) -> usize {
+        self.stats.max_live
+    }
+
+    pub fn input_ids(&self) -> &[u32] {
+        &self.input_ids
+    }
+
+    pub fn output_ids(&self) -> &[u32] {
+        &self.output_ids
+    }
+
+    pub fn stats(&self) -> &TiledStats {
+        &self.stats
+    }
+
+    /// Execute into caller-provided buffers: `values` is the backing
+    /// `n_neurons × batch` matrix (slow memory), `slots` the
+    /// `slot_rows() × batch` fast-memory block. Both may hold stale data
+    /// — the prologue overwrites every backing row and every slot is
+    /// filled before its segment reads it, which is what lets
+    /// [`TiledEngine`] recycle both buffers.
+    pub fn run_into(
+        &self,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        let batch = inputs.batch();
+        assert_eq!(inputs.rows(), self.input_ids.len(), "input row count");
+        assert_eq!(values.rows(), self.n_neurons);
+        assert_eq!(values.batch(), batch);
+        assert_eq!(slots.rows(), self.slot_rows(), "slot block rows");
+        assert_eq!(slots.batch(), batch);
+        assert_eq!(out.rows(), self.output_ids.len());
+        assert_eq!(out.batch(), batch);
+
+        init_values(values, inputs, &self.biases, &self.input_ids, &self.hidden_sources);
+
+        for s in 0..self.n_segments() {
+            // Fill: batched row copies backing → slot block (the
+            // segment's explicit read-I/Os).
+            for f in self.seg_fill[s] as usize..self.seg_fill[s + 1] as usize {
+                slots
+                    .row_mut(self.fill_slots[f] as usize)
+                    .copy_from_slice(values.row(self.fill_rows[f] as usize));
+            }
+            // The segment body runs entirely inside the slot block. All
+            // slot indices were assigned < slot_rows() at compile time.
+            let data = slots.data_mut();
+            for mi in self.seg_macro[s] as usize..self.seg_macro[s + 1] as usize {
+                let (elo, ehi) = (self.bounds[mi] as usize, self.bounds[mi + 1] as usize);
+                let pivot = self.pivots[mi] as usize;
+                if self.ctrl[mi] & KIND_AXPY != 0 {
+                    axpy_run(
+                        data,
+                        batch,
+                        pivot,
+                        &self.idx[elo..ehi],
+                        &self.weights[elo..ehi],
+                        &self.flags[elo..ehi],
+                    );
+                } else {
+                    dot_run(
+                        data,
+                        batch,
+                        pivot,
+                        &self.idx[elo..ehi],
+                        &self.weights[elo..ehi],
+                        self.ctrl[mi] & DOT_RELU != 0,
+                    );
+                }
+            }
+            // Spill: batched row copies slot block → backing (the
+            // segment's explicit write-I/Os).
+            for f in self.seg_spill[s] as usize..self.seg_spill[s + 1] as usize {
+                values
+                    .row_mut(self.spill_rows[f] as usize)
+                    .copy_from_slice(slots.row(self.spill_slots[f] as usize));
+            }
+        }
+
+        // Epilogue: gather outputs from the backing matrix.
+        for (i, &v) in self.output_ids.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(values.row(v as usize));
+        }
+    }
+}
+
+/// [`Engine`] wrapper over a tiled program with reusable scratch for
+/// both the backing value matrix and the slot block (two bounded
+/// [`ScratchPool`]s — contention-proof, shared mechanism with
+/// [`super::fused::FusedEngine`]).
+pub struct TiledEngine {
+    program: TiledProgram,
+    values_pool: ScratchPool,
+    slots_pool: ScratchPool,
+    name: &'static str,
+}
+
+impl TiledEngine {
+    /// Compile and wrap (see [`TiledProgram::compile`] for the `m`
+    /// contract).
+    pub fn new(net: &Ffnn, order: &ConnOrder, m: usize) -> anyhow::Result<TiledEngine> {
+        Ok(TiledEngine::from_program(TiledProgram::compile(net, order, m)?))
+    }
+
+    /// Compile with an autotuned fast-memory budget (see
+    /// [`TiledProgram::autotune`]).
+    pub fn autotuned(
+        net: &Ffnn,
+        order: &ConnOrder,
+    ) -> anyhow::Result<(TiledEngine, AutotuneReport)> {
+        let (program, report) = TiledProgram::autotune(net, order)?;
+        Ok((TiledEngine::from_program(program), report))
+    }
+
+    /// Wrap an already-compiled tiled program.
+    pub fn from_program(program: TiledProgram) -> TiledEngine {
+        TiledEngine {
+            program,
+            values_pool: ScratchPool::new(super::fused::SCRATCH_POOL_CAP),
+            slots_pool: ScratchPool::new(super::fused::SCRATCH_POOL_CAP),
+            name: "tiled-stream",
+        }
+    }
+
+    /// Same engine but labelled (e.g. "tiled-annealed") for reports.
+    pub fn with_name(
+        net: &Ffnn,
+        order: &ConnOrder,
+        m: usize,
+        name: &'static str,
+    ) -> anyhow::Result<TiledEngine> {
+        Ok(TiledEngine {
+            name,
+            ..TiledEngine::new(net, order, m)?
+        })
+    }
+
+    pub fn program(&self) -> &TiledProgram {
+        &self.program
+    }
+}
+
+impl Engine for TiledEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let mut values = self.values_pool.take(self.program.n_neurons(), batch);
+        let mut slots = self.slots_pool.take(self.program.slot_rows(), batch);
+        let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
+        self.program.run_into(inputs, &mut values, &mut slots, &mut out);
+        self.values_pool.put(values);
+        self.slots_pool.put(slots);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.program.input_ids().len()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.program.output_ids().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::fused::FusedProgram;
+    use crate::exec::stream::StreamingEngine;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::graph::{Conn, NeuronKind};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::util::rng::Pcg64;
+
+    /// 2 inputs → 1 hidden (ReLU) → 1 output (same net as stream tests).
+    fn tiny() -> Ffnn {
+        Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Input,
+                NeuronKind::Hidden,
+                NeuronKind::Output,
+            ],
+            vec![0.0, 0.0, 0.5, -1.0],
+            vec![
+                Conn { src: 0, dst: 2, weight: 2.0 },
+                Conn { src: 1, dst: 2, weight: -3.0 },
+                Conn { src: 2, dst: 3, weight: 1.5 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn hand_computed_forward_matches_stream_bitwise() {
+        let net = tiny();
+        let order = two_optimal_order(&net);
+        for m in [3, 4, 6] {
+            let tiled = TiledEngine::new(&net, &order, m).unwrap();
+            let interp = StreamingEngine::new(&net, &order);
+            let inputs = BatchMatrix::from_rows(2, 2, vec![1.0, 2.0, 1.0, 0.0]);
+            let out = tiled.infer(&inputs);
+            // col0: h = relu(0.5 + 2·1 − 3·1) = 0 ⇒ out = −1; col1: 5.75.
+            let r = out.row(0);
+            assert!((r[0] - (-1.0)).abs() < 1e-6, "M={m}: {r:?}");
+            assert!((r[1] - 5.75).abs() < 1e-6, "M={m}: {r:?}");
+            assert_eq!(out, interp.infer(&inputs), "M={m}");
+        }
+    }
+
+    #[test]
+    fn m_below_three_rejected() {
+        let net = tiny();
+        let order = two_optimal_order(&net);
+        assert!(TiledProgram::compile(&net, &order, 2).is_err());
+        assert!(TiledProgram::compile(&net, &order, 0).is_err());
+        assert!(TiledProgram::compile(&net, &order, 3).is_ok());
+    }
+
+    #[test]
+    fn everything_fits_is_one_segment_matching_fused() {
+        let mut rng = Pcg64::seed_from(0x71D1);
+        let net = random_mlp(&MlpSpec::new(3, 14, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+        let m = net.n_neurons() + 2;
+        let tiled = TiledProgram::compile(&net, &order, m).unwrap();
+        assert_eq!(tiled.n_segments(), 1, "everything fits -> one segment");
+        // One segment ≡ the fused program: the same macro-op structure
+        // (and therefore the same arithmetic), just slot-indexed.
+        let fused = FusedProgram::compile(&net, &order);
+        assert_eq!(tiled.n_macro_ops(), fused.stats().n_macro_ops());
+        // Every touched row fills once; spills = outputs + nothing else
+        // (no row is needed "later" after the only segment).
+        assert_eq!(tiled.stats().fills, tiled.stats().max_live);
+        assert_eq!(tiled.stats().spills, net.n_outputs());
+    }
+
+    #[test]
+    fn tight_memory_splits_but_stays_bit_identical() {
+        let mut rng = Pcg64::seed_from(0x71D2);
+        // Max in-degree far above the capacity of M = 3.
+        let net = random_mlp(&MlpSpec::new(3, 16, 0.6), &mut rng);
+        let order = two_optimal_order(&net);
+        let interp = StreamingEngine::new(&net, &order);
+        let x = BatchMatrix::random(net.n_inputs(), 9, &mut rng);
+        let want = interp.infer(&x);
+        for m in [3, 4, 5, 8, 13] {
+            let tiled = TiledEngine::new(&net, &order, m).unwrap();
+            assert_eq!(tiled.infer(&x), want, "M={m}");
+            let st = tiled.program().stats();
+            assert!(st.n_segments > 1, "M={m} should need several segments");
+            assert!(st.max_live <= m - 1, "M={m}: live set exceeded budget");
+        }
+    }
+
+    #[test]
+    fn segment_boundary_splits_axpy_run() {
+        // src 0 fans out to three destinations: the 2-optimal order keeps
+        // [0→1, 0→2, 0→3] adjacent, a fusable same-src run. With M = 4
+        // (capacity 3) the run must split mid-way: {0,1,2} fills the
+        // budget, so 0→3 opens a new segment.
+        let net = Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Output,
+                NeuronKind::Output,
+                NeuronKind::Output,
+            ],
+            vec![0.0, 1.0, 2.0, 3.0],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 0, dst: 3, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let tiled = TiledEngine::new(&net, &order, 4).unwrap();
+        assert_eq!(tiled.program().n_segments(), 2);
+        let interp = StreamingEngine::new(&net, &order);
+        let x = BatchMatrix::from_rows(1, 3, vec![1.0, -2.0, 0.5]);
+        assert_eq!(tiled.infer(&x), interp.infer(&x));
+        // Whole-stream fused view would be a single length-3 AxpyRun; the
+        // tiled split costs one extra macro-op, not correctness.
+        assert_eq!(FusedProgram::compile(&net, &order).n_macro_ops(), 1);
+        assert_eq!(tiled.program().n_macro_ops(), 2);
+    }
+
+    #[test]
+    fn mid_run_relu_survives_segment_boundaries() {
+        // Same net as the fused mid-run-ReLU test: h1 finishes inside a
+        // same-src run. Checked at every budget, including ones that cut
+        // the run.
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Hidden, NeuronKind::Output],
+            vec![0.0, -5.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 10.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let interp = StreamingEngine::new(&net, &order);
+        for m in [3, 4, 5] {
+            let tiled = TiledEngine::new(&net, &order, m).unwrap();
+            // x = 2: h = relu(−5 + 2) = 0 ⇒ out = 2 (not −28).
+            let out = tiled.infer(&BatchMatrix::from_rows(1, 1, vec![2.0]));
+            assert!((out.row(0)[0] - 2.0).abs() < 1e-6, "M={m}: {:?}", out.row(0));
+            let x = BatchMatrix::random(1, 13, &mut Pcg64::seed_from(7));
+            assert_eq!(tiled.infer(&x), interp.infer(&x), "M={m}");
+        }
+    }
+
+    #[test]
+    fn empty_batch() {
+        let net = tiny();
+        let order = two_optimal_order(&net);
+        let tiled = TiledEngine::new(&net, &order, 3).unwrap();
+        let out = tiled.infer(&BatchMatrix::zeros(2, 0));
+        assert_eq!((out.rows(), out.batch()), (1, 0));
+        assert_eq!(out, StreamingEngine::new(&net, &order).infer(&BatchMatrix::zeros(2, 0)));
+    }
+
+    #[test]
+    fn autotune_picks_smallest_near_optimal_budget() {
+        let mut rng = Pcg64::seed_from(0x71D3);
+        let net = random_mlp(&MlpSpec::new(4, 20, 0.3), &mut rng);
+        let order = two_optimal_order(&net);
+        let (program, report) = TiledProgram::autotune(&net, &order).unwrap();
+        assert_eq!(program.stats().m, report.chosen_m);
+        assert!(report.chosen_m >= 3);
+        // Within tolerance of the best predicted traffic...
+        let budget = report.best_predicted
+            + (report.best_predicted as f64 * report.tolerance) as u64;
+        assert!(report.chosen_predicted() <= budget);
+        // ...and no smaller candidate qualifies.
+        for &(m, p) in &report.sweep {
+            if m < report.chosen_m {
+                assert!(p > budget, "M={m} (predicted {p}) should have been chosen");
+            }
+        }
+        // The sweep is monotone non-increasing (more memory never hurts
+        // under MIN), so the chosen budget sits at the knee.
+        for w in report.sweep.windows(2) {
+            assert!(w[0].1 >= w[1].1, "predicted I/Os increased with memory: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let net = tiny();
+        let tiled = TiledProgram::compile(&net, &two_optimal_order(&net), 3).unwrap();
+        let j = tiled.stats().to_json();
+        assert_eq!(j.get("ops").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("m").unwrap().as_u64(), Some(3));
+        assert!(j.get("segments").unwrap().as_u64().unwrap() >= 1);
+        assert!(j.get("fills").unwrap().as_u64().unwrap() >= 2);
+        assert!(j.get("fills_per_conn").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -61,31 +61,47 @@ impl ConnOrder {
     /// Check that this is a permutation and a *topological* order of the
     /// connections: whenever `e_i.dst == e_j.src`, `e_i` comes first.
     pub fn is_topological(&self, net: &Ffnn) -> bool {
-        if self.perm.len() != net.n_conns() {
+        perm_is_topological(net, &self.perm)
+    }
+
+    /// Consume the order, returning the underlying permutation without
+    /// copying (used to recycle allocations in the annealing loop).
+    pub fn into_perm(self) -> Vec<u32> {
+        self.perm
+    }
+}
+
+/// Slice form of [`ConnOrder::is_topological`] — the borrowed-perm
+/// simulate path ([`crate::sim::Simulator::run_perm`] and friends)
+/// validates candidate orders without materializing a `ConnOrder`.
+pub fn perm_is_topological(net: &Ffnn, perm: &[u32]) -> bool {
+    if perm.len() != net.n_conns() {
+        return false;
+    }
+    let mut seen = vec![false; net.n_conns()];
+    for &ci in perm {
+        let ci = ci as usize;
+        if ci >= net.n_conns() || seen[ci] {
             return false;
         }
-        let mut seen = vec![false; net.n_conns()];
-        for &ci in &self.perm {
-            let ci = ci as usize;
-            if ci >= net.n_conns() || seen[ci] {
+        seen[ci] = true;
+    }
+    let mut pos = vec![0u32; perm.len()];
+    for (k, &ci) in perm.iter().enumerate() {
+        pos[ci as usize] = k as u32;
+    }
+    // For each neuron: the last incoming connection must precede the
+    // first outgoing connection.
+    for v in 0..net.n_neurons() as NeuronId {
+        let last_in = net.in_conns(v).iter().map(|&c| pos[c as usize]).max();
+        let first_out = net.out_conns(v).iter().map(|&c| pos[c as usize]).min();
+        if let (Some(li), Some(fo)) = (last_in, first_out) {
+            if li >= fo {
                 return false;
             }
-            seen[ci] = true;
         }
-        // For each neuron: the last incoming connection must precede the
-        // first outgoing connection.
-        let pos = self.positions();
-        for v in 0..net.n_neurons() as NeuronId {
-            let last_in = net.in_conns(v).iter().map(|&c| pos[c as usize]).max();
-            let first_out = net.out_conns(v).iter().map(|&c| pos[c as usize]).min();
-            if let (Some(li), Some(fo)) = (last_in, first_out) {
-                if li >= fo {
-                    return false;
-                }
-            }
-        }
-        true
     }
+    true
 }
 
 /// The 2-optimal order from the proof of Theorem 1: take a topological

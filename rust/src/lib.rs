@@ -21,10 +21,13 @@
 //!    [`exec::parallel::ParallelEngine`] running any of them on
 //!    concurrent column shards (bit-identical to serial), the
 //!    compressed quantized stream ([`exec::quant`]: delta/varint indices
-//!    + per-group i8 weights, with a certified output-error bound), and
-//!    the fused block-compiled stream ([`exec::fused`]: run-length
+//!    + per-group i8 weights, with a certified output-error bound), the
+//!    fused block-compiled stream ([`exec::fused`]: run-length
 //!    macro-ops + batch-tiled microkernels, bit-identical to the
-//!    interpreter).
+//!    interpreter), and the cache-tiled slot-compiled stream
+//!    ([`exec::tiled`]: liveness-segmented execution inside an `M`-slot
+//!    block with explicit fill/spill I/Os at segment boundaries,
+//!    bit-identical for every budget, autotuned through the simulator).
 //! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
 //!    artifacts and executes them from Rust.
 //! 7. [`coordinator`] — batched inference serving: request queue,
@@ -75,6 +78,7 @@ pub mod prelude {
         parallel::ParallelEngine,
         quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram},
         stream::{StreamProgram, StreamingEngine},
+        tiled::{AutotuneReport, TiledEngine, TiledProgram, TiledStats},
         Engine,
     };
     pub use crate::ffnn::{

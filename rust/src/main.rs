@@ -333,6 +333,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             .workers_opt()
             .precision_opt()
             .schedule_opt()
+            .fast_mem_opt()
             .max_queue_opt()
             .deadline_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
@@ -384,19 +385,32 @@ fn cmd_serve(args: &[String]) -> i32 {
         "auto" => config.schedule("interp"),
         s => s.to_string(),
     };
+    // The tiled fast-memory budget: explicit --fast-mem wins, "auto"
+    // defers to the config key, and 0 means simulator-driven autotune.
+    // The config key is consulted only when the resolved schedule is
+    // tiled, so a config file carrying both `schedule` and `fast_mem`
+    // stays usable with a --schedule override (an *explicit* --fast-mem
+    // on a non-tiled schedule is still rejected by the builder).
+    let fast_mem_config = if schedule == "tiled" {
+        config.fast_mem(0) as u64
+    } else {
+        0
+    };
+    let fast_mem = resolve_auto_u64(&a, "fast-mem", fast_mem_config) as usize;
     // The SLO knobs: explicit flags win (an explicit 0 turns the knob
     // off), "auto" defers to the config keys, else off.
     let max_queue = resolve_auto_u64(&a, "max-queue", config.max_queue(0) as u64) as usize;
     let deadline_ms = resolve_auto_u64(&a, "deadline-ms", config.deadline_ms(0));
     let mut router = Router::new();
     let name = a.str("name").to_string();
-    let variant = match ModelVariant::build(&name, &net, &order, &schedule, &precision, workers) {
-        Ok(v) => v,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
+    let variant =
+        match ModelVariant::build(&name, &net, &order, &schedule, &precision, workers, fast_mem) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
     println!("{} [{}]", variant.summary, variant.label());
     if workers > 1 {
         println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
@@ -545,7 +559,8 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         .opt(
             "variants",
             "interp:f32:1",
-            "engine variants schedule:precision:workers, comma-separated",
+            "engine variants schedule:precision:workers (schedule: interp | fused | tiled), \
+             comma-separated",
         )
         .opt("max-batch", "128", "dynamic batcher max batch size")
         .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
@@ -610,8 +625,9 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     for (schedule, precision, workers) in &variant_specs {
         // Register each variant under its canonical label ("fused-f32-w4")
         // so loadgen rows, serve logs, and bench keys all agree.
+        // Tiled variants autotune their fast-memory budget (fast_mem 0).
         let mut variant =
-            match ModelVariant::build("variant", &net, &order, schedule, precision, *workers) {
+            match ModelVariant::build("variant", &net, &order, schedule, precision, *workers, 0) {
                 Ok(v) => v,
                 Err(e) => {
                     eprintln!("error: variant {schedule}:{precision}:{workers}: {e}");

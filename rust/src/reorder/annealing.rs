@@ -97,14 +97,11 @@ pub fn reorder(net: &Ffnn, initial: &ConnOrder, cfg: &AnnealConfig) -> (ConnOrde
     // §Perf: checkpoint the current order's simulation every `every`
     // positions; a window move leaves the prefix untouched, so candidates
     // re-simulate only from the nearest checkpoint before the first
-    // changed position (suffix re-simulation).
+    // changed position (suffix re-simulation). All evaluations go through
+    // the simulator's borrowed-slice path — the loop itself allocates
+    // nothing per iteration (only accepted moves refresh checkpoints).
     let every = (net.n_conns() / 24).max(64);
-    let (full_stats, mut ckpts) = sim.run_with_checkpoints(
-        &ConnOrder::from_perm(current.clone()),
-        cfg.m,
-        cfg.policy,
-        every,
-    );
+    let (full_stats, mut ckpts) = sim.run_with_checkpoints_perm(&current, cfg.m, cfg.policy, every);
     let mut old_ios = full_stats.total();
     let initial_ios = old_ios;
 
@@ -145,17 +142,15 @@ pub fn reorder(net: &Ffnn, initial: &ConnOrder, cfg: &AnnealConfig) -> (ConnOrde
         // 2^{−Δ·t^σ} ≥ 2^{−30}  ⇔  Δ ≤ 30 / t^σ.
         let tpow = (t as f64).powf(cfg.sigma);
         let dmax = (30.0 / tpow).floor() as u64;
-        let cand = ConnOrder::from_perm(std::mem::take(&mut scratch));
         // Resume from the nearest checkpoint at or before the first
         // changed position (checkpoint i sits at (i+1)·every).
         let outcome = match first_changed.checked_div(every).unwrap_or(0) {
-            0 => sim.run_bounded(&cand, cfg.m, cfg.policy, old_ios + dmax),
+            0 => sim.run_bounded_perm(&scratch, cfg.m, cfg.policy, old_ios + dmax),
             idx => {
                 let ckpt = &ckpts[(idx - 1).min(ckpts.len() - 1)];
-                sim.run_suffix(&cand, cfg.m, cfg.policy, ckpt, old_ios + dmax)
+                sim.run_suffix_perm(&scratch, cfg.m, cfg.policy, ckpt, old_ios + dmax)
             }
         };
-        scratch = cand.into_perm();
 
         let new_ios = match outcome {
             Some(s) => s.total(),
@@ -187,12 +182,8 @@ pub fn reorder(net: &Ffnn, initial: &ConnOrder, cfg: &AnnealConfig) -> (ConnOrde
             // shift a prefix eviction by a few I/Os). SA tolerates the
             // noisy candidate score; all reported numbers are exact.
             ckpts.clear();
-            let (stats, new_ckpts) = sim.run_with_checkpoints(
-                &ConnOrder::from_perm(current.clone()),
-                cfg.m,
-                cfg.policy,
-                every,
-            );
+            let (stats, new_ckpts) =
+                sim.run_with_checkpoints_perm(&current, cfg.m, cfg.policy, every);
             old_ios = stats.total();
             ckpts = new_ckpts;
             if old_ios < best_ios {
@@ -210,17 +201,6 @@ pub fn reorder(net: &Ffnn, initial: &ConnOrder, cfg: &AnnealConfig) -> (ConnOrde
     let best = ConnOrder::from_perm(best);
     debug_assert!(best.is_topological(net));
     (best, report)
-}
-
-impl ConnOrder {
-    /// Consume the order, returning the underlying permutation (used to
-    /// recycle allocations in the annealing loop).
-    pub fn into_perm(self) -> Vec<u32> {
-        let mut v = Vec::new();
-        let slice = self.as_slice();
-        v.extend_from_slice(slice);
-        v
-    }
 }
 
 /// Run several independent annealing chains (different seeds) in parallel

@@ -96,7 +96,16 @@ impl<'n> Simulator<'n> {
 
     /// Simulate the full order; returns exact I/O counts.
     pub fn run(&mut self, order: &ConnOrder, m: usize, policy: PolicyKind) -> IoStats {
-        self.run_impl(order, m, policy, u64::MAX, None, 0, None)
+        self.run_perm(order.as_slice(), m, policy)
+    }
+
+    /// Borrowed-slice form of [`Simulator::run`]: simulate a raw
+    /// permutation without materializing a `ConnOrder`. §Perf: the
+    /// annealing loop and the tiled autotuner evaluate candidate orders
+    /// millions of times — this path keeps those evaluations
+    /// allocation-free.
+    pub fn run_perm(&mut self, perm: &[u32], m: usize, policy: PolicyKind) -> IoStats {
+        self.run_impl(perm, m, policy, u64::MAX, None, 0, None)
             .expect("unbounded run cannot abort")
     }
 
@@ -109,7 +118,18 @@ impl<'n> Simulator<'n> {
         policy: PolicyKind,
         abort_above: u64,
     ) -> Option<IoStats> {
-        self.run_impl(order, m, policy, abort_above, None, 0, None)
+        self.run_bounded_perm(order.as_slice(), m, policy, abort_above)
+    }
+
+    /// Borrowed-slice form of [`Simulator::run_bounded`].
+    pub fn run_bounded_perm(
+        &mut self,
+        perm: &[u32],
+        m: usize,
+        policy: PolicyKind,
+        abort_above: u64,
+    ) -> Option<IoStats> {
+        self.run_impl(perm, m, policy, abort_above, None, 0, None)
     }
 
     /// Full run that additionally captures a checkpoint every
@@ -121,9 +141,20 @@ impl<'n> Simulator<'n> {
         policy: PolicyKind,
         every: usize,
     ) -> (IoStats, Vec<SimCheckpoint>) {
+        self.run_with_checkpoints_perm(order.as_slice(), m, policy, every)
+    }
+
+    /// Borrowed-slice form of [`Simulator::run_with_checkpoints`].
+    pub fn run_with_checkpoints_perm(
+        &mut self,
+        perm: &[u32],
+        m: usize,
+        policy: PolicyKind,
+        every: usize,
+    ) -> (IoStats, Vec<SimCheckpoint>) {
         let mut ckpts = Vec::new();
         let stats = self
-            .run_impl(order, m, policy, u64::MAX, None, every.max(1), Some(&mut ckpts))
+            .run_impl(perm, m, policy, u64::MAX, None, every.max(1), Some(&mut ckpts))
             .expect("unbounded run cannot abort");
         (stats, ckpts)
     }
@@ -138,7 +169,19 @@ impl<'n> Simulator<'n> {
         ckpt: &SimCheckpoint,
         abort_above: u64,
     ) -> Option<IoStats> {
-        self.run_impl(order, m, policy, abort_above, Some(ckpt), 0, None)
+        self.run_suffix_perm(order.as_slice(), m, policy, ckpt, abort_above)
+    }
+
+    /// Borrowed-slice form of [`Simulator::run_suffix`].
+    pub fn run_suffix_perm(
+        &mut self,
+        perm: &[u32],
+        m: usize,
+        policy: PolicyKind,
+        ckpt: &SimCheckpoint,
+        abort_above: u64,
+    ) -> Option<IoStats> {
+        self.run_impl(perm, m, policy, abort_above, Some(ckpt), 0, None)
     }
 
     fn reset(&mut self) {
@@ -155,7 +198,7 @@ impl<'n> Simulator<'n> {
     /// position (> k) at which the src/dst of the k-th connection is
     /// touched again (`NEVER` if none). Afterwards `last_seen[v]` holds
     /// the first touch of `v` at a position ≥ `down_to`.
-    fn compute_next_uses(&mut self, order: &ConnOrder, down_to: usize) {
+    fn compute_next_uses(&mut self, order: &[u32], down_to: usize) {
         let w = order.len();
         self.next_a.resize(w, NEVER);
         self.next_b.resize(w, NEVER);
@@ -164,7 +207,7 @@ impl<'n> Simulator<'n> {
         }
         let conns = self.net.conns();
         for k in (down_to..w).rev() {
-            let c = conns[order.as_slice()[k] as usize];
+            let c = conns[order[k] as usize];
             let (a, b) = (c.src as usize, c.dst as usize);
             self.next_a[k] = self.last_seen[a];
             self.next_b[k] = self.last_seen[b];
@@ -176,7 +219,7 @@ impl<'n> Simulator<'n> {
     #[allow(clippy::too_many_arguments)]
     fn run_impl(
         &mut self,
-        order: &ConnOrder,
+        order: &[u32],
         m: usize,
         policy: PolicyKind,
         abort_above: u64,
@@ -185,7 +228,10 @@ impl<'n> Simulator<'n> {
         mut out_ckpts: Option<&mut Vec<SimCheckpoint>>,
     ) -> Option<IoStats> {
         debug_assert_eq!(order.len(), self.net.n_conns());
-        debug_assert!(order.is_topological(self.net), "order must be topological");
+        debug_assert!(
+            crate::ffnn::topo::perm_is_topological(self.net, order),
+            "order must be topological"
+        );
 
         let mut residents = std::mem::replace(
             &mut self.residents,
@@ -219,7 +265,7 @@ impl<'n> Simulator<'n> {
         };
 
         let conns = self.net.conns();
-        for (k, &ci) in order.as_slice().iter().enumerate().skip(start) {
+        for (k, &ci) in order.iter().enumerate().skip(start) {
             if ckpt_every > 0 && k > 0 && k % ckpt_every == 0 {
                 if let Some(ckpts) = out_ckpts.as_deref_mut() {
                     ckpts.push(SimCheckpoint {

@@ -9,9 +9,11 @@
 //! to its certified `output_error_bound` instead (its weights are
 //! intentionally perturbed by compression).
 //!
-//! Covered grid per fixture: schedule {interp, fused} × precision
-//! {f32, i8} × sharding {1, 2, 3}, plus the layer-wise CSR and dense
-//! baselines and both serialization round-trips (ffnn-v1 and quant-v1).
+//! Covered grid per fixture: schedule {interp, fused, tiled} ×
+//! precision {f32, i8} × sharding {1, 2, 3} (tiled additionally at a
+//! minimum and an everything-fits fast-memory budget), plus the
+//! layer-wise CSR and dense baselines and both serialization
+//! round-trips (ffnn-v1 and quant-v1).
 
 use sparseflow::exec::batch::BatchMatrix;
 use sparseflow::exec::dense::DenseEngine;
@@ -20,6 +22,7 @@ use sparseflow::exec::layerwise::LayerwiseEngine;
 use sparseflow::exec::parallel::ParallelEngine;
 use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram};
 use sparseflow::exec::stream::{StreamProgram, StreamingEngine};
+use sparseflow::exec::tiled::TiledEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::graph::Ffnn;
 use sparseflow::ffnn::serde::{net_from_json, net_to_json, quant_from_json, quant_to_json};
@@ -110,6 +113,17 @@ fn f32_engines_reproduce_golden_traces_exactly() {
             for shards in [2usize, 3] {
                 let par = ParallelEngine::new(FusedEngine::new(&f.net, &order), shards);
                 assert_exact(&f, &par, &format!("fused[{oname}]x{shards}"));
+            }
+            // tiled schedule at the minimum and an everything-fits
+            // budget, serial and batch-sharded.
+            for m in [3usize, f.net.n_neurons() + 2] {
+                let tiled = TiledEngine::new(&f.net, &order, m).unwrap();
+                assert_exact(&f, &tiled, &format!("tiled[{oname}]@M{m}"));
+                for shards in [2usize, 3] {
+                    let par =
+                        ParallelEngine::new(TiledEngine::new(&f.net, &order, m).unwrap(), shards);
+                    assert_exact(&f, &par, &format!("tiled[{oname}]@M{m}x{shards}"));
+                }
             }
         }
         // Layer-wise baselines (CSR and dense GEMM).

@@ -183,17 +183,24 @@ fn load_profile_and_batching() {
 }
 
 /// Acceptance: served f32 outputs are **bit-identical** to a direct
-/// `Engine::infer` call on the same input — across the interp and fused
-/// schedules and batch sharding. (Every f32 engine computes batch
-/// columns independently, so batching composition cannot change a
+/// `Engine::infer` call on the same input — across the interp, fused
+/// and tiled schedules and batch sharding. (Every f32 engine computes
+/// batch columns independently, so batching composition cannot change a
 /// request's result; this pins that contract through the whole serving
 /// pipeline.)
 #[test]
 fn served_outputs_bit_identical_to_direct_engine_run() {
     let net = test_net();
     let order = two_optimal_order(&net);
-    for (schedule, workers) in [("interp", 1usize), ("fused", 1), ("interp", 2), ("fused", 3)] {
-        let variant = ModelVariant::build("m", &net, &order, schedule, "f32", workers).unwrap();
+    for (schedule, workers) in [
+        ("interp", 1usize),
+        ("fused", 1),
+        ("tiled", 1),
+        ("interp", 2),
+        ("fused", 3),
+        ("tiled", 2),
+    ] {
+        let variant = ModelVariant::build("m", &net, &order, schedule, "f32", workers, 0).unwrap();
         let direct = Arc::clone(variant.route());
         let label = variant.label();
         let mut router = Router::new();

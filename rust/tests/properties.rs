@@ -10,6 +10,7 @@ use sparseflow::exec::layerwise::{forward_layers, LayerwiseEngine};
 use sparseflow::exec::parallel::ParallelEngine;
 use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine};
 use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::tiled::TiledEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::generate::{random_layered, random_mlp, MlpSpec};
 use sparseflow::ffnn::graph::Ffnn;
@@ -252,11 +253,12 @@ fn prop_neuron_order_derivation() {
 }
 
 /// (i) Cross-engine differential: dense, CSR (raw layer pipeline),
-/// CSR layer-wise, stream, batch-sharded parallel, and the fused
-/// block-compiled stream compute the same function on the same batch —
-/// within 1e-5 where schedules reassociate f32 sums, bit-identical
-/// where the docs claim it (sharding, fusion, and their composition),
-/// and within the certified error bound for the quantized stream.
+/// CSR layer-wise, stream, batch-sharded parallel, the fused
+/// block-compiled stream, and the cache-tiled slot-compiled stream
+/// compute the same function on the same batch — within 1e-5 where
+/// schedules reassociate f32 sums, bit-identical where the docs claim
+/// it (sharding, fusion, tiling, and their compositions), and within
+/// the certified error bound for the quantized stream.
 #[test]
 fn prop_cross_engine_differential() {
     check(
@@ -274,9 +276,12 @@ fn prop_cross_engine_differential() {
             let batch = 1 + rng.index(5);
             let x = BatchMatrix::random(net.n_inputs(), batch, rng);
             let workers = 1 + rng.index(4);
-            (net, order, x, workers)
+            // Tiled budget from "barely fits one connection" up past
+            // "everything fits".
+            let fast_mem = 3 + rng.index(net.n_neurons() + 2);
+            (net, order, x, workers, fast_mem)
         },
-        |(net, order, x, workers)| {
+        |(net, order, x, workers, fast_mem)| {
             let stream = StreamingEngine::new(net, order);
             let reference = stream.infer(x);
 
@@ -309,6 +314,21 @@ fn prop_cross_engine_differential() {
             let fused_sharded = ParallelEngine::new(FusedEngine::new(net, order), *workers);
             if fused_sharded.infer(x) != reference {
                 return Err(format!("fused∘sharded ({workers} workers) not bit-identical"));
+            }
+
+            // The cache-tiled slot-compiled schedule is documented
+            // bit-identical for every fast-memory budget M ≥ 3, alone
+            // and composed with batch sharding (tiled∘sharded).
+            let tiled = TiledEngine::new(net, order, *fast_mem)
+                .map_err(|e| format!("tiled compile (M={fast_mem}): {e}"))?;
+            if tiled.infer(x) != reference {
+                return Err(format!("tiled (M={fast_mem}) not bit-identical to stream"));
+            }
+            let tiled_sharded = ParallelEngine::new(tiled, *workers);
+            if tiled_sharded.infer(x) != reference {
+                return Err(format!(
+                    "tiled∘sharded (M={fast_mem}, {workers} workers) not bit-identical"
+                ));
             }
 
             // The quantized stream agrees within its certified bound.

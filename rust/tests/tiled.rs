@@ -1,0 +1,236 @@
+//! Differential suite for the cache-tiled slot-compiled stream engine
+//! (`exec::tiled`): bit-identity to the stream interpreter over seeded
+//! random nets, orders (including annealed ones) and fast-memory
+//! budgets; composition with batch sharding; conservation of the
+//! segment structure; the spill-vs-predicted-I/O budget; and scratch
+//! hygiene under reuse and concurrency.
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedProgram;
+use sparseflow::exec::parallel::ParallelEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::tiled::{TiledEngine, TiledProgram};
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_layered, random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::reorder::neighbor::{apply_move, WindowMove};
+use sparseflow::sim::simulate;
+use sparseflow::util::proptest::check;
+use sparseflow::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Tiled ≡ stream, bit for bit, over 50 seeded nets with perturbed (but
+/// topological) orders and random budgets from "barely fits one
+/// connection" to "everything fits" — alone, on a second call that
+/// reuses pooled scratch, and composed with batch sharding
+/// (tiled∘sharded). Batch sizes include 0 (empty batch) and
+/// non-multiples of the lane width.
+#[test]
+fn prop_tiled_differential() {
+    check(
+        "tiled-differential",
+        50,
+        |rng| {
+            let sizes = vec![3 + rng.index(10), 3 + rng.index(10), 1 + rng.index(4)];
+            let net = random_layered(&sizes, 0.2 + rng.f64() * 0.6, 1.0, rng);
+            let mut order = two_optimal_order(&net);
+            for _ in 0..8 {
+                let mv = WindowMove::sample(rng, order.len(), 6);
+                apply_move(&net, order.as_mut_slice(), mv);
+            }
+            // 0..=13 covers empty, sub-lane, exact-lane and tail batches.
+            let batch = rng.index(14);
+            let x = BatchMatrix::random(net.n_inputs(), batch, rng);
+            let workers = 1 + rng.index(4);
+            let m = 3 + rng.index(net.n_neurons() + 2);
+            (net, order, x, workers, m)
+        },
+        |(net, order, x, workers, m)| {
+            let reference = StreamingEngine::new(net, order).infer(x);
+            let tiled =
+                TiledEngine::new(net, order, *m).map_err(|e| format!("compile M={m}: {e}"))?;
+            if tiled.infer(x) != reference {
+                return Err(format!("tiled (M={m}) not bit-identical (batch {})", x.batch()));
+            }
+            if tiled.infer(x) != reference {
+                return Err(format!("tiled (M={m}) diverged on reused scratch"));
+            }
+            let st = tiled.program().stats();
+            if st.max_live + 1 > *m {
+                return Err(format!("live set {} exceeds budget M={m}", st.max_live));
+            }
+            let sharded = ParallelEngine::new(tiled, *workers);
+            if sharded.infer(x) != reference {
+                return Err(format!("tiled∘sharded (M={m}, {workers} workers) not bit-identical"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The tiling compiler conserves the stream: per-segment macro-op
+/// element counts sum to the connection count, fills cover each
+/// segment's live set exactly once, and the explicit spill count never
+/// exceeds the simulator's predicted total I/Os for the same budget —
+/// the tiled engine's real traffic stays inside the model's prediction.
+#[test]
+fn prop_spills_within_predicted_ios() {
+    check(
+        "tiled-spills-within-predicted",
+        30,
+        |rng| {
+            let depth = 2 + rng.index(3);
+            let width = 4 + rng.index(16);
+            let net = random_mlp(&MlpSpec::new(depth, width, 0.1 + rng.f64() * 0.6), rng);
+            let order = two_optimal_order(&net);
+            let m = 3 + rng.index(net.n_neurons());
+            (net, order, m)
+        },
+        |(net, order, m)| {
+            let tiled = TiledProgram::compile(net, order, *m)
+                .map_err(|e| format!("compile M={m}: {e}"))?;
+            let st = tiled.stats();
+            if st.n_ops != net.n_conns() {
+                return Err(format!("stats n_ops {} != W {}", st.n_ops, net.n_conns()));
+            }
+            if tiled.n_ops() != net.n_conns() {
+                return Err("macro-op element pool does not conserve the stream".into());
+            }
+            if st.fills as u64 != st.sum_live {
+                return Err(format!(
+                    "fills {} != per-segment live-set total {}",
+                    st.fills, st.sum_live
+                ));
+            }
+            if st.spills > st.fills {
+                return Err(format!("spills {} > fills {}", st.spills, st.fills));
+            }
+            let predicted = simulate(net, order, *m, PolicyKind::Min).total();
+            if st.spills as u64 > predicted {
+                return Err(format!(
+                    "measured spills {} exceed predicted I/Os {predicted} at M={m}",
+                    st.spills
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An annealed order (the engine's production configuration) stays
+/// bit-identical between interpreter and tiled engine at the budget it
+/// was annealed for — and at tighter and looser budgets.
+#[test]
+fn annealed_order_tiles_bit_identically() {
+    let mut rng = Pcg64::seed_from(0x71DA);
+    let net = random_mlp(&MlpSpec::new(3, 24, 0.25), &mut rng);
+    let initial = two_optimal_order(&net);
+    let mut cfg = AnnealConfig::new(12, PolicyKind::Min, 400);
+    cfg.seed = 0x71DB;
+    let (annealed, rep) = reorder(&net, &initial, &cfg);
+    assert!(rep.final_ios <= rep.initial_ios);
+
+    let interp = StreamingEngine::new(&net, &annealed);
+    for m in [3usize, 12, net.n_neurons() + 2] {
+        let tiled = TiledEngine::new(&net, &annealed, m).unwrap();
+        for batch in [1, 8, 128, 37] {
+            let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+            assert_eq!(tiled.infer(&x), interp.infer(&x), "M={m} batch {batch}");
+        }
+    }
+    // The annealed order should tile at least as cheaply (in explicit
+    // boundary traffic) as it simulates: predicted I/Os at the annealed
+    // budget bound the spills.
+    let tiled = TiledProgram::compile(&net, &annealed, 12).unwrap();
+    assert!(tiled.stats().spills as u64 <= rep.final_ios);
+}
+
+/// Budget extremes: M ≥ n_neurons + 1 collapses to a single segment
+/// whose macro-op structure equals the fused program's; the minimum
+/// M = 3 still compiles (segments of one or two connections) even when
+/// the max in-degree far exceeds the capacity, and budgets below 3 are
+/// compile errors.
+#[test]
+fn budget_extremes() {
+    let mut rng = Pcg64::seed_from(0x71DC);
+    let net = random_mlp(&MlpSpec::new(3, 18, 0.5), &mut rng);
+    let order = two_optimal_order(&net);
+    let max_in = (0..net.n_neurons() as u32).map(|v| net.in_degree(v)).max().unwrap();
+    assert!(max_in > 2, "want a net whose in-degree exceeds the minimum capacity");
+
+    assert!(TiledProgram::compile(&net, &order, 2).is_err());
+
+    let one_seg = TiledProgram::compile(&net, &order, net.n_neurons() + 2).unwrap();
+    assert_eq!(one_seg.n_segments(), 1);
+    assert_eq!(
+        one_seg.n_macro_ops(),
+        FusedProgram::compile(&net, &order).n_macro_ops(),
+        "one segment must fuse exactly like the whole-stream fused program"
+    );
+
+    let tight = TiledProgram::compile(&net, &order, 3).unwrap();
+    assert!(tight.n_segments() > one_seg.n_segments());
+    assert!(tight.stats().max_live <= 2);
+    let x = BatchMatrix::random(net.n_inputs(), 16, &mut rng);
+    let want = StreamingEngine::new(&net, &order).infer(&x);
+    assert_eq!(TiledEngine::from_program(tight).infer(&x), want);
+    assert_eq!(TiledEngine::from_program(one_seg).infer(&x), want);
+}
+
+/// Concurrent `infer` on one shared tiled engine (the serving
+/// configuration): results stay bit-identical under scratch-pool
+/// contention (the pools' boundedness itself is pinned by the
+/// `exec::scratch` unit tests — they can never exceed their fixed slot
+/// count by construction).
+#[test]
+fn concurrent_tiled_scratch_is_clean_and_bounded() {
+    let mut rng = Pcg64::seed_from(0x71DD);
+    let net = random_mlp(&MlpSpec::new(3, 20, 0.3), &mut rng);
+    let order = two_optimal_order(&net);
+    let x = BatchMatrix::random(net.n_inputs(), 24, &mut Pcg64::seed_from(0x71DE));
+    let want = StreamingEngine::new(&net, &order).infer(&x);
+    let tiled = Arc::new(TiledEngine::new(&net, &order, 8).unwrap());
+
+    let threads: Vec<_> = (0..6)
+        .map(|_| {
+            let tiled = Arc::clone(&tiled);
+            let x = x.clone();
+            let want = want.clone();
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    assert_eq!(tiled.infer(&x), want);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("inference thread panicked");
+    }
+    // Sharded composition over the same engine instance, for good measure.
+    let sharded = ParallelEngine::new(Arc::clone(&tiled) as Arc<dyn Engine>, 4);
+    assert_eq!(sharded.infer(&x), want);
+}
+
+/// Autotune end-to-end: the report's sweep is simulator-exact, the
+/// chosen budget compiles, and the resulting engine is bit-identical to
+/// the interpreter.
+#[test]
+fn autotuned_engine_matches_interpreter() {
+    let mut rng = Pcg64::seed_from(0x71DF);
+    let net = random_mlp(&MlpSpec::new(4, 22, 0.2), &mut rng);
+    let order = two_optimal_order(&net);
+    let (tiled, report) = TiledEngine::autotuned(&net, &order).unwrap();
+    assert_eq!(tiled.program().stats().m, report.chosen_m);
+    for &(m, predicted) in &report.sweep {
+        assert_eq!(
+            predicted,
+            simulate(&net, &order, m, PolicyKind::Min).total(),
+            "sweep entry M={m} must re-simulate exactly"
+        );
+    }
+    let x = BatchMatrix::random(net.n_inputs(), 33, &mut rng);
+    assert_eq!(tiled.infer(&x), StreamingEngine::new(&net, &order).infer(&x));
+    assert!(tiled.program().stats().spills as u64 <= report.chosen_predicted());
+}
