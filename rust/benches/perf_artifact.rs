@@ -1,0 +1,104 @@
+//! §Perf — model-load latency by format (JSON parse vs `sparseflow-bin-v1`
+//! mmap vs heap read) and first-inference latency by serving tier:
+//! **cold** (load + compile + infer), **warm** (artifact already mapped,
+//! compile + infer — the registry's warm→hot promotion cost), **hot**
+//! (engine resident, infer only). The zero-copy claim is what separates
+//! the bin columns from JSON: a bin load is validate-header +
+//! borrow-slices, no per-pool parsing or copies. All bin-backed engines
+//! are asserted bit-identical to the JSON-compiled one. Emits JSON via
+//! `bench::harness` (repo-root `BENCH_PERF_ARTIFACT.json`).
+//!
+//! ```bash
+//! cargo bench --bench perf_artifact -- --reps 30
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::model::{Format, Model};
+use sparseflow::util::rng::Pcg64;
+
+fn main() {
+    let args = Spec::new("perf_artifact", "model-load + first-inference latency by format/tier")
+        .opt("reps", "30", "measurement repetitions")
+        .opt("batch", "8", "first-inference batch size")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+    let quick = args.flag("quick");
+    let reps = if quick { 5 } else { args.usize("reps") };
+    let batch = if quick { 4 } else { args.usize("batch") };
+
+    let mut rng = Pcg64::seed_from(0xA21F);
+    let spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let net = bert_mlp(&spec, &mut rng);
+    let order = two_optimal_order(&net);
+    println!("net: {}", net.describe());
+
+    let dir = std::env::temp_dir().join("sparseflow-perf-artifact");
+    std::fs::create_dir_all(&dir).unwrap();
+    let json_path = dir.join("model.json");
+    let bin_path = dir.join("model.sfb");
+    let source = Model::from_net(net.clone(), Some(order.clone()));
+    source.save(&json_path, Format::JsonV1).unwrap();
+    source.save(&bin_path, Format::BinV1).unwrap();
+    let json_bytes = std::fs::metadata(&json_path).unwrap().len();
+    let bin_bytes = std::fs::metadata(&bin_path).unwrap().len();
+    println!("artifacts: json {json_bytes} B, bin {bin_bytes} B");
+
+    let mut report =
+        Report::new("perf_artifact", "zero-copy artifact load + first-inference latency");
+    report.set_meta("quick", quick);
+    report.set_meta("batch", batch);
+    report.set_meta("json_bytes", json_bytes);
+    report.set_meta("bin_bytes", bin_bytes);
+
+    // Load latency: full validate-and-construct per format/path. The
+    // bin paths checksum every section but never parse or copy pools.
+    report.record_timing("load", "json parse", 2, reps, || Model::load(&json_path).unwrap());
+    report.record_timing("load", "bin mmap", 2, reps, || Model::load(&bin_path).unwrap());
+    report.record_timing("load", "bin heap", 2, reps, || {
+        Model::load_resident(&bin_path).unwrap()
+    });
+
+    // First-inference latency by serving tier.
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut Pcg64::seed_from(0xA220));
+    report.record_timing("first-inference", "cold json", 1, reps, || {
+        let m = Model::load(&json_path).unwrap();
+        let order = m.order().cloned().expect("saved with order");
+        FusedEngine::new(m.net().unwrap(), &order).infer(&x)
+    });
+    report.record_timing("first-inference", "cold bin", 1, reps, || {
+        let m = Model::load(&bin_path).unwrap();
+        FusedEngine::from_program(m.artifact().unwrap().fused_program().unwrap()).infer(&x)
+    });
+    let warm = Model::load(&bin_path).unwrap();
+    report.record_timing("first-inference", "warm bin", 1, reps, || {
+        let art = warm.artifact().unwrap();
+        FusedEngine::from_program(art.fused_program().unwrap()).infer(&x)
+    });
+    let hot_model = Model::load(&bin_path).unwrap();
+    let hot = FusedEngine::from_program(hot_model.artifact().unwrap().fused_program().unwrap());
+    report.record_timing("first-inference", "hot", 1, reps, || hot.infer(&x));
+
+    // Sanity: the mmap-backed engine is bit-identical to the compiled one.
+    assert_eq!(
+        hot.infer(&x),
+        FusedEngine::new(&net, &order).infer(&x),
+        "bin-backed fused engine must be bit-identical to the JSON-compiled one"
+    );
+
+    report.finish();
+}

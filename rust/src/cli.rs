@@ -26,6 +26,7 @@ pub struct Spec {
     pub about: &'static str,
     opts: Vec<Opt>,
     positionals: Vec<(&'static str, &'static str)>,
+    opt_positionals: Vec<(&'static str, &'static str)>,
 }
 
 impl Spec {
@@ -35,6 +36,7 @@ impl Spec {
             about,
             opts: Vec::new(),
             positionals: Vec::new(),
+            opt_positionals: Vec::new(),
         }
     }
 
@@ -63,6 +65,13 @@ impl Spec {
     /// Required positional argument.
     pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
         self.positionals.push((name, help));
+        self
+    }
+
+    /// Optional positional argument (declared after the required ones;
+    /// read with [`Args::positional_opt`]).
+    pub fn positional_opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opt_positionals.push((name, help));
         self
     }
 
@@ -233,11 +242,17 @@ impl Spec {
         for (p, _) in &self.positionals {
             s.push_str(&format!(" <{p}>"));
         }
+        for (p, _) in &self.opt_positionals {
+            s.push_str(&format!(" [{p}]"));
+        }
         s.push_str(" [OPTIONS]\n");
-        if !self.positionals.is_empty() {
+        if !self.positionals.is_empty() || !self.opt_positionals.is_empty() {
             s.push_str("\nARGS:\n");
             for (p, h) in &self.positionals {
                 s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+            for (p, h) in &self.opt_positionals {
+                s.push_str(&format!("  [{p}]  {h} (optional)\n"));
             }
         }
         s.push_str("\nOPTIONS:\n");
@@ -308,6 +323,12 @@ impl Args {
 
     pub fn positional(&self, i: usize) -> &str {
         &self.positionals[i]
+    }
+
+    /// Positional by index, `None` when not given (for
+    /// [`Spec::positional_opt`] slots).
+    pub fn positional_opt(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
     }
 
     pub fn positionals(&self) -> &[String] {
@@ -488,6 +509,23 @@ mod tests {
         assert_eq!(a.u64("deadline-ms"), 0);
         assert!(s.help_text().contains("--max-queue"));
         assert!(s.help_text().contains("--deadline-ms"));
+    }
+
+    #[test]
+    fn optional_positionals() {
+        let s = Spec::new("t", "t").positional_opt("net", "network file");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.positional_opt(0), None, "optional positional may be absent");
+        let a = s.parse(&sv(&["net.json"])).unwrap();
+        assert_eq!(a.positional_opt(0), Some("net.json"));
+        assert!(s.help_text().contains("[net]"));
+
+        // A required positional still gates parsing when mixed in.
+        let s = Spec::new("t", "t").positional("a", "a").positional_opt("b", "b");
+        assert!(matches!(s.parse(&[]).unwrap_err(), CliError::MissingPositional(..)));
+        let a = s.parse(&sv(&["x"])).unwrap();
+        assert_eq!(a.positional(0), "x");
+        assert_eq!(a.positional_opt(1), None);
     }
 
     #[test]

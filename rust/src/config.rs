@@ -109,6 +109,20 @@ impl Config {
         self.u64("deadline_ms", default)
     }
 
+    /// The registry model-directory knob (`model_dir` key): directory of
+    /// `.sfb` artifacts scanned by `sparseflow serve --model-dir`.
+    /// Empty = registry mode off.
+    pub fn model_dir(&self, default: &str) -> String {
+        self.str("model_dir", default)
+    }
+
+    /// The registry resident-budget knob (`resident_bytes` key): total
+    /// bytes of hot (engine-resident) artifacts allowed before the LRU
+    /// hot model is demoted to warm. 0 = unbounded.
+    pub fn resident_bytes(&self, default: u64) -> u64 {
+        self.u64("resident_bytes", default)
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.lookup(key)
             .and_then(Json::as_str)
@@ -211,6 +225,17 @@ mod tests {
         c.set_override("deadline_ms=50").unwrap();
         assert_eq!(c.max_queue(0), 256);
         assert_eq!(c.deadline_ms(0), 50);
+    }
+
+    #[test]
+    fn registry_knobs() {
+        let mut c = Config::empty();
+        assert_eq!(c.model_dir(""), "", "default when unset (registry off)");
+        assert_eq!(c.resident_bytes(0), 0, "default when unset (unbounded)");
+        c.set_override("model_dir=models/").unwrap();
+        c.set_override("resident_bytes=1048576").unwrap();
+        assert_eq!(c.model_dir(""), "models/");
+        assert_eq!(c.resident_bytes(0), 1 << 20);
     }
 
     #[test]

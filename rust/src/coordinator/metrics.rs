@@ -125,7 +125,15 @@ pub struct Metrics {
     /// [`Metrics::link_tiled_stats`]); compile-time constants like the
     /// fusion stats.
     tiled_stats: Mutex<Vec<(String, TiledStats)>>,
+    /// Registry state provider (see [`Metrics::link_registry`]): called
+    /// at snapshot time to embed the model registry's tier/version view
+    /// under the `registry` key.
+    registry_sink: Mutex<Option<RegistrySink>>,
 }
+
+/// Snapshot provider linked by the model registry: returns its JSON
+/// state (models, versions, tiers, resident bytes) on demand.
+pub type RegistrySink = Arc<dyn Fn() -> Json + Send + Sync>;
 
 impl Default for Metrics {
     fn default() -> Self {
@@ -149,7 +157,14 @@ impl Metrics {
             shard_sinks: Mutex::new(Vec::new()),
             fusion_stats: Mutex::new(Vec::new()),
             tiled_stats: Mutex::new(Vec::new()),
+            registry_sink: Mutex::new(None),
         }
+    }
+
+    /// Link the model registry's snapshot provider so its state appears
+    /// in [`Metrics::snapshot`] under `registry`. Re-linking replaces.
+    pub fn link_registry(&self, sink: RegistrySink) {
+        *self.registry_sink.lock().expect("registry sink poisoned") = Some(sink);
     }
 
     /// Link the compile-time fusion statistics of a block-compiled
@@ -275,6 +290,11 @@ impl Metrics {
                 tiled = tiled.set(model, s.to_json());
             }
             j = j.set("tiled", tiled);
+        }
+        drop(stats);
+        let sink = self.registry_sink.lock().expect("registry sink poisoned");
+        if let Some(sink) = sink.as_ref() {
+            j = j.set("registry", sink());
         }
         j
     }
@@ -420,6 +440,15 @@ mod tests {
         m.link_tiled_stats("mlp", TiledStats { n_segments: 1, ..stats });
         let s2 = m.snapshot();
         assert_eq!(s2.path(&["tiled", "mlp", "segments"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn registry_sink_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().get("registry").is_none(), "no sink, no key");
+        m.link_registry(Arc::new(|| Json::obj().set("models", 2u64)));
+        let s = m.snapshot();
+        assert_eq!(s.path(&["registry", "models"]).unwrap().as_u64(), Some(2));
     }
 
     #[test]

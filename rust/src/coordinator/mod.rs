@@ -13,7 +13,12 @@
 //!   reordered / CSR layer-wise / XLA artifact) and the
 //!   schedule×precision×workers variant builder,
 //! * [`server`] — worker threads wiring queues → batcher → engine, with
-//!   admission control (bounded queue depth, explicit shed responses),
+//!   admission control (bounded queue depth, explicit shed responses)
+//!   and dynamic deploy/undeploy (atomic hot-swap with drain),
+//! * [`registry`] — versioned multi-model registry over the server:
+//!   `(model, version) → tier` with warm (mmap-backed) / hot (engine
+//!   resident) tiers, promote-on-first-hit, LRU demotion under a
+//!   resident-bytes budget, and atomic version hot-swaps,
 //! * [`metrics`] — counters and fixed-bucket latency histograms with the
 //!   queue-wait vs compute split,
 //! * [`tcp`] — a line-delimited-JSON TCP front-end and matching client.
@@ -23,11 +28,13 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod tcp;
 
+pub use registry::{Registry, RegistryConfig, Tier};
 pub use request::{InferenceError, Request, Response};
-pub use router::{ModelVariant, Router};
+pub use router::{ModelVariant, Router, VariantError};
 pub use server::{AdmissionPolicy, Server, ServerConfig, ServerHandle};

@@ -1,0 +1,499 @@
+//! The versioned multi-model registry: owns `(model, version) → tier`
+//! on top of the dynamic [`Server`].
+//!
+//! Artifacts live on disk as `<name>.sfb` (version 1) or
+//! `<name>@<version>.sfb`; the active version of a model is its highest
+//! registered version. Every registered version is **warm**: loaded
+//! through [`Model::load`], which for binary artifacts memory-maps the
+//! file and validates its checksums — the page cache holds the bytes,
+//! but no engine is resident. A model is promoted to **hot** on its
+//! first hit ([`Registry::ensure_hot`]): the serving engine is built
+//! from the mapped pools (zero-copy for fused/i8) and deployed to the
+//! server. When the resident-bytes budget is exceeded, the
+//! least-recently-hit hot model (never the one just promoted) is
+//! demoted back to warm — its dispatcher drains and the engine is
+//! released, while the mapping stays available for re-promotion.
+//!
+//! Registering a higher version of a hot model hot-swaps it atomically:
+//! the new engine is deployed through [`Server::deploy`], whose
+//! lock protocol guarantees the old version answers everything already
+//! enqueued before it is released. In-flight requests are never dropped
+//! or misrouted.
+//!
+//! The registry links itself into the server's metrics: snapshots carry
+//! its state under the `registry` key.
+
+use super::server::{Server, ServerConfig, ServerHandle};
+use crate::model::Model;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Registry policy: the resident budget plus the engine recipe every
+/// promoted model is compiled with.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Total bytes of hot (engine-resident) artifacts allowed; the LRU
+    /// hot model is demoted while over it. `0` = unbounded.
+    pub resident_bytes: u64,
+    /// Schedule for promoted engines ("interp" | "fused" | "tiled").
+    pub schedule: String,
+    /// Precision for promoted engines ("f32" | "i8").
+    pub precision: String,
+    /// Batch shards for promoted engines (1 = serial).
+    pub workers: usize,
+    /// Tiled fast-memory budget `M` (slots); artifact-backed tiled
+    /// serving requires it explicitly.
+    pub fast_mem: usize,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            resident_bytes: 0,
+            schedule: "fused".to_string(),
+            precision: "f32".to_string(),
+            workers: 1,
+            fast_mem: 0,
+        }
+    }
+}
+
+/// Where a model currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Serving engine deployed on the server.
+    Hot,
+    /// Validated and (for binary artifacts) memory-mapped; no engine.
+    Warm,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Hot => "hot",
+            Tier::Warm => "warm",
+        }
+    }
+}
+
+struct VersionInfo {
+    path: PathBuf,
+    bytes: u64,
+    model: Model,
+}
+
+struct ModelState {
+    versions: BTreeMap<u64, VersionInfo>,
+    active: u64,
+    tier: Tier,
+    /// Logical clock value of the most recent hit (LRU key).
+    last_hit: u64,
+}
+
+struct RegState {
+    models: BTreeMap<String, ModelState>,
+    /// Bytes of active versions currently hot.
+    resident: u64,
+}
+
+struct RegistryInner {
+    server: Server,
+    config: RegistryConfig,
+    state: Mutex<RegState>,
+    clock: AtomicU64,
+    promotions: AtomicU64,
+    demotions: AtomicU64,
+    swaps: AtomicU64,
+    deploys: AtomicU64,
+}
+
+/// Cheap cloneable handle on the registry (shared state behind an
+/// `Arc`); owns the serving [`Server`].
+#[derive(Clone)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+/// Parse `<name>.sfb` → `(name, 1)` / `<name>@<version>.sfb` →
+/// `(name, version)`.
+pub fn parse_artifact_name(path: &Path) -> anyhow::Result<(String, u64)> {
+    let stem = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .ok_or_else(|| anyhow::anyhow!("bad artifact filename {}", path.display()))?;
+    match stem.split_once('@') {
+        Some((name, v)) => {
+            anyhow::ensure!(!name.is_empty(), "empty model name in {}", path.display());
+            let v: u64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad version {v:?} in {}", path.display()))?;
+            anyhow::ensure!(v > 0, "version must be >= 1 in {}", path.display());
+            Ok((name.to_string(), v))
+        }
+        None => Ok((stem.to_string(), 1)),
+    }
+}
+
+impl Registry {
+    /// Start a registry-backed server with no models; register them with
+    /// [`Registry::scan_dir`] / [`Registry::deploy_file`].
+    pub fn new(config: RegistryConfig, server_config: ServerConfig) -> Registry {
+        let inner = Arc::new(RegistryInner {
+            server: Server::start_dynamic(server_config),
+            config,
+            state: Mutex::new(RegState {
+                models: BTreeMap::new(),
+                resident: 0,
+            }),
+            clock: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            deploys: AtomicU64::new(0),
+        });
+        // Weak: the metrics sink must not keep the registry (and its
+        // server threads) alive after the registry is dropped.
+        let weak: Weak<RegistryInner> = Arc::downgrade(&inner);
+        inner.server.metrics().link_registry(Arc::new(move || match weak.upgrade() {
+            Some(inner) => snapshot_inner(&inner),
+            None => Json::obj(),
+        }));
+        Registry { inner }
+    }
+
+    /// The serving config knobs this registry promotes engines with.
+    pub fn config(&self) -> &RegistryConfig {
+        &self.inner.config
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.inner.server
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.inner.server.handle()
+    }
+
+    /// Register every `*.sfb` artifact in `dir` (warm). Returns the
+    /// `name@version` labels registered, in scan order.
+    pub fn scan_dir(&self, dir: &Path) -> anyhow::Result<Vec<String>> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("read model dir {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("sfb"))
+            .collect();
+        paths.sort();
+        let mut found = Vec::with_capacity(paths.len());
+        for path in paths {
+            let (name, version) = self.register(&path)?;
+            found.push(format!("{name}@{version}"));
+        }
+        Ok(found)
+    }
+
+    /// Register one artifact (any [`Model::load`]-able file); the
+    /// filename carries `name[@version]`. If it becomes the active
+    /// version of a currently-hot model, the server hot-swaps to it
+    /// atomically (the old version drains first). Returns
+    /// `(name, version)`.
+    pub fn deploy_file(&self, path: &Path) -> anyhow::Result<(String, u64)> {
+        self.register(path)
+    }
+
+    fn register(&self, path: &Path) -> anyhow::Result<(String, u64)> {
+        let (name, version) = parse_artifact_name(path)?;
+        // Full validation up front (checksums for binary artifacts): a
+        // corrupt file must fail at deploy time, not at first hit.
+        let model = Model::load(path)?;
+        let bytes = std::fs::metadata(path)
+            .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?
+            .len();
+
+        let mut st = self.inner.state.lock().expect("registry state poisoned");
+        let entry = st.models.entry(name.clone()).or_insert_with(|| ModelState {
+            versions: BTreeMap::new(),
+            active: 0,
+            tier: Tier::Warm,
+            last_hit: 0,
+        });
+        entry.versions.insert(
+            version,
+            VersionInfo { path: path.to_path_buf(), bytes, model },
+        );
+        let newest = *entry.versions.keys().next_back().expect("just inserted");
+        let was_active = entry.active;
+        let mut swap = None;
+        if newest != was_active {
+            if entry.tier == Tier::Hot {
+                let info = entry.versions.get(&newest).expect("newest exists");
+                let variant = self.build_variant(&name, &info.model)?;
+                let old_bytes =
+                    entry.versions.get(&was_active).map(|v| v.bytes).unwrap_or(0);
+                swap = Some((variant, info.bytes as i64 - old_bytes as i64));
+            }
+            entry.active = newest;
+        }
+        self.inner.deploys.fetch_add(1, Ordering::Relaxed);
+        if let Some((variant, delta)) = swap {
+            self.inner.server.deploy(variant);
+            st.resident = (st.resident as i64 + delta).max(0) as u64;
+            self.inner.swaps.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((name, version))
+    }
+
+    fn build_variant(
+        &self,
+        name: &str,
+        model: &Model,
+    ) -> anyhow::Result<super::router::ModelVariant> {
+        let c = &self.inner.config;
+        Ok(model.variant(name, &c.schedule, &c.precision, c.workers, c.fast_mem)?)
+    }
+
+    /// Record a hit and make sure the model is serving. Warm models are
+    /// promoted (engine built from the active version and deployed);
+    /// hot models just bump their LRU stamp. Promotion that pushes
+    /// resident bytes over budget demotes the least-recently-hit other
+    /// hot model until back under (or only this model remains hot).
+    pub fn ensure_hot(&self, model: &str) -> anyhow::Result<()> {
+        let now = self.inner.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut st = self.inner.state.lock().expect("registry state poisoned");
+        let entry = st
+            .models
+            .get_mut(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+        entry.last_hit = now;
+        if entry.tier == Tier::Hot {
+            return Ok(());
+        }
+        let info = entry
+            .versions
+            .get(&entry.active)
+            .ok_or_else(|| anyhow::anyhow!("model {model:?} has no active version"))?;
+        let variant = self.build_variant(model, &info.model)?;
+        let bytes = info.bytes;
+        entry.tier = Tier::Hot;
+        self.inner.server.deploy(variant);
+        st.resident += bytes;
+        self.inner.promotions.fetch_add(1, Ordering::Relaxed);
+
+        let budget = self.inner.config.resident_bytes;
+        if budget > 0 {
+            while st.resident > budget {
+                let victim = st
+                    .models
+                    .iter()
+                    .filter(|(n, s)| s.tier == Tier::Hot && n.as_str() != model)
+                    .min_by_key(|(_, s)| s.last_hit)
+                    .map(|(n, _)| n.clone());
+                let Some(victim) = victim else { break };
+                let vs = st.models.get_mut(&victim).expect("victim exists");
+                vs.tier = Tier::Warm;
+                let vb = vs.versions.get(&vs.active).map(|v| v.bytes).unwrap_or(0);
+                self.inner.server.undeploy(&victim);
+                st.resident = st.resident.saturating_sub(vb);
+                self.inner.demotions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove a model entirely (all versions). In-flight requests
+    /// drain. Returns whether it was registered.
+    pub fn undeploy(&self, model: &str) -> bool {
+        let mut st = self.inner.state.lock().expect("registry state poisoned");
+        match st.models.remove(model) {
+            Some(s) => {
+                if s.tier == Tier::Hot {
+                    let b = s.versions.get(&s.active).map(|v| v.bytes).unwrap_or(0);
+                    st.resident = st.resident.saturating_sub(b);
+                }
+                self.inner.server.undeploy(model);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let st = self.inner.state.lock().expect("registry state poisoned");
+        st.models.keys().cloned().collect()
+    }
+
+    pub fn tier(&self, model: &str) -> Option<Tier> {
+        let st = self.inner.state.lock().expect("registry state poisoned");
+        st.models.get(model).map(|s| s.tier)
+    }
+
+    /// Active version of a model, if registered.
+    pub fn active_version(&self, model: &str) -> Option<u64> {
+        let st = self.inner.state.lock().expect("registry state poisoned");
+        st.models.get(model).map(|s| s.active)
+    }
+
+    /// Bytes of hot (engine-resident) artifacts.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.state.lock().expect("registry state poisoned").resident
+    }
+
+    /// JSON view: budget, resident bytes, tier counters, and per-model
+    /// `{active, tier, last_hit, versions{v: {bytes, path}}}`. Also
+    /// embedded in the server metrics snapshot under `registry`.
+    pub fn snapshot(&self) -> Json {
+        snapshot_inner(&self.inner)
+    }
+}
+
+fn snapshot_inner(inner: &RegistryInner) -> Json {
+    let st = inner.state.lock().expect("registry state poisoned");
+    let mut models = Json::obj();
+    for (name, s) in st.models.iter() {
+        let mut versions = Json::obj();
+        for (v, info) in s.versions.iter() {
+            versions = versions.set(
+                &v.to_string(),
+                Json::obj()
+                    .set("bytes", info.bytes)
+                    .set("path", info.path.display().to_string()),
+            );
+        }
+        models = models.set(
+            name,
+            Json::obj()
+                .set("active", s.active)
+                .set("tier", s.tier.name())
+                .set("last_hit", s.last_hit)
+                .set("versions", versions),
+        );
+    }
+    Json::obj()
+        .set("budget_bytes", inner.config.resident_bytes)
+        .set("resident_bytes", st.resident)
+        .set("promotions", inner.promotions.load(Ordering::Relaxed))
+        .set("demotions", inner.demotions.load(Ordering::Relaxed))
+        .set("swaps", inner.swaps.load(Ordering::Relaxed))
+        .set("deploys", inner.deploys.load(Ordering::Relaxed))
+        .set("models", models)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::model::Format;
+    use crate::util::rng::Pcg64;
+
+    fn write_artifact(dir: &Path, file: &str, seed: u64) -> PathBuf {
+        let net = random_mlp(&MlpSpec::new(2, 6, 0.6), &mut Pcg64::new(seed));
+        let order = two_optimal_order(&net);
+        let path = dir.join(file);
+        Model::from_net(net, Some(order)).save(&path, Format::BinV1).unwrap();
+        path
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sparseflow-registry-unit-{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn filename_parsing() {
+        assert_eq!(parse_artifact_name(Path::new("a/mlp.sfb")).unwrap(), ("mlp".into(), 1));
+        assert_eq!(
+            parse_artifact_name(Path::new("mlp@7.sfb")).unwrap(),
+            ("mlp".into(), 7)
+        );
+        assert!(parse_artifact_name(Path::new("mlp@x.sfb")).is_err());
+        assert!(parse_artifact_name(Path::new("@3.sfb")).is_err());
+        assert!(parse_artifact_name(Path::new("mlp@0.sfb")).is_err());
+    }
+
+    #[test]
+    fn scan_promote_and_serve() {
+        let dir = tmpdir("scan");
+        write_artifact(&dir, "a.sfb", 1);
+        write_artifact(&dir, "b@2.sfb", 2);
+        let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+        let found = reg.scan_dir(&dir).unwrap();
+        assert_eq!(found, vec!["a@1".to_string(), "b@2".to_string()]);
+        assert_eq!(reg.tier("a"), Some(Tier::Warm));
+
+        reg.ensure_hot("a").unwrap();
+        assert_eq!(reg.tier("a"), Some(Tier::Hot));
+        let h = reg.handle();
+        let n = h.n_inputs("a").unwrap();
+        let r = h.infer("a", vec![0.5; n]).unwrap();
+        assert_eq!(r.engine, "fused-stream", "default recipe is fused");
+        assert!(reg.resident_bytes() > 0);
+        assert!(reg.ensure_hot("nope").is_err());
+
+        // The registry view is embedded in the metrics snapshot.
+        let snap = h.metrics_snapshot();
+        assert_eq!(
+            snap.path(&["registry", "models", "a", "tier"]).unwrap().as_str(),
+            Some("hot")
+        );
+        assert_eq!(snap.path(&["registry", "promotions"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn budget_demotes_lru() {
+        let dir = tmpdir("lru");
+        let pa = write_artifact(&dir, "a.sfb", 1);
+        write_artifact(&dir, "b.sfb", 2);
+        write_artifact(&dir, "c.sfb", 3);
+        let one = std::fs::metadata(&pa).unwrap().len();
+        // Budget fits ~two artifacts of this size.
+        let reg = Registry::new(
+            RegistryConfig { resident_bytes: 2 * one + one / 2, ..Default::default() },
+            ServerConfig::default(),
+        );
+        reg.scan_dir(&dir).unwrap();
+        reg.ensure_hot("a").unwrap();
+        reg.ensure_hot("b").unwrap();
+        assert_eq!(reg.tier("a"), Some(Tier::Hot));
+        reg.ensure_hot("c").unwrap();
+        // "a" is the least recently hit → demoted.
+        assert_eq!(reg.tier("a"), Some(Tier::Warm));
+        assert_eq!(reg.tier("b"), Some(Tier::Hot));
+        assert_eq!(reg.tier("c"), Some(Tier::Hot));
+        // Re-hitting "a" promotes it again and evicts "b".
+        reg.ensure_hot("a").unwrap();
+        assert_eq!(reg.tier("a"), Some(Tier::Hot));
+        assert_eq!(reg.tier("b"), Some(Tier::Warm));
+        let s = reg.snapshot();
+        assert_eq!(s.get("demotions").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn deploy_new_version_hot_swaps() {
+        let dir = tmpdir("swap");
+        write_artifact(&dir, "m@1.sfb", 10);
+        let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+        reg.scan_dir(&dir).unwrap();
+        reg.ensure_hot("m").unwrap();
+        assert_eq!(reg.active_version("m"), Some(1));
+
+        let v2 = write_artifact(&dir, "m@2.sfb", 11);
+        reg.deploy_file(&v2).unwrap();
+        assert_eq!(reg.active_version("m"), Some(2));
+        assert_eq!(reg.tier("m"), Some(Tier::Hot), "stays hot across the swap");
+        assert_eq!(reg.snapshot().get("swaps").unwrap().as_u64(), Some(1));
+
+        // Registering an older version does not roll back the active one.
+        let v1bis = dir.join("m@1.sfb");
+        reg.deploy_file(&v1bis).unwrap();
+        assert_eq!(reg.active_version("m"), Some(2));
+
+        assert!(reg.undeploy("m"));
+        assert!(!reg.undeploy("m"));
+        assert!(reg.handle().infer("m", vec![0.0]).is_err());
+    }
+}

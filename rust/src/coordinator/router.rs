@@ -14,6 +14,57 @@ use crate::ffnn::topo::ConnOrder;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+/// Structured rejection reasons of [`ModelVariant::build`] — the only
+/// variant constructor the CLI, loadgen, benches, and registry go
+/// through. Machine-matchable (no string parsing) and carries the knob
+/// values that were rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VariantError {
+    /// `schedule` is not one of interp / fused / tiled.
+    UnknownSchedule(String),
+    /// `precision` is not one of f32 / i8.
+    UnknownPrecision(String),
+    /// The (schedule, precision) point is outside the composition
+    /// matrix: the i8 stream is already compressed into its own record
+    /// format, so fused/tiled require f32.
+    Incompatible { schedule: String, precision: String },
+    /// `fast_mem` was given for a schedule that has no fast-memory
+    /// budget knob (only tiled does).
+    FastMemRequiresTiled { schedule: String, fast_mem: usize },
+    /// The schedule compiler itself rejected the network/budget (e.g. a
+    /// sub-minimum tiled `M`).
+    Compile { schedule: String, message: String },
+}
+
+impl std::fmt::Display for VariantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VariantError::UnknownSchedule(s) => {
+                write!(f, "unknown schedule {s:?} (expected interp, fused or tiled)")
+            }
+            VariantError::UnknownPrecision(p) => {
+                write!(f, "unknown precision {p:?} (expected f32 or i8)")
+            }
+            VariantError::Incompatible { schedule, precision } => write!(
+                f,
+                "schedule {schedule:?} requires precision f32, got {precision:?} (the i8 \
+                 stream is already compressed into its own record format; see the \
+                 composition matrix in README.md)"
+            ),
+            VariantError::FastMemRequiresTiled { schedule, fast_mem } => write!(
+                f,
+                "--fast-mem {fast_mem} only applies to --schedule tiled (got schedule \
+                 {schedule:?})"
+            ),
+            VariantError::Compile { schedule, message } => {
+                write!(f, "compiling the {schedule} schedule failed: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VariantError {}
+
 /// Engine-selection policy for a model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePolicy {
@@ -27,6 +78,7 @@ pub enum RoutePolicy {
 }
 
 /// A registered model with its candidate engines.
+#[derive(Clone)]
 pub struct ModelVariant {
     pub name: String,
     pub engines: Vec<Arc<dyn Engine>>,
@@ -94,7 +146,8 @@ impl ModelVariant {
     /// record format), `workers` > 1 wraps the engine in a batch-sharded
     /// [`ParallelEngine`]. `fast_mem` is the tiled schedule's
     /// fast-memory budget `M` in slots (0 = autotune through the I/O
-    /// simulator); it is rejected for non-tiled schedules.
+    /// simulator); it is rejected for non-tiled schedules. Rejections
+    /// come back as structured [`VariantError`] values.
     pub fn build(
         name: &str,
         net: &Ffnn,
@@ -103,16 +156,22 @@ impl ModelVariant {
         precision: &str,
         workers: usize,
         fast_mem: usize,
-    ) -> anyhow::Result<ModelVariant> {
+    ) -> Result<ModelVariant, VariantError> {
         use crate::exec::fused::FusedEngine;
         use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
         use crate::exec::stream::StreamingEngine;
         use crate::exec::tiled::{TiledEngine, TiledProgram};
 
-        anyhow::ensure!(
-            fast_mem == 0 || schedule == "tiled",
-            "--fast-mem only applies to --schedule tiled (got schedule {schedule:?})"
-        );
+        if fast_mem != 0 && schedule != "tiled" {
+            return Err(VariantError::FastMemRequiresTiled {
+                schedule: schedule.to_string(),
+                fast_mem,
+            });
+        }
+        let compile_err = |e: anyhow::Error| VariantError::Compile {
+            schedule: schedule.to_string(),
+            message: e.to_string(),
+        };
         let mut fusion = None;
         let mut tiled_stats = None;
         let (engine, summary): (Arc<dyn Engine>, String) = match (precision, schedule) {
@@ -137,10 +196,11 @@ impl ModelVariant {
             }
             ("f32", "tiled") => {
                 let (engine, autotune) = if fast_mem == 0 {
-                    let (program, report) = TiledProgram::autotune(net, order)?;
+                    let (program, report) =
+                        TiledProgram::autotune(net, order).map_err(compile_err)?;
                     (TiledEngine::from_program(program), Some(report))
                 } else {
-                    (TiledEngine::new(net, order, fast_mem)?, None)
+                    (TiledEngine::new(net, order, fast_mem).map_err(compile_err)?, None)
                 };
                 let st = engine.program().stats().clone();
                 let tuned = match &autotune {
@@ -173,15 +233,16 @@ impl ModelVariant {
                 );
                 (Arc::new(quant) as Arc<dyn Engine>, summary)
             }
-            ("i8", "fused" | "tiled") => anyhow::bail!(
-                "schedule {schedule:?} requires precision f32 (the i8 stream is \
-                 already compressed into its own record format; see the composition \
-                 matrix in README.md)"
-            ),
-            ("f32" | "i8", other) => {
-                anyhow::bail!("unknown schedule {other:?} (expected interp, fused or tiled)")
+            ("i8", "fused" | "tiled") => {
+                return Err(VariantError::Incompatible {
+                    schedule: schedule.to_string(),
+                    precision: precision.to_string(),
+                })
             }
-            (other, _) => anyhow::bail!("unknown precision {other:?} (expected f32 or i8)"),
+            ("f32" | "i8", other) => {
+                return Err(VariantError::UnknownSchedule(other.to_string()))
+            }
+            (other, _) => return Err(VariantError::UnknownPrecision(other.to_string())),
         };
         let prec_tag: &'static str = if precision == "i8" { "i8" } else { "f32" };
         let sched_tag: &'static str = match schedule {
@@ -208,6 +269,10 @@ impl ModelVariant {
 
     /// A variant serving a compressed quantized stream engine
     /// (`exec::quant::QuantStreamEngine`), tagged with precision "i8".
+    #[deprecated(
+        since = "0.6.0",
+        note = "use ModelVariant::build (or new().with_precision(\"i8\") for custom engines)"
+    )]
     pub fn quantized(name: &str, engine: Arc<dyn Engine>) -> ModelVariant {
         ModelVariant::new(name, engine).with_precision("i8")
     }
@@ -215,6 +280,10 @@ impl ModelVariant {
     /// A variant serving a run-length block-compiled stream engine
     /// (`exec::fused::FusedEngine`), tagged with schedule "fused" and
     /// carrying its fusion statistics for the serving metrics.
+    #[deprecated(
+        since = "0.6.0",
+        note = "use ModelVariant::build (or new().with_schedule(\"fused\") for custom engines)"
+    )]
     pub fn fused(name: &str, engine: Arc<dyn Engine>, stats: FusionStats) -> ModelVariant {
         ModelVariant::new(name, engine)
             .with_schedule("fused")
@@ -378,7 +447,7 @@ mod tests {
     fn precision_tagging() {
         let v = ModelVariant::new("f", Arc::new(FakeEngine("stream")));
         assert_eq!(v.precision, "f32");
-        let q = ModelVariant::quantized("q", Arc::new(FakeEngine("quant-stream")));
+        let q = ModelVariant::new("q", Arc::new(FakeEngine("quant-stream"))).with_precision("i8");
         assert_eq!(q.precision, "i8");
         assert_eq!(q.route().name(), "quant-stream");
         // Precision composes with batch sharding.
@@ -402,7 +471,9 @@ mod tests {
             max_run_len: 5,
             ..FusionStats::default()
         };
-        let f = ModelVariant::fused("f", Arc::new(FakeEngine("fused-stream")), stats.clone());
+        let f = ModelVariant::new("f", Arc::new(FakeEngine("fused-stream")))
+            .with_schedule("fused")
+            .with_fusion_stats(stats.clone());
         assert_eq!(f.schedule, "fused");
         assert_eq!(f.precision, "f32");
         assert_eq!(f.route().name(), "fused-stream");
@@ -420,11 +491,27 @@ mod tests {
     fn labels_encode_composition_point() {
         let v = ModelVariant::new("m", Arc::new(FakeEngine("stream")));
         assert_eq!(v.label(), "interp-f32-w1");
-        let q = ModelVariant::quantized("q", Arc::new(FakeEngine("quant-stream")));
+        let q = ModelVariant::new("q", Arc::new(FakeEngine("quant-stream"))).with_precision("i8");
         assert_eq!(q.label(), "interp-i8-w1");
         let sf = ModelVariant::sharded("sf", Arc::new(FakeEngine("fused-stream")), 4)
             .with_schedule("fused");
         assert_eq!(sf.label(), "fused-f32-w4");
+    }
+
+    /// The deprecated constructors stay as thin shims until external
+    /// callers migrate to `ModelVariant::build`.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_shims_still_work() {
+        let q = ModelVariant::quantized("q", Arc::new(FakeEngine("quant-stream")));
+        assert_eq!((q.precision, q.schedule), ("i8", "interp"));
+        let f = ModelVariant::fused(
+            "f",
+            Arc::new(FakeEngine("fused-stream")),
+            FusionStats::default(),
+        );
+        assert_eq!((f.precision, f.schedule), ("f32", "fused"));
+        assert!(f.fusion.is_some());
     }
 
     #[test]
@@ -467,14 +554,34 @@ mod tests {
         let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2, 0).unwrap();
         assert_eq!((v.precision, v.workers), ("i8", 2));
 
-        // Invalid points are rejected, not silently coerced.
-        assert!(ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0).is_err());
-        assert!(ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0).is_err());
-        assert!(ModelVariant::build("m", &net, &order, "jit", "f32", 1, 0).is_err());
-        assert!(ModelVariant::build("m", &net, &order, "interp", "f16", 1, 0).is_err());
-        // --fast-mem is tiled-only, and a sub-minimum budget fails.
-        assert!(ModelVariant::build("m", &net, &order, "interp", "f32", 1, 64).is_err());
-        assert!(ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 2).is_err());
+        // Invalid points are rejected with structured errors, not
+        // silently coerced (and not stringly typed).
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0),
+            Err(VariantError::Incompatible { .. })
+        ));
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0),
+            Err(VariantError::Incompatible { .. })
+        ));
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "jit", "f32", 1, 0),
+            Err(VariantError::UnknownSchedule(s)) if s == "jit"
+        ));
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "interp", "f16", 1, 0),
+            Err(VariantError::UnknownPrecision(p)) if p == "f16"
+        ));
+        // --fast-mem is tiled-only, and a sub-minimum budget fails in
+        // the tiled compiler.
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "interp", "f32", 1, 64),
+            Err(VariantError::FastMemRequiresTiled { fast_mem: 64, .. })
+        ));
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 2),
+            Err(VariantError::Compile { .. })
+        ));
     }
 
     #[test]

@@ -16,9 +16,10 @@ use super::metrics::Metrics;
 use super::request::{InferenceError, Request, Response};
 use super::router::Router;
 use crate::exec::batch::BatchMatrix;
+use super::router::ModelVariant;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -51,69 +52,108 @@ struct ModelQueue {
     n_inputs: usize,
 }
 
-/// A running server. Dropping it shuts down all dispatcher threads
-/// (pending requests receive `ShuttingDown`).
+/// A running server. Models can be deployed and undeployed while it
+/// serves ([`Server::deploy`] / [`Server::undeploy`]); dropping it shuts
+/// down all dispatcher threads (pending requests receive
+/// `ShuttingDown`).
 pub struct Server {
-    queues: BTreeMap<String, ModelQueue>,
+    queues: Arc<RwLock<BTreeMap<String, ModelQueue>>>,
+    batch: BatchPolicy,
     admission: AdmissionPolicy,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
-    threads: Vec<thread::JoinHandle<()>>,
+    threads: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl Server {
+    /// Start with no models; deploy them dynamically with
+    /// [`Server::deploy`] (the registry's entry point).
+    pub fn start_dynamic(config: ServerConfig) -> Server {
+        Server {
+            queues: Arc::new(RwLock::new(BTreeMap::new())),
+            batch: config.batch,
+            admission: config.admission,
+            metrics: Arc::new(Metrics::new()),
+            next_id: Arc::new(AtomicU64::new(1)),
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
     /// Start dispatcher threads for every model in the router.
     pub fn start(router: Router, config: ServerConfig) -> Server {
         assert!(!router.is_empty(), "server needs at least one model");
-        let metrics = Arc::new(Metrics::new());
-        let mut queues = BTreeMap::new();
-        let mut threads = Vec::new();
-
+        let server = Server::start_dynamic(config);
         for name in router.model_names().into_iter().map(str::to_string).collect::<Vec<_>>() {
-            let variant = router.get(&name).expect("listed model exists");
-            let engine = Arc::clone(variant.route());
-            let engine_name = engine.name();
-            let n_inputs = engine.n_inputs();
-            if let Some(sink) = &variant.shard_timings {
-                metrics.link_shard_timings(&name, Arc::clone(sink));
-            }
-            if let Some(stats) = &variant.fusion {
-                metrics.link_fusion_stats(&name, stats.clone());
-            }
-            if let Some(stats) = &variant.tiled {
-                metrics.link_tiled_stats(&name, stats.clone());
-            }
+            let variant = router.get(&name).expect("listed model exists").clone();
+            server.deploy(variant);
+        }
+        server
+    }
 
-            let (tx, rx) = mpsc::channel::<QueueMsg>();
-            let depth = Arc::new(AtomicUsize::new(0));
-            queues.insert(
-                name.clone(),
-                ModelQueue { tx, depth: Arc::clone(&depth), n_inputs },
-            );
-            let metrics = Arc::clone(&metrics);
-            let policy = config.batch;
-            threads.push(
-                thread::Builder::new()
-                    .name(format!("sparseflow-dispatch-{name}"))
-                    .spawn(move || {
-                        dispatch_loop(rx, depth, engine, engine_name, n_inputs, policy, metrics);
-                    })
-                    .expect("spawn dispatcher"),
-            );
+    /// Deploy (or hot-swap) a model while serving: spawns the new
+    /// dispatcher, swaps the queue under the write lock, then sends the
+    /// old dispatcher (if any) its shutdown sentinel. Submissions hold
+    /// the queue-map read lock across their channel send, so the write
+    /// lock serializes the swap against every in-flight submit: any
+    /// request sent to the old queue precedes its `Shutdown` sentinel,
+    /// and FIFO channel order guarantees the old dispatcher answers all
+    /// of them before draining out. No request is dropped or misrouted
+    /// during a swap.
+    pub fn deploy(&self, variant: ModelVariant) {
+        let name = variant.name.clone();
+        let engine = Arc::clone(variant.route());
+        let engine_name = engine.name();
+        let n_inputs = engine.n_inputs();
+        if let Some(sink) = &variant.shard_timings {
+            self.metrics.link_shard_timings(&name, Arc::clone(sink));
+        }
+        if let Some(stats) = &variant.fusion {
+            self.metrics.link_fusion_stats(&name, stats.clone());
+        }
+        if let Some(stats) = &variant.tiled {
+            self.metrics.link_tiled_stats(&name, stats.clone());
         }
 
-        Server {
-            queues,
-            admission: config.admission,
-            metrics,
-            next_id: Arc::new(AtomicU64::new(1)),
-            threads,
+        let (tx, rx) = mpsc::channel::<QueueMsg>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let metrics = Arc::clone(&self.metrics);
+        let policy = self.batch;
+        let thread_depth = Arc::clone(&depth);
+        let handle = thread::Builder::new()
+            .name(format!("sparseflow-dispatch-{name}"))
+            .spawn(move || {
+                dispatch_loop(rx, thread_depth, engine, engine_name, n_inputs, policy, metrics);
+            })
+            .expect("spawn dispatcher");
+        self.threads.lock().unwrap().push(handle);
+
+        let old = self
+            .queues
+            .write()
+            .unwrap()
+            .insert(name, ModelQueue { tx, depth, n_inputs });
+        if let Some(old) = old {
+            // Old dispatcher drains everything already enqueued, then
+            // exits and releases its engine.
+            let _ = old.tx.send(QueueMsg::Shutdown);
+        }
+    }
+
+    /// Remove a model. In-flight requests drain; later submissions get
+    /// `UnknownModel`. Returns whether the model was deployed.
+    pub fn undeploy(&self, model: &str) -> bool {
+        match self.queues.write().unwrap().remove(model) {
+            Some(q) => {
+                let _ = q.tx.send(QueueMsg::Shutdown);
+                true
+            }
+            None => false,
         }
     }
 
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
-            queues: self.queues.clone(),
+            queues: Arc::clone(&self.queues),
             admission: self.admission,
             metrics: Arc::clone(&self.metrics),
             next_id: Arc::clone(&self.next_id),
@@ -130,11 +170,14 @@ impl Drop for Server {
         // Send explicit shutdown sentinels: live client handles hold
         // sender clones, so merely dropping our senders would not close
         // the channels.
-        for q in self.queues.values() {
-            let _ = q.tx.send(QueueMsg::Shutdown);
+        {
+            let mut queues = self.queues.write().unwrap();
+            for q in queues.values() {
+                let _ = q.tx.send(QueueMsg::Shutdown);
+            }
+            queues.clear();
         }
-        self.queues.clear();
-        for t in self.threads.drain(..) {
+        for t in self.threads.get_mut().unwrap().drain(..) {
             let _ = t.join();
         }
     }
@@ -222,10 +265,11 @@ fn dispatch_loop(
     }
 }
 
-/// Cheap cloneable client handle.
+/// Cheap cloneable client handle. Sees deploys/undeploys live (the
+/// queue map is shared with the server behind a read-write lock).
 #[derive(Clone)]
 pub struct ServerHandle {
-    queues: BTreeMap<String, ModelQueue>,
+    queues: Arc<RwLock<BTreeMap<String, ModelQueue>>>,
     admission: AdmissionPolicy,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
@@ -252,8 +296,12 @@ impl ServerHandle {
         input: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<mpsc::Receiver<Result<Response, InferenceError>>, InferenceError> {
-        let queue = self
-            .queues
+        // Hold the read lock across the send: a concurrent hot-swap
+        // (write lock) can then only happen before or after the whole
+        // lookup+enqueue, never between — so a request never lands on a
+        // queue whose shutdown sentinel was already sent.
+        let queues = self.queues.read().unwrap();
+        let queue = queues
             .get(model)
             .ok_or_else(|| InferenceError::UnknownModel(model.to_string()))?;
         if self.admission.max_queue > 0 {
@@ -302,12 +350,12 @@ impl ServerHandle {
     }
 
     pub fn n_inputs(&self, model: &str) -> Option<usize> {
-        self.queues.get(model).map(|q| q.n_inputs)
+        self.queues.read().unwrap().get(model).map(|q| q.n_inputs)
     }
 
     /// Currently queued (admitted, not yet dispatched) requests.
     pub fn queue_depth(&self, model: &str) -> Option<usize> {
-        self.queues.get(model).map(|q| q.depth.load(Ordering::Relaxed))
+        self.queues.read().unwrap().get(model).map(|q| q.depth.load(Ordering::Relaxed))
     }
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Json {
@@ -315,7 +363,7 @@ impl ServerHandle {
     }
 
     pub fn models(&self) -> Vec<String> {
-        self.queues.keys().cloned().collect()
+        self.queues.read().unwrap().keys().cloned().collect()
     }
 }
 
@@ -626,7 +674,11 @@ mod tests {
         let engine = FusedEngine::new(&net, &order);
         let stats = engine.program().stats().clone();
         let mut router = Router::new();
-        router.register(ModelVariant::fused("f", Arc::new(engine), stats));
+        router.register(
+            ModelVariant::new("f", Arc::new(engine))
+                .with_schedule("fused")
+                .with_fusion_stats(stats),
+        );
         let server = Server::start(router, ServerConfig::default());
         let h = server.handle();
         let r = h.infer("f", vec![1.0; net.n_inputs()]).unwrap();
@@ -656,6 +708,87 @@ mod tests {
         let snap = h.metrics_snapshot();
         assert_eq!(snap.path(&["tiled", "t", "m"]).unwrap().as_u64(), Some(5));
         assert!(snap.path(&["tiled", "t", "segments"]).is_some());
+    }
+
+    /// Adds a constant; distinguishable from Doubler on the same input.
+    struct AddOne;
+    impl Engine for AddOne {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            let mut y = x.clone();
+            for v in y.data_mut() {
+                *v += 1.0;
+            }
+            y
+        }
+        fn name(&self) -> &'static str {
+            "add-one"
+        }
+        fn n_inputs(&self) -> usize {
+            3
+        }
+        fn n_outputs(&self) -> usize {
+            3
+        }
+    }
+
+    #[test]
+    fn dynamic_deploy_and_undeploy() {
+        let server = Server::start_dynamic(ServerConfig::default());
+        let h = server.handle();
+        assert!(h.models().is_empty());
+        assert_eq!(
+            h.infer("d", vec![0.0; 3]).unwrap_err(),
+            InferenceError::UnknownModel("d".into())
+        );
+        server.deploy(ModelVariant::new("d", Arc::new(Doubler)));
+        assert_eq!(h.models(), vec!["d".to_string()]);
+        assert_eq!(h.infer("d", vec![1.0; 3]).unwrap().output, vec![2.0; 3]);
+        assert!(server.undeploy("d"));
+        assert!(!server.undeploy("d"), "second undeploy is a no-op");
+        assert_eq!(
+            h.infer("d", vec![0.0; 3]).unwrap_err(),
+            InferenceError::UnknownModel("d".into())
+        );
+    }
+
+    #[test]
+    fn hot_swap_under_load_loses_nothing_and_releases_old_engine() {
+        let server = Server::start_dynamic(ServerConfig::default());
+        let old: Arc<dyn Engine> = Arc::new(SlowDoubler(Duration::from_millis(1)));
+        let old_probe = Arc::downgrade(&old);
+        server.deploy(ModelVariant::new("m", old));
+        let h = server.handle();
+
+        // Hammer the model from 4 client threads while one of them swaps
+        // in a new engine mid-stream. Every reply must be either the old
+        // engine's (2x) or the new engine's (x+1) — no drops, no errors,
+        // no ShuttingDown leaks from the drained dispatcher.
+        let ids: Vec<u64> = (0..120).collect();
+        let results = crate::util::threadpool::par_map(4, &ids, |&i| {
+            if i == 40 {
+                server.deploy(ModelVariant::new("m", Arc::new(AddOne)));
+            }
+            let x = i as f32;
+            let r = h.infer("m", vec![x; 3]).expect("no request lost during swap");
+            (x, r.output[0])
+        });
+        for (x, y) in results {
+            assert!(
+                y == 2.0 * x || y == x + 1.0,
+                "reply must come from exactly one engine generation (x={x}, y={y})"
+            );
+        }
+        // The drained dispatcher released the old engine.
+        for _ in 0..200 {
+            if old_probe.upgrade().is_none() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(old_probe.upgrade().is_none(), "old engine must be dropped after drain");
+        let s = h.metrics_snapshot();
+        assert_eq!(s.get("errors").unwrap().as_u64(), Some(0));
+        assert_eq!(s.get("responses").unwrap().as_u64(), Some(120));
     }
 
     #[test]

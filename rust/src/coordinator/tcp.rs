@@ -8,6 +8,10 @@
 //!     by clients)
 //!   → `{"cmd": "metrics"}`                          metrics snapshot
 //!   → `{"cmd": "models"}`                           registered models
+//!   → `{"cmd": "deploy", "path": "m@2.sfb"}`        register/hot-swap an
+//!     artifact (registry front-ends only; see
+//!     [`TcpFrontend::serve_registry`])
+//!   → `{"cmd": "undeploy", "model": "m"}`           remove a model
 //!   ← `{"ok": true, "output": [...], "engine": "...",
 //!      "latency_ms": ..., "queue_wait_ms": ...}`
 //!   ← `{"ok": false, "error": "..."}`               malformed request
@@ -21,6 +25,7 @@
 //! One thread per connection (the dynamic batcher merges concurrent
 //! requests across connections, so per-connection threads are cheap).
 
+use super::registry::Registry;
 use super::server::ServerHandle;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -42,9 +47,33 @@ pub struct TcpFrontend {
     accept_thread: Option<thread::JoinHandle<()>>,
 }
 
+/// What a connection can reach: the server handle, plus the registry
+/// when the front-end was started in registry mode (enables the
+/// `deploy`/`undeploy` commands, warm-model promotion on first hit, and
+/// the tiered `models` listing).
+#[derive(Clone)]
+struct Ctx {
+    handle: ServerHandle,
+    registry: Option<Registry>,
+}
+
 impl TcpFrontend {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
     pub fn serve(handle: ServerHandle, addr: &str) -> anyhow::Result<TcpFrontend> {
+        TcpFrontend::serve_ctx(Ctx { handle, registry: None }, addr)
+    }
+
+    /// Registry mode: inference requests promote warm models on first
+    /// hit, and the `deploy`/`undeploy`/`models` commands manage the
+    /// registry live.
+    pub fn serve_registry(registry: Registry, addr: &str) -> anyhow::Result<TcpFrontend> {
+        TcpFrontend::serve_ctx(
+            Ctx { handle: registry.handle(), registry: Some(registry) },
+            addr,
+        )
+    }
+
+    fn serve_ctx(ctx: Ctx, addr: &str) -> anyhow::Result<TcpFrontend> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -59,9 +88,9 @@ impl TcpFrontend {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             stream.set_nonblocking(false).ok();
-                            let h = handle.clone();
+                            let c = ctx.clone();
                             conn_threads.push(thread::spawn(move || {
-                                let _ = handle_conn(stream, h);
+                                let _ = handle_conn(stream, c);
                             }));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -144,7 +173,7 @@ fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
     }
 }
 
-fn handle_conn(stream: TcpStream, handle: ServerHandle) -> anyhow::Result<()> {
+fn handle_conn(stream: TcpStream, ctx: Ctx) -> anyhow::Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -155,7 +184,7 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle) -> anyhow::Result<()> {
                 if line.trim().is_empty() {
                     continue;
                 }
-                process_line(&line, &handle)
+                process_line(&line, &ctx)
             }
             Ok(LineRead::Oversized(len)) => err_json(&format!(
                 "oversized request: {len} bytes exceeds the {MAX_LINE_BYTES}-byte line limit"
@@ -169,7 +198,8 @@ fn handle_conn(stream: TcpStream, handle: ServerHandle) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn process_line(line: &str, handle: &ServerHandle) -> Json {
+fn process_line(line: &str, ctx: &Ctx) -> Json {
+    let handle = &ctx.handle;
     if line.len() > MAX_LINE_BYTES {
         return err_json(&format!(
             "oversized request: {} bytes exceeds the {MAX_LINE_BYTES}-byte line limit",
@@ -183,10 +213,46 @@ fn process_line(line: &str, handle: &ServerHandle) -> Json {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "metrics" => Json::obj().set("ok", true).set("metrics", handle.metrics_snapshot()),
-            "models" => Json::obj().set("ok", true).set(
-                "models",
-                Json::Arr(handle.models().into_iter().map(Json::Str).collect()),
-            ),
+            "models" => {
+                // Registry mode lists every registered model (warm ones
+                // included) plus the tiered detail; plain mode lists the
+                // deployed queue names.
+                let names = match &ctx.registry {
+                    Some(reg) => reg.models(),
+                    None => handle.models(),
+                };
+                let mut j = Json::obj()
+                    .set("ok", true)
+                    .set("models", Json::Arr(names.into_iter().map(Json::Str).collect()));
+                if let Some(reg) = &ctx.registry {
+                    j = j.set("registry", reg.snapshot());
+                }
+                j
+            }
+            "deploy" => {
+                let Some(reg) = &ctx.registry else {
+                    return err_json("deploy requires a registry front-end");
+                };
+                let Some(path) = req.get("path").and_then(Json::as_str) else {
+                    return err_json("missing 'path'");
+                };
+                match reg.deploy_file(std::path::Path::new(path)) {
+                    Ok((model, version)) => Json::obj()
+                        .set("ok", true)
+                        .set("model", model)
+                        .set("version", version),
+                    Err(e) => err_json(&format!("deploy failed: {e}")),
+                }
+            }
+            "undeploy" => {
+                let Some(reg) = &ctx.registry else {
+                    return err_json("undeploy requires a registry front-end");
+                };
+                let Some(model) = req.get("model").and_then(Json::as_str) else {
+                    return err_json("missing 'model'");
+                };
+                Json::obj().set("ok", true).set("removed", reg.undeploy(model))
+            }
             other => err_json(&format!("unknown cmd {other:?}")),
         };
     }
@@ -227,6 +293,13 @@ fn process_line(line: &str, handle: &ServerHandle) -> Json {
             }
         },
     };
+    // Registry mode: a hit on a warm model promotes it (builds and
+    // deploys its engine) before the request is submitted.
+    if let Some(reg) = &ctx.registry {
+        if let Err(e) = reg.ensure_hot(model) {
+            return err_json(&format!("model {model:?} unavailable: {e}"));
+        }
+    }
     match handle.infer_with_deadline(model, input, deadline) {
         Ok(resp) => Json::obj()
             .set("ok", true)
@@ -337,7 +410,7 @@ mod tests {
     #[test]
     fn process_line_validates() {
         // No server needed for pure validation failures.
-        let handle = {
+        let ctx = {
             use crate::coordinator::router::{ModelVariant, Router};
             use crate::coordinator::server::{Server, ServerConfig};
             use crate::exec::batch::BatchMatrix;
@@ -363,8 +436,9 @@ mod tests {
             // Leak the server so its dispatcher threads outlive the test
             // handle (tiny, test-only).
             let server = Box::leak(Box::new(Server::start(r, ServerConfig::default())));
-            server.handle()
+            Ctx { handle: server.handle(), registry: None }
         };
+        let handle = ctx;
 
         let bad = process_line("{nope", &handle);
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
@@ -413,5 +487,62 @@ mod tests {
         let over = process_line(&huge, &handle);
         assert_eq!(over.get("ok").unwrap().as_bool(), Some(false));
         assert!(over.get("error").unwrap().as_str().unwrap().contains("oversized"));
+    }
+
+    #[test]
+    fn registry_commands_over_process_line() {
+        use crate::coordinator::registry::{Registry, RegistryConfig};
+        use crate::coordinator::server::ServerConfig;
+        use crate::ffnn::generate::{random_mlp, MlpSpec};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::model::{Format, Model};
+        use crate::util::rng::Pcg64;
+
+        let dir = std::env::temp_dir().join("sparseflow-tcp-registry-unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let net = random_mlp(&MlpSpec::new(2, 6, 0.6), &mut Pcg64::new(3));
+        let order = two_optimal_order(&net);
+        let path = dir.join("m.sfb");
+        Model::from_net(net.clone(), Some(order)).save(&path, Format::BinV1).unwrap();
+
+        let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+        let ctx = Ctx { handle: reg.handle(), registry: Some(reg) };
+
+        // Deploy over the wire, then infer: the warm model is promoted
+        // on first hit.
+        let line = format!(r#"{{"cmd": "deploy", "path": "{}"}}"#, path.display());
+        let dep = process_line(&line, &ctx);
+        assert_eq!(dep.get("ok").unwrap().as_bool(), Some(true), "{dep:?}");
+        assert_eq!(dep.get("model").unwrap().as_str(), Some("m"));
+        assert_eq!(dep.get("version").unwrap().as_u64(), Some(1));
+
+        let models = process_line(r#"{"cmd": "models"}"#, &ctx);
+        assert_eq!(models.get("models").unwrap().as_arr().unwrap()[0].as_str(), Some("m"));
+        assert_eq!(
+            models.path(&["registry", "models", "m", "tier"]).unwrap().as_str(),
+            Some("warm")
+        );
+
+        let input: Vec<String> = vec!["0.5".to_string(); net.n_inputs()];
+        let line = format!(r#"{{"model": "m", "input": [{}]}}"#, input.join(", "));
+        let ok = process_line(&line, &ctx);
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true), "{ok:?}");
+
+        let models = process_line(r#"{"cmd": "models"}"#, &ctx);
+        assert_eq!(
+            models.path(&["registry", "models", "m", "tier"]).unwrap().as_str(),
+            Some("hot"),
+            "first hit promoted the model"
+        );
+
+        let und = process_line(r#"{"cmd": "undeploy", "model": "m"}"#, &ctx);
+        assert_eq!(und.get("removed").unwrap().as_bool(), Some(true));
+        let miss = process_line(&line, &ctx);
+        assert_eq!(miss.get("ok").unwrap().as_bool(), Some(false));
+
+        // Deploy of a missing/garbage path fails cleanly.
+        let bad = process_line(r#"{"cmd": "deploy", "path": "/nonexistent.sfb"}"#, &ctx);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
     }
 }

@@ -43,6 +43,7 @@ use super::stream::{StreamOp, StreamProgram};
 use super::{init_values, relu_row, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
+use crate::runtime::mmap::Pool;
 use crate::util::json::Json;
 
 /// Batch-column tile width of the microkernels. Eight f32 lanes fill one
@@ -151,26 +152,44 @@ pub enum MacroOp<'a> {
 }
 
 /// A run-length-fused stream program: the offline-compiled macro-op form
-/// of a [`StreamProgram`], in structure-of-arrays layout.
+/// of a [`StreamProgram`], in structure-of-arrays layout. Every pool is
+/// a [`Pool`] — owned when compiled in-process, borrowed straight out of
+/// a mapped `sparseflow-bin-v1` artifact on the zero-copy load path.
 #[derive(Clone, Debug)]
 pub struct FusedProgram {
     /// One control byte per macro-op ([`KIND_AXPY`] | [`DOT_RELU`]).
-    ctrl: Vec<u8>,
+    ctrl: Pool<u8>,
     /// Shared row per macro-op: dst of a DotRun, src of an AxpyRun.
-    pivots: Vec<u32>,
+    pivots: Pool<u32>,
     /// Macro-op `m` owns pool elements `bounds[m]..bounds[m+1]`.
-    bounds: Vec<u32>,
+    bounds: Pool<u32>,
     /// Per-element row pool: srcs of a DotRun, dsts of an AxpyRun.
-    idx: Vec<u32>,
-    weights: Vec<f32>,
+    idx: Pool<u32>,
+    weights: Pool<f32>,
     /// Per-element finish/hidden flags (AxpyRun elements; 0 for DotRun).
-    flags: Vec<u8>,
-    biases: Vec<f32>,
-    hidden_sources: Vec<u32>,
-    input_ids: Vec<u32>,
-    output_ids: Vec<u32>,
+    flags: Pool<u8>,
+    biases: Pool<f32>,
+    hidden_sources: Pool<u32>,
+    input_ids: Pool<u32>,
+    output_ids: Pool<u32>,
     n_neurons: usize,
     stats: FusionStats,
+}
+
+/// The full pool set of a [`FusedProgram`], as carried by a
+/// `sparseflow-bin-v1` artifact. Feed to [`FusedProgram::from_pools`].
+pub struct FusedPools {
+    pub ctrl: Pool<u8>,
+    pub pivots: Pool<u32>,
+    pub bounds: Pool<u32>,
+    pub idx: Pool<u32>,
+    pub weights: Pool<f32>,
+    pub flags: Pool<u8>,
+    pub biases: Pool<f32>,
+    pub hidden_sources: Pool<u32>,
+    pub input_ids: Pool<u32>,
+    pub output_ids: Pool<u32>,
+    pub n_neurons: usize,
 }
 
 impl FusedProgram {
@@ -226,19 +245,159 @@ impl FusedProgram {
         );
 
         FusedProgram {
+            ctrl: ctrl.into(),
+            pivots: pivots.into(),
+            bounds: bounds.into(),
+            idx: idx.into(),
+            weights: weights.into(),
+            flags: flags.into(),
+            biases: p.biases().to_vec().into(),
+            hidden_sources: p.hidden_sources().to_vec().into(),
+            input_ids: p.input_ids().to_vec().into(),
+            output_ids: p.output_ids().to_vec().into(),
+            n_neurons: p.n_neurons(),
+            stats,
+        }
+    }
+
+    /// Reassemble a program from externally supplied pools (the
+    /// artifact-loading path — pools may borrow an mmap). Revalidates
+    /// every invariant the microkernels rely on, so a corrupt or
+    /// adversarial artifact errors instead of indexing out of bounds:
+    /// shape agreement between pools, `bounds` strictly increasing from
+    /// 0 to `idx.len()`, control bytes well-formed, every row id in
+    /// range, and no run element aliasing its pivot (the no-self-loop
+    /// guarantee `dot_run`/`axpy_run` cache registers against).
+    /// Fusion statistics are recomputed from the run structure.
+    pub fn from_pools(pools: FusedPools) -> anyhow::Result<FusedProgram> {
+        let FusedPools {
             ctrl,
             pivots,
             bounds,
             idx,
             weights,
             flags,
-            biases: p.biases().to_vec(),
-            hidden_sources: p.hidden_sources().to_vec(),
-            input_ids: p.input_ids().to_vec(),
-            output_ids: p.output_ids().to_vec(),
-            n_neurons: p.n_neurons(),
-            stats,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+        } = pools;
+        let n_macro = ctrl.len();
+        let n = n_neurons as u32;
+        anyhow::ensure!(pivots.len() == n_macro, "pivots/ctrl length mismatch");
+        anyhow::ensure!(bounds.len() == n_macro + 1, "bounds must have one extra entry");
+        anyhow::ensure!(bounds.first() == Some(&0), "bounds must start at 0");
+        anyhow::ensure!(
+            *bounds.last().unwrap() as usize == idx.len(),
+            "bounds must end at idx length"
+        );
+        anyhow::ensure!(
+            idx.len() == weights.len() && idx.len() == flags.len(),
+            "idx/weights/flags length mismatch"
+        );
+        anyhow::ensure!(biases.len() == n_neurons, "biases length != n_neurons");
+        for &v in hidden_sources.iter().chain(&input_ids[..]).chain(&output_ids[..]) {
+            anyhow::ensure!(v < n, "neuron id {v} out of range 0..{n}");
         }
+        let mut stats = FusionStats {
+            n_ops: idx.len(),
+            ..FusionStats::default()
+        };
+        for m in 0..n_macro {
+            let c = ctrl[m];
+            anyhow::ensure!(c & !(KIND_AXPY | DOT_RELU) == 0, "macro-op {m}: bad ctrl {c:#x}");
+            let axpy = c & KIND_AXPY != 0;
+            anyhow::ensure!(!(axpy && c & DOT_RELU != 0), "macro-op {m}: axpy with dot bit");
+            let pivot = pivots[m];
+            anyhow::ensure!(pivot < n, "macro-op {m}: pivot {pivot} out of range");
+            let (lo, hi) = (bounds[m] as usize, bounds[m + 1] as usize);
+            anyhow::ensure!(lo < hi, "macro-op {m}: empty or decreasing run");
+            for k in lo..hi {
+                anyhow::ensure!(idx[k] < n, "macro-op {m}: row {} out of range", idx[k]);
+                anyhow::ensure!(idx[k] != pivot, "macro-op {m}: element aliases pivot {pivot}");
+                if axpy {
+                    anyhow::ensure!(
+                        flags[k] & !(FLAG_FINISH | FLAG_HIDDEN) == 0,
+                        "macro-op {m}: bad flags {:#x}",
+                        flags[k]
+                    );
+                } else {
+                    anyhow::ensure!(flags[k] == 0, "macro-op {m}: dot element carries flags");
+                }
+            }
+            let len = hi - lo;
+            stats.max_run_len = stats.max_run_len.max(len);
+            if len == 1 {
+                stats.n_singletons += 1;
+            } else {
+                stats.fused_ops += len;
+                if axpy {
+                    stats.n_axpy_runs += 1;
+                } else {
+                    stats.n_dot_runs += 1;
+                }
+            }
+        }
+        Ok(FusedProgram {
+            ctrl,
+            pivots,
+            bounds,
+            idx,
+            weights,
+            flags,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+            stats,
+        })
+    }
+
+    /// Expand the macro-op stream back into per-connection ops, in the
+    /// original stream order. Per-element finish/hidden flags of AxpyRun
+    /// elements are exact; a DotRun's interior elements never carried a
+    /// finish (enforced at fusion time), so only its final element is
+    /// flagged — and only when the run ends in a hidden finish (the
+    /// [`DOT_RELU`] bit). Execution-equivalent to the source stream:
+    /// every consumer acts only on `finish && hidden`.
+    pub fn expand_ops(&self) -> Vec<StreamOp> {
+        let mut ops = Vec::with_capacity(self.idx.len());
+        for m in 0..self.pivots.len() {
+            let (lo, hi) = (self.bounds[m] as usize, self.bounds[m + 1] as usize);
+            let pivot = self.pivots[m];
+            if self.ctrl[m] & KIND_AXPY != 0 {
+                for k in lo..hi {
+                    ops.push(StreamOp {
+                        src: pivot,
+                        dst: self.idx[k],
+                        weight: self.weights[k],
+                        dst_finish: self.flags[k] & FLAG_FINISH != 0,
+                        dst_is_hidden: self.flags[k] & FLAG_HIDDEN != 0,
+                    });
+                }
+            } else {
+                let relu = self.ctrl[m] & DOT_RELU != 0;
+                for k in lo..hi {
+                    let last = k + 1 == hi;
+                    ops.push(StreamOp {
+                        src: self.idx[k],
+                        dst: pivot,
+                        weight: self.weights[k],
+                        dst_finish: last && relu,
+                        dst_is_hidden: last && relu,
+                    });
+                }
+            }
+        }
+        ops
+    }
+
+    /// True when the pools borrow a mapped artifact instead of owning
+    /// heap copies (the zero-copy load path).
+    pub fn is_zero_copy(&self) -> bool {
+        self.idx.is_borrowed() && self.weights.is_borrowed()
     }
 
     pub fn n_ops(&self) -> usize {
@@ -259,6 +418,38 @@ impl FusedProgram {
 
     pub fn output_ids(&self) -> &[u32] {
         &self.output_ids
+    }
+
+    pub fn ctrl(&self) -> &[u8] {
+        &self.ctrl
+    }
+
+    pub fn pivots(&self) -> &[u32] {
+        &self.pivots
+    }
+
+    pub fn bounds(&self) -> &[u32] {
+        &self.bounds
+    }
+
+    pub fn idx(&self) -> &[u32] {
+        &self.idx
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    pub fn flags(&self) -> &[u8] {
+        &self.flags
+    }
+
+    pub fn biases(&self) -> &[f32] {
+        &self.biases
+    }
+
+    pub fn hidden_sources(&self) -> &[u32] {
+        &self.hidden_sources
     }
 
     pub fn stats(&self) -> &FusionStats {

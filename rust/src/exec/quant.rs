@@ -32,12 +32,15 @@ use super::stream::{StreamOp, StreamProgram};
 use super::{relu_row, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
+use crate::runtime::mmap::Pool;
 
 /// Records per quantization group (one f32 scale/zero-point pair each).
 pub const GROUP: usize = 64;
 
 /// Affine dequantization parameters of one group:
-/// `w ≈ scale * (q as f32 - zero_point)`.
+/// `w ≈ scale * (q as f32 - zero_point)`. `repr(C)` pins the two-f32
+/// layout the binary artifact format borrows groups through.
+#[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantGroup {
     pub scale: f32,
@@ -62,16 +65,31 @@ pub struct QuantParts {
     pub n_neurons: usize,
 }
 
+/// Pool-backed constituents of a [`QuantStreamProgram`]: owned when
+/// compiled in-process, borrowed out of a mapped `sparseflow-bin-v1`
+/// artifact on the zero-copy load path. Feed to
+/// [`QuantStreamProgram::from_pools`].
+pub struct QuantPools {
+    pub ctrl: Pool<u8>,
+    pub qweights: Pool<i8>,
+    pub groups: Pool<QuantGroup>,
+    pub biases: Pool<f32>,
+    pub hidden_sources: Pool<u32>,
+    pub input_ids: Pool<u32>,
+    pub output_ids: Pool<u32>,
+    pub n_neurons: usize,
+}
+
 /// A compressed, quantized stream program for one network + order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantStreamProgram {
-    ctrl: Vec<u8>,
-    qweights: Vec<i8>,
-    groups: Vec<QuantGroup>,
-    biases: Vec<f32>,
-    hidden_sources: Vec<u32>,
-    input_ids: Vec<u32>,
-    output_ids: Vec<u32>,
+    ctrl: Pool<u8>,
+    qweights: Pool<i8>,
+    groups: Pool<QuantGroup>,
+    biases: Pool<f32>,
+    hidden_sources: Pool<u32>,
+    input_ids: Pool<u32>,
+    output_ids: Pool<u32>,
     n_neurons: usize,
 }
 
@@ -115,20 +133,19 @@ impl QuantStreamProgram {
             }
         }
         QuantStreamProgram {
-            ctrl,
-            qweights,
-            groups,
-            biases: p.biases().to_vec(),
-            hidden_sources: p.hidden_sources().to_vec(),
-            input_ids: p.input_ids().to_vec(),
-            output_ids: p.output_ids().to_vec(),
+            ctrl: ctrl.into(),
+            qweights: qweights.into(),
+            groups: groups.into(),
+            biases: p.biases().to_vec().into(),
+            hidden_sources: p.hidden_sources().to_vec().into(),
+            input_ids: p.input_ids().to_vec().into(),
+            output_ids: p.output_ids().to_vec().into(),
             n_neurons: p.n_neurons(),
         }
     }
 
-    /// Rebuild a program from raw parts (artifact loading path),
-    /// validating that the control stream decodes to exactly one
-    /// in-range record per quantized weight.
+    /// Rebuild a program from owned raw parts (serialization exchange
+    /// path). Same validation as [`QuantStreamProgram::from_pools`].
     pub fn from_parts(parts: QuantParts) -> anyhow::Result<QuantStreamProgram> {
         let QuantParts {
             ctrl,
@@ -140,6 +157,34 @@ impl QuantStreamProgram {
             output_ids,
             n_neurons,
         } = parts;
+        QuantStreamProgram::from_pools(QuantPools {
+            ctrl: ctrl.into(),
+            qweights: qweights.into(),
+            groups: groups.into(),
+            biases: biases.into(),
+            hidden_sources: hidden_sources.into(),
+            input_ids: input_ids.into(),
+            output_ids: output_ids.into(),
+            n_neurons,
+        })
+    }
+
+    /// Rebuild a program from pools that may borrow a mapped artifact
+    /// (the zero-copy loading path), validating that the control stream
+    /// decodes to exactly one in-range record per quantized weight — the
+    /// invariant `run_into`'s unchecked row split and varint reads rely
+    /// on, so a corrupt artifact errors instead of executing.
+    pub fn from_pools(pools: QuantPools) -> anyhow::Result<QuantStreamProgram> {
+        let QuantPools {
+            ctrl,
+            qweights,
+            groups,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+        } = pools;
         anyhow::ensure!(
             groups.len() == qweights.len().div_ceil(GROUP),
             "need {} quant groups for {} records, got {}",
@@ -152,7 +197,7 @@ impl QuantStreamProgram {
             "biases length {} != n_neurons {n_neurons}",
             biases.len()
         );
-        for &v in hidden_sources.iter().chain(&input_ids).chain(&output_ids) {
+        for &v in hidden_sources.iter().chain(&input_ids[..]).chain(&output_ids[..]) {
             anyhow::ensure!((v as usize) < n_neurons, "neuron id {v} out of range");
         }
         decode_records(&ctrl, &qweights, &groups, n_neurons)?;
@@ -171,15 +216,21 @@ impl QuantStreamProgram {
     /// Clone the raw constituents (serialization exchange).
     pub fn to_parts(&self) -> QuantParts {
         QuantParts {
-            ctrl: self.ctrl.clone(),
-            qweights: self.qweights.clone(),
-            groups: self.groups.clone(),
-            biases: self.biases.clone(),
-            hidden_sources: self.hidden_sources.clone(),
-            input_ids: self.input_ids.clone(),
-            output_ids: self.output_ids.clone(),
+            ctrl: self.ctrl.to_vec(),
+            qweights: self.qweights.to_vec(),
+            groups: self.groups.to_vec(),
+            biases: self.biases.to_vec(),
+            hidden_sources: self.hidden_sources.to_vec(),
+            input_ids: self.input_ids.to_vec(),
+            output_ids: self.output_ids.to_vec(),
             n_neurons: self.n_neurons,
         }
+    }
+
+    /// True when the stream pools borrow a mapped artifact instead of
+    /// owning heap copies (the zero-copy load path).
+    pub fn is_zero_copy(&self) -> bool {
+        self.ctrl.is_borrowed() && self.qweights.is_borrowed()
     }
 
     pub fn n_ops(&self) -> usize {

@@ -81,6 +81,45 @@ impl StreamProgram {
         }
     }
 
+    /// Rebuild a program from raw parts (the artifact loading path).
+    /// Validates everything [`StreamProgram::run_into`]'s unchecked row
+    /// split relies on — `src != dst`, every id in range — so a corrupt
+    /// artifact errors instead of executing out of bounds. Topological
+    /// consistency is *not* recheckable without the source network; the
+    /// binary format's checksums vouch for it.
+    pub fn from_raw_parts(
+        ops: Vec<StreamOp>,
+        biases: Vec<f32>,
+        hidden_sources: Vec<u32>,
+        input_ids: Vec<u32>,
+        output_ids: Vec<u32>,
+        n_neurons: usize,
+    ) -> anyhow::Result<StreamProgram> {
+        anyhow::ensure!(
+            biases.len() == n_neurons,
+            "biases length {} != n_neurons {n_neurons}",
+            biases.len()
+        );
+        for (i, op) in ops.iter().enumerate() {
+            anyhow::ensure!(
+                (op.src as usize) < n_neurons && (op.dst as usize) < n_neurons,
+                "op {i}: row out of range 0..{n_neurons}"
+            );
+            anyhow::ensure!(op.src != op.dst, "op {i}: self-loop on {}", op.src);
+        }
+        for &v in hidden_sources.iter().chain(&input_ids).chain(&output_ids) {
+            anyhow::ensure!((v as usize) < n_neurons, "neuron id {v} out of range");
+        }
+        Ok(StreamProgram {
+            ops,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+        })
+    }
+
     pub fn n_ops(&self) -> usize {
         self.ops.len()
     }
@@ -164,6 +203,14 @@ impl StreamingEngine {
     pub fn new(net: &Ffnn, order: &ConnOrder) -> StreamingEngine {
         StreamingEngine {
             program: StreamProgram::compile(net, order),
+            name: "stream",
+        }
+    }
+
+    /// Wrap an already-built (e.g. artifact-loaded) program.
+    pub fn from_program(program: StreamProgram) -> StreamingEngine {
+        StreamingEngine {
+            program,
             name: "stream",
         }
     }

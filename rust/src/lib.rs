@@ -29,7 +29,12 @@
 //!    block with explicit fill/spill I/Os at segment boundaries,
 //!    bit-identical for every budget, autotuned through the simulator).
 //! 6. [`runtime`] — PJRT client that loads AOT-compiled JAX/Pallas HLO
-//!    artifacts and executes them from Rust.
+//!    artifacts and executes them from Rust, plus the zero-copy
+//!    `sparseflow-bin-v1` model artifact ([`runtime::artifact`],
+//!    [`runtime::mmap`]).
+//! 6b. [`model`] — the unified model-loading API: [`model::Model::load`]
+//!    sniffs JSON / quant-JSON / binary artifacts and builds serving
+//!    variants through one constructor.
 //! 7. [`coordinator`] — batched inference serving: request queue,
 //!    deadline-aware dynamic batcher with admission control, engine
 //!    router, worker pool, latency-split metrics, TCP front-end.
@@ -63,6 +68,7 @@ pub mod exec;
 pub mod ffnn;
 pub mod loadgen;
 pub mod memory;
+pub mod model;
 pub mod reorder;
 pub mod runtime;
 pub mod sim;
@@ -89,6 +95,7 @@ pub mod prelude {
         topo::{layerwise_order, two_optimal_order, ConnOrder},
     };
     pub use crate::memory::PolicyKind;
+    pub use crate::model::{Format, LoadedModel, Model};
     pub use crate::reorder::annealing::{reorder, AnnealConfig, AnnealReport};
     pub use crate::sim::{simulate, IoStats};
     pub use crate::util::rng::Pcg64;

@@ -5,7 +5,10 @@
 //!   bounds     print the Theorem-1 I/O bounds of a network file
 //!   simulate   count I/Os of Algorithm-1 inference (policy × memory sweep)
 //!   reorder    run Connection Reordering and store the improved order
-//!   serve      serve a network over TCP (deadline-aware batching, line-JSON)
+//!   pack       compile a model into a zero-copy binary artifact (.sfb)
+//!   inspect    describe a model file (format, sections, checksums)
+//!   serve      serve a model over TCP (deadline-aware batching, line-JSON);
+//!              `--model-dir` switches to the versioned multi-model registry
 //!   client     send one inference request to a running server
 //!   loadgen    deterministic closed/open-loop load generation against an
 //!              in-process server (per-engine-variant comparison)
@@ -17,13 +20,15 @@ use sparseflow::cli::Spec;
 use sparseflow::config::Config;
 use sparseflow::coordinator::batcher::BatchPolicy;
 use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
-use sparseflow::coordinator::{AdmissionPolicy, ModelVariant, Router, Server, ServerConfig};
+use sparseflow::coordinator::{
+    AdmissionPolicy, ModelVariant, Registry, RegistryConfig, Router, Server, ServerConfig,
+};
 use sparseflow::exec::layerwise::LayerwiseEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
 use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
-use sparseflow::ffnn::serde::{load_net, save_net};
 use sparseflow::loadgen::{LoadReport, LoadSpec};
+use sparseflow::model::{Format, Model};
 use sparseflow::prelude::*;
 use sparseflow::util::json::Json;
 use std::path::Path;
@@ -41,6 +46,8 @@ fn main() {
         "bounds" => cmd_bounds(&args),
         "simulate" => cmd_simulate(&args),
         "reorder" => cmd_reorder(&args),
+        "pack" => cmd_pack(&args),
+        "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "loadgen" => cmd_loadgen(&args),
@@ -66,7 +73,10 @@ fn print_usage() {
          \x20 bounds     Theorem-1 I/O bounds of a network file\n\
          \x20 simulate   count I/Os under LRU/RR/MIN for given memory sizes\n\
          \x20 reorder    Connection Reordering; writes the improved order\n\
-         \x20 serve      TCP inference server (deadline-aware dynamic batching)\n\
+         \x20 pack       compile a model into a zero-copy binary artifact (.sfb)\n\
+         \x20 inspect    describe a model file (format, sections, checksums)\n\
+         \x20 serve      TCP inference server (deadline-aware dynamic batching;\n\
+         \x20            --model-dir = versioned multi-model registry)\n\
          \x20 client     send one request to a running server\n\
          \x20 loadgen    seeded closed/open-loop load generation, per-variant\n\n\
          Run `sparseflow <subcommand> --help` for options."
@@ -83,6 +93,29 @@ fn resolve_auto_u64(a: &sparseflow::cli::Args, name: &str, from_config: u64) -> 
             eprintln!("error: --{name}={s} is not a valid number: {e:?}");
             std::process::exit(2);
         }),
+    }
+}
+
+/// Load any supported model file and require its source network —
+/// graph-level commands (bounds, simulate, reorder) cannot run on lossy
+/// payloads (quant streams, binary artifacts).
+fn load_net_or_exit(path: &str) -> (Ffnn, Option<ConnOrder>) {
+    let model = match Model::load(Path::new(path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    match model.net() {
+        Some(net) => (net.clone(), model.order().cloned()),
+        None => {
+            eprintln!(
+                "error: {path} is a {} file; this command needs the source network (JSON)",
+                model.format().name()
+            );
+            std::process::exit(1);
+        }
     }
 }
 
@@ -144,9 +177,17 @@ fn cmd_generate(args: &[String]) -> i32 {
         }
     };
     println!("{}", net.describe());
-    match save_net(&net, order.as_ref(), Path::new(a.str("out"))) {
+    let out = Path::new(a.str("out"));
+    // The output extension picks the format: `.sfb` packs the binary
+    // artifact directly, anything else writes the JSON network.
+    let format = if out.extension().and_then(|e| e.to_str()) == Some("sfb") {
+        Format::BinV1
+    } else {
+        Format::JsonV1
+    };
+    match Model::from_net(net, order).save(out, format) {
         Ok(()) => {
-            println!("wrote {}", a.str("out"));
+            println!("wrote {} ({})", a.str("out"), format.name());
             0
         }
         Err(e) => {
@@ -162,18 +203,11 @@ fn cmd_bounds(args: &[String]) -> i32 {
             .positional("net", "network JSON file"),
         args,
     );
-    match load_net(Path::new(a.positional(0))) {
-        Ok((net, _)) => {
-            println!("{}", net.describe());
-            let b = theorem1_bounds(&net);
-            println!("{}", b.to_json().to_string_pretty());
-            0
-        }
-        Err(e) => {
-            eprintln!("error: {e}");
-            1
-        }
-    }
+    let (net, _) = load_net_or_exit(a.positional(0));
+    println!("{}", net.describe());
+    let b = theorem1_bounds(&net);
+    println!("{}", b.to_json().to_string_pretty());
+    0
 }
 
 fn cmd_simulate(args: &[String]) -> i32 {
@@ -185,13 +219,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
             .flag("stored-order", "use the order stored in the file (default: 2-optimal)"),
         args,
     );
-    let (net, stored) = match load_net(Path::new(a.positional(0))) {
-        Ok(v) => v,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
-        }
-    };
+    let (net, stored) = load_net_or_exit(a.positional(0));
     println!("{}", net.describe());
     let order = if a.flag("stored-order") {
         match stored {
@@ -242,13 +270,7 @@ fn cmd_reorder(args: &[String]) -> i32 {
         args,
     );
     let path = a.positional(0).to_string();
-    let (net, _) = match load_net(Path::new(&path)) {
-        Ok(v) => v,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
-        }
-    };
+    let (net, _) = load_net_or_exit(&path);
     // Config file + overrides can replace CLI defaults.
     let mut config = match a.str("config") {
         "-" => Config::empty(),
@@ -308,9 +330,14 @@ fn cmd_reorder(args: &[String]) -> i32 {
         "-" => path,
         o => o.to_string(),
     };
-    match save_net(&net, Some(&best), Path::new(&out)) {
+    let format = if Path::new(&out).extension().and_then(|e| e.to_str()) == Some("sfb") {
+        Format::BinV1
+    } else {
+        Format::JsonV1
+    };
+    match Model::from_net(net, Some(best)).save(Path::new(&out), format) {
         Ok(()) => {
-            println!("wrote {out}");
+            println!("wrote {out} ({})", format.name());
             0
         }
         Err(e) => {
@@ -320,12 +347,87 @@ fn cmd_reorder(args: &[String]) -> i32 {
     }
 }
 
+fn cmd_pack(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new(
+            "sparseflow pack",
+            "compile a model into a zero-copy binary artifact (.sfb)",
+        )
+        .positional("model", "source model file (JSON network or quant stream)")
+        .opt("out", "model.sfb", "output artifact path"),
+        args,
+    );
+    let model = match Model::load(Path::new(a.positional(0))) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let out = Path::new(a.str("out"));
+    if let Err(e) = model.save(out, Format::BinV1) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    // Reload what we just wrote: proves the artifact round-trips through
+    // the validating loader before anyone ships it.
+    let packed = match Model::load(out) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: verification reload failed: {e}");
+            return 1;
+        }
+    };
+    let artifact = packed.artifact().expect("BinV1 model carries an artifact");
+    println!("{}", artifact.describe().to_string_pretty());
+    println!("wrote {} ({} bytes, verified)", out.display(), artifact.file_len());
+    0
+}
+
+fn cmd_inspect(args: &[String]) -> i32 {
+    let a = parse_or_exit(
+        Spec::new("sparseflow inspect", "describe a model file")
+            .positional("model", "model file (JSON network, quant stream, or .sfb)"),
+        args,
+    );
+    let model = match Model::load(Path::new(a.positional(0))) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("format: {}", model.format().name());
+    if let Some(artifact) = model.artifact() {
+        println!("{}", artifact.describe().to_string_pretty());
+    } else if let Some(net) = model.net() {
+        println!("{}", net.describe());
+        println!(
+            "stored order: {}",
+            if model.order().is_some() { "yes" } else { "no (will be recomputed)" }
+        );
+    } else if let Some(q) = model.quant() {
+        let j = Json::obj()
+            .set("n_neurons", q.n_neurons() as u64)
+            .set("n_ops", q.n_ops() as u64)
+            .set("n_inputs", q.input_ids().len() as u64)
+            .set("n_outputs", q.output_ids().len() as u64)
+            .set("stream_bytes", q.stream_bytes() as u64)
+            .set("bytes_per_conn", q.bytes_per_conn())
+            .set("compression_ratio", q.compression_ratio());
+        println!("{}", j.to_string_pretty());
+    }
+    0
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     let a = parse_or_exit(
         Spec::new("sparseflow serve", "TCP inference server")
-            .positional("net", "network JSON file (with optional stored order)")
+            .positional_opt("net", "model file (JSON or .sfb); omit with --model-dir")
             .opt("addr", "127.0.0.1:7878", "bind address")
             .opt("name", "default", "model name")
+            .opt("model-dir", "-", "registry mode: serve every .sfb in this directory")
+            .opt("resident-bytes", "auto", "registry mode: hot-tier byte budget (0 = unbounded)")
             .opt("max-batch", "128", "dynamic batcher max batch size")
             .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
             .opt("config", "-", "JSON config file ('-' = none)")
@@ -339,15 +441,6 @@ fn cmd_serve(args: &[String]) -> i32 {
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
         args,
     );
-    let (net, stored) = match load_net(Path::new(a.positional(0))) {
-        Ok(v) => v,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
-        }
-    };
-    println!("{}", net.describe());
-    let order = stored.unwrap_or_else(|| two_optimal_order(&net));
     // The workers knob: an explicit (non-zero) --workers wins, else the
     // config file / --set override's `workers` key, else auto.
     let mut config = match a.str("config") {
@@ -401,47 +494,114 @@ fn cmd_serve(args: &[String]) -> i32 {
     // off), "auto" defers to the config keys, else off.
     let max_queue = resolve_auto_u64(&a, "max-queue", config.max_queue(0) as u64) as usize;
     let deadline_ms = resolve_auto_u64(&a, "deadline-ms", config.deadline_ms(0));
-    let mut router = Router::new();
-    let name = a.str("name").to_string();
-    let variant =
-        match ModelVariant::build(&name, &net, &order, &schedule, &precision, workers, fast_mem) {
-            Ok(v) => v,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
-    println!("{} [{}]", variant.summary, variant.label());
-    if workers > 1 {
-        println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
-    }
+    let server_config = ServerConfig {
+        batch: BatchPolicy {
+            max_batch: a.usize("max-batch"),
+            max_wait: Duration::from_millis(a.u64("max-wait-ms")),
+            ..Default::default()
+        },
+        admission: AdmissionPolicy {
+            max_queue,
+            default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        },
+    };
     if max_queue > 0 {
         println!("admission control: shedding beyond queue depth {max_queue}");
     }
     if deadline_ms > 0 {
         println!("default SLO: {deadline_ms} ms per request");
     }
-    router.register(variant);
-    if a.flag("with-csr") && net.layer_of().is_some() {
-        router.register(ModelVariant::new(
-            &format!("{name}-csr"),
-            std::sync::Arc::new(LayerwiseEngine::new(&net)) as std::sync::Arc<dyn Engine>,
-        ));
+
+    // Registry mode: serve a whole directory of versioned artifacts
+    // with warm/hot tiering instead of one preloaded model.
+    let model_dir = match a.str("model-dir") {
+        "-" => config.model_dir(""),
+        d => d.to_string(),
+    };
+    if !model_dir.is_empty() {
+        let resident_bytes = resolve_auto_u64(&a, "resident-bytes", config.resident_bytes(0));
+        let registry = Registry::new(
+            RegistryConfig { resident_bytes, schedule, precision, workers, fast_mem },
+            server_config,
+        );
+        let labels = match registry.scan_dir(Path::new(&model_dir)) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        if labels.is_empty() {
+            eprintln!("error: no .sfb artifacts in {model_dir}");
+            return 1;
+        }
+        println!("registry: {} artifact(s) registered warm: {}", labels.len(), labels.join(", "));
+        if resident_bytes > 0 {
+            println!("registry: hot-tier budget {resident_bytes} bytes (LRU demotion)");
+        }
+        let frontend = match TcpFrontend::serve_registry(registry.clone(), a.str("addr")) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("bind error: {e}");
+                return 1;
+            }
+        };
+        println!("serving registry {model_dir} on {} — Ctrl-C to stop", frontend.addr);
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            let snap = registry.server().metrics().snapshot();
+            println!("metrics: {}", snap.to_string_compact());
+        }
     }
-    let server = Server::start(
-        router,
-        ServerConfig {
-            batch: BatchPolicy {
-                max_batch: a.usize("max-batch"),
-                max_wait: Duration::from_millis(a.u64("max-wait-ms")),
-                ..Default::default()
-            },
-            admission: AdmissionPolicy {
-                max_queue,
-                default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
-            },
-        },
-    );
+
+    // Single-model mode: preload one model file and serve it.
+    let path = match a.positional_opt(0) {
+        Some(p) => p,
+        None => {
+            eprintln!("error: need a model file (or --model-dir for registry mode)");
+            return 2;
+        }
+    };
+    let model = match Model::load(Path::new(path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if let Some(net) = model.net() {
+        println!("{}", net.describe());
+    } else {
+        println!("{} artifact ({}-in/{}-out)", model.format().name(), model.n_inputs(),
+            model.n_outputs());
+    }
+    let name = a.str("name").to_string();
+    let variant = match model.variant(&name, &schedule, &precision, workers, fast_mem) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    println!("{} [{}]", variant.summary, variant.label());
+    if workers > 1 {
+        println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
+    }
+    let mut router = Router::new();
+    router.register(variant);
+    if a.flag("with-csr") {
+        match model.net() {
+            Some(net) if net.layer_of().is_some() => {
+                router.register(ModelVariant::new(
+                    &format!("{name}-csr"),
+                    std::sync::Arc::new(LayerwiseEngine::new(net)) as std::sync::Arc<dyn Engine>,
+                ));
+            }
+            _ => eprintln!("note: --with-csr ignored ({} payload has no layered source network)",
+                model.format().name()),
+        }
+    }
+    let server = Server::start(router, server_config);
     let frontend = match TcpFrontend::serve(server.handle(), a.str("addr")) {
         Ok(f) => f,
         Err(e) => {
@@ -569,15 +729,19 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         .opt("out", "-", "write the JSON report here ('-' = table only)"),
         args,
     );
-    let (net, stored) = match load_net(Path::new(a.positional(0))) {
-        Ok(v) => v,
+    let model = match Model::load(Path::new(a.positional(0))) {
+        Ok(m) => m,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
         }
     };
-    println!("{}", net.describe());
-    let order = stored.unwrap_or_else(|| two_optimal_order(&net));
+    if let Some(net) = model.net() {
+        println!("{}", net.describe());
+    } else {
+        println!("{} artifact ({}-in/{}-out)", model.format().name(), model.n_inputs(),
+            model.n_outputs());
+    }
 
     let deadline_ms = resolve_auto_u64(&a, "deadline-ms", 0);
     let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
@@ -626,14 +790,13 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         // Register each variant under its canonical label ("fused-f32-w4")
         // so loadgen rows, serve logs, and bench keys all agree.
         // Tiled variants autotune their fast-memory budget (fast_mem 0).
-        let mut variant =
-            match ModelVariant::build("variant", &net, &order, schedule, precision, *workers, 0) {
-                Ok(v) => v,
-                Err(e) => {
-                    eprintln!("error: variant {schedule}:{precision}:{workers}: {e}");
-                    return 2;
-                }
-            };
+        let mut variant = match model.variant("variant", schedule, precision, *workers, 0) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: variant {schedule}:{precision}:{workers}: {e}");
+                return 2;
+            }
+        };
         let label = variant.label();
         variant.name = label.clone();
         let mut router = Router::new();

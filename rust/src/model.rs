@@ -1,0 +1,476 @@
+//! The unified model-loading API.
+//!
+//! One typed entry point replaces the scattered model-I/O surface
+//! (`ffnn::serde::{save_net, load_net, save_quant, load_quant}` and
+//! ad-hoc fixture loaders): [`Model::load`] sniffs the on-disk format
+//! (binary magic / extension / JSON format tag) and [`Model::save`]
+//! writes any supported [`Format`]. The loaded value constructs serving
+//! variants through [`Model::variant`], so `serve`, `loadgen`, the
+//! registry, benches, and the conformance suite all share one path.
+//!
+//! Formats:
+//!
+//! * [`Format::JsonV1`] — `sparseflow-ffnn-v1`: the network (kinds,
+//!   biases, connections, optional layer metadata and stored order) as
+//!   JSON. Slowest to load (parse + compile) but human-readable and the
+//!   only format the reorder tools edit.
+//! * [`Format::QuantJsonV1`] — `sparseflow-quant-v1`: a compressed
+//!   quantized stream program as JSON (hex byte streams). i8/interp
+//!   serving only.
+//! * [`Format::BinV1`] — `sparseflow-bin-v1` (`.sfb`): the zero-copy
+//!   binary artifact; loading memory-maps the file, validates checksums,
+//!   and borrows the engine pools straight out of the mapping.
+
+use crate::coordinator::router::{ModelVariant, VariantError};
+use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::serde::{net_from_json, net_to_json, quant_from_json, quant_to_json};
+use crate::ffnn::topo::{two_optimal_order, ConnOrder};
+use crate::runtime::artifact::{build_model_artifact, BinArtifact, SFB_MAGIC};
+use crate::util::json::Json;
+use std::path::Path;
+use std::sync::Arc;
+
+/// On-disk model formats understood by [`Model::load`]/[`Model::save`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// `sparseflow-ffnn-v1` JSON (network + optional stored order).
+    JsonV1,
+    /// `sparseflow-quant-v1` JSON (compressed quantized stream).
+    QuantJsonV1,
+    /// `sparseflow-bin-v1` binary artifact (`.sfb`, zero-copy mmap).
+    BinV1,
+}
+
+impl Format {
+    /// The format tag / spec name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::JsonV1 => "sparseflow-ffnn-v1",
+            Format::QuantJsonV1 => "sparseflow-quant-v1",
+            Format::BinV1 => "sparseflow-bin-v1",
+        }
+    }
+
+    /// Detect the format of a file from its magic bytes (binary), then
+    /// its JSON `format` tag. The `.sfb` extension is a fast path; the
+    /// magic check means a renamed artifact still loads.
+    pub fn sniff(path: &Path) -> anyhow::Result<Format> {
+        if path.extension().and_then(|e| e.to_str()) == Some("sfb") {
+            return Ok(Format::BinV1);
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        if bytes.len() >= 8 && bytes[0..8] == SFB_MAGIC {
+            return Ok(Format::BinV1);
+        }
+        let j = Json::parse(
+            std::str::from_utf8(&bytes)
+                .map_err(|_| anyhow::anyhow!("{}: neither binary nor JSON", path.display()))?,
+        )
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        match j.get("format").and_then(Json::as_str) {
+            Some("sparseflow-ffnn-v1") => Ok(Format::JsonV1),
+            Some("sparseflow-quant-v1") => Ok(Format::QuantJsonV1),
+            other => anyhow::bail!("{}: unknown model format tag {other:?}", path.display()),
+        }
+    }
+}
+
+enum Payload {
+    Net { net: Ffnn, order: Option<ConnOrder> },
+    Quant(QuantStreamProgram),
+    Bin(BinArtifact),
+}
+
+/// A loaded model, in whichever representation its format carries.
+/// Construct serving engines with [`Model::variant`].
+pub struct Model {
+    format: Format,
+    payload: Payload,
+}
+
+/// What [`Model::load`] returns (alias for API symmetry with the
+/// issue-tracker naming; the loaded value *is* the model).
+pub type LoadedModel = Model;
+
+impl Model {
+    /// Load a model file, sniffing the format. Binary artifacts are
+    /// memory-mapped (zero-copy); JSON formats are parsed.
+    pub fn load(path: &Path) -> anyhow::Result<Model> {
+        let format = Format::sniff(path)?;
+        let payload = match format {
+            Format::JsonV1 => {
+                let j = Json::from_file(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+                let (net, order) = net_from_json(&j)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                Payload::Net { net, order }
+            }
+            Format::QuantJsonV1 => {
+                let j = Json::from_file(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+                Payload::Quant(
+                    quant_from_json(&j)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?,
+                )
+            }
+            Format::BinV1 => Payload::Bin(BinArtifact::load(path)?),
+        };
+        Ok(Model { format, payload })
+    }
+
+    /// Like [`Model::load`] but forces the heap (non-mmap) path for
+    /// binary artifacts — for tiering policies and tests.
+    pub fn load_resident(path: &Path) -> anyhow::Result<Model> {
+        let format = Format::sniff(path)?;
+        if format == Format::BinV1 {
+            return Ok(Model {
+                format,
+                payload: Payload::Bin(BinArtifact::load_heap(path)?),
+            });
+        }
+        Model::load(path)
+    }
+
+    /// Wrap an in-memory network (+ optional precomputed order).
+    pub fn from_net(net: Ffnn, order: Option<ConnOrder>) -> Model {
+        Model {
+            format: Format::JsonV1,
+            payload: Payload::Net { net, order },
+        }
+    }
+
+    /// Wrap an in-memory compressed program.
+    pub fn from_quant(program: QuantStreamProgram) -> Model {
+        Model {
+            format: Format::QuantJsonV1,
+            payload: Payload::Quant(program),
+        }
+    }
+
+    /// Wrap a loaded binary artifact.
+    pub fn from_artifact(artifact: BinArtifact) -> Model {
+        Model {
+            format: Format::BinV1,
+            payload: Payload::Bin(artifact),
+        }
+    }
+
+    /// The format this model was loaded from (or constructed as).
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    pub fn net(&self) -> Option<&Ffnn> {
+        match &self.payload {
+            Payload::Net { net, .. } => Some(net),
+            _ => None,
+        }
+    }
+
+    /// The stored connection order, when the payload carries one.
+    pub fn order(&self) -> Option<&ConnOrder> {
+        match &self.payload {
+            Payload::Net { order, .. } => order.as_ref(),
+            _ => None,
+        }
+    }
+
+    pub fn quant(&self) -> Option<&QuantStreamProgram> {
+        match &self.payload {
+            Payload::Quant(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn artifact(&self) -> Option<&BinArtifact> {
+        match &self.payload {
+            Payload::Bin(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        match &self.payload {
+            Payload::Net { net, .. } => net.n_inputs(),
+            Payload::Quant(p) => p.input_ids().len(),
+            Payload::Bin(a) => a.n_inputs(),
+        }
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        match &self.payload {
+            Payload::Net { net, .. } => net.n_outputs(),
+            Payload::Quant(p) => p.output_ids().len(),
+            Payload::Bin(a) => a.n_outputs(),
+        }
+    }
+
+    /// The I/O-optimal order to compile with: the stored one if the
+    /// file carried it, else a freshly computed 2-optimal order.
+    fn order_or_compute(&self, net: &Ffnn) -> ConnOrder {
+        match self.order() {
+            Some(o) => o.clone(),
+            None => two_optimal_order(net),
+        }
+    }
+
+    /// Write the model at `path` in `format`. Conversions that need the
+    /// source network (e.g. quant/bin from JSON) compile on the way out;
+    /// conversions that would need to *invert* a lossy step (network
+    /// from a quant program or artifact) are rejected.
+    pub fn save(&self, path: &Path, format: Format) -> anyhow::Result<()> {
+        match (format, &self.payload) {
+            (Format::JsonV1, Payload::Net { net, order }) => net_to_json(net, order.as_ref())
+                .to_file(path)
+                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display())),
+            (Format::QuantJsonV1, Payload::Net { net, order }) => {
+                let order = match order {
+                    Some(o) => o.clone(),
+                    None => two_optimal_order(net),
+                };
+                let p = QuantStreamProgram::compress(net, &order);
+                quant_to_json(&p)
+                    .to_file(path)
+                    .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+            }
+            (Format::QuantJsonV1, Payload::Quant(p)) => quant_to_json(p)
+                .to_file(path)
+                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display())),
+            (Format::QuantJsonV1, Payload::Bin(a)) => quant_to_json(&a.quant_program()?)
+                .to_file(path)
+                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display())),
+            (Format::BinV1, Payload::Net { net, order }) => {
+                let order = match order {
+                    Some(o) => o.clone(),
+                    None => two_optimal_order(net),
+                };
+                let buf = build_model_artifact(net, &order);
+                std::fs::write(path, &buf)
+                    .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+            }
+            (Format::BinV1, Payload::Bin(a)) => std::fs::write(path, a.mapping().bytes())
+                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display())),
+            (Format::JsonV1, _) | (Format::BinV1, Payload::Quant(_)) => anyhow::bail!(
+                "cannot save a {} payload as {} (the conversion would need the source \
+                 network)",
+                self.format.name(),
+                format.name()
+            ),
+        }
+    }
+
+    /// Build a serving variant from this model — the one constructor
+    /// every serving path goes through. For JSON-loaded networks this
+    /// compiles through [`ModelVariant::build`]; for quant payloads
+    /// only i8/interp is representable; for binary artifacts the
+    /// programs are reconstructed from the mapped pools (zero-copy for
+    /// fused and i8; tiled needs an explicit `fast_mem` budget because
+    /// autotuning requires the source network).
+    pub fn variant(
+        &self,
+        name: &str,
+        schedule: &str,
+        precision: &str,
+        workers: usize,
+        fast_mem: usize,
+    ) -> Result<ModelVariant, VariantError> {
+        use crate::exec::fused::FusedEngine;
+        use crate::exec::stream::StreamingEngine;
+        use crate::exec::tiled::{TiledEngine, TiledProgram};
+        use crate::exec::Engine;
+
+        check_knobs(schedule, precision, fast_mem)?;
+        let compile_err = |e: anyhow::Error| VariantError::Compile {
+            schedule: schedule.to_string(),
+            message: e.to_string(),
+        };
+        match &self.payload {
+            Payload::Net { net, .. } => {
+                let order = self.order_or_compute(net);
+                ModelVariant::build(name, net, &order, schedule, precision, workers, fast_mem)
+            }
+            Payload::Quant(p) => {
+                if (precision, schedule) != ("i8", "interp") {
+                    return Err(VariantError::Incompatible {
+                        schedule: schedule.to_string(),
+                        precision: format!("{precision} (quant payloads are i8/interp only)"),
+                    });
+                }
+                let engine = Arc::new(QuantStreamEngine::from_program(p.clone()));
+                Ok(tag(wrap(name, engine, workers), "interp", "i8"))
+            }
+            Payload::Bin(a) => match (precision, schedule) {
+                ("f32", "interp") => {
+                    let program = a.stream_program().map_err(compile_err)?;
+                    let engine = Arc::new(StreamingEngine::from_program(program));
+                    Ok(tag(wrap(name, engine, workers), "interp", "f32"))
+                }
+                ("f32", "fused") => {
+                    let program = a.fused_program().map_err(compile_err)?;
+                    let stats = program.stats().clone();
+                    let engine = Arc::new(FusedEngine::from_program(program));
+                    let mut v = tag(wrap(name, engine, workers), "fused", "f32");
+                    v = v.with_fusion_stats(stats);
+                    Ok(v)
+                }
+                ("f32", "tiled") => {
+                    if fast_mem == 0 {
+                        return Err(VariantError::Compile {
+                            schedule: schedule.to_string(),
+                            message: "tiled autotune needs the source network; pass an \
+                                      explicit fast-mem budget when serving from a binary \
+                                      artifact"
+                                .to_string(),
+                        });
+                    }
+                    let stream = a.stream_program().map_err(compile_err)?;
+                    let program =
+                        TiledProgram::from_program(&stream, fast_mem).map_err(compile_err)?;
+                    let stats = program.stats().clone();
+                    let engine = Arc::new(TiledEngine::from_program(program));
+                    let mut v = tag(wrap(name, engine, workers), "tiled", "f32");
+                    v = v.with_tiled_stats(stats);
+                    Ok(v)
+                }
+                ("i8", "interp") => {
+                    let program = a.quant_program().map_err(compile_err)?;
+                    let engine = Arc::new(QuantStreamEngine::from_program(program));
+                    Ok(tag(wrap(name, engine, workers), "interp", "i8"))
+                }
+                _ => Err(VariantError::Incompatible {
+                    schedule: schedule.to_string(),
+                    precision: precision.to_string(),
+                }),
+            },
+        }
+    }
+}
+
+/// Shared knob validation (mirrors [`ModelVariant::build`]'s matrix so
+/// every payload kind rejects the same way).
+fn check_knobs(schedule: &str, precision: &str, fast_mem: usize) -> Result<(), VariantError> {
+    if !matches!(schedule, "interp" | "fused" | "tiled") {
+        return Err(VariantError::UnknownSchedule(schedule.to_string()));
+    }
+    if !matches!(precision, "f32" | "i8") {
+        return Err(VariantError::UnknownPrecision(precision.to_string()));
+    }
+    if fast_mem != 0 && schedule != "tiled" {
+        return Err(VariantError::FastMemRequiresTiled {
+            schedule: schedule.to_string(),
+            fast_mem,
+        });
+    }
+    Ok(())
+}
+
+fn wrap(name: &str, engine: Arc<dyn crate::exec::Engine>, workers: usize) -> ModelVariant {
+    if workers > 1 {
+        ModelVariant::sharded(name, engine, workers)
+    } else {
+        ModelVariant::new(name, engine)
+    }
+}
+
+fn tag(mut v: ModelVariant, schedule: &'static str, precision: &'static str) -> ModelVariant {
+    v = v.with_schedule(schedule).with_precision(precision);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::batch::BatchMatrix;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::util::rng::Pcg64;
+
+    fn sample_net() -> Ffnn {
+        random_mlp(&MlpSpec::new(3, 8, 0.6), &mut Pcg64::new(21))
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparseflow-model-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn sniff_and_load_every_format() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let m = Model::from_net(net.clone(), Some(order));
+
+        let json_path = tmp("m.json");
+        m.save(&json_path, Format::JsonV1).unwrap();
+        assert_eq!(Format::sniff(&json_path).unwrap(), Format::JsonV1);
+        let loaded = Model::load(&json_path).unwrap();
+        assert_eq!(loaded.format(), Format::JsonV1);
+        assert_eq!(loaded.net().unwrap().n_conns(), net.n_conns());
+        assert!(loaded.order().is_some(), "stored order survives the roundtrip");
+
+        let quant_path = tmp("m.quant.json");
+        m.save(&quant_path, Format::QuantJsonV1).unwrap();
+        assert_eq!(Format::sniff(&quant_path).unwrap(), Format::QuantJsonV1);
+        let loaded = Model::load(&quant_path).unwrap();
+        assert!(loaded.quant().is_some());
+        assert_eq!(loaded.n_inputs(), net.n_inputs());
+
+        let bin_path = tmp("m.sfb");
+        m.save(&bin_path, Format::BinV1).unwrap();
+        assert_eq!(Format::sniff(&bin_path).unwrap(), Format::BinV1);
+        let loaded = Model::load(&bin_path).unwrap();
+        assert!(loaded.artifact().is_some());
+        assert_eq!(loaded.n_outputs(), net.n_outputs());
+
+        // Magic sniffing works without the .sfb extension.
+        let renamed = tmp("m.bin-renamed");
+        std::fs::copy(&bin_path, &renamed).unwrap();
+        assert_eq!(Format::sniff(&renamed).unwrap(), Format::BinV1);
+    }
+
+    #[test]
+    fn variants_from_each_payload_agree() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let m = Model::from_net(net.clone(), Some(order));
+        let bin_path = tmp("v.sfb");
+        m.save(&bin_path, Format::BinV1).unwrap();
+        let bin = Model::load(&bin_path).unwrap();
+
+        let x = BatchMatrix::random(net.n_inputs(), 4, &mut Pcg64::new(5));
+        let a = m.variant("m", "fused", "f32", 1, 0).unwrap();
+        let b = bin.variant("m", "fused", "f32", 1, 0).unwrap();
+        assert_eq!(a.route().infer(&x), b.route().infer(&x), "bin fused == json fused");
+        let a = m.variant("m", "interp", "i8", 1, 0).unwrap();
+        let b = bin.variant("m", "interp", "i8", 1, 0).unwrap();
+        assert_eq!(a.route().infer(&x), b.route().infer(&x), "bin i8 == json i8");
+
+        // Artifact-backed tiled needs an explicit budget.
+        assert!(matches!(
+            bin.variant("m", "tiled", "f32", 1, 0),
+            Err(VariantError::Compile { .. })
+        ));
+        let t = bin.variant("m", "tiled", "f32", 1, net.n_neurons() + 2).unwrap();
+        let j = m.variant("m", "tiled", "f32", 1, net.n_neurons() + 2).unwrap();
+        assert_eq!(t.route().infer(&x), j.route().infer(&x), "bin tiled == json tiled");
+    }
+
+    #[test]
+    fn quant_payload_rejects_f32() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let m = Model::from_quant(QuantStreamProgram::compress(&net, &order));
+        assert!(m.variant("q", "interp", "i8", 1, 0).is_ok());
+        assert!(matches!(
+            m.variant("q", "fused", "f32", 1, 0),
+            Err(VariantError::Incompatible { .. })
+        ));
+        assert!(matches!(
+            m.variant("q", "jit", "f32", 1, 0),
+            Err(VariantError::UnknownSchedule(_))
+        ));
+        // A network cannot be recovered from a lossy payload.
+        assert!(m.save(&tmp("q.json"), Format::JsonV1).is_err());
+        assert!(m.save(&tmp("q.sfb"), Format::BinV1).is_err());
+    }
+}

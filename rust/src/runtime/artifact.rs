@@ -1,10 +1,26 @@
-//! Artifact manifest: `artifacts/manifest.json` written by
-//! `python/compile/aot.py`, describing each lowered HLO module and its
-//! expected input shapes/dtypes so the Rust loader can validate literals
-//! before execution.
+//! Model artifacts.
+//!
+//! Two formats live here:
+//!
+//! * the JSON `artifacts/manifest.json` written by
+//!   `python/compile/aot.py`, describing each lowered HLO module and its
+//!   expected input shapes/dtypes so the Rust loader can validate
+//!   literals before execution, and
+//! * `sparseflow-bin-v1` (`.sfb`): a checksummed, versioned **zero-copy**
+//!   binary model format whose 64-byte-aligned sections hold the exact
+//!   structure-of-arrays pools the fused/tiled/quant engines execute, so
+//!   loading is validate-header + borrow-slices — no parsing and no
+//!   per-pool copies on the mmap path (see [`BinArtifact`]).
 
+use crate::exec::fused::{FusedPools, FusedProgram};
+use crate::exec::quant::{QuantGroup, QuantPools, QuantStreamProgram, GROUP};
+use crate::exec::stream::StreamProgram;
+use crate::ffnn::graph::Ffnn;
+use crate::ffnn::topo::ConnOrder;
+use crate::runtime::mmap::{Mapping, Pool, SECTION_ALIGN};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Input tensor descriptor.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -142,6 +158,551 @@ pub fn default_artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+// ---------------------------------------------------------------------------
+// sparseflow-bin-v1 — zero-copy binary model artifacts.
+//
+// Layout (all integers little-endian; the format is LE-only and loads
+// reject foreign-endian files via the endian tag):
+//
+//   header (64 B):
+//     0..8    magic "SFLOWBIN"
+//     8..12   format version (1)
+//     12..16  abi version (1)
+//     16..20  endian tag: 0x01020304 as written by the producing host
+//     20..24  n_sections
+//     24..32  file length (u64)
+//     32..36  CRC-32 of the section table
+//     36..60  reserved (zero)
+//     60..64  CRC-32 of header bytes 0..60
+//   section table (n_sections × 32 B entries):
+//     kind u32, dtype u32, offset u64, len u64, crc u32, reserved u32
+//   sections: each starts at a 64-byte-aligned offset. Alignment gap
+//   bytes are zero and are NOT checksummed.
+//
+// Unknown section kinds are ignored (forward compatibility); duplicate
+// kinds are rejected.
+// ---------------------------------------------------------------------------
+
+pub const SFB_MAGIC: [u8; 8] = *b"SFLOWBIN";
+pub const SFB_FORMAT_VERSION: u32 = 1;
+pub const SFB_ABI_VERSION: u32 = 1;
+pub const SFB_ENDIAN_TAG: u32 = 0x0102_0304;
+pub const SFB_HEADER_LEN: usize = 64;
+pub const SFB_ENTRY_LEN: usize = 32;
+
+/// Section kinds. 1..16 model-level, 16..32 fused pools, 32.. quant.
+pub const SEC_META: u32 = 1;
+pub const SEC_BIASES: u32 = 2;
+pub const SEC_INPUT_IDS: u32 = 3;
+pub const SEC_OUTPUT_IDS: u32 = 4;
+pub const SEC_HIDDEN_SOURCES: u32 = 5;
+pub const SEC_LAYER_OF: u32 = 6;
+pub const SEC_FUSED_CTRL: u32 = 16;
+pub const SEC_FUSED_PIVOTS: u32 = 17;
+pub const SEC_FUSED_BOUNDS: u32 = 18;
+pub const SEC_FUSED_IDX: u32 = 19;
+pub const SEC_FUSED_WEIGHTS: u32 = 20;
+pub const SEC_FUSED_FLAGS: u32 = 21;
+pub const SEC_QUANT_CTRL: u32 = 32;
+pub const SEC_QUANT_QWEIGHTS: u32 = 33;
+pub const SEC_QUANT_GROUPS: u32 = 34;
+
+/// Element dtypes (`SEC_QUANT_GROUPS` is f32 pairs: scale, zero_point).
+pub const DT_U8: u32 = 0;
+pub const DT_I8: u32 = 1;
+pub const DT_U32: u32 = 2;
+pub const DT_F32: u32 = 3;
+pub const DT_U64: u32 = 4;
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+fn align_up(off: usize) -> usize {
+    off.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+fn kind_name(kind: u32) -> &'static str {
+    match kind {
+        SEC_META => "meta",
+        SEC_BIASES => "biases",
+        SEC_INPUT_IDS => "input_ids",
+        SEC_OUTPUT_IDS => "output_ids",
+        SEC_HIDDEN_SOURCES => "hidden_sources",
+        SEC_LAYER_OF => "layer_of",
+        SEC_FUSED_CTRL => "fused_ctrl",
+        SEC_FUSED_PIVOTS => "fused_pivots",
+        SEC_FUSED_BOUNDS => "fused_bounds",
+        SEC_FUSED_IDX => "fused_idx",
+        SEC_FUSED_WEIGHTS => "fused_weights",
+        SEC_FUSED_FLAGS => "fused_flags",
+        SEC_QUANT_CTRL => "quant_ctrl",
+        SEC_QUANT_QWEIGHTS => "quant_qweights",
+        SEC_QUANT_GROUPS => "quant_groups",
+        _ => "unknown",
+    }
+}
+
+fn dtype_name(dtype: u32) -> &'static str {
+    match dtype {
+        DT_U8 => "u8",
+        DT_I8 => "i8",
+        DT_U32 => "u32",
+        DT_F32 => "f32",
+        DT_U64 => "u64",
+        _ => "?",
+    }
+}
+
+/// Expected dtype per known kind (None for unknown kinds).
+fn known_dtype(kind: u32) -> Option<u32> {
+    match kind {
+        SEC_META => Some(DT_U64),
+        SEC_BIASES | SEC_FUSED_WEIGHTS | SEC_QUANT_GROUPS => Some(DT_F32),
+        SEC_INPUT_IDS | SEC_OUTPUT_IDS | SEC_HIDDEN_SOURCES | SEC_LAYER_OF => Some(DT_U32),
+        SEC_FUSED_PIVOTS | SEC_FUSED_BOUNDS | SEC_FUSED_IDX => Some(DT_U32),
+        SEC_FUSED_CTRL | SEC_FUSED_FLAGS | SEC_QUANT_CTRL => Some(DT_U8),
+        SEC_QUANT_QWEIGHTS => Some(DT_I8),
+        _ => None,
+    }
+}
+
+fn le_bytes_u32(vals: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn le_bytes_f32(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn le_bytes_groups(groups: &[QuantGroup]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(groups.len() * 8);
+    for g in groups {
+        out.extend_from_slice(&g.scale.to_le_bytes());
+        out.extend_from_slice(&g.zero_point.to_le_bytes());
+    }
+    out
+}
+
+/// One entry of the section table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionInfo {
+    pub kind: u32,
+    pub dtype: u32,
+    pub offset: u64,
+    pub len: u64,
+    pub crc: u32,
+}
+
+/// Serialize a network (with its I/O-optimal order) into a
+/// `sparseflow-bin-v1` buffer: compile once here so every future load
+/// is validate + borrow.
+pub fn build_model_artifact(net: &Ffnn, order: &ConnOrder) -> Vec<u8> {
+    let stream = StreamProgram::compile(net, order);
+    let fused = FusedProgram::from_program(&stream);
+    let quant = QuantStreamProgram::from_program(&stream);
+
+    let mut meta = Vec::with_capacity(24);
+    for v in [net.n_neurons() as u64, net.n_conns() as u64, GROUP as u64] {
+        meta.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut secs: Vec<(u32, u32, Vec<u8>)> = vec![
+        (SEC_META, DT_U64, meta),
+        (SEC_BIASES, DT_F32, le_bytes_f32(fused.biases())),
+        (SEC_INPUT_IDS, DT_U32, le_bytes_u32(fused.input_ids())),
+        (SEC_OUTPUT_IDS, DT_U32, le_bytes_u32(fused.output_ids())),
+        (SEC_HIDDEN_SOURCES, DT_U32, le_bytes_u32(fused.hidden_sources())),
+        (SEC_FUSED_CTRL, DT_U8, fused.ctrl().to_vec()),
+        (SEC_FUSED_PIVOTS, DT_U32, le_bytes_u32(fused.pivots())),
+        (SEC_FUSED_BOUNDS, DT_U32, le_bytes_u32(fused.bounds())),
+        (SEC_FUSED_IDX, DT_U32, le_bytes_u32(fused.idx())),
+        (SEC_FUSED_WEIGHTS, DT_F32, le_bytes_f32(fused.weights())),
+        (SEC_FUSED_FLAGS, DT_U8, fused.flags().to_vec()),
+        (SEC_QUANT_CTRL, DT_U8, quant.ctrl_bytes().to_vec()),
+        (
+            SEC_QUANT_QWEIGHTS,
+            DT_I8,
+            quant.quantized_weights().iter().map(|&v| v as u8).collect(),
+        ),
+        (SEC_QUANT_GROUPS, DT_F32, le_bytes_groups(quant.groups())),
+    ];
+    if let Some(layers) = net.layer_of() {
+        secs.push((SEC_LAYER_OF, DT_U32, le_bytes_u32(layers)));
+    }
+
+    let n = secs.len();
+    let table_len = n * SFB_ENTRY_LEN;
+    let mut off = align_up(SFB_HEADER_LEN + table_len);
+    let mut infos = Vec::with_capacity(n);
+    for (kind, dtype, payload) in &secs {
+        infos.push(SectionInfo {
+            kind: *kind,
+            dtype: *dtype,
+            offset: off as u64,
+            len: payload.len() as u64,
+            crc: crc32(payload),
+        });
+        off = align_up(off + payload.len());
+    }
+    let file_len = infos
+        .last()
+        .map(|s| (s.offset + s.len) as usize)
+        .unwrap_or(SFB_HEADER_LEN + table_len);
+
+    let mut table = Vec::with_capacity(table_len);
+    for s in &infos {
+        table.extend_from_slice(&s.kind.to_le_bytes());
+        table.extend_from_slice(&s.dtype.to_le_bytes());
+        table.extend_from_slice(&s.offset.to_le_bytes());
+        table.extend_from_slice(&s.len.to_le_bytes());
+        table.extend_from_slice(&s.crc.to_le_bytes());
+        table.extend_from_slice(&0u32.to_le_bytes());
+    }
+
+    let mut buf = vec![0u8; file_len];
+    buf[SFB_HEADER_LEN..SFB_HEADER_LEN + table_len].copy_from_slice(&table);
+    for (s, (_, _, payload)) in infos.iter().zip(&secs) {
+        let o = s.offset as usize;
+        buf[o..o + payload.len()].copy_from_slice(payload);
+    }
+    buf[0..8].copy_from_slice(&SFB_MAGIC);
+    buf[8..12].copy_from_slice(&SFB_FORMAT_VERSION.to_le_bytes());
+    buf[12..16].copy_from_slice(&SFB_ABI_VERSION.to_le_bytes());
+    buf[16..20].copy_from_slice(&SFB_ENDIAN_TAG.to_ne_bytes());
+    buf[20..24].copy_from_slice(&(n as u32).to_le_bytes());
+    buf[24..32].copy_from_slice(&(file_len as u64).to_le_bytes());
+    buf[32..36].copy_from_slice(&crc32(&table).to_le_bytes());
+    let hc = crc32(&buf[0..60]);
+    buf[60..64].copy_from_slice(&hc.to_le_bytes());
+    buf
+}
+
+/// Build and write a `.sfb` artifact for `net` at `path`.
+pub fn write_model_artifact(net: &Ffnn, order: &ConnOrder, path: &Path) -> anyhow::Result<()> {
+    let buf = build_model_artifact(net, order);
+    std::fs::write(path, &buf)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// A validated, loaded `sparseflow-bin-v1` artifact. Holds the backing
+/// [`Mapping`]; program constructors borrow section slices out of it
+/// (zero per-pool copies on the mmap path).
+#[derive(Clone, Debug)]
+pub struct BinArtifact {
+    map: Arc<Mapping>,
+    sections: Vec<SectionInfo>,
+    n_neurons: usize,
+    n_conns: usize,
+    group_size: usize,
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+impl BinArtifact {
+    /// Memory-map `path` and validate it (header, table, per-section
+    /// checksums). Falls back to a heap read where mmap is unavailable.
+    pub fn load(path: &Path) -> anyhow::Result<BinArtifact> {
+        let map =
+            Mapping::open(path).map_err(|e| anyhow::anyhow!("map {}: {e}", path.display()))?;
+        Self::from_mapping(Arc::new(map))
+    }
+
+    /// Read `path` into one aligned heap block instead of mapping it.
+    pub fn load_heap(path: &Path) -> anyhow::Result<BinArtifact> {
+        let map = Mapping::open_heap(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::from_mapping(Arc::new(map))
+    }
+
+    /// Validate an in-memory buffer (copies it into an aligned block).
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<BinArtifact> {
+        Self::from_mapping(Arc::new(Mapping::from_bytes(bytes)))
+    }
+
+    /// Validate header, section table, and every section checksum.
+    pub fn from_mapping(map: Arc<Mapping>) -> anyhow::Result<BinArtifact> {
+        let bytes = map.bytes();
+        anyhow::ensure!(bytes.len() >= SFB_HEADER_LEN, "artifact shorter than header");
+        anyhow::ensure!(bytes[0..8] == SFB_MAGIC, "bad magic (not a sparseflow-bin artifact)");
+        let header_crc = read_u32(bytes, 60);
+        anyhow::ensure!(crc32(&bytes[0..60]) == header_crc, "header checksum mismatch");
+        let format_version = read_u32(bytes, 8);
+        anyhow::ensure!(
+            format_version == SFB_FORMAT_VERSION,
+            "unsupported format version {format_version}"
+        );
+        let abi_version = read_u32(bytes, 12);
+        anyhow::ensure!(abi_version == SFB_ABI_VERSION, "unsupported abi version {abi_version}");
+        anyhow::ensure!(
+            read_u32(bytes, 16) == SFB_ENDIAN_TAG,
+            "artifact written on a foreign-endian host (format is little-endian only)"
+        );
+        let n_sections = read_u32(bytes, 20) as usize;
+        let file_len = read_u64(bytes, 24);
+        anyhow::ensure!(
+            file_len == bytes.len() as u64,
+            "file length field {file_len} != actual {}",
+            bytes.len()
+        );
+        let table_end = SFB_HEADER_LEN + n_sections * SFB_ENTRY_LEN;
+        anyhow::ensure!(table_end <= bytes.len(), "section table extends past end of file");
+        let table = &bytes[SFB_HEADER_LEN..table_end];
+        anyhow::ensure!(crc32(table) == read_u32(bytes, 32), "section table checksum mismatch");
+
+        let mut sections = Vec::with_capacity(n_sections);
+        let mut meta: Option<(u64, u64, u64)> = None;
+        for i in 0..n_sections {
+            let e = i * SFB_ENTRY_LEN;
+            let s = SectionInfo {
+                kind: read_u32(table, e),
+                dtype: read_u32(table, e + 4),
+                offset: read_u64(table, e + 8),
+                len: read_u64(table, e + 16),
+                crc: read_u32(table, e + 24),
+            };
+            anyhow::ensure!(
+                s.offset as usize % SECTION_ALIGN == 0,
+                "section {} offset {} not {SECTION_ALIGN}-byte aligned",
+                kind_name(s.kind),
+                s.offset
+            );
+            let end = s
+                .offset
+                .checked_add(s.len)
+                .ok_or_else(|| anyhow::anyhow!("section bounds overflow"))?;
+            anyhow::ensure!(
+                s.offset as usize >= table_end && end <= bytes.len() as u64,
+                "section {} [{}, {end}) out of file bounds",
+                kind_name(s.kind),
+                s.offset
+            );
+            let payload = &bytes[s.offset as usize..end as usize];
+            anyhow::ensure!(
+                crc32(payload) == s.crc,
+                "section {} checksum mismatch",
+                kind_name(s.kind)
+            );
+            if let Some(expect) = known_dtype(s.kind) {
+                anyhow::ensure!(
+                    s.dtype == expect,
+                    "section {} dtype {} != expected {}",
+                    kind_name(s.kind),
+                    dtype_name(s.dtype),
+                    dtype_name(expect)
+                );
+            }
+            anyhow::ensure!(
+                !sections.iter().any(|p: &SectionInfo| p.kind == s.kind),
+                "duplicate section kind {}",
+                kind_name(s.kind)
+            );
+            if s.kind == SEC_META {
+                anyhow::ensure!(s.len == 24, "meta section must be 3 u64s");
+                meta = Some((
+                    read_u64(payload, 0),
+                    read_u64(payload, 8),
+                    read_u64(payload, 16),
+                ));
+            }
+            sections.push(s);
+        }
+        let (n_neurons, n_conns, group_size) =
+            meta.ok_or_else(|| anyhow::anyhow!("artifact has no meta section"))?;
+        anyhow::ensure!(
+            group_size == GROUP as u64,
+            "quant group size {group_size} != compiled-in {GROUP}"
+        );
+        Ok(BinArtifact {
+            map,
+            sections,
+            n_neurons: n_neurons as usize,
+            n_conns: n_conns as usize,
+            group_size: group_size as usize,
+        })
+    }
+
+    fn section(&self, kind: u32) -> Option<&SectionInfo> {
+        self.sections.iter().find(|s| s.kind == kind)
+    }
+
+    fn section_bytes(&self, s: &SectionInfo) -> &[u8] {
+        &self.map.bytes()[s.offset as usize..(s.offset + s.len) as usize]
+    }
+
+    /// Borrow a typed pool out of the mapping (no copy).
+    pub fn pool<T: Copy>(&self, kind: u32) -> anyhow::Result<Pool<T>> {
+        let s = self
+            .section(kind)
+            .ok_or_else(|| anyhow::anyhow!("artifact missing section {}", kind_name(kind)))?;
+        Pool::borrowed(&self.map, self.section_bytes(s))
+            .map_err(|e| anyhow::anyhow!("section {}: {e}", kind_name(kind)))
+    }
+
+    /// Reconstruct the fused program by borrowing every pool from the
+    /// mapping. Zero per-pool copies; all invariants revalidated.
+    pub fn fused_program(&self) -> anyhow::Result<FusedProgram> {
+        let p = FusedProgram::from_pools(FusedPools {
+            ctrl: self.pool(SEC_FUSED_CTRL)?,
+            pivots: self.pool(SEC_FUSED_PIVOTS)?,
+            bounds: self.pool(SEC_FUSED_BOUNDS)?,
+            idx: self.pool(SEC_FUSED_IDX)?,
+            weights: self.pool(SEC_FUSED_WEIGHTS)?,
+            flags: self.pool(SEC_FUSED_FLAGS)?,
+            biases: self.pool(SEC_BIASES)?,
+            hidden_sources: self.pool(SEC_HIDDEN_SOURCES)?,
+            input_ids: self.pool(SEC_INPUT_IDS)?,
+            output_ids: self.pool(SEC_OUTPUT_IDS)?,
+            n_neurons: self.n_neurons,
+        })?;
+        anyhow::ensure!(
+            p.n_ops() == self.n_conns,
+            "fused idx length {} != meta n_conns {}",
+            p.n_ops(),
+            self.n_conns
+        );
+        Ok(p)
+    }
+
+    /// Reconstruct the quantized stream program, borrowing the ctrl
+    /// stream, qweights, and group table from the mapping.
+    pub fn quant_program(&self) -> anyhow::Result<QuantStreamProgram> {
+        QuantStreamProgram::from_pools(QuantPools {
+            ctrl: self.pool(SEC_QUANT_CTRL)?,
+            qweights: self.pool(SEC_QUANT_QWEIGHTS)?,
+            groups: self.pool(SEC_QUANT_GROUPS)?,
+            biases: self.pool(SEC_BIASES)?,
+            hidden_sources: self.pool(SEC_HIDDEN_SOURCES)?,
+            input_ids: self.pool(SEC_INPUT_IDS)?,
+            output_ids: self.pool(SEC_OUTPUT_IDS)?,
+            n_neurons: self.n_neurons,
+        })
+    }
+
+    /// Reconstruct the interpreted stream program (expands the fused
+    /// macro-ops back into per-connection ops; owned, not zero-copy).
+    pub fn stream_program(&self) -> anyhow::Result<StreamProgram> {
+        let fused = self.fused_program()?;
+        StreamProgram::from_raw_parts(
+            fused.expand_ops(),
+            fused.biases().to_vec(),
+            fused.hidden_sources().to_vec(),
+            fused.input_ids().to_vec(),
+            fused.output_ids().to_vec(),
+            self.n_neurons,
+        )
+    }
+
+    /// Per-neuron layer index, when the producer recorded one.
+    pub fn layer_of(&self) -> anyhow::Result<Option<Vec<u32>>> {
+        match self.section(SEC_LAYER_OF) {
+            None => Ok(None),
+            Some(_) => Ok(Some(self.pool::<u32>(SEC_LAYER_OF)?.to_vec())),
+        }
+    }
+
+    pub fn sections(&self) -> &[SectionInfo] {
+        &self.sections
+    }
+
+    pub fn mapping(&self) -> &Arc<Mapping> {
+        &self.map
+    }
+
+    pub fn file_len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_mmap(&self) -> bool {
+        self.map.is_mmap()
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    pub fn n_conns(&self) -> usize {
+        self.n_conns
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.section(SEC_INPUT_IDS).map_or(0, |s| s.len as usize / 4)
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.section(SEC_OUTPUT_IDS).map_or(0, |s| s.len as usize / 4)
+    }
+
+    /// Header + section dump for `sparseflow inspect`.
+    pub fn describe(&self) -> Json {
+        let secs: Vec<Json> = self
+            .sections
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .set("kind", s.kind as u64)
+                    .set("name", kind_name(s.kind))
+                    .set("dtype", dtype_name(s.dtype))
+                    .set("offset", s.offset)
+                    .set("len", s.len)
+                    .set("crc32", format!("{:08x}", s.crc))
+            })
+            .collect();
+        Json::obj()
+            .set("format", "sparseflow-bin-v1")
+            .set("format_version", SFB_FORMAT_VERSION)
+            .set("abi_version", SFB_ABI_VERSION)
+            .set("file_len", self.file_len() as u64)
+            .set("mmap", self.is_mmap())
+            .set("n_neurons", self.n_neurons as u64)
+            .set("n_conns", self.n_conns as u64)
+            .set("group_size", self.group_size as u64)
+            .set("n_sections", self.sections.len() as u64)
+            .set("sections", secs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +753,121 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::remove_file(dir.join("manifest.json")).ok();
         assert!(Manifest::load(&dir).is_err());
+    }
+}
+
+#[cfg(test)]
+mod bin_tests {
+    use super::*;
+    use crate::ffnn::generate::{random_mlp, MlpSpec};
+    use crate::ffnn::topo::two_optimal_order;
+    use crate::util::rng::Pcg64;
+
+    fn sample_net() -> Ffnn {
+        random_mlp(&MlpSpec::new(3, 8, 0.7), &mut Pcg64::new(7))
+    }
+
+    #[test]
+    fn bin_roundtrip_preserves_programs() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let buf = build_model_artifact(&net, &order);
+        let art = BinArtifact::from_bytes(&buf).unwrap();
+        assert_eq!(art.n_neurons(), net.n_neurons());
+        assert_eq!(art.n_conns(), net.n_conns());
+        assert_eq!(art.n_inputs(), net.n_inputs());
+        assert_eq!(art.n_outputs(), net.n_outputs());
+
+        let stream = StreamProgram::compile(&net, &order);
+        let want_fused = FusedProgram::from_program(&stream);
+        let got_fused = art.fused_program().unwrap();
+        assert_eq!(got_fused.ctrl(), want_fused.ctrl());
+        assert_eq!(got_fused.pivots(), want_fused.pivots());
+        assert_eq!(got_fused.bounds(), want_fused.bounds());
+        assert_eq!(got_fused.idx(), want_fused.idx());
+        assert_eq!(got_fused.weights(), want_fused.weights());
+        assert_eq!(got_fused.flags(), want_fused.flags());
+        assert_eq!(got_fused.stats().n_ops, want_fused.stats().n_ops);
+        assert!(got_fused.is_zero_copy());
+
+        let want_quant = QuantStreamProgram::from_program(&stream);
+        let got_quant = art.quant_program().unwrap();
+        assert_eq!(got_quant, want_quant);
+        assert!(got_quant.is_zero_copy());
+
+        let got_stream = art.stream_program().unwrap();
+        assert_eq!(got_stream.n_ops(), stream.n_ops());
+        assert_eq!(art.layer_of().unwrap().as_deref(), net.layer_of());
+    }
+
+    #[test]
+    fn file_load_mmap_and_heap_agree() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let path = std::env::temp_dir().join("sparseflow-bin-unit.sfb");
+        write_model_artifact(&net, &order, &path).unwrap();
+        let mapped = BinArtifact::load(&path).unwrap();
+        let heaped = BinArtifact::load_heap(&path).unwrap();
+        assert!(!heaped.is_mmap());
+        assert_eq!(mapped.sections(), heaped.sections());
+        assert_eq!(
+            mapped.quant_program().unwrap(),
+            heaped.quant_program().unwrap()
+        );
+        // Pools on the load path borrow the mapping — the zero-copy claim.
+        let pool = mapped.pool::<f32>(SEC_BIASES).unwrap();
+        assert!(pool.is_borrowed());
+        assert!(mapped.mapping().contains(pool.as_ptr() as *const u8) || pool.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_header_and_sections_are_rejected() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let buf = build_model_artifact(&net, &order);
+        // Flip one byte in the header: always caught by the header CRC
+        // (or the magic check).
+        for at in [0usize, 9, 17, 21, 25, 33, 40, 61] {
+            let mut bad = buf.clone();
+            bad[at] ^= 0x40;
+            assert!(BinArtifact::from_bytes(&bad).is_err(), "header byte {at} undetected");
+        }
+        // Flip one byte inside each section payload.
+        let art = BinArtifact::from_bytes(&buf).unwrap();
+        for s in art.sections() {
+            if s.len == 0 {
+                continue;
+            }
+            let mut bad = buf.clone();
+            bad[s.offset as usize] ^= 0x01;
+            assert!(
+                BinArtifact::from_bytes(&bad).is_err(),
+                "section {} corruption undetected",
+                s.kind
+            );
+        }
+        // Truncation anywhere is caught by the file-length field.
+        let mut short = buf.clone();
+        short.pop();
+        assert!(BinArtifact::from_bytes(&short).is_err());
+        assert!(BinArtifact::from_bytes(&buf[..40]).is_err());
+    }
+
+    #[test]
+    fn describe_lists_sections() {
+        let net = sample_net();
+        let order = two_optimal_order(&net);
+        let art = BinArtifact::from_bytes(&build_model_artifact(&net, &order)).unwrap();
+        let d = art.describe();
+        assert_eq!(
+            d.get("format").and_then(Json::as_str),
+            Some("sparseflow-bin-v1")
+        );
+        let secs = d.get("sections").and_then(Json::as_arr).unwrap();
+        assert_eq!(secs.len(), art.sections().len());
+        assert!(secs.iter().any(|s| {
+            s.get("name").and_then(Json::as_str) == Some("fused_weights")
+        }));
     }
 }

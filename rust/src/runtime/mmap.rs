@@ -1,0 +1,354 @@
+//! Read-only file mappings and the owned/borrowed pool abstraction that
+//! makes zero-copy artifact loading possible.
+//!
+//! [`Mapping`] wraps the platform `mmap(2)` (no external crates — the
+//! syscall is declared directly) with a read-to-heap fallback used on
+//! unsupported targets, for empty files, or when the caller forces it.
+//! Both paths yield one contiguous, immutable, 64-byte-aligned byte
+//! region for the mapping's lifetime.
+//!
+//! [`Pool<T>`] is the slice type the compiled programs store: either an
+//! owned `Vec<T>` (compiled in-process) or a borrowed range of a shared
+//! [`Mapping`] (loaded from a `sparseflow-bin-v1` artifact). Borrowed
+//! pools keep the mapping alive through an [`Arc`], so a loaded program
+//! never copies its pools — the paper's thesis applied to model loading:
+//! the bytes on disk *are* the execution layout.
+
+use std::path::Path;
+use std::sync::Arc;
+
+/// Alignment every artifact section (and the heap fallback) guarantees.
+/// mmap bases are page-aligned (4096 % 64 == 0), so a 64-byte-aligned
+/// section offset stays 64-byte-aligned in memory on both paths.
+pub const SECTION_ALIGN: usize = 64;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    // Declared directly: the container has no `libc` crate. 64-bit unix
+    // only — there `off_t` is 64-bit, so the raw symbol is safe to call.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+}
+
+enum Backing {
+    /// A live `mmap` region (unmapped on drop).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap,
+    /// One 64-byte-aligned heap allocation holding the whole file.
+    Heap { layout: std::alloc::Layout },
+}
+
+/// An immutable byte region backing zero or more borrowed [`Pool`]s:
+/// either a read-only file mapping or its read-to-heap fallback.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+    backing: Backing,
+}
+
+// SAFETY: the region is never written after construction and is only
+// released on drop, when no pool still holds the keep-alive `Arc`.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only; falls back to [`Mapping::open_heap`] on
+    /// targets without mmap support and for empty files.
+    pub fn open(path: &Path) -> std::io::Result<Mapping> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len() as usize;
+            if len == 0 {
+                return Self::open_heap(path);
+            }
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            // The fd can close now; the mapping keeps the pages alive.
+            Ok(Mapping { ptr, len, backing: Backing::Mmap })
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            Self::open_heap(path)
+        }
+    }
+
+    /// Read the whole file into one 64-byte-aligned heap block — the
+    /// portable fallback. Still a single copy for the entire artifact:
+    /// borrowed pools slice into this block exactly like into a mapping.
+    pub fn open_heap(path: &Path) -> std::io::Result<Mapping> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+
+    /// Heap-backed mapping over a byte buffer (tests, in-memory packing).
+    pub fn from_bytes(data: &[u8]) -> std::io::Result<Mapping> {
+        let len = data.len();
+        let layout = std::alloc::Layout::from_size_align(len.max(1), SECTION_ALIGN)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string()))?;
+        let ptr = unsafe { std::alloc::alloc(layout) };
+        if ptr.is_null() {
+            std::alloc::handle_alloc_error(layout);
+        }
+        unsafe { std::ptr::copy_nonoverlapping(data.as_ptr(), ptr, len) };
+        Ok(Mapping { ptr, len, backing: Backing::Heap { layout } })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe the owned region for self's lifetime.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether this region is a live file mapping (false = heap fallback).
+    pub fn is_mmap(&self) -> bool {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            matches!(self.backing, Backing::Mmap)
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            false
+        }
+    }
+
+    /// Whether `p` points into this region (zero-copy proofs in tests).
+    pub fn contains(&self, p: *const u8) -> bool {
+        let base = self.ptr as usize;
+        (base..base + self.len).contains(&(p as usize))
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        match self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mmap => unsafe {
+                sys::munmap(self.ptr as *mut u8, self.len);
+            },
+            Backing::Heap { layout } => unsafe {
+                std::alloc::dealloc(self.ptr as *mut u8, layout);
+            },
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping")
+            .field("len", &self.len)
+            .field("mmap", &self.is_mmap())
+            .finish()
+    }
+}
+
+/// A program pool: an owned vector or a borrowed slice of a shared
+/// [`Mapping`]. Dereferences to `&[T]`, so execution code is agnostic to
+/// where the pool lives.
+pub enum Pool<T: Copy> {
+    Owned(Vec<T>),
+    Borrowed {
+        ptr: *const T,
+        len: usize,
+        /// Keeps the backing region alive for the pool's lifetime.
+        map: Arc<Mapping>,
+    },
+}
+
+// SAFETY: borrowed pools reference an immutable mapping kept alive by
+// the Arc; owned pools are plain Vecs.
+unsafe impl<T: Copy + Send> Send for Pool<T> {}
+unsafe impl<T: Copy + Sync> Sync for Pool<T> {}
+
+impl<T: Copy> Pool<T> {
+    /// Borrow `bytes` (a sub-slice of `map`'s region) as a `[T]` pool.
+    /// Errors on misalignment or a length that is not a whole number of
+    /// elements — corrupt artifacts must fail loudly, never transmute
+    /// garbage.
+    pub fn borrowed(map: &Arc<Mapping>, bytes: &[u8]) -> anyhow::Result<Pool<T>> {
+        let size = std::mem::size_of::<T>();
+        let align = std::mem::align_of::<T>();
+        anyhow::ensure!(size > 0, "zero-sized pool element");
+        anyhow::ensure!(
+            bytes.len() % size == 0,
+            "section length {} is not a multiple of element size {size}",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes.as_ptr() as usize % align == 0,
+            "section misaligned for element alignment {align}"
+        );
+        let inside = bytes.is_empty()
+            || (map.contains(bytes.as_ptr()) && map.contains(&bytes[bytes.len() - 1]));
+        anyhow::ensure!(inside, "section bytes outside the backing mapping");
+        Ok(Pool::Borrowed {
+            ptr: bytes.as_ptr() as *const T,
+            len: bytes.len() / size,
+            map: Arc::clone(map),
+        })
+    }
+
+    /// Whether the pool borrows a mapping (the zero-copy load path).
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, Pool::Borrowed { .. })
+    }
+
+    /// The backing mapping of a borrowed pool.
+    pub fn mapping(&self) -> Option<&Arc<Mapping>> {
+        match self {
+            Pool::Owned(_) => None,
+            Pool::Borrowed { map, .. } => Some(map),
+        }
+    }
+}
+
+impl<T: Copy> std::ops::Deref for Pool<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            Pool::Owned(v) => v,
+            // SAFETY: ptr/len were validated by `borrowed` against the
+            // mapping, which the Arc keeps alive.
+            Pool::Borrowed { ptr, len, .. } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+        }
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for Pool<T> {
+    fn from(v: Vec<T>) -> Pool<T> {
+        Pool::Owned(v)
+    }
+}
+
+impl<T: Copy> Clone for Pool<T> {
+    fn clone(&self) -> Pool<T> {
+        match self {
+            Pool::Owned(v) => Pool::Owned(v.clone()),
+            Pool::Borrowed { ptr, len, map } => Pool::Borrowed {
+                ptr: *ptr,
+                len: *len,
+                map: Arc::clone(map),
+            },
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for Pool<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_borrowed() { "borrowed" } else { "owned" };
+        write!(f, "Pool<{kind} x{}>{:?}", self.len(), &self[..])
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for Pool<T> {
+    fn eq(&self, other: &Pool<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_mapping_roundtrips_bytes() {
+        let data: Vec<u8> = (0..=255).collect();
+        let m = Mapping::from_bytes(&data).unwrap();
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.len(), 256);
+        assert!(!m.is_mmap());
+        assert_eq!(m.bytes().as_ptr() as usize % SECTION_ALIGN, 0);
+    }
+
+    #[test]
+    fn file_mapping_matches_file_contents() {
+        let path = std::env::temp_dir().join("sparseflow-mmap-test.bin");
+        let data: Vec<u8> = (0..4096u32).flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = Mapping::open(&path).unwrap();
+        assert_eq!(m.bytes(), &data[..]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(m.is_mmap());
+        let h = Mapping::open_heap(&path).unwrap();
+        assert_eq!(h.bytes(), m.bytes());
+        assert!(!h.is_mmap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_heap() {
+        let path = std::env::temp_dir().join("sparseflow-mmap-empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mapping::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert!(!m.is_mmap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn borrowed_pool_derefs_without_copying() {
+        let words: Vec<u32> = (0..100).map(|i| i * 3).collect();
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        let map = Arc::new(Mapping::from_bytes(&bytes).unwrap());
+        let pool: Pool<u32> = Pool::borrowed(&map, map.bytes()).unwrap();
+        assert!(pool.is_borrowed());
+        assert_eq!(&pool[..], &words[..]);
+        assert!(map.contains(pool.as_ptr() as *const u8));
+        let owned: Pool<u32> = words.clone().into();
+        assert!(!owned.is_borrowed());
+        assert_eq!(pool, owned);
+    }
+
+    #[test]
+    fn misaligned_or_ragged_sections_rejected() {
+        let map = Arc::new(Mapping::from_bytes(&[0u8; 64]).unwrap());
+        // Length not a multiple of 4.
+        assert!(Pool::<u32>::borrowed(&map, &map.bytes()[..7]).is_err());
+        // Offset 2 breaks u32 alignment.
+        assert!(Pool::<u32>::borrowed(&map, &map.bytes()[2..6]).is_err());
+        // Aligned sub-slice is fine.
+        assert!(Pool::<u32>::borrowed(&map, &map.bytes()[4..12]).is_ok());
+    }
+
+    #[test]
+    fn pool_clone_shares_the_mapping() {
+        let map = Arc::new(Mapping::from_bytes(&[1u8, 2, 3, 4]).unwrap());
+        let pool: Pool<u8> = Pool::borrowed(&map, map.bytes()).unwrap();
+        let copy = pool.clone();
+        drop(pool);
+        assert_eq!(&copy[..], &[1, 2, 3, 4]);
+        assert!(copy.is_borrowed());
+    }
+}

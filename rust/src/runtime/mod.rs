@@ -13,8 +13,11 @@ pub mod client;
 #[cfg(not(feature = "xla"))]
 #[path = "client_stub.rs"]
 pub mod client;
+pub mod mmap;
 pub mod pack;
 
-pub use artifact::{ArtifactMeta, Manifest};
+pub use artifact::{build_model_artifact, write_model_artifact, ArtifactMeta, BinArtifact};
+pub use artifact::{Manifest, SectionInfo};
 pub use client::{Runtime, XlaEngine, XlaExecutable};
+pub use mmap::{Mapping, Pool, SECTION_ALIGN};
 pub use pack::{pack_ell_layers, EllLayer};

@@ -219,8 +219,8 @@ mod tests {
     /// identical program.
     #[test]
     fn quant_program_roundtrips_through_artifact_format() {
-        use crate::ffnn::serde::{load_quant, save_quant};
         use crate::ffnn::topo::two_optimal_order;
+        use crate::model::{Format, Model};
         use crate::runtime::Manifest;
 
         let mut rng = Pcg64::seed_from(5);
@@ -229,7 +229,9 @@ mod tests {
 
         let dir = std::env::temp_dir().join("sparseflow-quant-artifact-test");
         std::fs::create_dir_all(&dir).unwrap();
-        save_quant(&program, &dir.join("mlp.quant.json")).unwrap();
+        Model::from_quant(program.clone())
+            .save(&dir.join("mlp.quant.json"), Format::QuantJsonV1)
+            .unwrap();
         let manifest_json = Json::obj()
             .set("format", "sparseflow-artifacts-v1")
             .set(
@@ -254,8 +256,8 @@ mod tests {
         assert_eq!(meta.inputs[1].n_elements(), program.n_ops());
         assert_eq!(meta.inputs[2].shape, vec![program.groups().len(), 2]);
 
-        let loaded = load_quant(&manifest.hlo_path(meta)).unwrap();
-        assert_eq!(loaded, program);
+        let loaded = Model::load(&manifest.hlo_path(meta)).unwrap();
+        assert_eq!(loaded.quant().unwrap(), &program);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

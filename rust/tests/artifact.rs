@@ -1,0 +1,183 @@
+//! End-to-end tests of the `sparseflow-bin-v1` zero-copy artifact path:
+//! fuzz-lite corruption (every checksummed byte flip must be *rejected*,
+//! never a panic or a silently-wrong load), truncation at every section
+//! boundary, the zero-copy claim itself (pools borrow the mapping), and
+//! heap-fallback equivalence.
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::quant::QuantStreamEngine;
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::model::{Format, Model};
+use sparseflow::runtime::artifact::{build_model_artifact, SFB_HEADER_LEN};
+use sparseflow::runtime::BinArtifact;
+use sparseflow::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn sample_net(seed: u64) -> Ffnn {
+    random_mlp(&MlpSpec::new(3, 10, 0.6), &mut Pcg64::new(seed))
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("sparseflow-artifact-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Fuzz-lite: flip one byte at a time across the header, the section
+/// table, and a seeded sample of every section payload. Each flip lands
+/// in CRC-covered bytes, so every corrupted buffer must fail validation
+/// with an error (alignment-gap bytes are excluded: the format
+/// explicitly leaves them unchecksummed).
+#[test]
+fn single_byte_corruption_is_always_rejected() {
+    let net = sample_net(11);
+    let order = two_optimal_order(&net);
+    let buf = build_model_artifact(&net, &order);
+    let art = BinArtifact::from_bytes(&buf).unwrap();
+
+    // Every byte of the 64-byte header is covered (bytes 0..60 by the
+    // header CRC at 60..64; flipping the CRC itself mismatches too).
+    let mut targets: Vec<usize> = (0..SFB_HEADER_LEN).collect();
+    // Every byte of the section table is covered by the table CRC.
+    let table_end = SFB_HEADER_LEN + art.sections().len() * 32;
+    targets.extend(SFB_HEADER_LEN..table_end);
+    // Per section: first byte, last byte, and a few seeded interior
+    // offsets — all inside `[offset, offset+len)`, which the per-section
+    // CRC covers exactly.
+    let mut rng = Pcg64::new(0xC0FFEE);
+    for s in art.sections() {
+        let (off, len) = (s.offset as usize, s.len as usize);
+        assert!(len > 0, "fixture artifact has an empty section");
+        targets.push(off);
+        targets.push(off + len - 1);
+        for _ in 0..4 {
+            targets.push(off + (rng.next_u64() as usize) % len);
+        }
+    }
+
+    for &at in &targets {
+        let mut bad = buf.clone();
+        bad[at] ^= 0x20;
+        let res = BinArtifact::from_bytes(&bad);
+        assert!(res.is_err(), "byte flip at {at} was not rejected");
+    }
+    // Sanity: the pristine buffer still validates.
+    assert!(BinArtifact::from_bytes(&buf).is_ok());
+}
+
+/// Truncation at every section boundary (and mid-header) must be
+/// rejected cleanly — the header's file-length field pins the size.
+#[test]
+fn truncation_at_every_section_boundary_is_rejected() {
+    let net = sample_net(12);
+    let order = two_optimal_order(&net);
+    let buf = build_model_artifact(&net, &order);
+    let art = BinArtifact::from_bytes(&buf).unwrap();
+
+    let mut cuts: Vec<usize> = vec![0, 1, SFB_HEADER_LEN - 1, SFB_HEADER_LEN];
+    for s in art.sections() {
+        cuts.push(s.offset as usize);
+        cuts.push((s.offset + s.len) as usize);
+        cuts.push(s.offset as usize + 1);
+    }
+    cuts.retain(|&c| c < buf.len());
+    for &cut in &cuts {
+        let res = BinArtifact::from_bytes(&buf[..cut]);
+        assert!(res.is_err(), "truncation to {cut}/{} bytes was not rejected", buf.len());
+    }
+}
+
+/// The zero-copy claim: on the mmap load path every program pool borrows
+/// the mapping (pointers land inside the mapped range; no per-pool heap
+/// copies), and the heap fallback produces value-identical programs.
+#[test]
+fn mmap_load_is_zero_copy_and_heap_fallback_matches() {
+    let net = sample_net(13);
+    let order = two_optimal_order(&net);
+    let path = tmp_path("zero-copy.sfb");
+    Model::from_net(net.clone(), Some(order.clone()))
+        .save(&path, Format::BinV1)
+        .unwrap();
+
+    let mapped = Model::load(&path).unwrap();
+    let resident = Model::load_resident(&path).unwrap();
+    let (ma, ra) = (mapped.artifact().unwrap(), resident.artifact().unwrap());
+    assert!(!ra.is_mmap(), "load_resident must use the heap fallback");
+
+    let fused = ma.fused_program().unwrap();
+    assert!(fused.is_zero_copy(), "fused pools must borrow the mapping");
+    let quant = ma.quant_program().unwrap();
+    assert!(quant.is_zero_copy(), "quant pools must borrow the mapping");
+    // Pointer-level proof: the weight pool points into the mapping.
+    let w = fused.weights();
+    assert!(
+        ma.mapping().contains(w.as_ptr() as *const u8),
+        "fused weights live outside the mapping — a copy happened"
+    );
+    // The heap fallback rebuilds the same programs, value for value.
+    assert_eq!(ra.quant_program().unwrap(), quant);
+    assert_eq!(ra.fused_program().unwrap().weights(), fused.weights());
+    assert_eq!(ra.fused_program().unwrap().idx(), fused.idx());
+
+    // And the executed results are bit-identical across the three
+    // sources: JSON-compiled, mmap-borrowed, heap-read.
+    let x = BatchMatrix::random(net.n_inputs(), 5, &mut Pcg64::new(99));
+    let want = FusedEngine::new(&net, &order).infer(&x);
+    assert_eq!(FusedEngine::from_program(fused).infer(&x), want);
+    assert_eq!(FusedEngine::from_program(ra.fused_program().unwrap()).infer(&x), want);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The unified loader round-trips all three formats and the resulting
+/// variants serve the same requests (f32 bit-exact, i8 self-consistent).
+#[test]
+fn model_load_save_round_trips_across_formats() {
+    let net = sample_net(14);
+    let order = two_optimal_order(&net);
+    let json_path = tmp_path("roundtrip.json");
+    let bin_path = tmp_path("roundtrip.sfb");
+    let quant_path = tmp_path("roundtrip.quant.json");
+
+    let source = Model::from_net(net.clone(), Some(order.clone()));
+    source.save(&json_path, Format::JsonV1).unwrap();
+    source.save(&bin_path, Format::BinV1).unwrap();
+    source.save(&quant_path, Format::QuantJsonV1).unwrap();
+
+    let from_json = Model::load(&json_path).unwrap();
+    let from_bin = Model::load(&bin_path).unwrap();
+    let from_quant = Model::load(&quant_path).unwrap();
+    assert_eq!(from_json.format(), Format::JsonV1);
+    assert_eq!(from_bin.format(), Format::BinV1);
+    assert_eq!(from_quant.format(), Format::QuantJsonV1);
+
+    let x = BatchMatrix::random(net.n_inputs(), 4, &mut Pcg64::new(7));
+    // f32 interp: JSON-loaded vs bin-loaded must be bit-identical.
+    let a = StreamingEngine::new(from_json.net().unwrap(), &order).infer(&x);
+    let b = StreamingEngine::from_program(
+        from_bin.artifact().unwrap().stream_program().unwrap(),
+    )
+    .infer(&x);
+    assert_eq!(a, b, "bin-loaded stream diverged from JSON-loaded");
+    // i8: quant-v1 payload and bin quant section hold the same program.
+    let qa = from_quant.quant().unwrap().clone();
+    let qb = from_bin.artifact().unwrap().quant_program().unwrap();
+    assert_eq!(qa, qb, "quant-v1 and bin quant programs differ");
+    assert_eq!(
+        QuantStreamEngine::from_program(qa).infer(&x),
+        QuantStreamEngine::from_program(qb).infer(&x),
+    );
+
+    // A renamed artifact (wrong extension) still sniffs by magic.
+    let renamed = tmp_path("renamed.bin");
+    std::fs::copy(&bin_path, &renamed).unwrap();
+    assert_eq!(Model::load(&renamed).unwrap().format(), Format::BinV1);
+
+    for p in [&json_path, &bin_path, &quant_path, &renamed] {
+        std::fs::remove_file(p).ok();
+    }
+}

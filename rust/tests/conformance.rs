@@ -191,6 +191,56 @@ fn serde_roundtrips_preserve_golden_traces() {
     }
 }
 
+/// Cross-format conformance: pack each fixture to a `sparseflow-bin-v1`
+/// artifact and serve it from both load paths. The mmap-borrowed (warm)
+/// and heap-read programs must reproduce the golden traces bit-exactly
+/// — same bits as the JSON-compiled engines — and the bin quant program
+/// must be output-identical to the JSON-compiled one.
+#[test]
+fn bin_artifacts_reproduce_golden_traces_bit_identically() {
+    use sparseflow::exec::tiled::TiledProgram;
+    use sparseflow::model::{Format, Model};
+
+    let dir = std::env::temp_dir().join("sparseflow-conformance-bin");
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        let order = two_optimal_order(&f.net);
+        let path = dir.join(format!("{name}.sfb"));
+        Model::from_net(f.net.clone(), Some(order.clone()))
+            .save(&path, Format::BinV1)
+            .unwrap();
+        let want_quant =
+            QuantStreamEngine::from_program(QuantStreamProgram::compress(&f.net, &order))
+                .infer(&f.inputs);
+        for (src, model) in [
+            ("mmap", Model::load(&path).unwrap()),
+            ("heap", Model::load_resident(&path).unwrap()),
+        ] {
+            let art = model.artifact().unwrap();
+            if src == "heap" {
+                assert!(!art.is_mmap(), "{name}: heap load must not mmap");
+            }
+            let stream = StreamingEngine::from_program(art.stream_program().unwrap());
+            assert_exact(&f, &stream, &format!("bin[{src}] stream"));
+            let fused = FusedEngine::from_program(art.fused_program().unwrap());
+            assert_exact(&f, &fused, &format!("bin[{src}] fused"));
+            let m = f.net.n_neurons() + 2;
+            let tiled = TiledEngine::from_program(
+                TiledProgram::from_program(&art.stream_program().unwrap(), m).unwrap(),
+            );
+            assert_exact(&f, &tiled, &format!("bin[{src}] tiled@M{m}"));
+            let got =
+                QuantStreamEngine::from_program(art.quant_program().unwrap()).infer(&f.inputs);
+            assert_eq!(
+                got, want_quant,
+                "{name}: bin[{src}] quant diverged from the JSON-compiled program"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
 #[test]
 fn fixture_shapes_are_sane() {
     for name in FIXTURES {
