@@ -68,10 +68,13 @@ fn main() {
                 continue;
             }
             for workers in [1usize, 4] {
-                // Tiled autotunes its fast-memory budget (fast_mem 0).
-                let mut variant =
-                    ModelVariant::build("variant", &net, &order, schedule, precision, workers, 0)
-                        .expect("valid composition point");
+                // Tiled autotunes its fast-memory budget (fast_mem 0);
+                // kernel "auto" dispatches compiled schedules to the
+                // best supported simd path.
+                let mut variant = ModelVariant::build(
+                    "variant", &net, &order, schedule, precision, workers, 0, "auto",
+                )
+                .expect("valid composition point");
                 let label = variant.label();
                 variant.name = label.clone();
                 let mut router = Router::new();
@@ -88,13 +91,15 @@ fn main() {
                 );
                 let h = server.handle();
                 // Warmup run (allocator + scratch pools + thread ramp-up).
-                let _ = run(&h, &label, &LoadSpec::closed(clients, requests / 4 + 1, seed));
+                let _ = run(&h, &label, &LoadSpec::closed(clients, requests / 4 + 1, seed))
+                    .expect("warmup run");
 
                 let (mut rps, mut p50, mut p95, mut p99) =
                     (Vec::new(), Vec::new(), Vec::new(), Vec::new());
                 let (mut qw50, mut qw95, mut qw99) = (Vec::new(), Vec::new(), Vec::new());
                 for _ in 0..reps {
-                    let r = run(&h, &label, &LoadSpec::closed(clients, requests, seed));
+                    let r = run(&h, &label, &LoadSpec::closed(clients, requests, seed))
+                        .expect("measurement run");
                     assert_eq!(
                         r.served, requests,
                         "{label}: closed loop without SLOs must serve everything"

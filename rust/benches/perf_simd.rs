@@ -1,0 +1,161 @@
+//! §Perf — scalar vs AVX2 microkernels under the compiled engines
+//! (rows/s) at batch 128, on the paper's two non-MLP workload shapes (a
+//! BERT-like magnitude-pruned encoder MLP and a compact-growth network),
+//! each at **two connection orders**: the 2-optimal construction and a
+//! Connection-Reordering (simulated annealing) refinement. Both the
+//! fused and the tiled engine are timed per kernel, and every kernel is
+//! asserted **bit-identical** to the interpreted stream before timing —
+//! the speedup must come for free numerically. On CPUs without AVX2 the
+//! avx2 rows are skipped (recorded in the meta key `avx2_supported`),
+//! never silently substituted. Emits JSON via `bench::harness`
+//! (repo-root `BENCH_PERF_SIMD.json`).
+//!
+//! ```bash
+//! cargo bench --bench perf_simd -- --batch 128
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::simd::{avx2_supported, Kernel};
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::tiled::TiledEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::memory::PolicyKind;
+use sparseflow::reorder::annealing::{reorder, AnnealConfig};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+/// Kernels to compare: scalar always, avx2 when this CPU has it.
+fn kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    if avx2_supported() {
+        ks.push(Kernel::Avx2);
+    } else {
+        println!("avx2 not supported on this CPU — timing the scalar kernel only");
+    }
+    ks
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_order(
+    label: &str,
+    net: &Ffnn,
+    order: &ConnOrder,
+    m: usize,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    let mut rng = Pcg64::seed_from(0x51D0);
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+    let interp = StreamingEngine::new(net, order);
+    let reference = interp.infer(&x);
+
+    for kernel in kernels() {
+        let fused = FusedEngine::new(net, order).with_kernel(kernel);
+        let tiled = TiledEngine::new(net, order, m).expect("tiled compile").with_kernel(kernel);
+        // Bit-identity is the contract that makes the interpreter (and
+        // the whole differential suite) the SIMD correctness oracle.
+        assert_eq!(
+            fused.infer(&x),
+            reference,
+            "{label}: fused/{} must be bit-identical to the interpreter",
+            kernel.name()
+        );
+        assert_eq!(
+            tiled.infer(&x),
+            reference,
+            "{label}: tiled/{} must be bit-identical to the interpreter",
+            kernel.name()
+        );
+
+        let fused_times = measure(2, reps, || fused.infer(&x));
+        let tiled_times = measure(2, reps, || tiled.infer(&x));
+        let fused_series = format!("fused {}", kernel.name());
+        let tiled_series = format!("tiled {}", kernel.name());
+        report.record_rate(label, &fused_series, batch as f64, &fused_times, "rows/s");
+        report.record_rate(label, &tiled_series, batch as f64, &tiled_times, "rows/s");
+        println!(
+            "  {label:<24} {:<6} fused {:>11.0} rows/s | tiled {:>11.0} rows/s",
+            kernel.name(),
+            batch as f64 / Summary::of(&fused_times).median,
+            batch as f64 / Summary::of(&tiled_times).median
+        );
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_net(
+    label: &str,
+    net: &Ffnn,
+    m: usize,
+    anneal_iters: u64,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    println!("{label}: {}", net.describe());
+    let initial = two_optimal_order(net);
+    bench_order(&format!("{label} 2-opt"), net, &initial, m, batch, reps, report);
+
+    let cfg = AnnealConfig::new(m, PolicyKind::Min, anneal_iters);
+    let (annealed, rep) = reorder(net, &initial, &cfg);
+    println!(
+        "  annealed {anneal_iters} iters @ M={m}: {} -> {} I/Os ({:.1}% reduction)",
+        rep.initial_ios,
+        rep.final_ios,
+        rep.reduction() * 100.0
+    );
+    bench_order(&format!("{label} annealed"), net, &annealed, m, batch, reps, report);
+}
+
+fn main() {
+    let args = Spec::new("perf_simd", "scalar vs avx2 microkernels under fused/tiled")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("mg", "100", "compact growth: design memory size")
+        .opt("m", "100", "tiled fast-memory slots (also the anneal target)")
+        .opt("anneal-iters", "2000", "Connection Reordering iterations")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+    let anneal_iters = if quick { 200 } else { args.u64("anneal-iters") };
+    let m = args.usize("m");
+
+    let mut report = Report::new("perf_simd", "runtime-dispatched simd microkernels (§Perf)");
+    report.set_meta("batch", batch);
+    report.set_meta("anneal_iters", anneal_iters);
+    report.set_meta("m", m as u64);
+    report.set_meta("quick", quick);
+    report.set_meta("avx2_supported", avx2_supported());
+    report.set_meta("auto_kernel", Kernel::auto().name());
+
+    let mut rng = Pcg64::seed_from(0x51D1);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let bert = bert_mlp(&bert_spec, &mut rng);
+    bench_net("bert-like", &bert, m, anneal_iters, batch, reps, &mut report);
+
+    let cg_spec = CompactGrowthSpec::new(if quick { 30 } else { args.usize("mg") });
+    let (cg, _) = compact_growth(&cg_spec, &mut rng);
+    bench_net("compact-growth", &cg, m, anneal_iters, batch, reps, &mut report);
+
+    report.finish();
+}

@@ -113,6 +113,19 @@ impl Spec {
         )
     }
 
+    /// The standard `--kernel` option of the compiled schedules: which
+    /// `exec::simd` microkernel fused/tiled engines dispatch to. "auto"
+    /// defers to the config file's `kernel` key (and ultimately to the
+    /// best supported path); "avx2" is rejected with a structured error
+    /// on CPUs without it. Every kernel computes identical bits.
+    pub fn kernel_opt(self) -> Self {
+        self.opt(
+            "kernel",
+            "auto",
+            "microkernel: auto | scalar | avx2 (auto = config key / best supported)",
+        )
+    }
+
     /// The standard `--max-queue` SLO option of the serving commands:
     /// bounded queue depth for admission control. An explicit value wins
     /// — including an explicit `0` (= unbounded) — while "auto" defers
@@ -491,6 +504,18 @@ mod tests {
         let a = s.parse(&sv(&["--fast-mem", "0"])).unwrap();
         assert_eq!(a.usize("fast-mem"), 0);
         assert!(s.help_text().contains("--fast-mem"));
+    }
+
+    #[test]
+    fn kernel_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").kernel_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("kernel"), "auto", "default defers to config");
+        let a = s.parse(&sv(&["--kernel", "scalar"])).unwrap();
+        assert_eq!(a.str("kernel"), "scalar");
+        let a = s.parse(&sv(&["--kernel=avx2"])).unwrap();
+        assert_eq!(a.str("kernel"), "avx2");
+        assert!(s.help_text().contains("--kernel"));
     }
 
     #[test]

@@ -95,6 +95,14 @@ impl Config {
         self.usize("fast_mem", default)
     }
 
+    /// The microkernel knob (`kernel` key): "auto" dispatches the
+    /// compiled schedules (`exec::fused` / `exec::tiled`) to the best
+    /// supported `exec::simd` path, "scalar" forces the portable one,
+    /// "avx2" requires the AVX2 path (rejected on CPUs without it).
+    pub fn kernel(&self, default: &str) -> String {
+        self.str("kernel", default)
+    }
+
     /// The admission-control knob (`max_queue` key): maximum queued
     /// requests per model before new submissions are shed with an
     /// explicit queue-full response. 0 = unbounded (no shedding).
@@ -214,6 +222,14 @@ mod tests {
         assert_eq!(c.fast_mem(0), 0, "default when unset (0 = autotune)");
         c.set_override("fast_mem=128").unwrap();
         assert_eq!(c.fast_mem(0), 128);
+    }
+
+    #[test]
+    fn kernel_knob() {
+        let mut c = Config::empty();
+        assert_eq!(c.kernel("auto"), "auto", "default when unset");
+        c.set_override("kernel=scalar").unwrap();
+        assert_eq!(c.kernel("auto"), "scalar");
     }
 
     #[test]

@@ -12,17 +12,22 @@ use crate::exec::parallel::ShardTimings;
 use crate::exec::tiled::TiledStats;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Histogram bucket count: log-spaced buckets from 1 µs to ~17 s.
 const N_BUCKETS: usize = 48;
 
 /// A fixed-bucket latency histogram: 48 log-spaced buckets covering
-/// 1 µs … ~17 s (bucket `i` covers `[1µs·1.35^i, 1µs·1.35^{i+1})`). The
-/// bucket edges are compile-time constants — every snapshot and every
-/// process sees the same grid, so quantiles are comparable across runs.
-/// Quantile estimates report the upper edge of the containing bucket
-/// (a ≤ 35% overestimate, never an underestimate).
+/// 1 µs … ~17 s (bucket `i` covers the half-open range
+/// `[1µs·1.35^i, 1µs·1.35^{i+1})`; bucket 0 additionally absorbs
+/// everything below 1 µs). The bucket edges are precomputed once —
+/// every snapshot and every process sees the same grid, so quantiles
+/// are comparable across runs — and bucketing binary-searches the edge
+/// table, so an observation exactly on an edge lands in the bucket
+/// whose *lower* edge it is (the old ln-ratio + floor computation could
+/// place edge values one bucket low through rounding). Quantile
+/// estimates report the upper edge of the containing bucket (a ≤ 35%
+/// overestimate, never an underestimate).
 #[derive(Debug)]
 pub struct Histogram {
     buckets: [AtomicU64; N_BUCKETS],
@@ -41,14 +46,21 @@ impl Histogram {
         }
     }
 
+    /// Upper bucket edges in seconds (`edges[i]` closes bucket `i`),
+    /// computed once so every `bucket_of` call agrees bit-for-bit.
+    fn edges() -> &'static [f64; N_BUCKETS] {
+        static EDGES: OnceLock<[f64; N_BUCKETS]> = OnceLock::new();
+        EDGES.get_or_init(|| std::array::from_fn(|i| 1e-6 * 1.35f64.powi(i as i32 + 1)))
+    }
+
     fn bucket_of(latency_secs: f64) -> usize {
-        let us = (latency_secs * 1e6).max(1.0);
-        let i = (us.ln() / 1.35f64.ln()).floor() as isize;
-        i.clamp(0, N_BUCKETS as isize - 1) as usize
+        Self::edges()
+            .partition_point(|&upper| upper <= latency_secs)
+            .min(N_BUCKETS - 1)
     }
 
     fn bucket_upper_secs(i: usize) -> f64 {
-        1e-6 * 1.35f64.powi(i as i32 + 1)
+        Self::edges()[i]
     }
 
     pub fn observe(&self, secs: f64) {
@@ -67,9 +79,13 @@ impl Histogram {
     }
 
     /// Estimated quantile (upper edge of the containing bucket); 0.0 when
-    /// empty.
+    /// empty. Snapshots the counters into a stack array — no allocation
+    /// per scrape.
     pub fn quantile(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let mut counts = [0u64; N_BUCKETS];
+        for (c, b) in counts.iter_mut().zip(self.buckets.iter()) {
+            *c = b.load(Ordering::Relaxed);
+        }
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0.0;
@@ -125,6 +141,10 @@ pub struct Metrics {
     /// [`Metrics::link_tiled_stats`]); compile-time constants like the
     /// fusion stats.
     tiled_stats: Mutex<Vec<(String, TiledStats)>>,
+    /// Per-model dispatched microkernel tag ("scalar" | "avx2"; see
+    /// [`Metrics::link_kernel`]) — which `exec::simd` path the deployed
+    /// engine actually runs.
+    kernels: Mutex<Vec<(String, &'static str)>>,
     /// Registry state provider (see [`Metrics::link_registry`]): called
     /// at snapshot time to embed the model registry's tier/version view
     /// under the `registry` key.
@@ -157,6 +177,7 @@ impl Metrics {
             shard_sinks: Mutex::new(Vec::new()),
             fusion_stats: Mutex::new(Vec::new()),
             tiled_stats: Mutex::new(Vec::new()),
+            kernels: Mutex::new(Vec::new()),
             registry_sink: Mutex::new(None),
         }
     }
@@ -189,6 +210,18 @@ impl Metrics {
             entry.1 = stats;
         } else {
             sinks.push((model.to_string(), stats));
+        }
+    }
+
+    /// Record which microkernel a deployed model dispatches to, so it
+    /// appears in [`Metrics::snapshot`] under `kernel.<model>`.
+    /// Re-linking the same model replaces the previous entry.
+    pub fn link_kernel(&self, model: &str, kernel: &'static str) {
+        let mut sinks = self.kernels.lock().expect("kernel tags poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = kernel;
+        } else {
+            sinks.push((model.to_string(), kernel));
         }
     }
 
@@ -292,6 +325,15 @@ impl Metrics {
             j = j.set("tiled", tiled);
         }
         drop(stats);
+        let kernels = self.kernels.lock().expect("kernel tags poisoned");
+        if !kernels.is_empty() {
+            let mut k = Json::obj();
+            for (model, tag) in kernels.iter() {
+                k = k.set(model, *tag);
+            }
+            j = j.set("kernel", k);
+        }
+        drop(kernels);
         let sink = self.registry_sink.lock().expect("registry sink poisoned");
         if let Some(sink) = sink.as_ref() {
             j = j.set("registry", sink());
@@ -310,6 +352,24 @@ mod tests {
         assert!(Histogram::bucket_of(1e-3) <= Histogram::bucket_of(1.0));
         assert_eq!(Histogram::bucket_of(0.0), 0);
         assert_eq!(Histogram::bucket_of(1e9), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn edge_observations_land_in_the_bucket_they_open() {
+        // Half-open buckets: a value exactly on an edge belongs to the
+        // bucket whose lower edge it is (the ln-ratio + floor version
+        // could misplace it one bucket low through fp rounding).
+        for i in 0..N_BUCKETS - 1 {
+            let edge = Histogram::bucket_upper_secs(i);
+            assert_eq!(Histogram::bucket_of(edge), i + 1, "edge {i} opens bucket {}", i + 1);
+            assert_eq!(
+                Histogram::bucket_of(edge * (1.0 - 1e-12)),
+                i,
+                "just under edge {i} stays in bucket {i}"
+            );
+        }
+        let top = Histogram::bucket_upper_secs(N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_of(top), N_BUCKETS - 1, "top edge clamps");
     }
 
     #[test]
@@ -440,6 +500,22 @@ mod tests {
         m.link_tiled_stats("mlp", TiledStats { n_segments: 1, ..stats });
         let s2 = m.snapshot();
         assert_eq!(s2.path(&["tiled", "mlp", "segments"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn kernel_tags_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().get("kernel").is_none(), "no tags, no key");
+        m.link_kernel("mlp", "scalar");
+        m.link_kernel("bert", "avx2");
+        let s = m.snapshot();
+        assert_eq!(s.path(&["kernel", "mlp"]).unwrap().as_str(), Some("scalar"));
+        assert_eq!(s.path(&["kernel", "bert"]).unwrap().as_str(), Some("avx2"));
+
+        // Re-linking the same model replaces, not duplicates.
+        m.link_kernel("mlp", "avx2");
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["kernel", "mlp"]).unwrap().as_str(), Some("avx2"));
     }
 
     #[test]

@@ -47,6 +47,9 @@ pub struct RegistryConfig {
     /// Tiled fast-memory budget `M` (slots); artifact-backed tiled
     /// serving requires it explicitly.
     pub fast_mem: usize,
+    /// Microkernel for promoted compiled engines ("auto" | "scalar" |
+    /// "avx2").
+    pub kernel: String,
 }
 
 impl Default for RegistryConfig {
@@ -57,6 +60,7 @@ impl Default for RegistryConfig {
             precision: "f32".to_string(),
             workers: 1,
             fast_mem: 0,
+            kernel: "auto".to_string(),
         }
     }
 }
@@ -251,7 +255,7 @@ impl Registry {
         model: &Model,
     ) -> anyhow::Result<super::router::ModelVariant> {
         let c = &self.inner.config;
-        Ok(model.variant(name, &c.schedule, &c.precision, c.workers, c.fast_mem)?)
+        Ok(model.variant(name, &c.schedule, &c.precision, c.workers, c.fast_mem, &c.kernel)?)
     }
 
     /// Record a hit and make sure the model is serving. Warm models are

@@ -7,6 +7,7 @@
 
 use crate::exec::fused::FusionStats;
 use crate::exec::parallel::{ParallelEngine, ShardTimings};
+use crate::exec::simd::{self, Kernel};
 use crate::exec::tiled::TiledStats;
 use crate::exec::Engine;
 use crate::ffnn::graph::Ffnn;
@@ -34,6 +35,15 @@ pub enum VariantError {
     /// The schedule compiler itself rejected the network/budget (e.g. a
     /// sub-minimum tiled `M`).
     Compile { schedule: String, message: String },
+    /// `kernel` is not one of auto / scalar / avx2.
+    UnknownKernel(String),
+    /// An explicit non-scalar `kernel` was given for a schedule that has
+    /// no microkernel layer (only the compiled schedules fused/tiled
+    /// dispatch through `exec::simd`).
+    KernelRequiresCompiled { schedule: String, kernel: String },
+    /// An explicit `kernel` the CPU cannot execute (e.g. `avx2` on a
+    /// machine without AVX2; `auto` never fails — it falls back).
+    KernelUnsupported { kernel: String },
 }
 
 impl std::fmt::Display for VariantError {
@@ -59,7 +69,46 @@ impl std::fmt::Display for VariantError {
             VariantError::Compile { schedule, message } => {
                 write!(f, "compiling the {schedule} schedule failed: {message}")
             }
+            VariantError::UnknownKernel(k) => {
+                write!(f, "unknown kernel {k:?} (expected auto, scalar or avx2)")
+            }
+            VariantError::KernelRequiresCompiled { schedule, kernel } => write!(
+                f,
+                "--kernel {kernel} only applies to the compiled schedules fused and tiled \
+                 (got schedule {schedule:?})"
+            ),
+            VariantError::KernelUnsupported { kernel } => write!(
+                f,
+                "kernel {kernel:?} is not supported by this CPU (use --kernel auto to \
+                 pick the best supported path)"
+            ),
         }
+    }
+}
+
+/// Resolve the `--kernel` knob against the schedule and the CPU: `auto`
+/// picks the best supported kernel for the compiled schedules (the only
+/// ones with a microkernel layer) and tags everything else "scalar"; an
+/// explicit `avx2` requires both a compiled schedule and runtime AVX2
+/// support. Shared by [`ModelVariant::build`] and the model loader's
+/// knob validation.
+pub(crate) fn resolve_kernel_tag(
+    schedule: &str,
+    kernel: &str,
+) -> Result<&'static str, VariantError> {
+    let compiled = matches!(schedule, "fused" | "tiled");
+    match kernel {
+        "auto" if compiled => Ok(Kernel::auto().name()),
+        "auto" | "scalar" => Ok("scalar"),
+        "avx2" if !compiled => Err(VariantError::KernelRequiresCompiled {
+            schedule: schedule.to_string(),
+            kernel: kernel.to_string(),
+        }),
+        "avx2" if !simd::avx2_supported() => Err(VariantError::KernelUnsupported {
+            kernel: kernel.to_string(),
+        }),
+        "avx2" => Ok("avx2"),
+        other => Err(VariantError::UnknownKernel(other.to_string())),
     }
 }
 
@@ -106,9 +155,16 @@ pub struct ModelVariant {
     /// server surfaces these in `Metrics::snapshot` under
     /// `tiled.<model>`.
     pub tiled: Option<TiledStats>,
+    /// Microkernel path the serving engine dispatches to: "scalar" (the
+    /// portable reference — also what the interp schedule's
+    /// per-connection loop amounts to) or "avx2" (`exec::simd` runtime
+    /// dispatch on the compiled schedules). All kernels are
+    /// bit-identical; the tag records which path serves, and the server
+    /// surfaces it in `Metrics::snapshot` under `kernel.<model>`.
+    pub kernel: &'static str,
     /// Batch shards of the serving engine (1 = serial). Together with
-    /// `schedule` and `precision` this pins the point in the composition
-    /// matrix; see [`ModelVariant::label`].
+    /// `schedule`, `precision` and `kernel` this pins the point in the
+    /// composition matrix; see [`ModelVariant::label`].
     pub workers: usize,
     /// One-line human description of the serving engine (set by
     /// [`ModelVariant::build`]; empty for hand-assembled variants).
@@ -127,16 +183,18 @@ impl ModelVariant {
             schedule: "interp",
             fusion: None,
             tiled: None,
+            kernel: "scalar",
             workers: 1,
             summary: String::new(),
         }
     }
 
-    /// Canonical variant label `"<schedule>-<precision>-w<workers>"`
-    /// (e.g. `"fused-f32-w4"`) — the key the loadgen reports and the
-    /// `perf_serve` bench use to compare engine variants.
+    /// Canonical variant label
+    /// `"<schedule>-<precision>-w<workers>-<kernel>"` (e.g.
+    /// `"fused-f32-w4-avx2"`) — the key the loadgen reports and the
+    /// serving benches use to compare engine variants.
     pub fn label(&self) -> String {
-        format!("{}-{}-w{}", self.schedule, self.precision, self.workers)
+        format!("{}-{}-w{}-{}", self.schedule, self.precision, self.workers, self.kernel)
     }
 
     /// Build a serving variant from the composition-matrix knobs shared
@@ -146,8 +204,13 @@ impl ModelVariant {
     /// record format), `workers` > 1 wraps the engine in a batch-sharded
     /// [`ParallelEngine`]. `fast_mem` is the tiled schedule's
     /// fast-memory budget `M` in slots (0 = autotune through the I/O
-    /// simulator); it is rejected for non-tiled schedules. Rejections
-    /// come back as structured [`VariantError`] values.
+    /// simulator); it is rejected for non-tiled schedules. `kernel` ∈
+    /// {auto, scalar, avx2} picks the `exec::simd` microkernel of the
+    /// compiled schedules (auto = best the CPU supports; an explicit
+    /// avx2 is rejected on CPUs without it, and on non-compiled
+    /// schedules). Rejections come back as structured [`VariantError`]
+    /// values.
+    #[allow(clippy::too_many_arguments)]
     pub fn build(
         name: &str,
         net: &Ffnn,
@@ -156,6 +219,7 @@ impl ModelVariant {
         precision: &str,
         workers: usize,
         fast_mem: usize,
+        kernel: &str,
     ) -> Result<ModelVariant, VariantError> {
         use crate::exec::fused::FusedEngine;
         use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
@@ -168,6 +232,8 @@ impl ModelVariant {
                 fast_mem,
             });
         }
+        let kernel_tag = resolve_kernel_tag(schedule, kernel)?;
+        let k = if kernel_tag == "avx2" { Kernel::Avx2 } else { Kernel::Scalar };
         let compile_err = |e: anyhow::Error| VariantError::Compile {
             schedule: schedule.to_string(),
             message: e.to_string(),
@@ -180,7 +246,7 @@ impl ModelVariant {
                 "f32 per-connection stream interpreter".to_string(),
             ),
             ("f32", "fused") => {
-                let fused = FusedEngine::new(net, order);
+                let fused = FusedEngine::new(net, order).with_kernel(k);
                 let st = fused.program().stats().clone();
                 let summary = format!(
                     "fused schedule: {} conns -> {} macro-ops ({:.1} ops/macro-op, \
@@ -202,6 +268,7 @@ impl ModelVariant {
                 } else {
                     (TiledEngine::new(net, order, fast_mem).map_err(compile_err)?, None)
                 };
+                let engine = engine.with_kernel(k);
                 let st = engine.program().stats().clone();
                 let tuned = match &autotune {
                     Some(r) => format!(" (autotuned, predicted {} I/Os)", r.chosen_predicted()),
@@ -256,7 +323,7 @@ impl ModelVariant {
             ModelVariant::new(name, engine)
         };
         variant.precision = prec_tag;
-        variant = variant.with_schedule(sched_tag);
+        variant = variant.with_schedule(sched_tag).with_kernel_tag(kernel_tag);
         if let Some(st) = fusion {
             variant = variant.with_fusion_stats(st);
         }
@@ -320,6 +387,15 @@ impl ModelVariant {
     /// [`sharded`]: ModelVariant::sharded
     pub fn with_precision(mut self, precision: &'static str) -> ModelVariant {
         self.precision = precision;
+        self
+    }
+
+    /// Tag the microkernel path the serving engine dispatches to
+    /// ("scalar" or "avx2"; see `exec::simd`). [`ModelVariant::build`]
+    /// sets it from the resolved `--kernel` knob; hand-assembled
+    /// variants default to "scalar".
+    pub fn with_kernel_tag(mut self, kernel: &'static str) -> ModelVariant {
+        self.kernel = kernel;
         self
     }
 
@@ -490,12 +566,49 @@ mod tests {
     #[test]
     fn labels_encode_composition_point() {
         let v = ModelVariant::new("m", Arc::new(FakeEngine("stream")));
-        assert_eq!(v.label(), "interp-f32-w1");
+        assert_eq!(v.label(), "interp-f32-w1-scalar");
         let q = ModelVariant::new("q", Arc::new(FakeEngine("quant-stream"))).with_precision("i8");
-        assert_eq!(q.label(), "interp-i8-w1");
+        assert_eq!(q.label(), "interp-i8-w1-scalar");
         let sf = ModelVariant::sharded("sf", Arc::new(FakeEngine("fused-stream")), 4)
             .with_schedule("fused");
-        assert_eq!(sf.label(), "fused-f32-w4");
+        assert_eq!(sf.label(), "fused-f32-w4-scalar");
+        let kf = ModelVariant::sharded("kf", Arc::new(FakeEngine("fused-stream")), 4)
+            .with_schedule("fused")
+            .with_kernel_tag("avx2");
+        assert_eq!(kf.label(), "fused-f32-w4-avx2");
+    }
+
+    #[test]
+    fn kernel_knob_resolution() {
+        // auto: compiled schedules get the best supported kernel,
+        // interp is honestly tagged scalar (its per-connection loop has
+        // no microkernel layer).
+        let best = Kernel::auto().name();
+        assert_eq!(resolve_kernel_tag("fused", "auto"), Ok(best));
+        assert_eq!(resolve_kernel_tag("tiled", "auto"), Ok(best));
+        assert_eq!(resolve_kernel_tag("interp", "auto"), Ok("scalar"));
+        // scalar is always accepted.
+        for schedule in ["interp", "fused", "tiled"] {
+            assert_eq!(resolve_kernel_tag(schedule, "scalar"), Ok("scalar"));
+        }
+        // Explicit avx2 requires a compiled schedule...
+        assert!(matches!(
+            resolve_kernel_tag("interp", "avx2"),
+            Err(VariantError::KernelRequiresCompiled { .. })
+        ));
+        // ...and runtime CPU support (exact outcome depends on the host).
+        match resolve_kernel_tag("fused", "avx2") {
+            Ok("avx2") => assert!(simd::avx2_supported()),
+            Err(VariantError::KernelUnsupported { kernel }) => {
+                assert!(!simd::avx2_supported());
+                assert_eq!(kernel, "avx2");
+            }
+            other => panic!("unexpected resolution: {other:?}"),
+        }
+        assert!(matches!(
+            resolve_kernel_tag("fused", "sse9"),
+            Err(VariantError::UnknownKernel(k)) if k == "sse9"
+        ));
     }
 
     /// The deprecated constructors stay as thin shims until external
@@ -524,63 +637,94 @@ mod tests {
         let net = random_mlp(&MlpSpec::new(2, 10, 0.4), &mut rng);
         let order = two_optimal_order(&net);
 
-        let v = ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0).unwrap();
-        assert_eq!((v.label().as_str(), v.route().name()), ("interp-f32-w1", "stream"));
+        let v = ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0, "auto").unwrap();
+        assert_eq!(
+            (v.label().as_str(), v.route().name()),
+            ("interp-f32-w1-scalar", "stream")
+        );
         assert!(!v.summary.is_empty());
 
-        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "scalar").unwrap();
         assert_eq!(v.route().name(), "fused-stream");
+        assert_eq!(v.kernel, "scalar");
         assert!(v.fusion.is_some(), "fused build carries stats");
 
-        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1, 0).unwrap();
-        assert_eq!((v.label().as_str(), v.precision), ("interp-i8-w1", "i8"));
+        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1, 0, "auto").unwrap();
+        assert_eq!((v.label().as_str(), v.precision), ("interp-i8-w1-scalar", "i8"));
 
-        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 3, 0).unwrap();
-        assert_eq!(v.label(), "fused-f32-w3");
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 3, 0, "scalar").unwrap();
+        assert_eq!(v.label(), "fused-f32-w3-scalar");
         assert_eq!(v.route().name(), "sharded");
         assert!(v.shard_timings.is_some() && v.fusion.is_some());
 
+        // The kernel knob: auto resolves to the best supported path on
+        // the compiled schedules and the label records it; an explicit
+        // avx2 only ever builds on a CPU that has it.
+        let v = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "auto").unwrap();
+        assert_eq!(v.kernel, Kernel::auto().name());
+        assert_eq!(v.label(), format!("fused-f32-w1-{}", v.kernel));
+        match ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "avx2") {
+            Ok(v) => {
+                assert!(simd::avx2_supported());
+                assert_eq!((v.kernel, v.label().as_str()), ("avx2", "fused-f32-w1-avx2"));
+            }
+            Err(VariantError::KernelUnsupported { .. }) => assert!(!simd::avx2_supported()),
+            Err(e) => panic!("unexpected rejection: {e}"),
+        }
+
         // The tiled schedule, with an explicit budget and autotuned.
-        let v = ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 6).unwrap();
-        assert_eq!((v.label().as_str(), v.route().name()), ("tiled-f32-w1", "tiled-stream"));
+        let v = ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 6, "scalar").unwrap();
+        assert_eq!(
+            (v.label().as_str(), v.route().name()),
+            ("tiled-f32-w1-scalar", "tiled-stream")
+        );
         assert_eq!(v.tiled.as_ref().unwrap().m, 6);
         assert!(v.summary.contains("segments"), "{}", v.summary);
-        let v = ModelVariant::build("m", &net, &order, "tiled", "f32", 2, 0).unwrap();
-        assert_eq!(v.label(), "tiled-f32-w2");
+        let v = ModelVariant::build("m", &net, &order, "tiled", "f32", 2, 0, "auto").unwrap();
+        assert_eq!(v.label(), format!("tiled-f32-w2-{}", Kernel::auto().name()));
         assert!(v.summary.contains("autotuned"), "{}", v.summary);
         assert!(v.shard_timings.is_some() && v.tiled.is_some());
 
         // The sharded + i8 composition keeps its precision tag.
-        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2, 0).unwrap();
+        let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2, 0, "auto").unwrap();
         assert_eq!((v.precision, v.workers), ("i8", 2));
 
         // Invalid points are rejected with structured errors, not
         // silently coerced (and not stringly typed).
         assert!(matches!(
-            ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0),
+            ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0, "auto"),
             Err(VariantError::Incompatible { .. })
         ));
         assert!(matches!(
-            ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0),
+            ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0, "auto"),
             Err(VariantError::Incompatible { .. })
         ));
         assert!(matches!(
-            ModelVariant::build("m", &net, &order, "jit", "f32", 1, 0),
+            ModelVariant::build("m", &net, &order, "jit", "f32", 1, 0, "auto"),
             Err(VariantError::UnknownSchedule(s)) if s == "jit"
         ));
         assert!(matches!(
-            ModelVariant::build("m", &net, &order, "interp", "f16", 1, 0),
+            ModelVariant::build("m", &net, &order, "interp", "f16", 1, 0, "auto"),
             Err(VariantError::UnknownPrecision(p)) if p == "f16"
         ));
         // --fast-mem is tiled-only, and a sub-minimum budget fails in
         // the tiled compiler.
         assert!(matches!(
-            ModelVariant::build("m", &net, &order, "interp", "f32", 1, 64),
+            ModelVariant::build("m", &net, &order, "interp", "f32", 1, 64, "auto"),
             Err(VariantError::FastMemRequiresTiled { fast_mem: 64, .. })
         ));
         assert!(matches!(
-            ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 2),
+            ModelVariant::build("m", &net, &order, "tiled", "f32", 1, 2, "auto"),
             Err(VariantError::Compile { .. })
+        ));
+        // The kernel knob's own rejections.
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0, "avx2"),
+            Err(VariantError::KernelRequiresCompiled { .. })
+        ));
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "sse9"),
+            Err(VariantError::UnknownKernel(k)) if k == "sse9"
         ));
     }
 

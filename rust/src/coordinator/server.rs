@@ -113,6 +113,7 @@ impl Server {
         if let Some(stats) = &variant.tiled {
             self.metrics.link_tiled_stats(&name, stats.clone());
         }
+        self.metrics.link_kernel(&name, variant.kernel);
 
         let (tx, rx) = mpsc::channel::<QueueMsg>();
         let depth = Arc::new(AtomicUsize::new(0));
@@ -697,7 +698,8 @@ mod tests {
         let mut rng = Pcg64::seed_from(0x71D5);
         let net = random_mlp(&MlpSpec::new(2, 8, 0.5), &mut rng);
         let order = two_optimal_order(&net);
-        let variant = ModelVariant::build("t", &net, &order, "tiled", "f32", 1, 5).unwrap();
+        let variant =
+            ModelVariant::build("t", &net, &order, "tiled", "f32", 1, 5, "scalar").unwrap();
         let mut router = Router::new();
         router.register(variant);
         let server = Server::start(router, ServerConfig::default());
@@ -708,6 +710,11 @@ mod tests {
         let snap = h.metrics_snapshot();
         assert_eq!(snap.path(&["tiled", "t", "m"]).unwrap().as_u64(), Some(5));
         assert!(snap.path(&["tiled", "t", "segments"]).is_some());
+        assert_eq!(
+            snap.path(&["kernel", "t"]).unwrap().as_str(),
+            Some("scalar"),
+            "dispatched kernel is visible in the snapshot"
+        );
     }
 
     /// Adds a constant; distinguishable from Doubler on the same input.

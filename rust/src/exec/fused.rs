@@ -20,11 +20,14 @@
 //!   contiguous `idx`/`weights` pools plus an offset table, so the
 //!   dispatch loop is branch-light (one kind test per *run*, not per
 //!   connection).
-//! * Execution uses batch-column-tiled microkernels: fixed-width
-//!   [`LANES`]-lane inner loops over row chunks with a scalar tail. A
-//!   DotRun keeps its destination chunk in local accumulators across the
-//!   whole run, so a neuron's row is written once per run instead of
-//!   once per connection; an AxpyRun keeps the source chunk in locals.
+//! * Execution uses the batch-column-tiled microkernels of
+//!   [`super::simd`]: fixed-width [`LANES`]-lane inner loops over row
+//!   chunks with a scalar tail, runtime-dispatched between the portable
+//!   generic path and explicit AVX2 (selected once per engine via
+//!   [`Kernel`]). A DotRun keeps its destination chunk in local
+//!   accumulators across the whole run, so a neuron's row is written
+//!   once per run instead of once per connection; an AxpyRun keeps the
+//!   source chunk in locals.
 //!
 //! **Bit-identity.** Greedy fusion partitions the stream into contiguous
 //! segments executed in stream order, and within a segment each batch
@@ -32,23 +35,23 @@
 //! (columns never mix, and no run reads a row it writes: self-loops are
 //! rejected at graph construction, and `dst_finish` can only sit on the
 //! final record of a same-dst run). The fused engine is therefore
-//! bit-identical to [`StreamingEngine`] — enforced over seeded random
-//! nets by `tests/fused.rs` and `tests/properties.rs`.
+//! bit-identical to [`StreamingEngine`] on every kernel — enforced over
+//! seeded random nets by `tests/fused.rs`, `tests/simd.rs`, and
+//! `tests/properties.rs`.
 //!
 //! [`StreamingEngine`]: super::stream::StreamingEngine
 
 use super::batch::BatchMatrix;
 use super::scratch::ScratchPool;
+use super::simd::{self, Kernel};
 use super::stream::{StreamOp, StreamProgram};
-use super::{init_values, relu_row, Engine};
+use super::{init_values, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
 use crate::runtime::mmap::Pool;
 use crate::util::json::Json;
 
-/// Batch-column tile width of the microkernels. Eight f32 lanes fill one
-/// AVX2 register; the accumulator array stays in registers across a run.
-pub const LANES: usize = 8;
+pub use super::simd::LANES;
 
 /// Per-macro-op control bits (`ctrl` pool). Shared with the cache-tiled
 /// engine ([`super::tiled`]), whose per-segment macro-ops use the same
@@ -479,8 +482,21 @@ impl FusedProgram {
     /// Execute into caller-provided buffers (mirror of
     /// [`StreamProgram::run_into`]; `values` may hold stale data — the
     /// prologue overwrites every row, which is what lets [`FusedEngine`]
-    /// recycle scratch).
+    /// recycle scratch). Shorthand for [`Self::run_into_with`] on the
+    /// scalar reference kernel.
     pub fn run_into(&self, inputs: &BatchMatrix, values: &mut BatchMatrix, out: &mut BatchMatrix) {
+        self.run_into_with(Kernel::Scalar, inputs, values, out);
+    }
+
+    /// Execute with an explicit microkernel (see [`super::simd`]). All
+    /// kernels are bit-identical, so the choice only affects speed.
+    pub fn run_into_with(
+        &self,
+        kernel: Kernel,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
         let batch = inputs.batch();
         assert_eq!(inputs.rows(), self.input_ids.len(), "input row count");
         assert_eq!(values.rows(), self.n_neurons);
@@ -499,7 +515,8 @@ impl FusedProgram {
             let hi = self.bounds[m + 1] as usize;
             let pivot = self.pivots[m] as usize;
             if self.ctrl[m] & KIND_AXPY != 0 {
-                axpy_run(
+                simd::axpy_run(
+                    kernel,
                     data,
                     batch,
                     pivot,
@@ -508,7 +525,8 @@ impl FusedProgram {
                     &self.flags[lo..hi],
                 );
             } else {
-                dot_run(
+                simd::dot_run(
+                    kernel,
                     data,
                     batch,
                     pivot,
@@ -605,100 +623,6 @@ pub(crate) fn fuse_runs(
     }
 }
 
-/// Gather-dot microkernel: `dst += Σ_k w_k · src_k` over the batch row,
-/// [`LANES`] columns at a time. The destination chunk lives in a local
-/// accumulator array across the whole run — one read and one write of
-/// the dst row per run instead of one per connection. No src can alias
-/// dst (self-loops are rejected at graph construction), so caching the
-/// accumulator is observationally identical to the interpreter. Row
-/// indices may be global neuron ids (this module) or per-segment slot
-/// ids ([`super::tiled`]) — the kernel only requires them in-bounds and
-/// non-aliasing.
-pub(crate) fn dot_run(
-    data: &mut [f32],
-    batch: usize,
-    dst: usize,
-    srcs: &[u32],
-    weights: &[f32],
-    relu_after: bool,
-) {
-    let dbase = dst * batch;
-    let mut c = 0;
-    while c + LANES <= batch {
-        let mut acc = [0.0f32; LANES];
-        acc.copy_from_slice(&data[dbase + c..dbase + c + LANES]);
-        for (k, &w) in weights.iter().enumerate() {
-            let sbase = srcs[k] as usize * batch + c;
-            let src = &data[sbase..sbase + LANES];
-            for (a, &x) in acc.iter_mut().zip(src) {
-                *a += w * x;
-            }
-        }
-        if relu_after {
-            relu_row(&mut acc);
-        }
-        data[dbase + c..dbase + c + LANES].copy_from_slice(&acc);
-        c += LANES;
-    }
-    // Scalar tail (batch % LANES columns), same accumulator discipline.
-    while c < batch {
-        let mut a = data[dbase + c];
-        for (k, &w) in weights.iter().enumerate() {
-            a += w * data[srcs[k] as usize * batch + c];
-        }
-        if relu_after && a < 0.0 {
-            a = 0.0;
-        }
-        data[dbase + c] = a;
-        c += 1;
-    }
-}
-
-/// Scatter-AXPY microkernel: `dsts[k] += w_k · src` over the batch row,
-/// [`LANES`] columns at a time with the source chunk held in locals (no
-/// dst can alias src — no self-loops). Per-element flags fire the
-/// mid-run ReLU exactly where the interpreter would. Like [`dot_run`],
-/// shared with the cache-tiled engine over slot indices.
-pub(crate) fn axpy_run(
-    data: &mut [f32],
-    batch: usize,
-    src: usize,
-    dsts: &[u32],
-    weights: &[f32],
-    flags: &[u8],
-) {
-    const RELU: u8 = FLAG_FINISH | FLAG_HIDDEN;
-    let sbase = src * batch;
-    let mut c = 0;
-    while c + LANES <= batch {
-        let mut s = [0.0f32; LANES];
-        s.copy_from_slice(&data[sbase + c..sbase + c + LANES]);
-        for (k, &w) in weights.iter().enumerate() {
-            let dbase = dsts[k] as usize * batch + c;
-            let dst = &mut data[dbase..dbase + LANES];
-            for (y, &x) in dst.iter_mut().zip(&s) {
-                *y += w * x;
-            }
-            if flags[k] & RELU == RELU {
-                relu_row(dst);
-            }
-        }
-        c += LANES;
-    }
-    while c < batch {
-        let s = data[sbase + c];
-        for (k, &w) in weights.iter().enumerate() {
-            let di = dsts[k] as usize * batch + c;
-            let mut v = data[di] + w * s;
-            if flags[k] & RELU == RELU && v < 0.0 {
-                v = 0.0;
-            }
-            data[di] = v;
-        }
-        c += 1;
-    }
-}
-
 /// How many values buffers a [`FusedEngine`] keeps warm. Matches the
 /// typical batch-shard fan-out; beyond it, extra concurrent calls fall
 /// back to a fresh allocation.
@@ -714,6 +638,7 @@ pub struct FusedEngine {
     program: FusedProgram,
     scratch: ScratchPool,
     name: &'static str,
+    kernel: Kernel,
 }
 
 impl FusedEngine {
@@ -721,12 +646,16 @@ impl FusedEngine {
         FusedEngine::from_program(FusedProgram::compile(net, order))
     }
 
-    /// Wrap an already-compiled fused program.
+    /// Wrap an already-compiled fused program. The microkernel defaults
+    /// to the best one the CPU supports ([`Kernel::auto`]) — safe
+    /// because every kernel is bit-identical; override with
+    /// [`Self::with_kernel`].
     pub fn from_program(program: FusedProgram) -> FusedEngine {
         FusedEngine {
             program,
             scratch: ScratchPool::new(SCRATCH_POOL_CAP),
             name: "fused-stream",
+            kernel: Kernel::auto(),
         }
     }
 
@@ -736,6 +665,18 @@ impl FusedEngine {
             name,
             ..FusedEngine::new(net, order)
         }
+    }
+
+    /// Same engine dispatching to an explicit microkernel (selected
+    /// once here; `infer` never re-detects).
+    pub fn with_kernel(mut self, kernel: Kernel) -> FusedEngine {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The microkernel `infer` dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     pub fn program(&self) -> &FusedProgram {
@@ -748,7 +689,7 @@ impl Engine for FusedEngine {
         let batch = inputs.batch();
         let mut values = self.scratch.take(self.program.n_neurons(), batch);
         let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
-        self.program.run_into(inputs, &mut values, &mut out);
+        self.program.run_into_with(self.kernel, inputs, &mut values, &mut out);
         self.scratch.put(values);
         out
     }

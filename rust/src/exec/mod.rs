@@ -22,6 +22,11 @@
 //! * [`fused`] — the block-compiled variant of the stream: the op stream
 //!   is run-length-fused offline into DotRun/AxpyRun macro-ops executed
 //!   by batch-tiled microkernels, **bit-identical** to [`stream`].
+//! * [`simd`] — the microkernel layer under [`fused`] and [`tiled`]: the
+//!   gather-dot and scatter-AXPY inner loops, runtime-dispatched between
+//!   a portable generic path and explicit AVX2 intrinsics (selected once
+//!   per engine via `simd::Kernel`; every kernel is **bit-identical** to
+//!   the scalar reference, so dispatch only affects speed).
 //! * [`tiled`] — the cache-tiled slot-compiled variant: a next-use
 //!   liveness pass partitions the op stream into segments whose live
 //!   neuron set fits an `M`-slot fast-memory budget; each segment runs
@@ -49,7 +54,10 @@
 //! — the i8 stream is already compressed into its own record format, so
 //! `--precision i8` with a compiled schedule is rejected at the CLI.
 //! The tiled schedule adds the `--fast-mem` knob (slots `M`, or auto =
-//! simulator-driven autotune).
+//! simulator-driven autotune), and the compiled schedules add the
+//! `--kernel` knob (auto | scalar | avx2) selecting the [`simd`]
+//! microkernel — `avx2` is rejected with a structured error on CPUs
+//! without it, and every accepted combination computes identical bits.
 
 pub mod batch;
 pub mod csr;
@@ -59,6 +67,7 @@ pub mod layerwise;
 pub mod parallel;
 pub mod quant;
 pub mod scratch;
+pub mod simd;
 pub mod stream;
 pub mod tiled;
 

@@ -1,0 +1,100 @@
+//! AVX2 microkernels (`core::arch::x86_64`), selected at run time.
+//!
+//! Each [`LANES`]-column chunk is one 256-bit vector; tails run the
+//! shared scalar spans from [`super::generic`]. Only vertical lane-wise
+//! operations are used, in the same stream order as the scalar
+//! reference — per-lane `mul` then `add` (no FMA: fusing the rounding
+//! step would change the bits) and ReLU as `lane < 0.0 ? 0.0 : lane`
+//! via compare-and-select, the vector form of the scalar test (so
+//! `-0.0` and NaN pass through identically; `max_ps` would not
+//! preserve either). Each lane therefore reproduces the scalar
+//! reference bit-for-bit.
+
+use super::generic;
+use super::{LANES, RELU_MASK};
+use core::arch::x86_64::*;
+
+/// Vector ReLU matching the scalar `if v < 0.0 { v = 0.0 }` exactly:
+/// strictly-negative lanes become +0.0, everything else — including
+/// `-0.0` and NaN — passes through unchanged.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_ps(v: __m256) -> __m256 {
+    let zero = _mm256_setzero_ps();
+    let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(v, zero);
+    _mm256_blendv_ps(v, zero, neg)
+}
+
+/// AVX2 gather-dot.
+///
+/// # Safety
+/// The CPU must support AVX2, and every row index (`dst`, `srcs`) must
+/// be in-bounds for `data` at row stride `batch` — guaranteed by the
+/// compiled `FusedProgram`/`TiledProgram`, which validate indices
+/// against the value-block height at build time.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_run(
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    weights: &[f32],
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    let ptr = data.as_mut_ptr();
+    let mut c = 0;
+    while c + LANES <= batch {
+        debug_assert!(dbase + c + LANES <= data.len());
+        let mut acc = _mm256_loadu_ps(ptr.add(dbase + c) as *const f32);
+        for (k, &w) in weights.iter().enumerate() {
+            let sbase = srcs[k] as usize * batch + c;
+            debug_assert!(sbase + LANES <= data.len());
+            let x = _mm256_loadu_ps(ptr.add(sbase) as *const f32);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(w), x));
+        }
+        if relu_after {
+            acc = relu_ps(acc);
+        }
+        _mm256_storeu_ps(ptr.add(dbase + c), acc);
+        c += LANES;
+    }
+    generic::dot_span(data, batch, c, batch, dst, srcs, weights, relu_after);
+}
+
+/// AVX2 scatter-AXPY.
+///
+/// # Safety
+/// Same contract as [`dot_run`] (AVX2 support plus in-bounds `src` and
+/// `dsts` rows). AxpyRun destinations never alias the source pivot —
+/// another compiled-program invariant — so the cached source vector
+/// stays valid across the scatter.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn axpy_run(
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    weights: &[f32],
+    flags: &[u8],
+) {
+    let sbase = src * batch;
+    let ptr = data.as_mut_ptr();
+    let mut c = 0;
+    while c + LANES <= batch {
+        debug_assert!(sbase + c + LANES <= data.len());
+        let s = _mm256_loadu_ps(ptr.add(sbase + c) as *const f32);
+        for (k, &w) in weights.iter().enumerate() {
+            let dbase = dsts[k] as usize * batch + c;
+            debug_assert!(dbase + LANES <= data.len());
+            let mut d = _mm256_loadu_ps(ptr.add(dbase) as *const f32);
+            d = _mm256_add_ps(d, _mm256_mul_ps(_mm256_set1_ps(w), s));
+            if flags[k] & RELU_MASK == RELU_MASK {
+                d = relu_ps(d);
+            }
+            _mm256_storeu_ps(ptr.add(dbase), d);
+        }
+        c += LANES;
+    }
+    generic::axpy_span(data, batch, c, batch, src, dsts, weights, flags);
+}

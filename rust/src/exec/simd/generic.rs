@@ -1,0 +1,126 @@
+//! Portable microkernels: [`LANES`]-column chunk loops plus the scalar
+//! span tails that every kernel — this one and the AVX2 one — shares.
+//!
+//! The span functions are **the** scalar reference implementation: one
+//! batch column at a time, accumulating `w·x` in stream order. The
+//! chunked loops must match them bit-for-bit on every column (pinned by
+//! the unit tests in [`super`]), which holds because columns never mix
+//! and each lane performs the same mul/add sequence.
+
+use super::LANES;
+use crate::exec::relu_row;
+
+/// Scalar gather-dot over batch columns `lo..hi` — the reference
+/// implementation all kernels fall back to for tails.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot_span(
+    data: &mut [f32],
+    batch: usize,
+    lo: usize,
+    hi: usize,
+    dst: usize,
+    srcs: &[u32],
+    weights: &[f32],
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    for c in lo..hi {
+        let mut a = data[dbase + c];
+        for (k, &w) in weights.iter().enumerate() {
+            a += w * data[srcs[k] as usize * batch + c];
+        }
+        if relu_after && a < 0.0 {
+            a = 0.0;
+        }
+        data[dbase + c] = a;
+    }
+}
+
+/// Scalar scatter-AXPY over batch columns `lo..hi` (reference, like
+/// [`dot_span`]); per-element flags fire the mid-run ReLU.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn axpy_span(
+    data: &mut [f32],
+    batch: usize,
+    lo: usize,
+    hi: usize,
+    src: usize,
+    dsts: &[u32],
+    weights: &[f32],
+    flags: &[u8],
+) {
+    let sbase = src * batch;
+    for c in lo..hi {
+        let s = data[sbase + c];
+        for (k, &w) in weights.iter().enumerate() {
+            let di = dsts[k] as usize * batch + c;
+            let mut v = data[di] + w * s;
+            if flags[k] & super::RELU_MASK == super::RELU_MASK && v < 0.0 {
+                v = 0.0;
+            }
+            data[di] = v;
+        }
+    }
+}
+
+/// Portable gather-dot: [`LANES`]-column chunks with a local
+/// accumulator array (kept in registers across the run), then the
+/// shared scalar span for the `batch % LANES` tail.
+pub(crate) fn dot_run(
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    weights: &[f32],
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    let mut c = 0;
+    while c + LANES <= batch {
+        let mut acc = [0.0f32; LANES];
+        acc.copy_from_slice(&data[dbase + c..dbase + c + LANES]);
+        for (k, &w) in weights.iter().enumerate() {
+            let sbase = srcs[k] as usize * batch + c;
+            let src = &data[sbase..sbase + LANES];
+            for (a, &x) in acc.iter_mut().zip(src) {
+                *a += w * x;
+            }
+        }
+        if relu_after {
+            relu_row(&mut acc);
+        }
+        data[dbase + c..dbase + c + LANES].copy_from_slice(&acc);
+        c += LANES;
+    }
+    dot_span(data, batch, c, batch, dst, srcs, weights, relu_after);
+}
+
+/// Portable scatter-AXPY: [`LANES`]-column chunks over a cached source
+/// row, then the shared scalar span for the tail.
+pub(crate) fn axpy_run(
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    weights: &[f32],
+    flags: &[u8],
+) {
+    let sbase = src * batch;
+    let mut c = 0;
+    while c + LANES <= batch {
+        let mut s = [0.0f32; LANES];
+        s.copy_from_slice(&data[sbase + c..sbase + c + LANES]);
+        for (k, &w) in weights.iter().enumerate() {
+            let dbase = dsts[k] as usize * batch + c;
+            let dst = &mut data[dbase..dbase + LANES];
+            for (y, &x) in dst.iter_mut().zip(&s) {
+                *y += w * x;
+            }
+            if flags[k] & super::RELU_MASK == super::RELU_MASK {
+                relu_row(dst);
+            }
+        }
+        c += LANES;
+    }
+    axpy_span(data, batch, c, batch, src, dsts, weights, flags);
+}

@@ -1,0 +1,291 @@
+//! Runtime-dispatched SIMD microkernels for the compiled engines.
+//!
+//! [`super::fused`] and [`super::tiled`] execute their macro-op streams
+//! through exactly two inner loops: the gather-dot [`dot_run`] and the
+//! scatter-AXPY [`axpy_run`]. This module owns those loops and lets an
+//! engine pick their implementation once at build time:
+//!
+//! * [`generic`] — portable Rust: a [`LANES`]-column chunk loop with
+//!   local accumulator arrays plus a scalar tail. The tail loops
+//!   (`dot_span` / `axpy_span`) are the single scalar reference
+//!   implementation — every kernel, this one and the AVX2 one, ends in
+//!   them for the `batch % LANES` columns, so no kernel can diverge
+//!   from the reference on the tail.
+//! * [`avx2`] (x86-64 only) — explicit `core::arch::x86_64` intrinsics:
+//!   one 256-bit vector per [`LANES`]-column chunk, same shared scalar
+//!   tail. Gated behind `is_x86_feature_detected!("avx2")` at run time,
+//!   never at compile time, so one binary serves every CPU.
+//!
+//! **Bit-identity invariant.** Batch columns never mix, each lane
+//! accumulates `acc + w·x` in stream order with plain f32 mul/add (no
+//! FMA — fusing the rounding step would change the bits), and ReLU is
+//! a compare-and-select against zero exactly like the scalar `< 0.0`
+//! test (`-0.0` and NaN pass through identically). Every kernel
+//! therefore produces the same bits as the scalar reference on every
+//! input — pinned by the unit tests here and `tests/simd.rs`, and by
+//! running the 50-net differential and golden-trace suites per kernel.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+pub(crate) mod generic;
+
+/// Batch-column tile width of the microkernels. Eight f32 lanes fill
+/// one 256-bit AVX2 register; the accumulator array stays in registers
+/// across a run. Re-exported as `exec::fused::LANES`.
+pub const LANES: usize = 8;
+
+/// ReLU fires on an AxpyRun element when both per-element flag bits are
+/// set (`dst_finish` and `dst_is_hidden` — see `exec::fused`).
+pub(crate) const RELU_MASK: u8 =
+    crate::exec::fused::FLAG_FINISH | crate::exec::fused::FLAG_HIDDEN;
+
+/// A microkernel implementation, selected once at engine build and
+/// shared by `FusedEngine` and `TiledEngine`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable chunk+tail loops (the scalar reference path).
+    Scalar,
+    /// 256-bit AVX2 intrinsics (x86-64 with runtime AVX2 support).
+    Avx2,
+}
+
+impl Kernel {
+    /// The best kernel this CPU supports — the `--kernel auto` choice.
+    pub fn auto() -> Kernel {
+        if avx2_supported() {
+            Kernel::Avx2
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// Parse a `--kernel` knob value ("auto" resolves through
+    /// [`Kernel::auto`]). "avx2" parses even on CPUs without AVX2: the
+    /// dispatcher falls back to the generic path rather than faulting,
+    /// and rejecting the knob with a structured error is the variant
+    /// builder's job (where the request can be reported back).
+    pub fn parse(name: &str) -> Option<Kernel> {
+        match name {
+            "auto" => Some(Kernel::auto()),
+            "scalar" => Some(Kernel::Scalar),
+            "avx2" => Some(Kernel::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Tag used in variant labels, metrics, and bench series.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this CPU can execute the kernel natively (the dispatcher
+    /// silently falls back to [`Kernel::Scalar`] when it cannot).
+    pub fn is_supported(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Avx2 => avx2_supported(),
+        }
+    }
+}
+
+/// Runtime AVX2 detection. The standard library caches the CPUID probe,
+/// so callers may query freely.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_supported() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Runtime AVX2 detection (never available off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_supported() -> bool {
+    false
+}
+
+/// Gather-dot microkernel dispatch: `dst += Σ_k w_k · src_k` over every
+/// batch column, with an optional run-end ReLU. `data` is a row-major
+/// `rows × batch` value block; `dst`/`srcs` rows must be in-bounds and
+/// non-aliasing (`FusedProgram`/`TiledProgram` validate this when they
+/// are built, which is why this stays crate-internal).
+#[inline]
+pub(crate) fn dot_run(
+    kernel: Kernel,
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    weights: &[f32],
+    relu_after: bool,
+) {
+    debug_assert_eq!(srcs.len(), weights.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_supported() => {
+            // SAFETY: AVX2 availability was just confirmed, and the
+            // compiled program validated every row index against the
+            // value-block height (same contract the scalar path's slice
+            // indexing enforces).
+            unsafe { avx2::dot_run(data, batch, dst, srcs, weights, relu_after) }
+        }
+        _ => generic::dot_run(data, batch, dst, srcs, weights, relu_after),
+    }
+}
+
+/// Scatter-AXPY microkernel dispatch: `dsts[k] += w_k · src` over every
+/// batch column, with per-element flags firing the mid-run ReLU. Same
+/// index contract (and same crate-internal visibility) as [`dot_run`].
+#[inline]
+pub(crate) fn axpy_run(
+    kernel: Kernel,
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    weights: &[f32],
+    flags: &[u8],
+) {
+    debug_assert_eq!(dsts.len(), weights.len());
+    debug_assert_eq!(dsts.len(), flags.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_supported() => {
+            // SAFETY: see dot_run.
+            unsafe { avx2::axpy_run(data, batch, src, dsts, weights, flags) }
+        }
+        _ => generic::axpy_run(data, batch, src, dsts, weights, flags),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    const ROWS: usize = 6;
+
+    fn random_block(batch: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from(seed);
+        (0..ROWS * batch).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// A small dot-run scenario exercising ReLU and repeated sources.
+    fn dot_case() -> (Vec<u32>, Vec<f32>) {
+        (vec![0, 2, 4, 2], vec![0.75, -1.5, 2.25, 0.5])
+    }
+
+    /// An axpy-run scenario with a mid-run ReLU (flags 0b11) element.
+    fn axpy_case() -> (Vec<u32>, Vec<f32>, Vec<u8>) {
+        (vec![1, 3, 5], vec![-0.5, 1.25, 2.0], vec![0, RELU_MASK, 1])
+    }
+
+    #[test]
+    fn parse_names_and_detection_agree() {
+        assert_eq!(Kernel::parse("scalar"), Some(Kernel::Scalar));
+        assert_eq!(Kernel::parse("avx2"), Some(Kernel::Avx2));
+        assert_eq!(Kernel::parse("sse9"), None);
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+        assert!(Kernel::Scalar.is_supported());
+        let auto = Kernel::parse("auto").unwrap();
+        assert_eq!(auto, Kernel::auto());
+        assert_eq!(auto.name(), if avx2_supported() { "avx2" } else { "scalar" });
+        assert!(auto.is_supported(), "auto must always resolve to a usable kernel");
+    }
+
+    /// Satellite pin: the chunked generic kernel must match the scalar
+    /// span reference bit-for-bit at every batch size around the lane
+    /// width — 0..=2·LANES+1 covers empty, sub-lane, exact-lane, and
+    /// tail-only shapes.
+    #[test]
+    fn chunked_generic_matches_span_reference() {
+        let (srcs, weights) = dot_case();
+        let (dsts, aw, flags) = axpy_case();
+        for batch in 0..=2 * LANES + 1 {
+            let mut a = random_block(batch, 0xD07 + batch as u64);
+            let mut b = a.clone();
+            generic::dot_run(&mut a, batch, 3, &srcs, &weights, true);
+            generic::dot_span(&mut b, batch, 0, batch, 3, &srcs, &weights, true);
+            assert_eq!(a, b, "dot chunk+tail vs span reference at batch {batch}");
+
+            let mut a = random_block(batch, 0xA49 + batch as u64);
+            let mut b = a.clone();
+            generic::axpy_run(&mut a, batch, 0, &dsts, &aw, &flags);
+            generic::axpy_span(&mut b, batch, 0, batch, 0, &dsts, &aw, &flags);
+            assert_eq!(a, b, "axpy chunk+tail vs span reference at batch {batch}");
+        }
+    }
+
+    /// The AVX2 kernels are bit-identical to the scalar path (skipped
+    /// gracefully on CPUs without AVX2).
+    #[test]
+    fn avx2_is_bit_identical_to_scalar() {
+        if !avx2_supported() {
+            eprintln!("skipping: CPU has no AVX2");
+            return;
+        }
+        let (srcs, weights) = dot_case();
+        let (dsts, aw, flags) = axpy_case();
+        for batch in 0..=2 * LANES + 1 {
+            for relu in [false, true] {
+                let mut s = random_block(batch, 0x5EED + batch as u64);
+                let mut v = s.clone();
+                dot_run(Kernel::Scalar, &mut s, batch, 3, &srcs, &weights, relu);
+                dot_run(Kernel::Avx2, &mut v, batch, 3, &srcs, &weights, relu);
+                assert_eq!(s, v, "dot kernels diverged at batch {batch}, relu {relu}");
+            }
+            let mut s = random_block(batch, 0xFACE + batch as u64);
+            let mut v = s.clone();
+            axpy_run(Kernel::Scalar, &mut s, batch, 0, &dsts, &aw, &flags);
+            axpy_run(Kernel::Avx2, &mut v, batch, 0, &dsts, &aw, &flags);
+            assert_eq!(s, v, "axpy kernels diverged at batch {batch}");
+        }
+    }
+
+    /// ReLU edge cases the compare-and-select must preserve: `-0.0`
+    /// stays `-0.0` (the scalar `< 0.0` test is false) and NaN passes
+    /// through, on every kernel.
+    #[test]
+    fn relu_preserves_negative_zero_and_nan() {
+        let kernels: &[Kernel] = if avx2_supported() {
+            &[Kernel::Scalar, Kernel::Avx2]
+        } else {
+            &[Kernel::Scalar]
+        };
+        let batch = LANES; // one full vector chunk, no tail
+        for &k in kernels {
+            let mut data = vec![0.0f32; ROWS * batch];
+            data[batch..2 * batch].copy_from_slice(&[0.0; LANES]);
+            // dst row 0 starts at -0.0; zero weight keeps the sum -0.0.
+            data[..batch].copy_from_slice(&[-0.0; LANES]);
+            dot_run(k, &mut data, batch, 0, &[1], &[0.0], true);
+            assert!(
+                data[..batch].iter().all(|v| v.to_bits() == (-0.0f32).to_bits()),
+                "{}: relu must keep -0.0",
+                k.name()
+            );
+            data[..batch].copy_from_slice(&[f32::NAN; LANES]);
+            dot_run(k, &mut data, batch, 0, &[1], &[0.0], true);
+            assert!(
+                data[..batch].iter().all(|v| v.is_nan()),
+                "{}: relu must pass NaN through",
+                k.name()
+            );
+        }
+    }
+
+    /// An unsupported kernel request falls back to the generic path
+    /// instead of faulting (the router rejects it with a structured
+    /// error before it gets here; this is the belt-and-braces layer).
+    #[test]
+    fn unsupported_kernel_falls_back_safely() {
+        let (srcs, weights) = dot_case();
+        let batch = LANES + 3;
+        let mut a = random_block(batch, 0xBEEF);
+        let mut b = a.clone();
+        dot_run(Kernel::Avx2, &mut a, batch, 3, &srcs, &weights, true);
+        dot_run(Kernel::Scalar, &mut b, batch, 3, &srcs, &weights, true);
+        assert_eq!(a, b, "Avx2 request must compute the same bits everywhere");
+    }
+}

@@ -20,8 +20,9 @@
 //!   **slot indices** into a small contiguous `(M−1) × batch` slot
 //!   block, and the segment's ops are run-length-fused into the same
 //!   DotRun/AxpyRun macro-ops as [`super::fused`], executed by the same
-//!   8-lane batch-column microkernels — over slot ids, so the entire
-//!   segment runs inside the slot block.
+//!   runtime-dispatched 8-lane batch-column microkernels
+//!   ([`super::simd`]) — over slot ids, so the entire segment runs
+//!   inside the slot block.
 //! * Segment boundaries are the paper's **explicit I/Os**: a batched
 //!   *fill* copies each live row from the backing value matrix into its
 //!   slot, and a batched *spill* copies back every written row that is
@@ -50,8 +51,9 @@
 //! [`FusedEngine`]: super::fused::FusedEngine
 
 use super::batch::BatchMatrix;
-use super::fused::{axpy_run, dot_run, fuse_runs, RunPools, DOT_RELU, KIND_AXPY};
+use super::fused::{fuse_runs, RunPools, DOT_RELU, KIND_AXPY};
 use super::scratch::ScratchPool;
+use super::simd::{self, Kernel};
 use super::stream::{StreamOp, StreamProgram};
 use super::{init_values, Engine};
 use crate::ffnn::graph::Ffnn;
@@ -496,9 +498,23 @@ impl TiledProgram {
     /// `slot_rows() × batch` fast-memory block. Both may hold stale data
     /// — the prologue overwrites every backing row and every slot is
     /// filled before its segment reads it, which is what lets
-    /// [`TiledEngine`] recycle both buffers.
+    /// [`TiledEngine`] recycle both buffers. Shorthand for
+    /// [`Self::run_into_with`] on the scalar reference kernel.
     pub fn run_into(
         &self,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_into_with(Kernel::Scalar, inputs, values, slots, out);
+    }
+
+    /// Execute with an explicit microkernel (see [`super::simd`]). All
+    /// kernels are bit-identical, so the choice only affects speed.
+    pub fn run_into_with(
+        &self,
+        kernel: Kernel,
         inputs: &BatchMatrix,
         values: &mut BatchMatrix,
         slots: &mut BatchMatrix,
@@ -530,7 +546,8 @@ impl TiledProgram {
                 let (elo, ehi) = (self.bounds[mi] as usize, self.bounds[mi + 1] as usize);
                 let pivot = self.pivots[mi] as usize;
                 if self.ctrl[mi] & KIND_AXPY != 0 {
-                    axpy_run(
+                    simd::axpy_run(
+                        kernel,
                         data,
                         batch,
                         pivot,
@@ -539,7 +556,8 @@ impl TiledProgram {
                         &self.flags[elo..ehi],
                     );
                 } else {
-                    dot_run(
+                    simd::dot_run(
+                        kernel,
                         data,
                         batch,
                         pivot,
@@ -574,6 +592,7 @@ pub struct TiledEngine {
     values_pool: ScratchPool,
     slots_pool: ScratchPool,
     name: &'static str,
+    kernel: Kernel,
 }
 
 impl TiledEngine {
@@ -593,13 +612,17 @@ impl TiledEngine {
         Ok((TiledEngine::from_program(program), report))
     }
 
-    /// Wrap an already-compiled tiled program.
+    /// Wrap an already-compiled tiled program. The microkernel defaults
+    /// to the best one the CPU supports ([`Kernel::auto`]) — safe
+    /// because every kernel is bit-identical; override with
+    /// [`Self::with_kernel`].
     pub fn from_program(program: TiledProgram) -> TiledEngine {
         TiledEngine {
             program,
             values_pool: ScratchPool::new(super::fused::SCRATCH_POOL_CAP),
             slots_pool: ScratchPool::new(super::fused::SCRATCH_POOL_CAP),
             name: "tiled-stream",
+            kernel: Kernel::auto(),
         }
     }
 
@@ -616,6 +639,18 @@ impl TiledEngine {
         })
     }
 
+    /// Same engine dispatching to an explicit microkernel (selected
+    /// once here; `infer` never re-detects).
+    pub fn with_kernel(mut self, kernel: Kernel) -> TiledEngine {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The microkernel `infer` dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
     pub fn program(&self) -> &TiledProgram {
         &self.program
     }
@@ -627,7 +662,8 @@ impl Engine for TiledEngine {
         let mut values = self.values_pool.take(self.program.n_neurons(), batch);
         let mut slots = self.slots_pool.take(self.program.slot_rows(), batch);
         let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
-        self.program.run_into(inputs, &mut values, &mut slots, &mut out);
+        self.program
+            .run_into_with(self.kernel, inputs, &mut values, &mut slots, &mut out);
         self.values_pool.put(values);
         self.slots_pool.put(slots);
         out

@@ -28,6 +28,34 @@ use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
+/// A load spec that cannot be run. Returned (not panicked) so CLI
+/// callers can print a clean error: `--qps 0` used to trip an
+/// `assert!` inside the arrival-schedule generator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LoadGenError {
+    /// Open-loop rate must be finite and > 0 (an exponential gap with
+    /// rate 0 or NaN has no meaning).
+    InvalidQps(f64),
+    /// A run of zero requests measures nothing.
+    ZeroRequests,
+    /// The target model is not deployed on the server.
+    UnknownModel(String),
+}
+
+impl std::fmt::Display for LoadGenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadGenError::InvalidQps(qps) => {
+                write!(f, "open-loop arrivals need a finite qps > 0 (got {qps})")
+            }
+            LoadGenError::ZeroRequests => write!(f, "load run needs at least one request"),
+            LoadGenError::UnknownModel(m) => write!(f, "loadgen: unknown model {m:?}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadGenError {}
+
 /// Arrival process of the synthetic workload.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Arrival {
@@ -106,9 +134,13 @@ pub fn input_for(seed: u64, i: u64, n_inputs: usize) -> Vec<f32> {
 
 /// Deterministic open-loop arrival offsets (seconds from run start):
 /// cumulative exponential gaps with rate `qps` — the Poisson process the
-/// open-loop driver replays.
-pub fn open_arrivals(qps: f64, n: usize, seed: u64) -> Vec<f64> {
-    assert!(qps > 0.0, "open-loop arrivals need qps > 0");
+/// open-loop driver replays. Rejects non-finite or non-positive rates
+/// (NaN/∞ would silently produce a garbage schedule; 0 would divide by
+/// zero) instead of panicking.
+pub fn open_arrivals(qps: f64, n: usize, seed: u64) -> Result<Vec<f64>, LoadGenError> {
+    if !(qps.is_finite() && qps > 0.0) {
+        return Err(LoadGenError::InvalidQps(qps));
+    }
     let mut rng = Pcg64::seed_from(seed);
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(n);
@@ -117,7 +149,7 @@ pub fn open_arrivals(qps: f64, n: usize, seed: u64) -> Vec<f64> {
         t += -(1.0 - rng.f64()).ln() / qps;
         out.push(t);
     }
-    out
+    Ok(out)
 }
 
 /// Per-request outcome classification.
@@ -313,12 +345,22 @@ impl LoadReport {
 /// request `i` at its precomputed arrival offset (sleeping between
 /// arrivals, never spinning) and replies are collected afterwards, so
 /// slow servers see the full offered load.
-pub fn run(handle: &ServerHandle, model: &str, spec: &LoadSpec) -> LoadReport {
+///
+/// Errors instead of panicking on specs that cannot run: zero requests,
+/// an unknown model, or (open loop) a non-finite or non-positive qps.
+pub fn run(
+    handle: &ServerHandle,
+    model: &str,
+    spec: &LoadSpec,
+) -> Result<LoadReport, LoadGenError> {
+    if spec.requests == 0 {
+        return Err(LoadGenError::ZeroRequests);
+    }
     let n_inputs = handle
         .n_inputs(model)
-        .unwrap_or_else(|| panic!("loadgen: unknown model {model:?}"));
+        .ok_or_else(|| LoadGenError::UnknownModel(model.to_string()))?;
     match spec.arrival {
-        Arrival::Closed { clients } => run_closed(handle, model, n_inputs, clients, spec),
+        Arrival::Closed { clients } => Ok(run_closed(handle, model, n_inputs, clients, spec)),
         Arrival::Open { qps } => run_open(handle, model, n_inputs, qps, spec),
     }
 }
@@ -367,8 +409,8 @@ fn run_open(
     n_inputs: usize,
     qps: f64,
     spec: &LoadSpec,
-) -> LoadReport {
-    let arrivals = open_arrivals(qps, spec.requests, spec.seed);
+) -> Result<LoadReport, LoadGenError> {
+    let arrivals = open_arrivals(qps, spec.requests, spec.seed)?;
     let start = Instant::now();
     let cap = if spec.max_secs > 0.0 {
         Some(Duration::from_secs_f64(spec.max_secs))
@@ -404,7 +446,13 @@ fn run_open(
         })
         .collect();
     let elapsed = start.elapsed().as_secs_f64();
-    LoadReport::from_outcomes(model, &spec.arrival.describe(), spec.seed, &outcomes, elapsed)
+    Ok(LoadReport::from_outcomes(
+        model,
+        &spec.arrival.describe(),
+        spec.seed,
+        &outcomes,
+        elapsed,
+    ))
 }
 
 #[cfg(test)]
@@ -461,14 +509,48 @@ mod tests {
         assert_ne!(input_for(7, 3, 6), input_for(7, 4, 6), "per-request variation");
         assert_ne!(input_for(8, 3, 6), input_for(7, 3, 6), "per-seed variation");
 
-        let a = open_arrivals(100.0, 50, 42);
-        let b = open_arrivals(100.0, 50, 42);
+        let a = open_arrivals(100.0, 50, 42).unwrap();
+        let b = open_arrivals(100.0, 50, 42).unwrap();
         assert_eq!(a, b, "same seed, same schedule");
         assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
         // Mean gap ≈ 1/qps: the sum of 50 Exp(100) gaps concentrates
         // around 0.5 s; accept a wide deterministic-seed band.
         assert!(a[49] > 0.1 && a[49] < 2.0, "50 arrivals at 100 qps ended at {}", a[49]);
-        assert_ne!(open_arrivals(100.0, 50, 43), a, "different seed, different schedule");
+        assert_ne!(open_arrivals(100.0, 50, 43).unwrap(), a, "different seed, different schedule");
+    }
+
+    #[test]
+    fn bad_specs_error_instead_of_panicking() {
+        // qps <= 0 and non-finite rates are structured errors, not
+        // assertion failures (NaN compares unequal to itself, so match
+        // on the variant rather than the payload).
+        assert_eq!(open_arrivals(0.0, 10, 1), Err(LoadGenError::InvalidQps(0.0)));
+        assert_eq!(open_arrivals(-2.5, 10, 1), Err(LoadGenError::InvalidQps(-2.5)));
+        assert!(matches!(
+            open_arrivals(f64::NAN, 10, 1),
+            Err(LoadGenError::InvalidQps(_))
+        ));
+        assert!(matches!(
+            open_arrivals(f64::INFINITY, 10, 1),
+            Err(LoadGenError::InvalidQps(_))
+        ));
+
+        let server = echo_server(ServerConfig::default());
+        let h = server.handle();
+        assert_eq!(
+            run(&h, "m", &LoadSpec::open(0.0, 10, 1)).unwrap_err(),
+            LoadGenError::InvalidQps(0.0)
+        );
+        assert_eq!(
+            run(&h, "m", &LoadSpec::closed(2, 0, 1)).unwrap_err(),
+            LoadGenError::ZeroRequests
+        );
+        assert_eq!(
+            run(&h, "nope", &LoadSpec::closed(2, 4, 1)).unwrap_err(),
+            LoadGenError::UnknownModel("nope".to_string())
+        );
+        // The error messages are CLI-grade.
+        assert!(LoadGenError::InvalidQps(0.0).to_string().contains("qps"));
     }
 
     #[test]
@@ -476,7 +558,7 @@ mod tests {
         let server = echo_server(ServerConfig::default());
         let h = server.handle();
         let spec = LoadSpec::closed(4, 60, 0xABC);
-        let rep = run(&h, "m", &spec);
+        let rep = run(&h, "m", &spec).unwrap();
         assert_eq!(rep.issued, 60);
         assert_eq!(rep.served, 60);
         assert_eq!((rep.shed, rep.deadline_misses, rep.errors), (0, 0, 0));
@@ -491,7 +573,7 @@ mod tests {
         let server = echo_server(ServerConfig::default());
         let h = server.handle();
         let spec = LoadSpec::open(2000.0, 40, 0xDEF);
-        let rep = run(&h, "m", &spec);
+        let rep = run(&h, "m", &spec).unwrap();
         assert_eq!(rep.issued, 40);
         assert_eq!(rep.served, 40);
         assert_eq!(rep.mode, "open-2000qps");
@@ -517,7 +599,7 @@ mod tests {
         );
         let h = server.handle();
         let spec = LoadSpec::open(2000.0, 80, 0x5A7);
-        let rep = run(&h, "m", &spec);
+        let rep = run(&h, "m", &spec).unwrap();
         assert_eq!(rep.issued, 80);
         assert!(rep.shed > 0, "bounded queue must shed under 2000 qps offered load");
         assert_eq!(rep.served + rep.shed + rep.deadline_misses + rep.errors, 80);
@@ -531,7 +613,7 @@ mod tests {
         let server = echo_server(ServerConfig::default());
         let h = server.handle();
         let spec = LoadSpec::closed(2, 10, 1).with_deadline(Some(Duration::ZERO));
-        let rep = run(&h, "m", &spec);
+        let rep = run(&h, "m", &spec).unwrap();
         assert_eq!(rep.issued, 10);
         assert_eq!(rep.deadline_misses, 10, "zero budget misses everything");
         assert_eq!(rep.served, 0);
@@ -547,7 +629,7 @@ mod tests {
         // cap must cut the run short.
         let spec = LoadSpec::closed(2, 10_000, 2).with_max_secs(0.15);
         let start = Instant::now();
-        let rep = run(&h, "m", &spec);
+        let rep = run(&h, "m", &spec).unwrap();
         assert!(rep.issued < 10_000, "cap must stop issuance");
         assert!(start.elapsed() < Duration::from_secs(5));
     }
@@ -556,7 +638,7 @@ mod tests {
     fn report_serializes() {
         let server = echo_server(ServerConfig::default());
         let h = server.handle();
-        let rep = run(&h, "m", &LoadSpec::closed(2, 8, 3));
+        let rep = run(&h, "m", &LoadSpec::closed(2, 8, 3)).unwrap();
         let j = rep.to_json();
         assert_eq!(j.get("served").unwrap().as_u64(), Some(8));
         assert!(j.path(&["latency_ms", "p99"]).is_some());

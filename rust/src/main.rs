@@ -436,6 +436,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             .precision_opt()
             .schedule_opt()
             .fast_mem_opt()
+            .kernel_opt()
             .max_queue_opt()
             .deadline_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
@@ -477,6 +478,13 @@ fn cmd_serve(args: &[String]) -> i32 {
     let schedule = match a.str("schedule") {
         "auto" => config.schedule("interp"),
         s => s.to_string(),
+    };
+    // The microkernel knob, resolved the same way (config key `kernel`);
+    // "auto" survives to the variant builder, which picks the best
+    // supported path for compiled schedules.
+    let kernel = match a.str("kernel") {
+        "auto" => config.kernel("auto"),
+        k => k.to_string(),
     };
     // The tiled fast-memory budget: explicit --fast-mem wins, "auto"
     // defers to the config key, and 0 means simulator-driven autotune.
@@ -521,7 +529,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     if !model_dir.is_empty() {
         let resident_bytes = resolve_auto_u64(&a, "resident-bytes", config.resident_bytes(0));
         let registry = Registry::new(
-            RegistryConfig { resident_bytes, schedule, precision, workers, fast_mem },
+            RegistryConfig { resident_bytes, schedule, precision, workers, fast_mem, kernel },
             server_config,
         );
         let labels = match registry.scan_dir(Path::new(&model_dir)) {
@@ -576,7 +584,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             model.n_outputs());
     }
     let name = a.str("name").to_string();
-    let variant = match model.variant(&name, &schedule, &precision, workers, fast_mem) {
+    let variant = match model.variant(&name, &schedule, &precision, workers, fast_mem, &kernel) {
         Ok(v) => v,
         Err(e) => {
             eprintln!("error: {e}");
@@ -724,6 +732,7 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         )
         .opt("max-batch", "128", "dynamic batcher max batch size")
         .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
+        .kernel_opt()
         .max_queue_opt()
         .deadline_opt()
         .opt("out", "-", "write the JSON report here ('-' = table only)"),
@@ -748,8 +757,13 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     let max_queue = resolve_auto_u64(&a, "max-queue", 0) as usize;
     let seed = a.u64("seed");
     let requests = a.usize("requests");
+    if requests == 0 {
+        eprintln!("error: --requests must be at least 1");
+        return 2;
+    }
     let secs = a.f64("secs");
     let mode = a.str("mode").to_string();
+    let kernel = a.str("kernel").to_string();
 
     let mut specs: Vec<LoadSpec> = Vec::new();
     match mode.as_str() {
@@ -760,8 +774,8 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         ),
         "open" => {
             for &qps in &a.f64_list("qps") {
-                if qps <= 0.0 {
-                    eprintln!("error: --qps entries must be positive, got {qps}");
+                if !(qps.is_finite() && qps > 0.0) {
+                    eprintln!("error: --qps entries must be finite and positive, got {qps}");
                     return 2;
                 }
                 specs.push(
@@ -787,10 +801,13 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     println!("{}", LoadReport::table_header());
     let mut results: Vec<Json> = Vec::new();
     for (schedule, precision, workers) in &variant_specs {
-        // Register each variant under its canonical label ("fused-f32-w4")
-        // so loadgen rows, serve logs, and bench keys all agree.
-        // Tiled variants autotune their fast-memory budget (fast_mem 0).
-        let mut variant = match model.variant("variant", schedule, precision, *workers, 0) {
+        // Register each variant under its canonical label
+        // ("fused-f32-w4-avx2") so loadgen rows, serve logs, and bench
+        // keys all agree. Tiled variants autotune their fast-memory
+        // budget (fast_mem 0); the --kernel knob applies to every
+        // compiled variant in the sweep.
+        let mut variant = match model.variant("variant", schedule, precision, *workers, 0, &kernel)
+        {
             Ok(v) => v,
             Err(e) => {
                 eprintln!("error: variant {schedule}:{precision}:{workers}: {e}");
@@ -817,7 +834,13 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         );
         let h = server.handle();
         for spec in &specs {
-            let rep = sparseflow::loadgen::run(&h, &label, spec);
+            let rep = match sparseflow::loadgen::run(&h, &label, spec) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
             println!("{}", rep.table_row());
             results.push(rep.to_json());
         }
@@ -831,6 +854,7 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                 .set("mode", mode.as_str())
                 .set("requests", requests)
                 .set("seed", seed)
+                .set("kernel", kernel.as_str())
                 .set("deadline_ms", deadline_ms)
                 .set("max_queue", max_queue)
                 .set("max_batch", a.usize("max-batch"))

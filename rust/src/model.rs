@@ -21,8 +21,9 @@
 //!   binary artifact; loading memory-maps the file, validates checksums,
 //!   and borrows the engine pools straight out of the mapping.
 
-use crate::coordinator::router::{ModelVariant, VariantError};
+use crate::coordinator::router::{resolve_kernel_tag, ModelVariant, VariantError};
 use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
+use crate::exec::simd::Kernel;
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::serde::{net_from_json, net_to_json, quant_from_json, quant_to_json};
 use crate::ffnn::topo::{two_optimal_order, ConnOrder};
@@ -265,7 +266,9 @@ impl Model {
     /// only i8/interp is representable; for binary artifacts the
     /// programs are reconstructed from the mapped pools (zero-copy for
     /// fused and i8; tiled needs an explicit `fast_mem` budget because
-    /// autotuning requires the source network).
+    /// autotuning requires the source network). `kernel` ∈ {auto,
+    /// scalar, avx2} selects the `exec::simd` microkernel of the
+    /// compiled schedules (see [`ModelVariant::build`]).
     pub fn variant(
         &self,
         name: &str,
@@ -273,13 +276,19 @@ impl Model {
         precision: &str,
         workers: usize,
         fast_mem: usize,
+        kernel: &str,
     ) -> Result<ModelVariant, VariantError> {
         use crate::exec::fused::FusedEngine;
         use crate::exec::stream::StreamingEngine;
         use crate::exec::tiled::{TiledEngine, TiledProgram};
         use crate::exec::Engine;
 
-        check_knobs(schedule, precision, fast_mem)?;
+        let kernel_tag = check_knobs(schedule, precision, fast_mem, kernel)?;
+        let k = if kernel_tag == "avx2" {
+            Kernel::Avx2
+        } else {
+            Kernel::Scalar
+        };
         let compile_err = |e: anyhow::Error| VariantError::Compile {
             schedule: schedule.to_string(),
             message: e.to_string(),
@@ -287,7 +296,9 @@ impl Model {
         match &self.payload {
             Payload::Net { net, .. } => {
                 let order = self.order_or_compute(net);
-                ModelVariant::build(name, net, &order, schedule, precision, workers, fast_mem)
+                ModelVariant::build(
+                    name, net, &order, schedule, precision, workers, fast_mem, kernel,
+                )
             }
             Payload::Quant(p) => {
                 if (precision, schedule) != ("i8", "interp") {
@@ -297,19 +308,19 @@ impl Model {
                     });
                 }
                 let engine = Arc::new(QuantStreamEngine::from_program(p.clone()));
-                Ok(tag(wrap(name, engine, workers), "interp", "i8"))
+                Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag))
             }
             Payload::Bin(a) => match (precision, schedule) {
                 ("f32", "interp") => {
                     let program = a.stream_program().map_err(compile_err)?;
                     let engine = Arc::new(StreamingEngine::from_program(program));
-                    Ok(tag(wrap(name, engine, workers), "interp", "f32"))
+                    Ok(tag(wrap(name, engine, workers), "interp", "f32", kernel_tag))
                 }
                 ("f32", "fused") => {
                     let program = a.fused_program().map_err(compile_err)?;
                     let stats = program.stats().clone();
-                    let engine = Arc::new(FusedEngine::from_program(program));
-                    let mut v = tag(wrap(name, engine, workers), "fused", "f32");
+                    let engine = Arc::new(FusedEngine::from_program(program).with_kernel(k));
+                    let mut v = tag(wrap(name, engine, workers), "fused", "f32", kernel_tag);
                     v = v.with_fusion_stats(stats);
                     Ok(v)
                 }
@@ -327,15 +338,15 @@ impl Model {
                     let program =
                         TiledProgram::from_program(&stream, fast_mem).map_err(compile_err)?;
                     let stats = program.stats().clone();
-                    let engine = Arc::new(TiledEngine::from_program(program));
-                    let mut v = tag(wrap(name, engine, workers), "tiled", "f32");
+                    let engine = Arc::new(TiledEngine::from_program(program).with_kernel(k));
+                    let mut v = tag(wrap(name, engine, workers), "tiled", "f32", kernel_tag);
                     v = v.with_tiled_stats(stats);
                     Ok(v)
                 }
                 ("i8", "interp") => {
                     let program = a.quant_program().map_err(compile_err)?;
                     let engine = Arc::new(QuantStreamEngine::from_program(program));
-                    Ok(tag(wrap(name, engine, workers), "interp", "i8"))
+                    Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag))
                 }
                 _ => Err(VariantError::Incompatible {
                     schedule: schedule.to_string(),
@@ -347,8 +358,14 @@ impl Model {
 }
 
 /// Shared knob validation (mirrors [`ModelVariant::build`]'s matrix so
-/// every payload kind rejects the same way).
-fn check_knobs(schedule: &str, precision: &str, fast_mem: usize) -> Result<(), VariantError> {
+/// every payload kind rejects the same way); returns the resolved
+/// kernel tag ("scalar" or "avx2").
+fn check_knobs(
+    schedule: &str,
+    precision: &str,
+    fast_mem: usize,
+    kernel: &str,
+) -> Result<&'static str, VariantError> {
     if !matches!(schedule, "interp" | "fused" | "tiled") {
         return Err(VariantError::UnknownSchedule(schedule.to_string()));
     }
@@ -361,7 +378,7 @@ fn check_knobs(schedule: &str, precision: &str, fast_mem: usize) -> Result<(), V
             fast_mem,
         });
     }
-    Ok(())
+    resolve_kernel_tag(schedule, kernel)
 }
 
 fn wrap(name: &str, engine: Arc<dyn crate::exec::Engine>, workers: usize) -> ModelVariant {
@@ -372,8 +389,16 @@ fn wrap(name: &str, engine: Arc<dyn crate::exec::Engine>, workers: usize) -> Mod
     }
 }
 
-fn tag(mut v: ModelVariant, schedule: &'static str, precision: &'static str) -> ModelVariant {
-    v = v.with_schedule(schedule).with_precision(precision);
+fn tag(
+    mut v: ModelVariant,
+    schedule: &'static str,
+    precision: &'static str,
+    kernel: &'static str,
+) -> ModelVariant {
+    v = v
+        .with_schedule(schedule)
+        .with_precision(precision)
+        .with_kernel_tag(kernel);
     v
 }
 
@@ -438,20 +463,20 @@ mod tests {
         let bin = Model::load(&bin_path).unwrap();
 
         let x = BatchMatrix::random(net.n_inputs(), 4, &mut Pcg64::new(5));
-        let a = m.variant("m", "fused", "f32", 1, 0).unwrap();
-        let b = bin.variant("m", "fused", "f32", 1, 0).unwrap();
+        let a = m.variant("m", "fused", "f32", 1, 0, "auto").unwrap();
+        let b = bin.variant("m", "fused", "f32", 1, 0, "auto").unwrap();
         assert_eq!(a.route().infer(&x), b.route().infer(&x), "bin fused == json fused");
-        let a = m.variant("m", "interp", "i8", 1, 0).unwrap();
-        let b = bin.variant("m", "interp", "i8", 1, 0).unwrap();
+        let a = m.variant("m", "interp", "i8", 1, 0, "auto").unwrap();
+        let b = bin.variant("m", "interp", "i8", 1, 0, "auto").unwrap();
         assert_eq!(a.route().infer(&x), b.route().infer(&x), "bin i8 == json i8");
 
         // Artifact-backed tiled needs an explicit budget.
         assert!(matches!(
-            bin.variant("m", "tiled", "f32", 1, 0),
+            bin.variant("m", "tiled", "f32", 1, 0, "auto"),
             Err(VariantError::Compile { .. })
         ));
-        let t = bin.variant("m", "tiled", "f32", 1, net.n_neurons() + 2).unwrap();
-        let j = m.variant("m", "tiled", "f32", 1, net.n_neurons() + 2).unwrap();
+        let t = bin.variant("m", "tiled", "f32", 1, net.n_neurons() + 2, "scalar").unwrap();
+        let j = m.variant("m", "tiled", "f32", 1, net.n_neurons() + 2, "scalar").unwrap();
         assert_eq!(t.route().infer(&x), j.route().infer(&x), "bin tiled == json tiled");
     }
 
@@ -460,13 +485,13 @@ mod tests {
         let net = sample_net();
         let order = two_optimal_order(&net);
         let m = Model::from_quant(QuantStreamProgram::compress(&net, &order));
-        assert!(m.variant("q", "interp", "i8", 1, 0).is_ok());
+        assert!(m.variant("q", "interp", "i8", 1, 0, "auto").is_ok());
         assert!(matches!(
-            m.variant("q", "fused", "f32", 1, 0),
+            m.variant("q", "fused", "f32", 1, 0, "auto"),
             Err(VariantError::Incompatible { .. })
         ));
         assert!(matches!(
-            m.variant("q", "jit", "f32", 1, 0),
+            m.variant("q", "jit", "f32", 1, 0, "auto"),
             Err(VariantError::UnknownSchedule(_))
         ));
         // A network cannot be recovered from a lossy payload.

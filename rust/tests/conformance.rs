@@ -10,10 +10,11 @@
 //! intentionally perturbed by compression).
 //!
 //! Covered grid per fixture: schedule {interp, fused, tiled} ×
-//! precision {f32, i8} × sharding {1, 2, 3} (tiled additionally at a
-//! minimum and an everything-fits fast-memory budget), plus the
-//! layer-wise CSR and dense baselines and both serialization
-//! round-trips (ffnn-v1 and quant-v1).
+//! precision {f32, i8} × sharding {1, 2, 3} × microkernel {scalar,
+//! avx2 where the CPU supports it} (tiled additionally at a minimum
+//! and an everything-fits fast-memory budget), plus the layer-wise CSR
+//! and dense baselines and both serialization round-trips (ffnn-v1 and
+//! quant-v1).
 
 use sparseflow::exec::batch::BatchMatrix;
 use sparseflow::exec::dense::DenseEngine;
@@ -21,6 +22,7 @@ use sparseflow::exec::fused::FusedEngine;
 use sparseflow::exec::layerwise::LayerwiseEngine;
 use sparseflow::exec::parallel::ParallelEngine;
 use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram};
+use sparseflow::exec::simd::{avx2_supported, Kernel};
 use sparseflow::exec::stream::{StreamProgram, StreamingEngine};
 use sparseflow::exec::tiled::TiledEngine;
 use sparseflow::exec::Engine;
@@ -95,6 +97,16 @@ fn orders(net: &Ffnn) -> Vec<(&'static str, ConnOrder)> {
     ]
 }
 
+/// Microkernels held to the golden traces: scalar always, avx2 when
+/// this CPU supports it (skipped gracefully otherwise).
+fn kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    if avx2_supported() {
+        ks.push(Kernel::Avx2);
+    }
+    ks
+}
+
 #[test]
 fn f32_engines_reproduce_golden_traces_exactly() {
     for name in FIXTURES {
@@ -107,22 +119,31 @@ fn f32_engines_reproduce_golden_traces_exactly() {
                 let par = ParallelEngine::new(StreamingEngine::new(&f.net, &order), shards);
                 assert_exact(&f, &par, &format!("stream[{oname}]x{shards}"));
             }
-            // fused schedule, serial and batch-sharded.
-            let fused = FusedEngine::new(&f.net, &order);
-            assert_exact(&f, &fused, &format!("fused[{oname}]"));
-            for shards in [2usize, 3] {
-                let par = ParallelEngine::new(FusedEngine::new(&f.net, &order), shards);
-                assert_exact(&f, &par, &format!("fused[{oname}]x{shards}"));
+            // fused schedule under every supported microkernel, serial
+            // and batch-sharded.
+            for kernel in kernels() {
+                let k = kernel.name();
+                let fused = FusedEngine::new(&f.net, &order).with_kernel(kernel);
+                assert_exact(&f, &fused, &format!("fused[{oname}]/{k}"));
+                for shards in [2usize, 3] {
+                    let eng = FusedEngine::new(&f.net, &order).with_kernel(kernel);
+                    let par = ParallelEngine::new(eng, shards);
+                    assert_exact(&f, &par, &format!("fused[{oname}]/{k}x{shards}"));
+                }
             }
             // tiled schedule at the minimum and an everything-fits
-            // budget, serial and batch-sharded.
+            // budget, under every supported microkernel, serial and
+            // batch-sharded.
             for m in [3usize, f.net.n_neurons() + 2] {
-                let tiled = TiledEngine::new(&f.net, &order, m).unwrap();
-                assert_exact(&f, &tiled, &format!("tiled[{oname}]@M{m}"));
-                for shards in [2usize, 3] {
-                    let par =
-                        ParallelEngine::new(TiledEngine::new(&f.net, &order, m).unwrap(), shards);
-                    assert_exact(&f, &par, &format!("tiled[{oname}]@M{m}x{shards}"));
+                for kernel in kernels() {
+                    let k = kernel.name();
+                    let tiled = TiledEngine::new(&f.net, &order, m).unwrap().with_kernel(kernel);
+                    assert_exact(&f, &tiled, &format!("tiled[{oname}]@M{m}/{k}"));
+                    for shards in [2usize, 3] {
+                        let eng = TiledEngine::new(&f.net, &order, m).unwrap().with_kernel(kernel);
+                        let par = ParallelEngine::new(eng, shards);
+                        assert_exact(&f, &par, &format!("tiled[{oname}]@M{m}/{k}x{shards}"));
+                    }
                 }
             }
         }
@@ -223,13 +244,18 @@ fn bin_artifacts_reproduce_golden_traces_bit_identically() {
             }
             let stream = StreamingEngine::from_program(art.stream_program().unwrap());
             assert_exact(&f, &stream, &format!("bin[{src}] stream"));
-            let fused = FusedEngine::from_program(art.fused_program().unwrap());
-            assert_exact(&f, &fused, &format!("bin[{src}] fused"));
             let m = f.net.n_neurons() + 2;
-            let tiled = TiledEngine::from_program(
-                TiledProgram::from_program(&art.stream_program().unwrap(), m).unwrap(),
-            );
-            assert_exact(&f, &tiled, &format!("bin[{src}] tiled@M{m}"));
+            for kernel in kernels() {
+                let k = kernel.name();
+                let fused =
+                    FusedEngine::from_program(art.fused_program().unwrap()).with_kernel(kernel);
+                assert_exact(&f, &fused, &format!("bin[{src}] fused/{k}"));
+                let tiled = TiledEngine::from_program(
+                    TiledProgram::from_program(&art.stream_program().unwrap(), m).unwrap(),
+                )
+                .with_kernel(kernel);
+                assert_exact(&f, &tiled, &format!("bin[{src}] tiled@M{m}/{k}"));
+            }
             let got =
                 QuantStreamEngine::from_program(art.quant_program().unwrap()).infer(&f.inputs);
             assert_eq!(

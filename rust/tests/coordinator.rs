@@ -200,7 +200,8 @@ fn served_outputs_bit_identical_to_direct_engine_run() {
         ("fused", 3),
         ("tiled", 2),
     ] {
-        let variant = ModelVariant::build("m", &net, &order, schedule, "f32", workers, 0).unwrap();
+        let variant =
+            ModelVariant::build("m", &net, &order, schedule, "f32", workers, 0, "auto").unwrap();
         let direct = Arc::clone(variant.route());
         let label = variant.label();
         let mut router = Router::new();

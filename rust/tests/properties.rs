@@ -9,6 +9,7 @@ use sparseflow::exec::fused::FusedEngine;
 use sparseflow::exec::layerwise::{forward_layers, LayerwiseEngine};
 use sparseflow::exec::parallel::ParallelEngine;
 use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine};
+use sparseflow::exec::simd::{avx2_supported, Kernel};
 use sparseflow::exec::stream::StreamingEngine;
 use sparseflow::exec::tiled::TiledEngine;
 use sparseflow::exec::Engine;
@@ -32,6 +33,17 @@ fn arb_net(rng: &mut Pcg64) -> Ffnn {
 
 fn arb_m(rng: &mut Pcg64, net: &Ffnn) -> usize {
     3 + rng.index(net.n_neurons())
+}
+
+/// Microkernels the differential must cover: scalar always, avx2 when
+/// this CPU supports it (skipped gracefully otherwise — the scalar rows
+/// still run, so the suite never silently shrinks to nothing).
+fn kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    if avx2_supported() {
+        ks.push(Kernel::Avx2);
+    }
+    ks
 }
 
 /// (a) Any sequence of window moves preserves topological validity and
@@ -257,8 +269,9 @@ fn prop_neuron_order_derivation() {
 /// block-compiled stream, and the cache-tiled slot-compiled stream
 /// compute the same function on the same batch — within 1e-5 where
 /// schedules reassociate f32 sums, bit-identical where the docs claim
-/// it (sharding, fusion, tiling, and their compositions), and within
-/// the certified error bound for the quantized stream.
+/// it (sharding, fusion, tiling, their compositions, and every
+/// dispatched microkernel: scalar and, where supported, avx2), and
+/// within the certified error bound for the quantized stream.
 #[test]
 fn prop_cross_engine_differential() {
     check(
@@ -305,30 +318,34 @@ fn prop_cross_engine_differential() {
                 return Err(format!("sharded ({workers} workers) not bit-identical"));
             }
 
-            // The fused block-compiled schedule is documented
-            // bit-identical to the interpreter, alone and composed with
-            // batch sharding (fused∘sharded).
-            if FusedEngine::new(net, order).infer(x) != reference {
-                return Err("fused not bit-identical to stream".into());
-            }
-            let fused_sharded = ParallelEngine::new(FusedEngine::new(net, order), *workers);
-            if fused_sharded.infer(x) != reference {
-                return Err(format!("fused∘sharded ({workers} workers) not bit-identical"));
-            }
+            // The fused and tiled compiled schedules are documented
+            // bit-identical to the interpreter under EVERY dispatched
+            // microkernel, alone and composed with batch sharding
+            // (fused∘sharded, tiled∘sharded). Tiled holds for every
+            // fast-memory budget M ≥ 3.
+            for kernel in kernels() {
+                let k = kernel.name();
+                let fused = FusedEngine::new(net, order).with_kernel(kernel);
+                if fused.infer(x) != reference {
+                    return Err(format!("fused/{k} not bit-identical to stream"));
+                }
+                let fused_sharded = ParallelEngine::new(fused, *workers);
+                if fused_sharded.infer(x) != reference {
+                    return Err(format!("fused/{k}∘sharded ({workers} workers) not bit-identical"));
+                }
 
-            // The cache-tiled slot-compiled schedule is documented
-            // bit-identical for every fast-memory budget M ≥ 3, alone
-            // and composed with batch sharding (tiled∘sharded).
-            let tiled = TiledEngine::new(net, order, *fast_mem)
-                .map_err(|e| format!("tiled compile (M={fast_mem}): {e}"))?;
-            if tiled.infer(x) != reference {
-                return Err(format!("tiled (M={fast_mem}) not bit-identical to stream"));
-            }
-            let tiled_sharded = ParallelEngine::new(tiled, *workers);
-            if tiled_sharded.infer(x) != reference {
-                return Err(format!(
-                    "tiled∘sharded (M={fast_mem}, {workers} workers) not bit-identical"
-                ));
+                let tiled = TiledEngine::new(net, order, *fast_mem)
+                    .map_err(|e| format!("tiled compile (M={fast_mem}): {e}"))?
+                    .with_kernel(kernel);
+                if tiled.infer(x) != reference {
+                    return Err(format!("tiled/{k} (M={fast_mem}) not bit-identical to stream"));
+                }
+                let tiled_sharded = ParallelEngine::new(tiled, *workers);
+                if tiled_sharded.infer(x) != reference {
+                    return Err(format!(
+                        "tiled/{k}∘sharded (M={fast_mem}, {workers} workers) not bit-identical"
+                    ));
+                }
             }
 
             // The quantized stream agrees within its certified bound.

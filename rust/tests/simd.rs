@@ -1,0 +1,161 @@
+//! Integration tests for the runtime-dispatched SIMD microkernel layer
+//! (`exec::simd`). The contract under test is bit-identity: every
+//! engine × kernel combination must produce exactly the interpreter's
+//! bits — on batch widths straddling the `LANES` tile (empty, sub-lane,
+//! exact multiples, tail-only remainders), across a 50-net random
+//! differential, and under concurrent scratch reuse (one engine shared
+//! by many threads). On CPUs without AVX2 the avx2 axis is skipped
+//! gracefully; the scalar axis always runs, and forcing `Kernel::Avx2`
+//! anywhere must fall back rather than fault.
+
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::fused::FusedEngine;
+use sparseflow::exec::simd::{avx2_supported, Kernel, LANES};
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::tiled::TiledEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::util::proptest::check;
+use sparseflow::util::rng::Pcg64;
+
+/// Microkernels under test: scalar always, avx2 when the CPU has it.
+fn kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    if avx2_supported() {
+        ks.push(Kernel::Avx2);
+    }
+    ks
+}
+
+/// The engines' default kernel is `auto`, which must resolve to a
+/// supported kernel and agree with the CPU probe.
+#[test]
+fn auto_kernel_matches_cpu_support() {
+    let auto = Kernel::auto();
+    assert!(auto.is_supported());
+    assert_eq!(auto == Kernel::Avx2, avx2_supported());
+
+    let mut rng = Pcg64::seed_from(0x51D5);
+    let net = random_mlp(&MlpSpec::new(2, 10, 0.5), &mut rng);
+    let order = two_optimal_order(&net);
+    assert_eq!(FusedEngine::new(&net, &order).kernel(), auto);
+    assert_eq!(TiledEngine::new(&net, &order, 5).unwrap().kernel(), auto);
+}
+
+/// Every batch width from empty through two full vectors plus a tail
+/// column is bit-identical to the interpreter, per kernel, for the
+/// fused engine and the tiled engine at a minimum and an
+/// everything-fits fast-memory budget.
+#[test]
+fn batch_widths_straddling_the_tile_are_bit_identical() {
+    let mut rng = Pcg64::seed_from(0x51D3);
+    let net = random_mlp(&MlpSpec::new(3, 20, 0.35), &mut rng);
+    let order = two_optimal_order(&net);
+    let budgets = [3usize, net.n_neurons() + 2];
+    for batch in 0..=2 * LANES + 1 {
+        let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+        let reference = StreamingEngine::new(&net, &order).infer(&x);
+        assert_eq!(reference.batch(), batch);
+        for kernel in kernels() {
+            let k = kernel.name();
+            let fused = FusedEngine::new(&net, &order).with_kernel(kernel);
+            assert_eq!(fused.infer(&x), reference, "fused/{k} at batch {batch}");
+            for &m in &budgets {
+                let tiled = TiledEngine::new(&net, &order, m).unwrap().with_kernel(kernel);
+                assert_eq!(tiled.infer(&x), reference, "tiled/{k}@M{m} at batch {batch}");
+            }
+        }
+    }
+}
+
+/// 50-net random differential: on random MLPs with random batch widths
+/// and fast-memory budgets, every kernel's fused and tiled outputs are
+/// the interpreter's bits.
+#[test]
+fn differential_50_nets_per_kernel() {
+    check(
+        "simd-kernel-differential",
+        50,
+        |rng| {
+            let depth = 2 + rng.index(3);
+            let width = 4 + rng.index(16);
+            let density = 0.15 + rng.f64() * 0.6;
+            let net = random_mlp(&MlpSpec::new(depth, width, density), rng);
+            let batch = 1 + rng.index(2 * LANES + 1);
+            let x = BatchMatrix::random(net.n_inputs(), batch, rng);
+            let fast_mem = 3 + rng.index(net.n_neurons() + 2);
+            (net, x, fast_mem)
+        },
+        |(net, x, fast_mem)| {
+            let order = two_optimal_order(net);
+            let reference = StreamingEngine::new(net, &order).infer(x);
+            for kernel in kernels() {
+                let k = kernel.name();
+                let fused = FusedEngine::new(net, &order).with_kernel(kernel);
+                if fused.infer(x) != reference {
+                    return Err(format!("fused/{k} diverged (batch {})", x.batch()));
+                }
+                let tiled = TiledEngine::new(net, &order, *fast_mem)
+                    .map_err(|e| format!("tiled compile (M={fast_mem}): {e}"))?
+                    .with_kernel(kernel);
+                if tiled.infer(x) != reference {
+                    return Err(format!("tiled/{k} (M={fast_mem}) diverged (batch {})", x.batch()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One engine instance shared by eight threads with varied batch widths:
+/// the scratch pool recycles buffers across shapes concurrently, and
+/// every result must still be the interpreter's bits. Runs per kernel.
+#[test]
+fn concurrent_inference_shares_scratch_safely() {
+    let mut rng = Pcg64::seed_from(0x51D2);
+    let net = random_mlp(&MlpSpec::new(3, 24, 0.4), &mut rng);
+    let order = two_optimal_order(&net);
+    // Varied batch widths (incl. empty and tail-only) churn the shared
+    // scratch pool's shapes under contention.
+    let inputs: Vec<(BatchMatrix, BatchMatrix)> = (0..=2 * LANES + 1)
+        .map(|batch| {
+            let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+            let want = StreamingEngine::new(&net, &order).infer(&x);
+            (x, want)
+        })
+        .collect();
+    for kernel in kernels() {
+        let k = kernel.name();
+        let fused = FusedEngine::new(&net, &order).with_kernel(kernel);
+        let tiled = TiledEngine::new(&net, &order, 7).unwrap().with_kernel(kernel);
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let (fused, tiled, inputs) = (&fused, &tiled, &inputs);
+                s.spawn(move || {
+                    for i in 0..40usize {
+                        let (x, want) = &inputs[(t + i) % inputs.len()];
+                        assert_eq!(&fused.infer(x), want, "fused/{k} under concurrency");
+                        assert_eq!(&tiled.infer(x), want, "tiled/{k} under concurrency");
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Forcing `Kernel::Avx2` on any host must never fault: on CPUs without
+/// AVX2 the dispatcher falls back to the generic path, and the output
+/// is the interpreter's bits either way.
+#[test]
+fn forced_avx2_never_faults() {
+    let mut rng = Pcg64::seed_from(0x51D4);
+    let net = random_mlp(&MlpSpec::new(2, 12, 0.5), &mut rng);
+    let order = two_optimal_order(&net);
+    let x = BatchMatrix::random(net.n_inputs(), LANES + 3, &mut rng);
+    let reference = StreamingEngine::new(&net, &order).infer(&x);
+    let fused = FusedEngine::new(&net, &order).with_kernel(Kernel::Avx2);
+    assert_eq!(fused.infer(&x), reference);
+    let tiled = TiledEngine::new(&net, &order, 5).unwrap().with_kernel(Kernel::Avx2);
+    assert_eq!(tiled.infer(&x), reference);
+}
