@@ -126,6 +126,19 @@ impl Spec {
         )
     }
 
+    /// The standard `--fault-plan` option of chaos-capable commands: a
+    /// deterministic `exec::faults::FaultPlan` spec — `"-"` (none),
+    /// `"panic@2,delay:20@5,nan@9"` (explicit faults at engine-call
+    /// indices), or `"seed:42:4:100"` (4 seeded faults in the first 100
+    /// calls). Parsed by `FaultPlan::parse`.
+    pub fn fault_plan_opt(self) -> Self {
+        self.opt(
+            "fault-plan",
+            "-",
+            "fault injection plan: - | kind@idx,... | seed:<s>:<n>:<horizon>",
+        )
+    }
+
     /// The standard `--max-queue` SLO option of the serving commands:
     /// bounded queue depth for admission control. An explicit value wins
     /// — including an explicit `0` (= unbounded) — while "auto" defers
@@ -516,6 +529,18 @@ mod tests {
         let a = s.parse(&sv(&["--kernel=avx2"])).unwrap();
         assert_eq!(a.str("kernel"), "avx2");
         assert!(s.help_text().contains("--kernel"));
+    }
+
+    #[test]
+    fn fault_plan_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").fault_plan_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("fault-plan"), "-", "default = no plan");
+        let a = s.parse(&sv(&["--fault-plan", "panic@2,delay:20@5"])).unwrap();
+        assert_eq!(a.str("fault-plan"), "panic@2,delay:20@5");
+        let a = s.parse(&sv(&["--fault-plan=seed:42:4:100"])).unwrap();
+        assert_eq!(a.str("fault-plan"), "seed:42:4:100");
+        assert!(s.help_text().contains("--fault-plan"));
     }
 
     #[test]

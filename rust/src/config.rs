@@ -131,6 +131,30 @@ impl Config {
         self.u64("resident_bytes", default)
     }
 
+    /// The circuit-breaker threshold knob (`breaker_faults` key):
+    /// consecutive engine faults before a model's breaker opens and its
+    /// requests are shed as unhealthy. 0 = breaker disabled (unless
+    /// `hang_cap_ms` is set).
+    pub fn breaker_faults(&self, default: u64) -> u64 {
+        self.u64("breaker_faults", default)
+    }
+
+    /// The circuit-breaker cooldown knob (`breaker_cooldown_ms` key):
+    /// milliseconds an open breaker waits before admitting a half-open
+    /// probe request.
+    pub fn breaker_cooldown_ms(&self, default: u64) -> u64 {
+        self.u64("breaker_cooldown_ms", default)
+    }
+
+    /// The hang-watchdog knob (`hang_cap_ms` key): hard wall-clock cap
+    /// in milliseconds on a single engine invocation — an in-flight
+    /// inference older than this opens the model's breaker (new work is
+    /// shed while the dispatcher is wedged), and an over-cap completion
+    /// counts as a fault. 0 = no cap.
+    pub fn hang_cap_ms(&self, default: u64) -> u64 {
+        self.u64("hang_cap_ms", default)
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.lookup(key)
             .and_then(Json::as_str)
@@ -252,6 +276,20 @@ mod tests {
         c.set_override("resident_bytes=1048576").unwrap();
         assert_eq!(c.model_dir(""), "models/");
         assert_eq!(c.resident_bytes(0), 1 << 20);
+    }
+
+    #[test]
+    fn fault_containment_knobs() {
+        let mut c = Config::empty();
+        assert_eq!(c.breaker_faults(3), 3, "default when unset");
+        assert_eq!(c.breaker_cooldown_ms(1000), 1000, "default when unset");
+        assert_eq!(c.hang_cap_ms(0), 0, "default when unset (no cap)");
+        c.set_override("breaker_faults=5").unwrap();
+        c.set_override("breaker_cooldown_ms=250").unwrap();
+        c.set_override("hang_cap_ms=2000").unwrap();
+        assert_eq!(c.breaker_faults(3), 5);
+        assert_eq!(c.breaker_cooldown_ms(1000), 250);
+        assert_eq!(c.hang_cap_ms(0), 2000);
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Per-model circuit breaker: closed → open → half-open with probes.
+//!
+//! The dispatcher reports every engine invocation's outcome to the
+//! model's [`Breaker`]; admission asks it before queueing new work.
+//! After `fault_threshold` **consecutive** faults (panics contained by
+//! the dispatcher, or invocations exceeding the `hang_cap` wall-clock
+//! budget) the breaker *opens*: submissions are shed immediately with
+//! [`InferenceError::Unhealthy`] instead of queueing doomed work. After
+//! `cooldown` it admits a single *half-open probe*; a successful probe
+//! closes the breaker, a faulting probe reopens it for another
+//! cooldown. Successes always reset the consecutive-fault count, so
+//! isolated faults in a healthy stream never trip it.
+//!
+//! The hang watchdog is admission-side: the dispatcher brackets each
+//! engine call with [`Breaker::begin_inference`] / the `elapsed` passed
+//! to [`Breaker::observe`], and [`Breaker::admit`] treats an in-flight
+//! call older than `hang_cap` as a fault-in-progress — new submissions
+//! shed while the engine is wedged, without needing a poller thread,
+//! and the overdue call counts as a fault when (if) it returns.
+//!
+//! All transitions are panic-proof: the internal mutex is recovered
+//! from poisoning, since the whole point of this module is surviving
+//! unwinding threads.
+//!
+//! [`InferenceError::Unhealthy`]: super::request::InferenceError::Unhealthy
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thresholds governing a model's circuit breaker. The default policy
+/// is fully disabled (`fault_threshold` 0, no `hang_cap`): library
+/// users opt in, and `sparseflow serve` enables it via the
+/// `breaker_faults` / `breaker_cooldown_ms` / `hang_cap_ms` config
+/// knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BreakerPolicy {
+    /// Consecutive engine faults that open the breaker. 0 = never open
+    /// on faults.
+    pub fault_threshold: u32,
+    /// How long the breaker stays open before admitting a half-open
+    /// probe request.
+    pub cooldown: Duration,
+    /// Hard wall-clock cap on a single engine invocation; an
+    /// invocation running (or having run) longer counts as a fault.
+    /// `None` = no hang detection.
+    pub hang_cap: Option<Duration>,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> BreakerPolicy {
+        BreakerPolicy {
+            fault_threshold: 0,
+            cooldown: Duration::from_secs(1),
+            hang_cap: None,
+        }
+    }
+}
+
+impl BreakerPolicy {
+    /// True when any tripping condition is configured.
+    pub fn enabled(&self) -> bool {
+        self.fault_threshold > 0 || self.hang_cap.is_some()
+    }
+}
+
+/// Breaker state machine position (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    /// Consecutive faults since the last success.
+    consecutive: u32,
+    /// When the breaker last opened / last admitted a probe (drives the
+    /// cooldown and the probe re-arm).
+    since: Instant,
+    /// Start of the engine invocation currently in flight, if any
+    /// (dispatchers run one invocation at a time per model).
+    inflight_since: Option<Instant>,
+}
+
+/// One model's circuit breaker (see module docs).
+#[derive(Debug)]
+pub struct Breaker {
+    policy: BreakerPolicy,
+    inner: Mutex<Inner>,
+    /// Times the breaker transitioned to open (diagnostic counter).
+    trips: AtomicU64,
+}
+
+impl Breaker {
+    pub fn new(policy: BreakerPolicy) -> Breaker {
+        Breaker {
+            policy,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive: 0,
+                since: Instant::now(),
+                inflight_since: None,
+            }),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> BreakerPolicy {
+        self.policy
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // Recover from poisoning: a panicking thread elsewhere must not
+        // take the breaker down with it.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Admission check: may a new request be queued for this model?
+    /// Open breakers deny until `cooldown` elapses, then admit exactly
+    /// one half-open probe (re-armed every further `cooldown` in case a
+    /// probe is lost to shedding and never reports back).
+    pub fn admit(&self) -> bool {
+        if !self.policy.enabled() {
+            return true;
+        }
+        let mut g = self.lock();
+        // Hang watchdog: an in-flight invocation past the cap means the
+        // dispatcher is wedged — open now so callers shed instead of
+        // queueing behind it.
+        if let (Some(cap), Some(started)) = (self.policy.hang_cap, g.inflight_since) {
+            if started.elapsed() > cap && g.state == BreakerState::Closed {
+                g.state = BreakerState::Open;
+                g.since = Instant::now();
+                self.trips.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::Open | BreakerState::HalfOpen => {
+                if g.since.elapsed() >= self.policy.cooldown {
+                    g.state = BreakerState::HalfOpen;
+                    g.since = Instant::now();
+                    true // this caller is the probe
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Mark the start of an engine invocation (feeds the hang watchdog).
+    pub fn begin_inference(&self) {
+        self.lock().inflight_since = Some(Instant::now());
+    }
+
+    /// Report an invocation's outcome: `faulted` = the engine panicked;
+    /// `elapsed` = wall-clock compute time (an over-cap duration counts
+    /// as a fault even when the result arrived). Clears the in-flight
+    /// marker and advances the state machine.
+    pub fn observe(&self, faulted: bool, elapsed: Duration) {
+        let hung = self.policy.hang_cap.is_some_and(|cap| elapsed > cap);
+        let mut g = self.lock();
+        g.inflight_since = None;
+        if faulted || hung {
+            g.consecutive = g.consecutive.saturating_add(1);
+            let trip = match g.state {
+                // A faulting half-open probe reopens immediately.
+                BreakerState::HalfOpen => true,
+                BreakerState::Closed => {
+                    self.policy.fault_threshold > 0
+                        && g.consecutive >= self.policy.fault_threshold
+                }
+                BreakerState::Open => false,
+            };
+            if trip {
+                g.state = BreakerState::Open;
+                g.since = Instant::now();
+                self.trips.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            g.consecutive = 0;
+            // A successful probe (or any late success from already-queued
+            // work) proves the model healthy again.
+            g.state = BreakerState::Closed;
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.lock().state
+    }
+
+    /// Consecutive faults since the last success.
+    pub fn consecutive_faults(&self) -> u32 {
+        self.lock().consecutive
+    }
+
+    /// Times the breaker has opened.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn policy(k: u32, cooldown_ms: u64) -> BreakerPolicy {
+        BreakerPolicy {
+            fault_threshold: k,
+            cooldown: Duration::from_millis(cooldown_ms),
+            hang_cap: None,
+        }
+    }
+
+    #[test]
+    fn disabled_breaker_admits_through_faults() {
+        let b = Breaker::new(BreakerPolicy::default());
+        for _ in 0..100 {
+            b.observe(true, Duration::ZERO);
+            assert!(b.admit());
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn opens_after_k_consecutive_faults_and_probes_after_cooldown() {
+        let b = Breaker::new(policy(3, 20));
+        b.observe(true, Duration::ZERO);
+        b.observe(true, Duration::ZERO);
+        assert!(b.admit(), "below threshold stays closed");
+        b.observe(true, Duration::ZERO);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(), "open breaker sheds");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.admit(), "cooldown elapsed: one probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.admit(), "only one probe per cooldown");
+        b.observe(false, Duration::ZERO);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn faulting_probe_reopens() {
+        let b = Breaker::new(policy(1, 10));
+        b.observe(true, Duration::ZERO);
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit());
+        b.observe(true, Duration::ZERO);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        assert!(!b.admit(), "freshly reopened: cooldown restarts");
+    }
+
+    #[test]
+    fn success_resets_consecutive_count() {
+        let b = Breaker::new(policy(3, 10));
+        for _ in 0..10 {
+            b.observe(true, Duration::ZERO);
+            b.observe(true, Duration::ZERO);
+            b.observe(false, Duration::ZERO);
+        }
+        assert_eq!(b.state(), BreakerState::Closed, "never 3 in a row");
+        assert_eq!(b.consecutive_faults(), 0);
+    }
+
+    #[test]
+    fn over_cap_elapsed_counts_as_fault() {
+        let b = Breaker::new(BreakerPolicy {
+            fault_threshold: 1,
+            cooldown: Duration::from_millis(10),
+            hang_cap: Some(Duration::from_millis(5)),
+        });
+        b.observe(false, Duration::from_millis(50));
+        assert_eq!(b.state(), BreakerState::Open, "slow success still trips");
+    }
+
+    #[test]
+    fn inflight_past_cap_sheds_at_admission() {
+        let b = Breaker::new(BreakerPolicy {
+            fault_threshold: 0,
+            cooldown: Duration::from_millis(50),
+            hang_cap: Some(Duration::from_millis(5)),
+        });
+        b.begin_inference();
+        assert!(b.admit(), "fresh in-flight call: still healthy");
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(!b.admit(), "wedged inference opens the breaker");
+        assert_eq!(b.state(), BreakerState::Open);
+        // The overdue call finally returns: counted as a fault, and the
+        // breaker stays open until cooldown.
+        b.observe(false, Duration::from_millis(15));
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn lost_probe_rearms_after_another_cooldown() {
+        let b = Breaker::new(policy(1, 10));
+        b.observe(true, Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit(), "first probe admitted");
+        // Probe never reports back (e.g. shed later in the pipeline).
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit(), "probe re-armed instead of wedging half-open");
+    }
+
+    #[test]
+    fn state_names() {
+        assert_eq!(BreakerState::Closed.name(), "closed");
+        assert_eq!(BreakerState::Open.name(), "open");
+        assert_eq!(BreakerState::HalfOpen.name(), "half-open");
+    }
+}

@@ -6,7 +6,16 @@
 //! per-model fusion statistics from block-compiled engines. Lock-free on
 //! the hot path (atomics only; the sink lists are only locked at link and
 //! snapshot time); snapshots serialize to JSON.
+//!
+//! Fault containment adds its own counters: `engine_faults` (contained
+//! engine panics), `worker_restarts` (thread-pool workers respawned
+//! after a job panic — shared with pools via
+//! [`Metrics::worker_restart_sink`]), `quarantined` (artifacts renamed
+//! aside by the registry), and per-model circuit-breaker state (linked
+//! via [`Metrics::link_breaker`], summarized by [`Metrics::health_json`]
+//! for the TCP `health` command).
 
+use super::breaker::Breaker;
 use crate::exec::fused::FusionStats;
 use crate::exec::parallel::ShardTimings;
 use crate::exec::tiled::TiledStats;
@@ -123,6 +132,19 @@ pub struct Metrics {
     pub deadline_misses: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Engine invocations that panicked and were contained by the
+    /// dispatcher's `catch_unwind` (a batch panic and each panicking
+    /// individual re-dispatch both count one).
+    pub engine_faults: AtomicU64,
+    /// Artifacts the registry quarantined (renamed `*.sfb.quarantined`)
+    /// after failing CRC/validation or the hot-swap probe.
+    pub quarantined: AtomicU64,
+    /// Thread-pool workers respawned after a panicking job. `Arc`'d so
+    /// pools can bump it directly (see [`Metrics::worker_restart_sink`]).
+    worker_restarts: Arc<AtomicU64>,
+    /// Per-model circuit breakers (see [`Metrics::link_breaker`]): live
+    /// handles read at snapshot time for `breaker.<model>` state.
+    breakers: Mutex<Vec<(String, Arc<Breaker>)>>,
     /// End-to-end latency (enqueue → reply).
     latency: Histogram,
     /// Queue wait (enqueue → batch dispatch).
@@ -171,6 +193,10 @@ impl Metrics {
             deadline_misses: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            engine_faults: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            worker_restarts: Arc::new(AtomicU64::new(0)),
+            breakers: Mutex::new(Vec::new()),
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
             compute: Histogram::new(),
@@ -186,6 +212,59 @@ impl Metrics {
     /// in [`Metrics::snapshot`] under `registry`. Re-linking replaces.
     pub fn link_registry(&self, sink: RegistrySink) {
         *self.registry_sink.lock().expect("registry sink poisoned") = Some(sink);
+    }
+
+    /// Link a model's circuit breaker so its state appears in
+    /// [`Metrics::snapshot`] under `breaker.<model>` and in
+    /// [`Metrics::health_json`]. Re-linking the same model replaces the
+    /// previous entry (hot-swaps install a fresh breaker).
+    pub fn link_breaker(&self, model: &str, breaker: Arc<Breaker>) {
+        let mut sinks = self.breakers.lock().expect("breaker sinks poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = breaker;
+        } else {
+            sinks.push((model.to_string(), breaker));
+        }
+    }
+
+    /// Drop a model's breaker link (undeploy).
+    pub fn unlink_breaker(&self, model: &str) {
+        self.breakers
+            .lock()
+            .expect("breaker sinks poisoned")
+            .retain(|(name, _)| name != model);
+    }
+
+    /// Shared restart counter for thread pools (see
+    /// `util::threadpool::SupervisionPolicy::restart_sink`): respawns
+    /// bumped there surface as `worker_restarts` in snapshots.
+    pub fn worker_restart_sink(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.worker_restarts)
+    }
+
+    /// The TCP `health` command's view: fault counters plus per-model
+    /// breaker detail (`state`, `consecutive_faults`, `trips`, and an
+    /// `unhealthy` flag that is true unless the breaker is closed).
+    pub fn health_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("engine_faults", self.engine_faults.load(Ordering::Relaxed))
+            .set("worker_restarts", self.worker_restarts.load(Ordering::Relaxed))
+            .set("quarantined", self.quarantined.load(Ordering::Relaxed));
+        let breakers = self.breakers.lock().expect("breaker sinks poisoned");
+        let mut models = Json::obj();
+        for (model, b) in breakers.iter() {
+            let state = b.state();
+            models = models.set(
+                model,
+                Json::obj()
+                    .set("state", state.name())
+                    .set("consecutive_faults", b.consecutive_faults() as u64)
+                    .set("trips", b.trips())
+                    .set("unhealthy", state != super::breaker::BreakerState::Closed),
+            );
+        }
+        j = j.set("models", models);
+        j
     }
 
     /// Link the compile-time fusion statistics of a block-compiled
@@ -290,6 +369,9 @@ impl Metrics {
             .set("errors", self.errors.load(Ordering::Relaxed))
             .set("shed", self.shed.load(Ordering::Relaxed))
             .set("deadline_misses", self.deadline_misses.load(Ordering::Relaxed))
+            .set("engine_faults", self.engine_faults.load(Ordering::Relaxed))
+            .set("worker_restarts", self.worker_restarts.load(Ordering::Relaxed))
+            .set("quarantined", self.quarantined.load(Ordering::Relaxed))
             .set("batches", self.batches.load(Ordering::Relaxed))
             .set("mean_batch_size", self.mean_batch_size())
             .set("latency_ms", self.latency.quantiles_ms_json())
@@ -334,6 +416,15 @@ impl Metrics {
             j = j.set("kernel", k);
         }
         drop(kernels);
+        let breakers = self.breakers.lock().expect("breaker sinks poisoned");
+        if !breakers.is_empty() {
+            let mut b = Json::obj();
+            for (model, breaker) in breakers.iter() {
+                b = b.set(model, breaker.state().name());
+            }
+            j = j.set("breaker", b);
+        }
+        drop(breakers);
         let sink = self.registry_sink.lock().expect("registry sink poisoned");
         if let Some(sink) = sink.as_ref() {
             j = j.set("registry", sink());
@@ -525,6 +616,55 @@ mod tests {
         m.link_registry(Arc::new(|| Json::obj().set("models", 2u64)));
         let s = m.snapshot();
         assert_eq!(s.path(&["registry", "models"]).unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn fault_counters_serialize() {
+        let m = Metrics::new();
+        m.engine_faults.fetch_add(2, Ordering::Relaxed);
+        m.quarantined.fetch_add(1, Ordering::Relaxed);
+        m.worker_restart_sink().fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.get("engine_faults").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("quarantined").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("worker_restarts").unwrap().as_u64(), Some(4));
+        let h = m.health_json();
+        assert_eq!(h.get("engine_faults").unwrap().as_u64(), Some(2));
+        assert_eq!(h.get("worker_restarts").unwrap().as_u64(), Some(4));
+    }
+
+    #[test]
+    fn breaker_state_in_snapshot() {
+        use super::super::breaker::{BreakerPolicy, BreakerState};
+        let m = Metrics::new();
+        assert!(m.snapshot().get("breaker").is_none(), "no breakers, no key");
+
+        let b = Arc::new(Breaker::new(BreakerPolicy {
+            fault_threshold: 1,
+            cooldown: std::time::Duration::from_secs(60),
+            hang_cap: None,
+        }));
+        m.link_breaker("mlp", Arc::clone(&b));
+        let s = m.snapshot();
+        assert_eq!(s.path(&["breaker", "mlp"]).unwrap().as_str(), Some("closed"));
+
+        b.observe(true, std::time::Duration::ZERO);
+        assert_eq!(b.state(), BreakerState::Open);
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["breaker", "mlp"]).unwrap().as_str(), Some("open"));
+        let h = m.health_json();
+        assert_eq!(
+            h.path(&["models", "mlp", "unhealthy"]).unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(h.path(&["models", "mlp", "trips"]).unwrap().as_u64(), Some(1));
+
+        // Re-linking the same model replaces, not duplicates; unlink drops.
+        m.link_breaker("mlp", Arc::new(Breaker::new(BreakerPolicy::default())));
+        let s3 = m.snapshot();
+        assert_eq!(s3.path(&["breaker", "mlp"]).unwrap().as_str(), Some("closed"));
+        m.unlink_breaker("mlp");
+        assert!(m.snapshot().get("breaker").is_none());
     }
 
     #[test]

@@ -13,12 +13,19 @@
 //!   reordered / CSR layer-wise / XLA artifact) and the
 //!   schedule×precision×workers variant builder,
 //! * [`server`] — worker threads wiring queues → batcher → engine, with
-//!   admission control (bounded queue depth, explicit shed responses)
-//!   and dynamic deploy/undeploy (atomic hot-swap with drain),
+//!   admission control (bounded queue depth, explicit shed responses),
+//!   dynamic deploy/undeploy (atomic hot-swap with drain), and panic
+//!   containment (a faulting engine answers its requests with
+//!   [`InferenceError::EngineFault`] instead of wedging the queue),
+//! * [`breaker`] — per-model circuit breaker (closed → open → half-open
+//!   probes) with an admission-side hang watchdog; open breakers shed
+//!   with [`InferenceError::Unhealthy`],
 //! * [`registry`] — versioned multi-model registry over the server:
 //!   `(model, version) → tier` with warm (mmap-backed) / hot (engine
 //!   resident) tiers, promote-on-first-hit, LRU demotion under a
-//!   resident-bytes budget, and atomic version hot-swaps,
+//!   resident-bytes budget, atomic version hot-swaps, and crash safety
+//!   (corrupt or probe-failing artifacts are quarantined while the
+//!   previous version keeps serving),
 //! * [`metrics`] — counters and fixed-bucket latency histograms with the
 //!   queue-wait vs compute split,
 //! * [`tcp`] — a line-delimited-JSON TCP front-end and matching client.
@@ -27,6 +34,7 @@
 //! [`crate::loadgen`].
 
 pub mod batcher;
+pub mod breaker;
 pub mod metrics;
 pub mod registry;
 pub mod request;
@@ -34,6 +42,7 @@ pub mod router;
 pub mod server;
 pub mod tcp;
 
+pub use breaker::{Breaker, BreakerPolicy, BreakerState};
 pub use registry::{Registry, RegistryConfig, Tier};
 pub use request::{InferenceError, Request, Response};
 pub use router::{ModelVariant, Router, VariantError};

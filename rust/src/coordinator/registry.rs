@@ -22,6 +22,20 @@
 //!
 //! The registry links itself into the server's metrics: snapshots carry
 //! its state under the `registry` key.
+//!
+//! # Crash safety
+//!
+//! A registration never takes down what is already serving. An artifact
+//! that fails to load (bad magic, truncation, CRC mismatch) is
+//! **quarantined**: renamed to `<file>.sfb.quarantined` so rescans skip
+//! it, counted in the `quarantined` counter, and the previously active
+//! version keeps serving untouched. A new version of a hot model is
+//! additionally **probed** before the swap — one zeros-input inference
+//! under `catch_unwind` whose output must have the right shape and be
+//! all-finite; a panicking or NaN-producing candidate is rolled back
+//! (version dropped, file quarantined) while the old version continues
+//! to serve. [`Registry::scan_dir`] applies the same policy per entry:
+//! a corrupt file is skipped and logged, never aborts the scan.
 
 use super::server::{Server, ServerConfig, ServerHandle};
 use crate::model::Model;
@@ -112,6 +126,9 @@ struct RegistryInner {
     demotions: AtomicU64,
     swaps: AtomicU64,
     deploys: AtomicU64,
+    /// Artifacts renamed to `*.sfb.quarantined` after failing load
+    /// validation or the hot-swap probe.
+    quarantined: AtomicU64,
 }
 
 /// Cheap cloneable handle on the registry (shared state behind an
@@ -157,6 +174,7 @@ impl Registry {
             demotions: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
             deploys: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         });
         // Weak: the metrics sink must not keep the registry (and its
         // server threads) alive after the registry is dropped.
@@ -183,6 +201,11 @@ impl Registry {
 
     /// Register every `*.sfb` artifact in `dir` (warm). Returns the
     /// `name@version` labels registered, in scan order.
+    ///
+    /// One bad file never aborts the scan: a corrupt or unreadable
+    /// artifact is quarantined (renamed to `*.sfb.quarantined`, so the
+    /// next scan ignores it) and logged, and the scan moves on to the
+    /// next entry. Only an unreadable *directory* is an error.
     pub fn scan_dir(&self, dir: &Path) -> anyhow::Result<Vec<String>> {
         let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
             .map_err(|e| anyhow::anyhow!("read model dir {}: {e}", dir.display()))?
@@ -192,26 +215,44 @@ impl Registry {
         paths.sort();
         let mut found = Vec::with_capacity(paths.len());
         for path in paths {
-            let (name, version) = self.register(&path)?;
-            found.push(format!("{name}@{version}"));
+            match self.register(&path) {
+                Ok((name, version)) => found.push(format!("{name}@{version}")),
+                Err(e) => {
+                    eprintln!("sparseflow: registry: skipping {}: {e:#}", path.display())
+                }
+            }
         }
         Ok(found)
     }
 
     /// Register one artifact (any [`Model::load`]-able file); the
     /// filename carries `name[@version]`. If it becomes the active
-    /// version of a currently-hot model, the server hot-swaps to it
-    /// atomically (the old version drains first). Returns
-    /// `(name, version)`.
+    /// version of a currently-hot model, the candidate engine is probed
+    /// first and the server hot-swaps to it atomically (the old version
+    /// drains first). A file that fails validation or the probe is
+    /// quarantined and the previously active version keeps serving.
+    /// Returns `(name, version)`.
     pub fn deploy_file(&self, path: &Path) -> anyhow::Result<(String, u64)> {
         self.register(path)
+    }
+
+    /// Artifacts quarantined so far (load/validation or probe failures).
+    pub fn quarantined(&self) -> u64 {
+        self.inner.quarantined.load(Ordering::Relaxed)
     }
 
     fn register(&self, path: &Path) -> anyhow::Result<(String, u64)> {
         let (name, version) = parse_artifact_name(path)?;
         // Full validation up front (checksums for binary artifacts): a
-        // corrupt file must fail at deploy time, not at first hit.
-        let model = Model::load(path)?;
+        // corrupt file must fail — and be quarantined — at deploy time,
+        // not at first hit. Whatever was serving keeps serving.
+        let model = match Model::load(path) {
+            Ok(m) => m,
+            Err(e) => {
+                let note = self.quarantine(path);
+                anyhow::bail!("load {}: {e:#}{note}", path.display());
+            }
+        };
         let bytes = std::fs::metadata(path)
             .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?
             .len();
@@ -232,11 +273,34 @@ impl Registry {
         let mut swap = None;
         if newest != was_active {
             if entry.tier == Tier::Hot {
+                // Build AND probe the candidate before committing the
+                // swap: a version that compiles but panics or emits
+                // NaNs on its first inference is rolled back here, and
+                // `was_active` never stops serving.
                 let info = entry.versions.get(&newest).expect("newest exists");
-                let variant = self.build_variant(&name, &info.model)?;
-                let old_bytes =
-                    entry.versions.get(&was_active).map(|v| v.bytes).unwrap_or(0);
-                swap = Some((variant, info.bytes as i64 - old_bytes as i64));
+                let built = self
+                    .build_variant(&name, &info.model)
+                    .and_then(|v| probe_variant(&v).map(|()| v));
+                match built {
+                    Ok(variant) => {
+                        let old_bytes =
+                            entry.versions.get(&was_active).map(|v| v.bytes).unwrap_or(0);
+                        swap = Some((variant, info.bytes as i64 - old_bytes as i64));
+                    }
+                    Err(e) => {
+                        let bad = entry
+                            .versions
+                            .remove(&newest)
+                            .expect("newest exists")
+                            .path;
+                        drop(st);
+                        let note = self.quarantine(&bad);
+                        anyhow::bail!(
+                            "hot-swap {name}@{newest} rejected, \
+                             still serving {name}@{was_active}: {e:#}{note}"
+                        );
+                    }
+                }
             }
             entry.active = newest;
         }
@@ -247,6 +311,22 @@ impl Registry {
             self.inner.swaps.fetch_add(1, Ordering::Relaxed);
         }
         Ok((name, version))
+    }
+
+    /// Quarantine a failed artifact: rename `<file>` →
+    /// `<file>.quarantined` (so directory scans skip it) and bump both
+    /// the registry and server fault counters. Returns a note for the
+    /// error message; a failed rename is reported, never fatal.
+    fn quarantine(&self, path: &Path) -> String {
+        self.inner.quarantined.fetch_add(1, Ordering::Relaxed);
+        self.inner.server.metrics().quarantined.fetch_add(1, Ordering::Relaxed);
+        let mut target = path.as_os_str().to_os_string();
+        target.push(".quarantined");
+        let target = PathBuf::from(target);
+        match std::fs::rename(path, &target) {
+            Ok(()) => format!(" (quarantined as {})", target.display()),
+            Err(e) => format!(" (quarantine rename failed: {e})"),
+        }
     }
 
     fn build_variant(
@@ -352,6 +432,30 @@ impl Registry {
     }
 }
 
+/// Probe a candidate engine before hot-swapping to it: one zeros-input
+/// inference under `catch_unwind` (the candidate is not yet shared, so
+/// unwind safety is trivial). A panic, a wrong output shape, or any
+/// non-finite output rejects the candidate.
+fn probe_variant(variant: &super::router::ModelVariant) -> anyhow::Result<()> {
+    use crate::exec::batch::BatchMatrix;
+    let engine = variant.route();
+    let n_out = engine.n_outputs();
+    let x = BatchMatrix::zeros(engine.n_inputs(), 1);
+    let y = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.infer(&x)))
+        .map_err(|_| anyhow::anyhow!("probe inference panicked"))?;
+    anyhow::ensure!(
+        y.rows() == n_out && y.batch() == 1,
+        "probe produced {}x{} outputs, expected {n_out}x1",
+        y.rows(),
+        y.batch(),
+    );
+    anyhow::ensure!(
+        y.data().iter().all(|v| v.is_finite()),
+        "probe produced non-finite outputs"
+    );
+    Ok(())
+}
+
 fn snapshot_inner(inner: &RegistryInner) -> Json {
     let st = inner.state.lock().expect("registry state poisoned");
     let mut models = Json::obj();
@@ -381,6 +485,7 @@ fn snapshot_inner(inner: &RegistryInner) -> Json {
         .set("demotions", inner.demotions.load(Ordering::Relaxed))
         .set("swaps", inner.swaps.load(Ordering::Relaxed))
         .set("deploys", inner.deploys.load(Ordering::Relaxed))
+        .set("quarantined", inner.quarantined.load(Ordering::Relaxed))
         .set("models", models)
 }
 
@@ -405,6 +510,26 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         dir
+    }
+
+    /// An artifact that loads and checksums fine but computes NaN on
+    /// every inference (one NaN weight into the output): only the
+    /// hot-swap probe can reject it.
+    fn write_nan_artifact(dir: &Path, file: &str) -> PathBuf {
+        use crate::ffnn::graph::{Conn, Ffnn, NeuronKind};
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Input, NeuronKind::Output],
+            vec![0.0, 0.0, 0.1],
+            vec![
+                Conn { src: 0, dst: 2, weight: f32::NAN },
+                Conn { src: 1, dst: 2, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let path = dir.join(file);
+        Model::from_net(net, Some(order)).save(&path, Format::BinV1).unwrap();
+        path
     }
 
     #[test]
@@ -499,5 +624,77 @@ mod tests {
         assert!(reg.undeploy("m"));
         assert!(!reg.undeploy("m"));
         assert!(reg.handle().infer("m", vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn corrupt_artifact_quarantined_and_scan_continues() {
+        let dir = tmpdir("quarantine");
+        write_artifact(&dir, "a.sfb", 1);
+        std::fs::write(dir.join("b.sfb"), b"not an artifact").unwrap();
+        let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+        let found = reg.scan_dir(&dir).unwrap();
+        assert_eq!(found, vec!["a@1".to_string()], "good artifact still registered");
+        assert!(!dir.join("b.sfb").exists(), "corrupt file renamed away");
+        assert!(dir.join("b.sfb.quarantined").exists());
+        assert_eq!(reg.quarantined(), 1);
+        assert_eq!(reg.snapshot().get("quarantined").unwrap().as_u64(), Some(1));
+        // A rescan skips the quarantined file entirely.
+        let again = reg.scan_dir(&dir).unwrap();
+        assert_eq!(again, vec!["a@1".to_string()]);
+        assert_eq!(reg.quarantined(), 1);
+        // The server-side fault counter mirrors it.
+        let snap = reg.handle().metrics_snapshot();
+        assert_eq!(snap.get("quarantined").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn corrupt_new_version_keeps_old_version_serving() {
+        let dir = tmpdir("rollback-corrupt");
+        write_artifact(&dir, "m@1.sfb", 10);
+        let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+        reg.scan_dir(&dir).unwrap();
+        reg.ensure_hot("m").unwrap();
+        let h = reg.handle();
+        let n = h.n_inputs("m").unwrap();
+        let before = h.infer("m", vec![0.5; n]).unwrap().output;
+
+        std::fs::write(dir.join("m@2.sfb"), b"garbage").unwrap();
+        assert!(reg.deploy_file(&dir.join("m@2.sfb")).is_err());
+        assert_eq!(reg.active_version("m"), Some(1));
+        assert!(dir.join("m@2.sfb.quarantined").exists());
+        let after = h.infer("m", vec![0.5; n]).unwrap().output;
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&before), bits(&after), "old version serves bit-identically");
+    }
+
+    #[test]
+    fn faulty_probe_rolls_back_hot_swap() {
+        let dir = tmpdir("rollback-probe");
+        write_artifact(&dir, "m@1.sfb", 10);
+        let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+        reg.scan_dir(&dir).unwrap();
+        reg.ensure_hot("m").unwrap();
+        let h = reg.handle();
+        let n = h.n_inputs("m").unwrap();
+        let before = h.infer("m", vec![0.25; n]).unwrap().output;
+
+        // v2 passes load + CRC but emits NaN; the probe rejects it and
+        // the registry rolls back without disturbing v1.
+        let v2 = write_nan_artifact(&dir, "m@2.sfb");
+        let err = reg.deploy_file(&v2).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "unexpected error: {err}");
+        assert_eq!(reg.active_version("m"), Some(1), "rolled back to v1");
+        assert_eq!(reg.tier("m"), Some(Tier::Hot), "v1 still hot");
+        assert!(dir.join("m@2.sfb.quarantined").exists());
+        assert_eq!(reg.quarantined(), 1);
+        let after = h.infer("m", vec![0.25; n]).unwrap().output;
+        assert_eq!(
+            before.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            after.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+        );
+        // A corrected v2 then deploys (hot-swaps) normally.
+        let v2good = write_artifact(&dir, "m@2.sfb", 11);
+        reg.deploy_file(&v2good).unwrap();
+        assert_eq!(reg.active_version("m"), Some(2));
     }
 }

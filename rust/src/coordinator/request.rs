@@ -54,16 +54,38 @@ pub enum InferenceError {
     DeadlineExceeded,
     ShuttingDown,
     EngineFailure(String),
+    /// The engine panicked while computing this request. The panic was
+    /// contained by the dispatcher (`catch_unwind`): the queue stays
+    /// alive, batchmates were re-dispatched individually, and this
+    /// request is the one whose row provoked (or coincided with) the
+    /// fault. The server did real work but produced no output.
+    EngineFault { engine: &'static str },
+    /// The model's circuit breaker is open: `K` consecutive engine
+    /// faults (or a hung inference past the wall-clock cap) marked it
+    /// unhealthy, and submissions are shed until a half-open probe
+    /// succeeds. The server did no work; back off and retry.
+    Unhealthy { model: String },
 }
 
 impl InferenceError {
     /// True for load-shedding rejections (admission control / deadline
-    /// misses) as opposed to malformed requests or server faults.
+    /// misses / open circuit breaker) as opposed to malformed requests
+    /// or server faults.
     pub fn is_shed(&self) -> bool {
         matches!(
             self,
-            InferenceError::QueueFull { .. } | InferenceError::DeadlineExceeded
+            InferenceError::QueueFull { .. }
+                | InferenceError::DeadlineExceeded
+                | InferenceError::Unhealthy { .. }
         )
+    }
+
+    /// True when the rejection reflects model health (open breaker)
+    /// rather than load. The TCP front-end marks these replies with
+    /// `"unhealthy": true` so clients can distinguish "try another
+    /// replica" from "back off".
+    pub fn is_unhealthy(&self) -> bool {
+        matches!(self, InferenceError::Unhealthy { .. })
     }
 }
 
@@ -82,6 +104,12 @@ impl std::fmt::Display for InferenceError {
             }
             InferenceError::ShuttingDown => write!(f, "server is shutting down"),
             InferenceError::EngineFailure(e) => write!(f, "engine failure: {e}"),
+            InferenceError::EngineFault { engine } => {
+                write!(f, "engine fault: {engine} panicked during inference")
+            }
+            InferenceError::Unhealthy { model } => {
+                write!(f, "model {model:?} unhealthy: circuit breaker open")
+            }
         }
     }
 }
@@ -101,14 +129,29 @@ mod tests {
             .contains("expected 4"));
         assert!(InferenceError::QueueFull { depth: 9 }.to_string().contains("depth 9"));
         assert!(InferenceError::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(InferenceError::EngineFault { engine: "fused" }
+            .to_string()
+            .contains("engine fault: fused"));
+        assert!(InferenceError::Unhealthy { model: "m".into() }
+            .to_string()
+            .contains("circuit breaker open"));
     }
 
     #[test]
     fn shed_classification() {
         assert!(InferenceError::QueueFull { depth: 1 }.is_shed());
         assert!(InferenceError::DeadlineExceeded.is_shed());
+        assert!(InferenceError::Unhealthy { model: "m".into() }.is_shed());
         assert!(!InferenceError::UnknownModel("m".into()).is_shed());
         assert!(!InferenceError::BadInputLength { expected: 1, got: 2 }.is_shed());
         assert!(!InferenceError::ShuttingDown.is_shed());
+        assert!(!InferenceError::EngineFault { engine: "interp" }.is_shed());
+    }
+
+    #[test]
+    fn unhealthy_classification() {
+        assert!(InferenceError::Unhealthy { model: "m".into() }.is_unhealthy());
+        assert!(!InferenceError::QueueFull { depth: 1 }.is_unhealthy());
+        assert!(!InferenceError::EngineFault { engine: "interp" }.is_unhealthy());
     }
 }

@@ -10,14 +10,26 @@
 //! default SLO), the batcher closes batches early when the oldest
 //! request's budget is nearly spent, and the dispatcher drops requests
 //! whose deadline already passed before compute starts.
+//!
+//! The pipeline is also fault-contained: engine execution runs under
+//! `catch_unwind`, so a panicking inference answers
+//! [`InferenceError::EngineFault`] instead of killing the dispatcher —
+//! the queue never dies — and the rest of the batch is re-dispatched
+//! individually so one bad row cannot poison its batchmates. Each model
+//! carries a circuit breaker ([`super::breaker`]): K consecutive faults
+//! (or a hung inference past the wall-clock cap) open it, submissions
+//! shed with [`InferenceError::Unhealthy`] while open, and a half-open
+//! probe request closes it again once the engine recovers.
 
 use super::batcher::{next_batch, BatchPolicy, QueueMsg};
+use super::breaker::{Breaker, BreakerPolicy};
 use super::metrics::Metrics;
 use super::request::{InferenceError, Request, Response};
 use super::router::Router;
 use crate::exec::batch::BatchMatrix;
 use super::router::ModelVariant;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
@@ -41,15 +53,21 @@ pub struct AdmissionPolicy {
 pub struct ServerConfig {
     pub batch: BatchPolicy,
     pub admission: AdmissionPolicy,
+    /// Circuit-breaker thresholds applied to every deployed model (each
+    /// model gets its own breaker instance; hot-swaps install a fresh
+    /// one). The default policy is disabled.
+    pub breaker: BreakerPolicy,
 }
 
 /// Per-model queue endpoint shared by the server and its handles: the
-/// sender plus the live queue-depth counter admission control reads.
+/// sender plus the live queue-depth counter admission control reads,
+/// plus the model's circuit breaker.
 #[derive(Clone)]
 struct ModelQueue {
     tx: mpsc::Sender<QueueMsg>,
     depth: Arc<AtomicUsize>,
     n_inputs: usize,
+    breaker: Arc<Breaker>,
 }
 
 /// A running server. Models can be deployed and undeployed while it
@@ -60,6 +78,7 @@ pub struct Server {
     queues: Arc<RwLock<BTreeMap<String, ModelQueue>>>,
     batch: BatchPolicy,
     admission: AdmissionPolicy,
+    breaker_policy: BreakerPolicy,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     threads: Mutex<Vec<thread::JoinHandle<()>>>,
@@ -73,6 +92,7 @@ impl Server {
             queues: Arc::new(RwLock::new(BTreeMap::new())),
             batch: config.batch,
             admission: config.admission,
+            breaker_policy: config.breaker,
             metrics: Arc::new(Metrics::new()),
             next_id: Arc::new(AtomicU64::new(1)),
             threads: Mutex::new(Vec::new()),
@@ -114,16 +134,30 @@ impl Server {
             self.metrics.link_tiled_stats(&name, stats.clone());
         }
         self.metrics.link_kernel(&name, variant.kernel);
+        // A fresh breaker per deploy: the new engine generation starts
+        // healthy regardless of the old one's fault history.
+        let breaker = Arc::new(Breaker::new(self.breaker_policy));
+        self.metrics.link_breaker(&name, Arc::clone(&breaker));
 
         let (tx, rx) = mpsc::channel::<QueueMsg>();
         let depth = Arc::new(AtomicUsize::new(0));
         let metrics = Arc::clone(&self.metrics);
         let policy = self.batch;
         let thread_depth = Arc::clone(&depth);
+        let thread_breaker = Arc::clone(&breaker);
         let handle = thread::Builder::new()
             .name(format!("sparseflow-dispatch-{name}"))
             .spawn(move || {
-                dispatch_loop(rx, thread_depth, engine, engine_name, n_inputs, policy, metrics);
+                dispatch_loop(
+                    rx,
+                    thread_depth,
+                    engine,
+                    engine_name,
+                    n_inputs,
+                    policy,
+                    metrics,
+                    thread_breaker,
+                );
             })
             .expect("spawn dispatcher");
         self.threads.lock().unwrap().push(handle);
@@ -132,7 +166,7 @@ impl Server {
             .queues
             .write()
             .unwrap()
-            .insert(name, ModelQueue { tx, depth, n_inputs });
+            .insert(name, ModelQueue { tx, depth, n_inputs, breaker });
         if let Some(old) = old {
             // Old dispatcher drains everything already enqueued, then
             // exits and releases its engine.
@@ -146,6 +180,7 @@ impl Server {
         match self.queues.write().unwrap().remove(model) {
             Some(q) => {
                 let _ = q.tx.send(QueueMsg::Shutdown);
+                self.metrics.unlink_breaker(model);
                 true
             }
             None => false,
@@ -184,6 +219,18 @@ impl Drop for Server {
     }
 }
 
+// Panic-safety of `catch_unwind(AssertUnwindSafe(|| engine.infer(..)))`:
+// engines are effectively unwind-safe even though `Arc<dyn Engine>` does
+// not implement `UnwindSafe` structurally. `infer` takes `&self` over
+// state that is either immutable after construction (compiled programs,
+// weight streams) or internally synchronized with poison-tolerant
+// primitives: the scratch pools (`exec::scratch`) only ever `try_lock`
+// and skip unavailable slots, so a mutex poisoned mid-panic degrades to
+// a permanently skipped slot, and `util::threadpool::par_map` (batch
+// sharding) recovers its own mutexes and re-raises the first worker
+// panic. No code path can observe torn interior state after an unwind —
+// the worst case is a wasted scratch buffer.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
     rx: mpsc::Receiver<QueueMsg>,
     depth: Arc<AtomicUsize>,
@@ -192,6 +239,7 @@ fn dispatch_loop(
     n_inputs: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
+    breaker: Arc<Breaker>,
 ) {
     loop {
         let (batch, stop) = next_batch(&rx, &policy, &depth);
@@ -241,27 +289,113 @@ fn dispatch_loop(
             }
         }
         let compute_start = Instant::now();
-        let y = engine.infer(&x);
-        metrics.observe_compute(compute_start.elapsed().as_secs_f64(), bsize);
-        let n_out = y.rows();
-
-        let now = Instant::now();
-        for (col, req) in valid.into_iter().enumerate() {
-            let output: Vec<f32> = (0..n_out).map(|r| y.row(r)[col]).collect();
-            let latency = now.duration_since(req.enqueued).as_secs_f64();
-            metrics.observe_latency(latency);
-            metrics.responses.fetch_add(1, Ordering::Relaxed);
-            let _ = req.reply.send(Ok(Response {
-                id: req.id,
-                output,
-                engine: engine_name,
-                batch_size: bsize,
-                latency_secs: latency,
-                queue_wait_secs: dispatched.duration_since(req.enqueued).as_secs_f64(),
-            }));
+        breaker.begin_inference();
+        // See the unwind-safety note above this function. The shared
+        // queue-depth counter needs no attention on the unwind path:
+        // `next_batch` already decremented it when it popped these
+        // requests, so containing the panic here leaks no depth and the
+        // dispatcher (and its queue) stays alive.
+        let result = catch_unwind(AssertUnwindSafe(|| engine.infer(&x)));
+        let compute_elapsed = compute_start.elapsed();
+        match result {
+            Ok(y) => {
+                breaker.observe(false, compute_elapsed);
+                metrics.observe_compute(compute_elapsed.as_secs_f64(), bsize);
+                let n_out = y.rows();
+                let now = Instant::now();
+                for (col, req) in valid.into_iter().enumerate() {
+                    let output: Vec<f32> = (0..n_out).map(|r| y.row(r)[col]).collect();
+                    let latency = now.duration_since(req.enqueued).as_secs_f64();
+                    metrics.observe_latency(latency);
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Ok(Response {
+                        id: req.id,
+                        output,
+                        engine: engine_name,
+                        batch_size: bsize,
+                        latency_secs: latency,
+                        queue_wait_secs: dispatched.duration_since(req.enqueued).as_secs_f64(),
+                    }));
+                }
+            }
+            Err(_) => {
+                metrics.engine_faults.fetch_add(1, Ordering::Relaxed);
+                breaker.observe(true, compute_elapsed);
+                if bsize == 1 {
+                    // The request already failed solo — no retry to run.
+                    let req = valid.pop().expect("bsize == 1");
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req
+                        .reply
+                        .send(Err(InferenceError::EngineFault { engine: engine_name }));
+                } else {
+                    // Re-dispatch the batch members individually: one bad
+                    // row must not poison its batchmates. Clean rows get
+                    // full served replies (batch_size 1); the faulting
+                    // row(s) get EngineFault.
+                    redispatch_singly(
+                        valid,
+                        dispatched,
+                        &engine,
+                        engine_name,
+                        n_inputs,
+                        &metrics,
+                        &breaker,
+                    );
+                }
+            }
         }
         if stop {
             break;
+        }
+    }
+}
+
+/// Run each request of a panicked batch alone under `catch_unwind` (see
+/// the unwind-safety note on [`dispatch_loop`]).
+fn redispatch_singly(
+    requests: Vec<Request>,
+    dispatched: Instant,
+    engine: &Arc<dyn crate::exec::Engine>,
+    engine_name: &'static str,
+    n_inputs: usize,
+    metrics: &Metrics,
+    breaker: &Breaker,
+) {
+    for req in requests {
+        let mut x = BatchMatrix::zeros(n_inputs, 1);
+        for (row, &v) in req.input.iter().enumerate() {
+            x.row_mut(row)[0] = v;
+        }
+        let compute_start = Instant::now();
+        breaker.begin_inference();
+        let result = catch_unwind(AssertUnwindSafe(|| engine.infer(&x)));
+        let compute_elapsed = compute_start.elapsed();
+        match result {
+            Ok(y) => {
+                breaker.observe(false, compute_elapsed);
+                metrics.observe_compute(compute_elapsed.as_secs_f64(), 1);
+                let output: Vec<f32> = (0..y.rows()).map(|r| y.row(r)[0]).collect();
+                let latency = req.enqueued.elapsed().as_secs_f64();
+                metrics.observe_latency(latency);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Ok(Response {
+                    id: req.id,
+                    output,
+                    engine: engine_name,
+                    batch_size: 1,
+                    latency_secs: latency,
+                    queue_wait_secs: dispatched.duration_since(req.enqueued).as_secs_f64(),
+                }));
+            }
+            Err(_) => {
+                metrics.engine_faults.fetch_add(1, Ordering::Relaxed);
+                breaker.observe(true, compute_elapsed);
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = req
+                    .reply
+                    .send(Err(InferenceError::EngineFault { engine: engine_name }));
+            }
         }
     }
 }
@@ -305,6 +439,12 @@ impl ServerHandle {
         let queue = queues
             .get(model)
             .ok_or_else(|| InferenceError::UnknownModel(model.to_string()))?;
+        // Circuit breaker first: queueing behind an unhealthy (or
+        // wedged) engine is doomed work regardless of queue depth.
+        if !queue.breaker.admit() {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(InferenceError::Unhealthy { model: model.to_string() });
+        }
         if self.admission.max_queue > 0 {
             let cur = queue.depth.load(Ordering::Relaxed);
             if cur >= self.admission.max_queue {
@@ -361,6 +501,12 @@ impl ServerHandle {
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Json {
         self.metrics.snapshot()
+    }
+
+    /// Fault counters + per-model breaker state (the TCP `health`
+    /// command's payload; see [`Metrics::health_json`]).
+    pub fn health_snapshot(&self) -> crate::util::json::Json {
+        self.metrics.health_json()
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -544,6 +690,7 @@ mod tests {
                     ..Default::default()
                 },
                 admission: AdmissionPolicy { max_queue: 8, ..Default::default() },
+                ..Default::default()
             },
         );
         let h = server.handle();
@@ -805,5 +952,194 @@ mod tests {
         let lat = drive_load(&h, "d", |_, _| vec![1.0, 1.0, 1.0], 50, 4);
         assert_eq!(lat.len(), 50);
         assert!(lat.iter().all(|&l| l >= 0.0));
+    }
+
+    /// Doubler that panics when any input column starts with 666.0.
+    struct PanicOnMagic;
+    impl Engine for PanicOnMagic {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            if x.row(0).iter().any(|&v| v == 666.0) {
+                panic!("poisoned input");
+            }
+            Doubler.infer(x)
+        }
+        fn name(&self) -> &'static str {
+            "panic-on-magic"
+        }
+        fn n_inputs(&self) -> usize {
+            3
+        }
+        fn n_outputs(&self) -> usize {
+            3
+        }
+    }
+
+    #[test]
+    fn engine_panic_replies_fault_and_queue_survives() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(PanicOnMagic)));
+        let server = Server::start(router, ServerConfig::default());
+        let h = server.handle();
+        assert_eq!(
+            h.infer("m", vec![666.0, 0.0, 0.0]).unwrap_err(),
+            InferenceError::EngineFault { engine: "panic-on-magic" }
+        );
+        // The dispatcher survived: the next request is served normally.
+        let r = h.infer("m", vec![2.0, 0.0, 0.0]).unwrap();
+        assert_eq!(r.output, vec![4.0, 0.0, 0.0]);
+        let s = h.metrics_snapshot();
+        assert_eq!(s.get("engine_faults").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("errors").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("responses").unwrap().as_u64(), Some(1));
+        assert_eq!(h.queue_depth("m"), Some(0), "no depth leaked on unwind");
+    }
+
+    #[test]
+    fn batch_panic_redispatches_batchmates_individually() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(PanicOnMagic)));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(20),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        // One poisoned row among clean ones, submitted async so the
+        // batcher can group them.
+        let poisoned = h.submit("m", vec![666.0, 0.0, 0.0]).unwrap();
+        let clean: Vec<_> = (0..7)
+            .map(|i| (i, h.submit("m", vec![i as f32, 1.0, 2.0]).unwrap()))
+            .collect();
+        assert_eq!(
+            poisoned.recv().unwrap().unwrap_err(),
+            InferenceError::EngineFault { engine: "panic-on-magic" }
+        );
+        for (i, rx) in clean {
+            let r = rx.recv().unwrap().expect("batchmates must not be poisoned");
+            assert_eq!(r.output, vec![2.0 * i as f32, 2.0, 4.0]);
+        }
+        let s = h.metrics_snapshot();
+        assert_eq!(s.get("responses").unwrap().as_u64(), Some(7));
+        assert_eq!(s.get("errors").unwrap().as_u64(), Some(1));
+        assert!(s.get("engine_faults").unwrap().as_u64().unwrap() >= 1);
+        // Queue still alive afterwards.
+        assert!(h.infer("m", vec![1.0, 1.0, 1.0]).is_ok());
+    }
+
+    /// Panics while an `AtomicBool` is set; recovers when cleared.
+    struct Flaky(Arc<std::sync::atomic::AtomicBool>);
+    impl Engine for Flaky {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            if self.0.load(Ordering::SeqCst) {
+                panic!("flaky engine down");
+            }
+            Doubler.infer(x)
+        }
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn n_inputs(&self) -> usize {
+            3
+        }
+        fn n_outputs(&self) -> usize {
+            3
+        }
+    }
+
+    #[test]
+    fn breaker_opens_after_k_faults_and_recovers_via_probe() {
+        let down = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(Flaky(Arc::clone(&down)))));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                breaker: BreakerPolicy {
+                    fault_threshold: 2,
+                    cooldown: Duration::from_millis(50),
+                    hang_cap: None,
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        for _ in 0..2 {
+            assert_eq!(
+                h.infer("m", vec![1.0; 3]).unwrap_err(),
+                InferenceError::EngineFault { engine: "flaky" }
+            );
+        }
+        // K = 2 consecutive faults: breaker open, submissions shed
+        // without reaching the engine.
+        let err = h.infer("m", vec![1.0; 3]).unwrap_err();
+        assert_eq!(err, InferenceError::Unhealthy { model: "m".into() });
+        assert!(err.is_shed());
+        let s = h.metrics_snapshot();
+        assert_eq!(s.path(&["breaker", "m"]).unwrap().as_str(), Some("open"));
+        assert_eq!(
+            s.path(&["models", "m", "unhealthy"]),
+            None,
+            "breaker detail lives in health_json, not snapshot"
+        );
+        let health = h.health_snapshot();
+        assert_eq!(
+            health.path(&["models", "m", "unhealthy"]).unwrap().as_bool(),
+            Some(true)
+        );
+
+        // Engine recovers; after the cooldown one probe is admitted,
+        // succeeds, and closes the breaker.
+        down.store(false, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(60));
+        let r = h.infer("m", vec![3.0; 3]).expect("half-open probe served");
+        assert_eq!(r.output, vec![6.0; 3]);
+        let health = h.health_snapshot();
+        assert_eq!(
+            health.path(&["models", "m", "state"]).unwrap().as_str(),
+            Some("closed")
+        );
+        assert_eq!(
+            health.path(&["models", "m", "unhealthy"]).unwrap().as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn hung_inference_sheds_unhealthy_at_admission() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new(
+            "m",
+            Arc::new(SlowDoubler(Duration::from_millis(200))),
+        ));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                breaker: BreakerPolicy {
+                    fault_threshold: 0,
+                    cooldown: Duration::from_secs(5),
+                    hang_cap: Some(Duration::from_millis(30)),
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        let inflight = h.submit("m", vec![1.0; 3]).unwrap();
+        // Give the dispatcher time to start the (slow) inference, then
+        // exceed the hang cap.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            h.infer("m", vec![1.0; 3]).unwrap_err(),
+            InferenceError::Unhealthy { model: "m".into() },
+            "wedged inference must shed new work"
+        );
+        // The slow request itself still completes (it was admitted).
+        let r = inflight.recv().unwrap().expect("slow request still served");
+        assert_eq!(r.output, vec![2.0; 3]);
     }
 }

@@ -12,11 +12,16 @@
 //!     artifact (registry front-ends only; see
 //!     [`TcpFrontend::serve_registry`])
 //!   → `{"cmd": "undeploy", "model": "m"}`           remove a model
+//!   → `{"cmd": "health"}`                           fault counters +
+//!     per-model circuit-breaker state
 //!   ← `{"ok": true, "output": [...], "engine": "...",
 //!      "latency_ms": ..., "queue_wait_ms": ...}`
 //!   ← `{"ok": false, "error": "..."}`               malformed request
 //!   ← `{"ok": false, "error": "...", "shed": true}` load shed (queue
 //!     full or deadline missed) — back off and retry
+//!   ← `{"ok": false, "error": "...", "shed": true, "unhealthy": true}`
+//!     the model's circuit breaker is open — back off for at least the
+//!     breaker cooldown (see the README's "Failure semantics")
 //!
 //! Every error is answered on the same connection; the connection stays
 //! usable afterwards. Lines longer than [`MAX_LINE_BYTES`] are rejected
@@ -24,6 +29,16 @@
 //!
 //! One thread per connection (the dynamic batcher merges concurrent
 //! requests across connections, so per-connection threads are cheap).
+//!
+//! # Shutdown ordering
+//!
+//! Dropping the [`TcpFrontend`] *drains*: connection threads poll their
+//! sockets with a short read timeout, so each one notices the stop flag
+//! within a bounded interval, finishes answering every request it has
+//! already read, and exits — the drop joins them all without wedging on
+//! idle clients. Drop the front-end **before** the server so in-flight
+//! requests get replies rather than closed sockets; the server's own
+//! drop then drains its dispatch loops.
 
 use super::registry::Registry;
 use super::server::ServerHandle;
@@ -40,7 +55,14 @@ use std::time::Duration;
 /// being parsed, so a misbehaving client cannot balloon server memory.
 pub const MAX_LINE_BYTES: usize = 1 << 20;
 
-/// A running TCP front-end; dropping stops accepting new connections.
+/// Socket read timeout for connection threads: the interval at which an
+/// idle connection re-checks the front-end's stop flag. Bounds how long
+/// [`TcpFrontend`]'s drop can block on a silent client.
+const CONN_POLL: Duration = Duration::from_millis(250);
+
+/// A running TCP front-end; dropping stops accepting new connections,
+/// then joins every connection thread — each drains (answers whatever
+/// it already read) within [`CONN_POLL`] of the stop flag being set.
 pub struct TcpFrontend {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -88,9 +110,15 @@ impl TcpFrontend {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             stream.set_nonblocking(false).ok();
+                            // Short read timeout: the connection thread
+                            // polls the stop flag between reads, so a
+                            // drop drains within a bounded interval even
+                            // when clients sit idle on open sockets.
+                            stream.set_read_timeout(Some(CONN_POLL)).ok();
                             let c = ctx.clone();
+                            let s = Arc::clone(&stop2);
                             conn_threads.push(thread::spawn(move || {
-                                let _ = handle_conn(stream, c);
+                                let _ = handle_conn(stream, c, s);
                             }));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -137,7 +165,17 @@ enum LineRead {
 /// `MAX_LINE_BYTES + 1` bytes: the guard must hold at the *read* layer —
 /// checking after `BufRead::lines` has already accumulated the line
 /// would let a client without newlines balloon server memory.
-fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
+///
+/// `stop`: with a socket read timeout installed, timeouts surface as
+/// `WouldBlock`/`TimedOut` — the loop swallows them (preserving blocking
+/// semantics, including for a partially read line) until the flag is
+/// set, then reports `Eof` so the caller drains out. A half-read line at
+/// shutdown can never become an answerable request, so dropping it loses
+/// nothing that was accepted.
+fn read_line_capped(
+    reader: &mut impl BufRead,
+    stop: Option<&AtomicBool>,
+) -> std::io::Result<LineRead> {
     let mut buf: Vec<u8> = Vec::new();
     let mut total = 0usize;
     let finish = |buf: Vec<u8>, total: usize| {
@@ -151,7 +189,21 @@ fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
     };
     loop {
         let (used, found_nl) = {
-            let chunk = reader.fill_buf()?;
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.map_or(false, |s| s.load(Ordering::Relaxed)) {
+                        return Ok(LineRead::Eof);
+                    }
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
             if chunk.is_empty() {
                 return Ok(if total == 0 { LineRead::Eof } else { finish(buf, total) });
             }
@@ -173,12 +225,12 @@ fn read_line_capped(reader: &mut impl BufRead) -> std::io::Result<LineRead> {
     }
 }
 
-fn handle_conn(stream: TcpStream, ctx: Ctx) -> anyhow::Result<()> {
+fn handle_conn(stream: TcpStream, ctx: Ctx, stop: Arc<AtomicBool>) -> anyhow::Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     loop {
-        let reply = match read_line_capped(&mut reader) {
+        let reply = match read_line_capped(&mut reader, Some(&stop)) {
             Err(_) | Ok(LineRead::Eof) => break, // client went away
             Ok(LineRead::Line(line)) => {
                 if line.trim().is_empty() {
@@ -213,6 +265,7 @@ fn process_line(line: &str, ctx: &Ctx) -> Json {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "metrics" => Json::obj().set("ok", true).set("metrics", handle.metrics_snapshot()),
+            "health" => Json::obj().set("ok", true).set("health", handle.health_snapshot()),
             "models" => {
                 // Registry mode lists every registered model (warm ones
                 // included) plus the tiered detail; plain mode lists the
@@ -316,6 +369,12 @@ fn process_line(line: &str, ctx: &Ctx) -> Json {
             if e.is_shed() {
                 j = j.set("shed", true);
             }
+            // Breaker-open sheds carry a second marker so clients can
+            // distinguish "overloaded, retry soon" from "unhealthy,
+            // back off for the cooldown".
+            if e.is_unhealthy() {
+                j = j.set("unhealthy", true);
+            }
             j
         }
     }
@@ -384,27 +443,27 @@ mod tests {
         data.push(b'\n');
         data.extend_from_slice(b"{\"cmd\": \"models\"}\n");
         let mut r = std::io::Cursor::new(data);
-        match read_line_capped(&mut r).unwrap() {
+        match read_line_capped(&mut r, None).unwrap() {
             LineRead::Oversized(len) => assert_eq!(len, 3 * (1 << 20)),
             _ => panic!("expected oversized"),
         }
-        match read_line_capped(&mut r).unwrap() {
+        match read_line_capped(&mut r, None).unwrap() {
             LineRead::Line(l) => assert_eq!(l, "{\"cmd\": \"models\"}"),
             _ => panic!("expected line"),
         }
-        assert!(matches!(read_line_capped(&mut r).unwrap(), LineRead::Eof));
+        assert!(matches!(read_line_capped(&mut r, None).unwrap(), LineRead::Eof));
 
         // Oversized final line without a trailing newline still reports.
         let mut r = std::io::Cursor::new(vec![b'b'; MAX_LINE_BYTES + 5]);
         assert!(matches!(
-            read_line_capped(&mut r).unwrap(),
+            read_line_capped(&mut r, None).unwrap(),
             LineRead::Oversized(len) if len == MAX_LINE_BYTES + 5
         ));
 
         // Invalid UTF-8 is flagged without killing the stream.
         let mut r = std::io::Cursor::new(vec![0xff, 0xfe, b'\n', b'x', b'\n']);
-        assert!(matches!(read_line_capped(&mut r).unwrap(), LineRead::BadUtf8));
-        assert!(matches!(read_line_capped(&mut r).unwrap(), LineRead::Line(l) if l == "x"));
+        assert!(matches!(read_line_capped(&mut r, None).unwrap(), LineRead::BadUtf8));
+        assert!(matches!(read_line_capped(&mut r, None).unwrap(), LineRead::Line(l) if l == "x"));
     }
 
     #[test]
@@ -544,5 +603,106 @@ mod tests {
         // Deploy of a missing/garbage path fails cleanly.
         let bad = process_line(r#"{"cmd": "deploy", "path": "/nonexistent.sfb"}"#, &ctx);
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn health_command_reports_fault_counters() {
+        use crate::coordinator::router::{ModelVariant, Router};
+        use crate::coordinator::server::{Server, ServerConfig};
+        use crate::exec::batch::BatchMatrix;
+        use crate::exec::Engine;
+        use std::sync::Arc;
+        struct Id;
+        impl Engine for Id {
+            fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+                x.clone()
+            }
+            fn name(&self) -> &'static str {
+                "id"
+            }
+            fn n_inputs(&self) -> usize {
+                2
+            }
+            fn n_outputs(&self) -> usize {
+                2
+            }
+        }
+        let mut r = Router::new();
+        r.register(ModelVariant::new("m", Arc::new(Id)));
+        let server = Box::leak(Box::new(Server::start(r, ServerConfig::default())));
+        let ctx = Ctx { handle: server.handle(), registry: None };
+
+        let h = process_line(r#"{"cmd": "health"}"#, &ctx);
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+        assert_eq!(h.path(&["health", "engine_faults"]).unwrap().as_u64(), Some(0));
+        assert_eq!(h.path(&["health", "worker_restarts"]).unwrap().as_u64(), Some(0));
+        assert_eq!(h.path(&["health", "quarantined"]).unwrap().as_u64(), Some(0));
+        assert_eq!(
+            h.path(&["health", "models", "m", "state"]).unwrap().as_str(),
+            Some("closed")
+        );
+        assert_eq!(
+            h.path(&["health", "models", "m", "unhealthy"]).unwrap().as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn frontend_drop_drains_inflight_replies() {
+        use crate::coordinator::router::{ModelVariant, Router};
+        use crate::coordinator::server::{Server, ServerConfig};
+        use crate::exec::batch::BatchMatrix;
+        use crate::exec::Engine;
+        use std::sync::Arc;
+        use std::time::Instant;
+        struct Slow;
+        impl Engine for Slow {
+            fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+                std::thread::sleep(Duration::from_millis(200));
+                x.clone()
+            }
+            fn name(&self) -> &'static str {
+                "slow-id"
+            }
+            fn n_inputs(&self) -> usize {
+                2
+            }
+            fn n_outputs(&self) -> usize {
+                2
+            }
+        }
+        let mut r = Router::new();
+        r.register(ModelVariant::new("m", Arc::new(Slow)));
+        let server = Box::leak(Box::new(Server::start(r, ServerConfig::default())));
+
+        // In-flight request: the drop must wait for its reply to go out.
+        let fe = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+        let addr = fe.addr;
+        let client = thread::spawn(move || {
+            let mut c = TcpClient::connect(&addr).unwrap();
+            c.infer("m", &[1.0, 2.0]).unwrap()
+        });
+        thread::sleep(Duration::from_millis(60)); // request read, inference running
+        let t0 = Instant::now();
+        drop(fe);
+        assert!(t0.elapsed() < Duration::from_secs(5), "drop must not hang");
+        assert_eq!(
+            client.join().unwrap(),
+            vec![1.0, 2.0],
+            "in-flight request answered, not cut off"
+        );
+
+        // Idle connected client: before the read-timeout polling, this
+        // join wedged forever on the blocking read.
+        let fe = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+        let idle = TcpStream::connect(fe.addr).unwrap();
+        thread::sleep(Duration::from_millis(30)); // let the acceptor pick it up
+        let t0 = Instant::now();
+        drop(fe);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "idle connection must not wedge shutdown"
+        );
+        drop(idle);
     }
 }

@@ -1,0 +1,359 @@
+//! Deterministic fault injection for chaos-testing the serving plane.
+//!
+//! A [`FaultPlan`] maps engine-invocation indices to faults — injected
+//! panics, fixed delays, NaN-poisoned outputs — and [`FaultyEngine`]
+//! wraps any [`Engine`], consulting the plan on every `infer` call via
+//! a shared atomic call counter. Plans are either spelled out
+//! explicitly (`"panic@2,delay:20@5,nan@9"`) or derived from a seed
+//! (`"seed:42:4:100"` = 4 faults among the first 100 calls, kinds and
+//! indices drawn from `Pcg64(42)`), so a chaos run is exactly
+//! reproducible: the same plan against the same workload injects the
+//! same faults at the same invocations. Each plan entry fires exactly
+//! once — the dispatcher's re-dispatch of a panicked batch sees fresh
+//! invocation indices and therefore succeeds, which is precisely the
+//! transient-fault shape the containment machinery must absorb.
+//!
+//! Artifact corruption (the registry's quarantine path) is a file-level
+//! fault: [`flip_byte`] deterministically flips one byte of an `.sfb`
+//! so its CRC validation fails on load.
+//!
+//! Indices count *engine invocations* (batches), not client requests:
+//! batch composition under concurrency is timing-dependent, but the
+//! number and kind of injected faults is exact.
+
+use super::batch::BatchMatrix;
+use super::Engine;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// One injected fault (see [`FaultPlan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside `infer` — exercises `catch_unwind` containment.
+    Panic,
+    /// Sleep this many milliseconds before computing — exercises the
+    /// hang watchdog and deadline machinery.
+    DelayMs(u64),
+    /// Compute, then overwrite every output with NaN — exercises
+    /// payload-corruption flow (served, but poisoned).
+    Nan,
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::Panic => write!(f, "panic"),
+            Fault::DelayMs(ms) => write!(f, "delay:{ms}"),
+            Fault::Nan => write!(f, "nan"),
+        }
+    }
+}
+
+/// A deterministic schedule of faults keyed by engine-invocation index
+/// (see module docs for the spec syntax).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: BTreeMap<u64, Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a fault at an invocation index (last write wins per index).
+    pub fn with(mut self, index: u64, fault: Fault) -> FaultPlan {
+        self.entries.insert(index, fault);
+        self
+    }
+
+    /// Parse a plan spec: either `seed:<seed>:<count>:<horizon>` or a
+    /// comma-separated list of `<kind>@<index>` entries with kind one
+    /// of `panic`, `delay:<ms>`, `nan`. `"-"` and `""` mean "no plan"
+    /// and parse to an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "-" {
+            return Ok(FaultPlan::new());
+        }
+        if let Some(rest) = spec.strip_prefix("seed:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "seeded plan must be seed:<seed>:<count>:<horizon>, got {spec:?}"
+                ));
+            }
+            let nums: Result<Vec<u64>, _> = parts.iter().map(|p| p.parse::<u64>()).collect();
+            let nums = nums.map_err(|e| format!("bad seeded plan {spec:?}: {e}"))?;
+            return Ok(FaultPlan::seeded(nums[0], nums[1] as usize, nums[2]));
+        }
+        let mut plan = FaultPlan::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            let (kind, index) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry must be kind@index, got {entry:?}"))?;
+            let index: u64 = index
+                .parse()
+                .map_err(|e| format!("bad fault index in {entry:?}: {e}"))?;
+            let fault = match kind {
+                "panic" => Fault::Panic,
+                "nan" => Fault::Nan,
+                _ => match kind.strip_prefix("delay:") {
+                    Some(ms) => Fault::DelayMs(
+                        ms.parse()
+                            .map_err(|e| format!("bad delay in {entry:?}: {e}"))?,
+                    ),
+                    None => {
+                        return Err(format!(
+                            "unknown fault kind {kind:?} (want panic | delay:<ms> | nan)"
+                        ))
+                    }
+                },
+            };
+            plan.entries.insert(index, fault);
+        }
+        Ok(plan)
+    }
+
+    /// `count` faults at distinct indices in `[0, horizon)`, kinds and
+    /// positions drawn deterministically from `Pcg64(seed)`. Delays are
+    /// kept short (≤ 32 ms) so seeded chaos runs stay fast.
+    pub fn seeded(seed: u64, count: usize, horizon: u64) -> FaultPlan {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut plan = FaultPlan::new();
+        let horizon = horizon.max(1);
+        let count = count.min(horizon as usize);
+        while plan.entries.len() < count {
+            let index = rng.below(horizon);
+            let fault = match rng.below(3) {
+                0 => Fault::Panic,
+                1 => Fault::DelayMs(1 + rng.below(32)),
+                _ => Fault::Nan,
+            };
+            plan.entries.insert(index, fault);
+        }
+        plan
+    }
+
+    /// The fault scheduled for invocation `index`, if any.
+    pub fn fault_at(&self, index: u64) -> Option<Fault> {
+        self.entries.get(&index).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Round-trippable spec string (`"panic@2,nan@9"`; empty plan = `"-"`).
+    pub fn describe(&self) -> String {
+        if self.entries.is_empty() {
+            return "-".to_string();
+        }
+        self.entries
+            .iter()
+            .map(|(i, f)| format!("{f}@{i}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// An [`Engine`] wrapper that injects the faults scheduled by a
+/// [`FaultPlan`], keyed on a shared atomic invocation counter. Reports
+/// its inner engine's name/shape so served responses stay labeled by
+/// the real engine under test.
+#[derive(Debug)]
+pub struct FaultyEngine<E> {
+    inner: E,
+    plan: FaultPlan,
+    calls: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl<E: Engine> FaultyEngine<E> {
+    pub fn new(inner: E, plan: FaultPlan) -> FaultyEngine<E> {
+        FaultyEngine {
+            inner,
+            plan,
+            calls: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Total `infer` invocations so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected so far (≤ plan length).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+impl<E: Engine> Engine for FaultyEngine<E> {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let i = self.calls.fetch_add(1, Ordering::Relaxed);
+        match self.plan.fault_at(i) {
+            Some(Fault::Panic) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: panic at engine call {i}");
+            }
+            Some(Fault::DelayMs(ms)) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.infer(inputs)
+            }
+            Some(Fault::Nan) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                let mut y = self.inner.infer(inputs);
+                for r in 0..y.rows() {
+                    for v in y.row_mut(r) {
+                        *v = f32::NAN;
+                    }
+                }
+                y
+            }
+            None => self.inner.infer(inputs),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.inner.n_inputs()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.inner.n_outputs()
+    }
+}
+
+/// Flip one byte of a file in place (`offset` wraps modulo the file
+/// length), deterministically corrupting an artifact so its checksum
+/// validation fails — the registry quarantine path's test vector.
+pub fn flip_byte(path: &std::path::Path, offset: u64) -> std::io::Result<()> {
+    let mut bytes = std::fs::read(path)?;
+    if bytes.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "cannot flip a byte of an empty file",
+        ));
+    }
+    let at = (offset % bytes.len() as u64) as usize;
+    bytes[at] ^= 0xFF;
+    std::fs::write(path, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Identity-ish test engine: doubles each input.
+    #[derive(Debug)]
+    struct Doubler(usize);
+    impl Engine for Doubler {
+        fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+            let mut y = BatchMatrix::zeros(inputs.rows(), inputs.batch());
+            for r in 0..inputs.rows() {
+                for (o, v) in y.row_mut(r).iter_mut().zip(inputs.row(r)) {
+                    *o = v * 2.0;
+                }
+            }
+            y
+        }
+        fn name(&self) -> &'static str {
+            "doubler"
+        }
+        fn n_inputs(&self) -> usize {
+            self.0
+        }
+        fn n_outputs(&self) -> usize {
+            self.0
+        }
+    }
+
+    #[test]
+    fn parse_explicit_entries() {
+        let p = FaultPlan::parse("panic@2, delay:20@5 ,nan@9").unwrap();
+        assert_eq!(p.fault_at(2), Some(Fault::Panic));
+        assert_eq!(p.fault_at(5), Some(Fault::DelayMs(20)));
+        assert_eq!(p.fault_at(9), Some(Fault::Nan));
+        assert_eq!(p.fault_at(3), None);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.describe(), "panic@2,delay:20@5,nan@9");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("panic").is_err(), "missing @index");
+        assert!(FaultPlan::parse("boom@3").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("panic@x").is_err(), "bad index");
+        assert!(FaultPlan::parse("delay:abc@1").is_err(), "bad delay");
+        assert!(FaultPlan::parse("seed:1:2").is_err(), "short seeded form");
+    }
+
+    #[test]
+    fn empty_specs_mean_no_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("-").unwrap().is_empty());
+        assert_eq!(FaultPlan::new().describe(), "-");
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_bounded() {
+        let a = FaultPlan::parse("seed:42:4:100").unwrap();
+        let b = FaultPlan::seeded(42, 4, 100);
+        assert_eq!(a, b, "spec string and constructor agree");
+        assert_eq!(a.len(), 4);
+        assert_ne!(a, FaultPlan::seeded(43, 4, 100), "seed matters");
+        // Horizon smaller than count still terminates.
+        assert_eq!(FaultPlan::seeded(7, 10, 3).len(), 3);
+    }
+
+    #[test]
+    fn faulty_engine_injects_per_plan() {
+        let plan = FaultPlan::new()
+            .with(0, Fault::Panic)
+            .with(1, Fault::Nan)
+            .with(2, Fault::DelayMs(1));
+        let e = FaultyEngine::new(Doubler(2), plan);
+        let x = BatchMatrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+
+        // Call 0: panics (contained here so the test can continue).
+        assert!(catch_unwind(AssertUnwindSafe(|| e.infer(&x))).is_err());
+        // Call 1: NaN-poisoned output.
+        let y = e.infer(&x);
+        assert!(y.row(0).iter().all(|v| v.is_nan()));
+        // Call 2: delayed but correct.
+        let y = e.infer(&x);
+        assert_eq!(y.row(0), &[2.0, 4.0]);
+        // Call 3: past the plan — clean passthrough, bit-identical.
+        let y = e.infer(&x);
+        assert_eq!(y.row(1), &[6.0, 8.0]);
+
+        assert_eq!(e.calls(), 4);
+        assert_eq!(e.injected(), 3);
+        assert_eq!(e.name(), "doubler", "reports the inner engine's name");
+    }
+
+    #[test]
+    fn flip_byte_corrupts_deterministically() {
+        let dir = std::env::temp_dir().join(format!("sf-flip-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        std::fs::write(&path, [1u8, 2, 3, 4]).unwrap();
+        flip_byte(&path, 6).unwrap(); // 6 % 4 = offset 2
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, 3 ^ 0xFF, 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

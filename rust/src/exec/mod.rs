@@ -58,10 +58,17 @@
 //! `--kernel` knob (auto | scalar | avx2) selecting the [`simd`]
 //! microkernel — `avx2` is rejected with a structured error on CPUs
 //! without it, and every accepted combination computes identical bits.
+//!
+//! For chaos testing, [`faults::FaultyEngine`] wraps any row of the
+//! matrix with a seeded [`faults::FaultPlan`] of injected panics,
+//! delays, and NaN outputs; the serving coordinator contains the
+//! resulting faults (`catch_unwind`, per-model circuit breakers)
+//! without changing any engine's clean-path results.
 
 pub mod batch;
 pub mod csr;
 pub mod dense;
+pub mod faults;
 pub mod fused;
 pub mod layerwise;
 pub mod parallel;

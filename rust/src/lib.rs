@@ -37,9 +37,12 @@
 //!    variants through one constructor.
 //! 7. [`coordinator`] — batched inference serving: request queue,
 //!    deadline-aware dynamic batcher with admission control, engine
-//!    router, worker pool, latency-split metrics, TCP front-end.
+//!    router, worker pool, latency-split metrics, TCP front-end, and
+//!    fault containment (engine-panic isolation, per-model circuit
+//!    breakers, artifact quarantine with hot-swap rollback).
 //! 8. [`loadgen`] — deterministic closed/open-loop load generator that
-//!    measures the serving pipeline per engine variant.
+//!    measures the serving pipeline per engine variant, with seeded
+//!    fault injection ([`exec::faults`]) for chaos runs.
 //!
 //! Everything is deterministic given a seed; see `util::rng`.
 //!

@@ -16,10 +16,17 @@
 //!   shedding matter.
 //!
 //! Outcomes are tallied per request (served / shed / deadline-missed /
-//! error) and summarized with exact nearest-rank percentiles of the
-//! end-to-end latency and its queue-wait component — the numbers
-//! `sparseflow loadgen` prints per engine variant and
+//! engine-faulted / error) and summarized with exact nearest-rank
+//! percentiles of the end-to-end latency and its queue-wait component —
+//! the numbers `sparseflow loadgen` prints per engine variant and
 //! `benches/perf_serve.rs` publishes to `BENCH_PERF_SERVE.json`.
+//!
+//! For chaos runs (`--fault-plan`, [`crate::exec::faults`]) the report
+//! also carries the server's `engine_faults` *counter delta* across the
+//! run: a batch panic that the dispatcher recovers by re-dispatching the
+//! batch individually still counts as an engine fault even though every
+//! request in it was ultimately served — outcome counts alone would hide
+//! the contained fault.
 
 use crate::coordinator::request::{InferenceError, Response};
 use crate::coordinator::ServerHandle;
@@ -158,6 +165,9 @@ enum OutcomeKind {
     Served,
     Shed,
     DeadlineMiss,
+    /// The engine panicked on this request even after individual
+    /// re-dispatch ([`InferenceError::EngineFault`]).
+    EngineFault,
     Error,
 }
 
@@ -178,7 +188,11 @@ fn classify(res: Result<Response, InferenceError>) -> Outcome {
         Err(e) => Outcome {
             kind: match e {
                 InferenceError::QueueFull { .. } => OutcomeKind::Shed,
+                // Breaker-open sheds are load shedding too: the client
+                // should back off, not treat it as a hard error.
+                InferenceError::Unhealthy { .. } => OutcomeKind::Shed,
                 InferenceError::DeadlineExceeded => OutcomeKind::DeadlineMiss,
+                InferenceError::EngineFault { .. } => OutcomeKind::EngineFault,
                 _ => OutcomeKind::Error,
             },
             latency_secs: 0.0,
@@ -244,7 +258,16 @@ pub struct LoadReport {
     pub served: usize,
     pub shed: usize,
     pub deadline_misses: usize,
+    /// Requests whose reply was [`InferenceError::EngineFault`] (the
+    /// engine panicked even on individual re-dispatch).
+    pub faulted: usize,
     pub errors: usize,
+    /// Server-side `engine_faults` counter delta across the run: counts
+    /// panicked engine *invocations*, including batch panics that were
+    /// fully recovered by re-dispatch (and so appear as served
+    /// outcomes). `faulted` ≤ fault *requests*; this is the injected /
+    /// contained fault count.
+    pub engine_faults: u64,
     pub elapsed_secs: f64,
     /// Served requests per second of wall-clock (the serving analogue of
     /// the benches' rows/s).
@@ -276,7 +299,11 @@ impl LoadReport {
             served: served.len(),
             shed: count(OutcomeKind::Shed),
             deadline_misses: count(OutcomeKind::DeadlineMiss),
+            faulted: count(OutcomeKind::EngineFault),
             errors: count(OutcomeKind::Error),
+            // Filled in by `run` from the server metrics delta; the
+            // outcome list alone cannot see recovered batch panics.
+            engine_faults: 0,
             elapsed_secs,
             throughput_rps: served.len() as f64 / elapsed_secs.max(1e-9),
             latency_ms: QuantilesMs::of_secs(&lat),
@@ -293,7 +320,9 @@ impl LoadReport {
             .set("served", self.served)
             .set("shed", self.shed)
             .set("deadline_misses", self.deadline_misses)
+            .set("faulted", self.faulted)
             .set("errors", self.errors)
+            .set("engine_faults", self.engine_faults)
             .set("elapsed_secs", self.elapsed_secs)
             .set("throughput_rps", self.throughput_rps)
             .set("latency_ms", self.latency_ms.to_json())
@@ -303,13 +332,14 @@ impl LoadReport {
     /// One fixed-width table row (pair with [`LoadReport::table_header`]).
     pub fn table_row(&self) -> String {
         format!(
-            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>6} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
             self.label,
             self.mode,
             self.issued,
             self.served,
             self.shed,
             self.deadline_misses,
+            self.engine_faults,
             self.throughput_rps,
             self.latency_ms.p50,
             self.latency_ms.p99,
@@ -320,13 +350,14 @@ impl LoadReport {
 
     pub fn table_header() -> String {
         format!(
-            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>6} {:>10} {:>9} {:>9} {:>9} {:>9}",
             "variant",
             "mode",
             "issued",
             "served",
             "shed",
             "miss",
+            "fault",
             "rps",
             "lat p50",
             "lat p99",
@@ -359,10 +390,26 @@ pub fn run(
     let n_inputs = handle
         .n_inputs(model)
         .ok_or_else(|| LoadGenError::UnknownModel(model.to_string()))?;
-    match spec.arrival {
-        Arrival::Closed { clients } => Ok(run_closed(handle, model, n_inputs, clients, spec)),
-        Arrival::Open { qps } => run_open(handle, model, n_inputs, qps, spec),
-    }
+    // Bracket the run with the server's engine-fault counter so the
+    // report shows contained faults (recovered batch panics) that never
+    // surface as request outcomes. The counter is server-global; run
+    // variants against separate servers (as `sparseflow loadgen` does)
+    // for exact per-variant attribution.
+    let faults_before = engine_fault_count(handle);
+    let mut report = match spec.arrival {
+        Arrival::Closed { clients } => run_closed(handle, model, n_inputs, clients, spec),
+        Arrival::Open { qps } => run_open(handle, model, n_inputs, qps, spec)?,
+    };
+    report.engine_faults = engine_fault_count(handle).saturating_sub(faults_before);
+    Ok(report)
+}
+
+fn engine_fault_count(handle: &ServerHandle) -> u64 {
+    handle
+        .metrics_snapshot()
+        .get("engine_faults")
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
 }
 
 fn run_closed(
@@ -595,6 +642,7 @@ mod tests {
                     ..Default::default()
                 },
                 admission: AdmissionPolicy { max_queue: 4, ..Default::default() },
+                ..Default::default()
             },
         );
         let h = server.handle();
@@ -602,7 +650,11 @@ mod tests {
         let rep = run(&h, "m", &spec).unwrap();
         assert_eq!(rep.issued, 80);
         assert!(rep.shed > 0, "bounded queue must shed under 2000 qps offered load");
-        assert_eq!(rep.served + rep.shed + rep.deadline_misses + rep.errors, 80);
+        assert_eq!(
+            rep.served + rep.shed + rep.deadline_misses + rep.faulted + rep.errors,
+            80,
+            "every issued request resolves to exactly one outcome"
+        );
         assert!(rep.served > 0, "admitted requests still complete");
         let snap = h.metrics_snapshot();
         assert_eq!(snap.get("shed").unwrap().as_u64(), Some(rep.shed as u64));
@@ -641,9 +693,33 @@ mod tests {
         let rep = run(&h, "m", &LoadSpec::closed(2, 8, 3)).unwrap();
         let j = rep.to_json();
         assert_eq!(j.get("served").unwrap().as_u64(), Some(8));
+        assert_eq!(j.get("faulted").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("engine_faults").unwrap().as_u64(), Some(0));
         assert!(j.path(&["latency_ms", "p99"]).is_some());
         assert!(j.path(&["queue_wait_ms", "p50"]).is_some());
         assert!(LoadReport::table_header().contains("rps"));
+        assert!(LoadReport::table_header().contains("fault"));
         assert!(rep.table_row().contains("closed-2"));
+    }
+
+    #[test]
+    fn injected_engine_faults_reach_the_report() {
+        use crate::exec::faults::{Fault, FaultPlan, FaultyEngine};
+        // Second engine invocation panics; a single closed-loop client
+        // means singleton batches, so exactly one request resolves as an
+        // engine fault and the rest are served.
+        let plan = FaultPlan::new().with(1, Fault::Panic);
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(FaultyEngine::new(Echo, plan))));
+        let server = Server::start(router, ServerConfig::default());
+        let h = server.handle();
+        let rep = run(&h, "m", &LoadSpec::closed(1, 10, 9)).unwrap();
+        assert_eq!(rep.issued, 10);
+        assert_eq!(rep.faulted, 1, "the poisoned request got an EngineFault reply");
+        assert_eq!(rep.served, 9, "every other request served normally");
+        assert_eq!(rep.engine_faults, 1, "metrics delta captured in the report");
+        let j = rep.to_json();
+        assert_eq!(j.get("faulted").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("engine_faults").unwrap().as_u64(), Some(1));
     }
 }

@@ -21,8 +21,10 @@ use sparseflow::config::Config;
 use sparseflow::coordinator::batcher::BatchPolicy;
 use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
 use sparseflow::coordinator::{
-    AdmissionPolicy, ModelVariant, Registry, RegistryConfig, Router, Server, ServerConfig,
+    AdmissionPolicy, BreakerPolicy, ModelVariant, Registry, RegistryConfig, Router, Server,
+    ServerConfig,
 };
+use sparseflow::exec::faults::{FaultPlan, FaultyEngine};
 use sparseflow::exec::layerwise::LayerwiseEngine;
 use sparseflow::exec::Engine;
 use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
@@ -32,6 +34,7 @@ use sparseflow::model::{Format, Model};
 use sparseflow::prelude::*;
 use sparseflow::util::json::Json;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -502,6 +505,18 @@ fn cmd_serve(args: &[String]) -> i32 {
     // off), "auto" defers to the config keys, else off.
     let max_queue = resolve_auto_u64(&a, "max-queue", config.max_queue(0) as u64) as usize;
     let deadline_ms = resolve_auto_u64(&a, "deadline-ms", config.deadline_ms(0));
+    // Fault containment (config keys `breaker_faults`,
+    // `breaker_cooldown_ms`, `hang_cap_ms`): serving defaults to a
+    // breaker that opens after 3 consecutive engine faults and probes
+    // after 1 s; `breaker_faults=0` with no hang cap disables it.
+    let breaker = BreakerPolicy {
+        fault_threshold: config.breaker_faults(3).min(u32::MAX as u64) as u32,
+        cooldown: Duration::from_millis(config.breaker_cooldown_ms(1000)),
+        hang_cap: match config.hang_cap_ms(0) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
+    };
     let server_config = ServerConfig {
         batch: BatchPolicy {
             max_batch: a.usize("max-batch"),
@@ -512,12 +527,24 @@ fn cmd_serve(args: &[String]) -> i32 {
             max_queue,
             default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
         },
+        breaker,
     };
     if max_queue > 0 {
         println!("admission control: shedding beyond queue depth {max_queue}");
     }
     if deadline_ms > 0 {
         println!("default SLO: {deadline_ms} ms per request");
+    }
+    if breaker.enabled() {
+        println!(
+            "circuit breaker: open after {} consecutive faults, probe after {} ms{}",
+            breaker.fault_threshold,
+            breaker.cooldown.as_millis(),
+            match breaker.hang_cap {
+                Some(cap) => format!(", hang cap {} ms", cap.as_millis()),
+                None => String::new(),
+            },
+        );
     }
 
     // Registry mode: serve a whole directory of versioned artifacts
@@ -735,6 +762,7 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         .kernel_opt()
         .max_queue_opt()
         .deadline_opt()
+        .fault_plan_opt()
         .opt("out", "-", "write the JSON report here ('-' = table only)"),
         args,
     );
@@ -797,6 +825,16 @@ fn cmd_loadgen(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let fault_plan = match FaultPlan::parse(a.str("fault-plan")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: --fault-plan: {e}");
+            return 2;
+        }
+    };
+    if !fault_plan.is_empty() {
+        println!("fault injection: {}", fault_plan.describe());
+    }
 
     println!("{}", LoadReport::table_header());
     let mut results: Vec<Json> = Vec::new();
@@ -816,6 +854,20 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         };
         let label = variant.label();
         variant.name = label.clone();
+        if !fault_plan.is_empty() {
+            // Chaos mode: wrap every route of the variant with the same
+            // seeded plan. Each wrapper keeps its own invocation counter,
+            // so a run against a fixed route is reproducible regardless
+            // of how many engines the variant carries.
+            variant.engines = variant
+                .engines
+                .iter()
+                .map(|e| {
+                    Arc::new(FaultyEngine::new(Arc::clone(e), fault_plan.clone()))
+                        as Arc<dyn Engine>
+                })
+                .collect();
+        }
         let mut router = Router::new();
         router.register(variant);
         let server = Server::start(
@@ -830,6 +882,10 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                     max_queue,
                     default_deadline: None,
                 },
+                // Loadgen measures raw serving behaviour; the breaker
+                // stays at its disabled default so injected faults reach
+                // the report instead of tripping into shedding.
+                ..Default::default()
             },
         );
         let h = server.handle();
@@ -858,7 +914,8 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                 .set("deadline_ms", deadline_ms)
                 .set("max_queue", max_queue)
                 .set("max_batch", a.usize("max-batch"))
-                .set("max_wait_ms", a.u64("max-wait-ms")),
+                .set("max_wait_ms", a.u64("max-wait-ms"))
+                .set("fault_plan", fault_plan.describe()),
         )
         .set("results", Json::Arr(results));
     match a.str("out") {

@@ -1,16 +1,33 @@
 //! Minimal thread-pool + parallel-map substrate (tokio is unavailable
 //! offline; the coordinator and the parameter sweeps only need bounded
 //! fan-out over CPU cores).
+//!
+//! Both primitives are panic-contained. [`par_map`] catches a panicking
+//! item, lets every sibling item finish (one bad shard cannot abort the
+//! others mid-write), then re-raises the first panic payload to the
+//! caller — the observable contract is unchanged, but the work done by
+//! healthy items is never torn down halfway. [`ThreadPool`] workers are
+//! *supervised*: a job panic kills the worker thread, which spawns its
+//! own replacement under a bounded restart budget with exponential
+//! backoff, so a hostile job stream degrades the pool gracefully
+//! instead of silently draining it to zero.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
 /// Parallel map over `items` with up to `workers` scoped threads.
 ///
 /// Results come back in input order. `f` must be `Sync` (it is shared) and
 /// the items are handed out via an atomic work index, so uneven per-item
 /// cost balances automatically.
+///
+/// A panicking `f` does not abort sibling items: each item runs under
+/// `catch_unwind`, all claimed items complete, and the first panic
+/// payload is re-raised from the calling thread after the scope joins.
 pub fn par_map<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -22,12 +39,16 @@ where
         return items.iter().map(&f).collect();
     }
     let next = AtomicUsize::new(0);
+    // First panic payload across all workers (later ones are dropped —
+    // re-raising one panic is enough to preserve the caller's contract).
+    let panicked: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
     let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     let slots_ptr = SendPtr(slots.as_mut_ptr());
     thread::scope(|scope| {
         for _ in 0..workers {
             let fref = &f;
             let nextref = &next;
+            let panicref = &panicked;
             let sp = slots_ptr;
             scope.spawn(move || {
                 // Force whole-struct capture: edition-2021 disjoint capture
@@ -39,16 +60,29 @@ where
                     if i >= items.len() {
                         break;
                     }
-                    let r = fref(&items[i]);
-                    // SAFETY: each index i is claimed by exactly one worker
-                    // via the atomic counter, so writes to slots are
-                    // disjoint, and the scope joins all threads before
-                    // `slots` is read.
-                    unsafe { *sp.0.add(i) = Some(r) };
+                    // AssertUnwindSafe: `f` and `items` are only shared by
+                    // reference; on panic the item's slot stays `None` and is
+                    // never read, because the payload is re-raised below
+                    // before the slots are collected.
+                    match catch_unwind(AssertUnwindSafe(|| fref(&items[i]))) {
+                        // SAFETY: each index i is claimed by exactly one
+                        // worker via the atomic counter, so writes to slots
+                        // are disjoint, and the scope joins all threads
+                        // before `slots` is read.
+                        Ok(r) => unsafe { *sp.0.add(i) = Some(r) },
+                        Err(payload) => {
+                            let mut g =
+                                panicref.lock().unwrap_or_else(|p| p.into_inner());
+                            g.get_or_insert(payload);
+                        }
+                    }
                 }
             });
         }
     });
+    if let Some(payload) = panicked.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        resume_unwind(payload);
+    }
     slots.into_iter().map(|s| s.expect("worker wrote slot")).collect()
 }
 
@@ -66,41 +100,136 @@ unsafe impl<T> Sync for SendPtr<T> {}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Worker-supervision knobs for [`ThreadPool`].
+#[derive(Clone, Debug)]
+pub struct SupervisionPolicy {
+    /// Total replacement workers the pool may spawn over its lifetime.
+    /// Once exhausted, further panicking workers die without
+    /// replacement and the pool shrinks. 0 = no respawns.
+    pub restart_budget: u32,
+    /// Base delay before a replacement worker starts consuming jobs;
+    /// doubles per restart (capped at 64× base) so a deterministically
+    /// crashing job stream cannot hot-loop respawns.
+    pub backoff: Duration,
+    /// Optional shared counter bumped once per respawn (linked to
+    /// `coordinator::Metrics::worker_restart_sink` by the server).
+    pub restart_sink: Option<Arc<AtomicU64>>,
+}
+
+impl Default for SupervisionPolicy {
+    fn default() -> SupervisionPolicy {
+        SupervisionPolicy {
+            restart_budget: 8,
+            backoff: Duration::from_millis(1),
+            restart_sink: None,
+        }
+    }
+}
+
+struct PoolShared {
+    rx: Mutex<mpsc::Receiver<Job>>,
+    policy: SupervisionPolicy,
+    /// Replacement workers spawned so far (≤ `policy.restart_budget`).
+    restarts: AtomicU64,
+    /// Every live worker handle — originals and replacements. Dying
+    /// workers push their replacement's handle here; `Drop` drains it
+    /// to completion.
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+fn worker_loop(shared: &Arc<PoolShared>, id: usize) {
+    loop {
+        let job = {
+            let guard = shared.rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                // AssertUnwindSafe: the job owns its captures; on panic
+                // they are dropped during the unwind and nothing else in
+                // the pool aliases them.
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    // The panic "killed" this worker: arrange a
+                    // replacement (budget permitting) and exit the thread.
+                    respawn(shared, id);
+                    return;
+                }
+            }
+            Err(_) => return, // all senders dropped: shut down
+        }
+    }
+}
+
+/// Spawn a replacement for a panicked worker (see [`SupervisionPolicy`]).
+fn respawn(shared: &Arc<PoolShared>, id: usize) {
+    let budget = shared.policy.restart_budget as u64;
+    let n = match shared
+        .restarts
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+            (n < budget).then_some(n + 1)
+        }) {
+        Ok(prev) => prev,
+        Err(_) => return, // budget exhausted: the pool shrinks for good
+    };
+    if let Some(sink) = &shared.policy.restart_sink {
+        sink.fetch_add(1, Ordering::Relaxed);
+    }
+    let backoff = shared.policy.backoff * (1u32 << n.min(6) as u32);
+    let sh = Arc::clone(shared);
+    let spawned = thread::Builder::new()
+        .name(format!("sparseflow-worker-{id}r{n}"))
+        .spawn(move || {
+            thread::sleep(backoff);
+            worker_loop(&sh, id);
+        });
+    match spawned {
+        Ok(handle) => shared
+            .handles
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(handle),
+        Err(e) => eprintln!("sparseflow: failed to respawn pool worker: {e}"),
+    }
+}
+
 /// A long-lived pool of worker threads consuming boxed jobs; used by the
-/// serving coordinator for request execution.
+/// serving coordinator for request execution. Panicking jobs are
+/// contained and the affected worker is respawned (see module docs).
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<thread::JoinHandle<()>>,
+    shared: Arc<PoolShared>,
     size: usize,
 }
 
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
+        ThreadPool::supervised(size, SupervisionPolicy::default())
+    }
+
+    pub fn supervised(size: usize, policy: SupervisionPolicy) -> Self {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut handles = Vec::with_capacity(size);
+        let shared = Arc::new(PoolShared {
+            rx: Mutex::new(rx),
+            policy,
+            restarts: AtomicU64::new(0),
+            handles: Mutex::new(Vec::with_capacity(size)),
+        });
         for i in 0..size {
-            let rx = Arc::clone(&rx);
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("sparseflow-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("pool receiver poisoned");
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // all senders dropped: shut down
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+            let sh = Arc::clone(&shared);
+            let handle = thread::Builder::new()
+                .name(format!("sparseflow-worker-{i}"))
+                .spawn(move || worker_loop(&sh, i))
+                .expect("spawn worker");
+            shared
+                .handles
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(handle);
         }
         ThreadPool {
             tx: Some(tx),
-            handles,
+            shared,
             size,
         }
     }
@@ -109,21 +238,41 @@ impl ThreadPool {
         self.size
     }
 
+    /// Replacement workers spawned after job panics.
+    pub fn restarts(&self) -> u64 {
+        self.shared.restarts.load(Ordering::Relaxed)
+    }
+
     /// Submit a job for execution.
+    ///
+    /// Note: if the restart budget is exhausted and every worker has
+    /// died, queued jobs wait until `Drop` discards them — the channel
+    /// itself never rejects a send while the pool is alive.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
             .expect("pool already shut down")
             .send(Box::new(job))
-            .expect("pool workers gone");
+            .expect("pool receiver gone");
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close channel -> workers exit
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        drop(self.tx.take()); // close channel -> workers exit after draining
+        loop {
+            // Dying workers may push replacement handles concurrently:
+            // drain repeatedly until the vec stays empty.
+            let handles: Vec<_> = {
+                let mut g = self.shared.handles.lock().unwrap_or_else(|p| p.into_inner());
+                g.drain(..).collect()
+            };
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -152,6 +301,27 @@ mod tests {
     fn par_map_one_worker() {
         let items: Vec<u64> = (0..10).collect();
         assert_eq!(par_map(1, &items, |x| x + 1), (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_panicking_item_spares_siblings_then_repropagates() {
+        let items: Vec<u64> = (0..16).collect();
+        let completed = AtomicU64::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            par_map(4, &items, |x| {
+                if *x == 3 {
+                    panic!("poisoned item");
+                }
+                completed.fetch_add(1, Ordering::SeqCst);
+                x + 1
+            })
+        }));
+        assert!(result.is_err(), "the panic must reach the caller");
+        assert_eq!(
+            completed.load(Ordering::SeqCst),
+            15,
+            "every sibling item still ran to completion"
+        );
     }
 
     #[test]
@@ -185,5 +355,73 @@ mod tests {
         }
         drop(pool); // must not hang; must run queued jobs before exit
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs_and_respawns_workers() {
+        let sink = Arc::new(AtomicU64::new(0));
+        let pool = ThreadPool::supervised(
+            2,
+            SupervisionPolicy {
+                restart_budget: 8,
+                backoff: Duration::from_millis(1),
+                restart_sink: Some(Arc::clone(&sink)),
+            },
+        );
+        for _ in 0..3 {
+            pool.execute(|| panic!("bad job"));
+        }
+        // Later jobs still run: replacements took over.
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..20 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+        // The respawn bookkeeping runs on the dying worker after the
+        // panic is caught — give it a moment before asserting.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while pool.restarts() < 3 && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.restarts(), 3);
+        assert_eq!(sink.load(Ordering::SeqCst), 3, "sink mirrors restarts");
+    }
+
+    #[test]
+    fn pool_restart_budget_bounds_respawns() {
+        let pool = ThreadPool::supervised(
+            1,
+            SupervisionPolicy {
+                restart_budget: 2,
+                backoff: Duration::from_millis(1),
+                restart_sink: None,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..3 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                tx.send(()).unwrap(); // prove the job started...
+                panic!("bad job"); // ...then kill the worker
+            });
+        }
+        // 1 original + 2 replacements ran (and died); the 3rd panic has
+        // no budget left, so the pool is permanently empty — but neither
+        // execute nor drop may hang or panic.
+        for _ in 0..3 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        pool.execute(|| unreachable!("no workers left to run this"));
+        assert_eq!(pool.restarts(), 2);
+        drop(pool);
     }
 }

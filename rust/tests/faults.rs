@@ -1,0 +1,302 @@
+//! Fault-containment integration tests: seeded chaos against real
+//! engines behind the full serving pipeline.
+//!
+//! The invariants pinned here are the serving plane's failure
+//! semantics: no injected fault may hang a request (every submission is
+//! answered as served, shed, or engine-faulted), faults never leak
+//! across requests (post-fault outputs are bit-identical to a clean
+//! engine), the circuit breaker opens under consecutive faults and
+//! recovers via a half-open probe, and a corrupt artifact is
+//! quarantined while the previously active version keeps serving.
+
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
+use sparseflow::coordinator::{
+    BreakerPolicy, InferenceError, ModelVariant, Registry, RegistryConfig, Router, Server,
+    ServerConfig,
+};
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::faults::{flip_byte, Fault, FaultPlan, FaultyEngine};
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::model::{Format, Model};
+use sparseflow::util::json::Json;
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::threadpool::par_map;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn test_net() -> sparseflow::ffnn::graph::Ffnn {
+    random_mlp(&MlpSpec::new(3, 24, 0.3), &mut Pcg64::seed_from(0xC00F))
+}
+
+/// Faults scheduled as panics in a plan (each plan entry fires exactly
+/// once, so this is also the exact number of panicked invocations the
+/// `engine_faults` counter must end up at).
+fn panic_count(plan: &FaultPlan) -> u64 {
+    plan.describe().split(',').filter(|e| e.starts_with("panic@")).count() as u64
+}
+
+/// Chaos matrix: a seeded fault plan (panics, delays, NaN outputs)
+/// against every schedule × sharding combination, hammered by 8
+/// concurrent clients. Invariants: zero hangs, every request resolves
+/// (served or engine-faulted — the breaker is left disabled so nothing
+/// is shed), each scheduled fault fires exactly once, and once the plan
+/// is exhausted the served outputs are **bit-identical** to a direct
+/// run of the clean engine.
+#[test]
+fn chaos_matrix_every_request_resolves_and_outputs_recover_bit_identical() {
+    const HORIZON: u64 = 40;
+    let net = test_net();
+    let order = two_optimal_order(&net);
+    let n_in = net.n_inputs();
+    let n_out = net.n_outputs();
+    for (i, (schedule, workers)) in [
+        ("interp", 1usize),
+        ("fused", 1),
+        ("tiled", 1),
+        ("interp", 2),
+        ("fused", 3),
+        ("tiled", 2),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut variant =
+            ModelVariant::build("m", &net, &order, schedule, "f32", workers, 0, "auto").unwrap();
+        let label = variant.label();
+        let direct = Arc::clone(variant.route());
+        let plan = FaultPlan::seeded(0xFA00 + i as u64, 6, HORIZON);
+        let faulty = Arc::new(FaultyEngine::new(Arc::clone(&direct), plan.clone()));
+        variant.engines = vec![Arc::clone(&faulty) as Arc<dyn Engine>];
+        let mut router = Router::new();
+        router.register(variant);
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+
+        // Storm: 8 concurrent clients, 6 requests each, straight into
+        // the plan's fault window.
+        let ids: Vec<u64> = (0..8).collect();
+        let outcomes = par_map(8, &ids, |&c| {
+            let mut rng = Pcg64::seed_from(0xABC0 + c);
+            let mut served = 0usize;
+            let mut faulted = 0usize;
+            for _ in 0..6 {
+                let input: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+                let rx = h.submit("m", input).expect("admitted");
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Ok(resp)) => {
+                        assert_eq!(resp.output.len(), n_out, "{label}");
+                        served += 1;
+                    }
+                    Ok(Err(InferenceError::EngineFault { .. })) => faulted += 1,
+                    Ok(Err(e)) => panic!("{label}: unexpected error {e:?}"),
+                    Err(_) => panic!("{label}: request hung >30 s (containment failed)"),
+                }
+            }
+            (served, faulted)
+        });
+        let served: usize = outcomes.iter().map(|&(s, _)| s).sum();
+        let faulted: usize = outcomes.iter().map(|&(_, f)| f).sum();
+        assert_eq!(served + faulted, 48, "{label}: every request answered");
+
+        // Drain the remainder of the fault window so every scheduled
+        // fault has fired before the verification pass.
+        let mut safety = 0;
+        while faulty.calls() < HORIZON {
+            safety += 1;
+            assert!(safety <= 200, "{label}: drain stopped advancing");
+            let _ = h.infer("m", vec![0.0; n_in]);
+        }
+        assert_eq!(
+            faulty.injected(),
+            plan.len() as u64,
+            "{label}: every scheduled fault fired exactly once"
+        );
+
+        // Past the plan: served outputs must be bit-identical to the
+        // clean engine — no residue from panics, delays or NaN faults.
+        let mut rng = Pcg64::seed_from(0xB17 + i as u64);
+        for _ in 0..4 {
+            let input: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+            let resp = h.infer("m", input.clone()).unwrap();
+            let x = BatchMatrix::from_rows(n_in, 1, input);
+            let want = direct.infer(&x);
+            for (r, &got) in resp.output.iter().enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.row(r)[0].to_bits(),
+                    "{label}: post-fault row {r} not bit-identical"
+                );
+            }
+        }
+
+        // Exactly the scheduled panics reached the fault counter (the
+        // re-dispatch of a panicked batch consumes fresh invocation
+        // indices, so a plan entry can never double-count).
+        let snap = h.metrics_snapshot();
+        assert_eq!(
+            snap.get("engine_faults").and_then(Json::as_u64),
+            Some(panic_count(&plan)),
+            "{label}"
+        );
+    }
+}
+
+/// Breaker lifecycle over the full pipeline with a real engine: two
+/// injected panics open the breaker (further submissions shed as
+/// `Unhealthy`), and after the cooldown a half-open probe serves a
+/// bit-identical result and closes it again.
+#[test]
+fn breaker_opens_under_injected_panics_and_recovers_via_probe() {
+    let net = test_net();
+    let order = two_optimal_order(&net);
+    let n_in = net.n_inputs();
+    let mut variant = ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0, "auto").unwrap();
+    let direct = Arc::clone(variant.route());
+    let plan = FaultPlan::new().with(0, Fault::Panic).with(1, Fault::Panic);
+    variant.engines =
+        vec![Arc::new(FaultyEngine::new(Arc::clone(&direct), plan)) as Arc<dyn Engine>];
+    let mut router = Router::new();
+    router.register(variant);
+    let server = Server::start(
+        router,
+        ServerConfig {
+            breaker: BreakerPolicy {
+                fault_threshold: 2,
+                cooldown: Duration::from_millis(50),
+                hang_cap: None,
+            },
+            ..Default::default()
+        },
+    );
+    let h = server.handle();
+
+    for i in 0..2 {
+        let err = h.infer("m", vec![0.0; n_in]).unwrap_err();
+        assert!(matches!(err, InferenceError::EngineFault { .. }), "call {i}: {err:?}");
+    }
+    let err = h.infer("m", vec![0.0; n_in]).unwrap_err();
+    assert_eq!(err, InferenceError::Unhealthy { model: "m".to_string() });
+    assert!(err.is_shed());
+    let health = h.health_snapshot();
+    assert_eq!(health.path(&["models", "m", "state"]).and_then(Json::as_str), Some("open"));
+    assert_eq!(health.path(&["models", "m", "unhealthy"]).and_then(Json::as_bool), Some(true));
+
+    // Cooldown elapses; the engine is past its plan, so the half-open
+    // probe succeeds, closes the breaker, and serves bit-identically.
+    std::thread::sleep(Duration::from_millis(60));
+    let input = vec![0.25; n_in];
+    let resp = h.infer("m", input.clone()).unwrap();
+    let want = direct.infer(&BatchMatrix::from_rows(n_in, 1, input));
+    for (r, &got) in resp.output.iter().enumerate() {
+        assert_eq!(got.to_bits(), want.row(r)[0].to_bits(), "probe row {r}");
+    }
+    let health = h.health_snapshot();
+    assert_eq!(health.path(&["models", "m", "state"]).and_then(Json::as_str), Some("closed"));
+    assert_eq!(health.get("engine_faults").and_then(Json::as_u64), Some(2));
+    let snap = h.metrics_snapshot();
+    assert_eq!(snap.path(&["breaker", "m"]).and_then(Json::as_str), Some("closed"));
+    assert!(snap.get("shed").and_then(Json::as_u64).unwrap_or(0) >= 1);
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparseflow-faults-it-{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_artifact(dir: &Path, file: &str, seed: u64) -> PathBuf {
+    let net = random_mlp(&MlpSpec::new(2, 6, 0.6), &mut Pcg64::seed_from(seed));
+    let order = two_optimal_order(&net);
+    let path = dir.join(file);
+    Model::from_net(net, Some(order)).save(&path, Format::BinV1).unwrap();
+    path
+}
+
+/// Registry crash safety end to end: a deliberately corrupted new
+/// version is quarantined on deploy (renamed aside, counted) while the
+/// previous version keeps serving bit-identical outputs.
+#[test]
+fn corrupt_new_version_quarantined_while_previous_serves_bit_identical() {
+    let dir = tmpdir("corrupt-v2");
+    write_artifact(&dir, "m@1.sfb", 10);
+    let reg = Registry::new(RegistryConfig::default(), ServerConfig::default());
+    reg.scan_dir(&dir).unwrap();
+    reg.ensure_hot("m").unwrap();
+    let h = reg.handle();
+    let n_in = h.n_inputs("m").unwrap();
+    let input = vec![0.5; n_in];
+    let baseline: Vec<u32> =
+        h.infer("m", input.clone()).unwrap().output.iter().map(|v| v.to_bits()).collect();
+
+    let v2 = write_artifact(&dir, "m@2.sfb", 11);
+    flip_byte(&v2, 100).unwrap();
+    let err = reg.deploy_file(&v2).unwrap_err();
+    assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
+
+    assert_eq!(reg.active_version("m"), Some(1), "bad version never activated");
+    assert_eq!(reg.quarantined(), 1);
+    assert!(!v2.exists(), "corrupt file renamed aside");
+    assert!(dir.join("m@2.sfb.quarantined").exists());
+    let after: Vec<u32> =
+        h.infer("m", input).unwrap().output.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(baseline, after, "previous version serves bit-identically");
+    let snap = h.metrics_snapshot();
+    assert_eq!(snap.get("quarantined").and_then(Json::as_u64), Some(1));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The TCP plane under injected faults: a faulting request is answered
+/// `{"ok": false}` on a connection that stays usable, and the `health`
+/// command reports the fault counters.
+#[test]
+fn tcp_health_reports_injected_faults_and_connection_survives() {
+    let net = test_net();
+    let order = two_optimal_order(&net);
+    let n_in = net.n_inputs();
+    let mut variant = ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0, "auto").unwrap();
+    let direct = Arc::clone(variant.route());
+    let plan = FaultPlan::new().with(0, Fault::Panic);
+    variant.engines =
+        vec![Arc::new(FaultyEngine::new(Arc::clone(&direct), plan)) as Arc<dyn Engine>];
+    let mut router = Router::new();
+    router.register(variant);
+    let server = Server::start(router, ServerConfig::default());
+    let frontend = TcpFrontend::serve(server.handle(), "127.0.0.1:0").unwrap();
+    let mut client = TcpClient::connect(&frontend.addr).unwrap();
+
+    let input: Vec<Json> = (0..n_in).map(|_| Json::Num(0.5)).collect();
+    let faulted = client
+        .roundtrip(&Json::obj().set("model", "m").set("input", Json::Arr(input.clone())))
+        .unwrap();
+    assert_eq!(faulted.get("ok").and_then(Json::as_bool), Some(false));
+
+    // Same connection, next call: past the plan, served fine.
+    let ok = client
+        .roundtrip(&Json::obj().set("model", "m").set("input", Json::Arr(input)))
+        .unwrap();
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+
+    let health = client.roundtrip(&Json::obj().set("cmd", "health")).unwrap();
+    assert_eq!(health.path(&["health", "engine_faults"]).and_then(Json::as_u64), Some(1));
+    assert_eq!(health.path(&["health", "worker_restarts"]).and_then(Json::as_u64), Some(0));
+    assert_eq!(
+        health.path(&["health", "models", "m", "state"]).and_then(Json::as_str),
+        Some("closed"),
+        "default breaker policy is disabled and stays closed"
+    );
+}
