@@ -1,0 +1,144 @@
+//! §Perf — quantized compiled engines: the i8 interpreter vs the
+//! quant-fused and quant-tiled (autotuned) schedules, at batch 128 on
+//! the paper's two non-MLP workload shapes (BERT-like magnitude-pruned
+//! encoder MLP, compact-growth network). Reports rows/s, streamed bytes
+//! per connection, and the activation-sparsity skip rate of each
+//! compiled engine (AxpyRuns whose source row was entirely zero).
+//! Quant-fused is asserted bit-identical to the quant interpreter, and
+//! every engine is asserted within the certified `output_error_bound`
+//! of the f32 stream, before anything is timed. Emits JSON via
+//! `bench::harness` (repo-root `BENCH_PERF_QUANT_FUSED.json`).
+//!
+//! ```bash
+//! cargo bench --bench perf_quant_fused -- --batch 128
+//! ```
+
+use sparseflow::bench::harness::Report;
+use sparseflow::cli::Spec;
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::quant::{
+    output_error_bound, QuantFusedEngine, QuantStreamEngine, QuantTiledEngine,
+};
+use sparseflow::exec::stream::StreamingEngine;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::bert::{bert_mlp, BertSpec};
+use sparseflow::ffnn::compact_growth::{compact_growth, CompactGrowthSpec};
+use sparseflow::ffnn::graph::Ffnn;
+use sparseflow::ffnn::topo::{two_optimal_order, ConnOrder};
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::timing::{measure, Summary};
+
+fn bench_net(
+    label: &str,
+    net: &Ffnn,
+    order: &ConnOrder,
+    batch: usize,
+    reps: usize,
+    report: &mut Report,
+) {
+    let mut rng = Pcg64::seed_from(0x9D11);
+    let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
+
+    let f32e = StreamingEngine::new(net, order);
+    let interp = QuantStreamEngine::new(net, order);
+    let fused = QuantFusedEngine::new(net, order);
+    let (tiled, tune) = QuantTiledEngine::autotuned(net, order).expect("autotune");
+
+    // Correctness gates before timing: same dequant order ⇒ the fused
+    // schedule is bit-identical to the interpreter; the tiled schedule
+    // (different accumulation grouping) and both stay within the
+    // certified bound of the f32 stream.
+    let want_f32 = f32e.infer(&x);
+    let want = interp.infer(&x);
+    assert_eq!(fused.infer(&x), want, "{label}: quant-fused must be bit-identical");
+    let bound = output_error_bound(f32e.program(), interp.program(), &x);
+    for (name, engine) in
+        [("interp", &interp as &dyn Engine), ("fused", &fused), ("tiled", &tiled)]
+    {
+        let diff = want_f32.max_abs_diff(&engine.infer(&x));
+        assert!(
+            f64::from(diff) <= f64::from(bound) * 1.01 + 1e-3,
+            "{label}: quant-{name} deviation {diff} exceeds certified bound {bound}"
+        );
+    }
+
+    let interp_times = measure(2, reps, || interp.infer(&x));
+    let fused_times = measure(2, reps, || fused.infer(&x));
+    let tiled_times = measure(2, reps, || tiled.infer(&x));
+    report.record_rate(label, "i8 interp", batch as f64, &interp_times, "rows/s");
+    report.record_rate(label, "i8 fused", batch as f64, &fused_times, "rows/s");
+    report.record_rate(label, "i8 tiled", batch as f64, &tiled_times, "rows/s");
+
+    let bx = format!("{label} B/conn");
+    report.record_exact(&bx, "i8 interp", interp.program().bytes_per_conn(), "B/conn");
+    report.record_exact(&bx, "i8 fused", fused.program().bytes_per_conn(), "B/conn");
+    report.record_exact(&bx, "i8 tiled", tiled.program().bytes_per_conn(), "B/conn");
+
+    // Skip rates accumulated over the warmup + timed runs above.
+    let sx = format!("{label} skip");
+    let fc = fused.skip_counters();
+    let tc = tiled.skip_counters();
+    report.record_exact(&sx, "i8 fused", fc.skip_rate(), "rate");
+    report.record_exact(&sx, "i8 tiled", tc.skip_rate(), "rate");
+
+    let rate = |t: &[f64]| batch as f64 / Summary::of(t).median;
+    println!("{label}: {}", net.describe());
+    println!(
+        "  i8 interp {:>11.0} rows/s | fused {:>11.0} rows/s ({:.2}x) | tiled {:>11.0} rows/s \
+         (M={} autotuned)",
+        rate(&interp_times),
+        rate(&fused_times),
+        rate(&fused_times) / rate(&interp_times),
+        tune.chosen_m,
+    );
+    println!(
+        "  fused: {:.2} B/conn, skipped {}/{} AxpyRuns ({:.1}%) | tiled: {:.2} B/conn, \
+         skipped {}/{} ({:.1}%)",
+        fused.program().bytes_per_conn(),
+        fc.skipped(),
+        fc.checked(),
+        fc.skip_rate() * 100.0,
+        tiled.program().bytes_per_conn(),
+        tc.skipped(),
+        tc.checked(),
+        tc.skip_rate() * 100.0,
+    );
+}
+
+fn main() {
+    let args = Spec::new("perf_quant_fused", "quantized compiled engines vs the i8 interpreter")
+        .opt("batch", "128", "batch size (paper: 128)")
+        .opt("reps", "10", "measurement repetitions")
+        .opt("density", "0.1", "bert: post-pruning density")
+        .opt("mg", "100", "compact growth: design memory size")
+        .flag("quick", "small smoke-test configuration")
+        .parse_env();
+
+    let quick = args.flag("quick");
+    let batch = if quick { 16 } else { args.usize("batch") };
+    let reps = if quick { 3 } else { args.usize("reps") };
+
+    let mut report = Report::new("perf_quant_fused", "quantized compiled engines (§Perf)");
+    report.set_meta("batch", batch);
+    report.set_meta("quick", quick);
+
+    let mut rng = Pcg64::seed_from(0x9D10);
+    let bert_spec = if quick {
+        BertSpec::small(args.f64("density"))
+    } else {
+        BertSpec {
+            d_model: 256,
+            d_ff: 1024,
+            density: args.f64("density"),
+        }
+    };
+    let bert = bert_mlp(&bert_spec, &mut rng);
+    let bert_order = two_optimal_order(&bert);
+    bench_net("bert-like", &bert, &bert_order, batch, reps, &mut report);
+
+    let cg_spec = CompactGrowthSpec::new(if quick { 30 } else { args.usize("mg") });
+    let (cg, cg_order) = compact_growth(&cg_spec, &mut rng);
+    bench_net("compact-growth", &cg, &cg_order, batch, reps, &mut report);
+
+    report.finish();
+}

@@ -175,11 +175,21 @@ impl Report {
                     .set("outliers_removed", p.outliers_removed)
             })
             .collect();
-        Json::obj()
+        let j = Json::obj()
             .set("id", self.id.as_str())
             .set("title", self.title.as_str())
             .set("meta", self.meta.clone())
-            .set("points", Json::Arr(points))
+            .set("points", Json::Arr(points));
+        if self.points.is_empty() {
+            // A bench whose sweep selected zero configurations (feature
+            // not supported on this CPU, filtered dimension, ...) still
+            // publishes a valid report; the explicit marker separates
+            // "ran and measured nothing" from a missing or truncated
+            // file when tooling diffs the perf trajectory.
+            j.set("skipped", true)
+        } else {
+            j
+        }
     }
 
     /// Print table to stdout and save JSON under `results/<id>.json`;
@@ -190,7 +200,14 @@ impl Report {
     /// whose non-representative numbers must not overwrite the tracked
     /// trajectory.
     pub fn finish(&self) {
-        println!("{}", self.table());
+        if self.points.is_empty() {
+            println!(
+                "== {} — {} == no configurations ran; writing skipped report",
+                self.id, self.title
+            );
+        } else {
+            println!("{}", self.table());
+        }
         let quick = self
             .meta
             .get("quick")
@@ -302,6 +319,19 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_str(), Some("t3"));
         assert_eq!(j.path(&["meta", "seed"]).unwrap().as_u64(), Some(42));
         assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_report_carries_explicit_skipped_marker() {
+        let r = Report::new("perf_x", "zero configs ran");
+        let j = r.to_json();
+        assert_eq!(j.get("skipped").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(j.get("id").unwrap().as_str(), Some("perf_x"), "report stays well-formed");
+
+        let mut r = Report::new("perf_x", "one config ran");
+        r.record_exact("a", "s", 1.0, "I/Os");
+        assert_eq!(r.to_json().get("skipped"), None, "non-empty reports carry no marker");
     }
 
     #[test]

@@ -126,6 +126,20 @@ impl Spec {
         )
     }
 
+    /// The standard `--no-skip` flag of the serving commands: disables
+    /// activation-sparsity skipping in the compiled schedules
+    /// (`exec::fused` / `exec::tiled`, both precisions). Skipping is
+    /// value-identical to not skipping, so this only matters for
+    /// benchmarking the unconditional stream or ruling the optimization
+    /// out when debugging. The flag wins over the `skip` config key;
+    /// with neither, skipping is on.
+    pub fn no_skip_flag(self) -> Self {
+        self.flag(
+            "no-skip",
+            "disable activation-sparsity skipping in compiled schedules (default: skip on)",
+        )
+    }
+
     /// The standard `--fault-plan` option of chaos-capable commands: a
     /// deterministic `exec::faults::FaultPlan` spec — `"-"` (none),
     /// `"panic@2,delay:20@5,nan@9"` (explicit faults at engine-call
@@ -529,6 +543,16 @@ mod tests {
         let a = s.parse(&sv(&["--kernel=avx2"])).unwrap();
         assert_eq!(a.str("kernel"), "avx2");
         assert!(s.help_text().contains("--kernel"));
+    }
+
+    #[test]
+    fn no_skip_flag_declares_standard_knob() {
+        let s = Spec::new("t", "t").no_skip_flag();
+        let a = s.parse(&[]).unwrap();
+        assert!(!a.flag("no-skip"), "default: skipping stays on");
+        let a = s.parse(&sv(&["--no-skip"])).unwrap();
+        assert!(a.flag("no-skip"));
+        assert!(s.help_text().contains("--no-skip"));
     }
 
     #[test]

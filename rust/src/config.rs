@@ -103,6 +103,16 @@ impl Config {
         self.str("kernel", default)
     }
 
+    /// The activation-skip knob (`skip` key): whether the compiled
+    /// schedules (`exec::fused` / `exec::tiled`, both precisions) skip
+    /// AxpyRuns whose source activation row is entirely zero. Skipping
+    /// is value-identical to not skipping; disable it to benchmark the
+    /// unconditional stream or to rule the optimization out when
+    /// debugging.
+    pub fn skip(&self, default: bool) -> bool {
+        self.bool("skip", default)
+    }
+
     /// The admission-control knob (`max_queue` key): maximum queued
     /// requests per model before new submissions are shed with an
     /// explicit queue-full response. 0 = unbounded (no shedding).
@@ -254,6 +264,14 @@ mod tests {
         assert_eq!(c.kernel("auto"), "auto", "default when unset");
         c.set_override("kernel=scalar").unwrap();
         assert_eq!(c.kernel("auto"), "scalar");
+    }
+
+    #[test]
+    fn skip_knob() {
+        let mut c = Config::empty();
+        assert!(c.skip(true), "default when unset (skip on)");
+        c.set_override("skip=false").unwrap();
+        assert!(!c.skip(true));
     }
 
     #[test]

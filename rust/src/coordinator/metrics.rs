@@ -2,8 +2,9 @@
 //! latency histograms (end-to-end, queue-wait, and compute — the split
 //! that tells an SLO violation caused by queueing from one caused by a
 //! slow engine), shed/deadline-miss counters from admission control,
-//! linked per-shard timing sinks from batch-sharded engines, and
-//! per-model fusion statistics from block-compiled engines. Lock-free on
+//! linked per-shard timing sinks from batch-sharded engines, per-model
+//! fusion statistics from block-compiled engines, and live
+//! activation-skip counters from the compiled schedules. Lock-free on
 //! the hot path (atomics only; the sink lists are only locked at link and
 //! snapshot time); snapshots serialize to JSON.
 //!
@@ -16,7 +17,7 @@
 //! for the TCP `health` command).
 
 use super::breaker::Breaker;
-use crate::exec::fused::FusionStats;
+use crate::exec::fused::{FusionStats, SkipCounters};
 use crate::exec::parallel::ShardTimings;
 use crate::exec::tiled::TiledStats;
 use crate::util::json::Json;
@@ -163,6 +164,11 @@ pub struct Metrics {
     /// [`Metrics::link_tiled_stats`]); compile-time constants like the
     /// fusion stats.
     tiled_stats: Mutex<Vec<(String, TiledStats)>>,
+    /// Per-model live activation-skip counters from the compiled
+    /// schedules (see [`Metrics::link_skip_counters`]): unlike the
+    /// fusion/tiled stats these are run-time counters, read fresh at
+    /// every snapshot.
+    skip_sinks: Mutex<Vec<(String, Arc<SkipCounters>)>>,
     /// Per-model dispatched microkernel tag ("scalar" | "avx2"; see
     /// [`Metrics::link_kernel`]) — which `exec::simd` path the deployed
     /// engine actually runs.
@@ -203,6 +209,7 @@ impl Metrics {
             shard_sinks: Mutex::new(Vec::new()),
             fusion_stats: Mutex::new(Vec::new()),
             tiled_stats: Mutex::new(Vec::new()),
+            skip_sinks: Mutex::new(Vec::new()),
             kernels: Mutex::new(Vec::new()),
             registry_sink: Mutex::new(None),
         }
@@ -289,6 +296,19 @@ impl Metrics {
             entry.1 = stats;
         } else {
             sinks.push((model.to_string(), stats));
+        }
+    }
+
+    /// Link the live activation-skip counters of a compiled-schedule
+    /// engine so they appear in [`Metrics::snapshot`] under
+    /// `skips.<model>` and merged into the model's `fusion`/`tiled`
+    /// entry. Re-linking the same model replaces the previous sink.
+    pub fn link_skip_counters(&self, model: &str, counters: Arc<SkipCounters>) {
+        let mut sinks = self.skip_sinks.lock().expect("skip sinks poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = counters;
+        } else {
+            sinks.push((model.to_string(), counters));
         }
     }
 
@@ -389,11 +409,21 @@ impl Metrics {
             j = j.set("shards", shards);
         }
         drop(sinks);
+        let skips = self.skip_sinks.lock().expect("skip sinks poisoned");
+        let skip_json = |model: &str, entry: Json| -> Json {
+            match skips.iter().find(|(name, _)| name == model) {
+                Some((_, c)) => entry
+                    .set("axpy_skip_checked", c.checked())
+                    .set("axpy_skipped", c.skipped())
+                    .set("skip_rate", c.skip_rate()),
+                None => entry,
+            }
+        };
         let stats = self.fusion_stats.lock().expect("fusion stats poisoned");
         if !stats.is_empty() {
             let mut fusion = Json::obj();
             for (model, s) in stats.iter() {
-                fusion = fusion.set(model, s.to_json());
+                fusion = fusion.set(model, skip_json(model, s.to_json()));
             }
             j = j.set("fusion", fusion);
         }
@@ -402,11 +432,19 @@ impl Metrics {
         if !stats.is_empty() {
             let mut tiled = Json::obj();
             for (model, s) in stats.iter() {
-                tiled = tiled.set(model, s.to_json());
+                tiled = tiled.set(model, skip_json(model, s.to_json()));
             }
             j = j.set("tiled", tiled);
         }
         drop(stats);
+        if !skips.is_empty() {
+            let mut sk = Json::obj();
+            for (model, c) in skips.iter() {
+                sk = sk.set(model, c.to_json());
+            }
+            j = j.set("skips", sk);
+        }
+        drop(skips);
         let kernels = self.kernels.lock().expect("kernel tags poisoned");
         if !kernels.is_empty() {
             let mut k = Json::obj();
@@ -591,6 +629,44 @@ mod tests {
         m.link_tiled_stats("mlp", TiledStats { n_segments: 1, ..stats });
         let s2 = m.snapshot();
         assert_eq!(s2.path(&["tiled", "mlp", "segments"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn skip_counters_in_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().get("skips").is_none(), "no sinks, no key");
+
+        let c = Arc::new(SkipCounters::default());
+        c.checked.fetch_add(10, Ordering::Relaxed);
+        c.skipped.fetch_add(4, Ordering::Relaxed);
+        m.link_skip_counters("mlp", Arc::clone(&c));
+        let s = m.snapshot();
+        assert_eq!(
+            s.path(&["skips", "mlp", "axpy_skip_checked"]).unwrap().as_u64(),
+            Some(10)
+        );
+        assert_eq!(s.path(&["skips", "mlp", "axpy_skipped"]).unwrap().as_u64(), Some(4));
+        let rate = s.path(&["skips", "mlp", "skip_rate"]).unwrap().as_f64().unwrap();
+        assert!((rate - 0.4).abs() < 1e-9, "skip rate {rate}");
+
+        // The counters are live run-time state, not a copy: the engine
+        // bumps, the next snapshot sees it.
+        c.skipped.fetch_add(1, Ordering::Relaxed);
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["skips", "mlp", "axpy_skipped"]).unwrap().as_u64(), Some(5));
+
+        // Merged into the model's fusion/tiled entry when it has one.
+        m.link_fusion_stats("mlp", FusionStats { n_ops: 10, ..FusionStats::default() });
+        let s3 = m.snapshot();
+        assert_eq!(s3.path(&["fusion", "mlp", "axpy_skipped"]).unwrap().as_u64(), Some(5));
+        assert_eq!(s3.path(&["fusion", "mlp", "ops"]).unwrap().as_u64(), Some(10));
+
+        // Re-linking the same model replaces, not duplicates.
+        m.link_skip_counters("mlp", Arc::new(SkipCounters::default()));
+        assert_eq!(
+            m.snapshot().path(&["skips", "mlp", "axpy_skip_checked"]).unwrap().as_u64(),
+            Some(0)
+        );
     }
 
     #[test]

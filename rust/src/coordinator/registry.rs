@@ -64,6 +64,9 @@ pub struct RegistryConfig {
     /// Microkernel for promoted compiled engines ("auto" | "scalar" |
     /// "avx2").
     pub kernel: String,
+    /// Activation-sparsity skipping in promoted compiled engines
+    /// (value-identical; off only for benchmarking/debugging).
+    pub skip: bool,
 }
 
 impl Default for RegistryConfig {
@@ -75,6 +78,7 @@ impl Default for RegistryConfig {
             workers: 1,
             fast_mem: 0,
             kernel: "auto".to_string(),
+            skip: true,
         }
     }
 }
@@ -335,7 +339,15 @@ impl Registry {
         model: &Model,
     ) -> anyhow::Result<super::router::ModelVariant> {
         let c = &self.inner.config;
-        Ok(model.variant(name, &c.schedule, &c.precision, c.workers, c.fast_mem, &c.kernel)?)
+        Ok(model.variant_with_opts(
+            name,
+            &c.schedule,
+            &c.precision,
+            c.workers,
+            c.fast_mem,
+            &c.kernel,
+            c.skip,
+        )?)
     }
 
     /// Record a hit and make sure the model is serving. Warm models are

@@ -5,7 +5,7 @@
 //! XLA artifact). The router picks the serving engine per the variant's
 //! policy; the benches use explicit engine selection to compare them.
 
-use crate::exec::fused::FusionStats;
+use crate::exec::fused::{FusionStats, SkipCounters};
 use crate::exec::parallel::{ParallelEngine, ShardTimings};
 use crate::exec::simd::{self, Kernel};
 use crate::exec::tiled::TiledStats;
@@ -25,9 +25,11 @@ pub enum VariantError {
     UnknownSchedule(String),
     /// `precision` is not one of f32 / i8.
     UnknownPrecision(String),
-    /// The (schedule, precision) point is outside the composition
-    /// matrix: the i8 stream is already compressed into its own record
-    /// format, so fused/tiled require f32.
+    /// The (schedule, precision) point is not available for this
+    /// model's payload — e.g. a compiled schedule requested for a
+    /// quant-stream payload, which only carries the interpreter's
+    /// record format. Every point builds from a network or a `.sfb`
+    /// artifact.
     Incompatible { schedule: String, precision: String },
     /// `fast_mem` was given for a schedule that has no fast-memory
     /// budget knob (only tiled does).
@@ -57,9 +59,8 @@ impl std::fmt::Display for VariantError {
             }
             VariantError::Incompatible { schedule, precision } => write!(
                 f,
-                "schedule {schedule:?} requires precision f32, got {precision:?} (the i8 \
-                 stream is already compressed into its own record format; see the \
-                 composition matrix in README.md)"
+                "schedule {schedule:?} is not available at precision {precision:?} for this \
+                 model's payload (see the composition matrix in README.md)"
             ),
             VariantError::FastMemRequiresTiled { schedule, fast_mem } => write!(
                 f,
@@ -143,8 +144,8 @@ pub struct ModelVariant {
     /// Op-stream schedule of the serving engine: "interp" (default, the
     /// per-connection stream interpreter), "fused" (the run-length
     /// block-compiled engine) or "tiled" (the cache-tiled slot-compiled
-    /// engine). Orthogonal to sharding; f32-only (see the composition
-    /// matrix in `exec`'s module docs).
+    /// engine). Orthogonal to sharding and precision (see the
+    /// composition matrix in `exec`'s module docs).
     pub schedule: &'static str,
     /// Compile-time fusion statistics when the serving engine is a
     /// `FusedEngine`; the server surfaces these in `Metrics::snapshot`
@@ -155,6 +156,12 @@ pub struct ModelVariant {
     /// server surfaces these in `Metrics::snapshot` under
     /// `tiled.<model>`.
     pub tiled: Option<TiledStats>,
+    /// Run-time activation-skip counters when the serving engine is one
+    /// of the compiled schedules: AxpyRuns checked, and skipped because
+    /// the source activation row was entirely zero. The server surfaces
+    /// these in `Metrics::snapshot` (merged into the `fusion.<model>` /
+    /// `tiled.<model>` entries and standalone under `skips.<model>`).
+    pub skips: Option<Arc<SkipCounters>>,
     /// Microkernel path the serving engine dispatches to: "scalar" (the
     /// portable reference — also what the interp schedule's
     /// per-connection loop amounts to) or "avx2" (`exec::simd` runtime
@@ -183,6 +190,7 @@ impl ModelVariant {
             schedule: "interp",
             fusion: None,
             tiled: None,
+            skips: None,
             kernel: "scalar",
             workers: 1,
             summary: String::new(),
@@ -200,16 +208,19 @@ impl ModelVariant {
     /// Build a serving variant from the composition-matrix knobs shared
     /// by `sparseflow serve`, `sparseflow loadgen`, and the serving
     /// benches: `schedule` ∈ {interp, fused, tiled}, `precision` ∈
-    /// {f32, i8} (i8 is interp-only — the compressed stream has its own
-    /// record format), `workers` > 1 wraps the engine in a batch-sharded
-    /// [`ParallelEngine`]. `fast_mem` is the tiled schedule's
-    /// fast-memory budget `M` in slots (0 = autotune through the I/O
-    /// simulator); it is rejected for non-tiled schedules. `kernel` ∈
-    /// {auto, scalar, avx2} picks the `exec::simd` microkernel of the
-    /// compiled schedules (auto = best the CPU supports; an explicit
-    /// avx2 is rejected on CPUs without it, and on non-compiled
-    /// schedules). Rejections come back as structured [`VariantError`]
-    /// values.
+    /// {f32, i8} — every (schedule, precision) point builds; i8 with a
+    /// compiled schedule runs the quant-fused/quant-tiled engines, whose
+    /// macro-op pools are shared with the f32 compilation while the
+    /// weight pool stays i8 with per-group dequant. `workers` > 1 wraps
+    /// the engine in a batch-sharded [`ParallelEngine`]. `fast_mem` is
+    /// the tiled schedule's fast-memory budget `M` in slots (0 =
+    /// autotune through the I/O simulator); it is rejected for
+    /// non-tiled schedules. `kernel` ∈ {auto, scalar, avx2} picks the
+    /// `exec::simd` microkernel of the compiled schedules (auto = best
+    /// the CPU supports; an explicit avx2 is rejected on CPUs without
+    /// it, and on non-compiled schedules). Rejections come back as
+    /// structured [`VariantError`] values. Activation-sparsity skipping
+    /// is on; use [`ModelVariant::build_with_opts`] to disable it.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         name: &str,
@@ -221,8 +232,32 @@ impl ModelVariant {
         fast_mem: usize,
         kernel: &str,
     ) -> Result<ModelVariant, VariantError> {
+        ModelVariant::build_with_opts(
+            name, net, order, schedule, precision, workers, fast_mem, kernel, true,
+        )
+    }
+
+    /// [`ModelVariant::build`] with explicit engine options: `skip`
+    /// toggles activation-sparsity skipping on the compiled schedules
+    /// (AxpyRuns over an all-zero source activation row are skipped
+    /// wholesale; value-identical either way, so the knob exists for
+    /// benchmarking and bisection — `--no-skip` on the CLI).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_opts(
+        name: &str,
+        net: &Ffnn,
+        order: &ConnOrder,
+        schedule: &str,
+        precision: &str,
+        workers: usize,
+        fast_mem: usize,
+        kernel: &str,
+        skip: bool,
+    ) -> Result<ModelVariant, VariantError> {
         use crate::exec::fused::FusedEngine;
-        use crate::exec::quant::{QuantStreamEngine, QuantStreamProgram};
+        use crate::exec::quant::{
+            QuantFusedEngine, QuantStreamEngine, QuantStreamProgram, QuantTiledEngine,
+        };
         use crate::exec::stream::StreamingEngine;
         use crate::exec::tiled::{TiledEngine, TiledProgram};
 
@@ -240,17 +275,19 @@ impl ModelVariant {
         };
         let mut fusion = None;
         let mut tiled_stats = None;
+        let mut skips: Option<Arc<SkipCounters>> = None;
+        let skip_tag = if skip { "on" } else { "off" };
         let (engine, summary): (Arc<dyn Engine>, String) = match (precision, schedule) {
             ("f32", "interp") => (
                 Arc::new(StreamingEngine::new(net, order)) as Arc<dyn Engine>,
                 "f32 per-connection stream interpreter".to_string(),
             ),
             ("f32", "fused") => {
-                let fused = FusedEngine::new(net, order).with_kernel(k);
+                let fused = FusedEngine::new(net, order).with_kernel(k).with_skip(skip);
                 let st = fused.program().stats().clone();
                 let summary = format!(
                     "fused schedule: {} conns -> {} macro-ops ({:.1} ops/macro-op, \
-                     mean fused run {:.1}, max {})",
+                     mean fused run {:.1}, max {}), activation skip {skip_tag}",
                     st.n_ops,
                     st.n_macro_ops(),
                     st.ops_per_macro_op(),
@@ -258,6 +295,7 @@ impl ModelVariant {
                     st.max_run_len
                 );
                 fusion = Some(st);
+                skips = Some(fused.skip_counters().clone());
                 (Arc::new(fused) as Arc<dyn Engine>, summary)
             }
             ("f32", "tiled") => {
@@ -268,7 +306,7 @@ impl ModelVariant {
                 } else {
                     (TiledEngine::new(net, order, fast_mem).map_err(compile_err)?, None)
                 };
-                let engine = engine.with_kernel(k);
+                let engine = engine.with_kernel(k).with_skip(skip);
                 let st = engine.program().stats().clone();
                 let tuned = match &autotune {
                     Some(r) => format!(" (autotuned, predicted {} I/Os)", r.chosen_predicted()),
@@ -276,7 +314,7 @@ impl ModelVariant {
                 };
                 let summary = format!(
                     "tiled schedule: M={}{tuned} -> {} segments (mean live {:.1}, max {}), \
-                     {:.2} fills + {:.2} spills per conn",
+                     {:.2} fills + {:.2} spills per conn, activation skip {skip_tag}",
                     st.m,
                     st.n_segments,
                     st.mean_live(),
@@ -285,6 +323,7 @@ impl ModelVariant {
                     st.spills_per_conn()
                 );
                 tiled_stats = Some(st);
+                skips = Some(engine.skip_counters().clone());
                 (Arc::new(engine) as Arc<dyn Engine>, summary)
             }
             ("i8", "interp") => {
@@ -300,11 +339,47 @@ impl ModelVariant {
                 );
                 (Arc::new(quant) as Arc<dyn Engine>, summary)
             }
-            ("i8", "fused" | "tiled") => {
-                return Err(VariantError::Incompatible {
-                    schedule: schedule.to_string(),
-                    precision: precision.to_string(),
-                })
+            ("i8", "fused") => {
+                let engine = QuantFusedEngine::new(net, order).with_kernel(k).with_skip(skip);
+                let st = engine.program().stats().clone();
+                let summary = format!(
+                    "quant-fused schedule: {} conns -> {} macro-ops ({:.1} ops/macro-op), \
+                     {:.2} B/conn i8 stream, activation skip {skip_tag}",
+                    st.n_ops,
+                    st.n_macro_ops(),
+                    st.ops_per_macro_op(),
+                    engine.program().bytes_per_conn()
+                );
+                fusion = Some(st);
+                skips = Some(engine.skip_counters().clone());
+                (Arc::new(engine) as Arc<dyn Engine>, summary)
+            }
+            ("i8", "tiled") => {
+                let (engine, autotune) = if fast_mem == 0 {
+                    let (engine, report) =
+                        QuantTiledEngine::autotuned(net, order).map_err(compile_err)?;
+                    (engine, Some(report))
+                } else {
+                    (QuantTiledEngine::new(net, order, fast_mem).map_err(compile_err)?, None)
+                };
+                let engine = engine.with_kernel(k).with_skip(skip);
+                let st = engine.program().stats().clone();
+                let tuned = match &autotune {
+                    Some(r) => format!(" (autotuned, predicted {} I/Os)", r.chosen_predicted()),
+                    None => String::new(),
+                };
+                let summary = format!(
+                    "quant-tiled schedule: M={}{tuned} -> {} segments (mean live {:.1}, \
+                     max {}), {:.2} B/conn i8 weights, activation skip {skip_tag}",
+                    st.m,
+                    st.n_segments,
+                    st.mean_live(),
+                    st.max_live,
+                    engine.program().bytes_per_conn()
+                );
+                tiled_stats = Some(st);
+                skips = Some(engine.skip_counters().clone());
+                (Arc::new(engine) as Arc<dyn Engine>, summary)
             }
             ("f32" | "i8", other) => {
                 return Err(VariantError::UnknownSchedule(other.to_string()))
@@ -329,6 +404,9 @@ impl ModelVariant {
         }
         if let Some(st) = tiled_stats {
             variant = variant.with_tiled_stats(st);
+        }
+        if let Some(c) = skips {
+            variant = variant.with_skip_counters(c);
         }
         variant.summary = summary;
         Ok(variant)
@@ -378,6 +456,13 @@ impl ModelVariant {
     /// server under `tiled.<model>`).
     pub fn with_tiled_stats(mut self, stats: TiledStats) -> ModelVariant {
         self.tiled = Some(stats);
+        self
+    }
+
+    /// Attach the serving engine's activation-skip counters (linked
+    /// into `Metrics::snapshot` by the server).
+    pub fn with_skip_counters(mut self, counters: Arc<SkipCounters>) -> ModelVariant {
+        self.skips = Some(counters);
         self
     }
 
@@ -648,6 +733,7 @@ mod tests {
         assert_eq!(v.route().name(), "fused-stream");
         assert_eq!(v.kernel, "scalar");
         assert!(v.fusion.is_some(), "fused build carries stats");
+        assert!(v.skips.is_some(), "compiled builds carry skip counters");
 
         let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1, 0, "auto").unwrap();
         assert_eq!((v.label().as_str(), v.precision), ("interp-i8-w1-scalar", "i8"));
@@ -689,16 +775,42 @@ mod tests {
         let v = ModelVariant::build("m", &net, &order, "interp", "i8", 2, 0, "auto").unwrap();
         assert_eq!((v.precision, v.workers), ("i8", 2));
 
+        // The compiled quant engines: i8 × fused/tiled builds, carries
+        // stats + skip counters, and labels the composition point.
+        let v = ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0, "scalar").unwrap();
+        assert_eq!(
+            (v.label().as_str(), v.route().name()),
+            ("fused-i8-w1-scalar", "quant-fused-stream")
+        );
+        assert!(v.fusion.is_some() && v.skips.is_some());
+        assert!(v.summary.contains("B/conn"), "{}", v.summary);
+
+        let v = ModelVariant::build("m", &net, &order, "tiled", "i8", 2, 6, "scalar").unwrap();
+        assert_eq!(
+            (v.label().as_str(), v.route().name()),
+            ("tiled-i8-w2-scalar", "sharded")
+        );
+        assert_eq!(v.tiled.as_ref().unwrap().m, 6);
+        assert!(v.shard_timings.is_some() && v.skips.is_some());
+
+        let v = ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0, "auto").unwrap();
+        assert!(v.summary.contains("autotuned"), "{}", v.summary);
+        assert!(matches!(
+            ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 2, "auto"),
+            Err(VariantError::Compile { .. })
+        ));
+
+        // Skipping is an engine option, not a different composition
+        // point: off still builds the same variant, flag recorded in
+        // the summary.
+        let v =
+            ModelVariant::build_with_opts("m", &net, &order, "fused", "i8", 1, 0, "auto", false)
+                .unwrap();
+        assert!(v.summary.contains("skip off"), "{}", v.summary);
+        assert!(v.skips.is_some());
+
         // Invalid points are rejected with structured errors, not
         // silently coerced (and not stringly typed).
-        assert!(matches!(
-            ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0, "auto"),
-            Err(VariantError::Incompatible { .. })
-        ));
-        assert!(matches!(
-            ModelVariant::build("m", &net, &order, "tiled", "i8", 1, 0, "auto"),
-            Err(VariantError::Incompatible { .. })
-        ));
         assert!(matches!(
             ModelVariant::build("m", &net, &order, "jit", "f32", 1, 0, "auto"),
             Err(VariantError::UnknownSchedule(s)) if s == "jit"

@@ -133,6 +133,9 @@ impl Server {
         if let Some(stats) = &variant.tiled {
             self.metrics.link_tiled_stats(&name, stats.clone());
         }
+        if let Some(counters) = &variant.skips {
+            self.metrics.link_skip_counters(&name, Arc::clone(counters));
+        }
         self.metrics.link_kernel(&name, variant.kernel);
         // A fresh breaker per deploy: the new engine generation starts
         // healthy regardless of the old one's fault history.
@@ -861,6 +864,36 @@ mod tests {
             snap.path(&["kernel", "t"]).unwrap().as_str(),
             Some("scalar"),
             "dispatched kernel is visible in the snapshot"
+        );
+    }
+
+    #[test]
+    fn quant_fused_model_serves_and_links_skip_counters() {
+        use crate::ffnn::generate::{random_mlp, MlpSpec};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::util::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from(0x0F5E);
+        let net = random_mlp(&MlpSpec::new(2, 8, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let variant =
+            ModelVariant::build("q", &net, &order, "fused", "i8", 1, 0, "scalar").unwrap();
+        let mut router = Router::new();
+        router.register(variant);
+        let server = Server::start(router, ServerConfig::default());
+        let h = server.handle();
+        let r = h.infer("q", vec![0.0; net.n_inputs()]).unwrap();
+        assert_eq!(r.engine, "quant-fused-stream");
+        assert_eq!(r.output.len(), net.n_outputs());
+        let snap = h.metrics_snapshot();
+        assert!(snap.path(&["fusion", "q", "macro_ops"]).is_some());
+        assert!(
+            snap.path(&["skips", "q", "axpy_skip_checked"]).is_some(),
+            "live skip counters are linked at deploy"
+        );
+        assert!(
+            snap.path(&["fusion", "q", "skip_rate"]).is_some(),
+            "skip counters merge into the fusion entry"
         );
     }
 

@@ -45,11 +45,13 @@ use super::batch::BatchMatrix;
 use super::scratch::ScratchPool;
 use super::simd::{self, Kernel};
 use super::stream::{StreamOp, StreamProgram};
-use super::{init_values, Engine};
+use super::{init_values, relu_row, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
 use crate::runtime::mmap::Pool;
 use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 pub use super::simd::LANES;
 
@@ -65,6 +67,58 @@ pub(crate) const DOT_RELU: u8 = 2;
 /// bit 0 = `dst_finish`, bit 1 = `dst_is_hidden`; ReLU fires on `0b11`.
 pub(crate) const FLAG_FINISH: u8 = 1;
 pub(crate) const FLAG_HIDDEN: u8 = 2;
+
+/// Run-time activation-sparsity counters, shared between a compiled
+/// engine and the metrics snapshot (SparseNN-style dynamic skipping on
+/// top of the static I/O savings). An AxpyRun whose source activation
+/// row is entirely zero contributes nothing to any destination — ReLU
+/// nets produce mostly-zero activations, so whole scatter runs can be
+/// skipped at run time. Counters are relaxed atomics: they are
+/// monotonic telemetry, never synchronization.
+#[derive(Debug, Default)]
+pub struct SkipCounters {
+    /// AxpyRun dispatches tested for an all-zero source row (only
+    /// counted while skipping is enabled).
+    pub checked: AtomicU64,
+    /// Tested runs whose source row was entirely zero and were skipped.
+    pub skipped: AtomicU64,
+}
+
+impl SkipCounters {
+    pub fn checked(&self) -> u64 {
+        self.checked.load(Ordering::Relaxed)
+    }
+
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of tested AxpyRuns that were skipped (0 when none ran).
+    pub fn skip_rate(&self) -> f64 {
+        let c = self.checked();
+        if c == 0 {
+            0.0
+        } else {
+            self.skipped() as f64 / c as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("axpy_skip_checked", self.checked())
+            .set("axpy_skipped", self.skipped())
+            .set("skip_rate", self.skip_rate())
+    }
+}
+
+/// True when every element of the row compares `== 0.0` — the skip
+/// predicate. f32 `==` treats `-0.0` like `+0.0`, which is exactly the
+/// equivalence skipping needs: `y + w · ±0.0` can only differ from `y`
+/// in the sign of a zero, never in value.
+#[inline]
+pub(crate) fn row_is_zero(row: &[f32]) -> bool {
+    row.iter().all(|&v| v == 0.0)
+}
 
 /// Compile-time fusion statistics of a [`FusedProgram`] (surfaced in
 /// serving metrics under `fusion.<model>` and by `benches/perf_fused`).
@@ -286,62 +340,16 @@ impl FusedProgram {
             output_ids,
             n_neurons,
         } = pools;
-        let n_macro = ctrl.len();
-        let n = n_neurons as u32;
-        anyhow::ensure!(pivots.len() == n_macro, "pivots/ctrl length mismatch");
-        anyhow::ensure!(bounds.len() == n_macro + 1, "bounds must have one extra entry");
-        anyhow::ensure!(bounds.first() == Some(&0), "bounds must start at 0");
         anyhow::ensure!(
-            *bounds.last().unwrap() as usize == idx.len(),
-            "bounds must end at idx length"
-        );
-        anyhow::ensure!(
-            idx.len() == weights.len() && idx.len() == flags.len(),
-            "idx/weights/flags length mismatch"
+            weights.len() == idx.len(),
+            "idx/weights length mismatch"
         );
         anyhow::ensure!(biases.len() == n_neurons, "biases length != n_neurons");
+        let n = n_neurons as u32;
         for &v in hidden_sources.iter().chain(&input_ids[..]).chain(&output_ids[..]) {
             anyhow::ensure!(v < n, "neuron id {v} out of range 0..{n}");
         }
-        let mut stats = FusionStats {
-            n_ops: idx.len(),
-            ..FusionStats::default()
-        };
-        for m in 0..n_macro {
-            let c = ctrl[m];
-            anyhow::ensure!(c & !(KIND_AXPY | DOT_RELU) == 0, "macro-op {m}: bad ctrl {c:#x}");
-            let axpy = c & KIND_AXPY != 0;
-            anyhow::ensure!(!(axpy && c & DOT_RELU != 0), "macro-op {m}: axpy with dot bit");
-            let pivot = pivots[m];
-            anyhow::ensure!(pivot < n, "macro-op {m}: pivot {pivot} out of range");
-            let (lo, hi) = (bounds[m] as usize, bounds[m + 1] as usize);
-            anyhow::ensure!(lo < hi, "macro-op {m}: empty or decreasing run");
-            for k in lo..hi {
-                anyhow::ensure!(idx[k] < n, "macro-op {m}: row {} out of range", idx[k]);
-                anyhow::ensure!(idx[k] != pivot, "macro-op {m}: element aliases pivot {pivot}");
-                if axpy {
-                    anyhow::ensure!(
-                        flags[k] & !(FLAG_FINISH | FLAG_HIDDEN) == 0,
-                        "macro-op {m}: bad flags {:#x}",
-                        flags[k]
-                    );
-                } else {
-                    anyhow::ensure!(flags[k] == 0, "macro-op {m}: dot element carries flags");
-                }
-            }
-            let len = hi - lo;
-            stats.max_run_len = stats.max_run_len.max(len);
-            if len == 1 {
-                stats.n_singletons += 1;
-            } else {
-                stats.fused_ops += len;
-                if axpy {
-                    stats.n_axpy_runs += 1;
-                } else {
-                    stats.n_dot_runs += 1;
-                }
-            }
-        }
+        let stats = validate_macro_pools(&ctrl, &pivots, &bounds, &idx, &flags, n_neurons)?;
         Ok(FusedProgram {
             ctrl,
             pivots,
@@ -490,9 +498,28 @@ impl FusedProgram {
 
     /// Execute with an explicit microkernel (see [`super::simd`]). All
     /// kernels are bit-identical, so the choice only affects speed.
+    /// Shorthand for [`Self::run_into_skipping`] with skipping off.
     pub fn run_into_with(
         &self,
         kernel: Kernel,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_into_skipping(kernel, None, inputs, values, out);
+    }
+
+    /// Execute with optional activation-sparsity skipping: when `skip`
+    /// is `Some`, an AxpyRun whose source activation row is entirely
+    /// zero is skipped wholesale (its `checked`/`skipped` tallies land
+    /// in the counters). Skipping is value-identical to not skipping —
+    /// `y + w·0` can only change the sign of a zero, and an element
+    /// whose flags demand ReLU still gets it applied to the untouched
+    /// destination row — so the only observable difference is speed.
+    pub fn run_into_skipping(
+        &self,
+        kernel: Kernel,
+        skip: Option<&SkipCounters>,
         inputs: &BatchMatrix,
         values: &mut BatchMatrix,
         out: &mut BatchMatrix,
@@ -515,6 +542,23 @@ impl FusedProgram {
             let hi = self.bounds[m + 1] as usize;
             let pivot = self.pivots[m] as usize;
             if self.ctrl[m] & KIND_AXPY != 0 {
+                if let Some(counters) = skip {
+                    counters.checked.fetch_add(1, Ordering::Relaxed);
+                    if row_is_zero(&data[pivot * batch..pivot * batch + batch]) {
+                        counters.skipped.fetch_add(1, Ordering::Relaxed);
+                        // The scatter contributes nothing, but elements
+                        // flagged finish+hidden still owe their ReLU to
+                        // the destination row.
+                        for k in lo..hi {
+                            if self.flags[k] & simd::RELU_MASK == simd::RELU_MASK {
+                                let d = self.idx[k] as usize * batch;
+                                relu_row(&mut data[d..d + batch]);
+                            }
+                        }
+                        lo = hi;
+                        continue;
+                    }
+                }
                 simd::axpy_run(
                     kernel,
                     data,
@@ -543,6 +587,74 @@ impl FusedProgram {
             out.row_mut(i).copy_from_slice(values.row(v as usize));
         }
     }
+}
+
+/// Validate the macro-op pool invariants the microkernels rely on and
+/// recompute fusion statistics from the run structure: shape agreement,
+/// `bounds` strictly increasing from 0 to `idx.len()`, control bytes
+/// well-formed, every row id in range, and no run element aliasing its
+/// pivot (the no-self-loop guarantee `dot_run`/`axpy_run` cache
+/// registers against). Shared by [`FusedProgram::from_pools`] and the
+/// quant-fused program's pool-loading path — the idx/flag pools really
+/// are the same pools, so the invariants are too.
+pub(crate) fn validate_macro_pools(
+    ctrl: &[u8],
+    pivots: &[u32],
+    bounds: &[u32],
+    idx: &[u32],
+    flags: &[u8],
+    n_neurons: usize,
+) -> anyhow::Result<FusionStats> {
+    let n_macro = ctrl.len();
+    let n = n_neurons as u32;
+    anyhow::ensure!(pivots.len() == n_macro, "pivots/ctrl length mismatch");
+    anyhow::ensure!(bounds.len() == n_macro + 1, "bounds must have one extra entry");
+    anyhow::ensure!(bounds.first() == Some(&0), "bounds must start at 0");
+    anyhow::ensure!(
+        *bounds.last().unwrap() as usize == idx.len(),
+        "bounds must end at idx length"
+    );
+    anyhow::ensure!(idx.len() == flags.len(), "idx/flags length mismatch");
+    let mut stats = FusionStats {
+        n_ops: idx.len(),
+        ..FusionStats::default()
+    };
+    for m in 0..n_macro {
+        let c = ctrl[m];
+        anyhow::ensure!(c & !(KIND_AXPY | DOT_RELU) == 0, "macro-op {m}: bad ctrl {c:#x}");
+        let axpy = c & KIND_AXPY != 0;
+        anyhow::ensure!(!(axpy && c & DOT_RELU != 0), "macro-op {m}: axpy with dot bit");
+        let pivot = pivots[m];
+        anyhow::ensure!(pivot < n, "macro-op {m}: pivot {pivot} out of range");
+        let (lo, hi) = (bounds[m] as usize, bounds[m + 1] as usize);
+        anyhow::ensure!(lo < hi, "macro-op {m}: empty or decreasing run");
+        for k in lo..hi {
+            anyhow::ensure!(idx[k] < n, "macro-op {m}: row {} out of range", idx[k]);
+            anyhow::ensure!(idx[k] != pivot, "macro-op {m}: element aliases pivot {pivot}");
+            if axpy {
+                anyhow::ensure!(
+                    flags[k] & !(FLAG_FINISH | FLAG_HIDDEN) == 0,
+                    "macro-op {m}: bad flags {:#x}",
+                    flags[k]
+                );
+            } else {
+                anyhow::ensure!(flags[k] == 0, "macro-op {m}: dot element carries flags");
+            }
+        }
+        let len = hi - lo;
+        stats.max_run_len = stats.max_run_len.max(len);
+        if len == 1 {
+            stats.n_singletons += 1;
+        } else {
+            stats.fused_ops += len;
+            if axpy {
+                stats.n_axpy_runs += 1;
+            } else {
+                stats.n_dot_runs += 1;
+            }
+        }
+    }
+    Ok(stats)
 }
 
 /// Structure-of-arrays pools a fusion pass appends macro-ops to —
@@ -639,6 +751,10 @@ pub struct FusedEngine {
     scratch: ScratchPool,
     name: &'static str,
     kernel: Kernel,
+    /// Activation-sparsity skipping (on by default — value-identical,
+    /// see [`FusedProgram::run_into_skipping`]).
+    skip: bool,
+    counters: Arc<SkipCounters>,
 }
 
 impl FusedEngine {
@@ -656,6 +772,8 @@ impl FusedEngine {
             scratch: ScratchPool::new(SCRATCH_POOL_CAP),
             name: "fused-stream",
             kernel: Kernel::auto(),
+            skip: true,
+            counters: Arc::new(SkipCounters::default()),
         }
     }
 
@@ -679,6 +797,19 @@ impl FusedEngine {
         self.kernel
     }
 
+    /// Enable or disable activation-sparsity skipping (on by default).
+    /// Skipping is value-identical either way; turning it off also
+    /// stops the counters.
+    pub fn with_skip(mut self, skip: bool) -> FusedEngine {
+        self.skip = skip;
+        self
+    }
+
+    /// The shared skip counters this engine bumps (link into metrics).
+    pub fn skip_counters(&self) -> &Arc<SkipCounters> {
+        &self.counters
+    }
+
     pub fn program(&self) -> &FusedProgram {
         &self.program
     }
@@ -689,7 +820,8 @@ impl Engine for FusedEngine {
         let batch = inputs.batch();
         let mut values = self.scratch.take(self.program.n_neurons(), batch);
         let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
-        self.program.run_into_with(self.kernel, inputs, &mut values, &mut out);
+        let skip = if self.skip { Some(&*self.counters) } else { None };
+        self.program.run_into_skipping(self.kernel, skip, inputs, &mut values, &mut out);
         self.scratch.put(values);
         out
     }
@@ -920,6 +1052,58 @@ mod tests {
         for batch in 0..2 * SCRATCH_POOL_CAP {
             let x = BatchMatrix::random(net.n_inputs(), batch, &mut rng);
             assert_eq!(fused.infer(&x), interp.infer(&x), "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn skipping_is_bit_identical_and_counts_zero_rows() {
+        // Same shape as `axpy_run_applies_mid_run_relu`: one AxpyRun
+        // whose first element finishes a hidden neuron, plus a
+        // singleton dot — the AxpyRun is the only checked dispatch.
+        let net = Ffnn::new(
+            vec![NeuronKind::Input, NeuronKind::Hidden, NeuronKind::Output],
+            vec![0.0, -5.0, 0.0],
+            vec![
+                Conn { src: 0, dst: 1, weight: 1.0 },
+                Conn { src: 0, dst: 2, weight: 1.0 },
+                Conn { src: 1, dst: 2, weight: 10.0 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let on = FusedEngine::new(&net, &order); // skip on by default
+        let off = FusedEngine::new(&net, &order).with_skip(false);
+        // All-zero input: the AxpyRun source row is zero and is skipped
+        // — and the skipped run's finish+hidden element still ReLUs the
+        // hidden bias (−5 → 0) so the downstream dot sees 0.
+        let zero = BatchMatrix::zeros(1, 4);
+        assert_eq!(on.infer(&zero), off.infer(&zero));
+        assert_eq!(on.skip_counters().checked(), 1);
+        assert_eq!(on.skip_counters().skipped(), 1);
+        assert_eq!(off.skip_counters().checked(), 0, "skip off must not count");
+        // Mixed batch: one nonzero column keeps the whole run live.
+        let x = BatchMatrix::from_rows(1, 2, vec![0.0, 2.0]);
+        assert_eq!(on.infer(&x), off.infer(&x));
+        assert_eq!(on.skip_counters().checked(), 2);
+        assert_eq!(on.skip_counters().skipped(), 1);
+        assert_eq!(on.skip_counters().skip_rate(), 0.5);
+        let j = on.skip_counters().to_json();
+        assert_eq!(j.get("axpy_skip_checked").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("axpy_skipped").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn skipping_matches_non_skipping_on_random_nets() {
+        let mut rng = Pcg64::seed_from(0xF0C);
+        for case in 0..8 {
+            let net = random_mlp(&MlpSpec::new(3, 14, 0.4), &mut rng);
+            let order = two_optimal_order(&net);
+            let on = FusedEngine::new(&net, &order);
+            let off = FusedEngine::new(&net, &order).with_skip(false);
+            let x = BatchMatrix::random(net.n_inputs(), 7, &mut rng);
+            assert_eq!(on.infer(&x), off.infer(&x), "case {case}");
+            assert_eq!(on.infer(&BatchMatrix::zeros(net.n_inputs(), 3)),
+                off.infer(&BatchMatrix::zeros(net.n_inputs(), 3)), "case {case} zeros");
         }
     }
 

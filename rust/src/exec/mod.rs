@@ -44,20 +44,29 @@
 //! | `fused` | fused | f32 | bit-identical |
 //! | `tiled` | tiled | f32 | bit-identical |
 //! | `quant` | interp (compressed) | i8 | within certified bound |
+//! | `quant-fused` | fused | i8 | bit-identical to `quant` |
+//! | `quant-tiled` | tiled | i8 | bit-identical to `quant` |
 //! | `layerwise` / `dense` / `csr` | layer-wise | f32 | within 1e-5 |
 //!
 //! [`parallel::ParallelEngine`] (the `workers` knob) composes with every
 //! row: batch sharding is bit-identical to the serial inner engine, so
 //! `fused∘sharded` and `tiled∘sharded` stay bit-identical to `stream`
-//! and `quant∘sharded` stays within the certified bound. The `schedule`
-//! knob (interp | fused | tiled) currently applies to the f32 path only
-//! — the i8 stream is already compressed into its own record format, so
-//! `--precision i8` with a compiled schedule is rejected at the CLI.
-//! The tiled schedule adds the `--fast-mem` knob (slots `M`, or auto =
-//! simulator-driven autotune), and the compiled schedules add the
-//! `--kernel` knob (auto | scalar | avx2) selecting the [`simd`]
-//! microkernel — `avx2` is rejected with a structured error on CPUs
-//! without it, and every accepted combination computes identical bits.
+//! and the quant rows (interp, fused, tiled) `∘sharded` stay within the
+//! certified bound. The `schedule` knob (interp | fused | tiled) now
+//! composes with both precisions: `--precision i8` with a compiled
+//! schedule runs the quant-fused/quant-tiled engines, whose macro-op
+//! index/flag pools are shared with the f32 compilation path while the
+//! weight pool stays `i8` with per-group scale/zero-point (group-dequant
+//! microkernels in [`simd`]) — bit-identical to the quant interpreter
+//! and within the same certified `output_error_bound` of `stream`.
+//! The compiled schedules also skip AxpyRuns whose source activation
+//! row is entirely zero (activation sparsity; value-identical, counted
+//! in metrics). The tiled schedule adds the `--fast-mem` knob (slots
+//! `M`, or auto = simulator-driven autotune), and the compiled
+//! schedules add the `--kernel` knob (auto | scalar | avx2) selecting
+//! the [`simd`] microkernel — `avx2` is rejected with a structured
+//! error on CPUs without it, and every accepted combination computes
+//! identical bits.
 //!
 //! For chaos testing, [`faults::FaultyEngine`] wraps any row of the
 //! matrix with a seeded [`faults::FaultPlan`] of injected panics,

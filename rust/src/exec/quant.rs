@@ -28,11 +28,20 @@
 //! tolerance the differential test suite asserts against.
 
 use super::batch::BatchMatrix;
+use super::fused::{
+    fuse_runs, row_is_zero, validate_macro_pools, FusionStats, RunPools, SkipCounters,
+    DOT_RELU, KIND_AXPY, SCRATCH_POOL_CAP,
+};
+use super::scratch::ScratchPool;
+use super::simd::{self, Kernel};
 use super::stream::{StreamOp, StreamProgram};
-use super::{relu_row, Engine};
+use super::tiled::{AutotuneReport, TiledProgram, TiledStats};
+use super::{init_values, relu_row, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
 use crate::runtime::mmap::Pool;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 /// Records per quantization group (one f32 scale/zero-point pair each).
 pub const GROUP: usize = 64;
@@ -414,6 +423,708 @@ impl Engine for QuantStreamEngine {
     }
 }
 
+/// The full pool set of a [`QuantFusedProgram`], as carried by a
+/// `sparseflow-bin-v1` artifact: the ctrl/pivots/bounds/idx/flags
+/// macro-op pools are **the same pools** the f32 [`FusedProgram`] uses
+/// (fusion structure does not depend on weights), while the weight pool
+/// stays `i8` with per-group scale/zero-point. Feed to
+/// [`QuantFusedProgram::from_pools`].
+///
+/// [`FusedProgram`]: super::fused::FusedProgram
+pub struct QuantFusedPools {
+    pub ctrl: Pool<u8>,
+    pub pivots: Pool<u32>,
+    pub bounds: Pool<u32>,
+    pub idx: Pool<u32>,
+    pub flags: Pool<u8>,
+    pub qweights: Pool<i8>,
+    pub groups: Pool<QuantGroup>,
+    pub biases: Pool<f32>,
+    pub hidden_sources: Pool<u32>,
+    pub input_ids: Pool<u32>,
+    pub output_ids: Pool<u32>,
+    pub n_neurons: usize,
+}
+
+/// A run-length-fused **quantized** stream program: the macro-op form of
+/// [`super::fused::FusedProgram`] executing directly over the per-group
+/// affine `i8` weights via the group-dequant microkernels in
+/// [`super::simd`].
+///
+/// The key structural fact making this sound: [`fuse_runs`] appends
+/// exactly one pool element per source op, in stream order — so pool
+/// element `k` corresponds to quant record `k` and dequantizes through
+/// `groups[k / GROUP]`; a macro-op's dequant base is simply its
+/// `bounds[m]`. Because dequantization is a pure per-element function
+/// and the kernels otherwise run the identical f32 arithmetic, this
+/// program is **bit-identical** to the quant interpreter
+/// ([`QuantStreamProgram::run_into`]) — same dequant order, same AXPY
+/// sequence per batch column — and inherits the interpreter's certified
+/// [`output_error_bound`] vs the f32 reference unchanged.
+#[derive(Clone, Debug)]
+pub struct QuantFusedProgram {
+    ctrl: Pool<u8>,
+    pivots: Pool<u32>,
+    bounds: Pool<u32>,
+    idx: Pool<u32>,
+    flags: Pool<u8>,
+    qweights: Pool<i8>,
+    groups: Pool<QuantGroup>,
+    biases: Pool<f32>,
+    hidden_sources: Pool<u32>,
+    input_ids: Pool<u32>,
+    output_ids: Pool<u32>,
+    n_neurons: usize,
+    stats: FusionStats,
+}
+
+impl QuantFusedProgram {
+    /// Compress `net` with the given topological order and run-length
+    /// fuse the quantized record stream.
+    pub fn compile(net: &Ffnn, order: &ConnOrder) -> QuantFusedProgram {
+        QuantFusedProgram::from_quant(&QuantStreamProgram::compress(net, order))
+    }
+
+    /// Fuse an already-compressed quant stream. The fusion pass runs
+    /// over the decoded records (weights are irrelevant to run
+    /// structure), and the `i8` weight pool + group table carry over
+    /// verbatim: record `k` becomes pool element `k`.
+    pub fn from_quant(q: &QuantStreamProgram) -> QuantFusedProgram {
+        let ops = q.decode();
+        let n = ops.len();
+        let mut ctrl = Vec::new();
+        let mut pivots = Vec::new();
+        let mut bounds = vec![0u32];
+        let mut idx = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        let mut flags = Vec::with_capacity(n);
+        let mut stats = FusionStats {
+            n_ops: n,
+            ..FusionStats::default()
+        };
+        fuse_runs(
+            &ops,
+            0,
+            n,
+            &mut RunPools {
+                ctrl: &mut ctrl,
+                pivots: &mut pivots,
+                bounds: &mut bounds,
+                idx: &mut idx,
+                weights: &mut weights,
+                flags: &mut flags,
+            },
+            |row| row,
+            |len, axpy| {
+                stats.max_run_len = stats.max_run_len.max(len);
+                if len == 1 {
+                    stats.n_singletons += 1;
+                } else {
+                    stats.fused_ops += len;
+                    if axpy {
+                        stats.n_axpy_runs += 1;
+                    } else {
+                        stats.n_dot_runs += 1;
+                    }
+                }
+            },
+        );
+        // The f32 weights pool is discarded: execution reads `qweights`
+        // through the group table instead.
+        drop(weights);
+        QuantFusedProgram {
+            ctrl: ctrl.into(),
+            pivots: pivots.into(),
+            bounds: bounds.into(),
+            idx: idx.into(),
+            flags: flags.into(),
+            qweights: q.quantized_weights().to_vec().into(),
+            groups: q.groups().to_vec().into(),
+            biases: q.biases().to_vec().into(),
+            hidden_sources: q.hidden_sources().to_vec().into(),
+            input_ids: q.input_ids().to_vec().into(),
+            output_ids: q.output_ids().to_vec().into(),
+            n_neurons: q.n_neurons(),
+            stats,
+        }
+    }
+
+    /// Reassemble a program from externally supplied pools (the
+    /// artifact-loading path — pools may borrow an mmap). Revalidates
+    /// the shared macro-op invariants ([`validate_macro_pools`], the
+    /// same checks the f32 fused loader runs) plus the quant-specific
+    /// ones: one `i8` weight per pool element and one group per
+    /// [`GROUP`] elements.
+    pub fn from_pools(pools: QuantFusedPools) -> anyhow::Result<QuantFusedProgram> {
+        let QuantFusedPools {
+            ctrl,
+            pivots,
+            bounds,
+            idx,
+            flags,
+            qweights,
+            groups,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+        } = pools;
+        anyhow::ensure!(
+            qweights.len() == idx.len(),
+            "qweights length {} != idx length {}",
+            qweights.len(),
+            idx.len()
+        );
+        anyhow::ensure!(
+            groups.len() == qweights.len().div_ceil(GROUP),
+            "need {} quant groups for {} pool elements, got {}",
+            qweights.len().div_ceil(GROUP),
+            qweights.len(),
+            groups.len()
+        );
+        anyhow::ensure!(biases.len() == n_neurons, "biases length != n_neurons");
+        let n = n_neurons as u32;
+        for &v in hidden_sources.iter().chain(&input_ids[..]).chain(&output_ids[..]) {
+            anyhow::ensure!(v < n, "neuron id {v} out of range 0..{n}");
+        }
+        let stats = validate_macro_pools(&ctrl, &pivots, &bounds, &idx, &flags, n_neurons)?;
+        Ok(QuantFusedProgram {
+            ctrl,
+            pivots,
+            bounds,
+            idx,
+            flags,
+            qweights,
+            groups,
+            biases,
+            hidden_sources,
+            input_ids,
+            output_ids,
+            n_neurons,
+            stats,
+        })
+    }
+
+    /// True when the pools borrow a mapped artifact instead of owning
+    /// heap copies (the zero-copy load path).
+    pub fn is_zero_copy(&self) -> bool {
+        self.idx.is_borrowed() && self.qweights.is_borrowed()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn n_macro_ops(&self) -> usize {
+        self.pivots.len()
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    pub fn input_ids(&self) -> &[u32] {
+        &self.input_ids
+    }
+
+    pub fn output_ids(&self) -> &[u32] {
+        &self.output_ids
+    }
+
+    pub fn ctrl(&self) -> &[u8] {
+        &self.ctrl
+    }
+
+    pub fn pivots(&self) -> &[u32] {
+        &self.pivots
+    }
+
+    pub fn bounds(&self) -> &[u32] {
+        &self.bounds
+    }
+
+    pub fn idx(&self) -> &[u32] {
+        &self.idx
+    }
+
+    pub fn flags(&self) -> &[u8] {
+        &self.flags
+    }
+
+    pub fn biases(&self) -> &[f32] {
+        &self.biases
+    }
+
+    pub fn hidden_sources(&self) -> &[u32] {
+        &self.hidden_sources
+    }
+
+    pub fn quantized_weights(&self) -> &[i8] {
+        &self.qweights
+    }
+
+    pub fn groups(&self) -> &[QuantGroup] {
+        &self.groups
+    }
+
+    pub fn stats(&self) -> &FusionStats {
+        &self.stats
+    }
+
+    /// Bytes the macro-op dispatch streams per batch: ctrl + pivots +
+    /// bounds + idx + flags + `i8` weights + group table (the weight
+    /// axis stays 1 B/conn instead of 4).
+    pub fn stream_bytes(&self) -> usize {
+        self.ctrl.len()
+            + 4 * self.pivots.len()
+            + 4 * self.bounds.len()
+            + 4 * self.idx.len()
+            + self.flags.len()
+            + self.qweights.len()
+            + self.groups.len() * std::mem::size_of::<QuantGroup>()
+    }
+
+    /// Streamed bytes per connection (the paper's cost unit, in bytes).
+    pub fn bytes_per_conn(&self) -> f64 {
+        if self.qweights.is_empty() {
+            return 0.0;
+        }
+        self.stream_bytes() as f64 / self.qweights.len() as f64
+    }
+
+    /// Execute into caller-provided buffers on the scalar reference
+    /// kernel with skipping off (mirror of
+    /// [`super::fused::FusedProgram::run_into`]).
+    pub fn run_into(&self, inputs: &BatchMatrix, values: &mut BatchMatrix, out: &mut BatchMatrix) {
+        self.run_into_skipping(Kernel::Scalar, None, inputs, values, out);
+    }
+
+    /// Execute with an explicit microkernel, skipping off. All kernels
+    /// are bit-identical, so the choice only affects speed.
+    pub fn run_into_with(
+        &self,
+        kernel: Kernel,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_into_skipping(kernel, None, inputs, values, out);
+    }
+
+    /// Execute with optional activation-sparsity skipping (same
+    /// semantics and value-identity argument as
+    /// [`super::fused::FusedProgram::run_into_skipping`]).
+    pub fn run_into_skipping(
+        &self,
+        kernel: Kernel,
+        skip: Option<&SkipCounters>,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        let batch = inputs.batch();
+        assert_eq!(inputs.rows(), self.input_ids.len(), "input row count");
+        assert_eq!(values.rows(), self.n_neurons);
+        assert_eq!(values.batch(), batch);
+        assert_eq!(out.rows(), self.output_ids.len());
+        assert_eq!(out.batch(), batch);
+
+        init_values(values, inputs, &self.biases, &self.input_ids, &self.hidden_sources);
+
+        let data = values.data_mut();
+        let mut lo = 0usize;
+        for m in 0..self.pivots.len() {
+            let hi = self.bounds[m + 1] as usize;
+            let pivot = self.pivots[m] as usize;
+            if self.ctrl[m] & KIND_AXPY != 0 {
+                if let Some(counters) = skip {
+                    counters.checked.fetch_add(1, Ordering::Relaxed);
+                    if row_is_zero(&data[pivot * batch..pivot * batch + batch]) {
+                        counters.skipped.fetch_add(1, Ordering::Relaxed);
+                        for k in lo..hi {
+                            if self.flags[k] & simd::RELU_MASK == simd::RELU_MASK {
+                                let d = self.idx[k] as usize * batch;
+                                relu_row(&mut data[d..d + batch]);
+                            }
+                        }
+                        lo = hi;
+                        continue;
+                    }
+                }
+                simd::quant_axpy_run(
+                    kernel,
+                    data,
+                    batch,
+                    pivot,
+                    &self.idx[lo..hi],
+                    &self.qweights[lo..hi],
+                    &self.groups,
+                    lo,
+                    &self.flags[lo..hi],
+                );
+            } else {
+                simd::quant_dot_run(
+                    kernel,
+                    data,
+                    batch,
+                    pivot,
+                    &self.idx[lo..hi],
+                    &self.qweights[lo..hi],
+                    &self.groups,
+                    lo,
+                    self.ctrl[m] & DOT_RELU != 0,
+                );
+            }
+            lo = hi;
+        }
+
+        for (i, &v) in self.output_ids.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(values.row(v as usize));
+        }
+    }
+}
+
+/// [`Engine`] wrapper over a quant-fused program with reusable scratch
+/// and activation-sparsity skipping (same mechanisms as
+/// [`super::fused::FusedEngine`]).
+pub struct QuantFusedEngine {
+    program: QuantFusedProgram,
+    scratch: ScratchPool,
+    name: &'static str,
+    kernel: Kernel,
+    skip: bool,
+    counters: Arc<SkipCounters>,
+}
+
+impl QuantFusedEngine {
+    pub fn new(net: &Ffnn, order: &ConnOrder) -> QuantFusedEngine {
+        QuantFusedEngine::from_program(QuantFusedProgram::compile(net, order))
+    }
+
+    /// Wrap an already-compiled quant-fused program (kernel defaults to
+    /// [`Kernel::auto`]; skipping on — both are value-preserving).
+    pub fn from_program(program: QuantFusedProgram) -> QuantFusedEngine {
+        QuantFusedEngine {
+            program,
+            scratch: ScratchPool::new(SCRATCH_POOL_CAP),
+            name: "quant-fused-stream",
+            kernel: Kernel::auto(),
+            skip: true,
+            counters: Arc::new(SkipCounters::default()),
+        }
+    }
+
+    /// Same engine dispatching to an explicit microkernel.
+    pub fn with_kernel(mut self, kernel: Kernel) -> QuantFusedEngine {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Enable or disable activation-sparsity skipping (on by default).
+    pub fn with_skip(mut self, skip: bool) -> QuantFusedEngine {
+        self.skip = skip;
+        self
+    }
+
+    /// The microkernel `infer` dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The shared skip counters this engine bumps (link into metrics).
+    pub fn skip_counters(&self) -> &Arc<SkipCounters> {
+        &self.counters
+    }
+
+    pub fn program(&self) -> &QuantFusedProgram {
+        &self.program
+    }
+}
+
+impl Engine for QuantFusedEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let mut values = self.scratch.take(self.program.n_neurons(), batch);
+        let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
+        let skip = if self.skip { Some(&*self.counters) } else { None };
+        self.program
+            .run_into_skipping(self.kernel, skip, inputs, &mut values, &mut out);
+        self.scratch.put(values);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.program.input_ids().len()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.program.output_ids().len()
+    }
+}
+
+/// A cache-tiled **quantized** stream program: the segment/slot
+/// structure of a [`TiledProgram`] executing over the per-group affine
+/// `i8` weight pool of the matching [`QuantStreamProgram`].
+///
+/// Segmentation and slot assignment depend only on the (src, dst)
+/// sequence — never on weights — so the tiled structure compiled from
+/// the f32 stream pairs exactly with the quant record stream: global
+/// pool element `k` ↔ record `k` (per-segment fusion appends in stream
+/// order), and a macro-op dequantizes from its global `bounds[mi]`.
+/// Bit-identical to the quant interpreter for every budget `M ≥ 3`, by
+/// the same argument as [`QuantFusedProgram`] plus the exact-row-copy
+/// fills/spills.
+#[derive(Clone, Debug)]
+pub struct QuantTiledProgram {
+    tiled: TiledProgram,
+    qweights: Pool<i8>,
+    groups: Pool<QuantGroup>,
+}
+
+impl QuantTiledProgram {
+    /// Compile `net` under a fast-memory budget of `m` slots (see
+    /// [`TiledProgram::compile`] for the `m` contract) and pair the
+    /// segment structure with the quantized weight pool.
+    pub fn compile(net: &Ffnn, order: &ConnOrder, m: usize) -> anyhow::Result<QuantTiledProgram> {
+        let tiled = TiledProgram::compile(net, order, m)?;
+        let quant = QuantStreamProgram::compress(net, order);
+        QuantTiledProgram::from_parts(tiled, quant.quantized_weights().to_vec().into(),
+            quant.groups().to_vec().into())
+    }
+
+    /// Compile with an autotuned fast-memory budget (the same
+    /// [`TiledProgram::autotune`] sweep — predicted I/Os depend on the
+    /// order and budget, not on weight precision).
+    pub fn autotuned(
+        net: &Ffnn,
+        order: &ConnOrder,
+    ) -> anyhow::Result<(QuantTiledProgram, AutotuneReport)> {
+        let (tiled, report) = TiledProgram::autotune(net, order)?;
+        let quant = QuantStreamProgram::compress(net, order);
+        let program = QuantTiledProgram::from_parts(
+            tiled,
+            quant.quantized_weights().to_vec().into(),
+            quant.groups().to_vec().into(),
+        )?;
+        Ok((program, report))
+    }
+
+    /// Pair an already-compiled tiled structure with a quantized weight
+    /// pool (the artifact-loading path — pools may borrow an mmap).
+    /// The tiled structure must come from the same op stream the quant
+    /// pool was compressed from: one `i8` weight per pool element, one
+    /// group per [`GROUP`] elements.
+    pub fn from_parts(
+        tiled: TiledProgram,
+        qweights: Pool<i8>,
+        groups: Pool<QuantGroup>,
+    ) -> anyhow::Result<QuantTiledProgram> {
+        anyhow::ensure!(
+            qweights.len() == tiled.n_ops(),
+            "qweights length {} != tiled pool length {}",
+            qweights.len(),
+            tiled.n_ops()
+        );
+        anyhow::ensure!(
+            groups.len() == qweights.len().div_ceil(GROUP),
+            "need {} quant groups for {} pool elements, got {}",
+            qweights.len().div_ceil(GROUP),
+            qweights.len(),
+            groups.len()
+        );
+        Ok(QuantTiledProgram { tiled, qweights, groups })
+    }
+
+    /// The underlying segment/slot structure (budget, stats, shapes).
+    pub fn tiled(&self) -> &TiledProgram {
+        &self.tiled
+    }
+
+    pub fn stats(&self) -> &TiledStats {
+        self.tiled.stats()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.qweights.len()
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.tiled.n_neurons()
+    }
+
+    pub fn slot_rows(&self) -> usize {
+        self.tiled.slot_rows()
+    }
+
+    pub fn input_ids(&self) -> &[u32] {
+        self.tiled.input_ids()
+    }
+
+    pub fn output_ids(&self) -> &[u32] {
+        self.tiled.output_ids()
+    }
+
+    pub fn quantized_weights(&self) -> &[i8] {
+        &self.qweights
+    }
+
+    pub fn groups(&self) -> &[QuantGroup] {
+        &self.groups
+    }
+
+    /// Streamed bytes per connection of the weight axis (`i8` pool +
+    /// group table; index/flag pools are shared with the f32 tiled
+    /// structure and counted the same on both sides).
+    pub fn bytes_per_conn(&self) -> f64 {
+        if self.qweights.is_empty() {
+            return 0.0;
+        }
+        let group_bytes = self.groups.len() * std::mem::size_of::<QuantGroup>();
+        (self.qweights.len() + group_bytes) as f64 / self.qweights.len() as f64
+    }
+
+    /// Execute into caller-provided buffers (shapes as in
+    /// [`TiledProgram::run_into`]) on the scalar kernel, skipping off.
+    pub fn run_into(
+        &self,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_into_skipping(Kernel::Scalar, None, inputs, values, slots, out);
+    }
+
+    /// Execute with an explicit microkernel, skipping off.
+    pub fn run_into_with(
+        &self,
+        kernel: Kernel,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_into_skipping(kernel, None, inputs, values, slots, out);
+    }
+
+    /// Execute with optional activation-sparsity skipping (semantics as
+    /// in [`TiledProgram::run_into_skipping`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_into_skipping(
+        &self,
+        kernel: Kernel,
+        skip: Option<&SkipCounters>,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.tiled
+            .run_into_quant(kernel, &self.qweights, &self.groups, skip, inputs, values, slots, out);
+    }
+}
+
+/// [`Engine`] wrapper over a quant-tiled program (scratch + skipping as
+/// in [`super::tiled::TiledEngine`]).
+pub struct QuantTiledEngine {
+    program: QuantTiledProgram,
+    values_pool: ScratchPool,
+    slots_pool: ScratchPool,
+    name: &'static str,
+    kernel: Kernel,
+    skip: bool,
+    counters: Arc<SkipCounters>,
+}
+
+impl QuantTiledEngine {
+    /// Compile and wrap (see [`QuantTiledProgram::compile`]).
+    pub fn new(net: &Ffnn, order: &ConnOrder, m: usize) -> anyhow::Result<QuantTiledEngine> {
+        Ok(QuantTiledEngine::from_program(QuantTiledProgram::compile(net, order, m)?))
+    }
+
+    /// Compile with an autotuned budget (see
+    /// [`QuantTiledProgram::autotuned`]).
+    pub fn autotuned(
+        net: &Ffnn,
+        order: &ConnOrder,
+    ) -> anyhow::Result<(QuantTiledEngine, AutotuneReport)> {
+        let (program, report) = QuantTiledProgram::autotuned(net, order)?;
+        Ok((QuantTiledEngine::from_program(program), report))
+    }
+
+    /// Wrap an already-compiled quant-tiled program (kernel defaults to
+    /// [`Kernel::auto`]; skipping on — both are value-preserving).
+    pub fn from_program(program: QuantTiledProgram) -> QuantTiledEngine {
+        QuantTiledEngine {
+            program,
+            values_pool: ScratchPool::new(SCRATCH_POOL_CAP),
+            slots_pool: ScratchPool::new(SCRATCH_POOL_CAP),
+            name: "quant-tiled-stream",
+            kernel: Kernel::auto(),
+            skip: true,
+            counters: Arc::new(SkipCounters::default()),
+        }
+    }
+
+    /// Same engine dispatching to an explicit microkernel.
+    pub fn with_kernel(mut self, kernel: Kernel) -> QuantTiledEngine {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Enable or disable activation-sparsity skipping (on by default).
+    pub fn with_skip(mut self, skip: bool) -> QuantTiledEngine {
+        self.skip = skip;
+        self
+    }
+
+    /// The microkernel `infer` dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The shared skip counters this engine bumps (link into metrics).
+    pub fn skip_counters(&self) -> &Arc<SkipCounters> {
+        &self.counters
+    }
+
+    pub fn program(&self) -> &QuantTiledProgram {
+        &self.program
+    }
+}
+
+impl Engine for QuantTiledEngine {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        let batch = inputs.batch();
+        let mut values = self.values_pool.take(self.program.n_neurons(), batch);
+        let mut slots = self.slots_pool.take(self.program.slot_rows(), batch);
+        let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
+        let skip = if self.skip { Some(&*self.counters) } else { None };
+        self.program
+            .run_into_skipping(self.kernel, skip, inputs, &mut values, &mut slots, &mut out);
+        self.values_pool.put(values);
+        self.slots_pool.put(slots);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.program.input_ids().len()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.program.output_ids().len()
+    }
+}
+
 /// Certified upper bound on `max |quant_output - f32_output|` for the
 /// given input batch.
 ///
@@ -748,5 +1459,234 @@ mod tests {
         let y = engine.infer(&BatchMatrix::random(net.n_inputs(), 3, &mut rng));
         assert_eq!(y.rows(), net.n_outputs());
         assert_eq!(y.batch(), 3);
+    }
+
+    fn kernels() -> Vec<Kernel> {
+        let mut ks = vec![Kernel::Scalar];
+        if Kernel::Avx2.is_supported() {
+            ks.push(Kernel::Avx2);
+        }
+        ks
+    }
+
+    #[test]
+    fn quant_fused_bit_identical_to_interpreter() {
+        for seed in 0..4u64 {
+            let mut rng = Pcg64::seed_from(0xA00 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 18, 0.4), &mut rng);
+            let order = two_optimal_order(&net);
+            let interp = QuantStreamEngine::new(&net, &order);
+            let x = BatchMatrix::random(net.n_inputs(), 9, &mut rng);
+            let want = interp.infer(&x);
+            for k in kernels() {
+                let fused = QuantFusedEngine::new(&net, &order).with_kernel(k);
+                assert_eq!(fused.infer(&x), want, "seed {seed} kernel {}", k.name());
+                let no_skip = QuantFusedEngine::new(&net, &order)
+                    .with_kernel(k)
+                    .with_skip(false);
+                assert_eq!(no_skip.infer(&x), want, "seed {seed} kernel {} noskip", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quant_fused_shares_fusion_structure_with_f32_path() {
+        // The tentpole claim, literally: the quant-fused macro-op pools
+        // (ctrl/pivots/bounds/idx/flags) are the same pools the f32
+        // fused compiler produces — fusion structure is weight-blind.
+        let mut rng = Pcg64::seed_from(0xA21);
+        let net = random_mlp(&MlpSpec::new(3, 16, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let qf = QuantFusedProgram::compile(&net, &order);
+        let f = crate::exec::fused::FusedProgram::compile(&net, &order);
+        assert_eq!(qf.ctrl(), f.ctrl());
+        assert_eq!(qf.pivots(), f.pivots());
+        assert_eq!(qf.bounds(), f.bounds());
+        assert_eq!(qf.idx(), f.idx());
+        assert_eq!(qf.flags(), f.flags());
+        assert_eq!(qf.stats(), f.stats());
+        // The weight pool is the quant stream's, element k ↔ record k.
+        let q = QuantStreamProgram::compress(&net, &order);
+        assert_eq!(qf.quantized_weights(), q.quantized_weights());
+        assert_eq!(qf.groups(), q.groups());
+        // The weight axis shrinks from 4 B/conn (f32) to i8 + amortized
+        // group table, and the byte accounting adds up.
+        assert!(qf.n_ops() > 8, "want a non-trivial stream");
+        let quant_weight_bytes = qf.n_ops() + qf.groups().len() * 8;
+        assert!(quant_weight_bytes < 4 * qf.n_ops());
+        assert_eq!(
+            qf.stream_bytes(),
+            qf.ctrl().len()
+                + 4 * qf.pivots().len()
+                + 4 * qf.bounds().len()
+                + 4 * qf.idx().len()
+                + qf.flags().len()
+                + quant_weight_bytes
+        );
+        assert!(qf.bytes_per_conn() > 0.0);
+    }
+
+    #[test]
+    fn quant_tiled_bit_identical_to_interpreter() {
+        for seed in 0..3u64 {
+            let mut rng = Pcg64::seed_from(0xA10 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 16, 0.5), &mut rng);
+            let order = two_optimal_order(&net);
+            let interp = QuantStreamEngine::new(&net, &order);
+            let x = BatchMatrix::random(net.n_inputs(), 7, &mut rng);
+            let want = interp.infer(&x);
+            for m in [3, 5, 9, net.n_neurons() + 2] {
+                for k in kernels() {
+                    let tiled = QuantTiledEngine::new(&net, &order, m).unwrap().with_kernel(k);
+                    assert_eq!(
+                        tiled.infer(&x),
+                        want,
+                        "seed {seed} M={m} kernel {}",
+                        k.name()
+                    );
+                    assert!(tiled.program().stats().max_live <= m - 1, "M={m}");
+                }
+            }
+            let (auto, report) = QuantTiledEngine::autotuned(&net, &order).unwrap();
+            assert_eq!(auto.infer(&x), want, "seed {seed} autotuned M={}", report.chosen_m);
+        }
+    }
+
+    #[test]
+    fn quant_compiled_within_certified_bound() {
+        for seed in 0..3u64 {
+            let mut rng = Pcg64::seed_from(0xC0 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 20, 0.35), &mut rng);
+            let order = two_optimal_order(&net);
+            let stream = StreamingEngine::new(&net, &order);
+            let quant = QuantStreamEngine::new(&net, &order);
+            let x = BatchMatrix::random(net.n_inputs(), 5, &mut rng);
+            let a = stream.infer(&x);
+            let bound = output_error_bound(stream.program(), quant.program(), &x);
+            let tol = bound * 1.01 + 1e-4;
+            let fused = QuantFusedEngine::new(&net, &order);
+            let df = a.max_abs_diff(&fused.infer(&x));
+            assert!(df <= tol, "seed {seed}: fused diff {df} exceeds bound {bound}");
+            let tiled = QuantTiledEngine::new(&net, &order, 6).unwrap();
+            let dt = a.max_abs_diff(&tiled.infer(&x));
+            assert!(dt <= tol, "seed {seed}: tiled diff {dt} exceeds bound {bound}");
+        }
+    }
+
+    #[test]
+    fn quant_compiled_skipping_counts_forced_zero_rows() {
+        // Fan-out net: [0→1, 0→2, 0→3, 0→4] is one AxpyRun (singleton
+        // destinations sharing one source). Zero biases + zero input
+        // force the source row to zero, so the run is skipped — and
+        // skipping is bit-identical to not skipping.
+        let net = Ffnn::new(
+            vec![
+                NeuronKind::Input,
+                NeuronKind::Output,
+                NeuronKind::Output,
+                NeuronKind::Output,
+                NeuronKind::Output,
+            ],
+            vec![0.0; 5],
+            vec![
+                Conn { src: 0, dst: 1, weight: 0.5 },
+                Conn { src: 0, dst: 2, weight: -1.5 },
+                Conn { src: 0, dst: 3, weight: 2.0 },
+                Conn { src: 0, dst: 4, weight: -0.25 },
+            ],
+        )
+        .unwrap();
+        let order = two_optimal_order(&net);
+        let fused = QuantFusedEngine::new(&net, &order);
+        assert_eq!(fused.program().stats().n_axpy_runs, 1);
+        let off = QuantFusedEngine::new(&net, &order).with_skip(false);
+        let z = BatchMatrix::zeros(1, 4);
+        assert_eq!(fused.infer(&z), off.infer(&z));
+        assert_eq!(fused.skip_counters().checked(), 1);
+        assert_eq!(fused.skip_counters().skipped(), 1);
+        assert_eq!(off.skip_counters().checked(), 0, "skip off must not count");
+        // A live input keeps the run unskipped.
+        let x = BatchMatrix::from_rows(1, 2, vec![1.0, -2.0]);
+        assert_eq!(fused.infer(&x), off.infer(&x));
+        assert_eq!(fused.skip_counters().checked(), 2);
+        assert_eq!(fused.skip_counters().skipped(), 1);
+        // Tiled path with M = 4 (capacity 3): the fan-out splits into
+        // two segments of two destinations each — two AxpyRuns, both
+        // skipped on the zero batch.
+        let ton = QuantTiledEngine::new(&net, &order, 4).unwrap();
+        let toff = QuantTiledEngine::new(&net, &order, 4).unwrap().with_skip(false);
+        assert_eq!(ton.infer(&z), toff.infer(&z));
+        assert_eq!(ton.skip_counters().checked(), 2, "split run re-checks per segment");
+        assert_eq!(ton.skip_counters().skipped(), 2);
+        assert_eq!(toff.skip_counters().checked(), 0);
+    }
+
+    #[test]
+    fn quant_fused_pools_validation() {
+        let mut rng = Pcg64::seed_from(0x5C2);
+        let net = random_mlp(&MlpSpec::new(2, 12, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let p = QuantFusedProgram::compile(&net, &order);
+        let pools = |f: &dyn Fn(&mut Vec<i8>, &mut Vec<QuantGroup>)| {
+            let mut qw = p.quantized_weights().to_vec();
+            let mut gs = p.groups().to_vec();
+            f(&mut qw, &mut gs);
+            QuantFusedPools {
+                ctrl: p.ctrl().to_vec().into(),
+                pivots: p.pivots().to_vec().into(),
+                bounds: p.bounds().to_vec().into(),
+                idx: p.idx().to_vec().into(),
+                flags: p.flags().to_vec().into(),
+                qweights: qw.into(),
+                groups: gs.into(),
+                biases: p.biases().to_vec().into(),
+                hidden_sources: p.hidden_sources().to_vec().into(),
+                input_ids: p.input_ids().to_vec().into(),
+                output_ids: p.output_ids().to_vec().into(),
+                n_neurons: p.n_neurons(),
+            }
+        };
+        // Intact pools round-trip and execute identically.
+        let rebuilt = QuantFusedProgram::from_pools(pools(&|_, _| {})).unwrap();
+        let x = BatchMatrix::random(net.n_inputs(), 3, &mut rng);
+        let mut v1 = BatchMatrix::zeros(p.n_neurons(), 3);
+        let mut o1 = BatchMatrix::zeros(p.output_ids().len(), 3);
+        let mut v2 = BatchMatrix::zeros(p.n_neurons(), 3);
+        let mut o2 = BatchMatrix::zeros(p.output_ids().len(), 3);
+        p.run_into(&x, &mut v1, &mut o1);
+        rebuilt.run_into(&x, &mut v2, &mut o2);
+        assert_eq!(o1, o2);
+        assert_eq!(rebuilt.stats(), p.stats());
+        // Short weight pool, short group table: rejected.
+        assert!(QuantFusedProgram::from_pools(pools(&|qw, _| { qw.pop(); })).is_err());
+        assert!(QuantFusedProgram::from_pools(pools(&|_, gs| { gs.pop(); })).is_err());
+        assert!(QuantFusedProgram::from_pools(pools(&|_, gs| {
+            gs.push(QuantGroup { scale: 1.0, zero_point: 0.0 });
+        }))
+        .is_err());
+    }
+
+    #[test]
+    fn quant_tiled_parts_validation() {
+        let mut rng = Pcg64::seed_from(0x5C3);
+        let net = random_mlp(&MlpSpec::new(2, 12, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        let tiled = TiledProgram::compile(&net, &order, 5).unwrap();
+        let quant = QuantStreamProgram::compress(&net, &order);
+        // Short weight pool rejected; intact pools accepted.
+        let mut short = quant.quantized_weights().to_vec();
+        short.pop();
+        assert!(QuantTiledProgram::from_parts(
+            tiled.clone(),
+            short.into(),
+            quant.groups().to_vec().into()
+        )
+        .is_err());
+        assert!(QuantTiledProgram::from_parts(
+            tiled,
+            quant.quantized_weights().to_vec().into(),
+            quant.groups().to_vec().into()
+        )
+        .is_ok());
     }
 }

@@ -11,7 +11,8 @@
 //! reference bit-for-bit.
 
 use super::generic;
-use super::{LANES, RELU_MASK};
+use super::{dequant, group_of, LANES, RELU_MASK};
+use crate::exec::quant::QuantGroup;
 use core::arch::x86_64::*;
 
 /// Vector ReLU matching the scalar `if v < 0.0 { v = 0.0 }` exactly:
@@ -97,4 +98,87 @@ pub(crate) unsafe fn axpy_run(
         c += LANES;
     }
     generic::axpy_span(data, batch, c, batch, src, dsts, weights, flags);
+}
+
+/// AVX2 group-dequant gather-dot: the per-element weight is dequantized
+/// scalar (the same `scale·(q − zp)` f32 sequence as the reference)
+/// and broadcast with `set1`, exactly how the f32 kernel broadcasts a
+/// precomputed weight — the vector arithmetic is unchanged, so the
+/// bit-identity argument of [`dot_run`] carries over.
+///
+/// # Safety
+/// Same contract as [`dot_run`], plus `qweights`/`groups`/`base` must
+/// satisfy the compiled quant program's group invariant
+/// (`groups[(base + k) / GROUP]` in-bounds for every element `k`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn quant_dot_run(
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    base: usize,
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    let ptr = data.as_mut_ptr();
+    let mut c = 0;
+    while c + LANES <= batch {
+        debug_assert!(dbase + c + LANES <= data.len());
+        let mut acc = _mm256_loadu_ps(ptr.add(dbase + c) as *const f32);
+        for (k, &q) in qweights.iter().enumerate() {
+            let w = dequant(q, group_of(groups, base, k));
+            let sbase = srcs[k] as usize * batch + c;
+            debug_assert!(sbase + LANES <= data.len());
+            let x = _mm256_loadu_ps(ptr.add(sbase) as *const f32);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(w), x));
+        }
+        if relu_after {
+            acc = relu_ps(acc);
+        }
+        _mm256_storeu_ps(ptr.add(dbase + c), acc);
+        c += LANES;
+    }
+    generic::quant_dot_span(data, batch, c, batch, dst, srcs, qweights, groups, base, relu_after);
+}
+
+/// AVX2 group-dequant scatter-AXPY.
+///
+/// # Safety
+/// Same contract as [`axpy_run`] plus the group invariant documented on
+/// [`quant_dot_run`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn quant_axpy_run(
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    base: usize,
+    flags: &[u8],
+) {
+    let sbase = src * batch;
+    let ptr = data.as_mut_ptr();
+    let mut c = 0;
+    while c + LANES <= batch {
+        debug_assert!(sbase + c + LANES <= data.len());
+        let s = _mm256_loadu_ps(ptr.add(sbase + c) as *const f32);
+        for (k, &q) in qweights.iter().enumerate() {
+            let w = dequant(q, group_of(groups, base, k));
+            let dbase = dsts[k] as usize * batch + c;
+            debug_assert!(dbase + LANES <= data.len());
+            let mut d = _mm256_loadu_ps(ptr.add(dbase) as *const f32);
+            d = _mm256_add_ps(d, _mm256_mul_ps(_mm256_set1_ps(w), s));
+            if flags[k] & RELU_MASK == RELU_MASK {
+                d = relu_ps(d);
+            }
+            _mm256_storeu_ps(ptr.add(dbase), d);
+        }
+        c += LANES;
+    }
+    generic::quant_axpy_span(data, batch, c, batch, src, dsts, qweights, groups, base, flags);
 }

@@ -7,7 +7,8 @@
 //! the unit tests in [`super`]), which holds because columns never mix
 //! and each lane performs the same mul/add sequence.
 
-use super::LANES;
+use super::{dequant, group_of, LANES};
+use crate::exec::quant::QuantGroup;
 use crate::exec::relu_row;
 
 /// Scalar gather-dot over batch columns `lo..hi` — the reference
@@ -123,4 +124,140 @@ pub(crate) fn axpy_run(
         c += LANES;
     }
     axpy_span(data, batch, c, batch, src, dsts, weights, flags);
+}
+
+/// Scalar group-dequant gather-dot over batch columns `lo..hi`: the
+/// weight of run element `k` is dequantized from `qweights[k]` through
+/// the quant group of global pool element `base + k`, then used exactly
+/// like [`dot_span`] uses a precomputed f32 weight. Because the
+/// dequantization is a pure per-element function, this is bit-identical
+/// to running [`dot_span`] over the dequantized weights — which is the
+/// bridge the quant-fused/tiled ≡ quant-interpreter equality proofs
+/// stand on.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quant_dot_span(
+    data: &mut [f32],
+    batch: usize,
+    lo: usize,
+    hi: usize,
+    dst: usize,
+    srcs: &[u32],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    base: usize,
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    for c in lo..hi {
+        let mut a = data[dbase + c];
+        for (k, &q) in qweights.iter().enumerate() {
+            let w = dequant(q, group_of(groups, base, k));
+            a += w * data[srcs[k] as usize * batch + c];
+        }
+        if relu_after && a < 0.0 {
+            a = 0.0;
+        }
+        data[dbase + c] = a;
+    }
+}
+
+/// Scalar group-dequant scatter-AXPY over batch columns `lo..hi`
+/// (reference tail, like [`axpy_span`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quant_axpy_span(
+    data: &mut [f32],
+    batch: usize,
+    lo: usize,
+    hi: usize,
+    src: usize,
+    dsts: &[u32],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    base: usize,
+    flags: &[u8],
+) {
+    let sbase = src * batch;
+    for c in lo..hi {
+        let s = data[sbase + c];
+        for (k, &q) in qweights.iter().enumerate() {
+            let w = dequant(q, group_of(groups, base, k));
+            let di = dsts[k] as usize * batch + c;
+            let mut v = data[di] + w * s;
+            if flags[k] & super::RELU_MASK == super::RELU_MASK && v < 0.0 {
+                v = 0.0;
+            }
+            data[di] = v;
+        }
+    }
+}
+
+/// Portable group-dequant gather-dot: same chunk loop as [`dot_run`],
+/// with the per-element weight dequantized once (scalar) and broadcast
+/// across the lanes — the identical structure the f32 kernel has, so
+/// the bit-identity argument carries over unchanged.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quant_dot_run(
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    base: usize,
+    relu_after: bool,
+) {
+    let dbase = dst * batch;
+    let mut c = 0;
+    while c + LANES <= batch {
+        let mut acc = [0.0f32; LANES];
+        acc.copy_from_slice(&data[dbase + c..dbase + c + LANES]);
+        for (k, &q) in qweights.iter().enumerate() {
+            let w = dequant(q, group_of(groups, base, k));
+            let sbase = srcs[k] as usize * batch + c;
+            let src = &data[sbase..sbase + LANES];
+            for (a, &x) in acc.iter_mut().zip(src) {
+                *a += w * x;
+            }
+        }
+        if relu_after {
+            relu_row(&mut acc);
+        }
+        data[dbase + c..dbase + c + LANES].copy_from_slice(&acc);
+        c += LANES;
+    }
+    quant_dot_span(data, batch, c, batch, dst, srcs, qweights, groups, base, relu_after);
+}
+
+/// Portable group-dequant scatter-AXPY (chunk loop of [`axpy_run`] with
+/// on-the-fly dequantization).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quant_axpy_run(
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    qweights: &[i8],
+    groups: &[QuantGroup],
+    base: usize,
+    flags: &[u8],
+) {
+    let sbase = src * batch;
+    let mut c = 0;
+    while c + LANES <= batch {
+        let mut s = [0.0f32; LANES];
+        s.copy_from_slice(&data[sbase + c..sbase + c + LANES]);
+        for (k, &q) in qweights.iter().enumerate() {
+            let w = dequant(q, group_of(groups, base, k));
+            let dbase = dsts[k] as usize * batch + c;
+            let dst = &mut data[dbase..dbase + LANES];
+            for (y, &x) in dst.iter_mut().zip(&s) {
+                *y += w * x;
+            }
+            if flags[k] & super::RELU_MASK == super::RELU_MASK {
+                relu_row(dst);
+            }
+        }
+        c += LANES;
+    }
+    quant_axpy_span(data, batch, c, batch, src, dsts, qweights, groups, base, flags);
 }

@@ -1,9 +1,13 @@
 //! Runtime-dispatched SIMD microkernels for the compiled engines.
 //!
 //! [`super::fused`] and [`super::tiled`] execute their macro-op streams
-//! through exactly two inner loops: the gather-dot [`dot_run`] and the
-//! scatter-AXPY [`axpy_run`]. This module owns those loops and lets an
-//! engine pick their implementation once at build time:
+//! through two inner loops — the gather-dot [`dot_run`] and the
+//! scatter-AXPY [`axpy_run`] — and the quantized compiled engines in
+//! [`super::quant`] through their group-dequant forms
+//! ([`quant_dot_run`] / [`quant_axpy_run`], which fold
+//! `scale * (q - zero_point)` into the same loop structure). This
+//! module owns those loops and lets an engine pick their
+//! implementation once at build time:
 //!
 //! * [`generic`] — portable Rust: a [`LANES`]-column chunk loop with
 //!   local accumulator arrays plus a scalar tail. The tail loops
@@ -38,6 +42,28 @@ pub const LANES: usize = 8;
 /// set (`dst_finish` and `dst_is_hidden` — see `exec::fused`).
 pub(crate) const RELU_MASK: u8 =
     crate::exec::fused::FLAG_FINISH | crate::exec::fused::FLAG_HIDDEN;
+
+/// Per-element affine dequantization shared by every quant microkernel:
+/// `w = scale · (q − zero_point)` in exactly this f32 mul/sub order —
+/// the same sequence the quant stream interpreter performs — so every
+/// quant execution path reconstructs bit-identical weights.
+#[inline]
+pub(crate) fn dequant(q: i8, g: crate::exec::quant::QuantGroup) -> f32 {
+    g.scale * (q as f32 - g.zero_point)
+}
+
+/// Quant group of global pool element `base + k`. The quant-fused and
+/// quant-tiled pools keep their elements in stream order (one pool
+/// element per source connection), so the interpreter's "refresh the
+/// group every `GROUP` weights" walk and this direct lookup agree.
+#[inline]
+pub(crate) fn group_of(
+    groups: &[crate::exec::quant::QuantGroup],
+    base: usize,
+    k: usize,
+) -> crate::exec::quant::QuantGroup {
+    groups[(base + k) / crate::exec::quant::GROUP]
+}
 
 /// A microkernel implementation, selected once at engine build and
 /// shared by `FusedEngine` and `TiledEngine`.
@@ -158,6 +184,67 @@ pub(crate) fn axpy_run(
     }
 }
 
+/// Group-dequant gather-dot dispatch: like [`dot_run`], but the run's
+/// weights arrive as i8 `qweights` plus the program's per-group
+/// scale/zero-point table; `base` is the run's global pool offset (the
+/// macro-op's `bounds[m]`), which anchors the `(base + k) / GROUP`
+/// group lookup. Same index contract and crate-internal visibility as
+/// [`dot_run`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn quant_dot_run(
+    kernel: Kernel,
+    data: &mut [f32],
+    batch: usize,
+    dst: usize,
+    srcs: &[u32],
+    qweights: &[i8],
+    groups: &[crate::exec::quant::QuantGroup],
+    base: usize,
+    relu_after: bool,
+) {
+    debug_assert_eq!(srcs.len(), qweights.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_supported() => {
+            // SAFETY: see dot_run; the compiled quant program
+            // additionally validated the group table against the pool
+            // length.
+            unsafe {
+                avx2::quant_dot_run(data, batch, dst, srcs, qweights, groups, base, relu_after)
+            }
+        }
+        _ => generic::quant_dot_run(data, batch, dst, srcs, qweights, groups, base, relu_after),
+    }
+}
+
+/// Group-dequant scatter-AXPY dispatch (quant counterpart of
+/// [`axpy_run`]; see [`quant_dot_run`] for the `base`/group contract).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn quant_axpy_run(
+    kernel: Kernel,
+    data: &mut [f32],
+    batch: usize,
+    src: usize,
+    dsts: &[u32],
+    qweights: &[i8],
+    groups: &[crate::exec::quant::QuantGroup],
+    base: usize,
+    flags: &[u8],
+) {
+    debug_assert_eq!(dsts.len(), qweights.len());
+    debug_assert_eq!(dsts.len(), flags.len());
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if avx2_supported() => {
+            // SAFETY: see axpy_run and quant_dot_run.
+            unsafe { avx2::quant_axpy_run(data, batch, src, dsts, qweights, groups, base, flags) }
+        }
+        _ => generic::quant_axpy_run(data, batch, src, dsts, qweights, groups, base, flags),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +359,83 @@ mod tests {
                 "{}: relu must pass NaN through",
                 k.name()
             );
+        }
+    }
+
+    /// A quant-run scenario whose `base` offset straddles a GROUP
+    /// boundary, so both the first and the second scale/zero-point pair
+    /// are exercised mid-run.
+    fn quant_case() -> (Vec<i8>, Vec<crate::exec::quant::QuantGroup>, usize) {
+        let qweights = vec![-127i8, 3, 0, 127];
+        let groups = vec![
+            crate::exec::quant::QuantGroup { scale: 0.0125, zero_point: -4.0 },
+            crate::exec::quant::QuantGroup { scale: 0.5, zero_point: 11.5 },
+        ];
+        let base = crate::exec::quant::GROUP - 2; // elements 2.. use groups[1]
+        (qweights, groups, base)
+    }
+
+    /// The group-dequant kernels must compute the same bits as the f32
+    /// kernels running over the pre-dequantized weights — the invariant
+    /// the quant-fused ≡ quant-interpreter equality rests on — at every
+    /// batch shape around the lane width, on every supported kernel.
+    #[test]
+    fn quant_kernels_match_f32_kernels_over_dequantized_weights() {
+        let (srcs, _) = dot_case();
+        let (dsts, _, flags) = axpy_case();
+        let (qweights, groups, base) = quant_case();
+        let weights: Vec<f32> =
+            (0..qweights.len()).map(|k| dequant(qweights[k], group_of(&groups, base, k))).collect();
+        let kernels: &[Kernel] = if avx2_supported() {
+            &[Kernel::Scalar, Kernel::Avx2]
+        } else {
+            &[Kernel::Scalar]
+        };
+        for &k in kernels {
+            for batch in 0..=2 * LANES + 1 {
+                for relu in [false, true] {
+                    let mut a = random_block(batch, 0x0D0 + batch as u64);
+                    let mut b = a.clone();
+                    quant_dot_run(k, &mut a, batch, 3, &srcs, &qweights, &groups, base, relu);
+                    dot_run(k, &mut b, batch, 3, &srcs, &weights, relu);
+                    assert_eq!(a, b, "{}: quant dot diverged at batch {batch}", k.name());
+                }
+                let mut a = random_block(batch, 0x0A0 + batch as u64);
+                let mut b = a.clone();
+                quant_axpy_run(k, &mut a, batch, 0, &dsts, &qweights[..3], &groups, base, &flags);
+                axpy_run(k, &mut b, batch, 0, &dsts, &weights[..3], &flags);
+                assert_eq!(a, b, "{}: quant axpy diverged at batch {batch}", k.name());
+            }
+        }
+    }
+
+    /// The AVX2 quant kernels are bit-identical to the scalar quant path
+    /// (skipped gracefully on CPUs without AVX2).
+    #[test]
+    fn avx2_quant_is_bit_identical_to_scalar() {
+        if !avx2_supported() {
+            eprintln!("skipping: CPU has no AVX2");
+            return;
+        }
+        let (srcs, _) = dot_case();
+        let (dsts, _, flags) = axpy_case();
+        let (qweights, groups, base) = quant_case();
+        for batch in 0..=2 * LANES + 1 {
+            let mut s = random_block(batch, 0x9A1 + batch as u64);
+            let mut v = s.clone();
+            quant_dot_run(Kernel::Scalar, &mut s, batch, 3, &srcs, &qweights, &groups, base, true);
+            quant_dot_run(Kernel::Avx2, &mut v, batch, 3, &srcs, &qweights, &groups, base, true);
+            assert_eq!(s, v, "quant dot kernels diverged at batch {batch}");
+
+            let mut s = random_block(batch, 0x9A2 + batch as u64);
+            let mut v = s.clone();
+            quant_axpy_run(
+                Kernel::Scalar, &mut s, batch, 0, &dsts, &qweights[..3], &groups, base, &flags,
+            );
+            quant_axpy_run(
+                Kernel::Avx2, &mut v, batch, 0, &dsts, &qweights[..3], &groups, base, &flags,
+            );
+            assert_eq!(s, v, "quant axpy kernels diverged at batch {batch}");
         }
     }
 

@@ -51,16 +51,19 @@
 //! [`FusedEngine`]: super::fused::FusedEngine
 
 use super::batch::BatchMatrix;
-use super::fused::{fuse_runs, RunPools, DOT_RELU, KIND_AXPY};
+use super::fused::{fuse_runs, row_is_zero, RunPools, SkipCounters, DOT_RELU, KIND_AXPY};
+use super::quant::QuantGroup;
 use super::scratch::ScratchPool;
 use super::simd::{self, Kernel};
 use super::stream::{StreamOp, StreamProgram};
-use super::{init_values, Engine};
+use super::{init_values, relu_row, Engine};
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
 use crate::memory::PolicyKind;
 use crate::sim::Simulator;
 use crate::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 /// "Not resident in the current segment" marker for the slot map.
 const NO_SLOT: u32 = u32::MAX;
@@ -512,9 +515,67 @@ impl TiledProgram {
 
     /// Execute with an explicit microkernel (see [`super::simd`]). All
     /// kernels are bit-identical, so the choice only affects speed.
+    /// Shorthand for [`Self::run_into_skipping`] with skipping off.
     pub fn run_into_with(
         &self,
         kernel: Kernel,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_into_skipping(kernel, None, inputs, values, slots, out);
+    }
+
+    /// Execute with optional activation-sparsity skipping (same
+    /// semantics as [`super::fused::FusedProgram::run_into_skipping`]:
+    /// an AxpyRun whose source slot row is entirely zero is skipped,
+    /// elements flagged finish+hidden still get their ReLU, and the
+    /// result is value-identical either way — the spill copies out the
+    /// same rows regardless).
+    pub fn run_into_skipping(
+        &self,
+        kernel: Kernel,
+        skip: Option<&SkipCounters>,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_segments(kernel, skip, None, inputs, values, slots, out);
+    }
+
+    /// Execute the segment structure over externally supplied quantized
+    /// weights: element `k` of the global pool dequantizes through
+    /// `groups[k / GROUP]`, so a macro-op's dequant base is its global
+    /// `bounds[mi]` — valid across segments because the per-segment
+    /// fusion appends one pool element per source op in stream order.
+    /// Backs the quant-tiled program in [`super::quant`]; the f32
+    /// weight pool is ignored entirely on this path.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_into_quant(
+        &self,
+        kernel: Kernel,
+        qweights: &[i8],
+        groups: &[QuantGroup],
+        skip: Option<&SkipCounters>,
+        inputs: &BatchMatrix,
+        values: &mut BatchMatrix,
+        slots: &mut BatchMatrix,
+        out: &mut BatchMatrix,
+    ) {
+        self.run_segments(kernel, skip, Some((qweights, groups)), inputs, values, slots, out);
+    }
+
+    /// The shared segment interpreter behind all run modes: fills, the
+    /// slot-indexed macro-op stream (f32 pool or group-dequant i8),
+    /// spills, output gather.
+    #[allow(clippy::too_many_arguments)]
+    fn run_segments(
+        &self,
+        kernel: Kernel,
+        skip: Option<&SkipCounters>,
+        quant: Option<(&[i8], &[QuantGroup])>,
         inputs: &BatchMatrix,
         values: &mut BatchMatrix,
         slots: &mut BatchMatrix,
@@ -528,6 +589,9 @@ impl TiledProgram {
         assert_eq!(slots.batch(), batch);
         assert_eq!(out.rows(), self.output_ids.len());
         assert_eq!(out.batch(), batch);
+        if let Some((qweights, _)) = quant {
+            assert_eq!(qweights.len(), self.idx.len(), "quant pool length");
+        }
 
         init_values(values, inputs, &self.biases, &self.input_ids, &self.hidden_sources);
 
@@ -546,25 +610,67 @@ impl TiledProgram {
                 let (elo, ehi) = (self.bounds[mi] as usize, self.bounds[mi + 1] as usize);
                 let pivot = self.pivots[mi] as usize;
                 if self.ctrl[mi] & KIND_AXPY != 0 {
-                    simd::axpy_run(
-                        kernel,
-                        data,
-                        batch,
-                        pivot,
-                        &self.idx[elo..ehi],
-                        &self.weights[elo..ehi],
-                        &self.flags[elo..ehi],
-                    );
+                    if let Some(counters) = skip {
+                        counters.checked.fetch_add(1, Ordering::Relaxed);
+                        if row_is_zero(&data[pivot * batch..pivot * batch + batch]) {
+                            counters.skipped.fetch_add(1, Ordering::Relaxed);
+                            // Nothing to scatter, but finish+hidden
+                            // elements still owe their ReLU.
+                            for k in elo..ehi {
+                                if self.flags[k] & simd::RELU_MASK == simd::RELU_MASK {
+                                    let d = self.idx[k] as usize * batch;
+                                    relu_row(&mut data[d..d + batch]);
+                                }
+                            }
+                            continue;
+                        }
+                    }
+                    match quant {
+                        Some((qweights, groups)) => simd::quant_axpy_run(
+                            kernel,
+                            data,
+                            batch,
+                            pivot,
+                            &self.idx[elo..ehi],
+                            &qweights[elo..ehi],
+                            groups,
+                            elo,
+                            &self.flags[elo..ehi],
+                        ),
+                        None => simd::axpy_run(
+                            kernel,
+                            data,
+                            batch,
+                            pivot,
+                            &self.idx[elo..ehi],
+                            &self.weights[elo..ehi],
+                            &self.flags[elo..ehi],
+                        ),
+                    }
                 } else {
-                    simd::dot_run(
-                        kernel,
-                        data,
-                        batch,
-                        pivot,
-                        &self.idx[elo..ehi],
-                        &self.weights[elo..ehi],
-                        self.ctrl[mi] & DOT_RELU != 0,
-                    );
+                    let relu_after = self.ctrl[mi] & DOT_RELU != 0;
+                    match quant {
+                        Some((qweights, groups)) => simd::quant_dot_run(
+                            kernel,
+                            data,
+                            batch,
+                            pivot,
+                            &self.idx[elo..ehi],
+                            &qweights[elo..ehi],
+                            groups,
+                            elo,
+                            relu_after,
+                        ),
+                        None => simd::dot_run(
+                            kernel,
+                            data,
+                            batch,
+                            pivot,
+                            &self.idx[elo..ehi],
+                            &self.weights[elo..ehi],
+                            relu_after,
+                        ),
+                    }
                 }
             }
             // Spill: batched row copies slot block → backing (the
@@ -593,6 +699,10 @@ pub struct TiledEngine {
     slots_pool: ScratchPool,
     name: &'static str,
     kernel: Kernel,
+    /// Activation-sparsity skipping (on by default — value-identical,
+    /// see [`TiledProgram::run_into_skipping`]).
+    skip: bool,
+    counters: Arc<SkipCounters>,
 }
 
 impl TiledEngine {
@@ -623,6 +733,8 @@ impl TiledEngine {
             slots_pool: ScratchPool::new(super::fused::SCRATCH_POOL_CAP),
             name: "tiled-stream",
             kernel: Kernel::auto(),
+            skip: true,
+            counters: Arc::new(SkipCounters::default()),
         }
     }
 
@@ -651,6 +763,19 @@ impl TiledEngine {
         self.kernel
     }
 
+    /// Enable or disable activation-sparsity skipping (on by default).
+    /// Skipping is value-identical either way; turning it off also
+    /// stops the counters.
+    pub fn with_skip(mut self, skip: bool) -> TiledEngine {
+        self.skip = skip;
+        self
+    }
+
+    /// The shared skip counters this engine bumps (link into metrics).
+    pub fn skip_counters(&self) -> &Arc<SkipCounters> {
+        &self.counters
+    }
+
     pub fn program(&self) -> &TiledProgram {
         &self.program
     }
@@ -662,8 +787,9 @@ impl Engine for TiledEngine {
         let mut values = self.values_pool.take(self.program.n_neurons(), batch);
         let mut slots = self.slots_pool.take(self.program.slot_rows(), batch);
         let mut out = BatchMatrix::zeros(self.program.output_ids().len(), batch);
+        let skip = if self.skip { Some(&*self.counters) } else { None };
         self.program
-            .run_into_with(self.kernel, inputs, &mut values, &mut slots, &mut out);
+            .run_into_skipping(self.kernel, skip, inputs, &mut values, &mut slots, &mut out);
         self.values_pool.put(values);
         self.slots_pool.put(slots);
         out
@@ -841,6 +967,22 @@ mod tests {
         let out = tiled.infer(&BatchMatrix::zeros(2, 0));
         assert_eq!((out.rows(), out.batch()), (1, 0));
         assert_eq!(out, StreamingEngine::new(&net, &order).infer(&BatchMatrix::zeros(2, 0)));
+    }
+
+    #[test]
+    fn skipping_is_bit_identical_across_budgets() {
+        let mut rng = Pcg64::seed_from(0x71D5);
+        let net = random_mlp(&MlpSpec::new(3, 16, 0.5), &mut rng);
+        let order = two_optimal_order(&net);
+        for m in [3, 5, 9, net.n_neurons() + 2] {
+            let on = TiledEngine::new(&net, &order, m).unwrap();
+            let off = TiledEngine::new(&net, &order, m).unwrap().with_skip(false);
+            let x = BatchMatrix::random(net.n_inputs(), 6, &mut rng);
+            assert_eq!(on.infer(&x), off.infer(&x), "M={m}");
+            let z = BatchMatrix::zeros(net.n_inputs(), 4);
+            assert_eq!(on.infer(&z), off.infer(&z), "M={m} zeros");
+            assert_eq!(off.skip_counters().checked(), 0, "skip off must not count");
+        }
     }
 
     #[test]

@@ -440,6 +440,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             .schedule_opt()
             .fast_mem_opt()
             .kernel_opt()
+            .no_skip_flag()
             .max_queue_opt()
             .deadline_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
@@ -501,6 +502,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         0
     };
     let fast_mem = resolve_auto_u64(&a, "fast-mem", fast_mem_config) as usize;
+    // The activation-skip knob: --no-skip wins, else the config file /
+    // --set override's `skip` key, else on. Only affects compiled
+    // schedules (value-identical either way; see exec::fused).
+    let skip = if a.flag("no-skip") { false } else { config.skip(true) };
+    if !skip {
+        println!("activation-sparsity skipping disabled (--no-skip / skip=false)");
+    }
     // The SLO knobs: explicit flags win (an explicit 0 turns the knob
     // off), "auto" defers to the config keys, else off.
     let max_queue = resolve_auto_u64(&a, "max-queue", config.max_queue(0) as u64) as usize;
@@ -556,7 +564,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     if !model_dir.is_empty() {
         let resident_bytes = resolve_auto_u64(&a, "resident-bytes", config.resident_bytes(0));
         let registry = Registry::new(
-            RegistryConfig { resident_bytes, schedule, precision, workers, fast_mem, kernel },
+            RegistryConfig { resident_bytes, schedule, precision, workers, fast_mem, kernel, skip },
             server_config,
         );
         let labels = match registry.scan_dir(Path::new(&model_dir)) {
@@ -611,7 +619,9 @@ fn cmd_serve(args: &[String]) -> i32 {
             model.n_outputs());
     }
     let name = a.str("name").to_string();
-    let variant = match model.variant(&name, &schedule, &precision, workers, fast_mem, &kernel) {
+    let variant = match model
+        .variant_with_opts(&name, &schedule, &precision, workers, fast_mem, &kernel, skip)
+    {
         Ok(v) => v,
         Err(e) => {
             eprintln!("error: {e}");

@@ -263,12 +263,15 @@ impl Model {
     /// Build a serving variant from this model — the one constructor
     /// every serving path goes through. For JSON-loaded networks this
     /// compiles through [`ModelVariant::build`]; for quant payloads
-    /// only i8/interp is representable; for binary artifacts the
+    /// only i8/interp is representable (the JSON quant format carries
+    /// the interpreter's record stream only); for binary artifacts the
     /// programs are reconstructed from the mapped pools (zero-copy for
-    /// fused and i8; tiled needs an explicit `fast_mem` budget because
-    /// autotuning requires the source network). `kernel` ∈ {auto,
-    /// scalar, avx2} selects the `exec::simd` microkernel of the
-    /// compiled schedules (see [`ModelVariant::build`]).
+    /// fused, quant-fused, and i8 interp; the tiled schedules need an
+    /// explicit `fast_mem` budget because autotuning requires the
+    /// source network). `kernel` ∈ {auto, scalar, avx2} selects the
+    /// `exec::simd` microkernel of the compiled schedules (see
+    /// [`ModelVariant::build`]). Activation-sparsity skipping is on;
+    /// use [`Model::variant_with_opts`] to disable it.
     pub fn variant(
         &self,
         name: &str,
@@ -278,7 +281,25 @@ impl Model {
         fast_mem: usize,
         kernel: &str,
     ) -> Result<ModelVariant, VariantError> {
+        self.variant_with_opts(name, schedule, precision, workers, fast_mem, kernel, true)
+    }
+
+    /// [`Model::variant`] with explicit engine options: `skip` toggles
+    /// activation-sparsity skipping on the compiled schedules (see
+    /// [`ModelVariant::build_with_opts`]; value-identical either way).
+    #[allow(clippy::too_many_arguments)]
+    pub fn variant_with_opts(
+        &self,
+        name: &str,
+        schedule: &str,
+        precision: &str,
+        workers: usize,
+        fast_mem: usize,
+        kernel: &str,
+        skip: bool,
+    ) -> Result<ModelVariant, VariantError> {
         use crate::exec::fused::FusedEngine;
+        use crate::exec::quant::{QuantFusedEngine, QuantTiledEngine};
         use crate::exec::stream::StreamingEngine;
         use crate::exec::tiled::{TiledEngine, TiledProgram};
         use crate::exec::Engine;
@@ -296,8 +317,8 @@ impl Model {
         match &self.payload {
             Payload::Net { net, .. } => {
                 let order = self.order_or_compute(net);
-                ModelVariant::build(
-                    name, net, &order, schedule, precision, workers, fast_mem, kernel,
+                ModelVariant::build_with_opts(
+                    name, net, &order, schedule, precision, workers, fast_mem, kernel, skip,
                 )
             }
             Payload::Quant(p) => {
@@ -319,9 +340,12 @@ impl Model {
                 ("f32", "fused") => {
                     let program = a.fused_program().map_err(compile_err)?;
                     let stats = program.stats().clone();
-                    let engine = Arc::new(FusedEngine::from_program(program).with_kernel(k));
-                    let mut v = tag(wrap(name, engine, workers), "fused", "f32", kernel_tag);
-                    v = v.with_fusion_stats(stats);
+                    let engine =
+                        FusedEngine::from_program(program).with_kernel(k).with_skip(skip);
+                    let counters = engine.skip_counters().clone();
+                    let mut v =
+                        tag(wrap(name, Arc::new(engine), workers), "fused", "f32", kernel_tag);
+                    v = v.with_fusion_stats(stats).with_skip_counters(counters);
                     Ok(v)
                 }
                 ("f32", "tiled") => {
@@ -338,9 +362,12 @@ impl Model {
                     let program =
                         TiledProgram::from_program(&stream, fast_mem).map_err(compile_err)?;
                     let stats = program.stats().clone();
-                    let engine = Arc::new(TiledEngine::from_program(program).with_kernel(k));
-                    let mut v = tag(wrap(name, engine, workers), "tiled", "f32", kernel_tag);
-                    v = v.with_tiled_stats(stats);
+                    let engine =
+                        TiledEngine::from_program(program).with_kernel(k).with_skip(skip);
+                    let counters = engine.skip_counters().clone();
+                    let mut v =
+                        tag(wrap(name, Arc::new(engine), workers), "tiled", "f32", kernel_tag);
+                    v = v.with_tiled_stats(stats).with_skip_counters(counters);
                     Ok(v)
                 }
                 ("i8", "interp") => {
@@ -348,6 +375,40 @@ impl Model {
                     let engine = Arc::new(QuantStreamEngine::from_program(program));
                     Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag))
                 }
+                ("i8", "fused") => {
+                    let program = a.quant_fused_program().map_err(compile_err)?;
+                    let stats = program.stats().clone();
+                    let engine =
+                        QuantFusedEngine::from_program(program).with_kernel(k).with_skip(skip);
+                    let counters = engine.skip_counters().clone();
+                    let mut v =
+                        tag(wrap(name, Arc::new(engine), workers), "fused", "i8", kernel_tag);
+                    v = v.with_fusion_stats(stats).with_skip_counters(counters);
+                    Ok(v)
+                }
+                ("i8", "tiled") => {
+                    if fast_mem == 0 {
+                        return Err(VariantError::Compile {
+                            schedule: schedule.to_string(),
+                            message: "tiled autotune needs the source network; pass an \
+                                      explicit fast-mem budget when serving from a binary \
+                                      artifact"
+                                .to_string(),
+                        });
+                    }
+                    let program = a.quant_tiled_program(fast_mem).map_err(compile_err)?;
+                    let stats = program.stats().clone();
+                    let engine =
+                        QuantTiledEngine::from_program(program).with_kernel(k).with_skip(skip);
+                    let counters = engine.skip_counters().clone();
+                    let mut v =
+                        tag(wrap(name, Arc::new(engine), workers), "tiled", "i8", kernel_tag);
+                    v = v.with_tiled_stats(stats).with_skip_counters(counters);
+                    Ok(v)
+                }
+                // check_knobs already rejected unknown schedules and
+                // precisions, so every matrix point is handled above;
+                // the arm exists because &str matches need a catch-all.
                 _ => Err(VariantError::Incompatible {
                     schedule: schedule.to_string(),
                     precision: precision.to_string(),
@@ -470,14 +531,44 @@ mod tests {
         let b = bin.variant("m", "interp", "i8", 1, 0, "auto").unwrap();
         assert_eq!(a.route().infer(&x), b.route().infer(&x), "bin i8 == json i8");
 
-        // Artifact-backed tiled needs an explicit budget.
+        // The compiled quant schedules serve from the artifact too, and
+        // agree with the network-compiled engines.
+        let a = m.variant("m", "fused", "i8", 1, 0, "auto").unwrap();
+        let b = bin.variant("m", "fused", "i8", 1, 0, "auto").unwrap();
+        assert_eq!(
+            a.route().infer(&x),
+            b.route().infer(&x),
+            "bin quant-fused == json quant-fused"
+        );
+        assert!(b.skips.is_some() && b.fusion.is_some());
+
+        // Artifact-backed tiled needs an explicit budget (f32 and i8).
         assert!(matches!(
             bin.variant("m", "tiled", "f32", 1, 0, "auto"),
+            Err(VariantError::Compile { .. })
+        ));
+        assert!(matches!(
+            bin.variant("m", "tiled", "i8", 1, 0, "auto"),
             Err(VariantError::Compile { .. })
         ));
         let t = bin.variant("m", "tiled", "f32", 1, net.n_neurons() + 2, "scalar").unwrap();
         let j = m.variant("m", "tiled", "f32", 1, net.n_neurons() + 2, "scalar").unwrap();
         assert_eq!(t.route().infer(&x), j.route().infer(&x), "bin tiled == json tiled");
+        let t = bin.variant("m", "tiled", "i8", 1, net.n_neurons() + 2, "scalar").unwrap();
+        let j = m.variant("m", "tiled", "i8", 1, net.n_neurons() + 2, "scalar").unwrap();
+        assert_eq!(
+            t.route().infer(&x),
+            j.route().infer(&x),
+            "bin quant-tiled == json quant-tiled"
+        );
+
+        // The skip knob threads through the loader path and stays
+        // value-identical.
+        let off = bin
+            .variant_with_opts("m", "fused", "i8", 1, 0, "auto", false)
+            .unwrap();
+        assert_eq!(off.route().infer(&x), b.route().infer(&x), "skip off == skip on");
+        assert_eq!(off.skips.as_ref().unwrap().checked(), 0, "skip off bumps no counters");
     }
 
     #[test]
@@ -488,6 +579,12 @@ mod tests {
         assert!(m.variant("q", "interp", "i8", 1, 0, "auto").is_ok());
         assert!(matches!(
             m.variant("q", "fused", "f32", 1, 0, "auto"),
+            Err(VariantError::Incompatible { .. })
+        ));
+        // Even at i8, the compiled schedules need the fused pools or
+        // the source network — the quant JSON payload carries neither.
+        assert!(matches!(
+            m.variant("q", "fused", "i8", 1, 0, "auto"),
             Err(VariantError::Incompatible { .. })
         ));
         assert!(matches!(

@@ -13,8 +13,12 @@
 //!   per-pool copies on the mmap path (see [`BinArtifact`]).
 
 use crate::exec::fused::{FusedPools, FusedProgram};
-use crate::exec::quant::{QuantGroup, QuantPools, QuantStreamProgram, GROUP};
+use crate::exec::quant::{
+    QuantFusedPools, QuantFusedProgram, QuantGroup, QuantPools, QuantStreamProgram,
+    QuantTiledProgram, GROUP,
+};
 use crate::exec::stream::StreamProgram;
+use crate::exec::tiled::TiledProgram;
 use crate::ffnn::graph::Ffnn;
 use crate::ffnn::topo::ConnOrder;
 use crate::runtime::mmap::{Mapping, Pool, SECTION_ALIGN};
@@ -190,7 +194,10 @@ pub const SFB_ENDIAN_TAG: u32 = 0x0102_0304;
 pub const SFB_HEADER_LEN: usize = 64;
 pub const SFB_ENTRY_LEN: usize = 32;
 
-/// Section kinds. 1..16 model-level, 16..32 fused pools, 32.. quant.
+/// Section kinds. 1..16 model-level, 16..32 fused pools, 32..35 the
+/// quant interpreter stream, 35.. the quant-fused weight pools (the
+/// idx/flag/ctrl pools of the quant-fused program are the `SEC_FUSED_*`
+/// sections — shared with the f32 compilation path by construction).
 pub const SEC_META: u32 = 1;
 pub const SEC_BIASES: u32 = 2;
 pub const SEC_INPUT_IDS: u32 = 3;
@@ -206,6 +213,9 @@ pub const SEC_FUSED_FLAGS: u32 = 21;
 pub const SEC_QUANT_CTRL: u32 = 32;
 pub const SEC_QUANT_QWEIGHTS: u32 = 33;
 pub const SEC_QUANT_GROUPS: u32 = 34;
+pub const SEC_QFUSED_QWEIGHTS: u32 = 35;
+pub const SEC_QFUSED_GROUPS: u32 = 36;
+pub const SEC_QFUSED_GROUP_BOUNDS: u32 = 37;
 
 /// Element dtypes (`SEC_QUANT_GROUPS` is f32 pairs: scale, zero_point).
 pub const DT_U8: u32 = 0;
@@ -262,6 +272,9 @@ fn kind_name(kind: u32) -> &'static str {
         SEC_QUANT_CTRL => "quant_ctrl",
         SEC_QUANT_QWEIGHTS => "quant_qweights",
         SEC_QUANT_GROUPS => "quant_groups",
+        SEC_QFUSED_QWEIGHTS => "qfused_qweights",
+        SEC_QFUSED_GROUPS => "qfused_groups",
+        SEC_QFUSED_GROUP_BOUNDS => "qfused_group_bounds",
         _ => "unknown",
     }
 }
@@ -281,11 +294,13 @@ fn dtype_name(dtype: u32) -> &'static str {
 fn known_dtype(kind: u32) -> Option<u32> {
     match kind {
         SEC_META => Some(DT_U64),
-        SEC_BIASES | SEC_FUSED_WEIGHTS | SEC_QUANT_GROUPS => Some(DT_F32),
+        SEC_BIASES | SEC_FUSED_WEIGHTS | SEC_QUANT_GROUPS | SEC_QFUSED_GROUPS => Some(DT_F32),
         SEC_INPUT_IDS | SEC_OUTPUT_IDS | SEC_HIDDEN_SOURCES | SEC_LAYER_OF => Some(DT_U32),
-        SEC_FUSED_PIVOTS | SEC_FUSED_BOUNDS | SEC_FUSED_IDX => Some(DT_U32),
+        SEC_FUSED_PIVOTS | SEC_FUSED_BOUNDS | SEC_FUSED_IDX | SEC_QFUSED_GROUP_BOUNDS => {
+            Some(DT_U32)
+        }
         SEC_FUSED_CTRL | SEC_FUSED_FLAGS | SEC_QUANT_CTRL => Some(DT_U8),
-        SEC_QUANT_QWEIGHTS => Some(DT_I8),
+        SEC_QUANT_QWEIGHTS | SEC_QFUSED_QWEIGHTS => Some(DT_I8),
         _ => None,
     }
 }
@@ -332,6 +347,15 @@ pub fn build_model_artifact(net: &Ffnn, order: &ConnOrder) -> Vec<u8> {
     let stream = StreamProgram::compile(net, order);
     let fused = FusedProgram::from_program(&stream);
     let quant = QuantStreamProgram::from_program(&stream);
+    let qfused = QuantFusedProgram::from_quant(&quant);
+    // Per-group element boundaries into the quant-fused weight pool:
+    // [0, GROUP, 2·GROUP, …, n_ops]. Redundant with the compiled-in
+    // GROUP, but stored (and revalidated on load) so the group layout
+    // is explicit in the file rather than implied by the reader.
+    let mut qf_group_bounds: Vec<u32> = (0..qfused.groups().len())
+        .map(|g| (g * GROUP) as u32)
+        .collect();
+    qf_group_bounds.push(qfused.quantized_weights().len() as u32);
 
     let mut meta = Vec::with_capacity(24);
     for v in [net.n_neurons() as u64, net.n_conns() as u64, GROUP as u64] {
@@ -356,6 +380,13 @@ pub fn build_model_artifact(net: &Ffnn, order: &ConnOrder) -> Vec<u8> {
             quant.quantized_weights().iter().map(|&v| v as u8).collect(),
         ),
         (SEC_QUANT_GROUPS, DT_F32, le_bytes_groups(quant.groups())),
+        (
+            SEC_QFUSED_QWEIGHTS,
+            DT_I8,
+            qfused.quantized_weights().iter().map(|&v| v as u8).collect(),
+        ),
+        (SEC_QFUSED_GROUPS, DT_F32, le_bytes_groups(qfused.groups())),
+        (SEC_QFUSED_GROUP_BOUNDS, DT_U32, le_bytes_u32(&qf_group_bounds)),
     ];
     if let Some(layers) = net.layer_of() {
         secs.push((SEC_LAYER_OF, DT_U32, le_bytes_u32(layers)));
@@ -616,6 +647,82 @@ impl BinArtifact {
         })
     }
 
+    /// Validate the `qfused_group_bounds` section against the quant-fused
+    /// weight pool and group table: `[0, GROUP, 2·GROUP, …, n_ops]`.
+    fn check_qfused_group_bounds(
+        &self,
+        qweights: &Pool<i8>,
+        groups: &Pool<QuantGroup>,
+    ) -> anyhow::Result<()> {
+        let bounds: Pool<u32> = self.pool(SEC_QFUSED_GROUP_BOUNDS)?;
+        anyhow::ensure!(
+            bounds.len() == groups.len() + 1,
+            "qfused group bounds length {} != n_groups + 1 = {}",
+            bounds.len(),
+            groups.len() + 1
+        );
+        for (g, &b) in bounds.iter().enumerate().take(groups.len()) {
+            anyhow::ensure!(
+                b as usize == g * GROUP,
+                "qfused group bound {g} is {b}, want {}",
+                g * GROUP
+            );
+        }
+        let last = *bounds.last().unwrap();
+        anyhow::ensure!(
+            last as usize == qweights.len(),
+            "qfused group bounds end at {last}, weight pool has {} elements",
+            qweights.len()
+        );
+        Ok(())
+    }
+
+    /// Reconstruct the quant-fused program: the macro-op ctrl/idx/flag
+    /// pools are the same `SEC_FUSED_*` sections the f32 fused program
+    /// borrows, paired with the `i8` weight pool and per-group
+    /// scale/zero-point table. Zero per-pool copies; all invariants
+    /// revalidated.
+    pub fn quant_fused_program(&self) -> anyhow::Result<QuantFusedProgram> {
+        let qweights: Pool<i8> = self.pool(SEC_QFUSED_QWEIGHTS)?;
+        let groups: Pool<QuantGroup> = self.pool(SEC_QFUSED_GROUPS)?;
+        self.check_qfused_group_bounds(&qweights, &groups)?;
+        let p = QuantFusedProgram::from_pools(QuantFusedPools {
+            ctrl: self.pool(SEC_FUSED_CTRL)?,
+            pivots: self.pool(SEC_FUSED_PIVOTS)?,
+            bounds: self.pool(SEC_FUSED_BOUNDS)?,
+            idx: self.pool(SEC_FUSED_IDX)?,
+            flags: self.pool(SEC_FUSED_FLAGS)?,
+            qweights,
+            groups,
+            biases: self.pool(SEC_BIASES)?,
+            hidden_sources: self.pool(SEC_HIDDEN_SOURCES)?,
+            input_ids: self.pool(SEC_INPUT_IDS)?,
+            output_ids: self.pool(SEC_OUTPUT_IDS)?,
+            n_neurons: self.n_neurons,
+        })?;
+        anyhow::ensure!(
+            p.n_ops() == self.n_conns,
+            "quant-fused pool length {} != meta n_conns {}",
+            p.n_ops(),
+            self.n_conns
+        );
+        Ok(p)
+    }
+
+    /// Reconstruct the quant-tiled program for an `M`-slot budget. The
+    /// segment structure is budget-dependent and therefore recompiled
+    /// from the expanded stream; the `i8` weight pool and group table
+    /// are borrowed from the mapping (the quant-fused weight sections —
+    /// both programs index weights by stream position).
+    pub fn quant_tiled_program(&self, m: usize) -> anyhow::Result<QuantTiledProgram> {
+        let qweights: Pool<i8> = self.pool(SEC_QFUSED_QWEIGHTS)?;
+        let groups: Pool<QuantGroup> = self.pool(SEC_QFUSED_GROUPS)?;
+        self.check_qfused_group_bounds(&qweights, &groups)?;
+        let stream = self.stream_program()?;
+        let tiled = TiledProgram::from_program(&stream, m)?;
+        QuantTiledProgram::from_parts(tiled, qweights, groups)
+    }
+
     /// Reconstruct the interpreted stream program (expands the fused
     /// macro-ops back into per-connection ops; owned, not zero-copy).
     pub fn stream_program(&self) -> anyhow::Result<StreamProgram> {
@@ -794,6 +901,26 @@ mod bin_tests {
         let got_quant = art.quant_program().unwrap();
         assert_eq!(got_quant, want_quant);
         assert!(got_quant.is_zero_copy());
+
+        let want_qf = QuantFusedProgram::from_quant(&want_quant);
+        let got_qf = art.quant_fused_program().unwrap();
+        assert_eq!(got_qf.ctrl(), want_qf.ctrl());
+        assert_eq!(got_qf.pivots(), want_qf.pivots());
+        assert_eq!(got_qf.bounds(), want_qf.bounds());
+        assert_eq!(got_qf.idx(), want_qf.idx());
+        assert_eq!(got_qf.flags(), want_qf.flags());
+        assert_eq!(got_qf.quantized_weights(), want_qf.quantized_weights());
+        assert_eq!(got_qf.groups(), want_qf.groups());
+        assert!(got_qf.is_zero_copy());
+        // The shared-pool claim, on the load path: the quant-fused
+        // macro-op structure is byte-for-byte the f32 fused structure.
+        assert_eq!(got_qf.idx(), got_fused.idx());
+        assert_eq!(got_qf.flags(), got_fused.flags());
+
+        let got_qt = art.quant_tiled_program(net.n_neurons() + 2).unwrap();
+        assert_eq!(got_qt.quantized_weights(), want_quant.quantized_weights());
+        assert_eq!(got_qt.groups(), want_quant.groups());
+        assert!(art.quant_tiled_program(2).is_err(), "m < 3 must be rejected");
 
         let got_stream = art.stream_program().unwrap();
         assert_eq!(got_stream.n_ops(), stream.n_ops());

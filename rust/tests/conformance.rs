@@ -21,7 +21,9 @@ use sparseflow::exec::dense::DenseEngine;
 use sparseflow::exec::fused::FusedEngine;
 use sparseflow::exec::layerwise::LayerwiseEngine;
 use sparseflow::exec::parallel::ParallelEngine;
-use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine, QuantStreamProgram};
+use sparseflow::exec::quant::{
+    output_error_bound, QuantFusedEngine, QuantStreamEngine, QuantStreamProgram, QuantTiledEngine,
+};
 use sparseflow::exec::simd::{avx2_supported, Kernel};
 use sparseflow::exec::stream::{StreamProgram, StreamingEngine};
 use sparseflow::exec::tiled::TiledEngine;
@@ -180,6 +182,31 @@ fn quant_engine_stays_within_certified_bound() {
                     "{name}: quant[{oname}]x{shards} must be bit-identical to serial quant"
                 );
             }
+            // The quantized compiled schedules, under every supported
+            // microkernel: quant-fused dequantizes in the same order as
+            // the interpreter (bit-identical to `got`, inheriting the
+            // bound); quant-tiled reassociates across segments and is
+            // held to the bound directly, at a minimum and an
+            // everything-fits budget.
+            for kernel in kernels() {
+                let k = kernel.name();
+                let qfused = QuantFusedEngine::new(&f.net, &order).with_kernel(kernel);
+                assert_eq!(
+                    qfused.infer(&f.inputs),
+                    got,
+                    "{name}: quant-fused[{oname}]/{k} must be bit-identical to quant interp"
+                );
+                for m in [3usize, f.net.n_neurons() + 2] {
+                    let qtiled =
+                        QuantTiledEngine::new(&f.net, &order, m).unwrap().with_kernel(kernel);
+                    let qtdiff = qtiled.infer(&f.inputs).max_abs_diff(&f.expected);
+                    assert!(
+                        qtdiff <= tol,
+                        "{name}: quant-tiled[{oname}]@M{m}/{k} diff {qtdiff} exceeds certified \
+                         bound {bound}"
+                    );
+                }
+            }
         }
     }
 }
@@ -261,6 +288,27 @@ fn bin_artifacts_reproduce_golden_traces_bit_identically() {
             assert_eq!(
                 got, want_quant,
                 "{name}: bin[{src}] quant diverged from the JSON-compiled program"
+            );
+            // The quantized compiled schedules load from the same
+            // artifact (macro-op pools shared with the f32 path, i8
+            // weight pool + group table from the quant sections) and
+            // must be output-identical to their JSON-compiled
+            // counterparts: quant-fused ≡ the quant interpreter,
+            // quant-tiled ≡ the source-compiled quant-tiled at the
+            // same budget.
+            let qfused = QuantFusedEngine::from_program(art.quant_fused_program().unwrap());
+            assert_eq!(
+                qfused.infer(&f.inputs),
+                want_quant,
+                "{name}: bin[{src}] quant-fused diverged from the JSON-compiled quant"
+            );
+            let want_qtiled =
+                QuantTiledEngine::new(&f.net, &order, m).unwrap().infer(&f.inputs);
+            let qtiled = QuantTiledEngine::from_program(art.quant_tiled_program(m).unwrap());
+            assert_eq!(
+                qtiled.infer(&f.inputs),
+                want_qtiled,
+                "{name}: bin[{src}] quant-tiled@M{m} diverged from the source-compiled one"
             );
         }
         std::fs::remove_file(&path).ok();

@@ -8,7 +8,9 @@ use sparseflow::exec::dense::DenseEngine;
 use sparseflow::exec::fused::FusedEngine;
 use sparseflow::exec::layerwise::{forward_layers, LayerwiseEngine};
 use sparseflow::exec::parallel::ParallelEngine;
-use sparseflow::exec::quant::{output_error_bound, QuantStreamEngine};
+use sparseflow::exec::quant::{
+    output_error_bound, QuantFusedEngine, QuantStreamEngine, QuantTiledEngine,
+};
 use sparseflow::exec::simd::{avx2_supported, Kernel};
 use sparseflow::exec::stream::StreamingEngine;
 use sparseflow::exec::tiled::TiledEngine;
@@ -271,7 +273,11 @@ fn prop_neuron_order_derivation() {
 /// schedules reassociate f32 sums, bit-identical where the docs claim
 /// it (sharding, fusion, tiling, their compositions, and every
 /// dispatched microkernel: scalar and, where supported, avx2), and
-/// within the certified error bound for the quantized stream.
+/// within the certified error bound for the quantized stream. The
+/// quantized compiled schedules ride the same matrix: quant-fused is
+/// bit-identical to the quant interpreter (same dequant order) per
+/// kernel and ∘sharded; quant-tiled stays within the certified bound at
+/// a random budget, with its ∘sharded composition bit-identical to it.
 #[test]
 fn prop_cross_engine_differential() {
     check(
@@ -356,8 +362,145 @@ fn prop_cross_engine_differential() {
             if f64::from(qdiff) > f64::from(bound) * 1.01 + 1e-3 {
                 return Err(format!("quant diff {qdiff} exceeds certified bound {bound}"));
             }
+
+            // The quantized compiled schedules: quant-fused dequantizes
+            // in the same per-element order as the quant interpreter, so
+            // it is documented bit-identical to it under every dispatched
+            // microkernel, alone and composed with batch sharding.
+            // Quant-tiled reassociates across segment boundaries like its
+            // f32 counterpart, so it gets the certified bound instead
+            // (for every budget M ≥ 3), and sharding on top stays
+            // bit-identical to the unsharded quant-tiled output.
+            let slack = f64::from(bound) * 1.01 + 1e-3;
+            for kernel in kernels() {
+                let k = kernel.name();
+                let qfused = QuantFusedEngine::new(net, order).with_kernel(kernel);
+                if qfused.infer(x) != qout {
+                    return Err(format!("quant-fused/{k} not bit-identical to quant interp"));
+                }
+                let qfused_sharded = ParallelEngine::new(qfused, *workers);
+                if qfused_sharded.infer(x) != qout {
+                    return Err(format!(
+                        "quant-fused/{k}∘sharded ({workers} workers) not bit-identical"
+                    ));
+                }
+
+                let qtiled = QuantTiledEngine::new(net, order, *fast_mem)
+                    .map_err(|e| format!("quant-tiled compile (M={fast_mem}): {e}"))?
+                    .with_kernel(kernel);
+                let qtout = qtiled.infer(x);
+                let qtdiff = reference.max_abs_diff(&qtout);
+                if f64::from(qtdiff) > slack {
+                    return Err(format!(
+                        "quant-tiled/{k} (M={fast_mem}) diff {qtdiff} exceeds certified \
+                         bound {bound}"
+                    ));
+                }
+                let qtiled_sharded = ParallelEngine::new(qtiled, *workers);
+                if qtiled_sharded.infer(x) != qtout {
+                    return Err(format!(
+                        "quant-tiled/{k}∘sharded (M={fast_mem}, {workers} workers) not \
+                         bit-identical to unsharded quant-tiled"
+                    ));
+                }
+            }
             Ok(())
         },
+    );
+}
+
+/// (l) Activation-sparsity skipping: on nets with forced-zero
+/// activation rows, every compiled engine (f32 and i8, fused and tiled)
+/// produces outputs identical to the same engine with skipping
+/// disabled, and the fused engine's skip counters match a reference
+/// count computed independently from the program's macro-op structure
+/// and the final activations (a neuron's row is finished before any
+/// AxpyRun reads it, so final values equal values at use time; the
+/// zero-row predicate is sign-of-zero-insensitive on both sides).
+#[test]
+fn prop_activation_skip_is_value_identical_and_counted() {
+    use sparseflow::exec::fused::{FusedProgram, MacroOp};
+
+    let mut total_skipped = 0u64;
+    check(
+        "activation-skip",
+        30,
+        |rng| {
+            let sizes = vec![3 + rng.index(10), 3 + rng.index(10), 1 + rng.index(4)];
+            let net = random_layered(&sizes, 0.3 + rng.f64() * 0.5, 1.0, rng);
+            let order = two_optimal_order(&net);
+            let batch = 1 + rng.index(5);
+            let mut x = BatchMatrix::random(net.n_inputs(), batch, rng);
+            // Force roughly half the input rows to all-zero so AxpyRuns
+            // sourced from them become skippable (ReLU adds more zero
+            // rows among the hiddens on its own).
+            for r in 0..net.n_inputs() {
+                if rng.index(2) == 0 {
+                    x.row_mut(r).fill(0.0);
+                }
+            }
+            let fast_mem = 3 + rng.index(net.n_neurons() + 2);
+            (net, order, x, fast_mem)
+        },
+        |(net, order, x, fast_mem)| {
+            let program = FusedProgram::compile(net, order);
+            let mut values = BatchMatrix::zeros(program.n_neurons(), x.batch());
+            let mut out = BatchMatrix::zeros(program.output_ids().len(), x.batch());
+            program.run_into(x, &mut values, &mut out);
+            let (mut want_checked, mut want_skipped) = (0u64, 0u64);
+            for m in 0..program.n_macro_ops() {
+                if let MacroOp::Axpy { src, .. } = program.macro_op(m) {
+                    want_checked += 1;
+                    if values.row(src as usize).iter().all(|&v| v == 0.0) {
+                        want_skipped += 1;
+                    }
+                }
+            }
+
+            let on = FusedEngine::new(net, order);
+            let off = FusedEngine::new(net, order).with_skip(false);
+            if on.infer(x) != off.infer(x) {
+                return Err("fused: skip on vs off diverged".into());
+            }
+            if on.skip_counters().checked() != want_checked
+                || on.skip_counters().skipped() != want_skipped
+            {
+                return Err(format!(
+                    "fused counters skipped {}/checked {} != reference {want_skipped}/{want_checked}",
+                    on.skip_counters().skipped(),
+                    on.skip_counters().checked()
+                ));
+            }
+            if off.skip_counters().checked() != 0 {
+                return Err("skip off must not count".into());
+            }
+            total_skipped += want_skipped;
+
+            let qf_on = QuantFusedEngine::new(net, order);
+            let qf_off = QuantFusedEngine::new(net, order).with_skip(false);
+            if qf_on.infer(x) != qf_off.infer(x) {
+                return Err("quant-fused: skip on vs off diverged".into());
+            }
+            let t_on = TiledEngine::new(net, order, *fast_mem).map_err(|e| e.to_string())?;
+            let t_off = TiledEngine::new(net, order, *fast_mem)
+                .map_err(|e| e.to_string())?
+                .with_skip(false);
+            if t_on.infer(x) != t_off.infer(x) {
+                return Err(format!("tiled (M={fast_mem}): skip on vs off diverged"));
+            }
+            let qt_on = QuantTiledEngine::new(net, order, *fast_mem).map_err(|e| e.to_string())?;
+            let qt_off = QuantTiledEngine::new(net, order, *fast_mem)
+                .map_err(|e| e.to_string())?
+                .with_skip(false);
+            if qt_on.infer(x) != qt_off.infer(x) {
+                return Err(format!("quant-tiled (M={fast_mem}): skip on vs off diverged"));
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        total_skipped > 0,
+        "forced zero rows must produce at least one skipped AxpyRun across the suite"
     );
 }
 

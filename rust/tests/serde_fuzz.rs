@@ -173,6 +173,154 @@ fn targeted_quant_damage_is_rejected() {
     );
 }
 
+// ---- sparseflow-bin-v1 (.sfb): the quant-fused section kinds ----
+
+use sparseflow::runtime::artifact::{
+    build_model_artifact, crc32, BinArtifact, SectionInfo, SEC_QFUSED_GROUPS,
+    SEC_QFUSED_GROUP_BOUNDS, SEC_QFUSED_QWEIGHTS, SFB_ENTRY_LEN, SFB_HEADER_LEN,
+};
+
+/// Parse the section table of a raw artifact buffer (the writer's
+/// layout: 32-byte entries at offset 64).
+fn table_entries(buf: &[u8]) -> Vec<SectionInfo> {
+    let n = u32::from_le_bytes(buf[20..24].try_into().unwrap()) as usize;
+    (0..n)
+        .map(|i| {
+            let e = SFB_HEADER_LEN + i * SFB_ENTRY_LEN;
+            SectionInfo {
+                kind: u32::from_le_bytes(buf[e..e + 4].try_into().unwrap()),
+                dtype: u32::from_le_bytes(buf[e + 4..e + 8].try_into().unwrap()),
+                offset: u64::from_le_bytes(buf[e + 8..e + 16].try_into().unwrap()),
+                len: u64::from_le_bytes(buf[e + 16..e + 24].try_into().unwrap()),
+                crc: u32::from_le_bytes(buf[e + 24..e + 28].try_into().unwrap()),
+            }
+        })
+        .collect()
+}
+
+fn entry_at(buf: &[u8], kind: u32) -> (usize, SectionInfo) {
+    let entries = table_entries(buf);
+    let i = entries.iter().position(|s| s.kind == kind).expect("kind present");
+    (SFB_HEADER_LEN + i * SFB_ENTRY_LEN, entries[i])
+}
+
+/// Recompute the table CRC (header bytes 32..36) and then the header
+/// CRC (over 0..60, stored at 60..64) after table surgery, so the
+/// damage under test reaches section-level validation instead of being
+/// masked by the outer checksums.
+fn fix_table_and_header_crcs(buf: &mut [u8]) {
+    let n = u32::from_le_bytes(buf[20..24].try_into().unwrap()) as usize;
+    let table_end = SFB_HEADER_LEN + n * SFB_ENTRY_LEN;
+    let tc = crc32(&buf[SFB_HEADER_LEN..table_end]);
+    buf[32..36].copy_from_slice(&tc.to_le_bytes());
+    let hc = crc32(&buf[0..60]);
+    buf[60..64].copy_from_slice(&hc.to_le_bytes());
+}
+
+/// Seeded single-byte corruption of the quant-fused sections (the `i8`
+/// weight pool, the scale/zero-point table, the group bounds): every
+/// flip must be rejected by the section CRC — never a panic, never a
+/// silent load.
+#[test]
+fn sfb_qfused_payload_corruption_is_rejected_by_crc() {
+    let mut rng = Pcg64::seed_from(0xF0_CC);
+    let net = random_mlp(&MlpSpec::new(3, 8, 0.4), &mut rng);
+    let order = two_optimal_order(&net);
+    let buf = build_model_artifact(&net, &order);
+    assert!(BinArtifact::from_bytes(&buf).is_ok(), "clean artifact loads");
+
+    for kind in [SEC_QFUSED_QWEIGHTS, SEC_QFUSED_GROUPS, SEC_QFUSED_GROUP_BOUNDS] {
+        let (_, s) = entry_at(&buf, kind);
+        assert!(s.len > 0, "kind {kind} payload non-empty");
+        for _ in 0..MUTATIONS_PER_NET {
+            let at = s.offset as usize + rng.index(s.len as usize);
+            let mut bad = buf.clone();
+            bad[at] ^= 1 + rng.below(255) as u8; // any nonzero flip
+            assert!(
+                BinArtifact::from_bytes(&bad).is_err(),
+                "kind {kind}: flip at {at} undetected"
+            );
+        }
+    }
+}
+
+/// Value-level damage behind *valid* checksums (section CRC, table CRC,
+/// and header CRC all recomputed) must still be rejected — by the
+/// group-bounds validation on the program constructors, not by luck.
+#[test]
+fn sfb_qfused_bad_group_bounds_with_fixed_crcs_is_rejected() {
+    let mut rng = Pcg64::seed_from(0xF0_DD);
+    let net = random_mlp(&MlpSpec::new(3, 8, 0.4), &mut rng);
+    let order = two_optimal_order(&net);
+    let buf = build_model_artifact(&net, &order);
+
+    // Overwrite bounds[0] (always 0) with a wrong value.
+    let (e, s) = entry_at(&buf, SEC_QFUSED_GROUP_BOUNDS);
+    assert!(s.len >= 8, "bounds section has at least [0, n_ops]");
+    let mut bad = buf.clone();
+    let at = s.offset as usize;
+    bad[at..at + 4].copy_from_slice(&7u32.to_le_bytes());
+    let payload = bad[s.offset as usize..(s.offset + s.len) as usize].to_vec();
+    bad[e + 24..e + 28].copy_from_slice(&crc32(&payload).to_le_bytes());
+    fix_table_and_header_crcs(&mut bad);
+    let art = BinArtifact::from_bytes(&bad).expect("checksums are consistent");
+    assert!(art.quant_fused_program().is_err(), "bad interior bound undetected");
+    assert!(art.quant_tiled_program(5).is_err(), "bad interior bound undetected (tiled)");
+    // The f32 paths don't consult the quant-fused sections and stay fine.
+    assert!(art.fused_program().is_ok());
+
+    // Truncate the bounds section by one u32 (drops the n_ops end
+    // marker), CRCs fixed up: length validation must reject it.
+    let (e, s) = entry_at(&buf, SEC_QFUSED_GROUP_BOUNDS);
+    let mut bad = buf.clone();
+    let new_len = s.len - 4;
+    bad[e + 16..e + 24].copy_from_slice(&new_len.to_le_bytes());
+    let payload = bad[s.offset as usize..(s.offset + new_len) as usize].to_vec();
+    bad[e + 24..e + 28].copy_from_slice(&crc32(&payload).to_le_bytes());
+    fix_table_and_header_crcs(&mut bad);
+    let art = BinArtifact::from_bytes(&bad).expect("checksums are consistent");
+    assert!(art.quant_fused_program().is_err(), "truncated bounds undetected");
+
+    // Truncate the i8 weight pool by one element, CRCs fixed up: the
+    // pool-vs-record-count validation must reject it.
+    let (e, s) = entry_at(&buf, SEC_QFUSED_QWEIGHTS);
+    let mut bad = buf.clone();
+    let new_len = s.len - 1;
+    bad[e + 16..e + 24].copy_from_slice(&new_len.to_le_bytes());
+    let payload = bad[s.offset as usize..(s.offset + new_len) as usize].to_vec();
+    bad[e + 24..e + 28].copy_from_slice(&crc32(&payload).to_le_bytes());
+    fix_table_and_header_crcs(&mut bad);
+    let art = BinArtifact::from_bytes(&bad).expect("checksums are consistent");
+    assert!(art.quant_fused_program().is_err(), "truncated weight pool undetected");
+    assert!(art.quant_tiled_program(5).is_err(), "truncated weight pool undetected (tiled)");
+}
+
+/// A duplicated quant-fused section kind (table surgery with all CRCs
+/// fixed up) is rejected at load.
+#[test]
+fn sfb_duplicate_qfused_section_kind_is_rejected() {
+    let mut rng = Pcg64::seed_from(0xF0_EE);
+    let net = random_mlp(&MlpSpec::new(3, 8, 0.4), &mut rng);
+    let order = two_optimal_order(&net);
+    let buf = build_model_artifact(&net, &order);
+
+    // Rewrite the GROUP_BOUNDS entry to claim it is another QWEIGHTS
+    // section (kind + dtype + offset/len/crc copied from the real one):
+    // every per-entry check passes, so only the duplicate-kind check
+    // can catch it.
+    let (e_dup, _) = entry_at(&buf, SEC_QFUSED_GROUP_BOUNDS);
+    let (e_src, _) = entry_at(&buf, SEC_QFUSED_QWEIGHTS);
+    let mut bad = buf.clone();
+    let entry = bad[e_src..e_src + SFB_ENTRY_LEN].to_vec();
+    bad[e_dup..e_dup + SFB_ENTRY_LEN].copy_from_slice(&entry);
+    fix_table_and_header_crcs(&mut bad);
+    let err = BinArtifact::from_bytes(&bad).expect_err("duplicate kind must be rejected");
+    assert!(
+        err.to_string().contains("duplicate"),
+        "want duplicate-kind rejection, got: {err:#}"
+    );
+}
+
 #[test]
 fn from_parts_rejects_structural_damage_without_panicking() {
     let mut rng = Pcg64::seed_from(0xF0_AA);
