@@ -153,6 +153,20 @@ impl Spec {
         )
     }
 
+    /// The standard `--ladder` option of the serving commands: ordered
+    /// degradation rungs below the served variant, as comma-separated
+    /// `schedule:precision` pairs (e.g. `"fused:i8"`), stepped down to
+    /// under overload and probed back up when pressure clears. `"auto"`
+    /// defers to the `ladder` config key; `"-"` (or empty) disables the
+    /// ladder explicitly, overriding any config value.
+    pub fn ladder_opt(self) -> Self {
+        self.opt(
+            "ladder",
+            "auto",
+            "degradation rungs schedule:precision,... ; - = none (auto = config key / none)",
+        )
+    }
+
     /// The standard `--max-queue` SLO option of the serving commands:
     /// bounded queue depth for admission control. An explicit value wins
     /// — including an explicit `0` (= unbounded) — while "auto" defers
@@ -565,6 +579,20 @@ mod tests {
         let a = s.parse(&sv(&["--fault-plan=seed:42:4:100"])).unwrap();
         assert_eq!(a.str("fault-plan"), "seed:42:4:100");
         assert!(s.help_text().contains("--fault-plan"));
+    }
+
+    #[test]
+    fn ladder_opt_declares_standard_knob() {
+        let s = Spec::new("t", "t").ladder_opt();
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.str("ladder"), "auto", "default defers to config");
+        let a = s.parse(&sv(&["--ladder", "fused:i8"])).unwrap();
+        assert_eq!(a.str("ladder"), "fused:i8");
+        // An explicit "-" stays distinguishable from "auto" (it disables
+        // the ladder, overriding any config-file value).
+        let a = s.parse(&sv(&["--ladder", "-"])).unwrap();
+        assert_eq!(a.str("ladder"), "-");
+        assert!(s.help_text().contains("--ladder"));
     }
 
     #[test]

@@ -156,6 +156,15 @@ impl Config {
         self.u64("breaker_cooldown_ms", default)
     }
 
+    /// The degradation-ladder knob (`ladder` key): ordered rungs below
+    /// the served variant as comma-separated `schedule:precision` pairs
+    /// (e.g. `"fused:i8"`), stepped down to under overload and probed
+    /// back up when pressure clears. Empty = no ladder (overload sheds
+    /// instead of degrading).
+    pub fn ladder(&self, default: &str) -> String {
+        self.str("ladder", default)
+    }
+
     /// The hang-watchdog knob (`hang_cap_ms` key): hard wall-clock cap
     /// in milliseconds on a single engine invocation — an in-flight
     /// inference older than this opens the model's breaker (new work is
@@ -308,6 +317,14 @@ mod tests {
         assert_eq!(c.breaker_faults(3), 5);
         assert_eq!(c.breaker_cooldown_ms(1000), 250);
         assert_eq!(c.hang_cap_ms(0), 2000);
+    }
+
+    #[test]
+    fn ladder_knob() {
+        let mut c = Config::empty();
+        assert_eq!(c.ladder(""), "", "default when unset (no ladder)");
+        c.set_override("ladder=fused:i8").unwrap();
+        assert_eq!(c.ladder(""), "fused:i8");
     }
 
     #[test]

@@ -211,6 +211,20 @@ impl Breaker {
     pub fn trips(&self) -> u64 {
         self.trips.load(Ordering::Relaxed)
     }
+
+    /// Remaining cooldown before the next half-open probe is admitted,
+    /// when the breaker is open (or waiting out a probe). `None` while
+    /// closed — the overload controller uses this to derive the
+    /// `retry_after_ms` hint on `Unhealthy` replies.
+    pub fn retry_after(&self) -> Option<Duration> {
+        let g = self.lock();
+        match g.state {
+            BreakerState::Closed => None,
+            BreakerState::Open | BreakerState::HalfOpen => {
+                Some(self.policy.cooldown.saturating_sub(g.since.elapsed()))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -319,6 +333,17 @@ mod tests {
         // Probe never reports back (e.g. shed later in the pipeline).
         std::thread::sleep(Duration::from_millis(15));
         assert!(b.admit(), "probe re-armed instead of wedging half-open");
+    }
+
+    #[test]
+    fn retry_after_tracks_cooldown_remainder() {
+        let b = Breaker::new(policy(1, 50));
+        assert_eq!(b.retry_after(), None, "closed breaker has no retry hint");
+        b.observe(true, Duration::ZERO);
+        let r = b.retry_after().expect("open breaker exposes its cooldown remainder");
+        assert!(r <= Duration::from_millis(50));
+        b.observe(false, Duration::ZERO);
+        assert_eq!(b.retry_after(), None, "success closes and clears the hint");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! for the TCP `health` command).
 
 use super::breaker::Breaker;
+use super::overload::OverloadControl;
 use crate::exec::fused::{FusionStats, SkipCounters};
 use crate::exec::parallel::ShardTimings;
 use crate::exec::tiled::TiledStats;
@@ -133,6 +134,10 @@ pub struct Metrics {
     pub deadline_misses: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Responses served from a degradation-ladder rung below the top
+    /// tier (see `coordinator::overload`); always 0 when no model has a
+    /// ladder or the ladders never engage.
+    pub degraded: AtomicU64,
     /// Engine invocations that panicked and were contained by the
     /// dispatcher's `catch_unwind` (a batch panic and each panicking
     /// individual re-dispatch both count one).
@@ -173,6 +178,11 @@ pub struct Metrics {
     /// [`Metrics::link_kernel`]) — which `exec::simd` path the deployed
     /// engine actually runs.
     kernels: Mutex<Vec<(String, &'static str)>>,
+    /// Per-model overload controllers (see [`Metrics::link_ladder`]):
+    /// live handles read at snapshot time for `ladder.<model>` state
+    /// (active rung, admit limit, step counts). Only laddered models
+    /// are linked, so ladder-less snapshots keep their exact shape.
+    ladders: Mutex<Vec<(String, Arc<OverloadControl>)>>,
     /// Registry state provider (see [`Metrics::link_registry`]): called
     /// at snapshot time to embed the model registry's tier/version view
     /// under the `registry` key.
@@ -197,6 +207,7 @@ impl Metrics {
             errors: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             deadline_misses: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             engine_faults: AtomicU64::new(0),
@@ -211,8 +222,31 @@ impl Metrics {
             tiled_stats: Mutex::new(Vec::new()),
             skip_sinks: Mutex::new(Vec::new()),
             kernels: Mutex::new(Vec::new()),
+            ladders: Mutex::new(Vec::new()),
             registry_sink: Mutex::new(None),
         }
+    }
+
+    /// Link a model's overload controller so its ladder state appears in
+    /// [`Metrics::snapshot`] under `ladder.<model>`. Re-linking the same
+    /// model replaces the previous entry (hot-swaps install a fresh
+    /// controller, same lifecycle as breakers).
+    pub fn link_ladder(&self, model: &str, ctl: Arc<OverloadControl>) {
+        let mut sinks = self.ladders.lock().expect("ladder sinks poisoned");
+        if let Some(entry) = sinks.iter_mut().find(|(name, _)| name == model) {
+            entry.1 = ctl;
+        } else {
+            sinks.push((model.to_string(), ctl));
+        }
+    }
+
+    /// Drop a model's ladder link (undeploy, or a hot-swap to a
+    /// ladder-less deployment).
+    pub fn unlink_ladder(&self, model: &str) {
+        self.ladders
+            .lock()
+            .expect("ladder sinks poisoned")
+            .retain(|(name, _)| name != model);
     }
 
     /// Link the model registry's snapshot provider so its state appears
@@ -389,6 +423,7 @@ impl Metrics {
             .set("errors", self.errors.load(Ordering::Relaxed))
             .set("shed", self.shed.load(Ordering::Relaxed))
             .set("deadline_misses", self.deadline_misses.load(Ordering::Relaxed))
+            .set("degraded", self.degraded.load(Ordering::Relaxed))
             .set("engine_faults", self.engine_faults.load(Ordering::Relaxed))
             .set("worker_restarts", self.worker_restarts.load(Ordering::Relaxed))
             .set("quarantined", self.quarantined.load(Ordering::Relaxed))
@@ -463,6 +498,15 @@ impl Metrics {
             j = j.set("breaker", b);
         }
         drop(breakers);
+        let ladders = self.ladders.lock().expect("ladder sinks poisoned");
+        if !ladders.is_empty() {
+            let mut l = Json::obj();
+            for (model, ctl) in ladders.iter() {
+                l = l.set(model, ctl.snapshot());
+            }
+            j = j.set("ladder", l);
+        }
+        drop(ladders);
         let sink = self.registry_sink.lock().expect("registry sink poisoned");
         if let Some(sink) = sink.as_ref() {
             j = j.set("registry", sink());
@@ -741,6 +785,64 @@ mod tests {
         assert_eq!(s3.path(&["breaker", "mlp"]).unwrap().as_str(), Some("closed"));
         m.unlink_breaker("mlp");
         assert!(m.snapshot().get("breaker").is_none());
+    }
+
+    #[test]
+    fn degraded_counter_serializes() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.get("degraded").unwrap().as_u64(), Some(0));
+        m.degraded.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(m.snapshot().get("degraded").unwrap().as_u64(), Some(5));
+    }
+
+    #[test]
+    fn ladder_state_in_snapshot() {
+        use super::super::overload::{OverloadPolicy, Rung};
+        use crate::exec::batch::BatchMatrix;
+        use crate::exec::Engine;
+
+        struct Id;
+        impl Engine for Id {
+            fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+                x.clone()
+            }
+            fn name(&self) -> &'static str {
+                "id"
+            }
+            fn n_inputs(&self) -> usize {
+                1
+            }
+            fn n_outputs(&self) -> usize {
+                1
+            }
+        }
+
+        let m = Metrics::new();
+        assert!(m.snapshot().get("ladder").is_none(), "no ladders, no key");
+
+        let ladder = |labels: &[&str]| {
+            Arc::new(OverloadControl::new(
+                labels.iter().map(|l| Rung::new(Arc::new(Id), l.to_string(), None)).collect(),
+                OverloadPolicy::default(),
+            ))
+        };
+        m.link_ladder("mlp", ladder(&["fused-f32", "fused-i8"]));
+        let s = m.snapshot();
+        assert_eq!(s.path(&["ladder", "mlp", "rungs"]).unwrap().as_u64(), Some(2));
+        assert_eq!(s.path(&["ladder", "mlp", "active"]).unwrap().as_u64(), Some(0));
+        assert_eq!(
+            s.path(&["ladder", "mlp", "active_label"]).unwrap().as_str(),
+            Some("fused-f32")
+        );
+        assert_eq!(s.path(&["ladder", "mlp", "degraded"]).unwrap().as_bool(), Some(false));
+
+        // Re-linking the same model replaces, not duplicates; unlink drops.
+        m.link_ladder("mlp", ladder(&["tiled-f32", "tiled-i8", "interp-i8"]));
+        let s2 = m.snapshot();
+        assert_eq!(s2.path(&["ladder", "mlp", "rungs"]).unwrap().as_u64(), Some(3));
+        m.unlink_ladder("mlp");
+        assert!(m.snapshot().get("ladder").is_none());
     }
 
     #[test]

@@ -19,7 +19,14 @@
 //!   [`InferenceError::EngineFault`] instead of wedging the queue),
 //! * [`breaker`] — per-model circuit breaker (closed → open → half-open
 //!   probes) with an admission-side hang watchdog; open breakers shed
-//!   with [`InferenceError::Unhealthy`],
+//!   with [`InferenceError::Unhealthy`] (or degrade, given a ladder),
+//! * [`overload`] — the overload control plane: per-model degradation
+//!   ladders (ordered pre-built variants, e.g. `fused-f32 → fused-i8`,
+//!   stepped down under pressure and probed back up when it clears,
+//!   with degraded responses carrying a certified error bound),
+//!   adaptive admission (AIMD on the admit limit against the measured
+//!   queue-wait p95 vs the deadline budget), and `retry_after_ms`
+//!   backoff hints for shed replies,
 //! * [`registry`] — versioned multi-model registry over the server:
 //!   `(model, version) → tier` with warm (mmap-backed) / hot (engine
 //!   resident) tiers, promote-on-first-hit, LRU demotion under a
@@ -36,6 +43,7 @@
 pub mod batcher;
 pub mod breaker;
 pub mod metrics;
+pub mod overload;
 pub mod registry;
 pub mod request;
 pub mod router;
@@ -43,6 +51,7 @@ pub mod server;
 pub mod tcp;
 
 pub use breaker::{Breaker, BreakerPolicy, BreakerState};
+pub use overload::{LadderSpec, OverloadControl, OverloadPolicy, Rung, RungSpec};
 pub use registry::{Registry, RegistryConfig, Tier};
 pub use request::{InferenceError, Request, Response};
 pub use router::{ModelVariant, Router, VariantError};

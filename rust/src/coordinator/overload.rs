@@ -1,0 +1,677 @@
+//! Overload control plane: per-model degradation ladder + adaptive
+//! admission + retry hints.
+//!
+//! Under sustained overload a fixed-capacity server can only shed. The
+//! paper's compressed engines open a better trade: serve from a cheaper
+//! **rung** — same model, degraded precision/schedule — with a
+//! *certified* accuracy bound ([`crate::exec::quant::ErrorCertificate`])
+//! instead of dropping the request. Each deployed model gets an
+//! [`OverloadControl`]:
+//!
+//! * **Degradation ladder** — an ordered list of pre-built [`Rung`]s
+//!   (rung 0 is the top tier, e.g. `fused-f32`; later rungs are cheaper,
+//!   e.g. `fused-i8`). A state machine steps the active rung down when
+//!   pressure is high (queue-wait p95 over the deadline budget, or
+//!   sheds in the window) and probes back up one rung at a time after
+//!   `clear_evals` consecutive clear windows. Rung 0 runs the exact
+//!   engine a ladder-less deploy would run, so the non-degraded path is
+//!   bit-identical; responses from any lower rung are flagged
+//!   `degraded` and carry the rung's certified error bound.
+//! * **Adaptive admission** — when a deadline budget is configured, the
+//!   admit limit replaces the fixed `max_queue` with AIMD on measured
+//!   queue-wait p95: multiplicative decrease while p95 exceeds
+//!   `hi_frac`·budget, additive increase while it stays under
+//!   `lo_frac`·budget. Without a budget the limit stays fixed (exactly
+//!   the pre-overload behavior), and the ladder falls back to shed
+//!   counts as its pressure signal.
+//! * **Retry hints** — [`OverloadControl::retry_after_ms`] derives a
+//!   client backoff from controller state (recent queue-wait p95,
+//!   deadline budget); the TCP front-end stamps it on shed replies.
+//!
+//! Evaluations are rate-limited to one per `interval` and run inline on
+//! the dispatcher/admission paths (no extra threads); between
+//! evaluations everything is atomics.
+
+use crate::exec::quant::ErrorCertificate;
+use crate::exec::Engine;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One parsed ladder entry: the `(schedule, precision)` point of the
+/// composition matrix to build this rung from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RungSpec {
+    pub schedule: String,
+    pub precision: String,
+}
+
+/// Parsed `--ladder` grammar: comma-separated `schedule:precision`
+/// rungs, top tier first, with an optional literal `shed` terminator
+/// (documentation of the implicit final step — admission always sheds
+/// at the adaptive limit, so it parses but adds no rung). `"-"` or the
+/// empty string mean "no ladder".
+///
+/// Examples: `"fused:f32,fused:i8"`, `"fused:f32,fused:i8,shed"`,
+/// `"tiled:f32,interp:i8"`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LadderSpec {
+    pub rungs: Vec<RungSpec>,
+}
+
+impl LadderSpec {
+    pub fn parse(spec: &str) -> Result<LadderSpec, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "-" {
+            return Ok(LadderSpec::default());
+        }
+        let mut rungs = Vec::new();
+        let entries: Vec<&str> = spec.split(',').map(str::trim).collect();
+        for (i, entry) in entries.iter().enumerate() {
+            if *entry == "shed" {
+                if i + 1 != entries.len() {
+                    return Err(format!(
+                        "ladder entry {i}: \"shed\" may only terminate the ladder"
+                    ));
+                }
+                break;
+            }
+            let (schedule, precision) = entry.split_once(':').ok_or_else(|| {
+                format!(
+                    "ladder entry {i} ({entry:?}): expected schedule:precision (e.g. \
+                     fused:i8) or the literal \"shed\""
+                )
+            })?;
+            if schedule.is_empty() || precision.is_empty() || precision.contains(':') {
+                return Err(format!(
+                    "ladder entry {i} ({entry:?}): expected exactly schedule:precision"
+                ));
+            }
+            rungs.push(RungSpec {
+                schedule: schedule.to_string(),
+                precision: precision.to_string(),
+            });
+        }
+        if rungs.is_empty() {
+            return Err("ladder needs at least one schedule:precision rung".to_string());
+        }
+        Ok(LadderSpec { rungs })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    /// Canonical round-trippable form (always with the explicit `shed`
+    /// terminator).
+    pub fn describe(&self) -> String {
+        if self.rungs.is_empty() {
+            return "-".to_string();
+        }
+        let mut parts: Vec<String> = self
+            .rungs
+            .iter()
+            .map(|r| format!("{}:{}", r.schedule, r.precision))
+            .collect();
+        parts.push("shed".to_string());
+        parts.join(",")
+    }
+}
+
+/// One pre-built serving tier of a model's degradation ladder.
+pub struct Rung {
+    pub engine: Arc<dyn Engine>,
+    /// The engine's static name, stamped on responses it serves.
+    pub engine_name: &'static str,
+    /// Composition-point label (`"fused-i8-w2-avx2"`), surfaced in the
+    /// metrics snapshot.
+    pub label: String,
+    /// Certified accuracy bound vs the model's f32 reference when this
+    /// rung is quantized; stamped (evaluated at the batch's input
+    /// magnitude) on degraded responses.
+    pub certificate: Option<ErrorCertificate>,
+}
+
+impl Rung {
+    pub fn new(
+        engine: Arc<dyn Engine>,
+        label: String,
+        certificate: Option<ErrorCertificate>,
+    ) -> Rung {
+        let engine_name = engine.name();
+        Rung { engine, engine_name, label, certificate }
+    }
+}
+
+/// Controller thresholds. The defaults engage nothing by themselves:
+/// `initial_limit` 0 keeps admission unbounded and a single-rung ladder
+/// has nowhere to step.
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadPolicy {
+    /// Starting admit limit (the configured `max_queue`); 0 = unbounded
+    /// admission and a fixed (non-adaptive) limit.
+    pub initial_limit: usize,
+    /// Deadline budget the queue-wait p95 is measured against (the
+    /// server's default deadline). `None` disables the AIMD limit and
+    /// switches the ladder's pressure signal to shed counts.
+    pub budget: Option<Duration>,
+    /// Minimum spacing between controller evaluations.
+    pub interval: Duration,
+    /// p95 queue wait above `hi_frac`·budget = pressure.
+    pub hi_frac: f64,
+    /// p95 queue wait below `lo_frac`·budget = clear.
+    pub lo_frac: f64,
+    /// Consecutive clear evaluations before the controller probes one
+    /// rung up / additively raises the admit limit.
+    pub clear_evals: u32,
+}
+
+impl Default for OverloadPolicy {
+    fn default() -> OverloadPolicy {
+        OverloadPolicy {
+            initial_limit: 0,
+            budget: None,
+            interval: Duration::from_millis(50),
+            hi_frac: 0.75,
+            lo_frac: 0.25,
+            clear_evals: 3,
+        }
+    }
+}
+
+/// Window state the evaluator owns (everything hot-path is atomic).
+struct Window {
+    /// Queue waits (seconds) observed since the last evaluation,
+    /// capped — under overload the p95 of the first few thousand is
+    /// representative.
+    waits: Vec<f64>,
+    clear_streak: u32,
+}
+
+const MAX_WINDOW_WAITS: usize = 4096;
+
+/// Per-model overload controller (see module docs). One instance per
+/// deploy generation — hot-swaps install a fresh one, exactly like
+/// breakers, so a new engine generation starts at the top tier.
+pub struct OverloadControl {
+    rungs: Vec<Rung>,
+    active: AtomicUsize,
+    /// Current admit limit (0 = unbounded).
+    limit: AtomicUsize,
+    policy: OverloadPolicy,
+    steps_down: AtomicU64,
+    steps_up: AtomicU64,
+    /// Requests served from a rung below the top since deploy.
+    degraded_served: AtomicU64,
+    /// Sheds since the last evaluation (window counter).
+    window_sheds: AtomicU64,
+    /// Last evaluated queue-wait p95 in microseconds (retry hints).
+    last_p95_us: AtomicU64,
+    /// An open breaker forced the bottom rung; step-ups are held until
+    /// the dispatcher reports the breaker closed again.
+    breaker_forced: AtomicBool,
+    /// Next evaluation time, µs since `epoch` (cheap hot-path gate).
+    next_eval_us: AtomicU64,
+    epoch: Instant,
+    window: Mutex<Window>,
+}
+
+impl OverloadControl {
+    pub fn new(rungs: Vec<Rung>, policy: OverloadPolicy) -> OverloadControl {
+        assert!(!rungs.is_empty(), "a model needs at least its top-tier rung");
+        OverloadControl {
+            rungs,
+            active: AtomicUsize::new(0),
+            limit: AtomicUsize::new(policy.initial_limit),
+            policy,
+            steps_down: AtomicU64::new(0),
+            steps_up: AtomicU64::new(0),
+            degraded_served: AtomicU64::new(0),
+            window_sheds: AtomicU64::new(0),
+            last_p95_us: AtomicU64::new(0),
+            breaker_forced: AtomicBool::new(false),
+            next_eval_us: AtomicU64::new(0),
+            epoch: Instant::now(),
+            window: Mutex::new(Window { waits: Vec::new(), clear_streak: 0 }),
+        }
+    }
+
+    fn lock_window(&self) -> std::sync::MutexGuard<'_, Window> {
+        // Poison-tolerant like the breaker: a panicking dispatcher must
+        // not take the controller down.
+        self.window.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn n_rungs(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn has_ladder(&self) -> bool {
+        self.rungs.len() > 1
+    }
+
+    /// Active rung index (0 = top tier).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed).min(self.rungs.len() - 1)
+    }
+
+    /// The rung currently serving: `(index, rung)`.
+    pub fn serving(&self) -> (usize, &Rung) {
+        let a = self.active();
+        (a, &self.rungs[a])
+    }
+
+    /// Current admit limit (0 = unbounded). Starts at the configured
+    /// `max_queue` and self-tunes only when a deadline budget exists.
+    pub fn admit_limit(&self) -> usize {
+        self.limit.load(Ordering::Relaxed)
+    }
+
+    pub fn steps_down(&self) -> u64 {
+        self.steps_down.load(Ordering::Relaxed)
+    }
+
+    pub fn steps_up(&self) -> u64 {
+        self.steps_up.load(Ordering::Relaxed)
+    }
+
+    /// Count one response served from a degraded rung (dispatcher).
+    pub fn note_degraded(&self) {
+        self.degraded_served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one shed (admission) — the no-budget pressure signal.
+    pub fn note_shed(&self) {
+        self.window_sheds.fetch_add(1, Ordering::Relaxed);
+        self.maybe_evaluate();
+    }
+
+    /// Feed one batch's queue waits (dispatcher) and maybe evaluate.
+    pub fn observe_waits(&self, waits: &[f64]) {
+        {
+            let mut g = self.lock_window();
+            let room = MAX_WINDOW_WAITS.saturating_sub(g.waits.len());
+            g.waits.extend(waits.iter().take(room));
+        }
+        self.maybe_evaluate();
+    }
+
+    /// An open breaker asked for degraded service: force the bottom
+    /// rung so half-open probes (and everything until recovery) run on
+    /// the cheapest engine. Returns false when there is no lower rung
+    /// to degrade to (the caller sheds `Unhealthy` as before).
+    pub fn degrade_for_breaker(&self) -> bool {
+        if self.rungs.len() < 2 {
+            return false;
+        }
+        if !self.breaker_forced.swap(true, Ordering::Relaxed) {
+            let bottom = self.rungs.len() - 1;
+            let a = self.active.swap(bottom, Ordering::Relaxed);
+            if a < bottom {
+                self.steps_down.fetch_add((bottom - a) as u64, Ordering::Relaxed);
+            }
+        }
+        true
+    }
+
+    /// The dispatcher observed the breaker closed again: release the
+    /// forced-degrade hold so clear evaluations can climb.
+    pub fn on_breaker_closed(&self) {
+        self.breaker_forced.store(false, Ordering::Relaxed);
+    }
+
+    /// True while an open breaker pins the ladder to the bottom rung.
+    pub fn breaker_forced(&self) -> bool {
+        self.breaker_forced.load(Ordering::Relaxed)
+    }
+
+    /// Client backoff hint derived from controller state: twice the
+    /// recent queue-wait p95, floored at half the deadline budget (or
+    /// 25 ms without one) and capped at 2 s.
+    pub fn retry_after_ms(&self) -> u64 {
+        let p95_ms = self.last_p95_us.load(Ordering::Relaxed) / 1000;
+        let floor = match self.policy.budget {
+            Some(b) => ((b.as_millis() as u64) / 2).max(1),
+            None => 25,
+        };
+        (2 * p95_ms).clamp(floor, 2_000)
+    }
+
+    fn floor_limit(&self) -> usize {
+        (self.policy.initial_limit / 8).max(1)
+    }
+
+    fn ceiling_limit(&self) -> usize {
+        self.policy.initial_limit.saturating_mul(8)
+    }
+
+    fn increment(&self) -> usize {
+        (self.policy.initial_limit / 4).max(1)
+    }
+
+    fn maybe_evaluate(&self) {
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        if now_us >= self.next_eval_us.load(Ordering::Relaxed) {
+            self.evaluate(now_us);
+        }
+    }
+
+    /// One controller evaluation over the window since the last one.
+    /// Runs under the window mutex; the `next_eval_us` re-check makes
+    /// racing callers collapse into a single evaluation.
+    fn evaluate(&self, now_us: u64) {
+        let mut g = self.lock_window();
+        if now_us < self.next_eval_us.load(Ordering::Relaxed) {
+            return;
+        }
+        self.next_eval_us
+            .store(now_us + self.policy.interval.as_micros() as u64, Ordering::Relaxed);
+        let mut waits = std::mem::take(&mut g.waits);
+        let sheds = self.window_sheds.swap(0, Ordering::Relaxed);
+        let p95 = percentile(&mut waits, 0.95);
+        self.last_p95_us.store((p95 * 1e6) as u64, Ordering::Relaxed);
+
+        // Pressure signals: with a deadline budget the measured
+        // queue-wait p95 drives both the AIMD limit and the ladder;
+        // without one, sheds drive the ladder and the limit is fixed.
+        let (wait_hi, wait_lo) = match self.policy.budget {
+            Some(b) => {
+                let b = b.as_secs_f64();
+                (p95 > self.policy.hi_frac * b, p95 < self.policy.lo_frac * b)
+            }
+            None => (false, true),
+        };
+        if wait_hi || sheds > 0 {
+            g.clear_streak = 0;
+            self.step_down();
+            if wait_hi && self.policy.initial_limit > 0 {
+                // Multiplicative decrease: the queue is eating the
+                // deadline budget, admit less until waits recover.
+                let limit = self.limit.load(Ordering::Relaxed);
+                if limit > self.floor_limit() {
+                    self.limit.store((limit / 2).max(self.floor_limit()), Ordering::Relaxed);
+                }
+            }
+        } else if wait_lo {
+            g.clear_streak += 1;
+            if g.clear_streak >= self.policy.clear_evals {
+                g.clear_streak = 0;
+                if self.policy.budget.is_some() && self.policy.initial_limit > 0 {
+                    // Additive increase while waits stay clear.
+                    let limit = self.limit.load(Ordering::Relaxed);
+                    if limit < self.ceiling_limit() {
+                        self.limit.store(
+                            (limit + self.increment()).min(self.ceiling_limit()),
+                            Ordering::Relaxed,
+                        );
+                    }
+                }
+                if !self.breaker_forced.load(Ordering::Relaxed) {
+                    self.step_up();
+                }
+            }
+        } else {
+            // Middle band: hold the current rung and limit.
+            g.clear_streak = 0;
+        }
+    }
+
+    fn step_down(&self) {
+        let a = self.active.load(Ordering::Relaxed);
+        if a + 1 < self.rungs.len() {
+            self.active.store(a + 1, Ordering::Relaxed);
+            self.steps_down.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn step_up(&self) {
+        let a = self.active.load(Ordering::Relaxed);
+        if a > 0 {
+            self.active.store(a - 1, Ordering::Relaxed);
+            self.steps_up.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Ladder state for `Metrics::snapshot` (`ladder.<model>`).
+    pub fn snapshot(&self) -> Json {
+        let (a, rung) = self.serving();
+        Json::obj()
+            .set("rungs", self.rungs.len())
+            .set("active", a)
+            .set("active_label", rung.label.as_str())
+            .set("degraded", a > 0)
+            .set("admit_limit", self.admit_limit())
+            .set("steps_down", self.steps_down())
+            .set("steps_up", self.steps_up())
+            .set("degraded_served", self.degraded_served.load(Ordering::Relaxed))
+            .set("breaker_forced", self.breaker_forced())
+            .set("retry_after_ms", self.retry_after_ms())
+    }
+}
+
+/// Nearest-rank percentile; 0.0 on an empty window.
+fn percentile(values: &mut [f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((q * values.len() as f64).ceil() as usize).clamp(1, values.len());
+    values[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::batch::BatchMatrix;
+
+    struct Noop(&'static str);
+    impl Engine for Noop {
+        fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+            x.clone()
+        }
+        fn name(&self) -> &'static str {
+            self.0
+        }
+        fn n_inputs(&self) -> usize {
+            1
+        }
+        fn n_outputs(&self) -> usize {
+            1
+        }
+    }
+
+    fn rung(name: &'static str) -> Rung {
+        Rung::new(Arc::new(Noop(name)), name.to_string(), None)
+    }
+
+    /// Evaluate on every observation (no rate limit) for direct tests.
+    fn eager(policy: OverloadPolicy) -> OverloadPolicy {
+        OverloadPolicy { interval: Duration::ZERO, ..policy }
+    }
+
+    #[test]
+    fn ladder_grammar_parses_and_round_trips() {
+        assert!(LadderSpec::parse("").unwrap().is_empty());
+        assert!(LadderSpec::parse("-").unwrap().is_empty());
+        assert_eq!(LadderSpec::parse("").unwrap().describe(), "-");
+
+        let l = LadderSpec::parse("fused:f32,fused:i8").unwrap();
+        assert_eq!(l.rungs.len(), 2);
+        assert_eq!(l.rungs[0], RungSpec { schedule: "fused".into(), precision: "f32".into() });
+        assert_eq!(l.rungs[1].precision, "i8");
+        assert_eq!(l.describe(), "fused:f32,fused:i8,shed");
+
+        // The optional shed terminator parses to the same ladder, and
+        // whitespace is tolerated.
+        let t = LadderSpec::parse(" fused:f32 , fused:i8 , shed ").unwrap();
+        assert_eq!(t, l);
+
+        // Errors: shed in the middle, missing colon, empty halves, a
+        // shed-only ladder.
+        assert!(LadderSpec::parse("fused:f32,shed,fused:i8").is_err());
+        assert!(LadderSpec::parse("fused").is_err());
+        assert!(LadderSpec::parse("fused:").is_err());
+        assert!(LadderSpec::parse(":i8").is_err());
+        assert!(LadderSpec::parse("a:b:c").is_err());
+        assert!(LadderSpec::parse("shed").is_err());
+    }
+
+    #[test]
+    fn sheds_step_down_and_clear_windows_probe_back_up() {
+        // No budget: sheds are the pressure signal.
+        let ctl = OverloadControl::new(
+            vec![rung("top"), rung("mid"), rung("low")],
+            eager(OverloadPolicy { clear_evals: 2, ..OverloadPolicy::default() }),
+        );
+        assert_eq!(ctl.serving().1.engine_name, "top");
+
+        ctl.note_shed();
+        assert_eq!((ctl.active(), ctl.steps_down()), (1, 1));
+        ctl.note_shed();
+        assert_eq!(ctl.serving().1.engine_name, "low");
+        ctl.note_shed();
+        assert_eq!(ctl.active(), 2, "bottom rung holds");
+
+        // Two clear windows per step: climbs one rung at a time.
+        for _ in 0..2 {
+            ctl.observe_waits(&[]);
+        }
+        assert_eq!((ctl.active(), ctl.steps_up()), (1, 1));
+        for _ in 0..2 {
+            ctl.observe_waits(&[]);
+        }
+        assert_eq!(ctl.active(), 0, "recovered to the top tier");
+        ctl.observe_waits(&[]);
+        assert_eq!(ctl.steps_up(), 2, "top tier holds");
+    }
+
+    #[test]
+    fn budget_pressure_runs_aimd_on_the_admit_limit() {
+        let ctl = OverloadControl::new(
+            vec![rung("top"), rung("low")],
+            eager(OverloadPolicy {
+                initial_limit: 16,
+                budget: Some(Duration::from_millis(100)),
+                clear_evals: 1,
+                ..OverloadPolicy::default()
+            }),
+        );
+        assert_eq!(ctl.admit_limit(), 16);
+
+        // p95 = 90 ms > 75 ms: multiplicative decrease + step down.
+        ctl.observe_waits(&[0.09, 0.09, 0.09]);
+        assert_eq!((ctl.admit_limit(), ctl.active()), (8, 1));
+        ctl.observe_waits(&[0.09]);
+        assert_eq!(ctl.admit_limit(), 4);
+        for _ in 0..8 {
+            ctl.observe_waits(&[0.09]);
+        }
+        assert_eq!(ctl.admit_limit(), 2, "floored at initial/8");
+
+        // p95 = 1 ms < 25 ms: additive increase (initial/4 = 4 a step)
+        // and the ladder climbs.
+        ctl.observe_waits(&[0.001]);
+        assert_eq!((ctl.admit_limit(), ctl.active()), (6, 0));
+        for _ in 0..100 {
+            ctl.observe_waits(&[0.001]);
+        }
+        assert_eq!(ctl.admit_limit(), 128, "capped at 8x the initial limit");
+
+        // Middle band (between lo and hi): limit and rung hold.
+        ctl.observe_waits(&[0.05]);
+        assert_eq!((ctl.admit_limit(), ctl.active()), (128, 0));
+    }
+
+    #[test]
+    fn no_budget_keeps_the_limit_fixed() {
+        let ctl = OverloadControl::new(
+            vec![rung("top"), rung("low")],
+            eager(OverloadPolicy {
+                initial_limit: 8,
+                clear_evals: 1,
+                ..OverloadPolicy::default()
+            }),
+        );
+        ctl.note_shed();
+        ctl.observe_waits(&[]);
+        ctl.observe_waits(&[]);
+        assert_eq!(ctl.admit_limit(), 8, "without a budget the limit never moves");
+    }
+
+    #[test]
+    fn breaker_force_pins_bottom_until_released() {
+        let ctl = OverloadControl::new(
+            vec![rung("top"), rung("mid"), rung("low")],
+            eager(OverloadPolicy { clear_evals: 1, ..OverloadPolicy::default() }),
+        );
+        assert!(ctl.degrade_for_breaker());
+        assert_eq!((ctl.active(), ctl.steps_down()), (2, 2));
+        assert!(ctl.breaker_forced());
+
+        // Clear windows do not climb while the breaker holds the pin.
+        for _ in 0..5 {
+            ctl.observe_waits(&[]);
+        }
+        assert_eq!(ctl.active(), 2);
+
+        ctl.on_breaker_closed();
+        ctl.observe_waits(&[]);
+        assert_eq!(ctl.active(), 1, "released: climbing resumes");
+
+        // A single rung has nothing to degrade to.
+        let single = OverloadControl::new(vec![rung("only")], OverloadPolicy::default());
+        assert!(!single.degrade_for_breaker());
+    }
+
+    #[test]
+    fn retry_hint_tracks_p95_with_budget_floor() {
+        let ctl = OverloadControl::new(
+            vec![rung("top")],
+            eager(OverloadPolicy {
+                budget: Some(Duration::from_millis(40)),
+                ..OverloadPolicy::default()
+            }),
+        );
+        assert_eq!(ctl.retry_after_ms(), 20, "idle: half the budget");
+        ctl.observe_waits(&[0.1, 0.1, 0.1]);
+        assert_eq!(ctl.retry_after_ms(), 200, "2x the measured p95");
+
+        let no_budget = OverloadControl::new(vec![rung("top")], OverloadPolicy::default());
+        assert_eq!(no_budget.retry_after_ms(), 25, "no budget: fixed floor");
+    }
+
+    #[test]
+    fn snapshot_reports_ladder_state() {
+        let ctl = OverloadControl::new(
+            vec![
+                Rung::new(Arc::new(Noop("a")), "fused-f32-w1-scalar".into(), None),
+                Rung::new(
+                    Arc::new(Noop("b")),
+                    "fused-i8-w1-scalar".into(),
+                    Some(ErrorCertificate { slope: 0.1, intercept: 0.0 }),
+                ),
+            ],
+            eager(OverloadPolicy::default()),
+        );
+        ctl.note_shed();
+        ctl.note_degraded();
+        let s = ctl.snapshot();
+        assert_eq!(s.get("rungs").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("active").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("active_label").unwrap().as_str(), Some("fused-i8-w1-scalar"));
+        assert_eq!(s.get("degraded").unwrap().as_bool(), Some(true));
+        assert_eq!(s.get("steps_down").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("degraded_served").unwrap().as_u64(), Some(1));
+        assert!(s.get("retry_after_ms").unwrap().as_u64().unwrap() > 0);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&mut [], 0.95), 0.0);
+        assert_eq!(percentile(&mut [3.0], 0.95), 3.0);
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut v, 0.95), 95.0);
+        assert_eq!(percentile(&mut v, 0.50), 50.0);
+    }
+}

@@ -67,6 +67,12 @@ pub struct RegistryConfig {
     /// Activation-sparsity skipping in promoted compiled engines
     /// (value-identical; off only for benchmarking/debugging).
     pub skip: bool,
+    /// Degradation ladder below the top variant, as the
+    /// [`LadderSpec`](super::overload::LadderSpec) grammar (e.g.
+    /// `"fused:i8"`). Empty = no ladder: overload sheds instead of
+    /// degrading. Every promoted or hot-swapped model gets a fresh
+    /// ladder built with the same workers/fast-mem/kernel/skip knobs.
+    pub ladder: String,
 }
 
 impl Default for RegistryConfig {
@@ -79,6 +85,7 @@ impl Default for RegistryConfig {
             fast_mem: 0,
             kernel: "auto".to_string(),
             skip: true,
+            ladder: String::new(),
         }
     }
 }
@@ -283,13 +290,13 @@ impl Registry {
                 // `was_active` never stops serving.
                 let info = entry.versions.get(&newest).expect("newest exists");
                 let built = self
-                    .build_variant(&name, &info.model)
-                    .and_then(|v| probe_variant(&v).map(|()| v));
+                    .build_rungs(&name, &info.model)
+                    .and_then(|v| probe_variant(&v[0]).map(|()| v));
                 match built {
-                    Ok(variant) => {
+                    Ok(rungs) => {
                         let old_bytes =
                             entry.versions.get(&was_active).map(|v| v.bytes).unwrap_or(0);
-                        swap = Some((variant, info.bytes as i64 - old_bytes as i64));
+                        swap = Some((rungs, info.bytes as i64 - old_bytes as i64));
                     }
                     Err(e) => {
                         let bad = entry
@@ -309,8 +316,8 @@ impl Registry {
             entry.active = newest;
         }
         self.inner.deploys.fetch_add(1, Ordering::Relaxed);
-        if let Some((variant, delta)) = swap {
-            self.inner.server.deploy(variant);
+        if let Some((rungs, delta)) = swap {
+            self.inner.server.deploy_ladder(rungs);
             st.resident = (st.resident as i64 + delta).max(0) as u64;
             self.inner.swaps.fetch_add(1, Ordering::Relaxed);
         }
@@ -333,13 +340,20 @@ impl Registry {
         }
     }
 
-    fn build_variant(
+    /// Build the full deploy ladder for a model: the configured top
+    /// variant first, then one rung per `ladder` spec entry, all sharing
+    /// the workers/fast-mem/kernel/skip knobs. With an empty `ladder`
+    /// this is a single-variant vector (no degradation, same as before).
+    fn build_rungs(
         &self,
         name: &str,
         model: &Model,
-    ) -> anyhow::Result<super::router::ModelVariant> {
+    ) -> anyhow::Result<Vec<super::router::ModelVariant>> {
         let c = &self.inner.config;
-        Ok(model.variant_with_opts(
+        let spec = super::overload::LadderSpec::parse(&c.ladder)
+            .map_err(|e| anyhow::anyhow!("bad ladder spec {:?}: {e}", c.ladder))?;
+        let mut rungs = Vec::with_capacity(1 + spec.rungs.len());
+        rungs.push(model.variant_with_opts(
             name,
             &c.schedule,
             &c.precision,
@@ -347,7 +361,19 @@ impl Registry {
             c.fast_mem,
             &c.kernel,
             c.skip,
-        )?)
+        )?);
+        for r in &spec.rungs {
+            rungs.push(model.variant_with_opts(
+                name,
+                &r.schedule,
+                &r.precision,
+                c.workers,
+                c.fast_mem,
+                &c.kernel,
+                c.skip,
+            )?);
+        }
+        Ok(rungs)
     }
 
     /// Record a hit and make sure the model is serving. Warm models are
@@ -370,10 +396,10 @@ impl Registry {
             .versions
             .get(&entry.active)
             .ok_or_else(|| anyhow::anyhow!("model {model:?} has no active version"))?;
-        let variant = self.build_variant(model, &info.model)?;
+        let rungs = self.build_rungs(model, &info.model)?;
         let bytes = info.bytes;
         entry.tier = Tier::Hot;
-        self.inner.server.deploy(variant);
+        self.inner.server.deploy_ladder(rungs);
         st.resident += bytes;
         self.inner.promotions.fetch_add(1, Ordering::Relaxed);
 
@@ -582,6 +608,36 @@ mod tests {
             Some("hot")
         );
         assert_eq!(snap.path(&["registry", "promotions"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn ladder_config_promotes_with_degraded_rungs() {
+        let dir = tmpdir("ladder");
+        write_artifact(&dir, "a.sfb", 1);
+        let reg = Registry::new(
+            RegistryConfig { ladder: "fused:i8".to_string(), ..Default::default() },
+            ServerConfig::default(),
+        );
+        reg.scan_dir(&dir).unwrap();
+        reg.ensure_hot("a").unwrap();
+        let h = reg.handle();
+        let (active, n_rungs, label) = h.ladder_state("a").unwrap();
+        assert_eq!((active, n_rungs), (0, 2), "top tier serving, i8 rung standing by");
+        assert!(label.contains("fused-f32"), "active label is the top rung, got {label}");
+
+        // Hot-swapping a new version rebuilds a fresh ladder at the top.
+        let v2 = write_artifact(&dir, "a@2.sfb", 5);
+        reg.deploy_file(&v2).unwrap();
+        assert_eq!(h.ladder_state("a").map(|(a, n, _)| (a, n)), Some((0, 2)));
+
+        // A malformed ladder spec fails promotion cleanly.
+        let reg2 = Registry::new(
+            RegistryConfig { ladder: "fused".to_string(), ..Default::default() },
+            ServerConfig::default(),
+        );
+        reg2.scan_dir(&dir).unwrap();
+        let err = reg2.ensure_hot("a").unwrap_err().to_string();
+        assert!(err.contains("bad ladder spec"), "unexpected error: {err}");
     }
 
     #[test]

@@ -38,6 +38,17 @@ pub struct Response {
     /// Portion of the latency spent queued (enqueue → batch dispatch);
     /// the remainder is compute + reply delivery.
     pub queue_wait_secs: f64,
+    /// True when the overload control plane served this request from a
+    /// ladder rung below the top tier (see `coordinator::overload`).
+    /// Always false when no ladder is configured or the ladder sits at
+    /// the top — those paths are bit-identical to a ladder-less server.
+    pub degraded: bool,
+    /// Certified accuracy bound vs the model's f32 reference for
+    /// degraded responses from a quantized rung:
+    /// `max |output - f32_output| <= error_bound` (up to float rounding
+    /// slack). `None` on non-degraded responses and on degraded rungs
+    /// without a certificate (e.g. an f32 fallback rung).
+    pub error_bound: Option<f32>,
 }
 
 /// Serving errors surfaced to clients.

@@ -7,6 +7,7 @@
 
 use crate::exec::fused::{FusionStats, SkipCounters};
 use crate::exec::parallel::{ParallelEngine, ShardTimings};
+use crate::exec::quant::ErrorCertificate;
 use crate::exec::simd::{self, Kernel};
 use crate::exec::tiled::TiledStats;
 use crate::exec::Engine;
@@ -176,6 +177,11 @@ pub struct ModelVariant {
     /// One-line human description of the serving engine (set by
     /// [`ModelVariant::build`]; empty for hand-assembled variants).
     pub summary: String,
+    /// Deploy-time certified accuracy bound vs the f32 reference when
+    /// the serving engine is quantized (`precision == "i8"`). The
+    /// overload control plane stamps `bound_for(‖x‖∞)` on degraded
+    /// responses; `None` for exact (f32) engines.
+    pub error_cert: Option<ErrorCertificate>,
 }
 
 impl ModelVariant {
@@ -194,6 +200,7 @@ impl ModelVariant {
             kernel: "scalar",
             workers: 1,
             summary: String::new(),
+            error_cert: None,
         }
     }
 
@@ -408,6 +415,12 @@ impl ModelVariant {
         if let Some(c) = skips {
             variant = variant.with_skip_counters(c);
         }
+        if prec_tag == "i8" {
+            // Every i8 engine (interp, fused, tiled) is bit-identical to
+            // the quant interpreter over the same compressed stream, so
+            // one deploy-time certificate covers the whole i8 column.
+            variant.error_cert = Some(QuantStreamProgram::compress(net, order).certificate());
+        }
         variant.summary = summary;
         Ok(variant)
     }
@@ -481,6 +494,15 @@ impl ModelVariant {
     /// variants default to "scalar".
     pub fn with_kernel_tag(mut self, kernel: &'static str) -> ModelVariant {
         self.kernel = kernel;
+        self
+    }
+
+    /// Attach the deploy-time certified accuracy bound of a quantized
+    /// serving engine ([`ModelVariant::build`] sets it for every i8
+    /// point; artifact-backed loaders attach it from the stored quant
+    /// program).
+    pub fn with_error_cert(mut self, cert: ErrorCertificate) -> ModelVariant {
+        self.error_cert = Some(cert);
         self
     }
 
@@ -737,6 +759,12 @@ mod tests {
 
         let v = ModelVariant::build("m", &net, &order, "interp", "i8", 1, 0, "auto").unwrap();
         assert_eq!((v.label().as_str(), v.precision), ("interp-i8-w1-scalar", "i8"));
+        // Every i8 build carries the deploy-time accuracy certificate;
+        // exact f32 builds do not.
+        let cert = v.error_cert.expect("i8 build carries an error certificate");
+        assert!(cert.slope >= 0.0 && cert.intercept >= 0.0);
+        let f = ModelVariant::build("m", &net, &order, "interp", "f32", 1, 0, "auto").unwrap();
+        assert!(f.error_cert.is_none());
 
         let v = ModelVariant::build("m", &net, &order, "fused", "f32", 3, 0, "scalar").unwrap();
         assert_eq!(v.label(), "fused-f32-w3-scalar");

@@ -20,17 +20,30 @@
 //! (or a hung inference past the wall-clock cap) open it, submissions
 //! shed with [`InferenceError::Unhealthy`] while open, and a half-open
 //! probe request closes it again once the engine recovers.
+//!
+//! Finally, the pipeline is overload-resilient ([`super::overload`]):
+//! each model can be deployed with a degradation ladder
+//! ([`Server::deploy_ladder`]) — an ordered list of pre-built variants
+//! (e.g. `fused-f32 → fused-i8`) whose controller steps to a cheaper
+//! rung under pressure (serving `degraded` responses with a certified
+//! error bound) and probes back up when it clears, while the admit
+//! limit self-tunes (AIMD) against the deadline budget. A model whose
+//! breaker opens degrades to its bottom rung instead of shedding when
+//! it has one. [`ServerHandle::drain`] gives a graceful shutdown:
+//! admission stops, queues flush, in-flight batches complete, and the
+//! final metrics snapshot is returned.
 
 use super::batcher::{next_batch, BatchPolicy, QueueMsg};
-use super::breaker::{Breaker, BreakerPolicy};
+use super::breaker::{Breaker, BreakerPolicy, BreakerState};
 use super::metrics::Metrics;
+use super::overload::{OverloadControl, OverloadPolicy, Rung};
 use super::request::{InferenceError, Request, Response};
 use super::router::Router;
 use crate::exec::batch::BatchMatrix;
 use super::router::ModelVariant;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -42,7 +55,11 @@ pub struct AdmissionPolicy {
     /// model; submissions beyond it are shed with
     /// [`InferenceError::QueueFull`]. `0` = unbounded (no shedding).
     /// The check is advisory under concurrency: `k` simultaneous
-    /// submitters can overshoot by at most `k − 1`.
+    /// submitters can overshoot by at most `k − 1`. When a
+    /// `default_deadline` budget is also set this is only the *initial*
+    /// limit: each model's overload controller retunes it (AIMD against
+    /// the measured queue-wait p95, within `[max_queue/8, max_queue*8]`;
+    /// see [`super::overload`]). Without a budget it stays fixed.
     pub max_queue: usize,
     /// Default completion deadline applied at admission when the request
     /// carries none. `None` = no deadline.
@@ -61,13 +78,14 @@ pub struct ServerConfig {
 
 /// Per-model queue endpoint shared by the server and its handles: the
 /// sender plus the live queue-depth counter admission control reads,
-/// plus the model's circuit breaker.
+/// plus the model's circuit breaker and overload controller.
 #[derive(Clone)]
 struct ModelQueue {
     tx: mpsc::Sender<QueueMsg>,
     depth: Arc<AtomicUsize>,
     n_inputs: usize,
     breaker: Arc<Breaker>,
+    ctl: Arc<OverloadControl>,
 }
 
 /// A running server. Models can be deployed and undeployed while it
@@ -82,6 +100,10 @@ pub struct Server {
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     threads: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Set by [`ServerHandle::drain`]: admission answers `ShuttingDown`.
+    draining: Arc<AtomicBool>,
+    /// Dispatcher threads that have not yet exited (drain polls it).
+    live_dispatchers: Arc<AtomicUsize>,
 }
 
 impl Server {
@@ -96,6 +118,8 @@ impl Server {
             metrics: Arc::new(Metrics::new()),
             next_id: Arc::new(AtomicU64::new(1)),
             threads: Mutex::new(Vec::new()),
+            draining: Arc::new(AtomicBool::new(false)),
+            live_dispatchers: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -120,27 +144,71 @@ impl Server {
     /// of them before draining out. No request is dropped or misrouted
     /// during a swap.
     pub fn deploy(&self, variant: ModelVariant) {
-        let name = variant.name.clone();
-        let engine = Arc::clone(variant.route());
-        let engine_name = engine.name();
-        let n_inputs = engine.n_inputs();
-        if let Some(sink) = &variant.shard_timings {
+        self.deploy_ladder(vec![variant]);
+    }
+
+    /// Deploy (or hot-swap) a model with a degradation ladder: the first
+    /// variant is the top tier (it alone defines the served-path
+    /// semantics when the ladder never engages — bit-identical to a
+    /// plain [`Server::deploy`] of that variant); later variants are
+    /// progressively cheaper rungs the overload controller steps down to
+    /// under pressure. A single-element ladder is exactly `deploy`.
+    /// Ladder state is per deploy generation, like the breaker: a
+    /// hot-swap starts the new generation at the top tier.
+    ///
+    /// Panics if `variants` is empty or the rungs disagree on input
+    /// width (they must be builds of the same model).
+    pub fn deploy_ladder(&self, variants: Vec<ModelVariant>) {
+        assert!(!variants.is_empty(), "a ladder needs at least a top-tier variant");
+        let top = &variants[0];
+        let name = top.name.clone();
+        let n_inputs = top.route().n_inputs();
+        if let Some(sink) = &top.shard_timings {
             self.metrics.link_shard_timings(&name, Arc::clone(sink));
         }
-        if let Some(stats) = &variant.fusion {
+        if let Some(stats) = &top.fusion {
             self.metrics.link_fusion_stats(&name, stats.clone());
         }
-        if let Some(stats) = &variant.tiled {
+        if let Some(stats) = &top.tiled {
             self.metrics.link_tiled_stats(&name, stats.clone());
         }
-        if let Some(counters) = &variant.skips {
+        if let Some(counters) = &top.skips {
             self.metrics.link_skip_counters(&name, Arc::clone(counters));
         }
-        self.metrics.link_kernel(&name, variant.kernel);
+        self.metrics.link_kernel(&name, top.kernel);
         // A fresh breaker per deploy: the new engine generation starts
         // healthy regardless of the old one's fault history.
         let breaker = Arc::new(Breaker::new(self.breaker_policy));
         self.metrics.link_breaker(&name, Arc::clone(&breaker));
+
+        let rungs: Vec<Rung> = variants
+            .iter()
+            .map(|v| {
+                let engine = Arc::clone(v.route());
+                assert_eq!(
+                    engine.n_inputs(),
+                    n_inputs,
+                    "ladder rung {:?} disagrees with the top tier on input width",
+                    v.label()
+                );
+                Rung::new(engine, v.label(), v.error_cert)
+            })
+            .collect();
+        let ctl = Arc::new(OverloadControl::new(
+            rungs,
+            OverloadPolicy {
+                initial_limit: self.admission.max_queue,
+                budget: self.admission.default_deadline,
+                ..OverloadPolicy::default()
+            },
+        ));
+        if ctl.has_ladder() {
+            // Only laddered models get a `ladder.<model>` snapshot
+            // section — ladder-less serving keeps its exact shape.
+            self.metrics.link_ladder(&name, Arc::clone(&ctl));
+        } else {
+            self.metrics.unlink_ladder(&name);
+        }
 
         let (tx, rx) = mpsc::channel::<QueueMsg>();
         let depth = Arc::new(AtomicUsize::new(0));
@@ -148,14 +216,18 @@ impl Server {
         let policy = self.batch;
         let thread_depth = Arc::clone(&depth);
         let thread_breaker = Arc::clone(&breaker);
+        let thread_ctl = Arc::clone(&ctl);
+        self.live_dispatchers.fetch_add(1, Ordering::SeqCst);
+        let live = Arc::clone(&self.live_dispatchers);
         let handle = thread::Builder::new()
             .name(format!("sparseflow-dispatch-{name}"))
             .spawn(move || {
+                // Decrements on every exit path, including an unwind.
+                let _guard = DispatcherGuard(live);
                 dispatch_loop(
                     rx,
                     thread_depth,
-                    engine,
-                    engine_name,
+                    thread_ctl,
                     n_inputs,
                     policy,
                     metrics,
@@ -169,7 +241,7 @@ impl Server {
             .queues
             .write()
             .unwrap()
-            .insert(name, ModelQueue { tx, depth, n_inputs, breaker });
+            .insert(name, ModelQueue { tx, depth, n_inputs, breaker, ctl });
         if let Some(old) = old {
             // Old dispatcher drains everything already enqueued, then
             // exits and releases its engine.
@@ -184,6 +256,7 @@ impl Server {
             Some(q) => {
                 let _ = q.tx.send(QueueMsg::Shutdown);
                 self.metrics.unlink_breaker(model);
+                self.metrics.unlink_ladder(model);
                 true
             }
             None => false,
@@ -196,6 +269,8 @@ impl Server {
             admission: self.admission,
             metrics: Arc::clone(&self.metrics),
             next_id: Arc::clone(&self.next_id),
+            draining: Arc::clone(&self.draining),
+            live_dispatchers: Arc::clone(&self.live_dispatchers),
         }
     }
 
@@ -237,8 +312,7 @@ impl Drop for Server {
 fn dispatch_loop(
     rx: mpsc::Receiver<QueueMsg>,
     depth: Arc<AtomicUsize>,
-    engine: Arc<dyn crate::exec::Engine>,
-    engine_name: &'static str,
+    ctl: Arc<OverloadControl>,
     n_inputs: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
@@ -248,7 +322,10 @@ fn dispatch_loop(
         let (batch, stop) = next_batch(&rx, &policy, &depth);
         let dispatched = Instant::now();
         // Validate inputs and deadlines; reject bad/expired ones without
-        // poisoning the batch.
+        // poisoning the batch. Every queue wait seen here — including
+        // the deadline misses, which are exactly the pressure signal —
+        // feeds the overload controller's window.
+        let mut waits: Vec<f64> = Vec::with_capacity(batch.len());
         let mut valid: Vec<Request> = Vec::with_capacity(batch.len());
         for req in batch {
             if req.input.len() != n_inputs {
@@ -265,14 +342,16 @@ fn dispatch_loop(
                 // histogram would make the queue-wait tail look healthy
                 // exactly when it is not.
                 metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
-                metrics
-                    .observe_queue_wait(dispatched.duration_since(req.enqueued).as_secs_f64());
+                let wait = dispatched.duration_since(req.enqueued).as_secs_f64();
+                metrics.observe_queue_wait(wait);
+                waits.push(wait);
                 let _ = req.reply.send(Err(InferenceError::DeadlineExceeded));
             } else {
                 valid.push(req);
             }
         }
         if valid.is_empty() {
+            ctl.observe_waits(&waits);
             if stop {
                 break;
             }
@@ -281,8 +360,18 @@ fn dispatch_loop(
         let bsize = valid.len();
         metrics.record_batch(bsize);
         for req in &valid {
-            metrics.observe_queue_wait(dispatched.duration_since(req.enqueued).as_secs_f64());
+            let wait = dispatched.duration_since(req.enqueued).as_secs_f64();
+            metrics.observe_queue_wait(wait);
+            waits.push(wait);
         }
+        ctl.observe_waits(&waits);
+
+        // Resolve the serving rung per batch: the controller may step
+        // the ladder between batches, never inside one.
+        let (rung_idx, rung) = ctl.serving();
+        let engine = &rung.engine;
+        let engine_name = rung.engine_name;
+        let degraded = rung_idx > 0;
 
         // Assemble n_inputs × bsize (row per input neuron).
         let mut x = BatchMatrix::zeros(n_inputs, bsize);
@@ -303,6 +392,12 @@ fn dispatch_loop(
         match result {
             Ok(y) => {
                 breaker.observe(false, compute_elapsed);
+                if ctl.breaker_forced() && breaker.state() == BreakerState::Closed {
+                    // The half-open probe (served on this degraded rung)
+                    // closed the breaker: release the forced pin so clear
+                    // windows can climb the ladder back to the top.
+                    ctl.on_breaker_closed();
+                }
                 metrics.observe_compute(compute_elapsed.as_secs_f64(), bsize);
                 let n_out = y.rows();
                 let now = Instant::now();
@@ -311,6 +406,10 @@ fn dispatch_loop(
                     let latency = now.duration_since(req.enqueued).as_secs_f64();
                     metrics.observe_latency(latency);
                     metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    if degraded {
+                        metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                        ctl.note_degraded();
+                    }
                     let _ = req.reply.send(Ok(Response {
                         id: req.id,
                         output,
@@ -318,6 +417,12 @@ fn dispatch_loop(
                         batch_size: bsize,
                         latency_secs: latency,
                         queue_wait_secs: dispatched.duration_since(req.enqueued).as_secs_f64(),
+                        degraded,
+                        error_bound: if degraded {
+                            rung.certificate.map(|c| c.bound_for(inf_norm(&req.input)))
+                        } else {
+                            None
+                        },
                     }));
                 }
             }
@@ -339,11 +444,12 @@ fn dispatch_loop(
                     redispatch_singly(
                         valid,
                         dispatched,
-                        &engine,
-                        engine_name,
+                        rung,
+                        degraded,
                         n_inputs,
                         &metrics,
                         &breaker,
+                        &ctl,
                     );
                 }
             }
@@ -354,17 +460,37 @@ fn dispatch_loop(
     }
 }
 
+/// `max |x_i|` — the input magnitude an [`super::overload::Rung`]'s
+/// deploy-time [`crate::exec::quant::ErrorCertificate`] is evaluated at.
+fn inf_norm(input: &[f32]) -> f32 {
+    input.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Decrements the live-dispatcher count when the dispatcher thread
+/// exits (normally or by unwind) — [`ServerHandle::drain`] polls it.
+struct DispatcherGuard(Arc<AtomicUsize>);
+impl Drop for DispatcherGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Run each request of a panicked batch alone under `catch_unwind` (see
-/// the unwind-safety note on [`dispatch_loop`]).
+/// the unwind-safety note on [`dispatch_loop`]). Sticks to the rung the
+/// batch was dispatched on so all of a batch's replies come from one
+/// engine generation and tier.
+#[allow(clippy::too_many_arguments)]
 fn redispatch_singly(
     requests: Vec<Request>,
     dispatched: Instant,
-    engine: &Arc<dyn crate::exec::Engine>,
-    engine_name: &'static str,
+    rung: &Rung,
+    degraded: bool,
     n_inputs: usize,
     metrics: &Metrics,
     breaker: &Breaker,
+    ctl: &OverloadControl,
 ) {
+    let engine_name = rung.engine_name;
     for req in requests {
         let mut x = BatchMatrix::zeros(n_inputs, 1);
         for (row, &v) in req.input.iter().enumerate() {
@@ -372,7 +498,7 @@ fn redispatch_singly(
         }
         let compute_start = Instant::now();
         breaker.begin_inference();
-        let result = catch_unwind(AssertUnwindSafe(|| engine.infer(&x)));
+        let result = catch_unwind(AssertUnwindSafe(|| rung.engine.infer(&x)));
         let compute_elapsed = compute_start.elapsed();
         match result {
             Ok(y) => {
@@ -382,6 +508,10 @@ fn redispatch_singly(
                 let latency = req.enqueued.elapsed().as_secs_f64();
                 metrics.observe_latency(latency);
                 metrics.responses.fetch_add(1, Ordering::Relaxed);
+                if degraded {
+                    metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                    ctl.note_degraded();
+                }
                 let _ = req.reply.send(Ok(Response {
                     id: req.id,
                     output,
@@ -389,6 +519,12 @@ fn redispatch_singly(
                     batch_size: 1,
                     latency_secs: latency,
                     queue_wait_secs: dispatched.duration_since(req.enqueued).as_secs_f64(),
+                    degraded,
+                    error_bound: if degraded {
+                        rung.certificate.map(|c| c.bound_for(inf_norm(&req.input)))
+                    } else {
+                        None
+                    },
                 }));
             }
             Err(_) => {
@@ -411,6 +547,8 @@ pub struct ServerHandle {
     admission: AdmissionPolicy,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
+    live_dispatchers: Arc<AtomicUsize>,
 }
 
 impl ServerHandle {
@@ -426,14 +564,20 @@ impl ServerHandle {
 
     /// Submit with an explicit deadline budget (overrides the server's
     /// default; `None` falls back to it). Sheds immediately with
-    /// [`InferenceError::QueueFull`] when the model's queue is at
-    /// `max_queue`.
+    /// [`InferenceError::QueueFull`] when the model's queue is at its
+    /// admit limit (the configured `max_queue`, retuned by the overload
+    /// controller when a deadline budget is set).
     pub fn submit_with_deadline(
         &self,
         model: &str,
         input: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<mpsc::Receiver<Result<Response, InferenceError>>, InferenceError> {
+        // Draining: admission is closed for good, only queued/in-flight
+        // work completes.
+        if self.draining.load(Ordering::Relaxed) {
+            return Err(InferenceError::ShuttingDown);
+        }
         // Hold the read lock across the send: a concurrent hot-swap
         // (write lock) can then only happen before or after the whole
         // lookup+enqueue, never between — so a request never lands on a
@@ -443,15 +587,24 @@ impl ServerHandle {
             .get(model)
             .ok_or_else(|| InferenceError::UnknownModel(model.to_string()))?;
         // Circuit breaker first: queueing behind an unhealthy (or
-        // wedged) engine is doomed work regardless of queue depth.
-        if !queue.breaker.admit() {
+        // wedged) engine is doomed work regardless of queue depth. A
+        // model with a degradation ladder steps to its bottom rung
+        // instead of shedding — the half-open probe (and everything
+        // until the breaker closes) is served on the cheapest engine.
+        if !queue.breaker.admit() && !queue.ctl.degrade_for_breaker() {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            queue.ctl.note_shed();
             return Err(InferenceError::Unhealthy { model: model.to_string() });
         }
-        if self.admission.max_queue > 0 {
+        // Adaptive admission: the limit starts at the configured
+        // `max_queue` and, when a deadline budget exists, self-tunes
+        // (AIMD on measured queue-wait p95). 0 = unbounded, as before.
+        let limit = queue.ctl.admit_limit();
+        if limit > 0 {
             let cur = queue.depth.load(Ordering::Relaxed);
-            if cur >= self.admission.max_queue {
+            if cur >= limit {
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                queue.ctl.note_shed();
                 return Err(InferenceError::QueueFull { depth: cur });
             }
         }
@@ -514,6 +667,59 @@ impl ServerHandle {
 
     pub fn models(&self) -> Vec<String> {
         self.queues.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Suggested client backoff for this model right now, in
+    /// milliseconds: the breaker's remaining cooldown when it is open,
+    /// otherwise the overload controller's estimate from the measured
+    /// queue-wait p95. The TCP front-end stamps this on shed replies as
+    /// `retry_after_ms`.
+    pub fn retry_after_ms(&self, model: &str) -> Option<u64> {
+        let queues = self.queues.read().unwrap();
+        let q = queues.get(model)?;
+        Some(match q.breaker.retry_after() {
+            Some(cooldown) => (cooldown.as_millis() as u64).max(1),
+            None => q.ctl.retry_after_ms(),
+        })
+    }
+
+    /// Degradation-ladder state: `(active_rung, n_rungs, active_label)`.
+    /// `active_rung` 0 is the top tier; `None` for unknown models.
+    pub fn ladder_state(&self, model: &str) -> Option<(usize, usize, String)> {
+        let queues = self.queues.read().unwrap();
+        let q = queues.get(model)?;
+        let (active, rung) = q.ctl.serving();
+        Some((active, q.ctl.n_rungs(), rung.label.clone()))
+    }
+
+    /// Graceful drain: stop admitting (later submissions get
+    /// [`InferenceError::ShuttingDown`]), flush every model's queue —
+    /// already-admitted requests are still answered, served or shed by
+    /// deadline as usual — wait for all dispatcher threads to exit
+    /// (in-flight batches complete; bounded by `timeout`), and return
+    /// the final metrics snapshot. Idempotent; `sparseflow serve` calls
+    /// this on SIGINT/SIGTERM.
+    pub fn drain(&self, timeout: Duration) -> crate::util::json::Json {
+        self.draining.store(true, Ordering::SeqCst);
+        // Clone the senders out so the read lock is not held while
+        // dispatchers drain (undeploy/deploy take the write lock).
+        let txs: Vec<mpsc::Sender<QueueMsg>> = self
+            .queues
+            .read()
+            .unwrap()
+            .values()
+            .map(|q| q.tx.clone())
+            .collect();
+        for tx in txs {
+            // FIFO channel: the sentinel lands behind everything already
+            // admitted, so the dispatcher answers all of it, then exits.
+            let _ = tx.send(QueueMsg::Shutdown);
+        }
+        let deadline = Instant::now() + timeout;
+        while self.live_dispatchers.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        self.metrics.snapshot()
     }
 }
 
@@ -597,6 +803,8 @@ mod tests {
         assert_eq!(r.engine, "doubler");
         assert!(r.latency_secs >= 0.0);
         assert!(r.queue_wait_secs >= 0.0 && r.queue_wait_secs <= r.latency_secs);
+        assert!(!r.degraded, "ladder-less serving is never degraded");
+        assert_eq!(r.error_bound, None);
     }
 
     #[test]
@@ -1174,5 +1382,147 @@ mod tests {
         // The slow request itself still completes (it was admitted).
         let r = inflight.recv().unwrap().expect("slow request still served");
         assert_eq!(r.output, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn breaker_open_with_ladder_degrades_instead_of_shedding() {
+        let down = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let server = Server::start_dynamic(ServerConfig {
+            breaker: BreakerPolicy {
+                fault_threshold: 2,
+                cooldown: Duration::from_secs(60),
+                hang_cap: None,
+            },
+            ..Default::default()
+        });
+        server.deploy_ladder(vec![
+            ModelVariant::new("m", Arc::new(Flaky(Arc::clone(&down)))),
+            ModelVariant::new("m", Arc::new(Doubler)),
+        ]);
+        let h = server.handle();
+        for _ in 0..2 {
+            assert_eq!(
+                h.infer("m", vec![1.0; 3]).unwrap_err(),
+                InferenceError::EngineFault { engine: "flaky" }
+            );
+        }
+        // Breaker open (cooldown 60 s — no probe would be admitted), but
+        // the ladder degrades to the bottom rung instead of shedding.
+        let r = h.infer("m", vec![2.0; 3]).expect("ladder absorbs the open breaker");
+        assert_eq!(r.engine, "doubler");
+        assert_eq!(r.output, vec![4.0; 3]);
+        assert!(r.degraded, "below-top rung responses are flagged");
+        assert_eq!(r.error_bound, None, "f32 fallback rung has no certificate");
+        let s = h.metrics_snapshot();
+        assert_eq!(s.get("shed").unwrap().as_u64(), Some(0), "nothing shed");
+        assert_eq!(s.get("degraded").unwrap().as_u64(), Some(1));
+        assert_eq!(s.path(&["ladder", "m", "active"]).unwrap().as_u64(), Some(1));
+        assert_eq!(s.path(&["ladder", "m", "degraded"]).unwrap().as_bool(), Some(true));
+        assert_eq!(h.ladder_state("m").unwrap().0, 1);
+
+        // That success closed the breaker (late-success rule) and
+        // released the forced pin; once the top engine is healthy the
+        // ladder climbs back and serves undegraded, bit-identical to a
+        // ladder-less deploy of the top tier.
+        down.store(false, Ordering::SeqCst);
+        let top_deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let r = h.infer("m", vec![3.0; 3]).expect("served during recovery");
+            if r.engine == "flaky" && !r.degraded {
+                assert_eq!(r.output, vec![6.0; 3]);
+                break;
+            }
+            assert!(Instant::now() < top_deadline, "ladder must recover to the top tier");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(h.ladder_state("m").unwrap().0, 0);
+    }
+
+    #[test]
+    fn degraded_quant_rung_carries_certified_bound() {
+        use crate::ffnn::generate::{random_mlp, MlpSpec};
+        use crate::ffnn::topo::two_optimal_order;
+        use crate::util::rng::Pcg64;
+
+        let mut rng = Pcg64::seed_from(0x0DE6);
+        let net = random_mlp(&MlpSpec::new(3, 16, 0.4), &mut rng);
+        let order = two_optimal_order(&net);
+        let top = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "scalar").unwrap();
+        let reference = Arc::clone(top.route());
+        let low = ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0, "scalar").unwrap();
+        assert!(low.error_cert.is_some(), "i8 builds carry a deploy-time certificate");
+        let server = Server::start_dynamic(ServerConfig::default());
+        server.deploy_ladder(vec![top, low]);
+        let h = server.handle();
+
+        // Top tier first: bit-identical to the f32 engine, unflagged.
+        let input: Vec<f32> = (0..net.n_inputs()).map(|i| (i as f32 * 0.37).sin()).collect();
+        let r = h.infer("m", input.clone()).unwrap();
+        assert!(!r.degraded);
+        let mut x = BatchMatrix::zeros(net.n_inputs(), 1);
+        for (row, &v) in input.iter().enumerate() {
+            x.row_mut(row)[0] = v;
+        }
+        let y = reference.infer(&x);
+        let expected: Vec<f32> = (0..y.rows()).map(|r| y.row(r)[0]).collect();
+        assert_eq!(r.output, expected, "top tier is bit-identical to f32");
+
+        // Force the bottom rung (as the controller would under
+        // pressure): the degraded reply carries the certified bound and
+        // honors it against the f32 reference.
+        {
+            let queues = h.queues.read().unwrap();
+            assert!(queues.get("m").unwrap().ctl.degrade_for_breaker());
+        }
+        let r = h.infer("m", input.clone()).unwrap();
+        assert!(r.degraded);
+        assert_eq!(r.engine, "quant-fused-stream");
+        let bound = r.error_bound.expect("quant rung responses carry the certified bound");
+        assert!(bound >= 0.0 && bound.is_finite());
+        for (got, want) in r.output.iter().zip(&expected) {
+            assert!(
+                (got - want).abs() <= bound * 1.01 + 1e-4,
+                "degraded output within certified bound: |{got} - {want}| > {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_completes_inflight_flushes_queues_and_stops_admission() {
+        let mut router = Router::new();
+        router.register(ModelVariant::new(
+            "d",
+            Arc::new(SlowDoubler(Duration::from_millis(10))),
+        ));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        let pending: Vec<_> =
+            (0..8).map(|i| h.submit("d", vec![i as f32, 0.0, 0.0]).unwrap()).collect();
+        let snapshot = h.drain(Duration::from_secs(30));
+        // Everything admitted before the drain was answered — queues
+        // flushed, in-flight batches completed, nothing dropped.
+        for (i, rx) in pending.into_iter().enumerate() {
+            let r = rx.recv().expect("drained request answered").unwrap();
+            assert_eq!(r.output[0], 2.0 * i as f32);
+        }
+        assert_eq!(snapshot.get("responses").unwrap().as_u64(), Some(8));
+        assert_eq!(snapshot.get("errors").unwrap().as_u64(), Some(0));
+        // Admission is closed for good, and drain is idempotent.
+        assert_eq!(
+            h.submit("d", vec![0.0; 3]).unwrap_err(),
+            InferenceError::ShuttingDown
+        );
+        let again = h.drain(Duration::from_secs(1));
+        assert_eq!(again.get("responses").unwrap().as_u64(), Some(8));
     }
 }

@@ -16,12 +16,22 @@
 //!     per-model circuit-breaker state
 //!   ← `{"ok": true, "output": [...], "engine": "...",
 //!      "latency_ms": ..., "queue_wait_ms": ...}`
+//!   ← `{"ok": true, ..., "degraded": true, "error_bound": ...}` served
+//!     from a degradation-ladder rung below the top tier (see the
+//!     README's "Overload semantics"); `error_bound` — present when the
+//!     rung is quantized — certifies
+//!     `max |output - f32_output| <= error_bound`. Both fields are
+//!     omitted (not `false`/`null`) on non-degraded replies, so
+//!     ladder-less replies are byte-identical to previous releases.
 //!   ← `{"ok": false, "error": "..."}`               malformed request
-//!   ← `{"ok": false, "error": "...", "shed": true}` load shed (queue
-//!     full or deadline missed) — back off and retry
-//!   ← `{"ok": false, "error": "...", "shed": true, "unhealthy": true}`
-//!     the model's circuit breaker is open — back off for at least the
-//!     breaker cooldown (see the README's "Failure semantics")
+//!   ← `{"ok": false, "error": "...", "shed": true, "retry_after_ms": N}`
+//!     load shed (queue full or deadline missed) — back off ~N ms
+//!     (derived from the overload controller's measured queue-wait p95)
+//!     and retry
+//!   ← `{"ok": false, "error": "...", "shed": true, "unhealthy": true,
+//!      "retry_after_ms": N}` the model's circuit breaker is open — N
+//!     covers the remaining breaker cooldown (see the README's "Failure
+//!     semantics")
 //!
 //! Every error is answered on the same connection; the connection stays
 //! usable afterwards. Lines longer than [`MAX_LINE_BYTES`] are rejected
@@ -354,20 +364,38 @@ fn process_line(line: &str, ctx: &Ctx) -> Json {
         }
     }
     match handle.infer_with_deadline(model, input, deadline) {
-        Ok(resp) => Json::obj()
-            .set("ok", true)
-            .set(
-                "output",
-                Json::Arr(resp.output.iter().map(|&v| Json::Num(v as f64)).collect()),
-            )
-            .set("engine", resp.engine)
-            .set("batch_size", resp.batch_size)
-            .set("latency_ms", resp.latency_secs * 1e3)
-            .set("queue_wait_ms", resp.queue_wait_secs * 1e3),
+        Ok(resp) => {
+            let mut j = Json::obj()
+                .set("ok", true)
+                .set(
+                    "output",
+                    Json::Arr(resp.output.iter().map(|&v| Json::Num(v as f64)).collect()),
+                )
+                .set("engine", resp.engine)
+                .set("batch_size", resp.batch_size)
+                .set("latency_ms", resp.latency_secs * 1e3)
+                .set("queue_wait_ms", resp.queue_wait_secs * 1e3);
+            // Only degraded replies grow the new fields: a server whose
+            // ladders never engage answers byte-identically to one with
+            // no ladders at all.
+            if resp.degraded {
+                j = j.set("degraded", true);
+                if let Some(bound) = resp.error_bound {
+                    j = j.set("error_bound", bound as f64);
+                }
+            }
+            j
+        }
         Err(e) => {
             let mut j = err_json(&e.to_string());
             if e.is_shed() {
                 j = j.set("shed", true);
+                // Backoff hint from controller state: breaker cooldown
+                // remainder when the model is unhealthy, 2x the measured
+                // queue-wait p95 otherwise.
+                if let Some(ms) = handle.retry_after_ms(model) {
+                    j = j.set("retry_after_ms", ms);
+                }
             }
             // Breaker-open sheds carry a second marker so clients can
             // distinguish "overloaded, retry soon" from "unhealthy,
@@ -530,6 +558,12 @@ mod tests {
             process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": 0.0001}"#, &handle);
         assert_eq!(late.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(late.get("shed").unwrap().as_bool(), Some(true));
+        assert!(
+            late.get("retry_after_ms").unwrap().as_u64().unwrap() >= 1,
+            "shed replies carry a backoff hint"
+        );
+        assert!(ok.get("degraded").is_none(), "served replies omit the degraded flag");
+        assert!(ok.get("error_bound").is_none());
         let off = process_line(r#"{"model": "m", "input": [1, 2], "deadline_ms": 0}"#, &handle);
         assert_eq!(off.get("ok").unwrap().as_bool(), Some(true), "0 = deadline off");
         let bad_deadline =
@@ -645,6 +679,84 @@ mod tests {
             h.path(&["health", "models", "m", "unhealthy"]).unwrap().as_bool(),
             Some(false)
         );
+    }
+
+    #[test]
+    fn degraded_and_retry_fields_over_the_wire() {
+        use crate::coordinator::breaker::BreakerPolicy;
+        use crate::coordinator::router::ModelVariant;
+        use crate::coordinator::server::{Server, ServerConfig};
+        use crate::exec::batch::BatchMatrix;
+        use crate::exec::Engine;
+        use std::sync::Arc;
+        struct Id;
+        impl Engine for Id {
+            fn infer(&self, x: &BatchMatrix) -> BatchMatrix {
+                x.clone()
+            }
+            fn name(&self) -> &'static str {
+                "id"
+            }
+            fn n_inputs(&self) -> usize {
+                2
+            }
+            fn n_outputs(&self) -> usize {
+                2
+            }
+        }
+        struct Boom;
+        impl Engine for Boom {
+            fn infer(&self, _: &BatchMatrix) -> BatchMatrix {
+                panic!("boom")
+            }
+            fn name(&self) -> &'static str {
+                "boom"
+            }
+            fn n_inputs(&self) -> usize {
+                2
+            }
+            fn n_outputs(&self) -> usize {
+                2
+            }
+        }
+        let server = Box::leak(Box::new(Server::start_dynamic(ServerConfig {
+            breaker: BreakerPolicy {
+                fault_threshold: 1,
+                cooldown: Duration::from_secs(60),
+                hang_cap: None,
+            },
+            ..Default::default()
+        })));
+        // "m" has a ladder below its (always-faulting) top tier; "solo"
+        // has the same top tier and nothing to degrade to.
+        server.deploy_ladder(vec![
+            ModelVariant::new("m", Arc::new(Boom)),
+            ModelVariant::new("m", Arc::new(Id)),
+        ]);
+        server.deploy(ModelVariant::new("solo", Arc::new(Boom)));
+        let ctx = Ctx { handle: server.handle(), registry: None };
+
+        // First hit faults (served on the top tier) and opens the breaker.
+        let fault = process_line(r#"{"model": "m", "input": [1, 2]}"#, &ctx);
+        assert_eq!(fault.get("ok").unwrap().as_bool(), Some(false));
+        assert!(fault.get("shed").is_none(), "a contained fault is not a shed");
+        // With the breaker open, the ladder serves degraded instead of
+        // shedding; the f32 fallback rung has no certificate, so no
+        // error_bound field.
+        let deg = process_line(r#"{"model": "m", "input": [1, 2]}"#, &ctx);
+        assert_eq!(deg.get("ok").unwrap().as_bool(), Some(true), "{deg:?}");
+        assert_eq!(deg.get("engine").unwrap().as_str(), Some("id"));
+        assert_eq!(deg.get("degraded").unwrap().as_bool(), Some(true));
+        assert!(deg.get("error_bound").is_none());
+
+        // The ladder-less model sheds Unhealthy with a breaker-derived
+        // backoff hint (cooldown 60 s).
+        let f = process_line(r#"{"model": "solo", "input": [1, 2]}"#, &ctx);
+        assert_eq!(f.get("ok").unwrap().as_bool(), Some(false));
+        let unhealthy = process_line(r#"{"model": "solo", "input": [1, 2]}"#, &ctx);
+        assert_eq!(unhealthy.get("unhealthy").unwrap().as_bool(), Some(true));
+        let hint = unhealthy.get("retry_after_ms").unwrap().as_u64().unwrap();
+        assert!((1..=60_000).contains(&hint), "cooldown-derived hint, got {hint}");
     }
 
     #[test]

@@ -1169,6 +1169,77 @@ pub fn output_error_bound(
     bound
 }
 
+/// Input-independent certified accuracy bound for a quantized program:
+/// `bound_for(‖x‖∞) = slope·‖x‖∞ + intercept` upper-bounds
+/// `max |quant_output - f32_output|` for **every** input with that
+/// infinity norm. Computed once at deploy time from the quant stream
+/// alone (no f32 reference pass), so the serving plane can stamp a
+/// certified bound on each degraded response without re-running the
+/// full-precision engine per request.
+///
+/// The certificate is necessarily looser than the per-input
+/// [`output_error_bound`] — it replaces the exact dequantization error
+/// `Δw = |w̃ - w|` with the worst case `scale/2` per group and the exact
+/// source values with a magnitude bound — but it is sound against the
+/// same real-arithmetic argument (compare with the usual float slack).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorCertificate {
+    /// Error growth per unit of input infinity norm.
+    pub slope: f32,
+    /// Input-independent error floor (from bias-fed magnitude terms).
+    pub intercept: f32,
+}
+
+impl ErrorCertificate {
+    /// Certified bound for inputs with `max |x_i| <= inf_norm`.
+    pub fn bound_for(&self, inf_norm: f32) -> f32 {
+        self.slope * inf_norm + self.intercept
+    }
+}
+
+impl QuantStreamProgram {
+    /// Build the deploy-time [`ErrorCertificate`] for this program.
+    ///
+    /// One walk over the decoded stream tracks, per neuron, affine
+    /// bounds in `t = ‖x‖∞`: a value-magnitude bound
+    /// `m_dst += (|w̃| + Δw)·m_src` seeded from `|bias|` (inputs: `t`
+    /// itself), and an error bound `e_dst += Δw·m_src + |w̃|·e_src`
+    /// exactly as in [`output_error_bound`] with `|value_src| ≤ m_src`.
+    /// Using `|w̃| + Δw ≥ |w|` keeps `m` a bound on the *f32* value;
+    /// ReLU is monotone below `m` and 1-Lipschitz for `e`, so neither
+    /// recursion is amplified. Sources are finished before first use
+    /// (topological stream order), so the running bounds are final at
+    /// use time.
+    pub fn certificate(&self) -> ErrorCertificate {
+        let n = self.n_neurons();
+        // (slope, intercept) pairs in t = ‖x‖∞ per neuron.
+        let mut mag = vec![(0.0f32, 0.0f32); n];
+        let mut err = vec![(0.0f32, 0.0f32); n];
+        for (v, m) in mag.iter_mut().enumerate() {
+            m.1 = self.biases[v].abs();
+        }
+        for &i in self.input_ids() {
+            mag[i as usize] = (1.0, 0.0);
+        }
+        for (i, op) in self.decode().iter().enumerate() {
+            let dw = 0.5 * self.groups[i / GROUP].scale.abs();
+            let wq = op.weight.abs();
+            let (src, dst) = (op.src as usize, op.dst as usize);
+            let (ms, es) = (mag[src], err[src]);
+            err[dst].0 += dw * ms.0 + wq * es.0;
+            err[dst].1 += dw * ms.1 + wq * es.1;
+            mag[dst].0 += (wq + dw) * ms.0;
+            mag[dst].1 += (wq + dw) * ms.1;
+        }
+        let mut cert = ErrorCertificate { slope: 0.0, intercept: 0.0 };
+        for &v in self.output_ids() {
+            cert.slope = cert.slope.max(err[v as usize].0);
+            cert.intercept = cert.intercept.max(err[v as usize].1);
+        }
+        cert
+    }
+}
+
 // ---------------------------------------------------------------------
 // Varint / zigzag codec
 // ---------------------------------------------------------------------
@@ -1373,6 +1444,41 @@ mod tests {
             assert!(
                 diff <= bound * 1.01 + 1e-4,
                 "seed {seed}: diff {diff} exceeds certified bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn deploy_time_certificate_dominates_per_input_bound() {
+        for seed in 0..4u64 {
+            let mut rng = Pcg64::seed_from(0xCE87 + seed);
+            let net = random_mlp(&MlpSpec::new(3, 20, 0.35), &mut rng);
+            let order = two_optimal_order(&net);
+            let stream = StreamingEngine::new(&net, &order);
+            let quant = QuantStreamEngine::new(&net, &order);
+            let cert = quant.program().certificate();
+            assert!(cert.slope.is_finite() && cert.slope >= 0.0);
+            assert!(cert.intercept.is_finite() && cert.intercept >= 0.0);
+
+            let x = BatchMatrix::random(net.n_inputs(), 5, &mut rng);
+            let mut inf_norm = 0.0f32;
+            for r in 0..x.rows() {
+                for &v in x.row(r) {
+                    inf_norm = inf_norm.max(v.abs());
+                }
+            }
+            let per_input = output_error_bound(stream.program(), quant.program(), &x);
+            let carried = cert.bound_for(inf_norm);
+            // The deploy-time affine certificate must dominate both the
+            // per-input certified bound and the observed deviation.
+            assert!(
+                carried * 1.01 + 1e-4 >= per_input,
+                "seed {seed}: certificate {carried} below per-input bound {per_input}"
+            );
+            let diff = stream.infer(&x).max_abs_diff(&quant.infer(&x));
+            assert!(
+                diff <= carried * 1.01 + 1e-4,
+                "seed {seed}: diff {diff} exceeds carried certificate {carried}"
             );
         }
     }

@@ -15,6 +15,14 @@
 //!   falls behind — the regime where bounded queues and deadline
 //!   shedding matter.
 //!
+//! Closed-loop clients speak the retry protocol: a shed reply
+//! (queue-full or breaker-open) is retried up to [`MAX_RETRIES`] times
+//! after sleeping the server's `retry_after_ms` hint, jittered through
+//! the client's seeded RNG — so backoff schedules are reproducible under
+//! a fixed seed. Deadline misses are not retried (the budget is spent).
+//! The report tallies `retried` (backoff retries issued) and `degraded`
+//! (served responses computed by a below-top ladder rung).
+//!
 //! Outcomes are tallied per request (served / shed / deadline-missed /
 //! engine-faulted / error) and summarized with exact nearest-rank
 //! percentiles of the end-to-end latency and its queue-wait component —
@@ -34,6 +42,15 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
+
+/// Closed-loop retry budget per request: shed replies are retried at
+/// most this many times before the shed is recorded as the outcome.
+pub const MAX_RETRIES: u32 = 3;
+
+/// Cap on one backoff sleep (ms): keeps seeded runs fast even when the
+/// server's `retry_after_ms` hint is large (e.g. a long breaker
+/// cooldown).
+pub const MAX_BACKOFF_MS: u64 = 100;
 
 /// A load spec that cannot be run. Returned (not panicked) so CLI
 /// callers can print a clean error: `--qps 0` used to trip an
@@ -176,6 +193,8 @@ struct Outcome {
     kind: OutcomeKind,
     latency_secs: f64,
     queue_wait_secs: f64,
+    /// Served by a below-top degradation rung (`Response::degraded`).
+    degraded: bool,
 }
 
 fn classify(res: Result<Response, InferenceError>) -> Outcome {
@@ -184,6 +203,7 @@ fn classify(res: Result<Response, InferenceError>) -> Outcome {
             kind: OutcomeKind::Served,
             latency_secs: r.latency_secs,
             queue_wait_secs: r.queue_wait_secs,
+            degraded: r.degraded,
         },
         Err(e) => Outcome {
             kind: match e {
@@ -197,6 +217,7 @@ fn classify(res: Result<Response, InferenceError>) -> Outcome {
             },
             latency_secs: 0.0,
             queue_wait_secs: 0.0,
+            degraded: false,
         },
     }
 }
@@ -262,6 +283,12 @@ pub struct LoadReport {
     /// engine panicked even on individual re-dispatch).
     pub faulted: usize,
     pub errors: usize,
+    /// Served requests answered by a below-top degradation rung
+    /// (subset of `served`).
+    pub degraded: usize,
+    /// Backoff retries issued by closed-loop clients after shed replies
+    /// (attempts beyond the first submission; 0 for open loop).
+    pub retried: usize,
     /// Server-side `engine_faults` counter delta across the run: counts
     /// panicked engine *invocations*, including batch panics that were
     /// fully recovered by re-dispatch (and so appear as served
@@ -284,6 +311,7 @@ impl LoadReport {
         mode: &str,
         seed: u64,
         outcomes: &[Outcome],
+        retried: usize,
         elapsed_secs: f64,
     ) -> LoadReport {
         let count = |k: OutcomeKind| outcomes.iter().filter(|o| o.kind == k).count();
@@ -301,6 +329,8 @@ impl LoadReport {
             deadline_misses: count(OutcomeKind::DeadlineMiss),
             faulted: count(OutcomeKind::EngineFault),
             errors: count(OutcomeKind::Error),
+            degraded: served.iter().filter(|o| o.degraded).count(),
+            retried,
             // Filled in by `run` from the server metrics delta; the
             // outcome list alone cannot see recovered batch panics.
             engine_faults: 0,
@@ -322,6 +352,8 @@ impl LoadReport {
             .set("deadline_misses", self.deadline_misses)
             .set("faulted", self.faulted)
             .set("errors", self.errors)
+            .set("degraded", self.degraded)
+            .set("retried", self.retried)
             .set("engine_faults", self.engine_faults)
             .set("elapsed_secs", self.elapsed_secs)
             .set("throughput_rps", self.throughput_rps)
@@ -332,7 +364,8 @@ impl LoadReport {
     /// One fixed-width table row (pair with [`LoadReport::table_header`]).
     pub fn table_row(&self) -> String {
         format!(
-            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>6} {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} \
+             {:>10.0} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
             self.label,
             self.mode,
             self.issued,
@@ -340,6 +373,8 @@ impl LoadReport {
             self.shed,
             self.deadline_misses,
             self.engine_faults,
+            self.degraded,
+            self.retried,
             self.throughput_rps,
             self.latency_ms.p50,
             self.latency_ms.p99,
@@ -350,7 +385,8 @@ impl LoadReport {
 
     pub fn table_header() -> String {
         format!(
-            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>6} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            "{:<18} {:<12} {:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} \
+             {:>10} {:>9} {:>9} {:>9} {:>9}",
             "variant",
             "mode",
             "issued",
@@ -358,6 +394,8 @@ impl LoadReport {
             "shed",
             "miss",
             "fault",
+            "degr",
+            "retry",
             "rps",
             "lat p50",
             "lat p99",
@@ -428,9 +466,14 @@ fn run_closed(
         None
     };
     let worker_ids: Vec<usize> = (0..clients).collect();
-    let per_worker: Vec<Vec<Outcome>> =
-        crate::util::threadpool::par_map(clients, &worker_ids, |_| {
+    let per_worker: Vec<(Vec<Outcome>, usize)> =
+        crate::util::threadpool::par_map(clients, &worker_ids, |&w| {
             let mut mine = Vec::new();
+            let mut retried = 0usize;
+            // Per-client backoff RNG: jitter schedules are reproducible
+            // under a fixed workload seed.
+            let mut rng =
+                Pcg64::seed_from(spec.seed ^ (w as u64).wrapping_mul(0xD134_2543_DE82_EF95));
             loop {
                 if cap.is_some_and(|c| start.elapsed() >= c) {
                     break;
@@ -439,15 +482,50 @@ fn run_closed(
                 if i >= spec.requests {
                     break;
                 }
-                let input = input_for(spec.seed, i as u64, n_inputs);
-                let res = handle.infer_with_deadline(model, input, spec.deadline);
+                let mut res = handle.infer_with_deadline(
+                    model,
+                    input_for(spec.seed, i as u64, n_inputs),
+                    spec.deadline,
+                );
+                // Retry protocol: shed replies (queue-full / breaker)
+                // back off for the server's hint — jittered ±50% so
+                // clients don't re-arrive in lockstep — then resubmit.
+                // Deadline misses are final: their budget is spent.
+                let mut attempts = 0u32;
+                while attempts < MAX_RETRIES
+                    && matches!(
+                        res,
+                        Err(InferenceError::QueueFull { .. })
+                            | Err(InferenceError::Unhealthy { .. })
+                    )
+                    && !cap.is_some_and(|c| start.elapsed() >= c)
+                {
+                    let base = handle.retry_after_ms(model).unwrap_or(1).clamp(1, MAX_BACKOFF_MS);
+                    let jitter = 0.5 + rng.f64();
+                    std::thread::sleep(Duration::from_secs_f64(base as f64 * jitter / 1e3));
+                    attempts += 1;
+                    retried += 1;
+                    res = handle.infer_with_deadline(
+                        model,
+                        input_for(spec.seed, i as u64, n_inputs),
+                        spec.deadline,
+                    );
+                }
                 mine.push(classify(res));
             }
-            mine
+            (mine, retried)
         });
     let elapsed = start.elapsed().as_secs_f64();
-    let outcomes: Vec<Outcome> = per_worker.into_iter().flatten().collect();
-    LoadReport::from_outcomes(model, &spec.arrival.describe(), spec.seed, &outcomes, elapsed)
+    let retried: usize = per_worker.iter().map(|(_, r)| r).sum();
+    let outcomes: Vec<Outcome> = per_worker.into_iter().flat_map(|(o, _)| o).collect();
+    LoadReport::from_outcomes(
+        model,
+        &spec.arrival.describe(),
+        spec.seed,
+        &outcomes,
+        retried,
+        elapsed,
+    )
 }
 
 fn run_open(
@@ -498,6 +576,7 @@ fn run_open(
         &spec.arrival.describe(),
         spec.seed,
         &outcomes,
+        0,
         elapsed,
     ))
 }
@@ -609,6 +688,7 @@ mod tests {
         assert_eq!(rep.issued, 60);
         assert_eq!(rep.served, 60);
         assert_eq!((rep.shed, rep.deadline_misses, rep.errors), (0, 0, 0));
+        assert_eq!((rep.degraded, rep.retried), (0, 0), "no ladder, nothing shed");
         assert!(rep.throughput_rps > 0.0);
         assert!(rep.latency_ms.p50 >= 0.0 && rep.latency_ms.p50 <= rep.latency_ms.p99);
         assert!(rep.queue_wait_ms.p99 <= rep.latency_ms.max + 1e-9);
@@ -695,11 +775,52 @@ mod tests {
         assert_eq!(j.get("served").unwrap().as_u64(), Some(8));
         assert_eq!(j.get("faulted").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("engine_faults").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("degraded").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("retried").unwrap().as_u64(), Some(0));
         assert!(j.path(&["latency_ms", "p99"]).is_some());
         assert!(j.path(&["queue_wait_ms", "p50"]).is_some());
         assert!(LoadReport::table_header().contains("rps"));
         assert!(LoadReport::table_header().contains("fault"));
+        assert!(LoadReport::table_header().contains("degr"));
+        assert!(LoadReport::table_header().contains("retry"));
         assert!(rep.table_row().contains("closed-2"));
+    }
+
+    #[test]
+    fn closed_loop_retries_shed_requests_with_backoff() {
+        // Slow engine + tiny bounded queue + 8 closed-loop clients:
+        // admission must shed some first attempts, and the retry
+        // protocol turns most of them back into served outcomes.
+        let mut router = Router::new();
+        router.register(ModelVariant::new("m", Arc::new(SlowEcho(Duration::from_millis(5)))));
+        let server = Server::start(
+            router,
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                admission: AdmissionPolicy { max_queue: 2, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        let rep = run(&h, "m", &LoadSpec::closed(8, 64, 0xBAC)).unwrap();
+        assert_eq!(rep.issued, 64);
+        assert!(rep.retried > 0, "shed replies must trigger backoff retries");
+        assert_eq!(
+            rep.served + rep.shed + rep.deadline_misses + rep.faulted + rep.errors,
+            64,
+            "retries collapse into one outcome per issued request"
+        );
+        assert!(
+            rep.served > rep.shed,
+            "backoff should recover most sheds (served {}, shed {})",
+            rep.served,
+            rep.shed
+        );
+        assert_eq!(rep.to_json().get("retried").unwrap().as_u64(), Some(rep.retried as u64));
     }
 
     #[test]

@@ -21,8 +21,8 @@ use sparseflow::config::Config;
 use sparseflow::coordinator::batcher::BatchPolicy;
 use sparseflow::coordinator::tcp::{TcpClient, TcpFrontend};
 use sparseflow::coordinator::{
-    AdmissionPolicy, BreakerPolicy, ModelVariant, Registry, RegistryConfig, Router, Server,
-    ServerConfig,
+    AdmissionPolicy, BreakerPolicy, LadderSpec, ModelVariant, Registry, RegistryConfig, Server,
+    ServerConfig, ServerHandle,
 };
 use sparseflow::exec::faults::{FaultPlan, FaultyEngine};
 use sparseflow::exec::layerwise::LayerwiseEngine;
@@ -34,8 +34,52 @@ use sparseflow::model::{Format, Model};
 use sparseflow::prelude::*;
 use sparseflow::util::json::Json;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Set by the SIGINT/SIGTERM handler; polled by the serve loops.
+static STOP: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    STOP.store(true, Ordering::SeqCst);
+}
+
+/// Register the drain-on-signal handler for SIGINT (2) and SIGTERM (15)
+/// through the libc `signal` symbol (no signal-handling crate is
+/// available offline). Only async-signal-safe work happens in the
+/// handler: it sets an atomic flag that the serve loop polls.
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal);
+        signal(15, on_signal);
+    }
+}
+
+/// The serve loop: poll for a shutdown signal every ~100 ms (printing a
+/// metrics line every ~5 s as before), and on SIGINT/SIGTERM drain the
+/// server — admission stops, queued requests flush, in-flight batches
+/// complete — then print the final metrics snapshot and exit cleanly.
+fn serve_until_signal(handle: &ServerHandle) -> i32 {
+    const TICK: Duration = Duration::from_millis(100);
+    let mut ticks: u64 = 0;
+    loop {
+        if STOP.load(Ordering::SeqCst) {
+            println!("signal received — draining (admission stopped, flushing queues)");
+            let snap = handle.drain(Duration::from_secs(30));
+            println!("final metrics: {}", snap.to_string_compact());
+            return 0;
+        }
+        std::thread::sleep(TICK);
+        ticks += 1;
+        if ticks % 50 == 0 {
+            println!("metrics: {}", handle.metrics_snapshot().to_string_compact());
+        }
+    }
+}
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -441,6 +485,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             .fast_mem_opt()
             .kernel_opt()
             .no_skip_flag()
+            .ladder_opt()
             .max_queue_opt()
             .deadline_opt()
             .flag("with-csr", "also register the CSR layer-wise engine as '<name>-csr'"),
@@ -509,6 +554,20 @@ fn cmd_serve(args: &[String]) -> i32 {
     if !skip {
         println!("activation-sparsity skipping disabled (--no-skip / skip=false)");
     }
+    // The degradation ladder: an explicit --ladder wins ("-" disables),
+    // "auto" defers to the config key, else no ladder. Validated up
+    // front so a typo fails at startup, not at first promotion.
+    let ladder = match a.str("ladder") {
+        "auto" => config.ladder(""),
+        l => l.to_string(),
+    };
+    let ladder_spec = match LadderSpec::parse(&ladder) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: --ladder: {e}");
+            return 2;
+        }
+    };
     // The SLO knobs: explicit flags win (an explicit 0 turns the knob
     // off), "auto" defers to the config keys, else off.
     let max_queue = resolve_auto_u64(&a, "max-queue", config.max_queue(0) as u64) as usize;
@@ -554,6 +613,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             },
         );
     }
+    if !ladder_spec.is_empty() {
+        println!(
+            "degradation ladder: {} (degraded replies carry certified error bounds)",
+            ladder_spec.describe()
+        );
+    }
+    install_signal_handlers();
 
     // Registry mode: serve a whole directory of versioned artifacts
     // with warm/hot tiering instead of one preloaded model.
@@ -564,7 +630,16 @@ fn cmd_serve(args: &[String]) -> i32 {
     if !model_dir.is_empty() {
         let resident_bytes = resolve_auto_u64(&a, "resident-bytes", config.resident_bytes(0));
         let registry = Registry::new(
-            RegistryConfig { resident_bytes, schedule, precision, workers, fast_mem, kernel, skip },
+            RegistryConfig {
+                resident_bytes,
+                schedule,
+                precision,
+                workers,
+                fast_mem,
+                kernel,
+                skip,
+                ladder: ladder.clone(),
+            },
             server_config,
         );
         let labels = match registry.scan_dir(Path::new(&model_dir)) {
@@ -589,12 +664,12 @@ fn cmd_serve(args: &[String]) -> i32 {
                 return 1;
             }
         };
-        println!("serving registry {model_dir} on {} — Ctrl-C to stop", frontend.addr);
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(5));
-            let snap = registry.server().metrics().snapshot();
-            println!("metrics: {}", snap.to_string_compact());
-        }
+        println!(
+            "serving registry {model_dir} on {} — Ctrl-C drains and exits",
+            frontend.addr
+        );
+        let handle = registry.handle();
+        return serve_until_signal(&handle);
     }
 
     // Single-model mode: preload one model file and serve it.
@@ -632,12 +707,29 @@ fn cmd_serve(args: &[String]) -> i32 {
     if workers > 1 {
         println!("batch-sharded serving: {workers} shards (see metrics key 'shards')");
     }
-    let mut router = Router::new();
-    router.register(variant);
+    // Build the full deploy ladder: the top variant plus one pre-built
+    // rung per --ladder entry (same workers/fast-mem/kernel/skip knobs).
+    let mut rungs = vec![variant];
+    for r in &ladder_spec.rungs {
+        match model
+            .variant_with_opts(&name, &r.schedule, &r.precision, workers, fast_mem, &kernel, skip)
+        {
+            Ok(v) => {
+                println!("  ladder rung: [{}]", v.label());
+                rungs.push(v);
+            }
+            Err(e) => {
+                eprintln!("error: ladder rung {}:{}: {e}", r.schedule, r.precision);
+                return 2;
+            }
+        }
+    }
+    let server = Server::start_dynamic(server_config);
+    server.deploy_ladder(rungs);
     if a.flag("with-csr") {
         match model.net() {
             Some(net) if net.layer_of().is_some() => {
-                router.register(ModelVariant::new(
+                server.deploy(ModelVariant::new(
                     &format!("{name}-csr"),
                     std::sync::Arc::new(LayerwiseEngine::new(net)) as std::sync::Arc<dyn Engine>,
                 ));
@@ -646,7 +738,6 @@ fn cmd_serve(args: &[String]) -> i32 {
                 model.format().name()),
         }
     }
-    let server = Server::start(router, server_config);
     let frontend = match TcpFrontend::serve(server.handle(), a.str("addr")) {
         Ok(f) => f,
         Err(e) => {
@@ -654,11 +745,9 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     };
-    println!("serving model '{name}' on {} — Ctrl-C to stop", frontend.addr);
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
-        println!("metrics: {}", server.metrics().snapshot().to_string_compact());
-    }
+    println!("serving model '{name}' on {} — Ctrl-C drains and exits", frontend.addr);
+    let handle = server.handle();
+    serve_until_signal(&handle)
 }
 
 fn cmd_client(args: &[String]) -> i32 {
@@ -770,6 +859,7 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         .opt("max-batch", "128", "dynamic batcher max batch size")
         .opt("max-wait-ms", "2", "dynamic batcher max wait (ms)")
         .kernel_opt()
+        .ladder_opt()
         .max_queue_opt()
         .deadline_opt()
         .fault_plan_opt()
@@ -802,6 +892,22 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     let secs = a.f64("secs");
     let mode = a.str("mode").to_string();
     let kernel = a.str("kernel").to_string();
+    // The degradation ladder applies to every variant in the sweep
+    // ("auto" has no config file here, so it means "none").
+    let ladder = match a.str("ladder") {
+        "auto" => String::new(),
+        l => l.to_string(),
+    };
+    let ladder_spec = match LadderSpec::parse(&ladder) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: --ladder: {e}");
+            return 2;
+        }
+    };
+    if !ladder_spec.is_empty() {
+        println!("degradation ladder: {}", ladder_spec.describe());
+    }
 
     let mut specs: Vec<LoadSpec> = Vec::new();
     match mode.as_str() {
@@ -864,6 +970,19 @@ fn cmd_loadgen(args: &[String]) -> i32 {
         };
         let label = variant.label();
         variant.name = label.clone();
+        // Pre-build the degradation rungs before any fault wrapping:
+        // chaos plans target the top rung, so a degraded rung stays a
+        // healthy fallback (the scenario the ladder exists for).
+        let mut ladder_rungs = Vec::new();
+        for r in &ladder_spec.rungs {
+            match model.variant(&label, &r.schedule, &r.precision, *workers, 0, &kernel) {
+                Ok(v) => ladder_rungs.push(v),
+                Err(e) => {
+                    eprintln!("error: ladder rung {}:{}: {e}", r.schedule, r.precision);
+                    return 2;
+                }
+            }
+        }
         if !fault_plan.is_empty() {
             // Chaos mode: wrap every route of the variant with the same
             // seeded plan. Each wrapper keeps its own invocation counter,
@@ -878,10 +997,9 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                 })
                 .collect();
         }
-        let mut router = Router::new();
-        router.register(variant);
-        let server = Server::start(
-            router,
+        let mut deploy_rungs = vec![variant];
+        deploy_rungs.extend(ladder_rungs);
+        let server = Server::start_dynamic(
             ServerConfig {
                 batch: BatchPolicy {
                     max_batch: a.usize("max-batch"),
@@ -898,6 +1016,7 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                 ..Default::default()
             },
         );
+        server.deploy_ladder(deploy_rungs);
         let h = server.handle();
         for spec in &specs {
             let rep = match sparseflow::loadgen::run(&h, &label, spec) {
@@ -925,6 +1044,7 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                 .set("max_queue", max_queue)
                 .set("max_batch", a.usize("max-batch"))
                 .set("max_wait_ms", a.u64("max-wait-ms"))
+                .set("ladder", ladder_spec.describe())
                 .set("fault_plan", fault_plan.describe()),
         )
         .set("results", Json::Arr(results));

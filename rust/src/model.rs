@@ -328,8 +328,10 @@ impl Model {
                         precision: format!("{precision} (quant payloads are i8/interp only)"),
                     });
                 }
+                let cert = p.certificate();
                 let engine = Arc::new(QuantStreamEngine::from_program(p.clone()));
-                Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag))
+                Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag)
+                    .with_error_cert(cert))
             }
             Payload::Bin(a) => match (precision, schedule) {
                 ("f32", "interp") => {
@@ -372,19 +374,25 @@ impl Model {
                 }
                 ("i8", "interp") => {
                     let program = a.quant_program().map_err(compile_err)?;
+                    let cert = program.certificate();
                     let engine = Arc::new(QuantStreamEngine::from_program(program));
-                    Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag))
+                    Ok(tag(wrap(name, engine, workers), "interp", "i8", kernel_tag)
+                        .with_error_cert(cert))
                 }
                 ("i8", "fused") => {
                     let program = a.quant_fused_program().map_err(compile_err)?;
                     let stats = program.stats().clone();
+                    // The fused i8 engine is bit-identical to the quant
+                    // interpreter over the same artifact weights, so the
+                    // interp program's certificate transfers unchanged.
+                    let cert = a.quant_program().map_err(compile_err)?.certificate();
                     let engine =
                         QuantFusedEngine::from_program(program).with_kernel(k).with_skip(skip);
                     let counters = engine.skip_counters().clone();
                     let mut v =
                         tag(wrap(name, Arc::new(engine), workers), "fused", "i8", kernel_tag);
                     v = v.with_fusion_stats(stats).with_skip_counters(counters);
-                    Ok(v)
+                    Ok(v.with_error_cert(cert))
                 }
                 ("i8", "tiled") => {
                     if fast_mem == 0 {
@@ -398,13 +406,14 @@ impl Model {
                     }
                     let program = a.quant_tiled_program(fast_mem).map_err(compile_err)?;
                     let stats = program.stats().clone();
+                    let cert = a.quant_program().map_err(compile_err)?.certificate();
                     let engine =
                         QuantTiledEngine::from_program(program).with_kernel(k).with_skip(skip);
                     let counters = engine.skip_counters().clone();
                     let mut v =
                         tag(wrap(name, Arc::new(engine), workers), "tiled", "i8", kernel_tag);
                     v = v.with_tiled_stats(stats).with_skip_counters(counters);
-                    Ok(v)
+                    Ok(v.with_error_cert(cert))
                 }
                 // check_knobs already rejected unknown schedules and
                 // precisions, so every matrix point is handled above;

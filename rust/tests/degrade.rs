@@ -1,0 +1,346 @@
+//! Overload/degradation integration tests: bursty ~2x-capacity load
+//! against the full serving pipeline, with and without a degradation
+//! ladder, with and without seeded chaos on the top-tier engine.
+//!
+//! The invariants pinned here are the overload plane's semantics: no
+//! overload may hang a request (every submission resolves as served,
+//! shed, deadline-missed, or engine-faulted), every degraded response
+//! carries a certified error bound that its output actually satisfies
+//! against the clean f32 reference, the ladder climbs back to the top
+//! tier once load drops (and top-tier outputs are then bit-identical
+//! to a direct run of the clean engine), and a ladder-less deployment
+//! behaves exactly as before the ladder existed: nothing is ever
+//! marked degraded and no `error_bound` is attached.
+
+use sparseflow::coordinator::batcher::BatchPolicy;
+use sparseflow::coordinator::{
+    AdmissionPolicy, InferenceError, ModelVariant, Server, ServerConfig, ServerHandle,
+};
+use sparseflow::exec::batch::BatchMatrix;
+use sparseflow::exec::faults::{FaultPlan, FaultyEngine};
+use sparseflow::exec::quant::{output_error_bound, QuantStreamProgram};
+use sparseflow::exec::stream::StreamProgram;
+use sparseflow::exec::Engine;
+use sparseflow::ffnn::generate::{random_mlp, MlpSpec};
+use sparseflow::ffnn::topo::two_optimal_order;
+use sparseflow::util::json::Json;
+use sparseflow::util::rng::Pcg64;
+use sparseflow::util::threadpool::par_map;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn test_net() -> sparseflow::ffnn::graph::Ffnn {
+    random_mlp(&MlpSpec::new(3, 24, 0.3), &mut Pcg64::seed_from(0xC00F))
+}
+
+/// Wraps an engine with a fixed per-invocation sleep so the top tier
+/// has a deterministic, slow service rate — the storm below is sized
+/// to roughly twice that capacity.
+struct Throttle {
+    inner: Arc<dyn Engine>,
+    delay: Duration,
+}
+
+impl Engine for Throttle {
+    fn infer(&self, inputs: &BatchMatrix) -> BatchMatrix {
+        std::thread::sleep(self.delay);
+        self.inner.infer(inputs)
+    }
+    fn name(&self) -> &'static str {
+        "throttled"
+    }
+    fn n_inputs(&self) -> usize {
+        self.inner.n_inputs()
+    }
+    fn n_outputs(&self) -> usize {
+        self.inner.n_outputs()
+    }
+}
+
+/// Tally of one storm run; `degraded` keeps each degraded response's
+/// input, output, and wire-carried bound for the certification check.
+#[derive(Default)]
+struct Storm {
+    served: usize,
+    shed: usize,
+    missed: usize,
+    faulted: usize,
+    degraded: Vec<(Vec<f32>, Vec<f32>, Option<f32>)>,
+}
+
+/// Bursty closed-loop storm: `clients` concurrent clients each submit
+/// `bursts` bursts of `burst` requests back-to-back, then wait for the
+/// whole burst to resolve. Burst fronts put far more in flight than
+/// the admit limit, so overload is guaranteed while each request still
+/// gets a 30 s zero-hang budget.
+fn storm(
+    h: &ServerHandle,
+    n_in: usize,
+    clients: u64,
+    bursts: usize,
+    burst: usize,
+    seed: u64,
+) -> Storm {
+    let ids: Vec<u64> = (0..clients).collect();
+    let per = par_map(clients as usize, &ids, |&c| {
+        let mut rng = Pcg64::seed_from(seed ^ (0xD15C0 + c));
+        let mut out = Storm::default();
+        for _ in 0..bursts {
+            let mut rxs = Vec::new();
+            for _ in 0..burst {
+                let input: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+                match h.submit("m", input.clone()) {
+                    Ok(rx) => rxs.push((input, rx)),
+                    Err(InferenceError::QueueFull { .. }) => out.shed += 1,
+                    Err(InferenceError::Unhealthy { .. }) => out.shed += 1,
+                    Err(e) => panic!("unexpected admission error {e:?}"),
+                }
+            }
+            for (input, rx) in rxs {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Ok(resp)) => {
+                        out.served += 1;
+                        if resp.degraded {
+                            out.degraded.push((input, resp.output, resp.error_bound));
+                        }
+                    }
+                    Ok(Err(InferenceError::DeadlineExceeded)) => out.missed += 1,
+                    Ok(Err(InferenceError::EngineFault { .. })) => out.faulted += 1,
+                    Ok(Err(InferenceError::QueueFull { .. })) => out.shed += 1,
+                    Ok(Err(InferenceError::Unhealthy { .. })) => out.shed += 1,
+                    Ok(Err(e)) => panic!("unexpected error {e:?}"),
+                    Err(_) => panic!("request hung >30 s (overload containment failed)"),
+                }
+            }
+        }
+        out
+    });
+    let mut total = Storm::default();
+    for mut p in per {
+        total.served += p.served;
+        total.shed += p.shed;
+        total.missed += p.missed;
+        total.faulted += p.faulted;
+        total.degraded.append(&mut p.degraded);
+    }
+    total
+}
+
+/// Every degraded output must sit within its wire-carried certified
+/// bound AND within the tighter per-input interval bound, both
+/// measured against the clean f32 engine (slack covers f32 rounding
+/// in the bound arithmetic itself).
+fn check_degraded(
+    storm: &Storm,
+    direct: &Arc<dyn Engine>,
+    reference: &StreamProgram,
+    quant: &QuantStreamProgram,
+    n_in: usize,
+    label: &str,
+) {
+    for (input, output, bound) in &storm.degraded {
+        let b = bound.unwrap_or_else(|| panic!("{label}: degraded response without a bound"));
+        assert!(b.is_finite() && b >= 0.0, "{label}: bad bound {b}");
+        let x = BatchMatrix::from_rows(n_in, 1, input.clone());
+        let want = direct.infer(&x);
+        let per_input = output_error_bound(reference, quant, &x);
+        assert!(
+            b * 1.01 + 1e-4 >= per_input,
+            "{label}: certificate {b} below per-input bound {per_input}"
+        );
+        for (r, &got) in output.iter().enumerate() {
+            let diff = (got - want.row(r)[0]).abs();
+            assert!(
+                diff <= b * 1.01 + 1e-4,
+                "{label}: row {r} off by {diff}, certified bound {b}"
+            );
+            assert!(
+                diff <= per_input * 1.01 + 1e-4,
+                "{label}: row {r} off by {diff}, per-input bound {per_input}"
+            );
+        }
+    }
+}
+
+/// The full matrix: {ladder on, ladder off} × {clean, seeded chaos on
+/// the top tier}, each hammered by 8 clients in bursts of 4 against an
+/// admit limit of 8 (~2x the top tier's throttled capacity).
+/// Invariants per cell: zero hangs, exact accounting, bounded degraded
+/// outputs and climb-back (ladder on), and byte-for-byte PR 8 behavior
+/// (ladder off: nothing degraded, no bounds, no `ladder` metrics key).
+#[test]
+fn overload_matrix_resolves_all_requests_within_certified_bounds() {
+    const HORIZON: u64 = 40;
+    let net = test_net();
+    let order = two_optimal_order(&net);
+    let n_in = net.n_inputs();
+    let reference = StreamProgram::compile(&net, &order);
+    let quant = QuantStreamProgram::compress(&net, &order);
+
+    for (cell, (ladder, chaos)) in
+        [(true, false), (true, true), (false, false), (false, true)].into_iter().enumerate()
+    {
+        let label = format!("cell {cell} (ladder={ladder} chaos={chaos})");
+        let mut top = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "auto").unwrap();
+        let direct = Arc::clone(top.route());
+        let throttled: Arc<dyn Engine> = Arc::new(Throttle {
+            inner: Arc::clone(&direct),
+            delay: Duration::from_millis(4),
+        });
+        let plan = FaultPlan::seeded(0xFA10 + cell as u64, 4, HORIZON);
+        let faulty = Arc::new(FaultyEngine::new(Arc::clone(&throttled), plan.clone()));
+        top.engines = if chaos {
+            vec![Arc::clone(&faulty) as Arc<dyn Engine>]
+        } else {
+            vec![throttled]
+        };
+
+        let server = Server::start_dynamic(ServerConfig {
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            admission: AdmissionPolicy {
+                max_queue: 8,
+                default_deadline: Some(Duration::from_millis(500)),
+            },
+            ..Default::default()
+        });
+        if ladder {
+            let low = ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0, "auto").unwrap();
+            assert!(low.error_cert.is_some(), "{label}: i8 rung must carry a certificate");
+            server.deploy_ladder(vec![top, low]);
+        } else {
+            server.deploy(top);
+        }
+        let h = server.handle();
+
+        let out = storm(&h, n_in, 8, 4, 4, 0xBEE5 + cell as u64);
+        assert_eq!(
+            out.served + out.shed + out.missed + out.faulted,
+            128,
+            "{label}: every request answered"
+        );
+
+        if ladder {
+            assert!(!out.degraded.is_empty(), "{label}: overload never engaged the ladder");
+            check_degraded(&out, &direct, &reference, &quant, n_in, &label);
+
+            // Load is gone: the controller must climb back to the top
+            // rung, after which responses stop being marked degraded.
+            let give_up = Instant::now() + Duration::from_secs(10);
+            loop {
+                assert!(Instant::now() < give_up, "{label}: ladder never climbed back");
+                std::thread::sleep(Duration::from_millis(20));
+                match h.infer("m", vec![0.25; n_in]) {
+                    Ok(resp) => {
+                        let (active, rungs, _) = h.ladder_state("m").expect("laddered model");
+                        assert_eq!(rungs, 2, "{label}");
+                        if active == 0 && !resp.degraded {
+                            assert!(resp.error_bound.is_none(), "{label}: bound on top tier");
+                            break;
+                        }
+                    }
+                    Err(InferenceError::EngineFault { .. }) if chaos => continue,
+                    Err(e) => panic!("{label}: recovery probe failed: {e:?}"),
+                }
+            }
+
+            let snap = h.metrics_snapshot();
+            let counted = snap.get("degraded").and_then(Json::as_u64).unwrap_or(0);
+            assert!(
+                counted >= out.degraded.len() as u64 && counted > 0,
+                "{label}: degraded counter {counted} < observed {}",
+                out.degraded.len()
+            );
+            assert_eq!(snap.path(&["ladder", "m", "rungs"]).and_then(Json::as_u64), Some(2));
+            assert_eq!(snap.path(&["ladder", "m", "active"]).and_then(Json::as_u64), Some(0));
+        } else {
+            // Ladder off: exact PR 8 semantics — nothing is ever
+            // degraded, no bounds ride along, no ladder metrics key.
+            assert!(out.degraded.is_empty(), "{label}: degraded response without a ladder");
+            let snap = h.metrics_snapshot();
+            assert_eq!(snap.get("degraded").and_then(Json::as_u64), Some(0), "{label}");
+            assert!(snap.get("ladder").is_none(), "{label}: ladder key without a ladder");
+            assert_eq!(h.ladder_state("m").map(|(a, n, _)| (a, n)), Some((0, 1)), "{label}");
+        }
+
+        // Drain any unfired faults, then the top tier must serve
+        // bit-identically to a direct run of the clean engine.
+        if chaos {
+            let mut safety = 0;
+            while faulty.calls() < HORIZON {
+                safety += 1;
+                assert!(safety <= 400, "{label}: fault drain stopped advancing");
+                let _ = h.infer("m", vec![0.0; n_in]);
+            }
+        }
+        let mut rng = Pcg64::seed_from(0xB17D + cell as u64);
+        for _ in 0..4 {
+            let input: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+            let resp = h.infer("m", input.clone()).unwrap();
+            assert!(!resp.degraded, "{label}: degraded after recovery");
+            let want = direct.infer(&BatchMatrix::from_rows(n_in, 1, input));
+            for (r, &got) in resp.output.iter().enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.row(r)[0].to_bits(),
+                    "{label}: post-recovery row {r} not bit-identical"
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance gate: under the same deterministic ~2x-capacity storm, a
+/// ladder-enabled deployment must serve strictly more requests than a
+/// ladder-less one (which can only shed what it cannot absorb).
+#[test]
+fn ladder_enabled_goodput_beats_ladder_off_under_overload() {
+    let net = test_net();
+    let order = two_optimal_order(&net);
+    let n_in = net.n_inputs();
+
+    let run = |ladder: bool| -> Storm {
+        let mut top = ModelVariant::build("m", &net, &order, "fused", "f32", 1, 0, "auto").unwrap();
+        let direct = Arc::clone(top.route());
+        top.engines = vec![Arc::new(Throttle {
+            inner: direct,
+            delay: Duration::from_millis(10),
+        }) as Arc<dyn Engine>];
+        let server = Server::start_dynamic(ServerConfig {
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            admission: AdmissionPolicy {
+                max_queue: 8,
+                default_deadline: Some(Duration::from_millis(500)),
+            },
+            ..Default::default()
+        });
+        if ladder {
+            let low = ModelVariant::build("m", &net, &order, "fused", "i8", 1, 0, "auto").unwrap();
+            server.deploy_ladder(vec![top, low]);
+        } else {
+            server.deploy(top);
+        }
+        let h = server.handle();
+        let out = storm(&h, n_in, 8, 8, 4, 0x60D0);
+        assert_eq!(out.served + out.shed + out.missed + out.faulted, 256, "ladder={ladder}");
+        out
+    };
+
+    let with_ladder = run(true);
+    let without = run(false);
+    assert!(!with_ladder.degraded.is_empty(), "ladder never engaged under 2x load");
+    assert!(without.degraded.is_empty(), "ladder-off must never degrade");
+    assert!(
+        with_ladder.served > without.served,
+        "goodput gate failed: {} served with ladder vs {} without",
+        with_ladder.served,
+        without.served
+    );
+}
